@@ -1,0 +1,144 @@
+//! END-TO-END DRIVER (paper §7): the full MSF-desalination case study.
+//!
+//! Composes every layer of the stack on a real workload:
+//!  * the Rust MSF plant twin + cascaded PID (HITL substitute),
+//!  * the simulated PLC (scan cycle, ADC, BBB timing model),
+//!  * the trained anomaly classifier (JAX-trained, §4.3-ported to
+//!    ICSML ST, executed by the ST interpreter *inside* the scan
+//!    cycle),
+//!  * attack injection (Fig. 7 scenario) and detection,
+//!  * the non-intrusiveness comparison (Fig. 8).
+//!
+//! Run after `make artifacts`:
+//! `cargo run --release --example desalination_defense [--xla|--engine]`
+//! Outputs Fig. 7 series to /tmp/icsml_fig7.csv.
+
+use anyhow::Result;
+use icsml::defense::{Detector, EngineBackend, StBackend};
+use icsml::hitl::HitlRunner;
+use icsml::msf::{Attack, AttackFamily};
+use icsml::plc::HwProfile;
+use icsml::porting::{self, codegen::CodegenOptions, Manifest};
+use icsml::runtime::{Runtime, XlaBackend};
+
+fn detector(man: &Manifest, backend: &str) -> Result<Detector> {
+    let spec = man.model("classifier")?;
+    let b: Box<dyn icsml::defense::Backend> = match backend {
+        "engine" => Box::new(EngineBackend(porting::load_engine_model(
+            &man.root, spec,
+        )?)),
+        "xla" => {
+            let rt = Runtime::cpu()?;
+            Box::new(XlaBackend {
+                exe: rt.load_hlo(&man.hlo_path("classifier_b1")?)?,
+                in_dim: 400,
+            })
+        }
+        _ => {
+            // The real thing: generated ICSML ST on the PLC simulator.
+            let src = porting::generate_st_program(
+                spec,
+                &CodegenOptions::default(),
+            );
+            let mut it = icsml::icsml_st::load(&src)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            it.io_dir = man.root.join(&spec.weights_dir);
+            Box::new(StBackend::new(it, "MAIN"))
+        }
+    };
+    Ok(Detector::new(b, 5))
+}
+
+fn main() -> Result<()> {
+    let root = icsml::artifacts_dir();
+    anyhow::ensure!(
+        root.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    let man = Manifest::load(&root)?;
+    let args: Vec<String> = std::env::args().collect();
+    let backend = if args.iter().any(|a| a == "--xla") {
+        "xla"
+    } else if args.iter().any(|a| a == "--engine") {
+        "engine"
+    } else {
+        "st"
+    };
+    println!("== §7 case study — defense backend: {backend}\n");
+
+    // ---------------- Fig. 7: attack detection ------------------------
+    // Combined actuator attack (recycle brine + steam + reject flows),
+    // parameters unseen in training (magnitude 0.5 vs trained 0.30/0.55
+    // jittered instances). Paper: injected @436, detected @486 (5 s).
+    let inject_at = 4360u64; // let the plant + window warm up first
+    let steps = 9000u64;
+    let runner = HitlRunner::new(
+        7,
+        true,
+        vec![Attack::new(AttackFamily::Combined, 0.5, inject_at, steps)],
+        Some(detector(&man, backend)?),
+        HwProfile::beaglebone(),
+        100_000.0, // 100 ms scan cycle
+    );
+    let report = runner.run(steps)?;
+
+    match report.detections.first() {
+        Some((start, at)) => {
+            println!(
+                "attack injected @cycle {start}, detected @cycle {at} — \
+                 {:.1} s latency (paper: injected @436, detected @486, 5 s)",
+                (at - start) as f64 * 0.1
+            );
+        }
+        None => println!("attack NOT detected — check the model"),
+    }
+    println!("false positives during normal operation: {}",
+             report.false_positives);
+    if report.scan.stats.ml_time_us > 0.0 {
+        println!(
+            "mean modeled ML time per evaluated cycle: {:.2} ms \
+             (scan overruns: {})",
+            report.scan.stats.ml_time_us
+                / report.scan.stats.cycles.max(1) as f64
+                / 1e3,
+            report.scan.stats.overruns
+        );
+    }
+
+    // Fig. 7 series dump.
+    let csv = "/tmp/icsml_fig7.csv";
+    let mut out = String::from("cycle,tb0_adc,wd_adc,attack,detected\n");
+    for r in report.records.iter().step_by(5) {
+        out.push_str(&format!(
+            "{},{:.4},{:.5},{},{}\n",
+            r.step, r.tb0_adc, r.wd_adc, r.attack_active as u8,
+            r.detected as u8
+        ));
+    }
+    std::fs::write(csv, out)?;
+    println!("Fig. 7 series written to {csv}\n");
+
+    // ---------------- Fig. 8: non-intrusiveness -----------------------
+    // 6000 cycles of normal operation, defense OFF vs ON; identical
+    // seed so the only difference is the defense task in the cycle.
+    let off = HitlRunner::new(21, true, vec![], None,
+                              HwProfile::beaglebone(), 100_000.0)
+        .run(6000)?;
+    let on = HitlRunner::new(21, true, vec![], Some(detector(&man, backend)?),
+                             HwProfile::beaglebone(), 100_000.0)
+        .run(6000)?;
+    let (m_off, s_off) = off.wd_stats();
+    let (m_on, s_on) = on.wd_stats();
+    println!("Fig. 8 — Wd over 6000 cycles (paper: mean 19.18 both, σ \
+              9.47e-4 / 9.18e-4):");
+    println!("  defense OFF: mean {m_off:.2} t/min, σ {s_off:.2e}");
+    println!("  defense ON : mean {m_on:.2} t/min, σ {s_on:.2e}");
+    assert!((m_off - m_on).abs() < 0.01, "defense must not move the mean");
+    assert_eq!(on.false_positives, 0, "no false alarms in normal operation");
+    println!(
+        "  -> identical process statistics: the defense is non-intrusive"
+    );
+
+    println!("\ndesalination_defense OK");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Model-porting walkthrough (paper §4.3 + §8.2): trained JAX model →
+//! manifest → generated ICSML ST → execution on the simulated PLC,
+//! with accuracy verified against labels and logits cross-checked
+//! against the AOT/XLA path.
+//!
+//! Run after `make artifacts`:
+//! `cargo run --release --example model_porting`
+
+use anyhow::Result;
+use icsml::defense::{Backend, StBackend};
+use icsml::plc::HwProfile;
+use icsml::porting::{self, codegen::CodegenOptions, Manifest};
+use icsml::runtime::{Runtime, XlaBackend};
+use icsml::util::binio;
+
+fn main() -> Result<()> {
+    let root = icsml::artifacts_dir();
+    anyhow::ensure!(
+        root.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let man = Manifest::load(&root)?;
+    let spec = man.model("classifier")?;
+    println!(
+        "== porting model 'classifier' {:?} (trained: {})",
+        spec.sizes,
+        spec.report.to_string()
+    );
+
+    // 1. Generate the ICSML ST application (paper Fig. 2 flow).
+    let src = porting::generate_st_program(spec, &CodegenOptions::default());
+    println!("generated ST program: {} lines", src.lines().count());
+
+    // 2. Compile it with the framework and attach the weight dir.
+    let mut it =
+        icsml::icsml_st::load(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    it.io_dir = root.join(&spec.weights_dir);
+    let mut st = StBackend::new(it, "MAIN");
+
+    // 3. XLA comparator.
+    let rt = Runtime::cpu()?;
+    let mut xla = XlaBackend {
+        exe: rt.load_hlo(&man.hlo_path("classifier_b1")?)?,
+        in_dim: 400,
+    };
+
+    // 4. Evaluate a slice: accuracy + ST-vs-XLA agreement + modeled
+    //    on-PLC cost of one inference.
+    let ds = &man.dataset;
+    let n = ds.expect("eval_n").as_usize().unwrap().min(200);
+    let x = binio::read_f32(
+        &root.join(ds.expect("eval_windows").as_str().unwrap()),
+    )?;
+    let y = binio::read_i32(
+        &root.join(ds.expect("eval_labels").as_str().unwrap()),
+    )?;
+
+    let (mut correct, mut max_dev) = (0usize, 0.0f32);
+    for i in 0..n {
+        let xi = &x[i * 400..(i + 1) * 400];
+        let a = st.infer(xi)?;
+        let b = xla.infer(xi)?;
+        max_dev = max_dev
+            .max((a[0] - b[0]).abs())
+            .max((a[1] - b[1]).abs());
+        let pred = if a[1] > a[0] { 1 } else { 0 };
+        if pred == y[i] {
+            correct += 1;
+        }
+    }
+    println!(
+        "on-PLC (ST) accuracy over {n} eval windows: {:.2}% (paper: ~93.68%)",
+        100.0 * correct as f64 / n as f64
+    );
+    println!("max |ST - XLA| logit deviation: {max_dev:.2e}");
+    assert!(max_dev < 1e-3, "backends disagree");
+
+    if let Some(m) = st.last_meter() {
+        println!("\nmodeled per-inference cost of the ported model:");
+        for p in [HwProfile::beaglebone(), HwProfile::wago_pfc100()] {
+            println!(
+                "  {:>18}: {:>8.2} ms (scan budget 100 ms)",
+                p.name,
+                p.time_us(&m) / 1e3
+            );
+        }
+    }
+    println!("\nmodel_porting OK");
+    Ok(())
+}

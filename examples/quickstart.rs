@@ -1,0 +1,108 @@
+//! Quickstart: build a small ICSML model through the public API and run
+//! it on all three backends — the ST-interpreter PLC (generated ICSML
+//! code), the native engine, and (when artifacts exist) the AOT/XLA
+//! comparator — printing agreement and modeled PLC timing.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use icsml::defense::{Backend, EngineBackend, StBackend};
+use icsml::engine::{Act, Layer, Model};
+use icsml::plc::HwProfile;
+use icsml::porting::{codegen::CodegenOptions, generate_st_program,
+                     LayerSpec, ModelSpec};
+use icsml::util::{binio, json::Json, rng::SplitMix64};
+
+fn main() -> Result<()> {
+    println!("== ICSML quickstart: a 8-16-4 MLP on three backends\n");
+
+    // 1. Author a model (any trained weights would do; random here).
+    let mut rng = SplitMix64::new(2024);
+    let sizes = [8usize, 16, 4];
+    let acts = ["relu", "linear"];
+    let mut layers = Vec::new();
+    let mut specs = Vec::new();
+    let dir = std::env::temp_dir().join("icsml_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    for i in 0..2 {
+        let (n_in, n_out) = (sizes[i], sizes[i + 1]);
+        let w: Vec<f32> =
+            (0..n_in * n_out).map(|_| rng.uniform(-0.8, 0.8) as f32).collect();
+        let b: Vec<f32> =
+            (0..n_out).map(|_| rng.uniform(-0.2, 0.2) as f32).collect();
+        // Export in ICSML binary format (what BINARR loads).
+        binio::write_f32(&dir.join(format!("l{i}_w.bin")), &w)?;
+        binio::write_f32(&dir.join(format!("l{i}_b.bin")), &b)?;
+        layers.push(Layer::dense(w, b, n_in, Act::from_name(acts[i]).unwrap()));
+        specs.push(LayerSpec {
+            inputs: n_in,
+            neurons: n_out,
+            weights: format!("l{i}_w.bin"),
+            biases: format!("l{i}_b.bin"),
+        });
+    }
+    let spec = ModelSpec {
+        name: "quickstart".into(),
+        sizes: sizes.to_vec(),
+        activations: acts.iter().map(|s| s.to_string()).collect(),
+        weights_dir: ".".into(),
+        layers: specs,
+        report: Json::Null,
+    };
+
+    // 2. Port to ICSML ST (the paper's §4.3 flow, automated).
+    let st_src = generate_st_program(&spec, &CodegenOptions::default());
+    println!("generated {} lines of ICSML ST\n", st_src.lines().count());
+
+    // 3. Run the same input everywhere.
+    let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).sin()).collect();
+
+    let mut engine = EngineBackend(Model::new(layers));
+    let y_engine = engine.infer(&x)?;
+
+    let mut interp = icsml::icsml_st::load(&st_src)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    interp.io_dir = dir;
+    let mut st = StBackend::new(interp, "MAIN");
+    let y_st = st.infer(&x)?;
+
+    println!("engine : {y_engine:?}");
+    println!("st/plc : {y_st:?}");
+    let max_dev = y_engine
+        .iter()
+        .zip(&y_st)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max deviation: {max_dev:.2e}\n");
+    assert!(max_dev < 1e-5);
+
+    // 4. Modeled on-PLC cost of the ST inference.
+    if let Some(m) = st.last_meter() {
+        for p in [HwProfile::beaglebone(), HwProfile::wago_pfc100()] {
+            println!("modeled CPU time on {:>18}: {:>8.1} µs", p.name,
+                     p.time_us(&m));
+        }
+    }
+
+    // 5. Optional: the AOT/XLA path on the real classifier artifacts.
+    let root = icsml::artifacts_dir();
+    if root.join("manifest.json").exists() {
+        use icsml::porting::Manifest;
+        use icsml::runtime::Runtime;
+        let man = Manifest::load(&root)?;
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo(&man.hlo_path("classifier_b1")?)?;
+        let win = binio::read_f32(
+            &root.join(man.dataset.expect("eval_windows").as_str().unwrap()),
+        )?;
+        let logits = exe.run_f32(&win[..400], &[1, 400])?;
+        println!(
+            "\nAOT/XLA classifier on eval window 0: logits {logits:?} -> {}",
+            if logits[1] > logits[0] { "ATTACK" } else { "normal" }
+        );
+    } else {
+        println!("\n(run `make artifacts` to also exercise the AOT/XLA path)");
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

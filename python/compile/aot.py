@@ -1,0 +1,238 @@
+"""AOT compile path: train models, lower to HLO **text**, export weights.
+
+This is the single build-time entry point (``make artifacts``). It writes:
+
+* ``artifacts/hlo/*.hlo.txt`` — AOT-lowered forwards for the Rust PJRT
+  runtime (the "TFLite" comparator path). HLO *text* is the interchange
+  format: jax >= 0.5 serializes HloModuleProto with 64-bit instruction
+  ids which xla_extension 0.5.1 rejects; the text parser reassigns ids.
+  Trained weights are closed over as constants so the runtime feeds only
+  the input vector.
+* ``artifacts/weights/<model>/l{i}_{w,b}.bin`` — ICSML binary weight files
+  (little-endian f32, per-neuron row-major ``[out][in]`` layout — what the
+  ST ``BINARR`` loader and the paper's §4.3 porting flow expect).
+* ``artifacts/dataset/`` — raw eval slices for Rust-side accuracy checks.
+* ``artifacts/golden/msf_trace.json`` — plant cross-validation trace.
+* ``artifacts/manifest.json`` — the index all Rust components load.
+
+Python never runs at request time; after this script the Rust binary is
+self-contained.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import plant, train
+from .kernels import dense, quant_dense, quantize_weights
+from .model import (CLASSIFIER_ACTS, CLASSIFIER_LAYERS, MNIST_ACTS,
+                    MNIST_LAYERS, mlp_forward)
+
+STACK_DEPTHS = (1, 2, 3, 4, 5, 6, 7, 8, 9, 10)          # Fig. 4 sweep
+WIDTHS = (32, 64, 128, 256, 512, 1024, 2048, 4096)       # §5.3 sweep
+QUANT_SCHEMES = ("SINT", "INT", "DINT")                   # §6.1 / Table 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer elides big weight
+    # constants as `constant({...})`, which would silently destroy the
+    # embedded parameters on the text round-trip.
+    return comp.as_hlo_text(True)
+
+
+def lower_mlp(params, acts, batch: int, n_in: int) -> str:
+    """Lower an MLP forward with weights embedded as constants."""
+    frozen = [(jnp.asarray(w), jnp.asarray(b)) for w, b in params]
+
+    def fwd(x):
+        return (mlp_forward(frozen, x, acts),)
+
+    spec = jax.ShapeDtypeStruct((batch, n_in), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_quant_layer(w, b, scheme: str, batch: int = 1) -> str:
+    """Lower the isolated §6.1 quantized 512x512 layer."""
+    w_q, s_w = quantize_weights(jnp.asarray(w), scheme)
+    s_x = jnp.asarray([0.05], jnp.float32)
+    bj = jnp.asarray(b)
+
+    def fwd(x):
+        return (quant_dense(x, w_q, s_w, bj, s_x, scheme=scheme,
+                            activation="relu"),)
+
+    spec = jax.ShapeDtypeStruct((batch, w.shape[0]), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_smoke() -> str:
+    """Tiny fn for runtime unit tests: (x @ y) + 2 over f32[2,2]."""
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def export_weights(out_dir: str, params) -> list:
+    """ICSML binary export: per layer, weights transposed to [out][in]
+    row-major f32 LE + bias vector. Returns manifest entries."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for i, (w, b) in enumerate(params):
+        w_icsml = np.asarray(w, np.float32).T.copy()     # [out, in]
+        bv = np.asarray(b, np.float32)
+        wp, bp = f"l{i}_w.bin", f"l{i}_b.bin"
+        w_icsml.tofile(os.path.join(out_dir, wp))
+        bv.tofile(os.path.join(out_dir, bp))
+        entries.append({
+            "inputs": int(w.shape[0]), "neurons": int(w.shape[1]),
+            "weights": wp, "biases": bp,
+        })
+    return entries
+
+
+def write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory")
+    args = ap.parse_args()
+    root = os.path.abspath(args.out)
+    os.makedirs(root, exist_ok=True)
+    hlo_dir = os.path.join(root, "hlo")
+    manifest = {"hlo": {}, "models": {}, "dataset": {}, "plant": {},
+                "fast_mode": train.FAST}
+
+    # ---- train the paper's models -------------------------------------
+    print("== training MSF anomaly classifier (§7)")
+    clf_params, clf_report, (xev, yev) = train.train_classifier()
+    print("== training quantization-study model (§6.1)")
+    mn_params, mn_report, (mxev, myev) = train.train_mnist()
+
+    # ---- HLO artifacts -------------------------------------------------
+    print("== lowering HLO artifacts")
+    write(os.path.join(hlo_dir, "smoke.hlo.txt"), lower_smoke())
+    manifest["hlo"]["smoke"] = "hlo/smoke.hlo.txt"
+
+    for batch in (1, 8):
+        name = f"classifier_b{batch}"
+        write(os.path.join(hlo_dir, f"{name}.hlo.txt"),
+              lower_mlp(clf_params, CLASSIFIER_ACTS, batch,
+                        CLASSIFIER_LAYERS[0]))
+        manifest["hlo"][name] = f"hlo/{name}.hlo.txt"
+
+    write(os.path.join(hlo_dir, "mnist512_b1.hlo.txt"),
+          lower_mlp(mn_params, MNIST_ACTS, 1, MNIST_LAYERS[0]))
+    manifest["hlo"]["mnist512_b1"] = "hlo/mnist512_b1.hlo.txt"
+
+    # Fig. 4 layer-stacking comparator models (64-in/64-out dense stacks).
+    key = jax.random.PRNGKey(0)
+    from .model import init_mlp, bench_stack_sizes, bench_stack_acts
+    for d in STACK_DEPTHS:
+        params = init_mlp(key, bench_stack_sizes(d))
+        name = f"bench_stack_d{d}"
+        write(os.path.join(hlo_dir, f"{name}.hlo.txt"),
+              lower_mlp(params, bench_stack_acts(d), 1, 64))
+        manifest["hlo"][name] = f"hlo/{name}.hlo.txt"
+
+    # §5.3 layer-width comparator models (32 inputs, one dense+ReLU).
+    for wdt in WIDTHS:
+        params = init_mlp(key, (32, wdt))
+        name = f"bench_width_{wdt}"
+        write(os.path.join(hlo_dir, f"{name}.hlo.txt"),
+              lower_mlp(params, ("relu",), 1, 32))
+        manifest["hlo"][name] = f"hlo/{name}.hlo.txt"
+
+    # §6.1 isolated 512x512 layer: f32 baseline + three quant schemes.
+    w512, b512 = mn_params[1]
+    params512 = [(w512, b512)]
+    write(os.path.join(hlo_dir, "dense512_f32.hlo.txt"),
+          lower_mlp(params512, ("relu",), 1, 512))
+    manifest["hlo"]["dense512_f32"] = "hlo/dense512_f32.hlo.txt"
+    for scheme in QUANT_SCHEMES:
+        name = f"quant512_{scheme}"
+        write(os.path.join(hlo_dir, f"{name}.hlo.txt"),
+              lower_quant_layer(np.asarray(w512), np.asarray(b512), scheme))
+        manifest["hlo"][name] = f"hlo/{name}.hlo.txt"
+
+    # ---- ICSML weight export (paper §4.3 porting step) -----------------
+    print("== exporting ICSML weight binaries")
+    manifest["models"]["classifier"] = {
+        "sizes": list(CLASSIFIER_LAYERS),
+        "activations": list(CLASSIFIER_ACTS),
+        "weights_dir": "weights/classifier",
+        "layers": export_weights(os.path.join(root, "weights/classifier"),
+                                 clf_params),
+        "report": clf_report,
+        "window": train.WINDOW,
+        "features": ["tb0", "wd"],
+    }
+    manifest["models"]["mnist512"] = {
+        "sizes": list(MNIST_LAYERS),
+        "activations": list(MNIST_ACTS),
+        "weights_dir": "weights/mnist512",
+        "layers": export_weights(os.path.join(root, "weights/mnist512"),
+                                 mn_params),
+        "report": mn_report,
+    }
+
+    # ---- eval slices ----------------------------------------------------
+    ds = os.path.join(root, "dataset")
+    os.makedirs(ds, exist_ok=True)
+    xev.astype(np.float32).tofile(os.path.join(ds, "eval_windows.bin"))
+    yev.astype(np.int32).tofile(os.path.join(ds, "eval_labels.bin"))
+    mxev.astype(np.float32).tofile(os.path.join(ds, "mnist_eval_x.bin"))
+    myev.astype(np.int32).tofile(os.path.join(ds, "mnist_eval_y.bin"))
+    # Expected logits (ground truth for the Rust backends: the ST
+    # interpreter, the native engine and the PJRT runtime must all agree
+    # with these to float tolerance).
+    clf_logits = np.asarray(mlp_forward(
+        [(jnp.asarray(w), jnp.asarray(b)) for w, b in clf_params],
+        jnp.asarray(xev), CLASSIFIER_ACTS, interpret=True))
+    clf_logits.astype(np.float32).tofile(os.path.join(ds, "eval_logits.bin"))
+    mn_logits = np.asarray(mlp_forward(
+        [(jnp.asarray(w), jnp.asarray(b)) for w, b in mn_params],
+        jnp.asarray(mxev), MNIST_ACTS, interpret=True))
+    mn_logits.astype(np.float32).tofile(
+        os.path.join(ds, "mnist_eval_logits.bin"))
+    manifest["dataset"] = {
+        "eval_windows": "dataset/eval_windows.bin",
+        "eval_labels": "dataset/eval_labels.bin",
+        "eval_logits": "dataset/eval_logits.bin",
+        "eval_n": int(len(yev)),
+        "mnist_eval_x": "dataset/mnist_eval_x.bin",
+        "mnist_eval_y": "dataset/mnist_eval_y.bin",
+        "mnist_eval_logits": "dataset/mnist_eval_logits.bin",
+        "mnist_eval_n": int(len(myev)),
+    }
+
+    # ---- golden plant trace + constants ---------------------------------
+    print("== emitting golden plant trace")
+    trace = plant.golden_trace()
+    write(os.path.join(root, "golden/msf_trace.json"),
+          json.dumps(trace))
+    manifest["golden_trace"] = "golden/msf_trace.json"
+    manifest["plant"] = plant.constants_manifest()
+
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== manifest written: {os.path.join(root, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

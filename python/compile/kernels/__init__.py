@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the ICSML reproduction.
+
+The compiled comparator path ("TFLite" stand-in) lowers the L2 JAX model —
+built on these kernels — to HLO text executed from Rust via PJRT.
+
+Kernels are authored for TPU structure (MXU-aligned BlockSpec tiling,
+HBM->VMEM streaming) but lowered with ``interpret=True`` so the CPU PJRT
+client can execute them; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .dense import dense, apply_activation, ACTIVATIONS
+from .quant_dense import quant_dense, quantize_weights
+
+__all__ = [
+    "dense",
+    "apply_activation",
+    "quant_dense",
+    "quantize_weights",
+    "ACTIVATIONS",
+]

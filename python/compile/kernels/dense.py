@@ -1,0 +1,116 @@
+"""Fused dense layer ``y = act(x @ w + b)`` as a Pallas kernel.
+
+TPU mapping of the paper's hot spot (the ICSML DOT_PRODUCT + activation):
+
+* Grid tiles the output over ``(B / block_m, N / block_n)``; the reduction
+  dimension ``K`` is kept whole per block (all models in the paper are
+  small enough that a ``(block_m, K)`` activation tile and a
+  ``(K, block_n)`` weight tile fit VMEM comfortably; see the footprint
+  estimate in DESIGN.md §Hardware-Adaptation).
+* ``block_n`` is chosen as a multiple of 128 (MXU lane width) whenever the
+  layer width allows, so each block is one systolic-array pass.
+* Bias add + activation are fused in the epilogue (VPU ops) — the memory
+  traffic the paper saves by hand-fusing in ST, we save by fusion.
+
+``interpret=True`` is mandatory on CPU PJRT: real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation epilogues available inside the kernel. Mirrors the ICSML ST
+# activation set (python/../rust assets/activations.st); Softmax is applied
+# at the model level because it needs a full-row reduction.
+ACTIVATIONS = (
+    "linear",
+    "relu",
+    "leaky_relu",
+    "elu",
+    "sigmoid",
+    "tanh",
+    "swish",
+    "binary_step",
+)
+
+
+def apply_activation(y, activation: str, alpha: float = 0.01):
+    """Activation epilogue; shared by the kernel and the pure-jnp oracle."""
+    if activation == "linear":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "leaky_relu":
+        return jnp.where(y >= 0.0, y, alpha * y)
+    if activation == "elu":
+        return jnp.where(y >= 0.0, y, alpha * (jnp.exp(y) - 1.0))
+    if activation == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-y))
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "swish":
+        return y / (1.0 + jnp.exp(-y))
+    if activation == "binary_step":
+        return jnp.where(y >= 0.0, 1.0, 0.0)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str, alpha: float):
+    # One (block_m, block_n) output tile: a single MXU pass over the full
+    # reduction dimension, with the bias/activation epilogue fused.
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = acc + b_ref[...][None, :]
+    o_ref[...] = apply_activation(y, activation, alpha)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= target, preferring multiples of
+    128 (MXU lane width) when available."""
+    if n <= target:
+        return n
+    best = 1
+    for d in range(1, target + 1):
+        if n % d == 0:
+            if d % 128 == 0 or best % 128 != 0 or d > best:
+                if d % 128 == 0 or best % 128 != 0:
+                    best = d
+    return best
+
+
+@partial(jax.jit, static_argnames=("activation", "alpha", "interpret"))
+def dense(x, w, b, *, activation: str = "linear", alpha: float = 0.01,
+          interpret: bool = True):
+    """Fused dense layer ``act(x @ w + b)``.
+
+    Args:
+      x: ``f32[B, K]`` activations.
+      w: ``f32[K, N]`` weights (ICSML stores the transpose; the porting
+         tool handles the layout swap).
+      b: ``f32[N]`` bias.
+      activation: one of :data:`ACTIVATIONS`.
+      alpha: slope/scale for leaky_relu / elu.
+    """
+    bsz, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"reduction mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    block_m = bsz  # batches in this repo are tiny (1..64)
+    block_n = _pick_block(n, 512)
+    grid = (bsz // block_m, n // block_n)
+
+    return pl.pallas_call(
+        partial(_dense_kernel, activation=activation, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

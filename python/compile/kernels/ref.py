@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has an oracle here with an identical
+signature; ``python/tests/test_kernel.py`` asserts allclose across a
+hypothesis-driven sweep of shapes, activations and quantization schemes.
+"""
+
+import jax.numpy as jnp
+
+from .dense import apply_activation
+from .quant_dense import SCHEMES
+
+
+def dense_ref(x, w, b, *, activation: str = "linear", alpha: float = 0.01):
+    """Oracle for :func:`kernels.dense.dense`."""
+    return apply_activation(x @ w + b[None, :], activation, alpha)
+
+
+def quant_dense_ref(x, w_q, s_w, b, s_x, *, scheme: str = "SINT",
+                    activation: str = "linear", alpha: float = 0.01):
+    """Oracle for :func:`kernels.quant_dense.quant_dense`."""
+    qmax = float(jnp.iinfo(SCHEMES[scheme]).max)
+    x_q = jnp.clip(jnp.round(x / s_x[0]), -qmax, qmax).astype(jnp.int32)
+    acc = x_q @ w_q.astype(jnp.int32)
+    y = acc.astype(jnp.float32) * (s_x[0] * s_w)[None, :] + b[None, :]
+    return apply_activation(y, activation, alpha)

@@ -1,0 +1,79 @@
+"""L2: JAX model definitions built on the L1 Pallas kernels.
+
+Three model families, all from the paper:
+
+* ``mlp`` — generic dense MLP used for the Fig. 4 layer-stacking and
+  §5.3 layer-size benchmark sweeps (64-in/64-out stacks; 32-in width
+  sweeps) and as the compiled "TFLite" comparator.
+* ``classifier`` — the §7 MSF-desalination anomaly detector:
+  400 inputs (2 features x 10 Hz x 20 s window) -> 64 -> 32 -> 16 -> 2,
+  ReLU hidden activations, logits out.
+* ``mnist512`` — the §6.1 quantization-study model: 784 -> 512 -> 512
+  -> 10 (the isolated second hidden layer is the 512x512 layer the paper
+  quantizes).
+
+Everything here is build-time only; the lowered HLO text is the runtime
+artifact.
+"""
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense
+
+# Architecture constants shared with the Rust side via the manifest.
+CLASSIFIER_LAYERS = (400, 64, 32, 16, 2)
+CLASSIFIER_ACTS = ("relu", "relu", "relu", "linear")
+MNIST_LAYERS = (784, 512, 512, 10)
+MNIST_ACTS = ("relu", "relu", "linear")
+
+
+def init_mlp(key, sizes: Sequence[int]):
+    """He-initialized MLP parameters as a list of ``(w, b)`` pairs.
+
+    Weights are stored ``[fan_in, fan_out]`` (JAX layout); the porting
+    tool transposes to ICSML's per-neuron row layout.
+    """
+    params = []
+    for k_in, k_out in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (k_in, k_out), jnp.float32)
+        w = w * jnp.sqrt(2.0 / k_in)
+        params.append((w, jnp.zeros((k_out,), jnp.float32)))
+    return params
+
+
+def mlp_forward(params, x, acts: Sequence[str], *, interpret: bool = True):
+    """Forward pass through a dense MLP using the fused Pallas kernel."""
+    assert len(params) == len(acts)
+    for (w, b), act in zip(params, acts):
+        x = dense(x, w, b, activation=act, interpret=interpret)
+    return x
+
+
+def classifier_forward(params, x, *, interpret: bool = True):
+    """The §7 anomaly-detection classifier (logits over {normal, attack})."""
+    return mlp_forward(params, x, CLASSIFIER_ACTS, interpret=interpret)
+
+
+def mnist_forward(params, x, *, interpret: bool = True):
+    """The §6.1 quantization-study classifier (logits over 10 classes)."""
+    return mlp_forward(params, x, MNIST_ACTS, interpret=interpret)
+
+
+def bench_stack_sizes(depth: int, width: int = 64):
+    """Fig. 4 layer-stacking benchmark architecture: ``width`` in/out,
+    ``depth`` hidden dense+ReLU layers."""
+    return (width,) + (width,) * depth
+
+
+def bench_stack_acts(depth: int):
+    return ("relu",) * depth
+
+
+def bench_width_sizes(neurons: int, n_in: int = 32):
+    """§5.3 layer-size benchmark: 32 input features, one dense layer of
+    ``neurons`` outputs with ReLU."""
+    return (n_in, neurons)

@@ -1,0 +1,284 @@
+"""Build-time MSF desalination plant model + cascaded PID + attack injector.
+
+This is the Python twin of ``rust/src/msf/`` (the runtime HITL plant). The
+paper drives a MATLAB Simulink model of the Khubar II MSF plant (Ali 2002);
+we substitute a reduced-order nonlinear flash model with the same control
+structure — see DESIGN.md §2. **The discrete dynamics here are the
+normative spec**: the Rust plant implements the identical equations in the
+identical evaluation order, and ``artifacts/golden/msf_trace.json``
+(emitted by ``aot.py``) pins them together to ~1e-9.
+
+Model (all flows tons/min, temperatures °C, time minutes):
+
+  states   tb0   top brine temperature (after the brine heater)
+           tbot  bottom/reject-section brine temperature
+           wd    distillate product flow rate (first-order production lag)
+
+  t_in       = tbot + R_RECOV * (tb0 - tbot)        # condenser preheat
+  d tb0 /dt  = (LAMBDA_S * ws - wr * CP * (tb0 - t_in)) / C_H
+  flash_heat = wr * CP * (tb0 - tbot)
+  d tbot/dt  = (F_FLASH * flash_heat - wrej * CP * (tbot - T_SEA)) / C_B
+  wd_inst    = flash_heat / LAMBDA_V
+  d wd  /dt  = (wd_inst - wd) / TAU_D
+
+Steady state (nominal): tb0=90, tbot=40, wd=19.1818 t/min (the paper's
+Fig. 8 mean is 19.18), ws=5.7545.
+
+The PLC runs a cascaded PID each 100 ms scan cycle: the outer loop maps
+the Wd error to a TB0 setpoint, the inner loop maps the TB0 error to the
+steam flow command Ws — exactly the paper's §7 control topology (PLC
+inputs: TB0, Wd; output: Ws).
+"""
+
+import json
+import math
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------- constants
+DT = 0.1 / 60.0          # scan period: 100 ms, in minutes
+T_SEA = 35.0             # seawater temperature (°C)
+T_STEAM = 97.0           # heater steam temperature (°C) — informational
+LAMBDA_S = 550.0         # steam latent heat (kcal/kg, ton-consistent units)
+LAMBDA_V = 550.0         # vapor latent heat
+CP = 1.0                 # brine specific heat
+R_RECOV = 0.7            # condenser heat-recovery fraction
+F_FLASH = 0.1            # flash-heat fraction reaching the reject section
+C_H = 800.0              # brine-heater thermal capacity
+C_B = 1500.0             # reject-section thermal capacity
+TAU_D = 0.5              # distillate production lag (min)
+
+WR_NOM = 211.0           # recycle brine flow (tons/min)
+WREJ_NOM = 211.0         # reject seawater flow (tons/min)
+WS_NOM = 3165.0 / 550.0  # steady-state steam flow = 5.754545...
+WS_MAX = 12.0
+TB0_NOM = 90.0
+TBOT_NOM = 40.0
+WD_SET = 211.0 * 50.0 / 550.0  # 19.1818... (paper Fig. 8: 19.18)
+
+# Cascaded PID gains (tuned on this plant; mirrored in rust/src/msf/pid.rs)
+OUTER_KP = 2.0           # °C per (ton/min) Wd error
+OUTER_KI = 0.8           # °C per (ton/min · min)
+TB0_SET_MIN, TB0_SET_MAX = 75.0, 95.0
+INNER_KP = 0.6           # (ton/min steam) per °C TB0 error
+INNER_KI = 0.35
+WS_MIN = 0.0
+
+# ADC models (14-bit over the instrument range; calibrated so the Wd
+# series matches the paper's Fig. 8 σ ≈ 9.5e-4 with quantization steps
+# still visible as the §7.1 'horizontal dot segments')
+TB0_ADC_LO, TB0_ADC_HI = 0.0, 150.0
+WD_ADC_LO, WD_ADC_HI = 0.0, 40.0
+ADC_LEVELS = 16383.0
+TB0_NOISE = 0.02         # sensor noise std-dev (°C)
+WD_NOISE = 0.0005        # sensor noise std-dev (tons/min)
+
+
+def adc(value: float, lo: float, hi: float) -> float:
+    """12-bit ADC quantization over [lo, hi] (paper §7.1 'horizontal dot
+    segments')."""
+    v = min(max(value, lo), hi)
+    code = math.floor((v - lo) / (hi - lo) * ADC_LEVELS + 0.5)
+    return lo + code * (hi - lo) / ADC_LEVELS
+
+
+class SplitMix64:
+    """Deterministic PRNG shared (by spec) with rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self) -> float:
+        # Box-Muller, one sample per call pair (second discarded for spec
+        # simplicity; identical in the Rust twin).
+        u1 = max(self.next_f64(), 1e-300)
+        u2 = self.next_f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+# ---------------------------------------------------------------- attacks
+ATTACK_FAMILIES = (
+    "steam_bias",        # 1. Ws actuator scaling
+    "recycle_reduction", # 2. recycle brine flow cut
+    "reject_manipulation", # 3. reject seawater flow scaling
+    "tb0_fdi",           # 4. false data injection on TB0 sensor
+    "wd_fdi",            # 5. false data injection on Wd sensor
+    "setpoint_tamper",   # 6. Wd setpoint tampering
+    "combined",          # 7. brine + steam + reject (Fig. 7 scenario)
+)
+
+
+@dataclass
+class Attack:
+    """One process-aware attack instance (family + magnitude + window)."""
+
+    family: str
+    magnitude: float
+    start_step: int
+    end_step: int
+
+    def active(self, step: int) -> bool:
+        return self.start_step <= step < self.end_step
+
+
+@dataclass
+class PlantState:
+    tb0: float = TB0_NOM
+    tbot: float = TBOT_NOM
+    wd: float = WD_SET
+
+
+@dataclass
+class PidState:
+    outer_i: float = 0.0
+    inner_i: float = 0.0
+
+
+def plant_step(s: PlantState, ws: float, wr: float, wrej: float) -> PlantState:
+    """One Euler step of the plant ODEs (normative evaluation order)."""
+    t_in = s.tbot + R_RECOV * (s.tb0 - s.tbot)
+    d_tb0 = (LAMBDA_S * ws - wr * CP * (s.tb0 - t_in)) / C_H
+    flash_heat = wr * CP * (s.tb0 - s.tbot)
+    d_tbot = (F_FLASH * flash_heat - wrej * CP * (s.tbot - T_SEA)) / C_B
+    wd_inst = flash_heat / LAMBDA_V
+    d_wd = (wd_inst - s.wd) / TAU_D
+    return PlantState(
+        tb0=s.tb0 + DT * d_tb0,
+        tbot=s.tbot + DT * d_tbot,
+        wd=s.wd + DT * d_wd,
+    )
+
+
+def pid_step(p: PidState, tb0_meas: float, wd_meas: float,
+             wd_set: float) -> float:
+    """Cascaded PID (runs inside the PLC scan cycle). Returns Ws command.
+
+    Anti-windup: integrators are clamped alongside their outputs.
+    """
+    e_outer = wd_set - wd_meas
+    p.outer_i += e_outer * DT
+    p.outer_i = min(max(p.outer_i, -20.0), 20.0)
+    tb0_set = TB0_NOM + OUTER_KP * e_outer + OUTER_KI * p.outer_i
+    tb0_set = min(max(tb0_set, TB0_SET_MIN), TB0_SET_MAX)
+
+    e_inner = tb0_set - tb0_meas
+    p.inner_i += e_inner * DT
+    p.inner_i = min(max(p.inner_i, -30.0), 30.0)
+    ws = WS_NOM + INNER_KP * e_inner + INNER_KI * p.inner_i
+    return min(max(ws, WS_MIN), WS_MAX)
+
+
+@dataclass
+class Simulator:
+    """Closed-loop HITL twin: plant + ADC + cascaded PID + attack injector."""
+
+    seed: int = 7
+    noise: bool = True
+    state: PlantState = field(default_factory=PlantState)
+    pid: PidState = field(default_factory=PidState)
+    attacks: list = field(default_factory=list)
+    step_idx: int = 0
+
+    def __post_init__(self):
+        self.rng = SplitMix64(self.seed)
+
+    def _attack_params(self):
+        """Fold all active attacks into actuator/sensor/setpoint effects."""
+        wr, wrej = WR_NOM, WREJ_NOM
+        ws_scale = 1.0
+        tb0_bias, wd_scale, wd_set = 0.0, 1.0, WD_SET
+        active = False
+        for a in self.attacks:
+            if not a.active(self.step_idx):
+                continue
+            active = True
+            m = a.magnitude
+            if a.family == "steam_bias":
+                ws_scale *= 1.0 + m
+            elif a.family == "recycle_reduction":
+                wr *= 1.0 - m
+            elif a.family == "reject_manipulation":
+                wrej *= 1.0 + m
+            elif a.family == "tb0_fdi":
+                tb0_bias += m
+            elif a.family == "wd_fdi":
+                wd_scale *= 1.0 - m
+            elif a.family == "setpoint_tamper":
+                wd_set = WD_SET + m
+            elif a.family == "combined":
+                wr *= 1.0 - 0.6 * m
+                ws_scale *= 1.0 + 0.4 * m
+                wrej *= 1.0 - 0.8 * m
+            else:
+                raise ValueError(a.family)
+        return wr, wrej, ws_scale, tb0_bias, wd_scale, wd_set, active
+
+    def step(self):
+        """One 100 ms scan cycle. Returns the PLC's view of the world:
+        ``(tb0_adc, wd_adc, ws_cmd, attack_active)``."""
+        wr, wrej, ws_scale, tb0_bias, wd_scale, wd_set, active = \
+            self._attack_params()
+
+        # Sensor path: true value -> (FDI) -> noise -> ADC.
+        tb0_s = self.state.tb0 + tb0_bias
+        wd_s = self.state.wd * wd_scale
+        if self.noise:
+            tb0_s += TB0_NOISE * self.rng.normal()
+            wd_s += WD_NOISE * self.rng.normal()
+        tb0_adc = adc(tb0_s, TB0_ADC_LO, TB0_ADC_HI)
+        wd_adc = adc(wd_s, WD_ADC_LO, WD_ADC_HI)
+
+        # PLC control task (cascaded PID), then actuator path.
+        ws_cmd = pid_step(self.pid, tb0_adc, wd_adc, wd_set)
+        ws_applied = min(max(ws_cmd * ws_scale, WS_MIN), WS_MAX)
+
+        self.state = plant_step(self.state, ws_applied, wr, wrej)
+        self.step_idx += 1
+        return tb0_adc, wd_adc, ws_cmd, active
+
+
+def golden_trace(n_steps: int = 1200) -> dict:
+    """Noise-free deterministic trace pinning the Python and Rust plants
+    together. Includes a mid-trace combined attack so the attack path is
+    covered too."""
+    sim = Simulator(seed=1, noise=False,
+                    attacks=[Attack("combined", 0.5, 600, 1200)])
+    rows = []
+    for _ in range(n_steps):
+        tb0, wd, ws, active = sim.step()
+        rows.append([tb0, wd, ws,
+                     sim.state.tb0, sim.state.tbot, sim.state.wd,
+                     1 if active else 0])
+    return {
+        "dt_minutes": DT,
+        "columns": ["tb0_adc", "wd_adc", "ws_cmd",
+                    "tb0", "tbot", "wd", "attack"],
+        "rows": rows,
+    }
+
+
+def constants_manifest() -> dict:
+    """Plant constants exported to the Rust side for self-checks."""
+    return {
+        "dt": DT, "t_sea": T_SEA, "lambda_s": LAMBDA_S,
+        "lambda_v": LAMBDA_V, "cp": CP, "r_recov": R_RECOV,
+        "f_flash": F_FLASH, "c_h": C_H, "c_b": C_B, "tau_d": TAU_D,
+        "wr_nom": WR_NOM, "wrej_nom": WREJ_NOM, "ws_nom": WS_NOM,
+        "tb0_nom": TB0_NOM, "wd_set": WD_SET,
+        "outer_kp": OUTER_KP, "outer_ki": OUTER_KI,
+        "inner_kp": INNER_KP, "inner_ki": INNER_KI,
+    }
+
+
+if __name__ == "__main__":
+    trace = golden_trace()
+    print(json.dumps(trace["rows"][-1]))

@@ -1,0 +1,286 @@
+"""Build-time training for the paper's two models (paper §4.3 step 2).
+
+* MSF anomaly classifier (§7): 400-64-32-16-2 ReLU MLP over 20 s sliding
+  windows of (TB0, Wd) PLC readings; dataset synthesized by the plant twin
+  in :mod:`compile.plant` (paper: 22 h 45 min at 100 ms, ~48.8 %% attack
+  time, 7 attack families; split 72.25/12.75/15).
+* MNIST-style quantization-study model (§6.1): 784-512-512-10 on a
+  procedural 7-segment digit dataset (substitution documented in
+  DESIGN.md §2 — the study needs a trained 512x512 layer's weight
+  distribution, not MNIST semantics).
+
+Training uses plain-jnp forwards (identical math to the Pallas kernels,
+which are reserved for the AOT/inference path and verified against the
+same oracle). Optimizer: Adam. The paper trains with LR=1e-5 and 64-epoch
+early-stopping patience; we use LR=1e-3 for build-time practicality
+(documented substitution — same architecture/loss).
+"""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import plant
+from .model import (CLASSIFIER_LAYERS, CLASSIFIER_ACTS, MNIST_LAYERS,
+                    MNIST_ACTS, init_mlp)
+
+FAST = os.environ.get("ICSML_FAST", "0") == "1"
+
+# Paper: 22h45m total, 11h06m under attack, 100 ms interval.
+TOTAL_STEPS = 819_000 if not FAST else 60_000
+WINDOW = 200           # readings per feature (20 s x 10 Hz)
+N_FEATURES = 2
+STRIDE = 5             # window subsampling stride for the training set
+SPLIT = (0.7225, 0.1275, 0.15)
+
+
+# ------------------------------------------------------------ MSF dataset
+def attack_schedule(total_steps: int, rng: plant.SplitMix64):
+    """Alternating normal/attack blocks covering all 7 families twice,
+    with family-appropriate magnitudes (moderate + strong instance each).
+    Attack time lands near the paper's ~48.8 %."""
+    mags = {
+        "steam_bias": (0.15, 0.35),
+        "recycle_reduction": (0.12, 0.30),
+        "reject_manipulation": (0.25, 0.50),
+        "tb0_fdi": (1.5, 4.0),
+        "wd_fdi": (0.04, 0.10),
+        "setpoint_tamper": (1.0, 3.0),
+        "combined": (0.30, 0.55),
+    }
+    families = list(plant.ATTACK_FAMILIES)
+    n_blocks = 2 * len(families)
+    attack_len = int(total_steps * 0.488) // n_blocks
+    normal_len = (total_steps - n_blocks * attack_len) // (n_blocks + 1)
+    attacks, cursor = [], normal_len
+    order = families + families[::-1]
+    for i, fam in enumerate(order):
+        lo, hi = mags[fam]
+        m = lo if i < len(families) else hi
+        m *= 0.9 + 0.2 * rng.next_f64()   # jitter magnitudes
+        attacks.append(plant.Attack(fam, m, cursor, cursor + attack_len))
+        cursor += attack_len + normal_len
+    return attacks
+
+
+def simulate_series(total_steps: int = TOTAL_STEPS, seed: int = 11):
+    """Run the closed-loop twin and return PLC-visible series + labels."""
+    rng = plant.SplitMix64(seed ^ 0xA5A5)
+    sim = plant.Simulator(seed=seed, noise=True,
+                          attacks=attack_schedule(total_steps, rng))
+    tb0 = np.empty(total_steps, np.float32)
+    wd = np.empty(total_steps, np.float32)
+    lab = np.empty(total_steps, np.int32)
+    for i in range(total_steps):
+        t, w, _, active = sim.step()
+        tb0[i] = t
+        wd[i] = w
+        lab[i] = 1 if active else 0
+    return tb0, wd, lab
+
+
+def window_matrix(tb0, wd, lab, idx):
+    """Gather feature windows ending at ``idx`` (inclusive): the paper's
+    400 inputs = ordered TB0 readings then ordered Wd readings over the
+    past 20 s. Label = attack state at the window end."""
+    offs = np.arange(-(WINDOW - 1), 1)
+    gather = idx[:, None] + offs[None, :]
+    x = np.concatenate([tb0[gather], wd[gather]], axis=1)
+    return x.astype(np.float32), lab[idx].astype(np.int32)
+
+
+def make_dataset(seed: int = 11):
+    tb0, wd, lab = simulate_series(seed=seed)
+    idx = np.arange(WINDOW - 1, len(tb0), STRIDE)
+    rng = np.random.default_rng(seed)
+    rng.shuffle(idx)
+    n = len(idx)
+    n_tr = int(n * SPLIT[0])
+    n_va = int(n * SPLIT[1])
+    parts = {
+        "train": idx[:n_tr],
+        "val": idx[n_tr:n_tr + n_va],
+        "test": idx[n_tr + n_va:],
+    }
+    # Per-channel normalization constants from the train split only.
+    xtr, _ = window_matrix(tb0, wd, lab, parts["train"][:20000])
+    mu = np.array([xtr[:, :WINDOW].mean(), xtr[:, WINDOW:].mean()], np.float32)
+    sd = np.array([max(xtr[:, :WINDOW].std(), 1e-6),
+                   max(xtr[:, WINDOW:].std(), 1e-6)], np.float32)
+    return (tb0, wd, lab), parts, (mu, sd)
+
+
+def normalize(x, mu, sd):
+    out = x.copy()
+    out[:, :WINDOW] = (out[:, :WINDOW] - mu[0]) / sd[0]
+    out[:, WINDOW:] = (out[:, WINDOW:] - mu[1]) / sd[1]
+    return out
+
+
+# ------------------------------------------------------------ training
+def _forward_jnp(params, x, acts):
+    from .kernels.dense import apply_activation
+    for (w, b), act in zip(params, acts):
+        x = apply_activation(x @ w + b[None, :], act)
+    return x
+
+
+def _make_update(acts, lr):
+    def loss_fn(params, x, y):
+        logits = _forward_jnp(params, x, acts)
+        logz = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logz, y[:, None], axis=1))
+
+    @jax.jit
+    def update(params, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params, new_opt = [], []
+        for (p, g), (m, v, t) in zip(
+                [(p, g) for lp, lg in zip(params, grads) for p, g in zip(lp, lg)],
+                [s for ls in opt for s in ls]):
+            t = t + 1
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * (g * g)
+            mh = m / (1 - 0.9 ** t)
+            vh = v / (1 - 0.999 ** t)
+            new_params.append(p - lr * mh / (jnp.sqrt(vh) + 1e-8))
+            new_opt.append((m, v, t))
+        params = [tuple(new_params[i:i + 2]) for i in range(0, len(new_params), 2)]
+        opt = [tuple(new_opt[i:i + 2]) for i in range(0, len(new_opt), 2)]
+        return params, opt, loss
+
+    return update
+
+
+def _init_opt(params):
+    return [tuple((jnp.zeros_like(w), jnp.zeros_like(w), jnp.int32(0))
+                  for w in layer) for layer in params]
+
+
+def _accuracy(params, acts, x, y, batch=4096):
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = _forward_jnp(params, jnp.asarray(x[i:i + batch]), acts)
+        correct += int((jnp.argmax(logits, axis=1) == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+def train_classifier(seed: int = 11, verbose: bool = True):
+    """Train the §7 anomaly classifier. Returns (params, report, eval_pack).
+
+    ``params`` has the normalization folded into layer 0 so the ported
+    model consumes raw ADC readings (see aot.py).
+    """
+    (tb0, wd, lab), parts, (mu, sd) = make_dataset(seed)
+    key = jax.random.PRNGKey(seed)
+    params = init_mlp(key, CLASSIFIER_LAYERS)
+    opt = _init_opt(params)
+    update = _make_update(CLASSIFIER_ACTS, lr=1e-3)
+
+    steps = 3000 if not FAST else 300
+    batch = 256
+    rng = np.random.default_rng(seed + 1)
+    train_idx = parts["train"]
+    best_val, best_params, patience = 0.0, params, 0
+    xval, yval = window_matrix(tb0, wd, lab, parts["val"][:8000])
+    xval = normalize(xval, mu, sd)
+
+    for step in range(steps):
+        take = rng.integers(0, len(train_idx), batch)
+        xb, yb = window_matrix(tb0, wd, lab, train_idx[take])
+        xb = normalize(xb, mu, sd)
+        params, opt, loss = update(params, opt, jnp.asarray(xb), jnp.asarray(yb))
+        if (step + 1) % 250 == 0:
+            vacc = _accuracy(params, CLASSIFIER_ACTS, xval, yval)
+            if verbose:
+                print(f"[classifier] step {step+1} loss {float(loss):.4f} "
+                      f"val_acc {vacc:.4f}")
+            if vacc > best_val:
+                best_val, best_params, patience = vacc, params, 0
+            else:
+                patience += 1
+                if patience >= 4:   # early stopping (paper: patience 64 epochs)
+                    break
+
+    params = best_params
+    xte, yte = window_matrix(tb0, wd, lab, parts["test"][:20000])
+    xte_n = normalize(xte, mu, sd)
+    test_acc = _accuracy(params, CLASSIFIER_ACTS, xte_n, yte)
+    if verbose:
+        print(f"[classifier] test_acc {test_acc:.4f} (paper: ~0.9368)")
+
+    # Fold normalization into layer 0: y = W^T (x-mu)/sd + b
+    w0, b0 = params[0]
+    scale = np.ones((CLASSIFIER_LAYERS[0],), np.float32)
+    shift = np.zeros((CLASSIFIER_LAYERS[0],), np.float32)
+    scale[:WINDOW], scale[WINDOW:] = 1.0 / sd[0], 1.0 / sd[1]
+    shift[:WINDOW], shift[WINDOW:] = mu[0] / sd[0], mu[1] / sd[1]
+    w0f = w0 * jnp.asarray(scale)[:, None]
+    b0f = b0 - jnp.asarray(shift) @ w0
+    folded = [(w0f, b0f)] + params[1:]
+
+    report = {
+        "test_accuracy": float(test_acc),
+        "val_accuracy": float(best_val),
+        "paper_accuracy": 0.9368,
+        "train_windows": int(len(parts["train"])),
+        "total_steps_simulated": TOTAL_STEPS,
+    }
+    # Raw (unnormalized) eval slice for the Rust-side accuracy check.
+    eval_pack = (xte[:2000], yte[:2000])
+    return folded, report, eval_pack
+
+
+# ------------------------------------------------ synthetic MNIST (§6.1)
+_SEGS = {  # 7-segment truth table per digit
+    0: "abcdef", 1: "bc", 2: "abdeg", 3: "abcdg", 4: "bcfg",
+    5: "acdfg", 6: "acdefg", 7: "abc", 8: "abcdefg", 9: "abcdfg",
+}
+_SEG_BOXES = {  # (r0, r1, c0, c1) on a 28x28 canvas
+    "a": (3, 6, 8, 20), "b": (6, 14, 18, 21), "c": (15, 23, 18, 21),
+    "d": (22, 25, 8, 20), "e": (15, 23, 7, 10), "f": (6, 14, 7, 10),
+    "g": (13, 16, 8, 20),
+}
+
+
+def synth_digits(n: int, seed: int):
+    """Procedural 7-segment digit images (28x28), jittered + noised."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, 28, 28), np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    for i in range(n):
+        img = np.zeros((28, 28), np.float32)
+        amp = 0.7 + 0.3 * rng.random()
+        for seg in _SEGS[int(y[i])]:
+            r0, r1, c0, c1 = _SEG_BOXES[seg]
+            img[r0:r1, c0:c1] = amp
+        dr, dc = rng.integers(-3, 4, 2)
+        img = np.roll(np.roll(img, dr, axis=0), dc, axis=1)
+        img += 0.12 * rng.standard_normal((28, 28)).astype(np.float32)
+        x[i] = np.clip(img, 0.0, 1.0)
+    return x.reshape(n, 784), y
+
+
+def train_mnist(seed: int = 5, verbose: bool = True):
+    """Train the §6.1 quantization-study model on procedural digits."""
+    n_train = 20000 if not FAST else 3000
+    xtr, ytr = synth_digits(n_train, seed)
+    xte, yte = synth_digits(3000, seed + 999)
+    params = init_mlp(jax.random.PRNGKey(seed), MNIST_LAYERS)
+    opt = _init_opt(params)
+    update = _make_update(MNIST_ACTS, lr=1e-3)
+    steps = 1200 if not FAST else 150
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        take = rng.integers(0, n_train, 128)
+        params, opt, loss = update(params, opt, jnp.asarray(xtr[take]),
+                                   jnp.asarray(ytr[take]))
+        if verbose and (step + 1) % 300 == 0:
+            print(f"[mnist512] step {step+1} loss {float(loss):.4f}")
+    acc = _accuracy(params, MNIST_ACTS, xte, yte)
+    if verbose:
+        print(f"[mnist512] test_acc {acc:.4f}")
+    return params, {"test_accuracy": float(acc)}, (xte[:512], yte[:512])

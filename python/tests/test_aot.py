@@ -1,0 +1,111 @@
+"""AOT artifact schema checks (run against a throwaway fast build when no
+artifacts exist; against the real artifacts/ when present)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+ARTIFACTS = os.path.join(ROOT, "artifacts")
+FALLBACK = os.path.join(ROOT, "artifacts_fast")
+
+
+def _artifact_dir():
+    for d in (ARTIFACTS, FALLBACK):
+        if os.path.exists(os.path.join(d, "manifest.json")):
+            return d
+    pytest.skip("no artifacts built (run `make artifacts` first)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    d = _artifact_dir()
+    with open(os.path.join(d, "manifest.json")) as f:
+        return d, json.load(f)
+
+
+def test_manifest_schema(manifest):
+    d, m = manifest
+    for key in ("hlo", "models", "dataset", "plant", "golden_trace"):
+        assert key in m, key
+    assert "classifier" in m["models"] and "mnist512" in m["models"]
+
+
+def test_hlo_artifacts_exist_and_have_full_constants(manifest):
+    d, m = manifest
+    for name, rel in m["hlo"].items():
+        path = os.path.join(d, rel)
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule")
+        # The elided-constant marker must never appear (it would mean the
+        # embedded weights were destroyed on the text round-trip).
+        assert "constant({...})" not in text, name
+
+
+def test_classifier_manifest_matches_architecture(manifest):
+    d, m = manifest
+    c = m["models"]["classifier"]
+    assert c["sizes"] == [400, 64, 32, 16, 2]
+    assert c["activations"] == ["relu", "relu", "relu", "linear"]
+    for i, layer in enumerate(c["layers"]):
+        w = os.path.join(d, c["weights_dir"], layer["weights"])
+        b = os.path.join(d, c["weights_dir"], layer["biases"])
+        assert os.path.getsize(w) == 4 * layer["inputs"] * layer["neurons"]
+        assert os.path.getsize(b) == 4 * layer["neurons"]
+
+
+def test_weight_binaries_row_major_out_in(manifest):
+    """ICSML layout: l0_w.bin is [out][in] row-major f32 LE."""
+    d, m = manifest
+    c = m["models"]["classifier"]
+    l0 = c["layers"][0]
+    w = np.fromfile(os.path.join(d, c["weights_dir"], l0["weights"]),
+                    np.float32)
+    assert w.size == l0["inputs"] * l0["neurons"]
+    assert np.isfinite(w).all()
+
+
+def test_eval_slices_consistent(manifest):
+    d, m = manifest
+    ds = m["dataset"]
+    n = ds["eval_n"]
+    x = np.fromfile(os.path.join(d, ds["eval_windows"]), np.float32)
+    y = np.fromfile(os.path.join(d, ds["eval_labels"]), np.int32)
+    z = np.fromfile(os.path.join(d, ds["eval_logits"]), np.float32)
+    assert x.size == n * 400 and y.size == n and z.size == n * 2
+    assert set(np.unique(y)).issubset({0, 1})
+
+
+def test_eval_logits_reproduce_labels_reasonably(manifest):
+    """argmax(exported logits) should beat chance comfortably on the eval
+    slice — guards against scrambled export order."""
+    d, m = manifest
+    ds = m["dataset"]
+    n = ds["eval_n"]
+    y = np.fromfile(os.path.join(d, ds["eval_labels"]), np.int32)
+    z = np.fromfile(os.path.join(d, ds["eval_logits"]),
+                    np.float32).reshape(n, 2)
+    acc = float((z.argmax(1) == y).mean())
+    assert acc > 0.7, acc
+
+
+def test_golden_trace_schema(manifest):
+    d, m = manifest
+    with open(os.path.join(d, m["golden_trace"])) as f:
+        trace = json.load(f)
+    assert trace["columns"] == ["tb0_adc", "wd_adc", "ws_cmd",
+                                "tb0", "tbot", "wd", "attack"]
+    assert len(trace["rows"]) >= 1000
+    assert all(len(r) == 7 for r in trace["rows"][:10])
+
+
+def test_plant_constants_exported(manifest):
+    d, m = manifest
+    from compile import plant
+    assert abs(m["plant"]["wd_set"] - plant.WD_SET) < 1e-12
+    assert abs(m["plant"]["dt"] - plant.DT) < 1e-15

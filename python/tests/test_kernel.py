@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes, activations and quantization schemes; every
+case asserts allclose between the interpret-mode Pallas kernel and the
+reference implementation in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, quant_dense, quantize_weights, ACTIVATIONS
+from compile.kernels.quant_dense import SCHEMES
+from compile.kernels.ref import dense_ref, quant_dense_ref
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     jnp.float32)
+
+
+# ----------------------------------------------------------- dense kernel
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_dense_all_activations(activation):
+    x, w, b = _rand(0, (4, 96)), _rand(1, (96, 64)), _rand(2, (64,))
+    got = dense(x, w, b, activation=activation)
+    want = dense_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    k=st.integers(1, 96),
+    n=st.integers(1, 160),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_shape_sweep(batch, k, n, act, seed):
+    x = _rand(seed, (batch, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = dense(x, w, b, activation=act)
+    want = dense_ref(x, w, b, activation=act)
+    assert got.shape == (batch, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_paper_shapes():
+    """The exact shapes the paper benchmarks: 64x64 stack layers, the
+    512x512 quantization-study layer, the 784x512 pruning layer, and the
+    400-input classifier head."""
+    for (k, n) in [(64, 64), (512, 512), (784, 512), (400, 64)]:
+        x, w, b = _rand(3, (1, k)), _rand(4, (k, n), 0.1), _rand(5, (n,))
+        np.testing.assert_allclose(
+            dense(x, w, b, activation="relu"),
+            dense_ref(x, w, b, activation="relu"), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_rejects_bad_shapes():
+    x, w, b = _rand(0, (1, 8)), _rand(1, (9, 4)), _rand(2, (4,))
+    with pytest.raises(AssertionError):
+        dense(x, w, b)
+
+
+# ---------------------------------------------------- quantized kernel
+@pytest.mark.parametrize("scheme", list(SCHEMES))
+def test_quant_dense_schemes(scheme):
+    x = _rand(0, (2, 128), 0.5)
+    w = _rand(1, (128, 96), 0.2)
+    b = _rand(2, (96,), 0.1)
+    w_q, s_w = quantize_weights(w, scheme)
+    s_x = jnp.asarray([0.01], jnp.float32)
+    got = quant_dense(x, w_q, s_w, b, s_x, scheme=scheme, activation="relu")
+    want = quant_dense_ref(x, w_q, s_w, b, s_x, scheme=scheme,
+                           activation="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(4, 160),
+    n=st.integers(2, 96),
+    scheme=st.sampled_from(sorted(SCHEMES)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_dense_shape_sweep(k, n, scheme, seed):
+    x = _rand(seed, (1, k), 0.5)
+    w = _rand(seed + 1, (k, n), 0.3)
+    b = _rand(seed + 2, (n,), 0.1)
+    w_q, s_w = quantize_weights(w, scheme)
+    s_x = jnp.asarray([0.02], jnp.float32)
+    got = quant_dense(x, w_q, s_w, b, s_x, scheme=scheme)
+    want = quant_dense_ref(x, w_q, s_w, b, s_x, scheme=scheme)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_quantization_error_bounds():
+    """Dequantized weights must be within half an LSB of the original —
+    the §6.1 premise that accuracy loss is controllable."""
+    w = _rand(7, (512, 512), 0.25)
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    for scheme in ("SINT", "INT", "DINT"):
+        w_q, s_w = quantize_weights(w, scheme)
+        w_hat = w_q.astype(jnp.float32) * s_w[None, :]
+        # Half an LSB from rounding plus f32 arithmetic slack (dominant
+        # for DINT, whose LSB is below f32 resolution of |w|).
+        tol = 0.5 * s_w[None, :] + 4.0 * 2.0**-23 * absmax[None, :]
+        err = jnp.abs(w_hat - w)
+        assert bool(jnp.all(err <= tol)), scheme
+
+
+def test_quant_sint_end_to_end_close():
+    """SINT-quantized layer output stays close to the f32 layer (the
+    paper reports acceptable accuracy loss)."""
+    x = _rand(0, (8, 512), 0.5)
+    w = _rand(1, (512, 512), 0.1)
+    b = _rand(2, (512,), 0.1)
+    w_q, s_w = quantize_weights(w, "SINT")
+    s_x = jnp.asarray([float(jnp.max(jnp.abs(x))) / 127.0], jnp.float32)
+    got = quant_dense(x, w_q, s_w, b, s_x, scheme="SINT")
+    want = dense_ref(x, w, b)
+    # int8 x int8 over 512 terms: relative error well under 5%.
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.05, rel

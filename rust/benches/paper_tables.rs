@@ -1,0 +1,62 @@
+//! T1 + F3 — the paper's static data artifacts, regenerated:
+//! Table 1 (PLC hardware specs) and Fig. 3 (PLC memory vs Keras model
+//! sizes), plus the Fig. 3 conclusion check (which models fit which
+//! PLCs).
+
+use icsml::plc::profiles::{KERAS_MODEL_SIZES, PLC_SPECS};
+use icsml::util::bench::Table;
+
+fn main() {
+    println!("\nTable 1 — PLC hardware specifications by manufacturer");
+    let mut t = Table::new(&[
+        "Manufacturer",
+        "Models",
+        "Time/Instr (us)",
+        "Memory/RAM",
+    ]);
+    for s in PLC_SPECS {
+        t.row(&[
+            s.manufacturer.into(),
+            s.models.into(),
+            s.time_per_instruction_us.into(),
+            s.memory.into(),
+        ]);
+    }
+    t.print();
+
+    println!("\nFig. 3 — Keras models vs PLC memory");
+    let plcs: [(&str, f64); 8] = [
+        ("AB Micro 810", 0.002),
+        ("Siemens S7-1200", 0.15),
+        ("Mitsubishi iQ-R", 4.0),
+        ("Hitachi HX", 16.0),
+        ("Festo CECC-S", 44.0),
+        ("Eaton XC152", 64.0),
+        ("WAGO PFC100", 256.0),
+        ("WAGO PFC200", 512.0),
+    ];
+    let mut t2 = Table::new(&["Model", "Size MB (f32)", "fits on"]);
+    for (name, mparams) in KERAS_MODEL_SIZES {
+        let mb = mparams * 4.0;
+        let fits: Vec<&str> = plcs
+            .iter()
+            .filter(|(_, ram)| mb < ram * 0.75)
+            .map(|(n, _)| *n)
+            .collect();
+        t2.row(&[
+            name.to_string(),
+            format!("{mb:.1}"),
+            if fits.is_empty() {
+                "none".into()
+            } else {
+                fits.first().map(|f| format!("{f}+")).unwrap()
+            },
+        ]);
+    }
+    t2.print();
+    println!(
+        "=> the paper's Fig. 3 conclusion: most PLCs can only run the \
+         smaller models; only high-end devices (WAGO-class) hold the \
+         large Keras models."
+    );
+}

@@ -1,0 +1,9 @@
+//! Coordination layer: inference-backend router and the §6.3 multipart
+//! scheduler (splitting inference across scan cycles under a per-cycle
+//! CPU budget).
+
+pub mod multipart;
+pub mod router;
+
+pub use multipart::{MultipartSession, MultipartStats};
+pub use router::{InferenceRouter, RoutePolicy};

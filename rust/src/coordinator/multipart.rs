@@ -1,0 +1,212 @@
+//! Multipart inference (paper §6.3): when the model does not fit the
+//! scan cycle, split the computation across cycles. The scheduler
+//! walks the engine model's (layer, row) chunks, charging each row its
+//! modeled on-PLC cost and stopping when the cycle's ML budget is
+//! spent. Correctness invariant (property-tested): any schedule yields
+//! the single-shot output exactly.
+
+use crate::engine::model::{Cursor, Model};
+use crate::engine::Layer;
+use crate::plc::HwProfile;
+
+/// ST-equivalent modeled cost per MAC on a profile, anchored to the
+/// calibrated dense dot product (BBB: 455.2 µs / 4096 MACs ≈ 0.111 µs).
+pub fn us_per_mac(profile: &HwProfile) -> f64 {
+    // dense 64x64 anchor op mix per MAC (see timing_calibration.rs):
+    // ~7.25 loads, 2.1 stores, 2.02 fp, 1.06 int, 1.05 branches.
+    7.25 * profile.costs.load
+        + 2.1 * profile.costs.store
+        + 2.02 * profile.costs.fp_add
+        + 1.06 * profile.costs.int_op
+        + 1.05 * profile.costs.branch
+}
+
+/// Modeled cost (µs) of one output row of a layer.
+pub fn row_cost_us(layer: &Layer, profile: &HwProfile) -> f64 {
+    let rows = layer.chunk_rows().max(1) as f64;
+    let per_row_macs = layer.macs() as f64 / rows;
+    // per-row call overhead (method dispatch + epilogue)
+    per_row_macs * us_per_mac(profile) + profile.costs.call
+}
+
+/// Statistics from a multipart run.
+#[derive(Debug, Clone, Default)]
+pub struct MultipartStats {
+    /// Scan cycles consumed by the last inference.
+    pub cycles: u64,
+    /// Modeled ML CPU time per cycle (µs), max over cycles.
+    pub max_cycle_us: f64,
+    /// Total modeled ML time (µs).
+    pub total_us: f64,
+}
+
+/// A resumable inference session over an engine model.
+pub struct MultipartSession {
+    pub model: Model,
+    pub profile: HwProfile,
+    cursor: Cursor,
+    input: Vec<f32>,
+    pub stats: MultipartStats,
+}
+
+impl MultipartSession {
+    pub fn new(model: Model, profile: HwProfile) -> MultipartSession {
+        let in_dim = model.in_dim();
+        MultipartSession {
+            model,
+            profile,
+            cursor: Cursor::default(),
+            input: vec![0.0; in_dim],
+            stats: MultipartStats::default(),
+        }
+    }
+
+    /// Begin a new inference with input `x` (resets the cursor).
+    pub fn begin(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.input.len());
+        self.input.copy_from_slice(x);
+        self.cursor = Cursor::default();
+        self.stats = MultipartStats::default();
+    }
+
+    pub fn in_flight(&self) -> bool {
+        self.cursor != Cursor::default()
+    }
+
+    /// Run one scan cycle's worth of work under `budget_us` of modeled
+    /// CPU time. Returns the model output when the inference completes
+    /// this cycle. Always makes progress (at least one row per cycle),
+    /// matching the paper's behaviour where a single row is the minimum
+    /// schedulable unit.
+    pub fn step_cycle(&mut self, budget_us: f64) -> Option<Vec<f32>> {
+        let mut spent = 0.0f64;
+        let mut rows_done = 0usize;
+        let mut result = None;
+        loop {
+            if self.cursor.layer >= self.model.layers().len() {
+                break;
+            }
+            let cost =
+                row_cost_us(&self.model.layers()[self.cursor.layer], &self.profile);
+            if rows_done > 0 && spent + cost > budget_us {
+                break;
+            }
+            let (c, out) =
+                self.model.infer_partial(&self.input, self.cursor, 1);
+            self.cursor = c;
+            spent += cost;
+            rows_done += 1;
+            if let Some(out) = out {
+                result = Some(out);
+                break;
+            }
+        }
+        self.stats.cycles += 1;
+        self.stats.total_us += spent;
+        if spent > self.stats.max_cycle_us {
+            self.stats.max_cycle_us = spent;
+        }
+        if result.is_some() {
+            self.cursor = Cursor::default();
+        }
+        result
+    }
+
+    /// Run a whole inference under a fixed per-cycle budget; returns
+    /// (output, cycles used). Output latency = cycles × scan period.
+    pub fn run_to_completion(
+        &mut self,
+        x: &[f32],
+        budget_us: f64,
+        max_cycles: u64,
+    ) -> Option<(Vec<f32>, u64)> {
+        self.begin(x);
+        for cycle in 1..=max_cycles {
+            if let Some(out) = self.step_cycle(budget_us) {
+                return Some((out, cycle));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Act, Layer};
+    use crate::util::prop::{prop_assert, prop_check};
+
+    fn model() -> Model {
+        Model::new(vec![
+            Layer::Input { dim: 8 },
+            Layer::dense(
+                (0..8 * 16).map(|i| (i % 7) as f32 * 0.1 - 0.3).collect(),
+                vec![0.05; 16],
+                8,
+                Act::Relu,
+            ),
+            Layer::dense(
+                (0..16 * 4).map(|i| 0.2 - (i % 5) as f32 * 0.06).collect(),
+                vec![0.0; 4],
+                16,
+                Act::None,
+            ),
+        ])
+    }
+
+    #[test]
+    fn multipart_output_equals_single_shot() {
+        prop_check(40, |g| {
+            let mut m = model();
+            let x: Vec<f32> = (0..8).map(|_| g.f32_in(-1.5, 1.5)).collect();
+            let want = m.infer(&x);
+            let mut sess =
+                MultipartSession::new(model(), HwProfile::beaglebone());
+            let budget = g.f64_in(0.5, 50.0);
+            let got = sess
+                .run_to_completion(&x, budget, 10_000)
+                .expect("must finish");
+            prop_assert(
+                got.0 == want,
+                format!("multipart {:?} != single {:?}", got.0, want),
+            )?;
+            prop_assert(got.1 >= 1, "at least one cycle")
+        });
+    }
+
+    #[test]
+    fn smaller_budget_takes_more_cycles() {
+        let x = [0.3f32; 8];
+        let mut s1 = MultipartSession::new(model(), HwProfile::beaglebone());
+        let (_, fast) = s1.run_to_completion(&x, 1e9, 10).unwrap();
+        let mut s2 = MultipartSession::new(model(), HwProfile::beaglebone());
+        let (_, slow) = s2.run_to_completion(&x, 1.0, 10_000).unwrap();
+        assert_eq!(fast, 1, "unlimited budget completes in one cycle");
+        assert!(slow > fast, "tight budget spreads across cycles ({slow})");
+    }
+
+    #[test]
+    fn budget_respected_beyond_first_row() {
+        let mut sess = MultipartSession::new(model(), HwProfile::beaglebone());
+        sess.begin(&[0.1; 8]);
+        let budget = 2.0 * row_cost_us(&model().layers()[1], &HwProfile::beaglebone());
+        while sess.step_cycle(budget).is_none() {}
+        // max cycle time may exceed budget by at most one row's cost
+        // (minimum progress guarantee).
+        let max_row = model()
+            .layers()
+            .iter()
+            .map(|l| row_cost_us(l, &HwProfile::beaglebone()))
+            .fold(0.0, f64::max);
+        assert!(sess.stats.max_cycle_us <= budget + max_row + 1e-9);
+    }
+
+    #[test]
+    fn wago_rows_cost_more_than_bbb() {
+        let l = model().layers()[1].clone();
+        assert!(
+            row_cost_us(&l, &HwProfile::wago_pfc100())
+                > row_cost_us(&l, &HwProfile::beaglebone())
+        );
+    }
+}

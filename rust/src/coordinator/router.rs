@@ -1,0 +1,203 @@
+//! Inference-backend router: registers the available backends (ST
+//! interpreter PLC, native engine, XLA/PJRT) and routes requests by
+//! policy. On a real deployment the ST path *is* the PLC; the router
+//! exists so the serving examples and benchmarks can exercise all
+//! paths uniformly and fall back when a backend is unavailable.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::defense::Backend;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Always use the named backend.
+    Pinned,
+    /// Fastest observed mean latency (after a warmup per backend).
+    FastestObserved,
+}
+
+/// Per-backend running statistics.
+#[derive(Debug, Clone, Default)]
+pub struct BackendStats {
+    pub requests: u64,
+    pub total_us: f64,
+    pub errors: u64,
+}
+
+impl BackendStats {
+    pub fn mean_us(&self) -> f64 {
+        if self.requests == 0 {
+            f64::INFINITY
+        } else {
+            self.total_us / self.requests as f64
+        }
+    }
+}
+
+/// The router.
+pub struct InferenceRouter {
+    backends: BTreeMap<String, Box<dyn Backend>>,
+    stats: BTreeMap<String, BackendStats>,
+    pub policy: RoutePolicy,
+    pub pinned: Option<String>,
+}
+
+impl InferenceRouter {
+    pub fn new(policy: RoutePolicy) -> InferenceRouter {
+        InferenceRouter {
+            backends: BTreeMap::new(),
+            stats: BTreeMap::new(),
+            policy,
+            pinned: None,
+        }
+    }
+
+    pub fn register(&mut self, name: impl Into<String>, b: Box<dyn Backend>) {
+        let name = name.into();
+        self.stats.insert(name.clone(), BackendStats::default());
+        self.backends.insert(name, b);
+    }
+
+    pub fn backend_names(&self) -> Vec<String> {
+        self.backends.keys().cloned().collect()
+    }
+
+    pub fn stats(&self, name: &str) -> Option<&BackendStats> {
+        self.stats.get(name)
+    }
+
+    /// Pick a backend per policy.
+    fn pick(&self) -> Result<String> {
+        anyhow::ensure!(!self.backends.is_empty(), "no backends registered");
+        match self.policy {
+            RoutePolicy::Pinned => self
+                .pinned
+                .clone()
+                .filter(|p| self.backends.contains_key(p))
+                .ok_or_else(|| anyhow::anyhow!("pinned backend missing")),
+            RoutePolicy::FastestObserved => {
+                // Prefer any backend that has not been tried yet
+                // (exploration), then the fastest mean.
+                if let Some((name, _)) = self
+                    .stats
+                    .iter()
+                    .find(|(_, s)| s.requests == 0)
+                {
+                    return Ok(name.clone());
+                }
+                Ok(self
+                    .stats
+                    .iter()
+                    .min_by(|a, b| {
+                        a.1.mean_us().partial_cmp(&b.1.mean_us()).unwrap()
+                    })
+                    .map(|(n, _)| n.clone())
+                    .unwrap())
+            }
+        }
+    }
+
+    /// Route one inference request.
+    pub fn infer(&mut self, x: &[f32]) -> Result<(String, Vec<f32>)> {
+        let name = self.pick()?;
+        let t = Instant::now();
+        let backend = self.backends.get_mut(&name).unwrap();
+        match backend.infer(x) {
+            Ok(out) => {
+                let s = self.stats.get_mut(&name).unwrap();
+                s.requests += 1;
+                s.total_us += t.elapsed().as_secs_f64() * 1e6;
+                Ok((name, out))
+            }
+            Err(e) => {
+                let s = self.stats.get_mut(&name).unwrap();
+                s.errors += 1;
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::defense::EngineBackend;
+    use crate::engine::{Act, Layer, Model};
+    use crate::util::prop::{prop_assert, prop_check};
+
+    fn tiny_model(scale: f32) -> Model {
+        Model::new(vec![Layer::dense(
+            vec![scale; 4],
+            vec![0.0, 0.0],
+            2,
+            Act::None,
+        )])
+    }
+
+    struct SlowBackend(EngineBackend, std::time::Duration);
+    impl Backend for SlowBackend {
+        fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+            std::thread::sleep(self.1);
+            self.0.infer(x)
+        }
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+    }
+
+    #[test]
+    fn pinned_policy_routes_to_pinned() {
+        let mut r = InferenceRouter::new(RoutePolicy::Pinned);
+        r.register("a", Box::new(EngineBackend(tiny_model(1.0))));
+        r.register("b", Box::new(EngineBackend(tiny_model(2.0))));
+        r.pinned = Some("b".to_string());
+        let (name, out) = r.infer(&[1.0, 1.0]).unwrap();
+        assert_eq!(name, "b");
+        assert_eq!(out, vec![4.0, 4.0]);
+    }
+
+    #[test]
+    fn fastest_observed_explores_then_prefers_fast() {
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register(
+            "slow",
+            Box::new(SlowBackend(
+                EngineBackend(tiny_model(1.0)),
+                std::time::Duration::from_millis(8),
+            )),
+        );
+        r.register("fast", Box::new(EngineBackend(tiny_model(1.0))));
+        // Exploration touches both; afterwards all routes go fast.
+        for _ in 0..6 {
+            r.infer(&[1.0, 1.0]).unwrap();
+        }
+        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        assert_eq!(name, "fast");
+        assert!(r.stats("slow").unwrap().requests >= 1);
+    }
+
+    #[test]
+    fn all_backends_agree_is_verifiable() {
+        // Router invariant: identical models on different backends give
+        // identical outputs for the same request.
+        prop_check(30, |g| {
+            let x = [g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0)];
+            let mut a = EngineBackend(tiny_model(1.5));
+            let mut b = EngineBackend(tiny_model(1.5));
+            prop_assert(
+                a.infer(&x).unwrap() == b.infer(&x).unwrap(),
+                "backend divergence",
+            )
+        });
+    }
+
+    #[test]
+    fn empty_router_errors() {
+        let mut r = InferenceRouter::new(RoutePolicy::Pinned);
+        assert!(r.infer(&[0.0]).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! The §7 on-PLC anomaly-detection application: sliding window over
+//! (TB0, Wd) ADC readings → 400-feature vector → classifier →
+//! debounced detection, behind a pluggable inference backend.
+
+use std::collections::VecDeque;
+
+use crate::engine::Model;
+use crate::st::{Interp, Meter, Value};
+
+/// Window length per feature (paper: 10 Hz x 20 s).
+pub const WINDOW: usize = 200;
+/// Total classifier inputs (2 features x WINDOW).
+pub const FEATURES: usize = 2 * WINDOW;
+
+/// An inference backend the detector can run on.
+pub trait Backend {
+    /// Classifier logits for one feature vector.
+    fn infer(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
+    fn name(&self) -> &'static str;
+    /// Metered ST ops for the last inference (ST backend only).
+    fn last_meter(&self) -> Option<Meter> {
+        None
+    }
+}
+
+/// Native-engine backend.
+pub struct EngineBackend(pub Model);
+
+impl Backend for EngineBackend {
+    fn infer(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        Ok(self.0.infer(x))
+    }
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+}
+
+/// ST-interpreter backend: the ported ICSML program running on the
+/// simulated PLC. Feeds the program's `inputs` array, runs one scan of
+/// the inference POU, reads `outputs`.
+pub struct StBackend {
+    pub interp: Interp,
+    pub program: String,
+    last: Meter,
+}
+
+impl StBackend {
+    pub fn new(interp: Interp, program: impl Into<String>) -> StBackend {
+        StBackend { interp, program: program.into(), last: Meter::new() }
+    }
+}
+
+impl Backend for StBackend {
+    fn infer(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let inst = self
+            .interp
+            .program_instance(&self.program)
+            .ok_or_else(|| anyhow::anyhow!("no program {}", self.program))?;
+        match self.interp.instance_field(inst, "inputs") {
+            Some(Value::ArrF32(a)) => {
+                anyhow::ensure!(a.borrow().len() == x.len(), "input size");
+                a.borrow_mut().copy_from_slice(x);
+            }
+            other => anyhow::bail!("bad inputs field: {other:?}"),
+        }
+        let before = self.interp.meter.clone();
+        self.interp
+            .run_program(&self.program)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.last = self.interp.meter.since(&before);
+        match self.interp.instance_field(inst, "outputs") {
+            Some(Value::ArrF32(a)) => Ok(a.borrow().clone()),
+            other => anyhow::bail!("bad outputs field: {other:?}"),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "st"
+    }
+
+    fn last_meter(&self) -> Option<Meter> {
+        Some(self.last.clone())
+    }
+}
+
+/// Sliding-window feature extractor. Layout matches training
+/// (`train.window_matrix`): `[tb0 oldest..newest | wd oldest..newest]`.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    tb0: VecDeque<f32>,
+    wd: VecDeque<f32>,
+}
+
+impl Default for SlidingWindow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SlidingWindow {
+    pub fn new() -> SlidingWindow {
+        SlidingWindow {
+            tb0: VecDeque::with_capacity(WINDOW),
+            wd: VecDeque::with_capacity(WINDOW),
+        }
+    }
+
+    /// Push one scan's readings. Returns true once the window is full.
+    pub fn push(&mut self, tb0: f64, wd: f64) -> bool {
+        if self.tb0.len() == WINDOW {
+            self.tb0.pop_front();
+            self.wd.pop_front();
+        }
+        self.tb0.push_back(tb0 as f32);
+        self.wd.push_back(wd as f32);
+        self.tb0.len() == WINDOW
+    }
+
+    pub fn ready(&self) -> bool {
+        self.tb0.len() == WINDOW
+    }
+
+    /// Materialize the 400-feature vector into `out`.
+    pub fn fill_features(&self, out: &mut [f32]) {
+        assert!(self.ready());
+        assert_eq!(out.len(), FEATURES);
+        for (i, v) in self.tb0.iter().enumerate() {
+            out[i] = *v;
+        }
+        for (i, v) in self.wd.iter().enumerate() {
+            out[WINDOW + i] = *v;
+        }
+    }
+}
+
+/// Debounced detector: fires after `threshold` consecutive positive
+/// classifications (a window-based model needs several malicious
+/// samples before flagging — the paper's ~5 s detection latency).
+pub struct Detector {
+    pub backend: Box<dyn Backend>,
+    pub window: SlidingWindow,
+    pub threshold: u32,
+    consecutive: u32,
+    features: Vec<f32>,
+}
+
+impl Detector {
+    pub fn new(backend: Box<dyn Backend>, threshold: u32) -> Detector {
+        Detector {
+            backend,
+            window: SlidingWindow::new(),
+            threshold,
+            consecutive: 0,
+            features: vec![0.0; FEATURES],
+        }
+    }
+
+    /// Feed one scan's readings; returns `Some(positive)` once the
+    /// window is warm (positive = attack detected this cycle after
+    /// debounce).
+    pub fn observe(&mut self, tb0: f64, wd: f64) -> anyhow::Result<Option<bool>> {
+        if !self.window.push(tb0, wd) {
+            return Ok(None);
+        }
+        self.window.fill_features(&mut self.features);
+        let logits = self.backend.infer(&self.features)?;
+        let attack = logits[1] > logits[0];
+        if attack {
+            self.consecutive += 1;
+        } else {
+            self.consecutive = 0;
+        }
+        Ok(Some(self.consecutive >= self.threshold))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Act, Layer};
+
+    #[test]
+    fn window_layout_matches_training() {
+        let mut w = SlidingWindow::new();
+        for i in 0..WINDOW + 5 {
+            w.push(i as f64, 10_000.0 + i as f64);
+        }
+        let mut f = vec![0.0; FEATURES];
+        w.fill_features(&mut f);
+        // Oldest tb0 kept = 5, newest = 204.
+        assert_eq!(f[0], 5.0);
+        assert_eq!(f[WINDOW - 1], (WINDOW + 4) as f32);
+        assert_eq!(f[WINDOW], 10_005.0);
+        assert_eq!(f[FEATURES - 1], (10_000 + WINDOW + 4) as f32);
+    }
+
+    #[test]
+    fn window_not_ready_before_full() {
+        let mut w = SlidingWindow::new();
+        for _ in 0..WINDOW - 1 {
+            assert!(!w.push(0.0, 0.0));
+        }
+        assert!(w.push(0.0, 0.0));
+    }
+
+    /// A hand-built "detector" that fires when mean(wd window) < 10:
+    /// w = [0;200 tb0 | -1/200;200 wd], b = 10 on the attack logit.
+    fn threshold_model() -> Model {
+        let mut w = vec![0.0f32; FEATURES * 2];
+        for i in 0..WINDOW {
+            // logit1 (attack) gets -mean(wd) + 10 - i.e. fires when
+            // mean < 10.  Weight layout: [in][out] col? engine uses
+            // dense rows [neurons][inputs]: row0 = logit0 (zeros),
+            // row1 = attack logit.
+            w[FEATURES + WINDOW + i] = -1.0 / WINDOW as f32;
+        }
+        let b = vec![0.0f32, 10.0];
+        Model::new(vec![Layer::dense(w, b, FEATURES, Act::None)])
+    }
+
+    #[test]
+    fn detector_debounce_and_fire() {
+        let mut det =
+            Detector::new(Box::new(EngineBackend(threshold_model())), 3);
+        // Warm the window with wd = 20 (mean 20 > 10: benign).
+        let mut fired = false;
+        for _ in 0..WINDOW + 10 {
+            if let Some(f) = det.observe(90.0, 20.0).unwrap() {
+                fired |= f;
+            }
+        }
+        assert!(!fired, "no detection under benign data");
+        // Attack: wd collapses to 0 — after enough samples the window
+        // mean crosses and debounce counts 3 consecutive positives.
+        let mut detect_at = None;
+        for i in 0..WINDOW + 10 {
+            if det.observe(90.0, 0.0).unwrap() == Some(true) {
+                detect_at = Some(i);
+                break;
+            }
+        }
+        let at = detect_at.expect("must detect");
+        assert!(at >= 2, "debounce needs >= threshold cycles, got {at}");
+    }
+}

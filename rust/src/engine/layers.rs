@@ -1,0 +1,496 @@
+//! Layer definitions + kernels for the native engine.
+//!
+//! Weight layouts match the ICSML ST framework exactly:
+//! dense `[neurons][inputs]` row-major; conv `[outC][inC][kh][kw]`;
+//! depthwise `[C][kh][kw]`; CHW activations.
+
+use crate::quant::Scheme;
+
+/// Activation functions (paper §4.1 set). Codes match the ST
+/// framework's ACT_* constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    LeakyRelu,
+    Elu,
+    Sigmoid,
+    Tanh,
+    Swish,
+    BinaryStep,
+    Softmax,
+}
+
+impl Act {
+    /// ST framework activation code.
+    pub fn code(self) -> i64 {
+        match self {
+            Act::None => 0,
+            Act::Relu => 1,
+            Act::LeakyRelu => 2,
+            Act::Elu => 3,
+            Act::Sigmoid => 4,
+            Act::Tanh => 5,
+            Act::Swish => 6,
+            Act::BinaryStep => 7,
+            Act::Softmax => 8,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Act> {
+        Some(match name {
+            "linear" | "none" => Act::None,
+            "relu" => Act::Relu,
+            "leaky_relu" => Act::LeakyRelu,
+            "elu" => Act::Elu,
+            "sigmoid" => Act::Sigmoid,
+            "tanh" => Act::Tanh,
+            "swish" => Act::Swish,
+            "binary_step" => Act::BinaryStep,
+            "softmax" => Act::Softmax,
+            _ => return None,
+        })
+    }
+
+    /// Scalar application (softmax handled at the vector level).
+    #[inline]
+    pub fn apply(self, v: f32, alpha: f32) -> f32 {
+        match self {
+            Act::None | Act::Softmax => v,
+            Act::Relu => v.max(0.0),
+            Act::LeakyRelu => {
+                if v >= 0.0 {
+                    v
+                } else {
+                    alpha * v
+                }
+            }
+            Act::Elu => {
+                if v >= 0.0 {
+                    v
+                } else {
+                    alpha * (v.exp() - 1.0)
+                }
+            }
+            Act::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+            Act::Tanh => v.tanh(),
+            Act::Swish => v / (1.0 + (-v).exp()),
+            Act::BinaryStep => {
+                if v >= 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Vector application (handles softmax).
+    pub fn apply_vec(self, data: &mut [f32], alpha: f32) {
+        if self == Act::Softmax {
+            let m = data.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in data.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            for v in data.iter_mut() {
+                *v /= sum;
+            }
+            return;
+        }
+        for v in data.iter_mut() {
+            *v = self.apply(*v, alpha);
+        }
+    }
+}
+
+/// One model layer. `in_dim`/`out_dim` are flat element counts.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Copy layer (the paper's benchmark input layer).
+    Input { dim: usize },
+    Dense {
+        /// `[neurons][inputs]` row-major (ICSML layout).
+        w: Vec<f32>,
+        b: Vec<f32>,
+        inputs: usize,
+        neurons: usize,
+        act: Act,
+        alpha: f32,
+        /// §6.2 zero-weight skipping.
+        pruned: bool,
+    },
+    Activation { dim: usize, act: Act, alpha: f32 },
+    QuantDense {
+        /// Quantized weights widened to i32 storage (scheme gives the
+        /// on-PLC width for memory accounting + ST codegen).
+        wq: Vec<i32>,
+        s_w: Vec<f32>,
+        b: Vec<f32>,
+        s_x: f32,
+        scheme: Scheme,
+        inputs: usize,
+        neurons: usize,
+        act: Act,
+        alpha: f32,
+        skip_zero_w: bool,
+        skip_zero_x: bool,
+    },
+    Conv2D {
+        w: Vec<f32>,
+        b: Vec<f32>,
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        out_c: usize,
+        k_h: usize,
+        k_w: usize,
+        stride: usize,
+        act: Act,
+        alpha: f32,
+    },
+    ConvDW {
+        w: Vec<f32>,
+        b: Vec<f32>,
+        chans: usize,
+        in_h: usize,
+        in_w: usize,
+        k_h: usize,
+        k_w: usize,
+        stride: usize,
+        act: Act,
+        alpha: f32,
+    },
+    /// Per-channel affine (inference-folded BatchNorm), CHW layout.
+    Scale {
+        scales: Vec<f32>,
+        shifts: Vec<f32>,
+        channels: usize,
+        dim: usize,
+        act: Act,
+        alpha: f32,
+    },
+}
+
+impl Layer {
+    pub fn dense(w: Vec<f32>, b: Vec<f32>, inputs: usize, act: Act) -> Layer {
+        let neurons = b.len();
+        assert_eq!(w.len(), inputs * neurons, "dense weight shape");
+        Layer::Dense { w, b, inputs, neurons, act, alpha: 0.01, pruned: false }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Layer::Input { dim } => *dim,
+            Layer::Dense { inputs, .. } => *inputs,
+            Layer::Activation { dim, .. } => *dim,
+            Layer::QuantDense { inputs, .. } => *inputs,
+            Layer::Conv2D { in_c, in_h, in_w, .. } => in_c * in_h * in_w,
+            Layer::ConvDW { chans, in_h, in_w, .. } => chans * in_h * in_w,
+            Layer::Scale { dim, .. } => *dim,
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Layer::Input { dim } => *dim,
+            Layer::Dense { neurons, .. } => *neurons,
+            Layer::Activation { dim, .. } => *dim,
+            Layer::QuantDense { neurons, .. } => *neurons,
+            Layer::Conv2D { out_c, .. } => {
+                let (oh, ow) = self.conv_out_hw();
+                out_c * oh * ow
+            }
+            Layer::ConvDW { chans, .. } => {
+                let (oh, ow) = self.conv_out_hw();
+                chans * oh * ow
+            }
+            Layer::Scale { dim, .. } => *dim,
+        }
+    }
+
+    /// Output spatial size for conv layers.
+    pub fn conv_out_hw(&self) -> (usize, usize) {
+        match self {
+            Layer::Conv2D { in_h, in_w, k_h, k_w, stride, .. }
+            | Layer::ConvDW { in_h, in_w, k_h, k_w, stride, .. } => {
+                ((in_h - k_h) / stride + 1, (in_w - k_w) / stride + 1)
+            }
+            _ => (0, 0),
+        }
+    }
+
+    /// Number of independent output "rows" for chunked (multipart)
+    /// evaluation: dense/quant → neurons; conv → out-channel rows;
+    /// element-wise layers → 1 chunk.
+    pub fn chunk_rows(&self) -> usize {
+        match self {
+            Layer::Dense { neurons, .. } | Layer::QuantDense { neurons, .. } => {
+                *neurons
+            }
+            Layer::Conv2D { out_c, .. } => *out_c,
+            Layer::ConvDW { chans, .. } => *chans,
+            _ => 1,
+        }
+    }
+
+    /// Evaluate output rows `[row0, row1)` from `x` into `out`.
+    /// `eval_rows(0, chunk_rows(), ..)` is a full evaluation. Softmax /
+    /// input-quantization pre-passes run on the first chunk.
+    pub fn eval_rows(&self, row0: usize, row1: usize, x: &[f32], out: &mut [f32],
+                     scratch: &mut Vec<i32>) {
+        debug_assert_eq!(x.len(), self.in_dim());
+        debug_assert_eq!(out.len(), self.out_dim());
+        match self {
+            Layer::Input { dim } => {
+                out[..*dim].copy_from_slice(&x[..*dim]);
+            }
+            Layer::Activation { act, alpha, .. } => {
+                out.copy_from_slice(x);
+                act.apply_vec(out, *alpha);
+            }
+            Layer::Scale { scales, shifts, channels, dim, act, alpha } => {
+                let per = dim / channels;
+                for i in 0..*dim {
+                    let c = i / per;
+                    out[i] = act.apply(x[i] * scales[c] + shifts[c], *alpha);
+                }
+            }
+            Layer::Dense { w, b, inputs, act, alpha, pruned, .. } => {
+                for n in row0..row1 {
+                    let row = &w[n * inputs..(n + 1) * inputs];
+                    let mut s = 0.0f32;
+                    if *pruned {
+                        for (wi, xi) in row.iter().zip(x) {
+                            if *wi != 0.0 {
+                                s += wi * xi;
+                            }
+                        }
+                    } else {
+                        for (wi, xi) in row.iter().zip(x) {
+                            s += wi * xi;
+                        }
+                    }
+                    out[n] = act.apply(s + b[n], *alpha);
+                }
+                if *act == Act::Softmax && row1 == self.chunk_rows() {
+                    Act::Softmax.apply_vec(out, *alpha);
+                }
+            }
+            Layer::QuantDense {
+                wq, s_w, b, s_x, inputs, act, alpha,
+                skip_zero_w, skip_zero_x, ..
+            } => {
+                if row0 == 0 {
+                    // quantize the input vector once per inference
+                    scratch.clear();
+                    scratch.extend(x.iter().map(|v| {
+                        let q = v / s_x;
+                        // IEC round-half-away-from-zero
+                        (if q >= 0.0 {
+                            (q + 0.5).floor()
+                        } else {
+                            (q - 0.5).ceil()
+                        }) as i32
+                    }));
+                }
+                let xq = &scratch[..];
+                for n in row0..row1 {
+                    let row = &wq[n * inputs..(n + 1) * inputs];
+                    let mut acc: i32 = 0;
+                    match (skip_zero_w, skip_zero_x) {
+                        (true, true) => {
+                            for (wi, xi) in row.iter().zip(xq) {
+                                if *wi != 0 && *xi != 0 {
+                                    acc = acc.wrapping_add(wi.wrapping_mul(*xi));
+                                }
+                            }
+                        }
+                        (true, false) => {
+                            for (wi, xi) in row.iter().zip(xq) {
+                                if *wi != 0 {
+                                    acc = acc.wrapping_add(wi.wrapping_mul(*xi));
+                                }
+                            }
+                        }
+                        _ => {
+                            for (wi, xi) in row.iter().zip(xq) {
+                                acc = acc.wrapping_add(wi.wrapping_mul(*xi));
+                            }
+                        }
+                    }
+                    let v = acc as f32 * (s_x * s_w[n]) + b[n];
+                    out[n] = act.apply(v, *alpha);
+                }
+            }
+            Layer::Conv2D {
+                w, b, in_c, in_h, in_w, out_c: _, k_h, k_w, stride, act, alpha,
+            } => {
+                let (oh, ow) = self.conv_out_hw();
+                for oc in row0..row1 {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut s = b[oc];
+                            for ic in 0..*in_c {
+                                let wbase = ((oc * in_c) + ic) * k_h * k_w;
+                                for ky in 0..*k_h {
+                                    let xrow = (ic * in_h + oy * stride + ky)
+                                        * in_w
+                                        + ox * stride;
+                                    for kx in 0..*k_w {
+                                        s += w[wbase + ky * k_w + kx]
+                                            * x[xrow + kx];
+                                    }
+                                }
+                            }
+                            out[(oc * oh + oy) * ow + ox] =
+                                act.apply(s, *alpha);
+                        }
+                    }
+                }
+            }
+            Layer::ConvDW {
+                w, b, chans: _, in_h, in_w, k_h, k_w, stride, act, alpha,
+            } => {
+                let (oh, ow) = self.conv_out_hw();
+                for c in row0..row1 {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut s = b[c];
+                            for ky in 0..*k_h {
+                                for kx in 0..*k_w {
+                                    s += w[(c * k_h + ky) * k_w + kx]
+                                        * x[(c * in_h + oy * stride + ky)
+                                            * in_w
+                                            + ox * stride
+                                            + kx];
+                                }
+                            }
+                            out[(c * oh + oy) * ow + ox] = act.apply(s, *alpha);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Abstract multiply-accumulate count for one full evaluation (used
+    /// by the PLC timing model for layers run on the native engine).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Layer::Input { dim } | Layer::Activation { dim, .. } => *dim as u64,
+            Layer::Scale { dim, .. } => 2 * *dim as u64,
+            Layer::Dense { inputs, neurons, .. }
+            | Layer::QuantDense { inputs, neurons, .. } => {
+                (*inputs * *neurons) as u64
+            }
+            Layer::Conv2D { in_c, out_c, k_h, k_w, .. } => {
+                let (oh, ow) = self.conv_out_hw();
+                (in_c * out_c * k_h * k_w * oh * ow) as u64
+            }
+            Layer::ConvDW { chans, k_h, k_w, .. } => {
+                let (oh, ow) = self.conv_out_hw();
+                (chans * k_h * k_w * oh * ow) as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_codes_match_st_framework() {
+        assert_eq!(Act::None.code(), 0);
+        assert_eq!(Act::Relu.code(), 1);
+        assert_eq!(Act::Softmax.code(), 8);
+        assert_eq!(Act::from_name("relu"), Some(Act::Relu));
+        assert_eq!(Act::from_name("linear"), Some(Act::None));
+        assert_eq!(Act::from_name("nope"), None);
+    }
+
+    #[test]
+    fn dense_known_values() {
+        let l = Layer::dense(
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![0.5, -10.0],
+            2,
+            Act::Relu,
+        );
+        let mut out = vec![0.0; 2];
+        let mut scratch = Vec::new();
+        l.eval_rows(0, 2, &[1.0, 2.0], &mut out, &mut scratch);
+        assert_eq!(out, vec![5.5, 1.0]);
+    }
+
+    #[test]
+    fn dense_chunked_equals_full() {
+        let w: Vec<f32> = (0..12).map(|i| (i as f32) * 0.1 - 0.5).collect();
+        let b = vec![0.1, -0.2, 0.3];
+        let l = Layer::dense(w, b, 4, Act::Sigmoid);
+        let x = [0.5, -1.0, 2.0, 0.25];
+        let mut full = vec![0.0; 3];
+        let mut chunked = vec![0.0; 3];
+        let mut s = Vec::new();
+        l.eval_rows(0, 3, &x, &mut full, &mut s);
+        l.eval_rows(0, 1, &x, &mut chunked, &mut s);
+        l.eval_rows(1, 2, &x, &mut chunked, &mut s);
+        l.eval_rows(2, 3, &x, &mut chunked, &mut s);
+        assert_eq!(full, chunked);
+    }
+
+    #[test]
+    fn pruned_dense_matches_unpruned_on_sparse_weights() {
+        let w = vec![0.0, 2.0, 0.0, 4.0, 0.0, 0.0];
+        let b = vec![1.0, 2.0];
+        let mut dense = Layer::dense(w.clone(), b.clone(), 3, Act::None);
+        let x = [1.0, 2.0, 3.0];
+        let mut out_a = vec![0.0; 2];
+        let mut s = Vec::new();
+        dense.eval_rows(0, 2, &x, &mut out_a, &mut s);
+        if let Layer::Dense { pruned, .. } = &mut dense {
+            *pruned = true;
+        }
+        let mut out_b = vec![0.0; 2];
+        dense.eval_rows(0, 2, &x, &mut out_b, &mut s);
+        assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn softmax_vec() {
+        let mut v = vec![1.0f32, 2.0, 3.0];
+        Act::Softmax.apply_vec(&mut v, 0.0);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((v[2] - 0.66524).abs() < 1e-4);
+    }
+
+    #[test]
+    fn conv2d_matches_st_test_vector() {
+        let l = Layer::Conv2D {
+            w: vec![1.0; 4],
+            b: vec![1.0],
+            in_c: 1,
+            in_h: 3,
+            in_w: 3,
+            out_c: 1,
+            k_h: 2,
+            k_w: 2,
+            stride: 1,
+            act: Act::None,
+            alpha: 0.0,
+        };
+        let x: Vec<f32> = (1..=9).map(|i| i as f32).collect();
+        let mut out = vec![0.0; 4];
+        let mut s = Vec::new();
+        l.eval_rows(0, 1, &x, &mut out, &mut s);
+        assert_eq!(out, vec![13.0, 17.0, 25.0, 29.0]);
+    }
+
+    #[test]
+    fn macs_counts() {
+        let l = Layer::dense(vec![0.0; 512 * 512], vec![0.0; 512], 512, Act::None);
+        assert_eq!(l.macs(), 262_144); // the paper's §6.1 op count
+    }
+}

@@ -1,0 +1,17 @@
+//! Native-Rust ICSML engine.
+//!
+//! Semantically identical to the ST framework in [`crate::icsml_st`]
+//! (same layer set, same math, same weight layout), compiled with full
+//! optimization. It serves three roles (DESIGN.md §3):
+//!
+//! 1. the paper's §5.4 comparator ("we faithfully reimplemented ICSML
+//!    in C++ ... -O3 ran ~4x faster");
+//! 2. the resumable executor behind §6.3 multipart inference (layers
+//!    can be evaluated in output-row chunks across scan cycles);
+//! 3. a cross-check between the ST interpreter and the XLA runtime.
+
+pub mod layers;
+pub mod model;
+
+pub use layers::{Act, Layer};
+pub use model::Model;

@@ -1,0 +1,236 @@
+//! Sequential model executor with preallocated buffers (no allocation
+//! on the inference hot path) and chunk-resumable evaluation for §6.3
+//! multipart inference.
+
+use super::layers::Layer;
+
+/// A sequential ICSML model on the native engine.
+#[derive(Debug, Clone)]
+pub struct Model {
+    layers: Vec<Layer>,
+    /// Ping-pong activation buffers, preallocated to the max layer dim.
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+    scratch: Vec<i32>,
+}
+
+/// A resumable position inside a model evaluation: `(layer, next_row)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Cursor {
+    pub layer: usize,
+    pub row: usize,
+}
+
+impl Model {
+    pub fn new(layers: Vec<Layer>) -> Model {
+        assert!(!layers.is_empty(), "model needs at least one layer");
+        for (i, pair) in layers.windows(2).enumerate() {
+            assert_eq!(
+                pair[0].out_dim(),
+                pair[1].in_dim(),
+                "layer {i} out_dim != layer {} in_dim",
+                i + 1
+            );
+        }
+        let max_dim = layers
+            .iter()
+            .flat_map(|l| [l.in_dim(), l.out_dim()])
+            .max()
+            .unwrap();
+        Model {
+            layers,
+            buf_a: vec![0.0; max_dim],
+            buf_b: vec![0.0; max_dim],
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim()
+    }
+
+    /// Total multiply-accumulate count (timing-model input).
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Single-shot inference.
+    pub fn infer(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim());
+        self.buf_a[..x.len()].copy_from_slice(x);
+        let mut cur_len = x.len();
+        let n_layers = self.layers.len();
+        for i in 0..n_layers {
+            let l = &self.layers[i];
+            let out_len = l.out_dim();
+            let (src, dst) = if i % 2 == 0 {
+                (&self.buf_a, &mut self.buf_b)
+            } else {
+                (&self.buf_b, &mut self.buf_a)
+            };
+            l.eval_rows(
+                0,
+                l.chunk_rows(),
+                &src[..cur_len],
+                &mut dst[..out_len],
+                &mut self.scratch,
+            );
+            cur_len = out_len;
+        }
+        let out = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
+        out[..cur_len].to_vec()
+    }
+
+    /// Resumable inference: advance from `cursor` by at most
+    /// `row_budget` output rows. Returns the new cursor and, when the
+    /// model is finished, the output. The input `x` must be identical
+    /// across the parts of one inference.
+    ///
+    /// This is the mechanism behind the paper's §6.3 multipart
+    /// inference — the coordinator sizes `row_budget` to the scan
+    /// cycle's spare time.
+    pub fn infer_partial(
+        &mut self,
+        x: &[f32],
+        mut cursor: Cursor,
+        mut row_budget: usize,
+    ) -> (Cursor, Option<Vec<f32>>) {
+        assert_eq!(x.len(), self.in_dim());
+        if cursor.layer == 0 && cursor.row == 0 {
+            self.buf_a[..x.len()].copy_from_slice(x);
+        }
+        let n_layers = self.layers.len();
+        while cursor.layer < n_layers && row_budget > 0 {
+            let i = cursor.layer;
+            let l = &self.layers[i];
+            let rows = l.chunk_rows();
+            let take = row_budget.min(rows - cursor.row);
+            let cur_len = l.in_dim();
+            let out_len = l.out_dim();
+            let (src, dst) = if i % 2 == 0 {
+                (&self.buf_a, &mut self.buf_b)
+            } else {
+                (&self.buf_b, &mut self.buf_a)
+            };
+            l.eval_rows(
+                cursor.row,
+                cursor.row + take,
+                &src[..cur_len],
+                &mut dst[..out_len],
+                &mut self.scratch,
+            );
+            cursor.row += take;
+            row_budget -= take;
+            if cursor.row == rows {
+                cursor.layer += 1;
+                cursor.row = 0;
+            }
+        }
+        if cursor.layer == n_layers {
+            let cur_len = self.out_dim();
+            let out = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
+            (cursor, Some(out[..cur_len].to_vec()))
+        } else {
+            (cursor, None)
+        }
+    }
+
+    /// Total chunk rows across all layers (for budgeting).
+    pub fn total_rows(&self) -> usize {
+        self.layers.iter().map(Layer::chunk_rows).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layers::Act;
+    use super::*;
+    use crate::util::prop::{prop_assert, prop_check};
+
+    fn toy_model() -> Model {
+        Model::new(vec![
+            Layer::Input { dim: 4 },
+            Layer::dense(
+                (0..12).map(|i| (i as f32) * 0.1 - 0.6).collect(),
+                vec![0.1, -0.1, 0.2],
+                4,
+                Act::Relu,
+            ),
+            Layer::dense(
+                (0..6).map(|i| 0.3 - (i as f32) * 0.07).collect(),
+                vec![0.05, -0.3],
+                3,
+                Act::None,
+            ),
+        ])
+    }
+
+    #[test]
+    fn infer_shapes() {
+        let mut m = toy_model();
+        let y = m.infer(&[0.5, -0.25, 1.0, 2.0]);
+        assert_eq!(y.len(), 2);
+        assert_eq!(m.in_dim(), 4);
+        assert_eq!(m.out_dim(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out_dim != layer")]
+    fn mismatched_layers_rejected() {
+        Model::new(vec![
+            Layer::Input { dim: 4 },
+            Layer::dense(vec![0.0; 10], vec![0.0; 2], 5, Act::None),
+        ]);
+    }
+
+    #[test]
+    fn partial_inference_matches_single_shot() {
+        // Property: any chunking schedule produces the single-shot
+        // output exactly (the §6.3 correctness invariant).
+        prop_check(60, |g| {
+            let mut m = toy_model();
+            let x: Vec<f32> = (0..4).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let want = m.infer(&x);
+            let mut cursor = Cursor::default();
+            let mut result = None;
+            let mut steps = 0;
+            while result.is_none() {
+                let budget = g.usize_in(1..=3);
+                let (c, r) = m.infer_partial(&x, cursor, budget);
+                cursor = c;
+                result = r;
+                steps += 1;
+                prop_assert(steps < 100, "did not converge")?;
+            }
+            prop_assert(
+                result.as_deref() == Some(&want[..]),
+                format!("partial {result:?} != full {want:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn total_rows_budget_completes_in_one_call() {
+        let mut m = toy_model();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let want = m.infer(&x);
+        let budget = m.total_rows();
+        let (c, out) = m.infer_partial(&x, Cursor::default(), budget);
+        assert_eq!(c.layer, m.layers().len());
+        assert_eq!(out.unwrap(), want);
+    }
+
+    #[test]
+    fn macs_sum() {
+        let m = toy_model();
+        assert_eq!(m.macs(), 4 + 12 + 6);
+    }
+}

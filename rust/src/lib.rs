@@ -1,0 +1,64 @@
+//! # ICSML reproduction — native ML inference for IEC 61131-3 PLCs
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *ICSML: Industrial
+//! Control Systems ML Framework for native inference using IEC 61131-3
+//! code* (Doumanidis, Rajput, Maniatakos — CPSS 2023).
+//!
+//! The crate hosts every substrate the paper depends on (see DESIGN.md):
+//!
+//! * [`st`] — an IEC 61131-3 Structured Text lexer/parser/interpreter
+//!   with the standard's restrictions enforced and instruction costs
+//!   metered (the Codesys-runtime substitute the benchmarks run on).
+//! * [`icsml_st`] — the ICSML framework itself, written in ST, embedded
+//!   as assets and executed by [`st`].
+//! * [`engine`] — a native-Rust ICSML engine with identical semantics
+//!   (the paper's §5.4 "reimplemented in C++ -O3" comparator and the
+//!   executor behind multipart inference).
+//! * [`plc`] — scan-cycle PLC simulator: ADC models, Table-1 hardware
+//!   profiles, timing + memory accounting.
+//! * [`msf`] — MSF desalination plant + cascaded PID + attack injector
+//!   (the Simulink HITL substitute).
+//! * [`hitl`] / [`defense`] — the §7 case study: closed loop + on-PLC
+//!   anomaly detector.
+//! * [`quant`] — §6.1 SINT/INT/DINT integer quantization.
+//! * [`porting`] — §4.3 (+§8.2) model porting: manifest → ST codegen.
+//! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas models
+//!   (the TFLite-comparator path).
+//! * [`coordinator`] — inference router + §6.3 multipart scheduler.
+
+pub mod coordinator;
+pub mod defense;
+pub mod engine;
+pub mod hitl;
+pub mod icsml_st;
+pub mod msf;
+pub mod plc;
+pub mod porting;
+pub mod quant;
+pub mod runtime;
+pub mod st;
+pub mod util;
+
+/// Returns the repository root (assumes `cargo run`/`cargo test` from the
+/// workspace, or the `ICSML_ROOT` env var in deployed settings).
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(root) = std::env::var("ICSML_ROOT") {
+        return root.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Default artifacts directory (`artifacts/`, falling back to the
+/// fast-mode build `artifacts_fast/` when only that exists).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    let root = repo_root();
+    let full = root.join("artifacts");
+    if full.join("manifest.json").exists() {
+        return full;
+    }
+    let fast = root.join("artifacts_fast");
+    if fast.join("manifest.json").exists() {
+        return fast;
+    }
+    full
+}

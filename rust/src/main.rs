@@ -1,0 +1,268 @@
+//! `icsml` — CLI for the ICSML reproduction.
+//!
+//! Subcommands:
+//! * `table1`  — print the paper's Table 1 (PLC hardware specs).
+//! * `fig3`    — PLC memory vs Keras model sizes (Fig. 3 data).
+//! * `table2`  — quantization memory requirements (Table 2).
+//! * `port`    — generate ICSML ST code for a manifest model (§4.3).
+//! * `infer`   — classify one eval window on a chosen backend.
+//! * `hitl`    — run the §7 HITL case study (short form; the full
+//!               driver is `examples/desalination_defense.rs`).
+//! * `serve`   — batch-serve eval windows through the router.
+
+use anyhow::Result;
+use icsml::coordinator::{InferenceRouter, RoutePolicy};
+use icsml::defense::{Detector, EngineBackend, StBackend};
+use icsml::hitl::HitlRunner;
+use icsml::msf::{Attack, AttackFamily};
+use icsml::plc::{profiles::KERAS_MODEL_SIZES, HwProfile, PLC_SPECS};
+use icsml::porting::{self, codegen::CodegenOptions, Manifest};
+use icsml::quant::{memory_requirements, Scheme};
+use icsml::runtime::{Runtime, XlaBackend};
+use icsml::util::bench::Table;
+use icsml::util::binio;
+use icsml::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["no-fused", "st", "engine", "xla"]);
+    match args.subcommand.as_deref() {
+        Some("table1") => table1(),
+        Some("fig3") => fig3(),
+        Some("table2") => table2(),
+        Some("port") => port(&args),
+        Some("infer") => infer(&args),
+        Some("hitl") => hitl(&args),
+        Some("serve") => serve(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            eprintln!(
+                "usage: icsml <table1|fig3|table2|port|infer|hitl|serve> \
+                 [options]\n  port  --model classifier [--out FILE] \
+                 [--no-fused]\n  infer --index N [--st|--engine|--xla]\n  \
+                 hitl  --steps N --attack combined --magnitude 0.5\n  \
+                 serve --requests N"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn table1() -> Result<()> {
+    let mut t = Table::new(&[
+        "Manufacturer",
+        "Models",
+        "Avg Time/Instruction (us)",
+        "Memory / RAM",
+    ]);
+    for s in PLC_SPECS {
+        t.row(&[
+            s.manufacturer.to_string(),
+            s.models.to_string(),
+            s.time_per_instruction_us.to_string(),
+            s.memory.to_string(),
+        ]);
+    }
+    println!("Table 1: PLC hardware specifications by manufacturer");
+    t.print();
+    Ok(())
+}
+
+fn fig3() -> Result<()> {
+    println!("Fig. 3 (upper): PLCs and their memory (MB)");
+    let mut t = Table::new(&["PLC", "RAM (MB)"]);
+    for (name, mb) in [
+        ("Allen Bradley Micro 810", 0.002),
+        ("Fatek B1", 0.031),
+        ("Emerson Micro CPUE05", 0.064),
+        ("Siemens S7-1200", 0.15),
+        ("Schneider M221", 0.25),
+        ("Mitsubishi iQ-R", 4.0),
+        ("Fuji SPH5000M", 4.0),
+        ("Hitachi HX", 16.0),
+        ("Festo CECC-S", 44.0),
+        ("Eaton XC152", 64.0),
+        ("WAGO PFC100", 256.0),
+        ("Honeywell R170", 256.0),
+        ("WAGO PFC200", 512.0),
+        ("Eaton XC300", 512.0),
+    ] {
+        t.row(&[name.to_string(), format!("{mb}")]);
+    }
+    t.print();
+    println!("\nFig. 3 (lower): Keras models, millions of f32 parameters");
+    let mut t2 = Table::new(&["Model", "Params (M)", "Size (MB, f32)"]);
+    for (name, m) in KERAS_MODEL_SIZES {
+        t2.row(&[
+            name.to_string(),
+            format!("{m}"),
+            format!("{:.1}", m * 4.0),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\n=> most PLCs can only hold the smallest models; memory-efficient \
+         deployment is mandatory (paper §5.1)."
+    );
+    Ok(())
+}
+
+fn table2() -> Result<()> {
+    println!(
+        "Table 2: memory requirements (bytes) of a 512-neuron dense layer \
+         with 512 inputs"
+    );
+    let mut t =
+        Table::new(&["Scheme", "Weights", "Biases", "Scaling", "Total"]);
+    for (name, scheme) in [
+        ("SINT (8-bit)", Some(Scheme::Sint)),
+        ("INT (16-bit)", Some(Scheme::Int)),
+        ("DINT (32-bit)", Some(Scheme::Dint)),
+        ("REAL (32-bit)", None),
+    ] {
+        let r = memory_requirements(512, 512, scheme);
+        t.row(&[
+            name.to_string(),
+            r.weights.to_string(),
+            r.biases.to_string(),
+            if scheme.is_some() { r.scaling.to_string() } else { "N/A".into() },
+            r.total.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn port(args: &Args) -> Result<()> {
+    let m = Manifest::load(&icsml::artifacts_dir())?;
+    let model = args.opt_or("model", "classifier");
+    let spec = m.model(&model)?;
+    let src = porting::generate_st_program(
+        spec,
+        &CodegenOptions {
+            program: args.opt_or("program", "MAIN"),
+            fused_activations: !args.has("no-fused"),
+        },
+    );
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &src)?;
+            eprintln!("wrote {path} ({} bytes)", src.len());
+        }
+        None => print!("{src}"),
+    }
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    use icsml::defense::Backend;
+    let m = Manifest::load(&icsml::artifacts_dir())?;
+    let spec = m.model("classifier")?;
+    let idx = args.opt_usize("index", 0);
+    let x = binio::read_f32(
+        &m.root
+            .join(m.dataset.expect("eval_windows").as_str().unwrap()),
+    )?;
+    let xi = &x[idx * 400..(idx + 1) * 400];
+
+    let (name, out): (&str, Vec<f32>) = if args.has("st") {
+        let src = porting::generate_st_program(spec, &CodegenOptions::default());
+        let mut it =
+            icsml::icsml_st::load(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        it.io_dir = m.root.join(&spec.weights_dir);
+        let mut b = StBackend::new(it, "MAIN");
+        ("st", b.infer(xi)?)
+    } else if args.has("xla") {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo(&m.hlo_path("classifier_b1")?)?;
+        let mut b = XlaBackend { exe, in_dim: 400 };
+        ("xla", b.infer(xi)?)
+    } else {
+        let mut b = EngineBackend(porting::load_engine_model(&m.root, spec)?);
+        ("engine", b.infer(xi)?)
+    };
+    let verdict = if out[1] > out[0] { "ATTACK" } else { "normal" };
+    println!("backend={name} window={idx} logits={out:?} -> {verdict}");
+    Ok(())
+}
+
+fn hitl(args: &Args) -> Result<()> {
+    let m = Manifest::load(&icsml::artifacts_dir())?;
+    let spec = m.model("classifier")?;
+    let steps = args.opt_usize("steps", 9000) as u64;
+    let family = AttackFamily::from_name(&args.opt_or("attack", "combined"))
+        .ok_or_else(|| anyhow::anyhow!("unknown attack family"))?;
+    let magnitude = args.opt_f64("magnitude", 0.5);
+    let start = args.opt_usize("start", 4360) as u64;
+
+    let engine = porting::load_engine_model(&m.root, spec)?;
+    let detector = Detector::new(Box::new(EngineBackend(engine)), 5);
+    let runner = HitlRunner::new(
+        7,
+        true,
+        vec![Attack::new(family, magnitude, start, steps)],
+        Some(detector),
+        HwProfile::beaglebone(),
+        100_000.0,
+    );
+    let report = runner.run(steps)?;
+    let (mean, std) = report.wd_stats();
+    println!(
+        "HITL: {} cycles, attack {} injected @{start}",
+        steps,
+        family.name()
+    );
+    match report.detections.first() {
+        Some((s, d)) => println!(
+            "  detected @{d} ({}+{} cycles = {:.1} s after injection)",
+            s,
+            d - s,
+            (d - s) as f64 * 0.1
+        ),
+        None => println!("  NOT detected"),
+    }
+    println!("  false positives: {}", report.false_positives);
+    println!("  Wd mean {mean:.2} t/min, sigma {std:.2e}");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let m = Manifest::load(&icsml::artifacts_dir())?;
+    let spec = m.model("classifier")?;
+    let n = args.opt_usize("requests", 100);
+    let x = binio::read_f32(
+        &m.root
+            .join(m.dataset.expect("eval_windows").as_str().unwrap()),
+    )?;
+    let total = x.len() / 400;
+
+    let mut router = InferenceRouter::new(RoutePolicy::FastestObserved);
+    router.register(
+        "engine",
+        Box::new(EngineBackend(porting::load_engine_model(&m.root, spec)?)),
+    );
+    if let Ok(rt) = Runtime::cpu() {
+        if let Ok(exe) = rt.load_hlo(&m.hlo_path("classifier_b1")?) {
+            router.register("xla", Box::new(XlaBackend { exe, in_dim: 400 }));
+        }
+    }
+    let mut attacks = 0;
+    for i in 0..n {
+        let xi = &x[(i % total) * 400..(i % total + 1) * 400];
+        let (_, out) = router.infer(xi)?;
+        if out[1] > out[0] {
+            attacks += 1;
+        }
+    }
+    println!("served {n} requests: {attacks} flagged as attacks");
+    for name in router.backend_names() {
+        let s = router.stats(&name).unwrap();
+        println!(
+            "  {name}: {} requests, mean {:.1} µs",
+            s.requests,
+            s.mean_us()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Process-aware attack injector: the 7 parameterized families
+//! substituting the Rajput et al. 2019 thermal-desalination attacks
+//! (DESIGN.md §2). Effects are applied to actuators (flow scaling),
+//! sensors (false data injection) or the controller setpoint.
+
+/// The seven attack families (matches `plant.ATTACK_FAMILIES` in the
+/// Python twin — order matters for dataset parity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttackFamily {
+    /// 1. Ws actuator scaling.
+    SteamBias,
+    /// 2. Recycle brine flow cut.
+    RecycleReduction,
+    /// 3. Reject seawater flow scaling.
+    RejectManipulation,
+    /// 4. False data injection on the TB0 sensor.
+    Tb0Fdi,
+    /// 5. False data injection on the Wd sensor.
+    WdFdi,
+    /// 6. Wd setpoint tampering.
+    SetpointTamper,
+    /// 7. Combined brine + steam + reject manipulation (Fig. 7).
+    Combined,
+}
+
+impl AttackFamily {
+    pub const ALL: [AttackFamily; 7] = [
+        AttackFamily::SteamBias,
+        AttackFamily::RecycleReduction,
+        AttackFamily::RejectManipulation,
+        AttackFamily::Tb0Fdi,
+        AttackFamily::WdFdi,
+        AttackFamily::SetpointTamper,
+        AttackFamily::Combined,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AttackFamily::SteamBias => "steam_bias",
+            AttackFamily::RecycleReduction => "recycle_reduction",
+            AttackFamily::RejectManipulation => "reject_manipulation",
+            AttackFamily::Tb0Fdi => "tb0_fdi",
+            AttackFamily::WdFdi => "wd_fdi",
+            AttackFamily::SetpointTamper => "setpoint_tamper",
+            AttackFamily::Combined => "combined",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<AttackFamily> {
+        AttackFamily::ALL.into_iter().find(|f| f.name() == name)
+    }
+}
+
+/// One attack instance: family + magnitude + active step window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Attack {
+    pub family: AttackFamily,
+    pub magnitude: f64,
+    pub start_step: u64,
+    pub end_step: u64,
+}
+
+impl Attack {
+    pub fn new(
+        family: AttackFamily,
+        magnitude: f64,
+        start_step: u64,
+        end_step: u64,
+    ) -> Attack {
+        Attack { family, magnitude, start_step, end_step }
+    }
+
+    pub fn active(&self, step: u64) -> bool {
+        step >= self.start_step && step < self.end_step
+    }
+}
+
+/// Folded actuator/sensor/setpoint effects of all active attacks
+/// (mirrors the Python twin's `_attack_params`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttackEffects {
+    pub wr: f64,
+    pub wrej: f64,
+    pub ws_scale: f64,
+    pub tb0_bias: f64,
+    pub wd_scale: f64,
+    pub wd_set: f64,
+    pub active: bool,
+}
+
+impl AttackEffects {
+    pub fn fold(attacks: &[Attack], step: u64) -> AttackEffects {
+        use super::{WD_SET, WREJ_NOM, WR_NOM};
+        let mut e = AttackEffects {
+            wr: WR_NOM,
+            wrej: WREJ_NOM,
+            ws_scale: 1.0,
+            tb0_bias: 0.0,
+            wd_scale: 1.0,
+            wd_set: WD_SET,
+            active: false,
+        };
+        for a in attacks {
+            if !a.active(step) {
+                continue;
+            }
+            e.active = true;
+            let m = a.magnitude;
+            match a.family {
+                AttackFamily::SteamBias => e.ws_scale *= 1.0 + m,
+                AttackFamily::RecycleReduction => e.wr *= 1.0 - m,
+                AttackFamily::RejectManipulation => e.wrej *= 1.0 + m,
+                AttackFamily::Tb0Fdi => e.tb0_bias += m,
+                AttackFamily::WdFdi => e.wd_scale *= 1.0 - m,
+                AttackFamily::SetpointTamper => e.wd_set = WD_SET + m,
+                AttackFamily::Combined => {
+                    e.wr *= 1.0 - 0.6 * m;
+                    e.ws_scale *= 1.0 + 0.4 * m;
+                    e.wrej *= 1.0 - 0.8 * m;
+                }
+            }
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_bounds_half_open() {
+        let a = Attack::new(AttackFamily::Combined, 0.5, 10, 20);
+        assert!(!a.active(9));
+        assert!(a.active(10));
+        assert!(a.active(19));
+        assert!(!a.active(20));
+    }
+
+    #[test]
+    fn fold_no_attacks_is_nominal() {
+        let e = AttackEffects::fold(&[], 0);
+        assert_eq!(e.wr, super::super::WR_NOM);
+        assert_eq!(e.ws_scale, 1.0);
+        assert!(!e.active);
+    }
+
+    #[test]
+    fn fold_combined_matches_python_twin_formula() {
+        let a = Attack::new(AttackFamily::Combined, 0.5, 0, 10);
+        let e = AttackEffects::fold(&[a], 5);
+        assert!((e.wr - super::super::WR_NOM * 0.7).abs() < 1e-12);
+        assert!((e.ws_scale - 1.2).abs() < 1e-12);
+        assert!((e.wrej - super::super::WREJ_NOM * 0.6).abs() < 1e-12);
+        assert!(e.active);
+    }
+
+    #[test]
+    fn multiple_attacks_compose() {
+        let list = [
+            Attack::new(AttackFamily::SteamBias, 0.1, 0, 10),
+            Attack::new(AttackFamily::SteamBias, 0.1, 0, 10),
+            Attack::new(AttackFamily::Tb0Fdi, 2.0, 0, 10),
+        ];
+        let e = AttackEffects::fold(&list, 1);
+        assert!((e.ws_scale - 1.21).abs() < 1e-12);
+        assert_eq!(e.tb0_bias, 2.0);
+    }
+
+    #[test]
+    fn family_names_round_trip() {
+        for f in AttackFamily::ALL {
+            assert_eq!(AttackFamily::from_name(f.name()), Some(f));
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! MSF desalination plant simulator + cascaded PID + attack injector —
+//! the runtime twin of the MATLAB-Simulink HITL setup the paper uses
+//! (§7), substituted per DESIGN.md §2.
+//!
+//! **Normative spec**: `python/compile/plant.py`. Every equation here
+//! replicates the Python twin's arithmetic in the *same evaluation
+//! order* so the two integrate bit-for-bit (IEEE-754 f64); the
+//! golden-trace test (`rust/tests/plant_golden.rs`) pins them to 1e-9.
+
+pub mod attacks;
+pub mod pid;
+pub mod plant;
+pub mod sim;
+
+pub use attacks::{Attack, AttackFamily};
+pub use pid::PidState;
+pub use plant::{adc, plant_step, PlantState};
+pub use sim::Simulator;
+
+// ------------------------------------------------------------ constants
+// (mirrors python/compile/plant.py — keep both in sync)
+/// Scan period: 100 ms, in minutes.
+pub const DT: f64 = 0.1 / 60.0;
+pub const T_SEA: f64 = 35.0;
+pub const LAMBDA_S: f64 = 550.0;
+pub const LAMBDA_V: f64 = 550.0;
+pub const CP: f64 = 1.0;
+pub const R_RECOV: f64 = 0.7;
+pub const F_FLASH: f64 = 0.1;
+pub const C_H: f64 = 800.0;
+pub const C_B: f64 = 1500.0;
+pub const TAU_D: f64 = 0.5;
+
+pub const WR_NOM: f64 = 211.0;
+pub const WREJ_NOM: f64 = 211.0;
+pub const WS_NOM: f64 = 3165.0 / 550.0;
+pub const WS_MAX: f64 = 12.0;
+pub const WS_MIN: f64 = 0.0;
+pub const TB0_NOM: f64 = 90.0;
+pub const TBOT_NOM: f64 = 40.0;
+/// 19.1818... tons/min (paper Fig. 8 mean: 19.18).
+pub const WD_SET: f64 = 211.0 * 50.0 / 550.0;
+
+pub const OUTER_KP: f64 = 2.0;
+pub const OUTER_KI: f64 = 0.8;
+pub const TB0_SET_MIN: f64 = 75.0;
+pub const TB0_SET_MAX: f64 = 95.0;
+pub const INNER_KP: f64 = 0.6;
+pub const INNER_KI: f64 = 0.35;
+
+pub const TB0_ADC_LO: f64 = 0.0;
+pub const TB0_ADC_HI: f64 = 150.0;
+pub const WD_ADC_LO: f64 = 0.0;
+pub const WD_ADC_HI: f64 = 40.0;
+pub const ADC_LEVELS: f64 = 16383.0;
+pub const TB0_NOISE: f64 = 0.02;
+pub const WD_NOISE: f64 = 0.0005;

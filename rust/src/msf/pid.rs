@@ -1,0 +1,71 @@
+//! Cascaded PID controller (the PLC's §7 control task): outer loop
+//! maps the Wd error to a TB0 setpoint, inner loop maps the TB0 error
+//! to the steam-flow command Ws. Twin of `python/compile/plant.py`'s
+//! `pid_step` (same clamps, same evaluation order).
+
+use super::*;
+
+/// Integrator state for the two loops.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PidState {
+    pub outer_i: f64,
+    pub inner_i: f64,
+}
+
+impl PidState {
+    /// One control step (runs once per scan cycle). Returns the Ws
+    /// command. Anti-windup: integrators clamped alongside outputs.
+    pub fn step(&mut self, tb0_meas: f64, wd_meas: f64, wd_set: f64) -> f64 {
+        let e_outer = wd_set - wd_meas;
+        self.outer_i += e_outer * DT;
+        self.outer_i = self.outer_i.clamp(-20.0, 20.0);
+        let tb0_set = TB0_NOM + OUTER_KP * e_outer + OUTER_KI * self.outer_i;
+        let tb0_set = tb0_set.clamp(TB0_SET_MIN, TB0_SET_MAX);
+
+        let e_inner = tb0_set - tb0_meas;
+        self.inner_i += e_inner * DT;
+        self.inner_i = self.inner_i.clamp(-30.0, 30.0);
+        let ws = WS_NOM + INNER_KP * e_inner + INNER_KI * self.inner_i;
+        ws.clamp(WS_MIN, WS_MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_outputs_nominal_steam() {
+        let mut pid = PidState::default();
+        let ws = pid.step(TB0_NOM, WD_SET, WD_SET);
+        assert!((ws - WS_NOM).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_production_raises_steam_command() {
+        let mut pid = PidState::default();
+        let ws = pid.step(TB0_NOM, WD_SET - 2.0, WD_SET);
+        assert!(ws > WS_NOM);
+    }
+
+    #[test]
+    fn anti_windup_clamps_integrators() {
+        let mut pid = PidState::default();
+        for _ in 0..200_000 {
+            pid.step(150.0, 40.0, WD_SET);
+        }
+        assert!(pid.inner_i >= -30.0 && pid.inner_i <= 30.0);
+        assert!(pid.outer_i >= -20.0 && pid.outer_i <= 20.0);
+    }
+
+    #[test]
+    fn output_saturates_at_limits() {
+        let mut pid = PidState::default();
+        // Massive positive error -> saturate at WS_MAX.
+        let mut ws = 0.0;
+        for _ in 0..10_000 {
+            ws = pid.step(0.0, 0.0, WD_SET);
+        }
+        assert_eq!(ws, WS_MAX);
+    }
+}

@@ -1,0 +1,95 @@
+//! Reduced-order MSF flash-plant dynamics + the PLC ADC model.
+//! Twin of `python/compile/plant.py` (normative evaluation order).
+
+use super::*;
+
+/// Plant state (top brine temperature, reject-section temperature,
+/// distillate production with first-order lag).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlantState {
+    pub tb0: f64,
+    pub tbot: f64,
+    pub wd: f64,
+}
+
+impl Default for PlantState {
+    fn default() -> Self {
+        PlantState { tb0: TB0_NOM, tbot: TBOT_NOM, wd: WD_SET }
+    }
+}
+
+/// One Euler step of the plant ODEs. The arithmetic mirrors the Python
+/// twin term-for-term:
+///
+/// ```text
+/// t_in       = tbot + R_RECOV * (tb0 - tbot)
+/// d tb0 /dt  = (LAMBDA_S * ws - wr * CP * (tb0 - t_in)) / C_H
+/// flash_heat = wr * CP * (tb0 - tbot)
+/// d tbot/dt  = (F_FLASH * flash_heat - wrej * CP * (tbot - T_SEA)) / C_B
+/// wd_inst    = flash_heat / LAMBDA_V
+/// d wd  /dt  = (wd_inst - wd) / TAU_D
+/// ```
+pub fn plant_step(s: PlantState, ws: f64, wr: f64, wrej: f64) -> PlantState {
+    let t_in = s.tbot + R_RECOV * (s.tb0 - s.tbot);
+    let d_tb0 = (LAMBDA_S * ws - wr * CP * (s.tb0 - t_in)) / C_H;
+    let flash_heat = wr * CP * (s.tb0 - s.tbot);
+    let d_tbot = (F_FLASH * flash_heat - wrej * CP * (s.tbot - T_SEA)) / C_B;
+    let wd_inst = flash_heat / LAMBDA_V;
+    let d_wd = (wd_inst - s.wd) / TAU_D;
+    PlantState {
+        tb0: s.tb0 + DT * d_tb0,
+        tbot: s.tbot + DT * d_tbot,
+        wd: s.wd + DT * d_wd,
+    }
+}
+
+/// 14-bit ADC quantization over `[lo, hi]` (paper §7.1's visible
+/// quantization steps). Matches the Python twin's float arithmetic.
+pub fn adc(value: f64, lo: f64, hi: f64) -> f64 {
+    let v = value.clamp(lo, hi);
+    let code = ((v - lo) / (hi - lo) * ADC_LEVELS + 0.5).floor();
+    lo + code * (hi - lo) / ADC_LEVELS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_point_is_fixed() {
+        let s = PlantState::default();
+        let s2 = plant_step(s, WS_NOM, WR_NOM, WREJ_NOM);
+        assert!((s2.tb0 - s.tb0).abs() < 1e-9);
+        assert!((s2.tbot - s.tbot).abs() < 1e-9);
+        assert!((s2.wd - s.wd).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_steam_raises_brine_temperature() {
+        let mut s = PlantState::default();
+        for _ in 0..600 {
+            s = plant_step(s, WS_NOM * 1.2, WR_NOM, WREJ_NOM);
+        }
+        assert!(s.tb0 > TB0_NOM + 0.5);
+        assert!(s.wd > WD_SET);
+    }
+
+    #[test]
+    fn adc_grid_and_clamp() {
+        let v = adc(19.1837, WD_ADC_LO, WD_ADC_HI);
+        let lsb = (WD_ADC_HI - WD_ADC_LO) / ADC_LEVELS;
+        assert!((v / lsb - (v / lsb).round()).abs() < 1e-6);
+        assert!((v - 19.1837).abs() <= lsb / 2.0 + 1e-9);
+        assert_eq!(adc(-5.0, WD_ADC_LO, WD_ADC_HI), 0.0);
+        assert_eq!(adc(99.0, WD_ADC_LO, WD_ADC_HI), WD_ADC_HI);
+    }
+
+    #[test]
+    fn mass_energy_sanity() {
+        // Distillate production must track flash heat / latent heat.
+        let s = PlantState { tb0: 92.0, tbot: 41.0, wd: 19.0 };
+        let s2 = plant_step(s, WS_NOM, WR_NOM, WREJ_NOM);
+        let wd_inst = WR_NOM * CP * (92.0 - 41.0) / LAMBDA_V;
+        assert!(s2.wd > s.wd && s2.wd < wd_inst, "wd relaxes toward wd_inst");
+    }
+}

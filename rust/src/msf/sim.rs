@@ -1,0 +1,164 @@
+//! Closed-loop HITL twin: plant + ADC + cascaded PID + attack injector.
+//! Step-for-step mirror of `python/compile/plant.py::Simulator` —
+//! golden-trace-pinned.
+
+use super::attacks::{Attack, AttackEffects};
+use super::pid::PidState;
+use super::plant::{adc, plant_step, PlantState};
+use super::*;
+use crate::util::rng::SplitMix64;
+
+/// What the PLC sees on one scan cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScanReading {
+    pub tb0_adc: f64,
+    pub wd_adc: f64,
+    pub ws_cmd: f64,
+    pub attack_active: bool,
+}
+
+/// The closed-loop simulator.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub state: PlantState,
+    pub pid: PidState,
+    pub attacks: Vec<Attack>,
+    pub step_idx: u64,
+    pub noise: bool,
+    rng: SplitMix64,
+}
+
+impl Simulator {
+    pub fn new(seed: u64, noise: bool, attacks: Vec<Attack>) -> Simulator {
+        Simulator {
+            state: PlantState::default(),
+            pid: PidState::default(),
+            attacks,
+            step_idx: 0,
+            noise,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// One 100 ms scan cycle: sensors (FDI → noise → ADC) → PID →
+    /// actuators (attack scaling) → plant integration.
+    pub fn step(&mut self) -> ScanReading {
+        let e = AttackEffects::fold(&self.attacks, self.step_idx);
+
+        let mut tb0_s = self.state.tb0 + e.tb0_bias;
+        let mut wd_s = self.state.wd * e.wd_scale;
+        if self.noise {
+            tb0_s += TB0_NOISE * self.rng.normal();
+            wd_s += WD_NOISE * self.rng.normal();
+        }
+        let tb0_adc = adc(tb0_s, TB0_ADC_LO, TB0_ADC_HI);
+        let wd_adc = adc(wd_s, WD_ADC_LO, WD_ADC_HI);
+
+        let ws_cmd = self.pid.step(tb0_adc, wd_adc, e.wd_set);
+        let ws_applied = (ws_cmd * e.ws_scale).clamp(WS_MIN, WS_MAX);
+
+        self.state = plant_step(self.state, ws_applied, e.wr, e.wrej);
+        self.step_idx += 1;
+        ScanReading {
+            tb0_adc,
+            wd_adc,
+            ws_cmd,
+            attack_active: e.active,
+        }
+    }
+
+    /// Convenience: run `n` steps, returning the final reading.
+    pub fn run(&mut self, n: u64) -> ScanReading {
+        let mut last = self.step();
+        for _ in 1..n {
+            last = self.step();
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_setpoint_without_noise() {
+        let mut sim = Simulator::new(1, false, vec![]);
+        sim.run(24_000);
+        assert!((sim.state.wd - WD_SET).abs() < 0.01);
+        assert!((sim.state.tb0 - TB0_NOM).abs() < 0.5);
+    }
+
+    #[test]
+    fn wd_statistics_match_paper_scale() {
+        // Fig. 8: mean 19.18, σ ≈ 9.5e-4 on the measured Wd series.
+        let mut sim = Simulator::new(3, true, vec![]);
+        let mut xs = Vec::new();
+        for i in 0..12_000u64 {
+            let r = sim.step();
+            if i >= 6_000 {
+                xs.push(r.wd_adc);
+            }
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!((mean - 19.18).abs() < 0.01, "mean {mean}");
+        let std = var.sqrt();
+        assert!((2e-4..5e-3).contains(&std), "std {std}");
+    }
+
+    #[test]
+    fn every_family_perturbs_observables() {
+        for family in crate::msf::attacks::AttackFamily::ALL {
+            let mag = match family {
+                crate::msf::attacks::AttackFamily::Tb0Fdi => 3.0,
+                crate::msf::attacks::AttackFamily::SetpointTamper => 2.0,
+                _ => 0.3,
+            };
+            let mut base = Simulator::new(2, false, vec![]);
+            let mut attacked = Simulator::new(
+                2,
+                false,
+                vec![Attack::new(family, mag, 1000, 9000)],
+            );
+            let mut dev: f64 = 0.0;
+            for i in 0..9000 {
+                let b = base.step();
+                let a = attacked.step();
+                if i > 2000 {
+                    dev = dev.max(
+                        (a.tb0_adc - b.tb0_adc).abs() / 90.0
+                            + (a.wd_adc - b.wd_adc).abs() / 19.0,
+                    );
+                }
+            }
+            assert!(dev > 0.002, "{family:?}: max deviation {dev}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut a = Simulator::new(9, true, vec![]);
+        let mut b = Simulator::new(9, true, vec![]);
+        for _ in 0..500 {
+            assert_eq!(a.step(), b.step());
+        }
+    }
+
+    #[test]
+    fn pid_recovers_after_transient_attack() {
+        let mut sim = Simulator::new(
+            1,
+            false,
+            vec![Attack::new(
+                crate::msf::attacks::AttackFamily::RecycleReduction,
+                0.1,
+                1000,
+                4000,
+            )],
+        );
+        sim.run(30_000);
+        assert!((sim.state.wd - WD_SET).abs() < 0.05);
+    }
+}

@@ -1,0 +1,10 @@
+//! PLC simulator: hardware profiles (paper Table 1), the abstract-op →
+//! CPU-time model calibrated on the paper's published anchors, the
+//! scan-cycle executor, and memory accounting.
+
+pub mod memory;
+pub mod profiles;
+pub mod scan;
+
+pub use profiles::{CostVector, HwProfile, PlcSpec, PLC_SPECS};
+pub use scan::{ScanCycle, ScanStats};

@@ -1,0 +1,260 @@
+//! PLC hardware profiles.
+//!
+//! Two layers of data:
+//!
+//! 1. [`PLC_SPECS`] — the paper's **Table 1** (manufacturer, models,
+//!    vendor-reported time per instruction, memory), reproduced as a
+//!    static database for the `icsml table1` / Fig. 3 reports.
+//! 2. [`HwProfile`] — executable timing models for the two benchmark
+//!    devices (WAGO PFC100, BeagleBone Black). A profile maps the ST
+//!    interpreter's abstract-op [`Meter`] to modeled CPU microseconds;
+//!    the per-class costs are calibrated so the paper's anchor numbers
+//!    are reproduced (DESIGN.md §9): BBB 64x64 dense dot ≈ 455.2 µs /
+//!    activation ≈ 181.8 µs per layer, WAGO ≈ 696.4 / 248.3 µs,
+//!    BINARR/ARRBIN fixed costs, etc.
+
+use crate::st::Meter;
+
+/// Modeled cost (µs) per abstract operation class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostVector {
+    pub load: f64,
+    pub store: f64,
+    pub fp_add: f64,
+    pub fp_mul: f64,
+    pub fp_div: f64,
+    pub fp_trans: f64,
+    pub int_op: f64,
+    pub cmp: f64,
+    pub fp_cmp: f64,
+    pub branch: f64,
+    pub call: f64,
+    pub convert: f64,
+    pub copy_per_byte: f64,
+    pub io_call: f64,
+    pub io_per_byte: f64,
+}
+
+impl CostVector {
+    /// Modeled CPU time for a metered op delta.
+    pub fn time_us(&self, m: &Meter) -> f64 {
+        m.loads as f64 * self.load
+            + m.stores as f64 * self.store
+            + m.fp_add as f64 * self.fp_add
+            + m.fp_mul as f64 * self.fp_mul
+            + m.fp_div as f64 * self.fp_div
+            + m.fp_trans as f64 * self.fp_trans
+            + m.int_ops as f64 * self.int_op
+            + m.cmp as f64 * self.cmp
+            + m.fp_cmp as f64 * self.fp_cmp
+            + m.branches as f64 * self.branch
+            + m.calls as f64 * self.call
+            + m.converts as f64 * self.convert
+            + m.copy_bytes as f64 * self.copy_per_byte
+            + m.io_calls as f64 * self.io_call
+            + m.io_bytes as f64 * self.io_per_byte
+    }
+
+    /// Uniform scaling (used to derive the WAGO profile from the BBB
+    /// one — the devices differ mainly in clock speed, paper §5).
+    pub fn scaled(&self, k: f64) -> CostVector {
+        CostVector {
+            load: self.load * k,
+            store: self.store * k,
+            fp_add: self.fp_add * k,
+            fp_mul: self.fp_mul * k,
+            fp_div: self.fp_div * k,
+            fp_trans: self.fp_trans * k,
+            int_op: self.int_op * k,
+            cmp: self.cmp * k,
+            fp_cmp: self.fp_cmp * k,
+            branch: self.branch * k,
+            call: self.call * k,
+            convert: self.convert * k,
+            copy_per_byte: self.copy_per_byte * k,
+            io_call: self.io_call * k,
+            io_per_byte: self.io_per_byte * k,
+        }
+    }
+}
+
+/// An executable device timing model.
+#[derive(Debug, Clone)]
+pub struct HwProfile {
+    pub name: &'static str,
+    pub cpu: &'static str,
+    pub clock_mhz: u32,
+    pub ram_bytes: u64,
+    pub costs: CostVector,
+    /// §5.4: the Codesys profiler's instrumentation roughly doubles
+    /// execution time; models the "measured with profiler" mode.
+    pub profiler_overhead: f64,
+}
+
+impl HwProfile {
+    /// Modeled CPU time (µs) for a metered delta.
+    pub fn time_us(&self, m: &Meter) -> f64 {
+        self.costs.time_us(m)
+    }
+
+    /// Time with Codesys-profiler instrumentation enabled (§5.4).
+    pub fn time_us_instrumented(&self, m: &Meter) -> f64 {
+        self.costs.time_us(m) * self.profiler_overhead
+    }
+
+    /// BeagleBone Black (1 GHz Cortex-A8, 512 MB) — Codesys soft-PLC.
+    /// Per-class costs calibrated against the paper's §5.2 anchors.
+    pub fn beaglebone() -> HwProfile {
+        HwProfile {
+            name: "BeagleBone Black",
+            cpu: "ARM Cortex-A8 @ 1 GHz",
+            clock_mhz: 1000,
+            ram_bytes: 512 << 20,
+            costs: BBB_COSTS,
+            profiler_overhead: 2.0,
+        }
+    }
+
+    /// WAGO PFC100 (600 MHz Cortex-A8, 256 MB). The paper's measured
+    /// WAGO:BBB ratio is ≈1.5x (696.4/455.2 dot, 13.7/9.33 per-neuron).
+    pub fn wago_pfc100() -> HwProfile {
+        HwProfile {
+            name: "WAGO PFC100",
+            cpu: "ARM Cortex-A8 @ 600 MHz",
+            clock_mhz: 600,
+            ram_bytes: 256 << 20,
+            costs: BBB_COSTS.scaled(1.53),
+            profiler_overhead: 2.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<HwProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "bbb" | "beaglebone" => Some(HwProfile::beaglebone()),
+            "wago" | "pfc100" => Some(HwProfile::wago_pfc100()),
+            _ => None,
+        }
+    }
+}
+
+/// BBB per-class costs (µs). Calibrated in
+/// `rust/tests/timing_calibration.rs` against the paper anchors.
+// Solved from the §5.2 anchors using the metered op counts of the
+// anchor workloads (see rust/tests/timing_calibration.rs):
+//   dot(64x64):  29,708 loads, 8,585 stores, 8,256 fp, 4,353 int,
+//                4,289 branches, 66 calls  → 455.2 µs
+//   act(64):     130 calls dominate           → 181.8 µs
+// The fp/int split follows the Cortex-A8's non-pipelined VFP (FP ops
+// ~1.5 orders costlier than integer ALU ops) — this is what produces
+// the paper's §6.1 quantization speedups (−59.7% SINT): the anchors
+// only pin the totals, the microarchitecture pins the ratio.
+const BBB_COSTS: CostVector = CostVector {
+    load: 0.0015,
+    store: 0.0015,
+    fp_add: 0.0343,
+    fp_mul: 0.0343,
+    fp_div: 0.080,
+    fp_trans: 0.45,
+    int_op: 0.0015,
+    cmp: 0.0015,
+    fp_cmp: 0.075,
+    branch: 0.004,
+    call: 1.375,
+    convert: 0.010,
+    copy_per_byte: 0.003,
+    io_call: 400.0,
+    io_per_byte: 0.25,
+};
+
+/// One Table-1 row (vendor-reported specs).
+#[derive(Debug, Clone, Copy)]
+pub struct PlcSpec {
+    pub manufacturer: &'static str,
+    pub models: &'static str,
+    pub time_per_instruction_us: &'static str,
+    pub memory: &'static str,
+}
+
+/// Paper Table 1: PLC hardware specifications by manufacturer.
+pub const PLC_SPECS: &[PlcSpec] = &[
+    PlcSpec { manufacturer: "ABB", models: "AC500 PM57x/58x/59x/595/50xx/55x/56x", time_per_instruction_us: "FP:0.7/0.5/0.004/0.001/0.6/1200", memory: "128-512KB/512KB-1MB/2-4MB/16MB/256KB-1MB/128-512KB" },
+    PlcSpec { manufacturer: "Allen Bradley", models: "Micro 810/20/30/50/70, CL 5380, 5560/70/80", time_per_instruction_us: "2.5/0.3/0.3/0.3/0.3, N/A, N/A", memory: "2/20/8-20/20/40KB, 600KB-10MB, 3-40/2-32/2-32MB" },
+    PlcSpec { manufacturer: "Delta Electronics", models: "AS300, AH500", time_per_instruction_us: "1.6, 0.02 LD", memory: "N/A, 128KB-4MB" },
+    PlcSpec { manufacturer: "Eaton", models: "XC152, XC300", time_per_instruction_us: "N/A, N/A", memory: "64MB, 512MB" },
+    PlcSpec { manufacturer: "Emerson", models: "Micro CPUE05/001, RX3i CPE400/CPL410", time_per_instruction_us: "0.8 Bool/1.8, N/A", memory: "64/34KB, 64MB/2GB" },
+    PlcSpec { manufacturer: "Fatek", models: "B1, B1z", time_per_instruction_us: "0.33, 0.33", memory: "31KB, 15KB" },
+    PlcSpec { manufacturer: "Festo", models: "CECC-D/LK/S", time_per_instruction_us: "N/A", memory: "16/16/44MB" },
+    PlcSpec { manufacturer: "Fuji Electric", models: "SPH5000M/H/D/3000D/300/2000/200", time_per_instruction_us: "FP:0.0253/0.066/0.088/0.08/0.27/5600", memory: "4/4/2/2/2MB/128KB" },
+    PlcSpec { manufacturer: "Hitachi", models: "Micro EHV+, HX, EHV+", time_per_instruction_us: "N/A, 0.006 FP, 0.08", memory: "1MB, 16MB, 2MB" },
+    PlcSpec { manufacturer: "Honeywell", models: "ControlEdge R170 PLC", time_per_instruction_us: "N/A", memory: "256MB ECC" },
+    PlcSpec { manufacturer: "Mitsubishi Electric", models: "MELSEC iQ-R/Q/L", time_per_instruction_us: "0.0098 FP/0.0016 LD/0.065 LD", memory: "4MB/64-896KB/64K Steps" },
+    PlcSpec { manufacturer: "Panasonic", models: "FP 7/2SH/0R/X0/0H", time_per_instruction_us: "0.011/0.03/0.08-0.58/0.08-0.58/0.01", memory: "1MB/20KB/64KB/16KB/64K Steps" },
+    PlcSpec { manufacturer: "Rexroth (Bosch)", models: "XM21/22/42, VPB", time_per_instruction_us: "FP:0.026/0.013/0.02/0.02", memory: "0.5/0.5/2/16GB" },
+    PlcSpec { manufacturer: "Schneider Electric", models: "Modicon M221/241/251/262", time_per_instruction_us: "0.3/0.3/0.022/0.005", memory: "256KB/64MB/64MB/32MB" },
+    PlcSpec { manufacturer: "SIEMENS", models: "SIMATIC S7-1200/1500", time_per_instruction_us: "2.3/0.006-0.384", memory: "150KB/150KB-4MB" },
+    PlcSpec { manufacturer: "WAGO", models: "PFC100/200", time_per_instruction_us: "N/A, N/A", memory: "256/512MB" },
+];
+
+/// Fig. 3 companion data: Keras Applications model sizes (millions of
+/// 32-bit parameters), used to contrast with PLC memory.
+pub const KERAS_MODEL_SIZES: &[(&str, f64)] = &[
+    ("MobileNet (a=0.25)", 0.47),
+    ("MobileNetV2", 3.5),
+    ("MobileNet", 4.3),
+    ("NASNetMobile", 5.3),
+    ("DenseNet121", 8.1),
+    ("EfficientNetB0", 5.3),
+    ("EfficientNetB3", 12.3),
+    ("DenseNet201", 20.2),
+    ("ResNet50", 25.6),
+    ("NASNetLarge", 88.9),
+    ("ResNet152", 60.4),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_covers_all_manufacturers() {
+        assert_eq!(PLC_SPECS.len(), 16);
+        assert!(PLC_SPECS.iter().any(|s| s.manufacturer == "WAGO"));
+        assert!(PLC_SPECS.iter().any(|s| s.manufacturer == "SIEMENS"));
+    }
+
+    #[test]
+    fn wago_is_slower_than_bbb() {
+        let bbb = HwProfile::beaglebone();
+        let wago = HwProfile::wago_pfc100();
+        let mut m = Meter::new();
+        m.fp_mul = 1000;
+        m.loads = 3000;
+        let r = wago.time_us(&m) / bbb.time_us(&m);
+        assert!((r - 1.53).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instrumented_mode_doubles() {
+        let bbb = HwProfile::beaglebone();
+        let mut m = Meter::new();
+        m.fp_add = 100;
+        assert!((bbb.time_us_instrumented(&m) - 2.0 * bbb.time_us(&m)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(HwProfile::by_name("wago").is_some());
+        assert!(HwProfile::by_name("BBB").is_some());
+        assert!(HwProfile::by_name("cray").is_none());
+    }
+
+    #[test]
+    fn cost_vector_time_accumulates() {
+        let c = HwProfile::beaglebone().costs;
+        let mut m = Meter::new();
+        m.io_calls = 1;
+        m.io_bytes = 100;
+        let t = c.time_us(&m);
+        assert!((t - (c.io_call + 100.0 * c.io_per_byte)).abs() < 1e-9);
+    }
+}

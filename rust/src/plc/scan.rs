@@ -1,0 +1,112 @@
+//! Scan-cycle executor: the PLC's periodic read-inputs → run-tasks →
+//! write-outputs loop (paper §2.1 / §3.3), with modeled per-cycle CPU
+//! time and real-time overrun accounting.
+
+use super::profiles::HwProfile;
+use crate::st::Meter;
+
+/// Scan-cycle bookkeeping for one PLC task set.
+#[derive(Debug, Clone)]
+pub struct ScanCycle {
+    pub profile: HwProfile,
+    /// Scan period in microseconds (paper case study: 100 ms).
+    pub period_us: f64,
+    pub stats: ScanStats,
+}
+
+/// Aggregated statistics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct ScanStats {
+    pub cycles: u64,
+    /// Cycles whose modeled CPU time exceeded the period.
+    pub overruns: u64,
+    pub control_time_us: f64,
+    pub ml_time_us: f64,
+    pub max_cycle_us: f64,
+}
+
+impl ScanCycle {
+    pub fn new(profile: HwProfile, period_us: f64) -> ScanCycle {
+        ScanCycle { profile, period_us, stats: ScanStats::default() }
+    }
+
+    /// Record one completed cycle from metered deltas. `control` covers
+    /// the control task (PID etc.), `ml` the inference task. Returns
+    /// the cycle's modeled CPU time (µs).
+    pub fn record(&mut self, control: &Meter, ml: &Meter) -> f64 {
+        let c = self.profile.time_us(control);
+        let m = self.profile.time_us(ml);
+        let total = c + m;
+        self.stats.cycles += 1;
+        self.stats.control_time_us += c;
+        self.stats.ml_time_us += m;
+        if total > self.period_us {
+            self.stats.overruns += 1;
+        }
+        if total > self.stats.max_cycle_us {
+            self.stats.max_cycle_us = total;
+        }
+        total
+    }
+
+    /// Record a cycle from already-modeled times (for native-engine /
+    /// XLA backends whose cost is estimated from MAC counts).
+    pub fn record_times(&mut self, control_us: f64, ml_us: f64) -> f64 {
+        let total = control_us + ml_us;
+        self.stats.cycles += 1;
+        self.stats.control_time_us += control_us;
+        self.stats.ml_time_us += ml_us;
+        if total > self.period_us {
+            self.stats.overruns += 1;
+        }
+        if total > self.stats.max_cycle_us {
+            self.stats.max_cycle_us = total;
+        }
+        total
+    }
+
+    /// Spare time per cycle after the control task, available for
+    /// (multipart) inference.
+    pub fn ml_budget_us(&self, control_us: f64) -> f64 {
+        (self.period_us - control_us).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meter(fp_mul: u64) -> Meter {
+        Meter { fp_mul, ..Meter::default() }
+    }
+
+    #[test]
+    fn overrun_detection() {
+        let mut sc = ScanCycle::new(HwProfile::beaglebone(), 100.0);
+        // Small cycle: no overrun.
+        sc.record(&meter(10), &meter(10));
+        assert_eq!(sc.stats.overruns, 0);
+        // Huge ML load: overrun.
+        sc.record(&meter(10), &meter(1_000_000));
+        assert_eq!(sc.stats.overruns, 1);
+        assert_eq!(sc.stats.cycles, 2);
+        assert!(sc.stats.max_cycle_us > 100.0);
+    }
+
+    #[test]
+    fn budget_never_negative() {
+        let sc = ScanCycle::new(HwProfile::beaglebone(), 100.0);
+        assert_eq!(sc.ml_budget_us(150.0), 0.0);
+        assert_eq!(sc.ml_budget_us(40.0), 60.0);
+    }
+
+    #[test]
+    fn record_times_accumulates() {
+        let mut sc = ScanCycle::new(HwProfile::wago_pfc100(), 1000.0);
+        sc.record_times(100.0, 200.0);
+        sc.record_times(100.0, 300.0);
+        assert_eq!(sc.stats.control_time_us, 200.0);
+        assert_eq!(sc.stats.ml_time_us, 500.0);
+        assert_eq!(sc.stats.overruns, 0);
+    }
+}

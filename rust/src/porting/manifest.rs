@@ -1,0 +1,169 @@
+//! `artifacts/manifest.json` schema (the contract with
+//! `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One dense layer's export record.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub inputs: usize,
+    pub neurons: usize,
+    /// File names relative to `weights_dir`.
+    pub weights: String,
+    pub biases: String,
+}
+
+/// One exported model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub sizes: Vec<usize>,
+    pub activations: Vec<String>,
+    pub weights_dir: String,
+    pub layers: Vec<LayerSpec>,
+    /// Training report (accuracy etc.), kept as raw JSON.
+    pub report: Json,
+}
+
+/// Parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    /// HLO artifact name -> path relative to root.
+    pub hlo: BTreeMap<String, String>,
+    pub dataset: Json,
+    pub plant: Json,
+    pub golden_trace: String,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.expect("models").as_obj().unwrap() {
+            let sizes: Vec<usize> = m
+                .expect("sizes")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect();
+            let activations: Vec<String> = m
+                .expect("activations")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_str().unwrap().to_string())
+                .collect();
+            let layers: Vec<LayerSpec> = m
+                .expect("layers")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|l| LayerSpec {
+                    inputs: l.expect("inputs").as_usize().unwrap(),
+                    neurons: l.expect("neurons").as_usize().unwrap(),
+                    weights: l.expect("weights").as_str().unwrap().to_string(),
+                    biases: l.expect("biases").as_str().unwrap().to_string(),
+                })
+                .collect();
+            anyhow::ensure!(
+                layers.len() + 1 == sizes.len()
+                    && activations.len() == layers.len(),
+                "model {name}: inconsistent manifest"
+            );
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    sizes,
+                    activations,
+                    weights_dir: m
+                        .expect("weights_dir")
+                        .as_str()
+                        .unwrap()
+                        .to_string(),
+                    layers,
+                    report: m.expect("report").clone(),
+                },
+            );
+        }
+
+        let hlo = j
+            .expect("hlo")
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap().to_string()))
+            .collect();
+
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            models,
+            hlo,
+            dataset: j.expect("dataset").clone(),
+            plant: j.expect("plant").clone(),
+            golden_trace: j
+                .expect("golden_trace")
+                .as_str()
+                .unwrap()
+                .to_string(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no model {name}"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        self.hlo
+            .get(name)
+            .map(|rel| self.root.join(rel))
+            .ok_or_else(|| anyhow::anyhow!("manifest has no HLO {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_fast_artifacts_if_present() {
+        let root = crate::artifacts_dir();
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        let clf = m.model("classifier").unwrap();
+        assert_eq!(clf.sizes, vec![400, 64, 32, 16, 2]);
+        assert_eq!(clf.layers.len(), 4);
+        assert!(m.hlo_path("classifier_b1").unwrap().exists());
+        let mn = m.model("mnist512").unwrap();
+        assert_eq!(mn.sizes, vec![784, 512, 512, 10]);
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let root = crate::artifacts_dir();
+        if !root.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.hlo_path("nope").is_err());
+    }
+}

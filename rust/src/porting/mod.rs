@@ -1,0 +1,43 @@
+//! Model porting toolchain (paper §4.3 + the §8.2 "future work"
+//! model-to-model transformation, implemented).
+//!
+//! Reads `artifacts/manifest.json` (written by `python/compile/aot.py`
+//! after training) and materializes the model three ways:
+//!
+//! * [`codegen::generate_st_program`] — ICSML **ST source code** plus
+//!   `BINARR` weight loading, the paper's porting flow;
+//! * [`load_engine_model`] — the same model on the native engine;
+//! * the HLO artifacts referenced by the manifest feed
+//!   [`crate::runtime`] directly (the compiled comparator).
+
+pub mod codegen;
+pub mod manifest;
+
+pub use codegen::generate_st_program;
+pub use manifest::{LayerSpec, Manifest, ModelSpec};
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::engine::{Act, Layer, Model};
+use crate::util::binio;
+
+/// Build a native-engine model from a manifest model spec.
+pub fn load_engine_model(root: &Path, spec: &ModelSpec) -> Result<Model> {
+    let mut layers = Vec::new();
+    for (i, l) in spec.layers.iter().enumerate() {
+        let dir = root.join(&spec.weights_dir);
+        let w = binio::read_f32(&dir.join(&l.weights))?;
+        let b = binio::read_f32(&dir.join(&l.biases))?;
+        anyhow::ensure!(
+            w.len() == l.inputs * l.neurons && b.len() == l.neurons,
+            "layer {i}: weight/bias sizes do not match the manifest"
+        );
+        let act = Act::from_name(&spec.activations[i]).ok_or_else(|| {
+            anyhow::anyhow!("unknown activation {:?}", spec.activations[i])
+        })?;
+        layers.push(Layer::dense(w, b, l.inputs, act));
+    }
+    Ok(Model::new(layers))
+}

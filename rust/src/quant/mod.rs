@@ -1,0 +1,235 @@
+//! Integer quantization (paper §6.1): SINT/INT/DINT schemes, the
+//! per-neuron symmetric quantizer, Table 2's memory calculator, and the
+//! §6.1 arithmetic-operation analysis.
+
+/// IEC 61131-3 integer quantization schemes (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// 8-bit.
+    Sint,
+    /// 16-bit.
+    Int,
+    /// 32-bit.
+    Dint,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 3] = [Scheme::Sint, Scheme::Int, Scheme::Dint];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Sint => "SINT",
+            Scheme::Int => "INT",
+            Scheme::Dint => "DINT",
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            Scheme::Sint => 1,
+            Scheme::Int => 2,
+            Scheme::Dint => 4,
+        }
+    }
+
+    /// Max magnitude representable (symmetric range).
+    pub fn qmax(self) -> f64 {
+        match self {
+            Scheme::Sint => 127.0,
+            Scheme::Int => 32_767.0,
+            Scheme::Dint => 2_147_483_647.0,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Scheme> {
+        Some(match name.to_ascii_uppercase().as_str() {
+            "SINT" => Scheme::Sint,
+            "INT" => Scheme::Int,
+            "DINT" => Scheme::Dint,
+            _ => return None,
+        })
+    }
+}
+
+/// Quantize a dense layer's weights (`[neurons][inputs]` row-major)
+/// symmetrically, one scale per output neuron — the paper's scheme
+/// (Table 2: one REAL scaling factor per neuron + one for the input).
+///
+/// Returns `(w_q, s_w)` with `w ≈ w_q * s_w[neuron]`.
+pub fn quantize_weights(
+    w: &[f32],
+    inputs: usize,
+    neurons: usize,
+    scheme: Scheme,
+) -> (Vec<i32>, Vec<f32>) {
+    assert_eq!(w.len(), inputs * neurons);
+    let qmax = scheme.qmax();
+    let mut w_q = Vec::with_capacity(w.len());
+    let mut s_w = Vec::with_capacity(neurons);
+    for n in 0..neurons {
+        let row = &w[n * inputs..(n + 1) * inputs];
+        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12);
+        let scale = absmax as f64 / qmax;
+        s_w.push(scale as f32);
+        for v in row {
+            let q = (*v as f64 / scale).round().clamp(-qmax, qmax);
+            w_q.push(q as i32);
+        }
+    }
+    (w_q, s_w)
+}
+
+/// Pick the input scale factor for a known input range.
+pub fn input_scale(abs_max: f32, scheme: Scheme) -> f32 {
+    (abs_max.max(1e-12) as f64 / scheme.qmax()) as f32
+}
+
+/// One row of the paper's Table 2: memory requirements in bytes of a
+/// fully connected layer under a quantization scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryRow {
+    pub weights: u64,
+    pub biases: u64,
+    /// Per-neuron scales + the input scale, as REALs. 0 for the f32
+    /// baseline.
+    pub scaling: u64,
+    pub total: u64,
+}
+
+/// Table 2 calculator. `scheme = None` is the REAL (f32) baseline row.
+pub fn memory_requirements(
+    inputs: u64,
+    neurons: u64,
+    scheme: Option<Scheme>,
+) -> MemoryRow {
+    let weights = inputs * neurons * scheme.map_or(4, |s| s.bytes() as u64);
+    let biases = neurons * 4;
+    let scaling = match scheme {
+        Some(_) => (neurons + 1) * 4,
+        None => 0,
+    };
+    MemoryRow { weights, biases, scaling, total: weights + biases + scaling }
+}
+
+/// §6.1 operation counts for one dense-layer inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounts {
+    pub fp_mul: u64,
+    pub fp_add: u64,
+    pub int_mul: u64,
+    pub int_add: u64,
+}
+
+/// Operation analysis: float layer vs integer-quantized layer (the
+/// paper's example: 512x512 → 262,144 FP mul + 262,656 FP add vs
+/// 1,024 FP mul + 512 FP add + 262,144 int mul + 262,144 int add).
+pub fn op_counts(inputs: u64, neurons: u64, quantized: bool) -> OpCounts {
+    if quantized {
+        OpCounts {
+            // input quantization: 1 divide (counted as mul) per input;
+            // dequantization: 1 mul per neuron with the combined
+            // s_x*s_w[n] scale precomputed — 1024 total for 512x512,
+            // exactly the paper's figure.
+            fp_mul: inputs + neurons,
+            fp_add: neurons, // bias adds
+            int_mul: inputs * neurons,
+            int_add: inputs * neurons,
+        }
+    } else {
+        OpCounts {
+            fp_mul: inputs * neurons,
+            // dot-product adds + bias adds
+            fp_add: inputs * neurons + neurons,
+            int_mul: 0,
+            int_add: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_assert, prop_check};
+
+    #[test]
+    fn table2_rows_match_paper() {
+        // Paper Table 2 for 512 inputs x 512 neurons.
+        let sint = memory_requirements(512, 512, Some(Scheme::Sint));
+        assert_eq!(sint.weights, 262_144);
+        assert_eq!(sint.biases, 2_048);
+        assert_eq!(sint.scaling, 2_052);
+        assert_eq!(sint.total, 266_244);
+
+        let int = memory_requirements(512, 512, Some(Scheme::Int));
+        assert_eq!(int.total, 528_388);
+
+        let dint = memory_requirements(512, 512, Some(Scheme::Dint));
+        assert_eq!(dint.total, 1_052_676);
+
+        let real = memory_requirements(512, 512, None);
+        assert_eq!(real.total, 1_050_624);
+    }
+
+    #[test]
+    fn compression_percentages_match_paper() {
+        // §6.1: SINT −74.66%, INT −49.71% vs REAL.
+        let real = memory_requirements(512, 512, None).total as f64;
+        let sint = memory_requirements(512, 512, Some(Scheme::Sint)).total as f64;
+        let int = memory_requirements(512, 512, Some(Scheme::Int)).total as f64;
+        assert!(((1.0 - sint / real) * 100.0 - 74.66).abs() < 0.01);
+        assert!(((1.0 - int / real) * 100.0 - 49.71).abs() < 0.01);
+    }
+
+    #[test]
+    fn op_counts_match_paper() {
+        // §6.1 for the 512x512 layer.
+        let f = op_counts(512, 512, false);
+        assert_eq!(f.fp_mul, 262_144);
+        assert_eq!(f.fp_add, 262_656);
+        let q = op_counts(512, 512, true);
+        assert_eq!(q.int_mul, 262_144);
+        assert_eq!(q.int_add, 262_144);
+        assert_eq!(q.fp_mul, 1_024); // 512 input divides + 512 dequant muls
+        assert_eq!(q.fp_add, 512);
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bounded() {
+        prop_check(40, |g| {
+            let inputs = g.usize_in(1..=32);
+            let neurons = g.usize_in(1..=16);
+            let w = g.vec_f32((inputs * neurons)..=(inputs * neurons), -2.0, 2.0);
+            for scheme in [Scheme::Sint, Scheme::Int] {
+                let (wq, sw) = quantize_weights(&w, inputs, neurons, scheme);
+                for n in 0..neurons {
+                    for i in 0..inputs {
+                        let orig = w[n * inputs + i];
+                        let deq = wq[n * inputs + i] as f32 * sw[n];
+                        let lsb = sw[n];
+                        prop_assert(
+                            (orig - deq).abs() <= 0.5 * lsb + 1e-6,
+                            format!("{scheme:?}: {orig} vs {deq} (lsb {lsb})"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantized_values_in_range() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.37).collect();
+        let (wq, _) = quantize_weights(&w, 16, 4, Scheme::Sint);
+        assert!(wq.iter().all(|q| (-127..=127).contains(q)));
+    }
+
+    #[test]
+    fn scheme_metadata() {
+        assert_eq!(Scheme::Sint.bytes(), 1);
+        assert_eq!(Scheme::Int.bytes(), 2);
+        assert_eq!(Scheme::Dint.bytes(), 4);
+        assert_eq!(Scheme::from_name("sint"), Some(Scheme::Sint));
+        assert_eq!(Scheme::from_name("REAL"), None);
+    }
+}

@@ -1,0 +1,103 @@
+//! PJRT runtime: loads the AOT-lowered JAX/Pallas models (HLO text
+//! emitted by `python/compile/aot.py`) and executes them from the Rust
+//! hot path. This is the repo's "TensorFlow Lite" comparator — the
+//! same math as the ICSML model through an optimizing compiled runtime
+//! (paper §5.2's TFLite baseline; see DESIGN.md §2).
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::defense::Backend;
+
+/// PJRT CPU client wrapper. Create once; compile many executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// One compiled model variant (weights embedded as constants at AOT
+/// time — the runtime feeds only the input tensor).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with one f32 input tensor; returns the flattened f32
+    /// output (AOT lowering uses `return_tuple=True`, so the result is
+    /// a 1-tuple).
+    pub fn run_f32(&self, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == input.len(), "input length vs shape");
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with two f32 inputs (used by the smoke artifact).
+    pub fn run_f32x2(
+        &self,
+        a: (&[f32], &[usize]),
+        b: (&[f32], &[usize]),
+    ) -> Result<Vec<f32>> {
+        let da: Vec<i64> = a.1.iter().map(|&d| d as i64).collect();
+        let db: Vec<i64> = b.1.iter().map(|&d| d as i64).collect();
+        let la = xla::Literal::vec1(a.0).reshape(&da)?;
+        let lb = xla::Literal::vec1(b.0).reshape(&db)?;
+        let result = self.exe.execute::<xla::Literal>(&[la, lb])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+/// Defense backend running the AOT classifier through PJRT.
+pub struct XlaBackend {
+    pub exe: Executable,
+    pub in_dim: usize,
+}
+
+impl Backend for XlaBackend {
+    fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.exe.run_f32(x, &[1, self.in_dim])
+    }
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

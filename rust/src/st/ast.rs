@@ -1,0 +1,223 @@
+//! Parse tree for the ST subset (names unresolved; see [`super::lower`]
+//! for the slot-resolved executable IR).
+
+/// A compilation unit: every top-level declaration in one source text.
+#[derive(Debug, Default, Clone)]
+pub struct File {
+    pub types: Vec<TypeDecl>,
+    pub interfaces: Vec<InterfaceDecl>,
+    pub functions: Vec<PouDecl>,
+    pub function_blocks: Vec<FbDecl>,
+    pub programs: Vec<PouDecl>,
+    pub globals: Vec<VarBlock>,
+}
+
+/// `TYPE name : STRUCT ... END_STRUCT END_TYPE`
+#[derive(Debug, Clone)]
+pub struct TypeDecl {
+    pub name: String,
+    pub fields: Vec<VarDecl>,
+    pub line: u32,
+}
+
+/// `INTERFACE name ... END_INTERFACE` — method signatures only.
+#[derive(Debug, Clone)]
+pub struct InterfaceDecl {
+    pub name: String,
+    pub methods: Vec<MethodSig>,
+    pub line: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodSig {
+    pub name: String,
+    pub ret: Option<TypeRef>,
+    pub inputs: Vec<VarDecl>,
+    pub line: u32,
+}
+
+/// FUNCTION or PROGRAM (same surface shape; functions have return types).
+#[derive(Debug, Clone)]
+pub struct PouDecl {
+    pub name: String,
+    pub ret: Option<TypeRef>,
+    pub blocks: Vec<VarBlock>,
+    pub body: Vec<Stmt>,
+    pub line: u32,
+}
+
+/// `FUNCTION_BLOCK name IMPLEMENTS i1, i2 ... END_FUNCTION_BLOCK`
+#[derive(Debug, Clone)]
+pub struct FbDecl {
+    pub name: String,
+    pub implements: Vec<String>,
+    pub blocks: Vec<VarBlock>,
+    pub methods: Vec<PouDecl>,
+    /// Optional FB body (runs on `inst(...)` invocation).
+    pub body: Vec<Stmt>,
+    pub line: u32,
+}
+
+/// One VAR section with its kind.
+#[derive(Debug, Clone)]
+pub struct VarBlock {
+    pub kind: VarKind,
+    pub constant: bool,
+    pub decls: Vec<VarDecl>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarKind {
+    Input,
+    Output,
+    InOut,
+    Local,
+    Global,
+}
+
+#[derive(Debug, Clone)]
+pub struct VarDecl {
+    pub name: String,
+    pub ty: TypeRef,
+    pub init: Option<Initializer>,
+    pub line: u32,
+}
+
+/// Unresolved type reference.
+#[derive(Debug, Clone)]
+pub enum TypeRef {
+    /// Elementary or user type by (case-preserved) name.
+    Named(String),
+    /// `ARRAY [lo..hi, ...] OF elem` — bounds are const expressions.
+    Array(Vec<(Expr, Expr)>, Box<TypeRef>),
+    /// `POINTER TO elem`
+    Pointer(Box<TypeRef>),
+    /// `STRING` (fixed default length)
+    StringTy,
+}
+
+#[derive(Debug, Clone)]
+pub enum Initializer {
+    Expr(Expr),
+    /// `[a, b, c]` array initializer (with `n(x)` repetition support).
+    Array(Vec<(Option<Expr>, Expr)>),
+    /// `(field := expr, ...)` struct initializer.
+    Struct(Vec<(String, Expr)>),
+}
+
+#[derive(Debug, Clone)]
+pub enum Stmt {
+    Assign { target: Expr, value: Expr, line: u32 },
+    If {
+        arms: Vec<(Expr, Vec<Stmt>)>,
+        else_body: Vec<Stmt>,
+        line: u32,
+    },
+    Case {
+        scrutinee: Expr,
+        arms: Vec<(Vec<CaseLabel>, Vec<Stmt>)>,
+        else_body: Vec<Stmt>,
+        line: u32,
+    },
+    For {
+        var: String,
+        from: Expr,
+        to: Expr,
+        by: Option<Expr>,
+        body: Vec<Stmt>,
+        line: u32,
+    },
+    While { cond: Expr, body: Vec<Stmt>, line: u32 },
+    Repeat { body: Vec<Stmt>, until: Expr, line: u32 },
+    Exit { line: u32 },
+    Continue { line: u32 },
+    Return { line: u32 },
+    /// Bare call (function, method, or FB invocation).
+    Call { expr: Expr, line: u32 },
+    Empty,
+}
+
+#[derive(Debug, Clone)]
+pub enum CaseLabel {
+    Single(Expr),
+    Range(Expr, Expr),
+}
+
+#[derive(Debug, Clone)]
+pub enum Expr {
+    IntLit(i64),
+    RealLit(f64),
+    BoolLit(bool),
+    StrLit(String),
+    /// `TYPE#lit`
+    TypedLit(String, String),
+    NullLit,
+    /// Bare name (variable / constant / enum-like).
+    Name(String, u32),
+    /// `base.field` (struct field, FB output, or method ref in calls).
+    Member(Box<Expr>, String, u32),
+    /// `base[i, j]`
+    Index(Box<Expr>, Vec<Expr>, u32),
+    /// `p^`
+    Deref(Box<Expr>, u32),
+    Unary(UnOp, Box<Expr>, u32),
+    Binary(BinOp, Box<Expr>, Box<Expr>, u32),
+    /// `callee(args)` — callee is Name (function) or Member (method /
+    /// FB invocation). Args may be positional or named (`x := e`), plus
+    /// output bindings (`y => v`).
+    Call {
+        callee: Box<Expr>,
+        args: Vec<Arg>,
+        line: u32,
+    },
+    /// `(field := expr, ...)` struct literal (assignment RHS only).
+    StructLit(Vec<(String, Expr)>, u32),
+}
+
+impl Expr {
+    pub fn line(&self) -> u32 {
+        match self {
+            Expr::Name(_, l)
+            | Expr::Member(_, _, l)
+            | Expr::Index(_, _, l)
+            | Expr::Deref(_, l)
+            | Expr::Unary(_, _, l)
+            | Expr::Binary(_, _, _, l)
+            | Expr::Call { line: l, .. } => *l,
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Arg {
+    pub name: Option<String>,
+    /// `name => target` output binding (FB invocation outputs).
+    pub is_output: bool,
+    pub value: Expr,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Pow,
+    And,
+    Or,
+    Xor,
+    Eq,
+    Neq,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+}

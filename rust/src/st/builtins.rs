@@ -1,0 +1,51 @@
+//! Pure-math builtin implementations shared by the interpreter.
+//!
+//! Kept separate so the native engine can reuse the exact IEC semantics
+//! (e.g. REAL_TO_INT round-half-away-from-zero) when cross-validating.
+
+use super::ir::IntTy;
+
+/// IEC REAL->ANY_INT conversion: round to nearest, half away from zero
+/// (what Codesys implements), then wrap to the target width.
+#[inline]
+pub fn real_to_int(v: f64, ty: IntTy) -> i64 {
+    let r = if v >= 0.0 { (v + 0.5).floor() } else { (v - 0.5).ceil() };
+    ty.wrap(r as i64)
+}
+
+/// TRUNC: toward zero.
+#[inline]
+pub fn trunc_to_int(v: f64) -> i64 {
+    v.trunc() as i64
+}
+
+/// FLOOR: toward negative infinity.
+#[inline]
+pub fn floor_to_int(v: f64) -> i64 {
+    v.floor() as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_to_int_rounds_half_away() {
+        assert_eq!(real_to_int(2.5, IntTy::Dint), 3);
+        assert_eq!(real_to_int(-2.5, IntTy::Dint), -3);
+        assert_eq!(real_to_int(2.4, IntTy::Dint), 2);
+        assert_eq!(real_to_int(-2.4, IntTy::Dint), -2);
+    }
+
+    #[test]
+    fn real_to_int_wraps_width() {
+        assert_eq!(real_to_int(200.0, IntTy::Sint), IntTy::Sint.wrap(200));
+    }
+
+    #[test]
+    fn trunc_and_floor() {
+        assert_eq!(trunc_to_int(2.9), 2);
+        assert_eq!(trunc_to_int(-2.9), -2);
+        assert_eq!(floor_to_int(-2.1), -3);
+    }
+}

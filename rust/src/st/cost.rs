@@ -1,0 +1,111 @@
+//! Abstract instruction-cost metering.
+//!
+//! The interpreter counts architecture-independent operation classes;
+//! [`crate::plc::profiles`] maps the counters to per-device CPU time
+//! using cost vectors calibrated on the paper's published anchors
+//! (DESIGN.md §9). This is how one ST execution yields *both* the
+//! WAGO-PFC100 and the BeagleBone-Black timelines of Fig. 4.
+
+/// Operation counters accumulated during interpretation.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Meter {
+    /// Variable/array/pointer reads.
+    pub loads: u64,
+    /// Variable/array/pointer writes.
+    pub stores: u64,
+    /// f32/f64 add/sub.
+    pub fp_add: u64,
+    /// f32/f64 multiply.
+    pub fp_mul: u64,
+    /// f32/f64 divide.
+    pub fp_div: u64,
+    /// Transcendental calls (EXP, LN, SQRT, trig, POW).
+    pub fp_trans: u64,
+    /// Integer/bool ALU operations.
+    pub int_ops: u64,
+    /// Integer/bool comparisons.
+    pub cmp: u64,
+    /// Floating-point comparisons (expensive on non-pipelined VFP —
+    /// the §6.2 reason the f32 IF-skip does not pay off).
+    pub fp_cmp: u64,
+    /// Taken control-flow decisions (if/case/loop back-edges).
+    pub branches: u64,
+    /// POU calls (functions, methods, FB bodies).
+    pub calls: u64,
+    /// Bytes copied by VAR_INPUT call-by-value + array/struct assigns.
+    pub copy_bytes: u64,
+    /// Int<->float conversions.
+    pub converts: u64,
+    /// File-I/O operations (BINARR/ARRBIN calls).
+    pub io_calls: u64,
+    /// Bytes moved through file I/O.
+    pub io_bytes: u64,
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total abstract operations (excludes copy/io byte counts).
+    pub fn total_ops(&self) -> u64 {
+        self.loads
+            + self.stores
+            + self.fp_add
+            + self.fp_mul
+            + self.fp_div
+            + self.fp_trans
+            + self.int_ops
+            + self.cmp
+            + self.fp_cmp
+            + self.branches
+            + self.calls
+            + self.converts
+    }
+
+    /// Counter delta `self - earlier` (panics if counters went backwards).
+    pub fn since(&self, earlier: &Meter) -> Meter {
+        Meter {
+            loads: self.loads - earlier.loads,
+            stores: self.stores - earlier.stores,
+            fp_add: self.fp_add - earlier.fp_add,
+            fp_mul: self.fp_mul - earlier.fp_mul,
+            fp_div: self.fp_div - earlier.fp_div,
+            fp_trans: self.fp_trans - earlier.fp_trans,
+            int_ops: self.int_ops - earlier.int_ops,
+            cmp: self.cmp - earlier.cmp,
+            fp_cmp: self.fp_cmp - earlier.fp_cmp,
+            branches: self.branches - earlier.branches,
+            calls: self.calls - earlier.calls,
+            copy_bytes: self.copy_bytes - earlier.copy_bytes,
+            converts: self.converts - earlier.converts,
+            io_calls: self.io_calls - earlier.io_calls,
+            io_bytes: self.io_bytes - earlier.io_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn since_computes_delta() {
+        let mut a = Meter::new();
+        a.loads = 10;
+        a.fp_mul = 4;
+        let mut b = a.clone();
+        b.loads = 25;
+        b.fp_mul = 9;
+        let d = b.since(&a);
+        assert_eq!(d.loads, 15);
+        assert_eq!(d.fp_mul, 5);
+        assert_eq!(d.stores, 0);
+    }
+
+    #[test]
+    fn total_ops_sums_op_classes() {
+        let m = Meter { loads: 1, stores: 2, fp_add: 3, ..Meter::default() };
+        assert_eq!(m.total_ops(), 6);
+    }
+}

@@ -1,0 +1,1281 @@
+//! Tree-walking interpreter for the lowered IR.
+//!
+//! Models a non-optimizing vendor ST runtime (the paper's §5.4 finding:
+//! "the ICS code compilation process prioritizes predictability over
+//! performance") while metering abstract instruction costs for the PLC
+//! timing model.
+//!
+//! Memory model: globals + an FB-instance arena (all statically
+//! allocated at load, IEC-style). `VAR_INPUT` aggregate arguments are
+//! deep-copied (bytes metered); `VAR_IN_OUT` and POINTER values alias.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use super::builtins;
+use super::cost::Meter;
+use super::ir::*;
+use super::value::Value;
+
+/// Runtime failure with source-line context.
+#[derive(Debug, Clone)]
+pub struct RuntimeError {
+    pub line: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "runtime error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+fn rerr(line: u32, msg: impl Into<String>) -> RuntimeError {
+    RuntimeError { line, message: msg.into() }
+}
+
+/// One live FB (or program) instance.
+#[derive(Debug, Clone)]
+pub struct FbInstance {
+    /// FB type id, or `usize::MAX` for program instances.
+    pub fb_id: usize,
+    pub fields: Vec<Value>,
+}
+
+/// Control-flow signal from statement execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Flow {
+    Normal,
+    Exit,
+    Continue,
+    Return,
+}
+
+/// Execution context for one frame.
+struct Cx {
+    frame: Vec<Value>,
+    self_idx: Option<usize>,
+}
+
+/// The ST virtual machine.
+pub struct Interp {
+    pub unit: Rc<Unit>,
+    pub globals: Vec<Value>,
+    pub instances: Vec<FbInstance>,
+    /// Arena index of each program's instance (parallel to
+    /// `unit.programs`).
+    pub program_instances: Vec<usize>,
+    pub meter: Meter,
+    /// Base directory for BINARR/ARRBIN file access.
+    pub io_dir: PathBuf,
+    /// Frame pool: recycled `Vec<Value>` allocations for POU calls
+    /// (the interpreter's hottest allocation site — see
+    /// EXPERIMENTS.md §Perf).
+    frame_pool: Vec<Vec<Value>>,
+}
+
+impl Interp {
+    /// Instantiate a compiled unit: allocate globals, program instances,
+    /// and every FB instance they declare.
+    pub fn new(unit: Unit) -> Self {
+        let unit = Rc::new(unit);
+        let mut interp = Interp {
+            unit: unit.clone(),
+            globals: Vec::new(),
+            instances: Vec::new(),
+            program_instances: Vec::new(),
+            meter: Meter::new(),
+            io_dir: PathBuf::from("."),
+            frame_pool: Vec::new(),
+        };
+        for g in &unit.globals {
+            let v = interp.instantiate_value(&g.ty, &g.init);
+            interp.globals.push(v);
+        }
+        for p in &unit.programs {
+            let fields: Vec<Value> = p
+                .fields
+                .iter()
+                .map(|f| interp.instantiate_value(&f.ty, &f.init))
+                .collect();
+            let idx = interp.instances.len();
+            interp.instances.push(FbInstance { fb_id: usize::MAX, fields });
+            interp.program_instances.push(idx);
+        }
+        interp
+    }
+
+    /// Set the BINARR/ARRBIN base directory.
+    pub fn with_io_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.io_dir = dir.into();
+        self
+    }
+
+    /// Create a runtime value; FB-typed declarations allocate an arena
+    /// instance (recursively for the FB's own fields — which sema
+    /// guarantees contain no further FBs).
+    fn instantiate_value(&mut self, ty: &Ty, init: &Value) -> Value {
+        if let Ty::Fb(fb_id) = ty {
+            let fb = &self.unit.clone().fbs[*fb_id];
+            let fields: Vec<Value> =
+                fb.fields.iter().map(|f| f.init.deep_clone()).collect();
+            let idx = self.instances.len();
+            self.instances.push(FbInstance { fb_id: *fb_id, fields });
+            return Value::FbRef(idx);
+        }
+        init.deep_clone()
+    }
+
+    // ------------------------------------------------------- host API
+    pub fn program_instance(&self, name: &str) -> Option<usize> {
+        let pid = self.unit.find_program(name)?;
+        Some(self.program_instances[pid])
+    }
+
+    /// Read a field of an arena instance by name (program VARs included).
+    pub fn instance_field(&self, inst: usize, field: &str) -> Option<Value> {
+        let fi = self.field_index(inst, field)?;
+        Some(self.instances[inst].fields[fi].clone())
+    }
+
+    pub fn set_instance_field(
+        &mut self,
+        inst: usize,
+        field: &str,
+        value: Value,
+    ) -> Result<(), RuntimeError> {
+        let fi = self
+            .field_index(inst, field)
+            .ok_or_else(|| rerr(0, format!("no field {field}")))?;
+        self.instances[inst].fields[fi] = value;
+        Ok(())
+    }
+
+    fn field_index(&self, inst: usize, field: &str) -> Option<usize> {
+        let i = &self.instances[inst];
+        let defs = if i.fb_id == usize::MAX {
+            let pid = self
+                .program_instances
+                .iter()
+                .position(|&x| x == inst)?;
+            &self.unit.programs[pid].fields
+        } else {
+            &self.unit.fbs[i.fb_id].fields
+        };
+        defs.iter().position(|f| f.name.eq_ignore_ascii_case(field))
+    }
+
+    pub fn global(&self, name: &str) -> Option<Value> {
+        self.unit.find_global(name).map(|g| self.globals[g].clone())
+    }
+
+    pub fn set_global(&mut self, name: &str, value: Value) -> bool {
+        match self.unit.find_global(name) {
+            Some(g) => {
+                self.globals[g] = value;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run a PROGRAM body once (one "scan" of that task).
+    pub fn run_program(&mut self, name: &str) -> Result<(), RuntimeError> {
+        let pid = self
+            .unit
+            .find_program(name)
+            .ok_or_else(|| rerr(0, format!("no program {name}")))?;
+        let inst = self.program_instances[pid];
+        let fd = self.unit.clone();
+        let fd = &fd.programs[pid].body;
+        self.run_func(fd, Vec::new(), Some(inst))?;
+        Ok(())
+    }
+
+    /// Call a FUNCTION by name with host-supplied arguments.
+    pub fn call_function(
+        &mut self,
+        name: &str,
+        args: Vec<Value>,
+    ) -> Result<Value, RuntimeError> {
+        let fid = self
+            .unit
+            .find_function(name)
+            .ok_or_else(|| rerr(0, format!("no function {name}")))?;
+        let unit = self.unit.clone();
+        let fd = &unit.funcs[fid];
+        self.run_func(fd, args, None)
+    }
+
+    /// Call a method on an arena instance by name.
+    pub fn call_method(
+        &mut self,
+        inst: usize,
+        method: &str,
+        args: Vec<Value>,
+    ) -> Result<Value, RuntimeError> {
+        let fb_id = self.instances[inst].fb_id;
+        let unit = self.unit.clone();
+        let fb = &unit.fbs[fb_id];
+        let midx = fb
+            .methods
+            .iter()
+            .position(|m| m.name.eq_ignore_ascii_case(method))
+            .ok_or_else(|| rerr(0, format!("no method {method}")))?;
+        self.run_func(&fb.methods[midx], args, Some(inst))
+    }
+
+    // ------------------------------------------------------ execution
+    /// Build a frame and run a POU body. `args` bind input (+inout)
+    /// slots; inputs are deep-copied per IEC call-by-value (metered).
+    fn run_func(
+        &mut self,
+        fd: &FuncDef,
+        args: Vec<Value>,
+        self_idx: Option<usize>,
+    ) -> Result<Value, RuntimeError> {
+        self.meter.calls += 1;
+        if args.len() != fd.n_inputs + fd.n_inouts {
+            return Err(rerr(
+                0,
+                format!(
+                    "{}: expected {} args, got {}",
+                    fd.name,
+                    fd.n_inputs + fd.n_inouts,
+                    args.len()
+                ),
+            ));
+        }
+        let mut frame: Vec<Value> =
+            self.frame_pool.pop().unwrap_or_default();
+        frame.clear();
+        frame.reserve(fd.slots.len());
+        frame.push(fd.slots[0].init.deep_clone()); // return slot
+        for (i, a) in args.into_iter().enumerate() {
+            if i < fd.n_inputs {
+                // call-by-value: aggregates copied, bytes metered
+                match &a {
+                    Value::ArrF32(_)
+                    | Value::ArrF64(_)
+                    | Value::ArrInt(_)
+                    | Value::ArrRef(_)
+                    | Value::Struct(_) => {
+                        self.meter.copy_bytes += a.byte_size();
+                        frame.push(a.deep_clone());
+                    }
+                    _ => frame.push(a),
+                }
+            } else {
+                frame.push(a); // VAR_IN_OUT: shares the handle
+            }
+        }
+        for slot in fd.slots.iter().skip(frame.len()) {
+            frame.push(slot.init.deep_clone());
+        }
+        let mut cx = Cx { frame, self_idx };
+        let flow = self.exec_block(&fd.body, &mut cx);
+        let ret = cx.frame.swap_remove(0);
+        cx.frame.clear();
+        self.frame_pool.push(cx.frame);
+        flow?;
+        Ok(ret)
+    }
+
+    fn exec_block(&mut self, body: &[St], cx: &mut Cx) -> Result<Flow, RuntimeError> {
+        for st in body {
+            match self.exec_stmt(st, cx)? {
+                Flow::Normal => {}
+                f => return Ok(f),
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn exec_stmt(&mut self, st: &St, cx: &mut Cx) -> Result<Flow, RuntimeError> {
+        match st {
+            St::Assign(lv, e, copy) => {
+                let v = self.eval(e, cx)?;
+                self.assign(lv, v, *copy, cx)?;
+                Ok(Flow::Normal)
+            }
+            St::If(arms, else_body) => {
+                self.meter.branches += 1;
+                for (cond, body) in arms {
+                    if self.eval(cond, cx)?.bool() {
+                        return self.exec_block(body, cx);
+                    }
+                }
+                self.exec_block(else_body, cx)
+            }
+            St::Case(scrut, arms, else_body) => {
+                self.meter.branches += 1;
+                let v = self.eval(scrut, cx)?.int();
+                for (ranges, body) in arms {
+                    if ranges.iter().any(|(lo, hi)| v >= *lo && v <= *hi) {
+                        return self.exec_block(body, cx);
+                    }
+                }
+                self.exec_block(else_body, cx)
+            }
+            St::For { var, from, to, by, body } => {
+                let from = self.eval(from, cx)?.int();
+                let to = self.eval(to, cx)?.int();
+                let step = match by {
+                    Some(b) => self.eval(b, cx)?.int(),
+                    None => 1,
+                };
+                if step == 0 {
+                    return Err(rerr(0, "FOR step of 0"));
+                }
+                let mut i = from;
+                loop {
+                    if (step > 0 && i > to) || (step < 0 && i < to) {
+                        break;
+                    }
+                    self.meter.branches += 1;
+                    self.assign(var, Value::Int(i), false, cx)?;
+                    match self.exec_block(body, cx)? {
+                        Flow::Exit => break,
+                        Flow::Return => return Ok(Flow::Return),
+                        _ => {}
+                    }
+                    self.meter.int_ops += 1;
+                    i += step;
+                }
+                Ok(Flow::Normal)
+            }
+            St::While(cond, body) => {
+                loop {
+                    self.meter.branches += 1;
+                    if !self.eval(cond, cx)?.bool() {
+                        break;
+                    }
+                    match self.exec_block(body, cx)? {
+                        Flow::Exit => break,
+                        Flow::Return => return Ok(Flow::Return),
+                        _ => {}
+                    }
+                }
+                Ok(Flow::Normal)
+            }
+            St::Repeat(body, until) => {
+                loop {
+                    match self.exec_block(body, cx)? {
+                        Flow::Exit => break,
+                        Flow::Return => return Ok(Flow::Return),
+                        _ => {}
+                    }
+                    self.meter.branches += 1;
+                    if self.eval(until, cx)?.bool() {
+                        break;
+                    }
+                }
+                Ok(Flow::Normal)
+            }
+            St::Exit => Ok(Flow::Exit),
+            St::Continue => Ok(Flow::Continue),
+            St::Return => Ok(Flow::Return),
+            St::Expr(e) => {
+                self.eval(e, cx)?;
+                Ok(Flow::Normal)
+            }
+            St::FbInvoke { fb, fb_id, inputs, outputs, line } => {
+                let inst = match self.eval(fb, cx)? {
+                    Value::FbRef(h) => h,
+                    _ => return Err(rerr(*line, "FB instance not bound")),
+                };
+                for (fidx, e, copy) in inputs {
+                    let v = self.eval(e, cx)?;
+                    self.store_field(inst, *fidx as usize, v, *copy)?;
+                }
+                let unit = self.unit.clone();
+                let body = unit.fbs[*fb_id]
+                    .body
+                    .as_ref()
+                    .ok_or_else(|| rerr(*line, "FB has no body"))?;
+                self.run_func(body, Vec::new(), Some(inst))?;
+                for (fidx, lv) in outputs {
+                    let v = self.instances[inst].fields[*fidx as usize].clone();
+                    let copy = matches!(
+                        v,
+                        Value::ArrF32(_) | Value::ArrF64(_) | Value::ArrInt(_)
+                            | Value::ArrRef(_) | Value::Struct(_)
+                    );
+                    self.assign(lv, v, copy, cx)?;
+                }
+                Ok(Flow::Normal)
+            }
+        }
+    }
+
+    fn store_field(
+        &mut self,
+        inst: usize,
+        fidx: usize,
+        v: Value,
+        copy: bool,
+    ) -> Result<(), RuntimeError> {
+        self.meter.stores += 1;
+        if copy {
+            self.meter.copy_bytes += v.byte_size();
+            let dst = self.instances[inst].fields[fidx].clone();
+            copy_into(&v, &dst)?;
+        } else {
+            self.instances[inst].fields[fidx] = v;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------ assignment
+    fn assign(
+        &mut self,
+        lv: &Lv,
+        v: Value,
+        copy: bool,
+        cx: &mut Cx,
+    ) -> Result<(), RuntimeError> {
+        self.meter.stores += 1;
+        match lv {
+            Lv::Local(s) => {
+                if copy {
+                    self.meter.copy_bytes += v.byte_size();
+                    let dst = cx.frame[*s as usize].clone();
+                    copy_into(&v, &dst)?;
+                } else {
+                    cx.frame[*s as usize] = v;
+                }
+                Ok(())
+            }
+            Lv::Global(g) => {
+                if copy {
+                    self.meter.copy_bytes += v.byte_size();
+                    let dst = self.globals[*g as usize].clone();
+                    copy_into(&v, &dst)?;
+                } else {
+                    self.globals[*g as usize] = v;
+                }
+                Ok(())
+            }
+            Lv::SelfField(f) => {
+                let inst = cx
+                    .self_idx
+                    .ok_or_else(|| rerr(0, "no self in this context"))?;
+                self.store_field(inst, *f as usize, v, copy)
+            }
+            Lv::Field(base, f) => {
+                let b = self.eval(base, cx)?;
+                match b {
+                    Value::Struct(s) => {
+                        if copy {
+                            self.meter.copy_bytes += v.byte_size();
+                            let dst = s.borrow()[*f as usize].clone();
+                            copy_into(&v, &dst)?;
+                        } else {
+                            s.borrow_mut()[*f as usize] = v;
+                        }
+                        Ok(())
+                    }
+                    _ => Err(rerr(0, "field store on non-struct")),
+                }
+            }
+            Lv::FbField(base, f) => {
+                let b = self.eval(base, cx)?;
+                match b {
+                    Value::FbRef(h) => self.store_field(h, *f as usize, v, copy),
+                    _ => Err(rerr(0, "FB instance not bound")),
+                }
+            }
+            Lv::Idx(base, idx, len, kind, line) => {
+                let b = self.eval(base, cx)?;
+                let i = self.eval(idx, cx)?.int();
+                if i < 0 || i as u32 >= *len {
+                    return Err(rerr(
+                        *line,
+                        format!("array index {i} out of bounds (len {len})"),
+                    ));
+                }
+                let i = i as usize;
+                match (kind, &b, v) {
+                    (ElemKind::F32, Value::ArrF32(a), Value::Real(x)) => {
+                        a.borrow_mut()[i] = x;
+                        Ok(())
+                    }
+                    (ElemKind::F64, Value::ArrF64(a), Value::LReal(x)) => {
+                        a.borrow_mut()[i] = x;
+                        Ok(())
+                    }
+                    (ElemKind::Int, Value::ArrInt(a), Value::Int(x)) => {
+                        a.borrow_mut()[i] = x;
+                        Ok(())
+                    }
+                    (ElemKind::Int, Value::ArrInt(a), Value::Bool(x)) => {
+                        a.borrow_mut()[i] = x as i64;
+                        Ok(())
+                    }
+                    (ElemKind::Ref, Value::ArrRef(a), x) => {
+                        a.borrow_mut()[i] = x;
+                        Ok(())
+                    }
+                    _ => Err(rerr(*line, "array element store type mismatch")),
+                }
+            }
+            Lv::PtrAt(base, off, kind, line) => {
+                let p = self.eval(base, cx)?;
+                let extra = match off {
+                    Some(o) => self.eval(o, cx)?.int(),
+                    None => 0,
+                };
+                if extra < 0 {
+                    return Err(rerr(*line, "negative pointer offset"));
+                }
+                match (kind, &p, v) {
+                    (PtrKind::F32, Value::PtrF32(a, base_off), Value::Real(x)) => {
+                        let i = base_off + extra as usize;
+                        let mut arr = a.borrow_mut();
+                        if i >= arr.len() {
+                            return Err(rerr(*line, "pointer store out of bounds"));
+                        }
+                        arr[i] = x;
+                        Ok(())
+                    }
+                    (PtrKind::F64, Value::PtrF64(a, base_off), Value::LReal(x)) => {
+                        let i = base_off + extra as usize;
+                        let mut arr = a.borrow_mut();
+                        if i >= arr.len() {
+                            return Err(rerr(*line, "pointer store out of bounds"));
+                        }
+                        arr[i] = x;
+                        Ok(())
+                    }
+                    (PtrKind::Int, Value::PtrInt(a, base_off), Value::Int(x)) => {
+                        let i = base_off + extra as usize;
+                        let mut arr = a.borrow_mut();
+                        if i >= arr.len() {
+                            return Err(rerr(*line, "pointer store out of bounds"));
+                        }
+                        arr[i] = x;
+                        Ok(())
+                    }
+                    (_, Value::Null, _) => {
+                        Err(rerr(*line, "null pointer store"))
+                    }
+                    _ => Err(rerr(*line, "pointer store type mismatch")),
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------ evaluation
+    fn eval(&mut self, e: &Ex, cx: &mut Cx) -> Result<Value, RuntimeError> {
+        Ok(match e {
+            Ex::KBool(b) => Value::Bool(*b),
+            Ex::KInt(v) => Value::Int(*v),
+            Ex::KReal(v) => Value::Real(*v),
+            Ex::KLReal(v) => Value::LReal(*v),
+            Ex::KStr(s) => Value::Str(s.clone()),
+            Ex::KNull => Value::Null,
+            Ex::Local(s) => {
+                self.meter.loads += 1;
+                cx.frame[*s as usize].clone()
+            }
+            Ex::Global(g) => {
+                self.meter.loads += 1;
+                self.globals[*g as usize].clone()
+            }
+            Ex::SelfField(f) => {
+                self.meter.loads += 1;
+                let inst = cx
+                    .self_idx
+                    .ok_or_else(|| rerr(0, "no self in this context"))?;
+                self.instances[inst].fields[*f as usize].clone()
+            }
+            Ex::Field(base, f) => {
+                self.meter.loads += 1;
+                match self.eval(base, cx)? {
+                    Value::Struct(s) => s.borrow()[*f as usize].clone(),
+                    _ => return Err(rerr(0, "field read on non-struct")),
+                }
+            }
+            Ex::FbField(base, f) => {
+                self.meter.loads += 1;
+                match self.eval(base, cx)? {
+                    Value::FbRef(h) => {
+                        self.instances[h].fields[*f as usize].clone()
+                    }
+                    _ => return Err(rerr(0, "FB instance not bound")),
+                }
+            }
+            Ex::Idx(base, idx, len, kind, line) => {
+                let b = self.eval(base, cx)?;
+                let i = self.eval(idx, cx)?.int();
+                self.meter.loads += 1;
+                if i < 0 || i as u32 >= *len {
+                    return Err(rerr(
+                        *line,
+                        format!("array index {i} out of bounds (len {len})"),
+                    ));
+                }
+                let i = i as usize;
+                match (kind, &b) {
+                    (ElemKind::F32, Value::ArrF32(a)) => {
+                        Value::Real(a.borrow()[i])
+                    }
+                    (ElemKind::F64, Value::ArrF64(a)) => {
+                        Value::LReal(a.borrow()[i])
+                    }
+                    (ElemKind::Int, Value::ArrInt(a)) => {
+                        Value::Int(a.borrow()[i])
+                    }
+                    (ElemKind::Ref, Value::ArrRef(a)) => a.borrow()[i].clone(),
+                    _ => return Err(rerr(*line, "array read type mismatch")),
+                }
+            }
+            Ex::PtrLoad(base, off, kind, line) => {
+                let p = self.eval(base, cx)?;
+                let extra = match off {
+                    Some(o) => self.eval(o, cx)?.int(),
+                    None => 0,
+                };
+                self.meter.loads += 1;
+                if extra < 0 {
+                    return Err(rerr(*line, "negative pointer offset"));
+                }
+                match (kind, &p) {
+                    (PtrKind::F32, Value::PtrF32(a, base_off)) => {
+                        let arr = a.borrow();
+                        let i = base_off + extra as usize;
+                        if i >= arr.len() {
+                            return Err(rerr(*line, "pointer read out of bounds"));
+                        }
+                        Value::Real(arr[i])
+                    }
+                    (PtrKind::F64, Value::PtrF64(a, base_off)) => {
+                        let arr = a.borrow();
+                        let i = base_off + extra as usize;
+                        if i >= arr.len() {
+                            return Err(rerr(*line, "pointer read out of bounds"));
+                        }
+                        Value::LReal(arr[i])
+                    }
+                    (PtrKind::Int, Value::PtrInt(a, base_off)) => {
+                        let arr = a.borrow();
+                        let i = base_off + extra as usize;
+                        if i >= arr.len() {
+                            return Err(rerr(*line, "pointer read out of bounds"));
+                        }
+                        Value::Int(arr[i])
+                    }
+                    (_, Value::Null) => {
+                        return Err(rerr(*line, "null pointer read"))
+                    }
+                    _ => return Err(rerr(*line, "pointer read type mismatch")),
+                }
+            }
+            Ex::Adr(lv, kind) => {
+                self.meter.int_ops += 1;
+                self.adr(lv, *kind, cx)?
+            }
+            Ex::NegF32(x) => {
+                self.meter.fp_add += 1;
+                Value::Real(-self.eval(x, cx)?.real())
+            }
+            Ex::NegF64(x) => {
+                self.meter.fp_add += 1;
+                Value::LReal(-self.eval(x, cx)?.lreal())
+            }
+            Ex::NegInt(x) => {
+                self.meter.int_ops += 1;
+                Value::Int(-self.eval(x, cx)?.int())
+            }
+            Ex::Not(x) => {
+                self.meter.int_ops += 1;
+                Value::Bool(!self.eval(x, cx)?.bool())
+            }
+            Ex::Arith(op, kind, a, b, line) => self.arith(*op, *kind, a, b, *line, cx)?,
+            Ex::Cmp(op, kind, a, b) => {
+                match kind {
+                    NumKind::Int => self.meter.cmp += 1,
+                    _ => self.meter.fp_cmp += 1,
+                }
+                let av = self.eval(a, cx)?;
+                let bv = self.eval(b, cx)?;
+                let r = match kind {
+                    NumKind::F32 => cmp_ord(*op, av.real().partial_cmp(&bv.real())),
+                    NumKind::F64 => {
+                        cmp_ord(*op, av.lreal().partial_cmp(&bv.lreal()))
+                    }
+                    NumKind::Int => cmp_ord(*op, Some(av.int().cmp(&bv.int()))),
+                };
+                Value::Bool(r)
+            }
+            Ex::CmpBool(op, a, b) => {
+                self.meter.cmp += 1;
+                let av = self.eval(a, cx)?.bool();
+                let bv = self.eval(b, cx)?.bool();
+                Value::Bool(match op {
+                    CmpOp::Eq => av == bv,
+                    CmpOp::Neq => av != bv,
+                    _ => return Err(rerr(0, "ordering on BOOL")),
+                })
+            }
+            Ex::BoolB(op, a, b) => {
+                self.meter.int_ops += 1;
+                let av = self.eval(a, cx)?.bool();
+                let bv = self.eval(b, cx)?.bool();
+                Value::Bool(match op {
+                    BoolOp::And => av && bv,
+                    BoolOp::Or => av || bv,
+                    BoolOp::Xor => av ^ bv,
+                })
+            }
+            Ex::IntB(op, a, b) => {
+                self.meter.int_ops += 1;
+                let av = self.eval(a, cx)?.int();
+                let bv = self.eval(b, cx)?.int();
+                Value::Int(match op {
+                    BoolOp::And => av & bv,
+                    BoolOp::Or => av | bv,
+                    BoolOp::Xor => av ^ bv,
+                })
+            }
+            Ex::IntToF32(x) => {
+                self.meter.converts += 1;
+                Value::Real(self.eval(x, cx)?.int() as f32)
+            }
+            Ex::IntToF64(x) => {
+                self.meter.converts += 1;
+                Value::LReal(self.eval(x, cx)?.int() as f64)
+            }
+            Ex::F32ToF64(x) => {
+                self.meter.converts += 1;
+                Value::LReal(self.eval(x, cx)?.real() as f64)
+            }
+            Ex::F64ToF32(x) => {
+                self.meter.converts += 1;
+                Value::Real(self.eval(x, cx)?.lreal() as f32)
+            }
+            Ex::F32ToInt(x, it) => {
+                self.meter.converts += 1;
+                Value::Int(builtins::real_to_int(self.eval(x, cx)?.real() as f64, *it))
+            }
+            Ex::F64ToInt(x, it) => {
+                self.meter.converts += 1;
+                Value::Int(builtins::real_to_int(self.eval(x, cx)?.lreal(), *it))
+            }
+            Ex::IntNarrow(x, it) => {
+                self.meter.converts += 1;
+                Value::Int(it.wrap(self.eval(x, cx)?.int()))
+            }
+            Ex::BoolToInt(x) => {
+                self.meter.converts += 1;
+                Value::Int(self.eval(x, cx)?.bool() as i64)
+            }
+            Ex::CallFn(fid, args) => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a, cx)?);
+                }
+                let unit = self.unit.clone();
+                self.run_func(&unit.funcs[*fid], vals, None)?
+            }
+            Ex::CallMethod(fb_id, midx, self_e, args) => {
+                let inst = match self.eval(self_e, cx)? {
+                    Value::FbRef(h) => h,
+                    _ => return Err(rerr(0, "FB instance not bound")),
+                };
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a, cx)?);
+                }
+                let unit = self.unit.clone();
+                self.run_func(&unit.fbs[*fb_id].methods[*midx], vals, Some(inst))?
+            }
+            Ex::CallIface(iid, mid, self_e, args, line) => {
+                let inst = match self.eval(self_e, cx)? {
+                    Value::FbRef(h) => h,
+                    Value::Null => {
+                        return Err(rerr(*line, "interface variable is not bound"))
+                    }
+                    _ => return Err(rerr(*line, "bad interface value")),
+                };
+                let fb_id = self.instances[inst].fb_id;
+                let unit = self.unit.clone();
+                let table = unit.fbs[fb_id].vtables[*iid]
+                    .as_ref()
+                    .ok_or_else(|| {
+                        rerr(
+                            *line,
+                            format!(
+                                "{} does not implement {}",
+                                unit.fbs[fb_id].name, unit.ifaces[*iid].name
+                            ),
+                        )
+                    })?;
+                let midx = table[*mid];
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a, cx)?);
+                }
+                self.run_func(&unit.fbs[fb_id].methods[midx], vals, Some(inst))?
+            }
+            Ex::Intrinsic(b, kind, args, line) => {
+                self.intrinsic(*b, *kind, args, *line, cx)?
+            }
+            Ex::StructLit(sid, fields) => {
+                let unit = self.unit.clone();
+                let mut vals: Vec<Value> = unit.structs[*sid]
+                    .fields
+                    .iter()
+                    .map(|f| f.init.deep_clone())
+                    .collect();
+                for (idx, e) in fields {
+                    vals[*idx as usize] = self.eval(e, cx)?;
+                    self.meter.stores += 1;
+                }
+                Value::Struct(std::rc::Rc::new(std::cell::RefCell::new(vals)))
+            }
+        })
+    }
+
+    fn adr(&mut self, lv: &Lv, kind: PtrKind, cx: &mut Cx) -> Result<Value, RuntimeError> {
+        // Resolve the lvalue's backing storage; offset = element index
+        // when applied to an array element.
+        let (base_val, offset) = match lv {
+            Lv::Local(s) => (cx.frame[*s as usize].clone(), 0usize),
+            Lv::Global(g) => (self.globals[*g as usize].clone(), 0),
+            Lv::SelfField(f) => {
+                let inst = cx
+                    .self_idx
+                    .ok_or_else(|| rerr(0, "no self in this context"))?;
+                (self.instances[inst].fields[*f as usize].clone(), 0)
+            }
+            Lv::Field(base, f) => match self.eval(base, cx)? {
+                Value::Struct(s) => (s.borrow()[*f as usize].clone(), 0),
+                _ => return Err(rerr(0, "ADR through non-struct")),
+            },
+            Lv::FbField(base, f) => match self.eval(base, cx)? {
+                Value::FbRef(h) => {
+                    (self.instances[h].fields[*f as usize].clone(), 0)
+                }
+                _ => return Err(rerr(0, "FB instance not bound")),
+            },
+            Lv::Idx(base, idx, len, _, line) => {
+                let b = self.eval(base, cx)?;
+                let i = self.eval(idx, cx)?.int();
+                if i < 0 || i as u32 >= *len {
+                    return Err(rerr(*line, "ADR index out of bounds"));
+                }
+                (b, i as usize)
+            }
+            Lv::PtrAt(base, off, _, line) => {
+                // ADR(p[i]) — pointer arithmetic.
+                let p = self.eval(base, cx)?;
+                let extra = match off {
+                    Some(o) => self.eval(o, cx)?.int(),
+                    None => 0,
+                };
+                if extra < 0 {
+                    return Err(rerr(*line, "negative pointer offset"));
+                }
+                return Ok(match (kind, p) {
+                    (PtrKind::F32, Value::PtrF32(a, o)) => {
+                        Value::PtrF32(a, o + extra as usize)
+                    }
+                    (PtrKind::F64, Value::PtrF64(a, o)) => {
+                        Value::PtrF64(a, o + extra as usize)
+                    }
+                    (PtrKind::Int, Value::PtrInt(a, o)) => {
+                        Value::PtrInt(a, o + extra as usize)
+                    }
+                    (_, Value::Null) => {
+                        return Err(rerr(*line, "ADR through null pointer"))
+                    }
+                    _ => return Err(rerr(*line, "ADR pointer kind mismatch")),
+                });
+            }
+        };
+        Ok(match (kind, base_val) {
+            (PtrKind::F32, Value::ArrF32(a)) => Value::PtrF32(a, offset),
+            (PtrKind::F64, Value::ArrF64(a)) => Value::PtrF64(a, offset),
+            (PtrKind::Int, Value::ArrInt(a)) => Value::PtrInt(a, offset),
+            (_, other) => {
+                return Err(rerr(0, format!("ADR of unsupported value {other:?}")))
+            }
+        })
+    }
+
+    fn arith(
+        &mut self,
+        op: ArithOp,
+        kind: NumKind,
+        a: &Ex,
+        b: &Ex,
+        line: u32,
+        cx: &mut Cx,
+    ) -> Result<Value, RuntimeError> {
+        let av = self.eval(a, cx)?;
+        let bv = self.eval(b, cx)?;
+        Ok(match kind {
+            NumKind::F32 => {
+                let (x, y) = (av.real(), bv.real());
+                Value::Real(match op {
+                    ArithOp::Add => {
+                        self.meter.fp_add += 1;
+                        x + y
+                    }
+                    ArithOp::Sub => {
+                        self.meter.fp_add += 1;
+                        x - y
+                    }
+                    ArithOp::Mul => {
+                        self.meter.fp_mul += 1;
+                        x * y
+                    }
+                    ArithOp::Div => {
+                        self.meter.fp_div += 1;
+                        x / y
+                    }
+                    ArithOp::Pow => {
+                        self.meter.fp_trans += 1;
+                        x.powf(y)
+                    }
+                    ArithOp::Mod => return Err(rerr(line, "MOD on REAL")),
+                })
+            }
+            NumKind::F64 => {
+                let (x, y) = (av.lreal(), bv.lreal());
+                Value::LReal(match op {
+                    ArithOp::Add => {
+                        self.meter.fp_add += 1;
+                        x + y
+                    }
+                    ArithOp::Sub => {
+                        self.meter.fp_add += 1;
+                        x - y
+                    }
+                    ArithOp::Mul => {
+                        self.meter.fp_mul += 1;
+                        x * y
+                    }
+                    ArithOp::Div => {
+                        self.meter.fp_div += 1;
+                        x / y
+                    }
+                    ArithOp::Pow => {
+                        self.meter.fp_trans += 1;
+                        x.powf(y)
+                    }
+                    ArithOp::Mod => return Err(rerr(line, "MOD on LREAL")),
+                })
+            }
+            NumKind::Int => {
+                self.meter.int_ops += 1;
+                let (x, y) = (av.int(), bv.int());
+                Value::Int(match op {
+                    ArithOp::Add => x.wrapping_add(y),
+                    ArithOp::Sub => x.wrapping_sub(y),
+                    ArithOp::Mul => x.wrapping_mul(y),
+                    ArithOp::Div => {
+                        if y == 0 {
+                            return Err(rerr(line, "integer division by zero"));
+                        }
+                        x.wrapping_div(y)
+                    }
+                    ArithOp::Mod => {
+                        if y == 0 {
+                            return Err(rerr(line, "MOD by zero"));
+                        }
+                        x.wrapping_rem(y)
+                    }
+                    ArithOp::Pow => {
+                        self.meter.fp_trans += 1;
+                        (x as f64).powf(y as f64) as i64
+                    }
+                })
+            }
+        })
+    }
+
+    fn intrinsic(
+        &mut self,
+        b: Builtin,
+        kind: NumKind,
+        args: &[Ex],
+        line: u32,
+        cx: &mut Cx,
+    ) -> Result<Value, RuntimeError> {
+        match b {
+            Builtin::BinArr | Builtin::ArrBin => {
+                return self.file_io(b, args, line, cx)
+            }
+            _ => {}
+        }
+        let mut vals = Vec::with_capacity(args.len());
+        for a in args {
+            vals.push(self.eval(a, cx)?);
+        }
+        let as_f64 = |v: &Value| match kind {
+            NumKind::F32 => v.real() as f64,
+            NumKind::F64 => v.lreal(),
+            NumKind::Int => v.int() as f64,
+        };
+        let wrap = |x: f64| match kind {
+            NumKind::F32 => Value::Real(x as f32),
+            NumKind::F64 => Value::LReal(x),
+            NumKind::Int => Value::Int(x as i64),
+        };
+        Ok(match b {
+            Builtin::Abs => {
+                self.meter.int_ops += 1;
+                match kind {
+                    NumKind::Int => Value::Int(vals[0].int().abs()),
+                    _ => wrap(as_f64(&vals[0]).abs()),
+                }
+            }
+            Builtin::Sqrt => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).sqrt())
+            }
+            Builtin::Exp => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).exp())
+            }
+            Builtin::Ln => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).ln())
+            }
+            Builtin::Log => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).log10())
+            }
+            Builtin::Sin => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).sin())
+            }
+            Builtin::Cos => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).cos())
+            }
+            Builtin::Tan => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).tan())
+            }
+            Builtin::Atan => {
+                self.meter.fp_trans += 1;
+                wrap(as_f64(&vals[0]).atan())
+            }
+            Builtin::Min => {
+                self.meter.cmp += 1;
+                match kind {
+                    NumKind::Int => Value::Int(vals[0].int().min(vals[1].int())),
+                    _ => wrap(as_f64(&vals[0]).min(as_f64(&vals[1]))),
+                }
+            }
+            Builtin::Max => {
+                self.meter.cmp += 1;
+                match kind {
+                    NumKind::Int => Value::Int(vals[0].int().max(vals[1].int())),
+                    _ => wrap(as_f64(&vals[0]).max(as_f64(&vals[1]))),
+                }
+            }
+            Builtin::Limit => {
+                self.meter.cmp += 2;
+                match kind {
+                    NumKind::Int => Value::Int(
+                        vals[1].int().clamp(vals[0].int(), vals[2].int()),
+                    ),
+                    _ => wrap(
+                        as_f64(&vals[1])
+                            .clamp(as_f64(&vals[0]), as_f64(&vals[2])),
+                    ),
+                }
+            }
+            Builtin::Trunc => {
+                self.meter.converts += 1;
+                Value::Int(builtins::trunc_to_int(as_f64(&vals[0])))
+            }
+            Builtin::Floor => {
+                self.meter.converts += 1;
+                Value::Int(builtins::floor_to_int(as_f64(&vals[0])))
+            }
+            Builtin::BinArr | Builtin::ArrBin => unreachable!(),
+        })
+    }
+
+    /// BINARR / ARRBIN: the framework's binary file I/O utilities.
+    /// Signature: (file: STRING, bytes: ANY_INT, dst/src: POINTER,
+    /// elem_bytes: const) — the last arg is synthesized by lowering.
+    fn file_io(
+        &mut self,
+        b: Builtin,
+        args: &[Ex],
+        line: u32,
+        cx: &mut Cx,
+    ) -> Result<Value, RuntimeError> {
+        let fname = match self.eval(&args[0], cx)? {
+            Value::Str(s) => s,
+            _ => return Err(rerr(line, "BINARR/ARRBIN: filename not a STRING")),
+        };
+        let bytes = self.eval(&args[1], cx)?.int();
+        let ptr = self.eval(&args[2], cx)?;
+        let elem_bytes = match args.get(3) {
+            Some(e) => self.eval(e, cx)?.int() as usize,
+            None => 4,
+        };
+        if bytes < 0 {
+            return Err(rerr(line, "negative byte count"));
+        }
+        let bytes = bytes as usize;
+        let path = self.io_dir.join(fname.as_ref());
+        self.meter.io_calls += 1;
+        self.meter.io_bytes += bytes as u64;
+        let n = bytes / elem_bytes;
+
+        match (b, &ptr) {
+            (Builtin::BinArr, Value::PtrF32(a, off)) => {
+                let data = std::fs::read(&path).map_err(|e| {
+                    rerr(line, format!("BINARR {}: {e}", path.display()))
+                })?;
+                if data.len() < bytes {
+                    return Err(rerr(line, "BINARR: file smaller than requested"));
+                }
+                let mut arr = a.borrow_mut();
+                if off + n > arr.len() {
+                    return Err(rerr(line, "BINARR: destination overflow"));
+                }
+                for (i, c) in data[..bytes].chunks_exact(4).enumerate() {
+                    arr[off + i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Ok(Value::Bool(true))
+            }
+            (Builtin::BinArr, Value::PtrInt(a, off)) => {
+                let data = std::fs::read(&path).map_err(|e| {
+                    rerr(line, format!("BINARR {}: {e}", path.display()))
+                })?;
+                if data.len() < bytes {
+                    return Err(rerr(line, "BINARR: file smaller than requested"));
+                }
+                let mut arr = a.borrow_mut();
+                if off + n > arr.len() {
+                    return Err(rerr(line, "BINARR: destination overflow"));
+                }
+                for i in 0..n {
+                    let chunk = &data[i * elem_bytes..(i + 1) * elem_bytes];
+                    arr[off + i] = match elem_bytes {
+                        1 => chunk[0] as i8 as i64,
+                        2 => i16::from_le_bytes([chunk[0], chunk[1]]) as i64,
+                        4 => i32::from_le_bytes([
+                            chunk[0], chunk[1], chunk[2], chunk[3],
+                        ]) as i64,
+                        8 => i64::from_le_bytes(chunk.try_into().unwrap()),
+                        _ => return Err(rerr(line, "bad element width")),
+                    };
+                }
+                Ok(Value::Bool(true))
+            }
+            (Builtin::ArrBin, Value::PtrF32(a, off)) => {
+                let arr = a.borrow();
+                if off + n > arr.len() {
+                    return Err(rerr(line, "ARRBIN: source overflow"));
+                }
+                let mut out = Vec::with_capacity(bytes);
+                for i in 0..n {
+                    out.extend_from_slice(&arr[off + i].to_le_bytes());
+                }
+                std::fs::write(&path, out).map_err(|e| {
+                    rerr(line, format!("ARRBIN {}: {e}", path.display()))
+                })?;
+                Ok(Value::Bool(true))
+            }
+            (Builtin::ArrBin, Value::PtrInt(a, off)) => {
+                let arr = a.borrow();
+                if off + n > arr.len() {
+                    return Err(rerr(line, "ARRBIN: source overflow"));
+                }
+                let mut out = Vec::with_capacity(bytes);
+                for i in 0..n {
+                    let v = arr[off + i];
+                    match elem_bytes {
+                        1 => out.push(v as u8),
+                        2 => out.extend_from_slice(&(v as i16).to_le_bytes()),
+                        4 => out.extend_from_slice(&(v as i32).to_le_bytes()),
+                        8 => out.extend_from_slice(&v.to_le_bytes()),
+                        _ => return Err(rerr(line, "bad element width")),
+                    }
+                }
+                std::fs::write(&path, out).map_err(|e| {
+                    rerr(line, format!("ARRBIN {}: {e}", path.display()))
+                })?;
+                Ok(Value::Bool(true))
+            }
+            (_, Value::Null) => Err(rerr(line, "null pointer in file I/O")),
+            _ => Err(rerr(line, "unsupported pointer kind in file I/O")),
+        }
+    }
+}
+
+fn cmp_ord(op: CmpOp, ord: Option<std::cmp::Ordering>) -> bool {
+    use std::cmp::Ordering::*;
+    match (op, ord) {
+        (CmpOp::Eq, Some(Equal)) => true,
+        (CmpOp::Neq, Some(Less)) | (CmpOp::Neq, Some(Greater)) => true,
+        (CmpOp::Lt, Some(Less)) => true,
+        (CmpOp::Gt, Some(Greater)) => true,
+        (CmpOp::Le, Some(Less)) | (CmpOp::Le, Some(Equal)) => true,
+        (CmpOp::Ge, Some(Greater)) | (CmpOp::Ge, Some(Equal)) => true,
+        _ => false,
+    }
+}
+
+/// Copy `src` into `dst`'s existing storage (ST value semantics: array
+/// assignment fills the destination's fixed memory, keeping pointers to
+/// it valid). No-op on self-assignment.
+fn copy_into(src: &Value, dst: &Value) -> Result<(), RuntimeError> {
+    match (src, dst) {
+        (Value::ArrF32(s), Value::ArrF32(d)) => {
+            if !Rc::ptr_eq(s, d) {
+                d.borrow_mut().copy_from_slice(&s.borrow());
+            }
+            Ok(())
+        }
+        (Value::ArrF64(s), Value::ArrF64(d)) => {
+            if !Rc::ptr_eq(s, d) {
+                d.borrow_mut().copy_from_slice(&s.borrow());
+            }
+            Ok(())
+        }
+        (Value::ArrInt(s), Value::ArrInt(d)) => {
+            if !Rc::ptr_eq(s, d) {
+                d.borrow_mut().copy_from_slice(&s.borrow());
+            }
+            Ok(())
+        }
+        (Value::ArrRef(s), Value::ArrRef(d)) => {
+            if !Rc::ptr_eq(s, d) {
+                d.borrow_mut().clone_from_slice(&s.borrow());
+            }
+            Ok(())
+        }
+        (Value::Struct(s), Value::Struct(d)) => {
+            if Rc::ptr_eq(s, d) {
+                return Ok(());
+            }
+            let sb = s.borrow();
+            let mut db = d.borrow_mut();
+            for (sv, dv) in sb.iter().zip(db.iter_mut()) {
+                match (sv, &*dv) {
+                    (
+                        Value::ArrF32(_) | Value::ArrF64(_) | Value::ArrInt(_)
+                        | Value::ArrRef(_) | Value::Struct(_),
+                        _,
+                    ) => copy_into(sv, dv)?,
+                    _ => *dv = sv.clone(),
+                }
+            }
+            Ok(())
+        }
+        _ => Err(rerr(0, "aggregate copy type mismatch")),
+    }
+}

@@ -1,0 +1,414 @@
+//! Slot-resolved executable IR produced by [`super::lower`].
+//!
+//! All names are resolved to indices, all types are checked, constant
+//! expressions (array bounds, VAR CONSTANT) are folded, and operators
+//! are specialized per representation — the interpreter does no name or
+//! type resolution at runtime.
+
+use std::rc::Rc;
+
+use super::value::Value;
+
+/// IEC integer widths (share `i64` runtime storage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntTy {
+    Sint,
+    Usint,
+    Int,
+    Uint,
+    Dint,
+    Udint,
+    Lint,
+    Ulint,
+    Byte,
+    Word,
+    Dword,
+}
+
+impl IntTy {
+    pub fn bytes(self) -> u32 {
+        match self {
+            IntTy::Sint | IntTy::Usint | IntTy::Byte => 1,
+            IntTy::Int | IntTy::Uint | IntTy::Word => 2,
+            IntTy::Dint | IntTy::Udint | IntTy::Dword => 4,
+            IntTy::Lint | IntTy::Ulint => 8,
+        }
+    }
+
+    pub fn signed(self) -> bool {
+        matches!(self, IntTy::Sint | IntTy::Int | IntTy::Dint | IntTy::Lint)
+    }
+
+    /// Wrap an i64 into this width's value range (IEC overflow
+    /// semantics on explicit conversion).
+    pub fn wrap(self, v: i64) -> i64 {
+        let bits = self.bytes() * 8;
+        if bits == 64 {
+            return v;
+        }
+        let m = (1i64 << bits) - 1;
+        let w = v & m;
+        if self.signed() && (w >> (bits - 1)) & 1 == 1 {
+            w - (1i64 << bits)
+        } else {
+            w
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IntTy::Sint => "SINT",
+            IntTy::Usint => "USINT",
+            IntTy::Int => "INT",
+            IntTy::Uint => "UINT",
+            IntTy::Dint => "DINT",
+            IntTy::Udint => "UDINT",
+            IntTy::Lint => "LINT",
+            IntTy::Ulint => "ULINT",
+            IntTy::Byte => "BYTE",
+            IntTy::Word => "WORD",
+            IntTy::Dword => "DWORD",
+        }
+    }
+}
+
+/// Checked types.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Ty {
+    Bool,
+    Int(IntTy),
+    Real,
+    LReal,
+    Str,
+    Arr(Box<Ty>, Rc<Vec<(i64, i64)>>),
+    Struct(usize),
+    Fb(usize),
+    Iface(usize),
+    Ptr(Box<Ty>),
+}
+
+impl Ty {
+    /// Total element count for arrays.
+    pub fn arr_len(&self) -> Option<usize> {
+        match self {
+            Ty::Arr(_, dims) => Some(
+                dims.iter()
+                    .map(|(lo, hi)| (hi - lo + 1).max(0) as usize)
+                    .product(),
+            ),
+            _ => None,
+        }
+    }
+
+    /// Byte size per SIZEOF (struct sizes computed against `unit`).
+    pub fn byte_size(&self, unit: &Unit) -> u64 {
+        match self {
+            Ty::Bool => 1,
+            Ty::Int(it) => it.bytes() as u64,
+            Ty::Real => 4,
+            Ty::LReal => 8,
+            Ty::Str => 81, // default STRING(80) + terminator, Codesys-style
+            Ty::Arr(elem, _) => {
+                elem.byte_size(unit) * self.arr_len().unwrap_or(0) as u64
+            }
+            Ty::Struct(id) => unit.structs[*id]
+                .fields
+                .iter()
+                .map(|f| f.ty.byte_size(unit))
+                .sum(),
+            Ty::Fb(_) | Ty::Iface(_) | Ty::Ptr(_) => 8,
+        }
+    }
+}
+
+/// Array element representation kind (for specialized index ops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemKind {
+    F32,
+    F64,
+    Int,
+    Ref,
+}
+
+/// Pointer target representation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PtrKind {
+    F32,
+    F64,
+    Int,
+}
+
+/// Numeric representation for a binary op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumKind {
+    F32,
+    F64,
+    Int,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Pow,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Neq,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoolOp {
+    And,
+    Or,
+    Xor,
+}
+
+/// Intrinsic (builtin) operations lowered from calls by name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Builtin {
+    Abs,
+    Sqrt,
+    Exp,
+    Ln,
+    Log,
+    Sin,
+    Cos,
+    Tan,
+    Atan,
+    Min,
+    Max,
+    Limit,
+    Trunc,
+    Floor,
+    /// BINARR(filename, byte_count, pointer): file -> memory.
+    BinArr,
+    /// ARRBIN(filename, byte_count, pointer): memory -> file.
+    ArrBin,
+}
+
+/// Typed expressions.
+#[derive(Debug, Clone)]
+pub enum Ex {
+    KBool(bool),
+    KInt(i64),
+    KReal(f32),
+    KLReal(f64),
+    KStr(Rc<str>),
+    KNull,
+    /// Frame slot read.
+    Local(u16),
+    /// Unit global read.
+    Global(u16),
+    /// Field of the active FB/program instance.
+    SelfField(u16),
+    /// Struct field read: `base.field` where base evaluates to Struct.
+    Field(Box<Ex>, u16),
+    /// FB instance field read: base evaluates to FbRef.
+    FbField(Box<Ex>, u16),
+    /// `base[flat_index]` with bounds check against `len`.
+    Idx(Box<Ex>, Box<Ex>, u32, ElemKind, u32),
+    /// Pointer load `p^` / `p[i]` (offset expr optional).
+    PtrLoad(Box<Ex>, Option<Box<Ex>>, PtrKind, u32),
+    /// ADR(lvalue-of-array / array element).
+    Adr(Box<Lv>, PtrKind),
+    NegF32(Box<Ex>),
+    NegF64(Box<Ex>),
+    NegInt(Box<Ex>),
+    Not(Box<Ex>),
+    Arith(ArithOp, NumKind, Box<Ex>, Box<Ex>, u32),
+    Cmp(CmpOp, NumKind, Box<Ex>, Box<Ex>),
+    CmpBool(CmpOp, Box<Ex>, Box<Ex>),
+    BoolB(BoolOp, Box<Ex>, Box<Ex>),
+    /// Bitwise AND/OR/XOR on integers (ANY_BIT).
+    IntB(BoolOp, Box<Ex>, Box<Ex>),
+    /// Conversions.
+    IntToF32(Box<Ex>),
+    IntToF64(Box<Ex>),
+    F32ToF64(Box<Ex>),
+    F64ToF32(Box<Ex>),
+    /// REAL->int with IEC round-to-nearest.
+    F32ToInt(Box<Ex>, IntTy),
+    F64ToInt(Box<Ex>, IntTy),
+    /// Integer width conversion (wraps).
+    IntNarrow(Box<Ex>, IntTy),
+    /// BOOL -> integer 0/1.
+    BoolToInt(Box<Ex>),
+    /// Struct literal: fresh struct from type defaults + field values.
+    StructLit(usize, Vec<(u16, Ex)>),
+    /// Function call; bool per arg marks VAR_IN_OUT (by reference — no
+    /// copy; otherwise deep-copied + metered).
+    CallFn(usize, Vec<Ex>),
+    /// Direct FB method call: (fb type, method index, self, args).
+    CallMethod(usize, usize, Box<Ex>, Vec<Ex>),
+    /// Interface-dispatched call: (iface, iface method id, self, args).
+    CallIface(usize, usize, Box<Ex>, Vec<Ex>, u32),
+    Intrinsic(Builtin, NumKind, Vec<Ex>, u32),
+}
+
+/// Assignable places.
+#[derive(Debug, Clone)]
+pub enum Lv {
+    Local(u16),
+    Global(u16),
+    SelfField(u16),
+    Field(Box<Ex>, u16),
+    FbField(Box<Ex>, u16),
+    Idx(Box<Ex>, Box<Ex>, u32, ElemKind, u32),
+    PtrAt(Box<Ex>, Option<Box<Ex>>, PtrKind, u32),
+}
+
+/// Statements.
+#[derive(Debug, Clone)]
+pub enum St {
+    /// `copy` true => deep-copy assignment (array/struct), metered.
+    Assign(Lv, Ex, bool),
+    If(Vec<(Ex, Vec<St>)>, Vec<St>),
+    Case(Ex, Vec<(Rc<Vec<(i64, i64)>>, Vec<St>)>, Vec<St>),
+    For {
+        var: Lv,
+        from: Ex,
+        to: Ex,
+        by: Option<Ex>,
+        body: Vec<St>,
+    },
+    While(Ex, Vec<St>),
+    Repeat(Vec<St>, Ex),
+    Exit,
+    Continue,
+    Return,
+    Expr(Ex),
+    /// FB invocation: assign inputs, run body, bind outputs.
+    FbInvoke {
+        fb: Ex,
+        fb_id: usize,
+        inputs: Vec<(u16, Ex, bool)>,
+        outputs: Vec<(u16, Lv)>,
+        line: u32,
+    },
+}
+
+/// Variable (slot / field) definition.
+#[derive(Debug, Clone)]
+pub struct VarDef {
+    pub name: String,
+    pub ty: Ty,
+    /// Initial value template (deep-cloned on frame/instance creation).
+    pub init: Value,
+}
+
+/// A compiled POU body (function, method, FB body, or program body).
+#[derive(Debug, Clone)]
+pub struct FuncDef {
+    pub name: String,
+    /// Frame slot layout: slot 0 = return value (if any), then inputs,
+    /// then in-outs, then locals.
+    pub slots: Vec<VarDef>,
+    pub has_ret: bool,
+    pub n_inputs: usize,
+    pub n_inouts: usize,
+    pub body: Vec<St>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StructDef {
+    pub name: String,
+    pub fields: Vec<VarDef>,
+}
+
+#[derive(Debug, Clone)]
+pub struct IfaceDef {
+    pub name: String,
+    /// Method names in declaration order (ids are indices).
+    pub methods: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FbDef {
+    pub name: String,
+    pub fields: Vec<VarDef>,
+    pub methods: Vec<FuncDef>,
+    /// Optional FB body (runs on `inst(...)`), compiled like a method.
+    pub body: Option<FuncDef>,
+    /// Input/output field indices for FB invocation argument binding.
+    pub input_fields: Vec<u16>,
+    pub output_fields: Vec<u16>,
+    /// vtables\[iface_id\] = Some(method index per iface method id).
+    pub vtables: Vec<Option<Vec<usize>>>,
+}
+
+/// A compiled PROGRAM: persistent fields + body.
+#[derive(Debug, Clone)]
+pub struct ProgramDef {
+    pub name: String,
+    pub fields: Vec<VarDef>,
+    pub body: FuncDef,
+}
+
+/// A fully lowered compilation unit.
+#[derive(Debug, Default, Clone)]
+pub struct Unit {
+    pub structs: Vec<StructDef>,
+    pub ifaces: Vec<IfaceDef>,
+    pub fbs: Vec<FbDef>,
+    pub funcs: Vec<FuncDef>,
+    pub programs: Vec<ProgramDef>,
+    pub globals: Vec<VarDef>,
+}
+
+impl Unit {
+    pub fn find_program(&self, name: &str) -> Option<usize> {
+        self.programs
+            .iter()
+            .position(|p| p.name.eq_ignore_ascii_case(name))
+    }
+
+    pub fn find_function(&self, name: &str) -> Option<usize> {
+        self.funcs
+            .iter()
+            .position(|f| f.name.eq_ignore_ascii_case(name))
+    }
+
+    pub fn find_global(&self, name: &str) -> Option<usize> {
+        self.globals
+            .iter()
+            .position(|g| g.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_wrap_semantics() {
+        assert_eq!(IntTy::Sint.wrap(130), -126);
+        assert_eq!(IntTy::Usint.wrap(-1), 255);
+        assert_eq!(IntTy::Int.wrap(40_000), 40_000 - 65_536);
+        assert_eq!(IntTy::Uint.wrap(-1), 65_535);
+        assert_eq!(IntTy::Dint.wrap(1), 1);
+        assert_eq!(IntTy::Lint.wrap(i64::MIN), i64::MIN);
+    }
+
+    #[test]
+    fn ty_sizes() {
+        let unit = Unit::default();
+        assert_eq!(Ty::Real.byte_size(&unit), 4);
+        assert_eq!(Ty::Int(IntTy::Sint).byte_size(&unit), 1);
+        let arr = Ty::Arr(Box::new(Ty::Real), Rc::new(vec![(0, 9)]));
+        assert_eq!(arr.byte_size(&unit), 40);
+        assert_eq!(arr.arr_len(), Some(10));
+        let arr2 =
+            Ty::Arr(Box::new(Ty::Real), Rc::new(vec![(0, 1), (0, 2)]));
+        assert_eq!(arr2.arr_len(), Some(6));
+    }
+}

@@ -1,0 +1,481 @@
+//! Structured Text lexer.
+//!
+//! IEC 61131-3 notes honored here:
+//! * Keywords and identifiers are **case-insensitive** (normalized to
+//!   upper-case for keywords; identifiers keep their spelling but compare
+//!   case-insensitively downstream).
+//! * Comments: `(* ... *)` (nesting allowed) and `//` line comments.
+//! * Literals: `123`, `16#FF`, `2#1010`, `1.5`, `1.0E-3`, typed literals
+//!   `REAL#1.5` / `INT#-4`, strings `'...'` with `$` escapes, `TRUE` /
+//!   `FALSE`.
+
+use std::fmt;
+
+/// Token kinds. Keywords arrive as `Kw(&'static str)` (upper-case).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    Ident(String),
+    Kw(&'static str),
+    Int(i64),
+    Real(f64),
+    /// `TYPE#literal` — (type name upper-cased, raw literal text).
+    Typed(String, String),
+    Str(String),
+    // punctuation / operators
+    Assign,     // :=
+    Arrow,      // =>
+    Range,      // ..
+    Plus, Minus, Star, Slash, Power, // **
+    Eq, Neq, Lt, Gt, Le, Ge,
+    LParen, RParen, LBracket, RBracket,
+    Comma, Semi, Colon, Dot, Caret, Hash,
+}
+
+/// Token with 1-based line/column for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// All reserved words we recognize (upper-case).
+pub const KEYWORDS: &[&str] = &[
+    "PROGRAM", "END_PROGRAM", "FUNCTION", "END_FUNCTION", "FUNCTION_BLOCK",
+    "END_FUNCTION_BLOCK", "METHOD", "END_METHOD", "INTERFACE",
+    "END_INTERFACE", "IMPLEMENTS", "EXTENDS", "TYPE", "END_TYPE", "STRUCT",
+    "END_STRUCT", "VAR", "VAR_INPUT", "VAR_OUTPUT", "VAR_IN_OUT",
+    "VAR_GLOBAL", "VAR_TEMP", "END_VAR", "CONSTANT", "RETAIN", "AT",
+    "ARRAY", "OF", "POINTER", "TO", "STRING",
+    "IF", "THEN", "ELSIF", "ELSE", "END_IF", "CASE", "END_CASE",
+    "FOR", "BY", "DO", "END_FOR", "WHILE", "END_WHILE", "REPEAT",
+    "UNTIL", "END_REPEAT", "EXIT", "RETURN", "CONTINUE",
+    "AND", "OR", "XOR", "NOT", "MOD",
+    "TRUE", "FALSE", "NULL",
+    "BOOL", "SINT", "INT", "DINT", "LINT", "USINT", "UINT", "UDINT",
+    "ULINT", "BYTE", "WORD", "DWORD", "LWORD", "REAL", "LREAL", "TIME",
+];
+
+/// Lex failure with position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexError {
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}", self.line, self.col, self.message)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+/// Tokenize ST source.
+pub fn lex(source: &str) -> Result<Vec<Token>, LexError> {
+    let mut lx = Lexer { src: source.as_bytes(), i: 0, line: 1, col: 1 };
+    let mut out = Vec::new();
+    loop {
+        lx.skip_trivia()?;
+        if lx.i >= lx.src.len() {
+            return Ok(out);
+        }
+        let (line, col) = (lx.line, lx.col);
+        let kind = lx.token()?;
+        out.push(Token { kind, line, col });
+    }
+}
+
+impl<'a> Lexer<'a> {
+    fn err(&self, msg: impl Into<String>) -> LexError {
+        LexError { line: self.line, col: self.col, message: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.i).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.i + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn skip_trivia(&mut self) -> Result<(), LexError> {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'/') if self.peek2() == Some(b'/') => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                Some(b'(') if self.peek2() == Some(b'*') => {
+                    self.bump();
+                    self.bump();
+                    let mut depth = 1usize;
+                    loop {
+                        match (self.peek(), self.peek2()) {
+                            (Some(b'*'), Some(b')')) => {
+                                self.bump();
+                                self.bump();
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            (Some(b'('), Some(b'*')) => {
+                                self.bump();
+                                self.bump();
+                                depth += 1;
+                            }
+                            (Some(_), _) => {
+                                self.bump();
+                            }
+                            (None, _) => {
+                                return Err(self.err("unterminated comment"));
+                            }
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn token(&mut self) -> Result<TokenKind, LexError> {
+        let c = self.peek().unwrap();
+        match c {
+            b'A'..=b'Z' | b'a'..=b'z' | b'_' => self.word(),
+            b'0'..=b'9' => self.number(),
+            b'\'' => self.string(),
+            _ => self.punct(),
+        }
+    }
+
+    fn word(&mut self) -> Result<TokenKind, LexError> {
+        let start = self.i;
+        while self
+            .peek()
+            .map(|c| c.is_ascii_alphanumeric() || c == b'_')
+            .unwrap_or(false)
+        {
+            self.bump();
+        }
+        let text = std::str::from_utf8(&self.src[start..self.i]).unwrap();
+        let upper = text.to_ascii_uppercase();
+        // Typed literal: TYPE#value (e.g. REAL#1.5, INT#-3, 16#FF handled
+        // in number()).
+        if self.peek() == Some(b'#') {
+            self.bump();
+            let lit_start = self.i;
+            if self.peek() == Some(b'-') || self.peek() == Some(b'+') {
+                self.bump();
+            }
+            while self
+                .peek()
+                .map(|c| c.is_ascii_alphanumeric() || c == b'.' || c == b'_')
+                .unwrap_or(false)
+            {
+                self.bump();
+            }
+            let lit = std::str::from_utf8(&self.src[lit_start..self.i])
+                .unwrap()
+                .to_string();
+            if lit.is_empty() {
+                return Err(self.err("empty typed literal"));
+            }
+            return Ok(TokenKind::Typed(upper, lit));
+        }
+        if let Some(kw) = KEYWORDS.iter().find(|k| **k == upper) {
+            return Ok(TokenKind::Kw(kw));
+        }
+        Ok(TokenKind::Ident(text.to_string()))
+    }
+
+    fn number(&mut self) -> Result<TokenKind, LexError> {
+        let start = self.i;
+        while self.peek().map(|c| c.is_ascii_digit() || c == b'_').unwrap_or(false)
+        {
+            self.bump();
+        }
+        // Based literal: 16#FF, 2#1010_1010, 8#777
+        if self.peek() == Some(b'#') {
+            let base_txt = std::str::from_utf8(&self.src[start..self.i]).unwrap();
+            let base: u32 = base_txt
+                .replace('_', "")
+                .parse()
+                .map_err(|_| self.err(format!("bad numeric base {base_txt:?}")))?;
+            if ![2, 8, 16].contains(&base) {
+                return Err(self.err(format!("unsupported base {base}")));
+            }
+            self.bump(); // '#'
+            let dstart = self.i;
+            while self
+                .peek()
+                .map(|c| c.is_ascii_alphanumeric() || c == b'_')
+                .unwrap_or(false)
+            {
+                self.bump();
+            }
+            let digits = std::str::from_utf8(&self.src[dstart..self.i])
+                .unwrap()
+                .replace('_', "");
+            let v = i64::from_str_radix(&digits, base)
+                .map_err(|_| self.err(format!("bad base-{base} literal")))?;
+            return Ok(TokenKind::Int(v));
+        }
+        // Real part? Careful: `1..2` is Int(1) Range Int(2).
+        let mut is_real = false;
+        if self.peek() == Some(b'.')
+            && self.peek2().map(|c| c.is_ascii_digit()).unwrap_or(false)
+        {
+            is_real = true;
+            self.bump();
+            while self.peek().map(|c| c.is_ascii_digit() || c == b'_').unwrap_or(false)
+            {
+                self.bump();
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            let save = (self.i, self.line, self.col);
+            self.bump();
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.bump();
+            }
+            if self.peek().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                is_real = true;
+                while self.peek().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                    self.bump();
+                }
+            } else {
+                (self.i, self.line, self.col) = save;
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.i])
+            .unwrap()
+            .replace('_', "");
+        if is_real {
+            text.parse::<f64>()
+                .map(TokenKind::Real)
+                .map_err(|_| self.err(format!("bad real literal {text:?}")))
+        } else {
+            text.parse::<i64>()
+                .map(TokenKind::Int)
+                .map_err(|_| self.err(format!("bad integer literal {text:?}")))
+        }
+    }
+
+    fn string(&mut self) -> Result<TokenKind, LexError> {
+        self.bump(); // opening '
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'\'') => return Ok(TokenKind::Str(s)),
+                Some(b'$') => match self.bump() {
+                    Some(b'\'') => s.push('\''),
+                    Some(b'$') => s.push('$'),
+                    Some(b'N') | Some(b'n') => s.push('\n'),
+                    Some(b'T') | Some(b't') => s.push('\t'),
+                    Some(b'R') | Some(b'r') => s.push('\r'),
+                    _ => return Err(self.err("bad $ escape in string")),
+                },
+                Some(c) => s.push(c as char),
+            }
+        }
+    }
+
+    fn punct(&mut self) -> Result<TokenKind, LexError> {
+        let c = self.bump().unwrap();
+        let two = |lx: &mut Self, next: u8, yes: TokenKind, no: TokenKind| {
+            if lx.peek() == Some(next) {
+                lx.bump();
+                yes
+            } else {
+                no
+            }
+        };
+        Ok(match c {
+            b':' => two(self, b'=', TokenKind::Assign, TokenKind::Colon),
+            b'=' => two(self, b'>', TokenKind::Arrow, TokenKind::Eq),
+            b'<' => {
+                if self.peek() == Some(b'=') {
+                    self.bump();
+                    TokenKind::Le
+                } else if self.peek() == Some(b'>') {
+                    self.bump();
+                    TokenKind::Neq
+                } else {
+                    TokenKind::Lt
+                }
+            }
+            b'>' => two(self, b'=', TokenKind::Ge, TokenKind::Gt),
+            b'.' => two(self, b'.', TokenKind::Range, TokenKind::Dot),
+            b'*' => two(self, b'*', TokenKind::Power, TokenKind::Star),
+            b'+' => TokenKind::Plus,
+            b'-' => TokenKind::Minus,
+            b'/' => TokenKind::Slash,
+            b'(' => TokenKind::LParen,
+            b')' => TokenKind::RParen,
+            b'[' => TokenKind::LBracket,
+            b']' => TokenKind::RBracket,
+            b',' => TokenKind::Comma,
+            b';' => TokenKind::Semi,
+            b'^' => TokenKind::Caret,
+            b'#' => TokenKind::Hash,
+            other => {
+                return Err(self.err(format!(
+                    "unexpected character {:?}",
+                    other as char
+                )))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn keywords_case_insensitive() {
+        assert_eq!(kinds("if If iF IF"), vec![TokenKind::Kw("IF"); 4]);
+    }
+
+    #[test]
+    fn idents_keep_spelling() {
+        assert_eq!(
+            kinds("myVar"),
+            vec![TokenKind::Ident("myVar".to_string())]
+        );
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(
+            kinds("42 1.5 1.0E-3 16#FF 2#1010 1_000"),
+            vec![
+                TokenKind::Int(42),
+                TokenKind::Real(1.5),
+                TokenKind::Real(1.0e-3),
+                TokenKind::Int(255),
+                TokenKind::Int(10),
+                TokenKind::Int(1000),
+            ]
+        );
+    }
+
+    #[test]
+    fn range_vs_real() {
+        assert_eq!(
+            kinds("0..10"),
+            vec![TokenKind::Int(0), TokenKind::Range, TokenKind::Int(10)]
+        );
+        assert_eq!(
+            kinds("ARRAY[0..L1_size - 1]")[..3],
+            [
+                TokenKind::Kw("ARRAY"),
+                TokenKind::LBracket,
+                TokenKind::Int(0)
+            ]
+        );
+    }
+
+    #[test]
+    fn typed_literals() {
+        assert_eq!(
+            kinds("REAL#1.5 INT#-3"),
+            vec![
+                TokenKind::Typed("REAL".into(), "1.5".into()),
+                TokenKind::Typed("INT".into(), "-3".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_and_escapes() {
+        assert_eq!(
+            kinds("'abc' 'a$'b' '$$'"),
+            vec![
+                TokenKind::Str("abc".into()),
+                TokenKind::Str("a'b".into()),
+                TokenKind::Str("$".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments() {
+        assert_eq!(
+            kinds("1 (* c (* nested *) *) 2 // line\n3"),
+            vec![TokenKind::Int(1), TokenKind::Int(2), TokenKind::Int(3)]
+        );
+    }
+
+    #[test]
+    fn operators() {
+        assert_eq!(
+            kinds(":= => = <> <= >= < > ^ .."),
+            vec![
+                TokenKind::Assign,
+                TokenKind::Arrow,
+                TokenKind::Eq,
+                TokenKind::Neq,
+                TokenKind::Le,
+                TokenKind::Ge,
+                TokenKind::Lt,
+                TokenKind::Gt,
+                TokenKind::Caret,
+                TokenKind::Range,
+            ]
+        );
+    }
+
+    #[test]
+    fn positions_tracked() {
+        let toks = lex("a\n  b").unwrap();
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn errors_have_positions() {
+        let e = lex("a ?").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(e.message.contains("unexpected"));
+    }
+
+    #[test]
+    fn unterminated_comment_errors() {
+        assert!(lex("(* oops").is_err());
+        assert!(lex("'oops").is_err());
+    }
+}

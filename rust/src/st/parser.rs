@@ -1,0 +1,1034 @@
+//! Recursive-descent parser for the ST subset.
+//!
+//! Grammar follows IEC 61131-3 third edition (the Codesys dialect for
+//! `METHOD`/`INTERFACE`/`IMPLEMENTS`, which is what the paper's framework
+//! targets).
+
+use super::ast::*;
+use super::lexer::{Token, TokenKind as K};
+
+/// Parse failure with position.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}", self.line, self.col, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse a token stream into a [`File`].
+pub fn parse(tokens: &[Token]) -> Result<File, ParseError> {
+    let mut p = Parser { toks: tokens, i: 0 };
+    let mut file = File::default();
+    while !p.at_end() {
+        match p.peek_kw() {
+            Some("TYPE") => file.types.extend(p.type_decl()?),
+            Some("INTERFACE") => file.interfaces.push(p.interface_decl()?),
+            Some("FUNCTION_BLOCK") => {
+                file.function_blocks.push(p.fb_decl()?)
+            }
+            Some("FUNCTION") => file.functions.push(p.pou_decl("FUNCTION")?),
+            Some("PROGRAM") => file.programs.push(p.pou_decl("PROGRAM")?),
+            Some("VAR_GLOBAL") => file.globals.push(p.var_block()?),
+            _ => {
+                let t = p.cur();
+                return Err(p.err_at(
+                    t,
+                    format!("expected a top-level declaration, got {:?}", t.kind),
+                ));
+            }
+        }
+    }
+    Ok(file)
+}
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    // ------------------------------------------------------------ utils
+    fn at_end(&self) -> bool {
+        self.i >= self.toks.len()
+    }
+
+    fn cur(&self) -> &'a Token {
+        self.toks.get(self.i).unwrap_or_else(|| self.toks.last().unwrap())
+    }
+
+    fn err_at(&self, t: &Token, msg: String) -> ParseError {
+        ParseError { line: t.line, col: t.col, message: msg }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        let t = self.cur();
+        self.err_at(t, msg.into())
+    }
+
+    fn peek_kw(&self) -> Option<&'static str> {
+        match &self.toks.get(self.i)?.kind {
+            K::Kw(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if self.peek_kw() == Some(kw) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &'static str) -> Result<(), ParseError> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {kw}, got {:?}", self.cur().kind)))
+        }
+    }
+
+    fn eat(&mut self, k: &K) -> bool {
+        if !self.at_end() && &self.toks[self.i].kind == k {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, k: K) -> Result<(), ParseError> {
+        if self.eat(&k) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {k:?}, got {:?}", self.cur().kind)))
+        }
+    }
+
+    fn ident(&mut self) -> Result<(String, u32), ParseError> {
+        match &self.cur().kind {
+            K::Ident(s) => {
+                let line = self.cur().line;
+                let s = s.clone();
+                self.i += 1;
+                Ok((s, line))
+            }
+            // Type keywords may appear as conversion function names
+            // (REAL_TO_INT is an Ident, but allow e.g. `REAL` in
+            // SIZEOF(REAL)).
+            K::Kw(k)
+                if matches!(
+                    *k,
+                    "BOOL" | "SINT" | "INT" | "DINT" | "LINT" | "USINT"
+                        | "UINT" | "UDINT" | "ULINT" | "REAL" | "LREAL"
+                        | "BYTE" | "WORD" | "DWORD" | "STRING"
+                ) =>
+            {
+                let line = self.cur().line;
+                let s = k.to_string();
+                self.i += 1;
+                Ok((s, line))
+            }
+            other => Err(self.err(format!("expected identifier, got {other:?}"))),
+        }
+    }
+
+    // ----------------------------------------------------- declarations
+    /// `TYPE name : STRUCT ... END_STRUCT END_TYPE` (possibly several
+    /// struct defs inside one TYPE..END_TYPE).
+    fn type_decl(&mut self) -> Result<Vec<TypeDecl>, ParseError> {
+        self.expect_kw("TYPE")?;
+        let mut out = Vec::new();
+        while !self.eat_kw("END_TYPE") {
+            let (name, line) = self.ident()?;
+            self.expect(K::Colon)?;
+            self.expect_kw("STRUCT")?;
+            let mut fields = Vec::new();
+            while !self.eat_kw("END_STRUCT") {
+                fields.extend(self.var_decl_line()?);
+            }
+            self.eat(&K::Semi);
+            out.push(TypeDecl { name, fields, line });
+        }
+        Ok(out)
+    }
+
+    fn interface_decl(&mut self) -> Result<InterfaceDecl, ParseError> {
+        self.expect_kw("INTERFACE")?;
+        let (name, line) = self.ident()?;
+        let mut methods = Vec::new();
+        while !self.eat_kw("END_INTERFACE") {
+            self.expect_kw("METHOD")?;
+            let (mname, mline) = self.ident()?;
+            let ret = if self.eat(&K::Colon) {
+                Some(self.type_ref()?)
+            } else {
+                None
+            };
+            let mut inputs = Vec::new();
+            while self.peek_kw() == Some("VAR_INPUT") {
+                self.i += 1;
+                while !self.eat_kw("END_VAR") {
+                    inputs.extend(self.var_decl_line()?);
+                }
+            }
+            self.expect_kw("END_METHOD")?;
+            methods.push(MethodSig { name: mname, ret, inputs, line: mline });
+        }
+        Ok(InterfaceDecl { name, methods, line })
+    }
+
+    fn fb_decl(&mut self) -> Result<FbDecl, ParseError> {
+        self.expect_kw("FUNCTION_BLOCK")?;
+        let (name, line) = self.ident()?;
+        let mut implements = Vec::new();
+        if self.eat_kw("IMPLEMENTS") {
+            loop {
+                implements.push(self.ident()?.0);
+                if !self.eat(&K::Comma) {
+                    break;
+                }
+            }
+        }
+        let mut blocks = Vec::new();
+        while self.at_var_block() {
+            blocks.push(self.var_block()?);
+        }
+        let mut methods = Vec::new();
+        while self.peek_kw() == Some("METHOD") {
+            methods.push(self.method_decl()?);
+        }
+        // Optional FB body after methods (classic FB style).
+        let mut body = Vec::new();
+        while self.peek_kw() != Some("END_FUNCTION_BLOCK") {
+            if self.at_end() {
+                return Err(self.err("unterminated FUNCTION_BLOCK"));
+            }
+            body.push(self.stmt()?);
+        }
+        self.expect_kw("END_FUNCTION_BLOCK")?;
+        Ok(FbDecl { name, implements, blocks, methods, body, line })
+    }
+
+    fn method_decl(&mut self) -> Result<PouDecl, ParseError> {
+        self.expect_kw("METHOD")?;
+        let (name, line) = self.ident()?;
+        let ret = if self.eat(&K::Colon) {
+            Some(self.type_ref()?)
+        } else {
+            None
+        };
+        let mut blocks = Vec::new();
+        while self.at_var_block() {
+            blocks.push(self.var_block()?);
+        }
+        let mut body = Vec::new();
+        while self.peek_kw() != Some("END_METHOD") {
+            if self.at_end() {
+                return Err(self.err("unterminated METHOD"));
+            }
+            body.push(self.stmt()?);
+        }
+        self.expect_kw("END_METHOD")?;
+        Ok(PouDecl { name, ret, blocks, body, line })
+    }
+
+    fn pou_decl(&mut self, kw: &'static str) -> Result<PouDecl, ParseError> {
+        self.expect_kw(kw)?;
+        let (name, line) = self.ident()?;
+        let ret = if self.eat(&K::Colon) {
+            Some(self.type_ref()?)
+        } else {
+            None
+        };
+        let mut blocks = Vec::new();
+        while self.at_var_block() {
+            blocks.push(self.var_block()?);
+        }
+        let end_kw: &str = match kw {
+            "FUNCTION" => "END_FUNCTION",
+            _ => "END_PROGRAM",
+        };
+        let mut body = Vec::new();
+        while self.peek_kw() != Some(end_kw) {
+            if self.at_end() {
+                return Err(self.err(format!("unterminated {kw}")));
+            }
+            body.push(self.stmt()?);
+        }
+        self.i += 1; // end keyword
+        Ok(PouDecl { name, ret, blocks, body, line })
+    }
+
+    fn at_var_block(&self) -> bool {
+        matches!(
+            self.peek_kw(),
+            Some("VAR") | Some("VAR_INPUT") | Some("VAR_OUTPUT")
+                | Some("VAR_IN_OUT") | Some("VAR_GLOBAL") | Some("VAR_TEMP")
+        )
+    }
+
+    fn var_block(&mut self) -> Result<VarBlock, ParseError> {
+        let kind = match self.peek_kw() {
+            Some("VAR_INPUT") => VarKind::Input,
+            Some("VAR_OUTPUT") => VarKind::Output,
+            Some("VAR_IN_OUT") => VarKind::InOut,
+            Some("VAR_GLOBAL") => VarKind::Global,
+            Some("VAR") | Some("VAR_TEMP") => VarKind::Local,
+            _ => return Err(self.err("expected VAR section")),
+        };
+        self.i += 1;
+        let constant = self.eat_kw("CONSTANT");
+        self.eat_kw("RETAIN");
+        let mut decls = Vec::new();
+        while !self.eat_kw("END_VAR") {
+            decls.extend(self.var_decl_line()?);
+        }
+        Ok(VarBlock { kind, constant, decls })
+    }
+
+    /// `a, b, c : TYPE := init;`
+    fn var_decl_line(&mut self) -> Result<Vec<VarDecl>, ParseError> {
+        let mut names = Vec::new();
+        loop {
+            names.push(self.ident()?);
+            if !self.eat(&K::Comma) {
+                break;
+            }
+        }
+        self.expect(K::Colon)?;
+        let ty = self.type_ref()?;
+        let init = if self.eat(&K::Assign) {
+            Some(self.initializer()?)
+        } else {
+            None
+        };
+        self.expect(K::Semi)?;
+        Ok(names
+            .into_iter()
+            .map(|(name, line)| VarDecl {
+                name,
+                ty: ty.clone(),
+                init: init.clone(),
+                line,
+            })
+            .collect())
+    }
+
+    fn type_ref(&mut self) -> Result<TypeRef, ParseError> {
+        if self.eat_kw("ARRAY") {
+            self.expect(K::LBracket)?;
+            let mut dims = Vec::new();
+            loop {
+                let lo = self.expr()?;
+                self.expect(K::Range)?;
+                let hi = self.expr()?;
+                dims.push((lo, hi));
+                if !self.eat(&K::Comma) {
+                    break;
+                }
+            }
+            self.expect(K::RBracket)?;
+            self.expect_kw("OF")?;
+            let elem = self.type_ref()?;
+            return Ok(TypeRef::Array(dims, Box::new(elem)));
+        }
+        if self.eat_kw("POINTER") {
+            self.expect_kw("TO")?;
+            let elem = self.type_ref()?;
+            return Ok(TypeRef::Pointer(Box::new(elem)));
+        }
+        if self.eat_kw("STRING") {
+            // Optional length: STRING[80] — accepted and ignored.
+            if self.eat(&K::LBracket) {
+                self.expr()?;
+                self.expect(K::RBracket)?;
+            }
+            return Ok(TypeRef::StringTy);
+        }
+        match &self.cur().kind {
+            K::Kw(k) => {
+                let name = k.to_string();
+                self.i += 1;
+                Ok(TypeRef::Named(name))
+            }
+            K::Ident(s) => {
+                let name = s.clone();
+                self.i += 1;
+                Ok(TypeRef::Named(name))
+            }
+            other => Err(self.err(format!("expected a type, got {other:?}"))),
+        }
+    }
+
+    fn initializer(&mut self) -> Result<Initializer, ParseError> {
+        if self.eat(&K::LBracket) {
+            // [e, e, n(e), ...]
+            let mut items = Vec::new();
+            loop {
+                // `n(x)` repetition parses as a call expression (the
+                // postfix pass consumes the parens); unwrap it here.
+                match self.expr()? {
+                    Expr::Call { callee, mut args, .. }
+                        if args.len() == 1 && args[0].name.is_none() =>
+                    {
+                        items.push((Some(*callee), args.remove(0).value));
+                    }
+                    first => items.push((None, first)),
+                }
+                if !self.eat(&K::Comma) {
+                    break;
+                }
+            }
+            self.expect(K::RBracket)?;
+            return Ok(Initializer::Array(items));
+        }
+        // `(field := expr, ...)` struct initializer vs parenthesized expr:
+        // look ahead for `ident :=` after `(`.
+        if self.cur().kind == K::LParen {
+            if let (Some(K::Ident(_)), Some(K::Assign)) = (
+                self.toks.get(self.i + 1).map(|t| &t.kind),
+                self.toks.get(self.i + 2).map(|t| &t.kind),
+            ) {
+                self.i += 1;
+                let mut fields = Vec::new();
+                loop {
+                    let (name, _) = self.ident()?;
+                    self.expect(K::Assign)?;
+                    let v = self.expr()?;
+                    fields.push((name, v));
+                    if !self.eat(&K::Comma) {
+                        break;
+                    }
+                }
+                self.expect(K::RParen)?;
+                return Ok(Initializer::Struct(fields));
+            }
+        }
+        Ok(Initializer::Expr(self.expr()?))
+    }
+
+    // ------------------------------------------------------- statements
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        if self.eat(&K::Semi) {
+            return Ok(Stmt::Empty);
+        }
+        let line = self.cur().line;
+        match self.peek_kw() {
+            Some("IF") => self.if_stmt(),
+            Some("CASE") => self.case_stmt(),
+            Some("FOR") => self.for_stmt(),
+            Some("WHILE") => self.while_stmt(),
+            Some("REPEAT") => self.repeat_stmt(),
+            Some("EXIT") => {
+                self.i += 1;
+                self.expect(K::Semi)?;
+                Ok(Stmt::Exit { line })
+            }
+            Some("CONTINUE") => {
+                self.i += 1;
+                self.expect(K::Semi)?;
+                Ok(Stmt::Continue { line })
+            }
+            Some("RETURN") => {
+                self.i += 1;
+                self.expect(K::Semi)?;
+                Ok(Stmt::Return { line })
+            }
+            _ => {
+                // assignment or bare call
+                let target = self.expr()?;
+                if self.eat(&K::Assign) {
+                    let value = self.expr()?;
+                    self.expect(K::Semi)?;
+                    Ok(Stmt::Assign { target, value, line })
+                } else {
+                    self.expect(K::Semi)?;
+                    match target {
+                        e @ Expr::Call { .. } => Ok(Stmt::Call { expr: e, line }),
+                        _ => Err(ParseError {
+                            line,
+                            col: 0,
+                            message: "expected ':=' or a call statement"
+                                .to_string(),
+                        }),
+                    }
+                }
+            }
+        }
+    }
+
+    fn block_until(&mut self, stops: &[&str]) -> Result<Vec<Stmt>, ParseError> {
+        let mut out = Vec::new();
+        loop {
+            match self.peek_kw() {
+                Some(k) if stops.contains(&k) => return Ok(out),
+                _ if self.at_end() => {
+                    return Err(self.err(format!("expected one of {stops:?}")))
+                }
+                _ => out.push(self.stmt()?),
+            }
+        }
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.cur().line;
+        self.expect_kw("IF")?;
+        let mut arms = Vec::new();
+        let cond = self.expr()?;
+        self.expect_kw("THEN")?;
+        let body = self.block_until(&["ELSIF", "ELSE", "END_IF"])?;
+        arms.push((cond, body));
+        let mut else_body = Vec::new();
+        loop {
+            if self.eat_kw("ELSIF") {
+                let c = self.expr()?;
+                self.expect_kw("THEN")?;
+                let b = self.block_until(&["ELSIF", "ELSE", "END_IF"])?;
+                arms.push((c, b));
+            } else if self.eat_kw("ELSE") {
+                else_body = self.block_until(&["END_IF"])?;
+            } else {
+                self.expect_kw("END_IF")?;
+                self.eat(&K::Semi);
+                return Ok(Stmt::If { arms, else_body, line });
+            }
+        }
+    }
+
+    fn case_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.cur().line;
+        self.expect_kw("CASE")?;
+        let scrutinee = self.expr()?;
+        self.expect_kw("OF")?;
+        let mut arms = Vec::new();
+        let mut else_body = Vec::new();
+        loop {
+            if self.eat_kw("ELSE") {
+                else_body = self.block_until(&["END_CASE"])?;
+                self.expect_kw("END_CASE")?;
+                break;
+            }
+            if self.eat_kw("END_CASE") {
+                break;
+            }
+            // labels: e [.. e] {, e [.. e]} ':'
+            let mut labels = Vec::new();
+            loop {
+                let a = self.expr()?;
+                if self.eat(&K::Range) {
+                    let b = self.expr()?;
+                    labels.push(CaseLabel::Range(a, b));
+                } else {
+                    labels.push(CaseLabel::Single(a));
+                }
+                if !self.eat(&K::Comma) {
+                    break;
+                }
+            }
+            self.expect(K::Colon)?;
+            let body =
+                self.case_arm_body()?;
+            arms.push((labels, body));
+        }
+        self.eat(&K::Semi);
+        Ok(Stmt::Case { scrutinee, arms, else_body, line })
+    }
+
+    /// A CASE arm body ends at the next label (`expr :`), ELSE, or
+    /// END_CASE. We detect labels by scanning for `ident/int [..] :`
+    /// lookahead after a statement boundary.
+    fn case_arm_body(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        let mut out = Vec::new();
+        loop {
+            match self.peek_kw() {
+                Some("ELSE") | Some("END_CASE") => return Ok(out),
+                _ => {}
+            }
+            if self.at_case_label() {
+                return Ok(out);
+            }
+            if self.at_end() {
+                return Err(self.err("unterminated CASE"));
+            }
+            out.push(self.stmt()?);
+        }
+    }
+
+    fn at_case_label(&self) -> bool {
+        // A label is a `,`/`..`-separated list of integer constants or
+        // constant names terminated by `:`. Statements can never start
+        // with such a sequence followed by a bare `:` (assignment is
+        // `:=`, which lexes as one token), so scanning is unambiguous.
+        let mut j = self.i;
+        let mut saw_item = false;
+        while let Some(t) = self.toks.get(j) {
+            match &t.kind {
+                K::Int(_) | K::Ident(_) | K::Minus | K::Range | K::Comma => {
+                    saw_item = true;
+                    j += 1;
+                }
+                K::Colon => return saw_item,
+                _ => return false,
+            }
+        }
+        false
+    }
+
+    fn for_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.cur().line;
+        self.expect_kw("FOR")?;
+        let (var, _) = self.ident()?;
+        self.expect(K::Assign)?;
+        let from = self.expr()?;
+        self.expect_kw("TO")?;
+        let to = self.expr()?;
+        let by = if self.eat_kw("BY") {
+            Some(self.expr()?)
+        } else {
+            None
+        };
+        self.expect_kw("DO")?;
+        let body = self.block_until(&["END_FOR"])?;
+        self.expect_kw("END_FOR")?;
+        self.eat(&K::Semi);
+        Ok(Stmt::For { var, from, to, by, body, line })
+    }
+
+    fn while_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.cur().line;
+        self.expect_kw("WHILE")?;
+        let cond = self.expr()?;
+        self.expect_kw("DO")?;
+        let body = self.block_until(&["END_WHILE"])?;
+        self.expect_kw("END_WHILE")?;
+        self.eat(&K::Semi);
+        Ok(Stmt::While { cond, body, line })
+    }
+
+    fn repeat_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.cur().line;
+        self.expect_kw("REPEAT")?;
+        let body = self.block_until(&["UNTIL"])?;
+        self.expect_kw("UNTIL")?;
+        let until = self.expr()?;
+        self.expect_kw("END_REPEAT")?;
+        self.eat(&K::Semi);
+        Ok(Stmt::Repeat { body, until, line })
+    }
+
+    // ------------------------------------------------------ expressions
+    // Precedence (low→high): OR, XOR, AND, comparison, add, mul, power,
+    // unary, postfix.
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.xor_expr()?;
+        while self.peek_kw() == Some("OR") {
+            let line = self.cur().line;
+            self.i += 1;
+            let rhs = self.xor_expr()?;
+            lhs = Expr::Binary(BinOp::Or, Box::new(lhs), Box::new(rhs), line);
+        }
+        Ok(lhs)
+    }
+
+    fn xor_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.and_expr()?;
+        while self.peek_kw() == Some("XOR") {
+            let line = self.cur().line;
+            self.i += 1;
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary(BinOp::Xor, Box::new(lhs), Box::new(rhs), line);
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.cmp_expr()?;
+        while self.peek_kw() == Some("AND") {
+            let line = self.cur().line;
+            self.i += 1;
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Binary(BinOp::And, Box::new(lhs), Box::new(rhs), line);
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.add_expr()?;
+        let op = match self.cur().kind {
+            K::Eq => BinOp::Eq,
+            K::Neq => BinOp::Neq,
+            K::Lt => BinOp::Lt,
+            K::Gt => BinOp::Gt,
+            K::Le => BinOp::Le,
+            K::Ge => BinOp::Ge,
+            _ => return Ok(lhs),
+        };
+        let line = self.cur().line;
+        self.i += 1;
+        let rhs = self.add_expr()?;
+        Ok(Expr::Binary(op, Box::new(lhs), Box::new(rhs), line))
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.cur().kind {
+                K::Plus => BinOp::Add,
+                K::Minus => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            let line = self.cur().line;
+            self.i += 1;
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs), line);
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.pow_expr()?;
+        loop {
+            let op = match &self.cur().kind {
+                K::Star => BinOp::Mul,
+                K::Slash => BinOp::Div,
+                K::Kw("MOD") => BinOp::Mod,
+                _ => return Ok(lhs),
+            };
+            let line = self.cur().line;
+            self.i += 1;
+            let rhs = self.pow_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs), line);
+        }
+    }
+
+    fn pow_expr(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.unary_expr()?;
+        if self.cur().kind == K::Power {
+            let line = self.cur().line;
+            self.i += 1;
+            let rhs = self.pow_expr()?; // right associative
+            return Ok(Expr::Binary(BinOp::Pow, Box::new(lhs), Box::new(rhs), line));
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, ParseError> {
+        let line = self.cur().line;
+        if self.eat(&K::Minus) {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary(UnOp::Neg, Box::new(e), line));
+        }
+        if self.eat(&K::Plus) {
+            return self.unary_expr();
+        }
+        if self.eat_kw("NOT") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary(UnOp::Not, Box::new(e), line));
+        }
+        self.postfix_expr()
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.primary_expr()?;
+        loop {
+            let line = self.cur().line;
+            if self.eat(&K::Dot) {
+                let (name, _) = self.ident()?;
+                e = Expr::Member(Box::new(e), name, line);
+            } else if self.eat(&K::LBracket) {
+                let mut idxs = Vec::new();
+                loop {
+                    idxs.push(self.expr()?);
+                    if !self.eat(&K::Comma) {
+                        break;
+                    }
+                }
+                self.expect(K::RBracket)?;
+                e = Expr::Index(Box::new(e), idxs, line);
+            } else if self.eat(&K::Caret) {
+                e = Expr::Deref(Box::new(e), line);
+            } else if self.cur().kind == K::LParen {
+                self.i += 1;
+                let args = self.call_args()?;
+                e = Expr::Call { callee: Box::new(e), args, line };
+            } else {
+                return Ok(e);
+            }
+        }
+    }
+
+    fn call_args(&mut self) -> Result<Vec<Arg>, ParseError> {
+        let mut args = Vec::new();
+        if self.eat(&K::RParen) {
+            return Ok(args);
+        }
+        loop {
+            // named? `ident :=` or `ident =>`
+            let named = match (
+                self.toks.get(self.i).map(|t| &t.kind),
+                self.toks.get(self.i + 1).map(|t| &t.kind),
+            ) {
+                (Some(K::Ident(n)), Some(K::Assign)) => Some((n.clone(), false)),
+                (Some(K::Ident(n)), Some(K::Arrow)) => Some((n.clone(), true)),
+                _ => None,
+            };
+            if let Some((name, is_output)) = named {
+                self.i += 2;
+                let value = self.expr()?;
+                args.push(Arg { name: Some(name), is_output, value });
+            } else {
+                let value = self.expr()?;
+                args.push(Arg { name: None, is_output: false, value });
+            }
+            if self.eat(&K::Comma) {
+                continue;
+            }
+            self.expect(K::RParen)?;
+            return Ok(args);
+        }
+    }
+
+    fn primary_expr(&mut self) -> Result<Expr, ParseError> {
+        let t = self.cur().clone();
+        match t.kind {
+            K::Int(v) => {
+                self.i += 1;
+                Ok(Expr::IntLit(v))
+            }
+            K::Real(v) => {
+                self.i += 1;
+                Ok(Expr::RealLit(v))
+            }
+            K::Str(s) => {
+                self.i += 1;
+                Ok(Expr::StrLit(s))
+            }
+            K::Typed(ty, lit) => {
+                self.i += 1;
+                Ok(Expr::TypedLit(ty, lit))
+            }
+            K::Kw("TRUE") => {
+                self.i += 1;
+                Ok(Expr::BoolLit(true))
+            }
+            K::Kw("FALSE") => {
+                self.i += 1;
+                Ok(Expr::BoolLit(false))
+            }
+            K::Kw("NULL") => {
+                self.i += 1;
+                Ok(Expr::NullLit)
+            }
+            K::LParen => {
+                // `(ident := ...)` is a struct literal, not parens.
+                if let (Some(K::Ident(_)), Some(K::Assign)) = (
+                    self.toks.get(self.i + 1).map(|t| &t.kind),
+                    self.toks.get(self.i + 2).map(|t| &t.kind),
+                ) {
+                    let line = t.line;
+                    self.i += 1;
+                    let mut fields = Vec::new();
+                    loop {
+                        let (name, _) = self.ident()?;
+                        self.expect(K::Assign)?;
+                        fields.push((name, self.expr()?));
+                        if !self.eat(&K::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(K::RParen)?;
+                    return Ok(Expr::StructLit(fields, line));
+                }
+                self.i += 1;
+                let e = self.expr()?;
+                self.expect(K::RParen)?;
+                Ok(e)
+            }
+            K::Ident(_) | K::Kw(_) => {
+                let (name, line) = self.ident().map_err(|_| {
+                    self.err_at(&t, format!("unexpected token {:?}", t.kind))
+                })?;
+                Ok(Expr::Name(name, line))
+            }
+            ref other => {
+                Err(self.err_at(&t, format!("unexpected token {other:?}")))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse_src(src: &str) -> File {
+        parse(&lex(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_function() {
+        let f = parse_src(
+            "FUNCTION add : REAL\n\
+             VAR_INPUT a, b : REAL; END_VAR\n\
+             add := a + b;\n\
+             END_FUNCTION",
+        );
+        assert_eq!(f.functions.len(), 1);
+        let func = &f.functions[0];
+        assert_eq!(func.name, "add");
+        assert_eq!(func.blocks[0].decls.len(), 2);
+        assert_eq!(func.body.len(), 1);
+    }
+
+    #[test]
+    fn parses_struct_type() {
+        let f = parse_src(
+            "TYPE dataMem : STRUCT\n\
+               address : POINTER TO REAL;\n\
+               length : UDINT;\n\
+             END_STRUCT END_TYPE",
+        );
+        assert_eq!(f.types.len(), 1);
+        assert_eq!(f.types[0].fields.len(), 2);
+        assert!(matches!(f.types[0].fields[0].ty, TypeRef::Pointer(_)));
+    }
+
+    #[test]
+    fn parses_fb_with_method_and_interface() {
+        let f = parse_src(
+            "INTERFACE ILayer\n\
+               METHOD eval : BOOL END_METHOD\n\
+             END_INTERFACE\n\
+             FUNCTION_BLOCK FB_X IMPLEMENTS ILayer\n\
+             VAR n : INT; END_VAR\n\
+             METHOD eval : BOOL\n\
+               eval := TRUE;\n\
+             END_METHOD\n\
+             END_FUNCTION_BLOCK",
+        );
+        assert_eq!(f.interfaces.len(), 1);
+        assert_eq!(f.function_blocks.len(), 1);
+        assert_eq!(f.function_blocks[0].implements, vec!["ILayer"]);
+        assert_eq!(f.function_blocks[0].methods.len(), 1);
+    }
+
+    #[test]
+    fn parses_array_decl_with_const_bounds() {
+        let f = parse_src(
+            "PROGRAM p\n\
+             VAR CONSTANT n : INT := 4; END_VAR\n\
+             VAR a : ARRAY[0..n*2-1] OF REAL; END_VAR\n\
+             END_PROGRAM",
+        );
+        let decl = &f.programs[0].blocks[1].decls[0];
+        assert!(matches!(decl.ty, TypeRef::Array(_, _)));
+    }
+
+    #[test]
+    fn parses_control_flow() {
+        let f = parse_src(
+            "PROGRAM p VAR i, s : INT; END_VAR\n\
+             FOR i := 0 TO 9 BY 2 DO s := s + i; END_FOR\n\
+             WHILE s > 0 DO s := s - 1; END_WHILE\n\
+             REPEAT s := s + 1; UNTIL s >= 5 END_REPEAT\n\
+             IF s = 5 THEN s := 0; ELSIF s > 5 THEN s := 1; ELSE s := 2; END_IF\n\
+             CASE s OF 0: s := 10; 1, 2: s := 20; 3..4: s := 30;\n\
+             ELSE s := 40; END_CASE\n\
+             END_PROGRAM",
+        );
+        assert_eq!(f.programs[0].body.len(), 5);
+        match &f.programs[0].body[4] {
+            Stmt::Case { arms, else_body, .. } => {
+                assert_eq!(arms.len(), 3);
+                assert_eq!(else_body.len(), 1);
+            }
+            other => panic!("expected CASE, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_calls_and_member_chains() {
+        let f = parse_src(
+            "PROGRAM p VAR m : FB_Model; ok : BOOL; END_VAR\n\
+             ok := m.infer();\n\
+             m.layers[0] := m.layers[1];\n\
+             doit(x := 1, y => ok);\n\
+             END_PROGRAM",
+        );
+        assert_eq!(f.programs[0].body.len(), 3);
+    }
+
+    #[test]
+    fn parses_pointer_ops() {
+        let f = parse_src(
+            "PROGRAM p VAR pr : POINTER TO REAL; x : REAL;\n\
+             a : ARRAY[0..3] OF REAL; END_VAR\n\
+             pr := ADR(a);\n\
+             x := pr^ + pr[2];\n\
+             END_PROGRAM",
+        );
+        assert_eq!(f.programs[0].body.len(), 2);
+    }
+
+    #[test]
+    fn operator_precedence() {
+        let f = parse_src(
+            "PROGRAM p VAR b : BOOL; x : REAL; END_VAR\n\
+             b := x + 1.0 * 2.0 > 3.0 AND NOT b OR b;\n\
+             END_PROGRAM",
+        );
+        // Shape: Or(And(Gt(Add(x, Mul(1,2)), 3), Not(b)), b)
+        match &f.programs[0].body[0] {
+            Stmt::Assign { value: Expr::Binary(BinOp::Or, _, _, _), .. } => {}
+            other => panic!("precedence wrong: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_reports_position() {
+        let toks = lex("FUNCTION f : REAL\nEND_FUNCTION 42").unwrap();
+        let err = parse(&toks).unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn struct_initializer() {
+        let f = parse_src(
+            "PROGRAM p VAR d : dataMem := (length := 4, num := 1); END_VAR\n\
+             END_PROGRAM",
+        );
+        match &f.programs[0].blocks[0].decls[0].init {
+            Some(Initializer::Struct(fields)) => assert_eq!(fields.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn array_initializer_with_repeat() {
+        let f = parse_src(
+            "PROGRAM p VAR a : ARRAY[0..4] OF INT := [1, 2, 3(9)]; END_VAR\n\
+             END_PROGRAM",
+        );
+        match &f.programs[0].blocks[0].decls[0].init {
+            Some(Initializer::Array(items)) => {
+                assert_eq!(items.len(), 3);
+                assert!(items[2].0.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

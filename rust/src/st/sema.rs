@@ -1,0 +1,18 @@
+//! Semantic-error type shared by the lowering pass (the checker itself
+//! lives in [`super::lower`]; property-style checks of its behaviour are
+//! in `rust/tests/st_sema.rs`).
+
+/// A semantic error with source-line context.
+#[derive(Debug, Clone)]
+pub struct SemaError {
+    pub line: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for SemaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for SemaError {}

@@ -1,0 +1,183 @@
+//! Runtime values for the ST interpreter.
+//!
+//! Type tags are erased at runtime — [`super::lower`] guarantees all
+//! operations are applied to matching representations. Integer types of
+//! every IEC width share `i64` storage; width semantics (wrapping,
+//! SIZEOF) are applied by explicit IR conversion nodes.
+//!
+//! Arrays use `Rc<RefCell<…>>` handles: **assignment deep-copies**
+//! (ST value semantics, metered) while `VAR_IN_OUT` parameters and
+//! POINTER values share the handle (ST reference semantics).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// A runtime value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Bool(bool),
+    /// All integer widths (SINT..ULINT, BYTE..LWORD).
+    Int(i64),
+    /// REAL (IEC 32-bit float).
+    Real(f32),
+    /// LREAL (IEC 64-bit float).
+    LReal(f64),
+    Str(Rc<str>),
+    ArrF32(Rc<RefCell<Vec<f32>>>),
+    ArrF64(Rc<RefCell<Vec<f64>>>),
+    ArrInt(Rc<RefCell<Vec<i64>>>),
+    /// Arrays of interface/FB references (e.g. `ARRAY OF ILayer`).
+    ArrRef(Rc<RefCell<Vec<Value>>>),
+    /// Struct value: ordered field storage.
+    Struct(Rc<RefCell<Vec<Value>>>),
+    /// Handle to a function-block instance in the interpreter arena.
+    FbRef(usize),
+    /// POINTER TO REAL (+element offset) — created by ADR().
+    PtrF32(Rc<RefCell<Vec<f32>>>, usize),
+    PtrF64(Rc<RefCell<Vec<f64>>>, usize),
+    PtrInt(Rc<RefCell<Vec<i64>>>, usize),
+    /// Uninitialized interface/pointer value.
+    Null,
+}
+
+impl Value {
+    /// Deep copy with ST value semantics: arrays and structs are cloned
+    /// element-wise; pointers and FB references copy the handle (they
+    /// *are* references in ST).
+    pub fn deep_clone(&self) -> Value {
+        match self {
+            Value::ArrF32(a) => {
+                Value::ArrF32(Rc::new(RefCell::new(a.borrow().clone())))
+            }
+            Value::ArrF64(a) => {
+                Value::ArrF64(Rc::new(RefCell::new(a.borrow().clone())))
+            }
+            Value::ArrInt(a) => {
+                Value::ArrInt(Rc::new(RefCell::new(a.borrow().clone())))
+            }
+            Value::ArrRef(a) => Value::ArrRef(Rc::new(RefCell::new(
+                a.borrow().iter().map(Value::deep_clone).collect(),
+            ))),
+            Value::Struct(s) => Value::Struct(Rc::new(RefCell::new(
+                s.borrow().iter().map(Value::deep_clone).collect(),
+            ))),
+            other => other.clone(),
+        }
+    }
+
+    /// Byte size of the payload (used to meter VAR_INPUT copies).
+    pub fn byte_size(&self) -> u64 {
+        match self {
+            Value::Bool(_) => 1,
+            Value::Int(_) => 8,
+            Value::Real(_) => 4,
+            Value::LReal(_) => 8,
+            Value::Str(s) => s.len() as u64,
+            Value::ArrF32(a) => 4 * a.borrow().len() as u64,
+            Value::ArrF64(a) => 8 * a.borrow().len() as u64,
+            Value::ArrInt(a) => 8 * a.borrow().len() as u64,
+            Value::ArrRef(a) => 8 * a.borrow().len() as u64,
+            Value::Struct(s) => {
+                s.borrow().iter().map(Value::byte_size).sum()
+            }
+            Value::FbRef(_)
+            | Value::PtrF32(..)
+            | Value::PtrF64(..)
+            | Value::PtrInt(..) => 8,
+            Value::Null => 8,
+        }
+    }
+
+    // ------------------------------------------------- typed accessors
+    // (sema guarantees these never fail on checked programs; the
+    // panics indicate an interpreter bug, not a user error)
+    #[inline]
+    pub fn bool(&self) -> bool {
+        match self {
+            Value::Bool(b) => *b,
+            other => panic!("expected BOOL, got {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn int(&self) -> i64 {
+        match self {
+            Value::Int(v) => *v,
+            other => panic!("expected INT, got {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn real(&self) -> f32 {
+        match self {
+            Value::Real(v) => *v,
+            other => panic!("expected REAL, got {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn lreal(&self) -> f64 {
+        match self {
+            Value::LReal(v) => *v,
+            other => panic!("expected LREAL, got {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn arr_f32(&self) -> &Rc<RefCell<Vec<f32>>> {
+        match self {
+            Value::ArrF32(a) => a,
+            other => panic!("expected ARRAY OF REAL, got {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn arr_int(&self) -> &Rc<RefCell<Vec<i64>>> {
+        match self {
+            Value::ArrInt(a) => a,
+            other => panic!("expected integer array, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deep_clone_detaches_arrays() {
+        let a = Value::ArrF32(Rc::new(RefCell::new(vec![1.0, 2.0])));
+        let b = a.deep_clone();
+        if let (Value::ArrF32(ra), Value::ArrF32(rb)) = (&a, &b) {
+            ra.borrow_mut()[0] = 9.0;
+            assert_eq!(rb.borrow()[0], 1.0);
+        } else {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    fn deep_clone_shares_pointers() {
+        let backing = Rc::new(RefCell::new(vec![1.0f32]));
+        let p = Value::PtrF32(backing.clone(), 0);
+        let q = p.deep_clone();
+        backing.borrow_mut()[0] = 5.0;
+        if let Value::PtrF32(rb, _) = q {
+            assert_eq!(rb.borrow()[0], 5.0);
+        } else {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(Value::Real(0.0).byte_size(), 4);
+        let a = Value::ArrF32(Rc::new(RefCell::new(vec![0.0; 10])));
+        assert_eq!(a.byte_size(), 40);
+        let s = Value::Struct(Rc::new(RefCell::new(vec![
+            Value::Real(0.0),
+            Value::Int(0),
+        ])));
+        assert_eq!(s.byte_size(), 12);
+    }
+}

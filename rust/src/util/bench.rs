@@ -1,0 +1,200 @@
+//! Micro-benchmark harness (criterion substitute for the offline build).
+//!
+//! Used by every `rust/benches/*.rs` target (`harness = false`): warmup,
+//! adaptive iteration count, robust statistics, and the table printer
+//! the paper-figure benches share.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub std_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Benchmark runner with a time budget per measurement.
+pub struct Bench {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(400),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(100),
+            min_iters: 3,
+            max_iters: 2_000,
+        }
+    }
+
+    /// Honors `ICSML_BENCH_FAST=1` (used by `cargo test` smoke runs).
+    pub fn from_env() -> Self {
+        if std::env::var("ICSML_BENCH_FAST").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Measure `f`, returning robust statistics. `f` should return some
+    /// value dependent on its work to inhibit optimizing it away; pass it
+    /// through [`std::hint::black_box`] inside the closure.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup + pilot to size the measurement loop.
+        let wstart = Instant::now();
+        let mut pilot_iters = 0usize;
+        while wstart.elapsed() < self.warmup || pilot_iters == 0 {
+            f();
+            pilot_iters += 1;
+            if pilot_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / pilot_iters as f64;
+        let target = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target);
+        for _ in 0..target {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: samples[n / 2],
+            p10_ns: samples[n / 10],
+            p90_ns: samples[(n * 9) / 10],
+            std_ns: var.sqrt(),
+        }
+    }
+}
+
+/// Fixed-width table printer shared by the paper-figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |", w = w));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench::quick();
+        let mut acc = 0u64;
+        let s = b.run("noop", || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.iters >= 3);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn ordering_of_workloads() {
+        let b = Bench::quick();
+        let fast = b.run("fast", || {
+            std::hint::black_box((0..10u64).sum::<u64>());
+        });
+        let slow = b.run("slow", || {
+            std::hint::black_box((0..100_000u64).sum::<u64>());
+        });
+        assert!(slow.median_ns > fast.median_ns);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| a | bb |"));
+        assert!(s.lines().count() == 3);
+    }
+}

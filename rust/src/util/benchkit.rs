@@ -1,0 +1,91 @@
+//! Shared helpers for the paper-figure benchmarks (`rust/benches/*`):
+//! ST benchmark-program generation (the paper's §5.2/§5.3 models),
+//! per-phase metering, and temp-weight plumbing.
+
+use std::path::PathBuf;
+
+use crate::icsml_st;
+use crate::porting::{codegen::CodegenOptions, generate_st_program, LayerSpec,
+                     ModelSpec};
+use crate::st::{Interp, Meter, Value};
+use crate::util::{binio, json::Json, rng::SplitMix64};
+
+/// Build a ModelSpec with random weights written to a temp dir.
+/// Returns (spec, weights_dir).
+pub fn random_spec(
+    name: &str,
+    sizes: &[usize],
+    acts: &[&str],
+    seed: u64,
+) -> (ModelSpec, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("icsml_bench_{name}_{seed}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = SplitMix64::new(seed);
+    let mut layers = Vec::new();
+    for i in 0..sizes.len() - 1 {
+        let (n_in, n_out) = (sizes[i], sizes[i + 1]);
+        let w: Vec<f32> = (0..n_in * n_out)
+            .map(|_| rng.uniform(-0.5, 0.5) as f32)
+            .collect();
+        let b: Vec<f32> =
+            (0..n_out).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+        binio::write_f32(&dir.join(format!("l{i}_w.bin")), &w).unwrap();
+        binio::write_f32(&dir.join(format!("l{i}_b.bin")), &b).unwrap();
+        layers.push(LayerSpec {
+            inputs: n_in,
+            neurons: n_out,
+            weights: format!("l{i}_w.bin"),
+            biases: format!("l{i}_b.bin"),
+        });
+    }
+    let spec = ModelSpec {
+        name: name.to_string(),
+        sizes: sizes.to_vec(),
+        activations: acts.iter().map(|s| s.to_string()).collect(),
+        weights_dir: ".".into(),
+        layers,
+        report: Json::Null,
+    };
+    (spec, dir)
+}
+
+/// Load the generated ST program for a spec (fused or separate
+/// activations) ready to run (weights dir attached, init scan done).
+pub fn st_model(spec: &ModelSpec, dir: &PathBuf, fused: bool) -> Interp {
+    let src = generate_st_program(
+        spec,
+        &CodegenOptions { program: "MAIN".into(), fused_activations: fused },
+    );
+    let mut it = icsml_st::load(&src)
+        .unwrap_or_else(|e| panic!("bench ST failed to compile: {e}"));
+    it.io_dir = dir.clone();
+    it.run_program("MAIN").unwrap(); // init scan (BINARR + wiring)
+    it
+}
+
+/// Run one inference scan and return the metered delta.
+pub fn st_infer_meter(it: &mut Interp) -> Meter {
+    let before = it.meter.clone();
+    it.run_program("MAIN").unwrap();
+    it.meter.since(&before)
+}
+
+/// Write an input vector into the generated program's `inputs` array.
+pub fn st_set_inputs(it: &mut Interp, x: &[f32]) {
+    let inst = it.program_instance("MAIN").unwrap();
+    match it.instance_field(inst, "inputs").unwrap() {
+        Value::ArrF32(a) => a.borrow_mut().copy_from_slice(x),
+        other => panic!("inputs: {other:?}"),
+    }
+}
+
+/// The paper's Fig. 4 stack sizes: `width` in/out, `depth` dense+ReLU.
+pub fn stack_sizes(depth: usize, width: usize) -> Vec<usize> {
+    let mut v = vec![width];
+    v.extend(std::iter::repeat(width).take(depth));
+    v
+}
+
+pub fn stack_acts(depth: usize) -> Vec<&'static str> {
+    vec!["relu"; depth]
+}

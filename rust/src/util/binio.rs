@@ -1,0 +1,96 @@
+//! ICSML binary array I/O — the Rust twin of the framework's
+//! `BINARR` / `ARRBIN` utility functions (paper §4.1: "load and save
+//! array data from and to binary files", used for datasets, weights and
+//! inference logs).
+//!
+//! Format: raw little-endian scalars, no header — exactly what
+//! `numpy.ndarray.tofile` emits and what the ST `BINARR` built-in reads.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Read a raw little-endian `f32` array (BINARR semantics).
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = read_bytes(path)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a raw little-endian `i32` array.
+pub fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = read_bytes(path)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a raw little-endian `f32` array (ARRBIN semantics).
+pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_bytes(path: &Path) -> Result<Vec<u8>> {
+    let mut f =
+        File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    Ok(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let dir = std::env::temp_dir().join("icsml_binio_test");
+        let path = dir.join("arr.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MAX, f32::MIN_POSITIVE];
+        write_f32(&path, &data).unwrap();
+        assert_eq!(read_f32(&path).unwrap(), data);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_misaligned_file() {
+        let dir = std::env::temp_dir().join("icsml_binio_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [1u8, 2, 3]).unwrap();
+        assert!(read_f32(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(read_f32(Path::new("/nonexistent/x.bin")).is_err());
+    }
+}

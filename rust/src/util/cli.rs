@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (clap substitute for the offline build).
+//!
+//! Supports `binary <subcommand> [--flag value] [--switch] [positional…]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, `--switch`
+/// booleans, and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit argv (excluding the program name).
+    /// `known_switches` lists flags that take no value.
+    pub fn parse_from(argv: &[String], known_switches: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn parse(known_switches: &[&str]) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_from(&argv, known_switches)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_switches() {
+        let a = Args::parse_from(
+            &argv(&["bench", "--profile", "wago", "--verbose", "extra"]),
+            &["verbose"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.opt("profile"), Some("wago"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse_from(&argv(&["run", "--steps=50"]), &[]);
+        assert_eq!(a.opt_usize("steps", 0), 50);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(&argv(&[]), &[]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.opt_or("x", "d"), "d");
+        assert_eq!(a.opt_f64("y", 1.5), 1.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value_is_switch() {
+        let a = Args::parse_from(&argv(&["x", "--flag"]), &[]);
+        assert!(a.has("flag"));
+    }
+}

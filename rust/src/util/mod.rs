@@ -1,0 +1,20 @@
+//! In-repo substitutes for crates unavailable in the offline build
+//! environment (only the `xla` dependency closure is vendored), plus
+//! small shared helpers.
+//!
+//! | module    | replaces          | used for                            |
+//! |-----------|-------------------|-------------------------------------|
+//! | [`json`]  | serde/serde_json  | manifest + golden-trace parsing     |
+//! | [`rng`]   | rand              | deterministic noise / prop tests    |
+//! | [`cli`]   | clap              | the `icsml` binary's subcommands    |
+//! | [`bench`] | criterion         | `cargo bench` harnesses             |
+//! | [`prop`]  | proptest          | property tests on invariants        |
+//! | [`binio`] | —                 | ICSML BINARR/ARRBIN binary files    |
+
+pub mod bench;
+pub mod benchkit;
+pub mod binio;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,176 @@
+//! Minimal property-testing harness (proptest substitute for the
+//! offline build): seeded generators + counterexample shrinking for the
+//! coordinator/engine invariant tests.
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(100, |g| {
+//!     let xs = g.vec_f64(1..=64, -10.0, 10.0);
+//!     let s: f64 = xs.iter().sum();
+//!     prop_assert(s.is_finite(), format!("sum not finite: {xs:?}"))
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Generator handle passed to properties. Records the draws so failing
+/// cases can be replayed at a smaller size.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Size hint in [0.0, 1.0]; shrinking retries with smaller sizes.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        if hi == lo {
+            return lo;
+        }
+        // Scale the upper bound with the current shrink size.
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + (self.rng.next_u64() as usize) % (span.max(1) + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64;
+        lo + (self.rng.next_u64() % (span + 1)) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi * self.size + lo * (1.0 - self.size))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        lo: f32,
+        hi: f32,
+    ) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f64(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.rng.next_u64() as usize) % xs.len()]
+    }
+}
+
+/// Run `cases` random evaluations of `prop`. On failure, retries the same
+/// seed at smaller generator sizes to report the smallest reproduction
+/// found, then panics with the seed + message.
+pub fn prop_check<F: FnMut(&mut Gen) -> PropResult>(cases: u64, mut prop: F) {
+    let base_seed = std::env::var("ICSML_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B9));
+        let mut g = Gen { rng: SplitMix64::new(seed), size: 1.0 };
+        if let Err(first_msg) = prop(&mut g) {
+            // Shrink: replay the same seed with smaller size hints.
+            let mut best = (1.0, first_msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let mut g = Gen { rng: SplitMix64::new(seed), size };
+                if let Err(msg) = prop(&mut g) {
+                    best = (size, msg);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, \
+                 shrunk size={}): {}\nre-run with ICSML_PROP_SEED={base_seed}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(50, |g| {
+            count += 1;
+            let x = g.f64_in(0.0, 10.0);
+            prop_assert(x >= 0.0, "negative")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(50, |g| {
+            let x = g.f64_in(0.0, 10.0);
+            prop_assert(x < 5.0, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        prop_check(200, |g| {
+            let n = g.usize_in(3..=17);
+            prop_assert(n >= 3 && n <= 17, format!("n={n}"))?;
+            let v = g.vec_f32(1..=8, -2.0, 2.0);
+            prop_assert(
+                v.iter().all(|x| (-2.0..=2.0).contains(x)),
+                format!("{v:?}"),
+            )?;
+            let i = g.i64_in(-5, 5);
+            prop_assert((-5..=5).contains(&i), format!("i={i}"))
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first: Vec<f64> = Vec::new();
+        prop_check(5, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut second: Vec<f64> = Vec::new();
+        prop_check(5, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,50 @@
+//! Golden-trace cross-validation: the Rust MSF plant twin must
+//! reproduce the Python plant's trajectory (emitted by `make
+//! artifacts` into `artifacts/golden/msf_trace.json`) to float
+//! tolerance — both twins integrate the identical discrete dynamics in
+//! the identical evaluation order.
+
+use icsml::msf::{Attack, AttackFamily, Simulator};
+use icsml::util::json::Json;
+
+#[test]
+fn rust_plant_matches_python_golden_trace() {
+    let root = icsml::artifacts_dir();
+    let path = root.join("golden/msf_trace.json");
+    if !path.exists() {
+        eprintln!("skipping: no golden trace (run `make artifacts`)");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let rows = j.expect("rows").as_arr().unwrap();
+    assert!(rows.len() >= 1000, "trace too short");
+
+    // Same scenario as python plant.golden_trace(): seed=1, no noise,
+    // combined 0.5 attack on steps [600, 1200).
+    let mut sim = Simulator::new(
+        1,
+        false,
+        vec![Attack::new(AttackFamily::Combined, 0.5, 600, 1200)],
+    );
+    for (i, row) in rows.iter().enumerate() {
+        let r = row.as_arr().unwrap();
+        let got = sim.step();
+        let cols = [
+            ("tb0_adc", got.tb0_adc, r[0].as_f64().unwrap()),
+            ("wd_adc", got.wd_adc, r[1].as_f64().unwrap()),
+            ("ws_cmd", got.ws_cmd, r[2].as_f64().unwrap()),
+            ("tb0", sim.state.tb0, r[3].as_f64().unwrap()),
+            ("tbot", sim.state.tbot, r[4].as_f64().unwrap()),
+            ("wd", sim.state.wd, r[5].as_f64().unwrap()),
+        ];
+        for (name, rust_v, py_v) in cols {
+            let tol = 1e-9 * py_v.abs().max(1.0);
+            assert!(
+                (rust_v - py_v).abs() <= tol,
+                "step {i}, column {name}: rust {rust_v} vs python {py_v}"
+            );
+        }
+        let attack = r[6].as_f64().unwrap() != 0.0;
+        assert_eq!(got.attack_active, attack, "step {i} attack flag");
+    }
+}

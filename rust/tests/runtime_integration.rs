@@ -1,0 +1,151 @@
+//! PJRT runtime integration: the AOT bridge end-to-end.
+//!
+//! Requires artifacts (`make artifacts`, or the fast-mode build).
+//! Verifies the critical property of the interchange: HLO **text**
+//! round-trips the embedded trained weights exactly (the classifier's
+//! logits must match the Python-exported expected logits), and all
+//! three Rust backends (ST interpreter, native engine, XLA) agree.
+
+use icsml::defense::{Backend, EngineBackend, StBackend};
+use icsml::porting::{self, codegen::CodegenOptions, Manifest};
+use icsml::runtime::{Runtime, XlaBackend};
+use icsml::util::binio;
+use icsml::{artifacts_dir, icsml_st};
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let root = artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(&root).unwrap())
+}
+
+#[test]
+fn smoke_hlo_round_trip() {
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&m.hlo_path("smoke").unwrap()).unwrap();
+    let x = [1f32, 2.0, 3.0, 4.0];
+    let y = [1f32, 1.0, 1.0, 1.0];
+    let out = exe.run_f32x2((&x, &[2, 2]), (&y, &[2, 2])).unwrap();
+    assert_eq!(out, vec![5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn classifier_hlo_matches_python_logits() {
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&m.hlo_path("classifier_b1").unwrap()).unwrap();
+
+    let ds = &m.dataset;
+    let n = ds.expect("eval_n").as_usize().unwrap().min(64);
+    let x = binio::read_f32(
+        &m.root.join(ds.expect("eval_windows").as_str().unwrap()),
+    )
+    .unwrap();
+    let z = binio::read_f32(
+        &m.root.join(ds.expect("eval_logits").as_str().unwrap()),
+    )
+    .unwrap();
+
+    for i in 0..n {
+        let xi = &x[i * 400..(i + 1) * 400];
+        let out = exe.run_f32(xi, &[1, 400]).unwrap();
+        for k in 0..2 {
+            let want = z[i * 2 + k];
+            let got = out[k];
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "sample {i} logit {k}: xla {got} vs python {want} \
+                 (constants lost in the text round-trip?)"
+            );
+        }
+    }
+}
+
+#[test]
+fn three_backends_agree_on_the_classifier() {
+    let Some(m) = manifest_or_skip() else { return };
+    let spec = m.model("classifier").unwrap();
+
+    // Engine backend from exported weights.
+    let engine = porting::load_engine_model(&m.root, spec).unwrap();
+    let mut eng = EngineBackend(engine);
+
+    // ST backend from generated ICSML code.
+    let st_src = porting::generate_st_program(spec, &CodegenOptions::default());
+    let mut it = icsml_st::load(&st_src).unwrap();
+    it.io_dir = m.root.join(&spec.weights_dir);
+    let mut st = StBackend::new(it, "MAIN");
+
+    // XLA backend from the AOT artifact.
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&m.hlo_path("classifier_b1").unwrap()).unwrap();
+    let mut xla = XlaBackend { exe, in_dim: 400 };
+
+    let ds = &m.dataset;
+    let x = binio::read_f32(
+        &m.root.join(ds.expect("eval_windows").as_str().unwrap()),
+    )
+    .unwrap();
+
+    for i in 0..8 {
+        let xi = &x[i * 400..(i + 1) * 400];
+        let a = eng.infer(xi).unwrap();
+        let b = st.infer(xi).unwrap();
+        let c = xla.infer(xi).unwrap();
+        for k in 0..2 {
+            assert!(
+                (a[k] - b[k]).abs() < 1e-3,
+                "sample {i}: engine {} vs st {}",
+                a[k],
+                b[k]
+            );
+            assert!(
+                (a[k] - c[k]).abs() < 1e-3,
+                "sample {i}: engine {} vs xla {}",
+                a[k],
+                c[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_accuracy_matches_training_report() {
+    let Some(m) = manifest_or_skip() else { return };
+    let spec = m.model("classifier").unwrap();
+    let mut engine = porting::load_engine_model(&m.root, spec).unwrap();
+
+    let ds = &m.dataset;
+    let n = ds.expect("eval_n").as_usize().unwrap();
+    let x = binio::read_f32(
+        &m.root.join(ds.expect("eval_windows").as_str().unwrap()),
+    )
+    .unwrap();
+    let y = binio::read_i32(
+        &m.root.join(ds.expect("eval_labels").as_str().unwrap()),
+    )
+    .unwrap();
+
+    let mut correct = 0usize;
+    for i in 0..n {
+        let out = engine.infer(&x[i * 400..(i + 1) * 400]);
+        let pred = if out[1] > out[0] { 1 } else { 0 };
+        if pred == y[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    let reported = spec
+        .report
+        .expect("test_accuracy")
+        .as_f64()
+        .unwrap();
+    eprintln!("engine eval accuracy {acc:.4}, training report {reported:.4}");
+    assert!(
+        (acc - reported).abs() < 0.08,
+        "ported accuracy {acc} deviates from training report {reported}"
+    );
+}

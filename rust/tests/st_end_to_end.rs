@@ -1,0 +1,460 @@
+//! End-to-end tests for the ST substrate: compile + execute realistic
+//! programs and check values, IEC restriction enforcement, and cost
+//! metering.
+
+use icsml::st::{self, Value};
+
+fn run(src: &str, program: &str) -> st::Interp {
+    let unit = st::compile(src).expect("compile");
+    let mut it = st::Interp::new(unit);
+    it.run_program(program).expect("run");
+    it
+}
+
+fn field_f32(it: &st::Interp, prog: &str, name: &str) -> f32 {
+    let inst = it.program_instance(prog).unwrap();
+    match it.instance_field(inst, name).unwrap() {
+        Value::Real(v) => v,
+        other => panic!("expected REAL, got {other:?}"),
+    }
+}
+
+fn field_int(it: &st::Interp, prog: &str, name: &str) -> i64 {
+    let inst = it.program_instance(prog).unwrap();
+    match it.instance_field(inst, name).unwrap() {
+        Value::Int(v) => v,
+        other => panic!("expected INT, got {other:?}"),
+    }
+}
+
+#[test]
+fn arithmetic_and_precedence() {
+    let it = run(
+        "PROGRAM p VAR x : REAL; i : DINT; END_VAR\n\
+         x := 2.0 + 3.0 * 4.0 - 1.0 / 2.0;\n\
+         i := 17 MOD 5 + 2 * 3;\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "x"), 13.5);
+    assert_eq!(field_int(&it, "p", "i"), 8);
+}
+
+#[test]
+fn for_loop_sum_and_exit() {
+    let it = run(
+        "PROGRAM p VAR s, j : DINT; i : DINT; END_VAR\n\
+         FOR i := 1 TO 100 DO\n\
+           s := s + i;\n\
+           IF i = 10 THEN EXIT; END_IF\n\
+         END_FOR\n\
+         FOR i := 10 TO 0 BY -2 DO j := j + 1; END_FOR\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_int(&it, "p", "s"), 55);
+    assert_eq!(field_int(&it, "p", "j"), 6);
+}
+
+#[test]
+fn while_repeat_case() {
+    let it = run(
+        "PROGRAM p VAR n, r, c : DINT; END_VAR\n\
+         n := 5;\n\
+         WHILE n > 0 DO r := r + n; n := n - 1; END_WHILE\n\
+         REPEAT c := c + 1; UNTIL c >= 3 END_REPEAT\n\
+         CASE r OF\n\
+           0..9: r := -1;\n\
+           15: r := 100;\n\
+           ELSE r := -2;\n\
+         END_CASE\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_int(&it, "p", "r"), 100);
+    assert_eq!(field_int(&it, "p", "c"), 3);
+}
+
+#[test]
+fn function_call_returns_value() {
+    let it = run(
+        "FUNCTION add3 : REAL\n\
+         VAR_INPUT a, b, c : REAL; END_VAR\n\
+         add3 := a + b + c;\n\
+         END_FUNCTION\n\
+         PROGRAM p VAR x : REAL; END_VAR\n\
+         x := add3(1.0, 2.0, 3.5);\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "x"), 6.5);
+}
+
+#[test]
+fn var_input_arrays_are_copied_and_metered() {
+    // Paper §3.1 / §4.2.1: VAR_INPUT arrays are duplicated per call.
+    let src = "FUNCTION first : REAL\n\
+         VAR_INPUT a : ARRAY[0..255] OF REAL; END_VAR\n\
+         a[0] := 42.0;  // mutates the COPY only\n\
+         first := a[0];\n\
+         END_FUNCTION\n\
+         PROGRAM p VAR arr : ARRAY[0..255] OF REAL; x, y : REAL; END_VAR\n\
+         arr[0] := 7.0;\n\
+         x := first(arr);\n\
+         y := arr[0];\n\
+         END_PROGRAM";
+    let it = run(src, "p");
+    assert_eq!(field_f32(&it, "p", "x"), 42.0);
+    assert_eq!(field_f32(&it, "p", "y"), 7.0, "caller array must be unchanged");
+    // 256 * 4 bytes metered for the call-by-value copy.
+    assert!(it.meter.copy_bytes >= 1024, "copy_bytes={}", it.meter.copy_bytes);
+}
+
+#[test]
+fn var_in_out_shares_storage() {
+    let it = run(
+        "FUNCTION fill : BOOL\n\
+         VAR_IN_OUT a : ARRAY[0..3] OF REAL; END_VAR\n\
+         VAR i : DINT; END_VAR\n\
+         FOR i := 0 TO 3 DO a[i] := INT_TO_REAL(DINT_TO_INT(i)) * 2.0; END_FOR\n\
+         fill := TRUE;\n\
+         END_FUNCTION\n\
+         PROGRAM p VAR arr : ARRAY[0..3] OF REAL; x : REAL; ok : BOOL; END_VAR\n\
+         ok := fill(arr);\n\
+         x := arr[3];\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "x"), 6.0);
+}
+
+#[test]
+fn pointers_and_adr() {
+    let it = run(
+        "PROGRAM p VAR\n\
+           a : ARRAY[0..9] OF REAL;\n\
+           pr : POINTER TO REAL;\n\
+           x, y : REAL; i : DINT;\n\
+         END_VAR\n\
+         FOR i := 0 TO 9 DO a[i] := 0.5 * DINT_TO_REAL(i); END_FOR\n\
+         pr := ADR(a);\n\
+         x := pr^ + pr[4];\n\
+         pr := ADR(a[5]);\n\
+         y := pr[2];\n\
+         pr[2] := 99.0;\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "x"), 2.0);
+    assert_eq!(field_f32(&it, "p", "y"), 3.5);
+    let inst = it.program_instance("p").unwrap();
+    if let Value::ArrF32(a) = it.instance_field(inst, "a").unwrap() {
+        assert_eq!(a.borrow()[7], 99.0, "pointer store hits the array");
+    } else {
+        panic!()
+    }
+}
+
+#[test]
+fn structs_and_initializers() {
+    let it = run(
+        "TYPE point : STRUCT x : REAL; y : REAL; tag : DINT; END_STRUCT END_TYPE\n\
+         PROGRAM p VAR\n\
+           a : point := (x := 1.0, y := 2.0);\n\
+           b : point;\n\
+           r : REAL;\n\
+         END_VAR\n\
+         b := a;\n\
+         b.y := 10.0;\n\
+         r := a.y + b.y + a.x;\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "r"), 13.0);
+}
+
+#[test]
+fn fb_methods_and_fields() {
+    let it = run(
+        "FUNCTION_BLOCK FB_Acc\n\
+         VAR total : REAL; n : DINT; END_VAR\n\
+         METHOD push : BOOL\n\
+         VAR_INPUT v : REAL; END_VAR\n\
+           total := total + v;\n\
+           n := n + 1;\n\
+           push := TRUE;\n\
+         END_METHOD\n\
+         METHOD mean : REAL\n\
+           IF n > 0 THEN mean := total / DINT_TO_REAL(n); END_IF\n\
+         END_METHOD\n\
+         END_FUNCTION_BLOCK\n\
+         PROGRAM p VAR acc : FB_Acc; m : REAL; ok : BOOL; END_VAR\n\
+         ok := acc.push(2.0);\n\
+         ok := acc.push(4.0);\n\
+         m := acc.mean();\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "m"), 3.0);
+}
+
+#[test]
+fn interface_dispatch() {
+    let it = run(
+        "INTERFACE IOp\n\
+           METHOD apply : REAL VAR_INPUT x : REAL; END_VAR END_METHOD\n\
+         END_INTERFACE\n\
+         FUNCTION_BLOCK FB_Twice IMPLEMENTS IOp\n\
+         METHOD apply : REAL VAR_INPUT x : REAL; END_VAR\n\
+           apply := 2.0 * x;\n\
+         END_METHOD\n\
+         END_FUNCTION_BLOCK\n\
+         FUNCTION_BLOCK FB_Square IMPLEMENTS IOp\n\
+         METHOD apply : REAL VAR_INPUT x : REAL; END_VAR\n\
+           apply := x * x;\n\
+         END_METHOD\n\
+         END_FUNCTION_BLOCK\n\
+         PROGRAM p VAR\n\
+           t : FB_Twice; s : FB_Square;\n\
+           ops : ARRAY[0..1] OF IOp;\n\
+           i : DINT; r : REAL; op : IOp;\n\
+         END_VAR\n\
+         ops[0] := t; ops[1] := s;\n\
+         FOR i := 0 TO 1 DO\n\
+           op := ops[i];\n\
+           r := r + op.apply(3.0);\n\
+         END_FOR\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "r"), 15.0); // 6 + 9
+}
+
+#[test]
+fn fb_invocation_with_body() {
+    let it = run(
+        "FUNCTION_BLOCK FB_Ctr\n\
+         VAR_INPUT inc : DINT; END_VAR\n\
+         VAR_OUTPUT out : DINT; END_VAR\n\
+         VAR count : DINT; END_VAR\n\
+         count := count + inc;\n\
+         out := count;\n\
+         END_FUNCTION_BLOCK\n\
+         PROGRAM p VAR c : FB_Ctr; got : DINT; END_VAR\n\
+         c(inc := 5);\n\
+         c(inc := 7, out => got);\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_int(&it, "p", "got"), 12);
+}
+
+#[test]
+fn recursion_is_rejected_at_compile_time() {
+    let err = st::compile(
+        "FUNCTION f : DINT\n\
+         VAR_INPUT n : DINT; END_VAR\n\
+         f := f(n - 1);\n\
+         END_FUNCTION",
+    )
+    .unwrap_err();
+    assert!(format!("{err}").to_lowercase().contains("recursion"));
+}
+
+#[test]
+fn mutual_recursion_rejected() {
+    let err = st::compile(
+        "FUNCTION a : DINT\nVAR_INPUT n : DINT; END_VAR\n a := b(n); END_FUNCTION\n\
+         FUNCTION b : DINT\nVAR_INPUT n : DINT; END_VAR\n b := a(n); END_FUNCTION",
+    )
+    .unwrap_err();
+    assert!(format!("{err}").to_lowercase().contains("recursion"));
+}
+
+#[test]
+fn const_array_bounds() {
+    let it = run(
+        "PROGRAM p\n\
+         VAR CONSTANT n : DINT := 8; m : DINT := n * 2; END_VAR\n\
+         VAR a : ARRAY[0..m - 1] OF REAL; s : REAL; i : DINT; END_VAR\n\
+         FOR i := 0 TO m - 1 DO a[i] := 1.0; END_FOR\n\
+         FOR i := 0 TO m - 1 DO s := s + a[i]; END_FOR\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "s"), 16.0);
+}
+
+#[test]
+fn index_out_of_bounds_is_runtime_error() {
+    let unit = st::compile(
+        "PROGRAM p VAR a : ARRAY[0..3] OF REAL; i : DINT; x : REAL; END_VAR\n\
+         i := 7;\n\
+         x := a[i];\n\
+         END_PROGRAM",
+    )
+    .unwrap();
+    let mut it = st::Interp::new(unit);
+    let err = it.run_program("p").unwrap_err();
+    assert!(err.message.contains("out of bounds"));
+}
+
+#[test]
+fn unbound_interface_call_is_runtime_error() {
+    let unit = st::compile(
+        "INTERFACE IOp METHOD go : BOOL END_METHOD END_INTERFACE\n\
+         FUNCTION_BLOCK FB_A IMPLEMENTS IOp\n\
+         METHOD go : BOOL go := TRUE; END_METHOD\n\
+         END_FUNCTION_BLOCK\n\
+         PROGRAM p VAR op : IOp; ok : BOOL; END_VAR\n\
+         ok := op.go();\n\
+         END_PROGRAM",
+    )
+    .unwrap();
+    let mut it = st::Interp::new(unit);
+    let err = it.run_program("p").unwrap_err();
+    assert!(err.message.contains("not bound"));
+}
+
+#[test]
+fn multidim_arrays_flatten_row_major() {
+    let it = run(
+        "PROGRAM p VAR\n\
+           m : ARRAY[0..2, 0..3] OF REAL;\n\
+           x : REAL; i, j : DINT;\n\
+         END_VAR\n\
+         FOR i := 0 TO 2 DO\n\
+           FOR j := 0 TO 3 DO\n\
+             m[i, j] := DINT_TO_REAL(i) * 10.0 + DINT_TO_REAL(j);\n\
+           END_FOR\n\
+         END_FOR\n\
+         x := m[2, 1];\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "x"), 21.0);
+}
+
+#[test]
+fn binarr_arrbin_round_trip() {
+    let dir = std::env::temp_dir().join("icsml_st_io_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = "PROGRAM p VAR\n\
+           a : ARRAY[0..7] OF REAL;\n\
+           b : ARRAY[0..7] OF REAL;\n\
+           i : DINT; ok : BOOL; s : REAL;\n\
+         END_VAR\n\
+         FOR i := 0 TO 7 DO a[i] := DINT_TO_REAL(i) * 1.5; END_FOR\n\
+         ok := ARRBIN('roundtrip.bin', 8 * SIZEOF(REAL), ADR(a));\n\
+         ok := BINARR('roundtrip.bin', 8 * SIZEOF(REAL), ADR(b));\n\
+         FOR i := 0 TO 7 DO s := s + b[i]; END_FOR\n\
+         END_PROGRAM";
+    let unit = st::compile(src).unwrap();
+    let mut it = st::Interp::new(unit).with_io_dir(&dir);
+    it.run_program("p").unwrap();
+    assert_eq!(field_f32(&it, "p", "s"), 1.5 * 28.0);
+    assert!(it.meter.io_calls >= 2);
+}
+
+#[test]
+fn meter_counts_dot_product_ops() {
+    // 64-element dot product: exactly 64 multiplies.
+    let src = "PROGRAM p VAR\n\
+           w, x : ARRAY[0..63] OF REAL; s : REAL; i : DINT;\n\
+         END_VAR\n\
+         FOR i := 0 TO 63 DO w[i] := 1.0; x[i] := 2.0; END_FOR\n\
+         s := 0.0;\n\
+         FOR i := 0 TO 63 DO s := s + w[i] * x[i]; END_FOR\n\
+         END_PROGRAM";
+    let unit = st::compile(src).unwrap();
+    let mut it = st::Interp::new(unit);
+    let before = it.meter.clone();
+    it.run_program("p").unwrap();
+    let d = it.meter.since(&before);
+    assert_eq!(field_f32(&it, "p", "s"), 128.0);
+    assert_eq!(d.fp_mul, 64);
+    assert!(d.fp_add >= 64);
+}
+
+#[test]
+fn integer_width_wrapping() {
+    let it = run(
+        "PROGRAM p VAR s : SINT; u : USINT; big : DINT; END_VAR\n\
+         big := 300;\n\
+         s := DINT_TO_SINT(big);\n\
+         u := DINT_TO_USINT(big);\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_int(&it, "p", "s"), 44);   // 300 wraps to 44 in i8
+    assert_eq!(field_int(&it, "p", "u"), 44);   // 300 & 0xFF
+}
+
+#[test]
+fn builtin_math() {
+    let it = run(
+        "PROGRAM p VAR a, b, c, d : REAL; t : DINT; END_VAR\n\
+         a := SQRT(16.0);\n\
+         b := EXP(0.0) + LN(1.0);\n\
+         c := MAX(1.5, MIN(9.0, 3.25));\n\
+         d := LIMIT(0.0, -5.0, 1.0);\n\
+         t := TRUNC(3.9);\n\
+         END_PROGRAM",
+        "p",
+    );
+    assert_eq!(field_f32(&it, "p", "a"), 4.0);
+    assert_eq!(field_f32(&it, "p", "b"), 1.0);
+    assert_eq!(field_f32(&it, "p", "c"), 3.25);
+    assert_eq!(field_f32(&it, "p", "d"), 0.0);
+    assert_eq!(field_int(&it, "p", "t"), 3);
+}
+
+#[test]
+fn globals_shared_across_programs() {
+    let src = "VAR_GLOBAL g : REAL; END_VAR\n\
+         PROGRAM writer g := 5.5; END_PROGRAM\n\
+         PROGRAM reader VAR x : REAL; END_VAR x := g * 2.0; END_PROGRAM";
+    let unit = st::compile(src).unwrap();
+    let mut it = st::Interp::new(unit);
+    it.run_program("writer").unwrap();
+    it.run_program("reader").unwrap();
+    assert_eq!(field_f32(&it, "reader", "x"), 11.0);
+}
+
+#[test]
+fn program_state_persists_across_scans() {
+    let unit = st::compile(
+        "PROGRAM p VAR count : DINT; END_VAR count := count + 1; END_PROGRAM",
+    )
+    .unwrap();
+    let mut it = st::Interp::new(unit);
+    for _ in 0..5 {
+        it.run_program("p").unwrap();
+    }
+    assert_eq!(field_int(&it, "p", "count"), 5);
+}
+
+#[test]
+fn type_errors_rejected() {
+    assert!(st::compile(
+        "PROGRAM p VAR x : REAL; b : BOOL; END_VAR x := b; END_PROGRAM"
+    )
+    .is_err());
+    assert!(st::compile(
+        "PROGRAM p VAR x : REAL; END_VAR IF x THEN x := 1.0; END_IF END_PROGRAM"
+    )
+    .is_err());
+    assert!(st::compile(
+        "PROGRAM p VAR i : DINT; x : REAL; END_VAR i := x; END_PROGRAM"
+    )
+    .is_err(), "narrowing REAL->DINT must need explicit conversion");
+}
+
+#[test]
+fn unknown_names_rejected() {
+    assert!(st::compile("PROGRAM p nope := 1; END_PROGRAM").is_err());
+    assert!(st::compile(
+        "PROGRAM p VAR x : REAL; END_VAR x := mystery(); END_PROGRAM"
+    )
+    .is_err());
+}
