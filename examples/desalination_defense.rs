@@ -14,7 +14,8 @@
 //! Outputs Fig. 7 series to /tmp/icsml_fig7.csv.
 
 use anyhow::Result;
-use icsml::defense::{Detector, EngineBackend, StBackend};
+use icsml::api::{EngineBackend, StBackend};
+use icsml::defense::Detector;
 use icsml::hitl::HitlRunner;
 use icsml::msf::{Attack, AttackFamily};
 use icsml::plc::HwProfile;
@@ -23,16 +24,17 @@ use icsml::runtime::{Runtime, XlaBackend};
 
 fn detector(man: &Manifest, backend: &str) -> Result<Detector> {
     let spec = man.model("classifier")?;
-    let b: Box<dyn icsml::defense::Backend> = match backend {
-        "engine" => Box::new(EngineBackend(porting::load_engine_model(
+    let b: Box<dyn icsml::api::Backend> = match backend {
+        "engine" => Box::new(EngineBackend::new(porting::load_engine_model(
             &man.root, spec,
         )?)),
         "xla" => {
             let rt = Runtime::cpu()?;
-            Box::new(XlaBackend {
-                exe: rt.load_hlo(&man.hlo_path("classifier_b1")?)?,
-                in_dim: 400,
-            })
+            Box::new(XlaBackend::new(
+                rt.load_hlo(&man.hlo_path("classifier_b1")?)?,
+                400,
+                2,
+            ))
         }
         _ => {
             // The real thing: generated ICSML ST on the PLC simulator.

@@ -7,7 +7,7 @@
 //! `cargo run --release --example model_porting`
 
 use anyhow::Result;
-use icsml::defense::{Backend, StBackend};
+use icsml::api::{Backend, StBackend};
 use icsml::plc::HwProfile;
 use icsml::porting::{self, codegen::CodegenOptions, Manifest};
 use icsml::runtime::{Runtime, XlaBackend};
@@ -39,10 +39,8 @@ fn main() -> Result<()> {
 
     // 3. XLA comparator.
     let rt = Runtime::cpu()?;
-    let mut xla = XlaBackend {
-        exe: rt.load_hlo(&man.hlo_path("classifier_b1")?)?,
-        in_dim: 400,
-    };
+    let mut xla =
+        XlaBackend::new(rt.load_hlo(&man.hlo_path("classifier_b1")?)?, 400, 2);
 
     // 4. Evaluate a slice: accuracy + ST-vs-XLA agreement + modeled
     //    on-PLC cost of one inference.

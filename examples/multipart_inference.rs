@@ -113,6 +113,7 @@ fn main() {
     let mut session = MultipartSession::new(model, profile);
     let (out, cycles) = session
         .run_to_completion(&x, budget_us, 100_000)
+        .expect("backend error")
         .expect("inference must finish");
 
     println!(

@@ -6,7 +6,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
-use icsml::defense::{Backend, EngineBackend, StBackend};
+use icsml::api::{Backend, EngineBackend, StBackend};
 use icsml::engine::{Act, Layer, Model};
 use icsml::plc::HwProfile;
 use icsml::porting::{codegen::CodegenOptions, generate_st_program,
@@ -57,7 +57,7 @@ fn main() -> Result<()> {
     // 3. Run the same input everywhere.
     let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).sin()).collect();
 
-    let mut engine = EngineBackend(Model::new(layers));
+    let mut engine = EngineBackend::new(Model::new(layers));
     let y_engine = engine.infer(&x)?;
 
     let mut interp = icsml::icsml_st::load(&st_src)

@@ -64,8 +64,10 @@ fn main() {
     for scan_ms in [30.0, 60.0, 90.0, 150.0, 300.0] {
         let budget = scan_ms * 1e3 - control_us;
         let mut sess = MultipartSession::new(mobilenet_ish(), profile.clone());
-        let (out, cycles) =
-            sess.run_to_completion(&x, budget, 1_000_000).unwrap();
+        let (out, cycles) = sess
+            .run_to_completion(&x, budget, 1_000_000)
+            .expect("backend error")
+            .expect("must finish");
         std::hint::black_box(&out);
         t.row(&[
             format!("{scan_ms:.0}"),

@@ -1,0 +1,585 @@
+//! The two in-crate execution substrates behind [`Backend`]: the
+//! native engine and the ST-interpreter PLC. (The XLA/PJRT adapter
+//! lives in [`crate::runtime`] next to the PJRT types it wraps.)
+
+use crate::engine::{Cursor, Layer, Model};
+use crate::st::{Interp, Meter, Value};
+
+use super::backend::{check_shapes, Backend};
+use super::error::InferenceError;
+use super::partial::PartialBackend;
+use super::spec::{ModelSpec, RowPlan};
+
+/// Native-engine backend (the §5.4 comparator). Fully resumable: the
+/// engine evaluates in (layer, row) chunks, so the partial session maps
+/// 1:1 onto [`Model::infer_partial_into`].
+pub struct EngineBackend {
+    pub model: Model,
+    input: Vec<f32>,
+    out_buf: Vec<f32>,
+    cursor: Option<Cursor>,
+    done: bool,
+}
+
+impl EngineBackend {
+    pub fn new(model: Model) -> EngineBackend {
+        let (in_dim, out_dim) = (model.in_dim(), model.out_dim());
+        EngineBackend {
+            model,
+            input: vec![0.0; in_dim],
+            out_buf: vec![0.0; out_dim],
+            cursor: None,
+            done: false,
+        }
+    }
+}
+
+impl Backend for EngineBackend {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn spec(&self) -> ModelSpec {
+        let quantization = self.model.layers().iter().find_map(|l| match l {
+            Layer::QuantDense { scheme, .. } => Some(*scheme),
+            _ => None,
+        });
+        ModelSpec {
+            in_dim: self.model.in_dim(),
+            out_dim: self.model.out_dim(),
+            supports_partial: true,
+            supports_meter: false,
+            quantization,
+        }
+    }
+
+    fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError> {
+        // Single-shot and partial evaluation share the model's
+        // ping-pong activation buffers: running one while a session is
+        // suspended would silently corrupt the session's state.
+        if self.cursor.is_some() {
+            return Err(InferenceError::SessionState {
+                backend: "engine".into(),
+                expected: "idle (a partial session is in flight)",
+            });
+        }
+        // Validate against the cached buffer lengths: `spec()` walks
+        // every layer and this is the zero-allocation hot path.
+        if x.len() != self.input.len() {
+            return Err(InferenceError::ShapeMismatch {
+                what: "input",
+                expected: self.input.len(),
+                got: x.len(),
+            });
+        }
+        if out.len() != self.out_buf.len() {
+            return Err(InferenceError::ShapeMismatch {
+                what: "output",
+                expected: self.out_buf.len(),
+                got: out.len(),
+            });
+        }
+        self.model.infer_into(x, out);
+        Ok(())
+    }
+
+    fn partial(&mut self) -> Option<&mut dyn PartialBackend> {
+        Some(self)
+    }
+}
+
+impl PartialBackend for EngineBackend {
+    fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError> {
+        if x.len() != self.input.len() {
+            return Err(InferenceError::ShapeMismatch {
+                what: "input",
+                expected: self.input.len(),
+                got: x.len(),
+            });
+        }
+        self.input.copy_from_slice(x);
+        self.cursor = Some(Cursor::default());
+        self.done = false;
+        Ok(())
+    }
+
+    fn in_flight(&self) -> bool {
+        self.cursor.is_some()
+    }
+
+    fn remaining_rows(&self) -> usize {
+        match self.cursor {
+            Some(c) => self.model.remaining_rows(c),
+            None => 0,
+        }
+    }
+
+    fn next_row_macs(&self) -> f64 {
+        let Some(c) = self.cursor else { return 0.0 };
+        let layers = self.model.layers();
+        if c.layer >= layers.len() {
+            return 0.0;
+        }
+        let l = &layers[c.layer];
+        l.macs() as f64 / l.chunk_rows().max(1) as f64
+    }
+
+    fn step(&mut self, row_budget: usize) -> Result<usize, InferenceError> {
+        let Some(c) = self.cursor else {
+            return Err(InferenceError::SessionState {
+                backend: "engine".into(),
+                expected: "begun",
+            });
+        };
+        if self.done || row_budget == 0 {
+            return Ok(0);
+        }
+        let before = self.model.remaining_rows(c);
+        let (c, done) = self.model.infer_partial_into(
+            &self.input,
+            c,
+            row_budget,
+            &mut self.out_buf,
+        );
+        self.cursor = Some(c);
+        self.done = done;
+        Ok(before - self.model.remaining_rows(c))
+    }
+
+    fn finished(&self) -> bool {
+        self.done
+    }
+
+    fn finish(&mut self, out: &mut [f32]) -> Result<(), InferenceError> {
+        if !self.done {
+            return Err(InferenceError::SessionState {
+                backend: "engine".into(),
+                expected: "finished",
+            });
+        }
+        if out.len() != self.out_buf.len() {
+            return Err(InferenceError::ShapeMismatch {
+                what: "output",
+                expected: self.out_buf.len(),
+                got: out.len(),
+            });
+        }
+        out.copy_from_slice(&self.out_buf);
+        self.cursor = None;
+        self.done = false;
+        Ok(())
+    }
+}
+
+/// ST-interpreter backend: the ported ICSML program running on the
+/// simulated PLC. Feeds the program's `inputs` array, runs one scan of
+/// the inference POU, reads `outputs`.
+///
+/// The interpreter cannot pause mid-POU, so the partial session
+/// emulates §6.3 scheduling: `step` advances a row cursor through the
+/// model's [`RowPlan`] (cost accounting, cycle counts and latency are
+/// therefore faithful to the schedule) and the POU executes once on the
+/// completing step. The output is schedule-invariant by construction
+/// and cross-checked against the engine in the coordinator tests.
+pub struct StBackend {
+    pub interp: Interp,
+    pub program: String,
+    last: Meter,
+    dims: (usize, usize),
+    plan: RowPlan,
+    input: Vec<f32>,
+    out_buf: Vec<f32>,
+    rows_done: usize,
+    active: bool,
+    done: bool,
+}
+
+impl StBackend {
+    pub fn new(interp: Interp, program: impl Into<String>) -> StBackend {
+        let program = program.into();
+        let dims = Self::probe_dims(&interp, &program).unwrap_or((0, 0));
+        StBackend {
+            plan: RowPlan::single(dims.0, dims.1),
+            input: vec![0.0; dims.0],
+            out_buf: vec![0.0; dims.1],
+            interp,
+            program,
+            last: Meter::new(),
+            dims,
+            rows_done: 0,
+            active: false,
+            done: false,
+        }
+    }
+
+    /// Attach the model's real layer structure so multipart scheduling
+    /// budgets rows at engine fidelity (e.g.
+    /// `RowPlan::from_layer_sizes(&spec.sizes)`).
+    pub fn with_plan(mut self, plan: RowPlan) -> StBackend {
+        self.plan = plan;
+        self
+    }
+
+    /// The constructor probe failed (program missing or its
+    /// `inputs`/`outputs` fields are not `ARRAY OF REAL`) — surface
+    /// the root cause instead of a misleading 0-dim shape mismatch.
+    fn ensure_probed(&self) -> Result<(), InferenceError> {
+        if self.dims == (0, 0) {
+            return Err(InferenceError::BackendUnavailable {
+                backend: "st".into(),
+                reason: format!(
+                    "program {} not found or missing inputs/outputs \
+                     ARRAY OF REAL fields",
+                    self.program
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn probe_dims(interp: &Interp, program: &str) -> Option<(usize, usize)> {
+        let inst = interp.program_instance(program)?;
+        let i = match interp.instance_field(inst, "inputs") {
+            Some(Value::ArrF32(a)) => a.borrow().len(),
+            _ => return None,
+        };
+        let o = match interp.instance_field(inst, "outputs") {
+            Some(Value::ArrF32(a)) => a.borrow().len(),
+            _ => return None,
+        };
+        Some((i, o))
+    }
+
+    /// Run one scan of the POU: `self.input` → program → `self.out_buf`.
+    fn run_program_io(&mut self) -> Result<(), InferenceError> {
+        let inst = self
+            .interp
+            .program_instance(&self.program)
+            .ok_or_else(|| InferenceError::BackendUnavailable {
+                backend: "st".into(),
+                reason: format!("no program {}", self.program),
+            })?;
+        match self.interp.instance_field(inst, "inputs") {
+            Some(Value::ArrF32(a)) => {
+                let mut b = a.borrow_mut();
+                // Program arrays disagreeing with the probed dims is
+                // backend-side drift, not a caller shape bug.
+                if b.len() != self.input.len() {
+                    return Err(InferenceError::BackendUnavailable {
+                        backend: "st".into(),
+                        reason: format!(
+                            "program inputs length {} != probed {}",
+                            b.len(),
+                            self.input.len()
+                        ),
+                    });
+                }
+                b.copy_from_slice(&self.input);
+            }
+            other => {
+                return Err(InferenceError::BackendUnavailable {
+                    backend: "st".into(),
+                    reason: format!("bad inputs field: {other:?}"),
+                })
+            }
+        }
+        let before = self.interp.meter.clone();
+        self.interp.run_program(&self.program).map_err(|e| {
+            InferenceError::ExecutionFailed {
+                backend: "st".into(),
+                source: anyhow::anyhow!("{e}"),
+            }
+        })?;
+        self.last = self.interp.meter.since(&before);
+        match self.interp.instance_field(inst, "outputs") {
+            Some(Value::ArrF32(a)) => {
+                let b = a.borrow();
+                if b.len() != self.out_buf.len() {
+                    return Err(InferenceError::BackendUnavailable {
+                        backend: "st".into(),
+                        reason: format!(
+                            "program outputs length {} != probed {}",
+                            b.len(),
+                            self.out_buf.len()
+                        ),
+                    });
+                }
+                self.out_buf.copy_from_slice(&b);
+                Ok(())
+            }
+            other => Err(InferenceError::BackendUnavailable {
+                backend: "st".into(),
+                reason: format!("bad outputs field: {other:?}"),
+            }),
+        }
+    }
+}
+
+impl Backend for StBackend {
+    fn name(&self) -> &'static str {
+        "st"
+    }
+
+    fn spec(&self) -> ModelSpec {
+        ModelSpec {
+            in_dim: self.dims.0,
+            out_dim: self.dims.1,
+            supports_partial: true,
+            supports_meter: true,
+            quantization: None,
+        }
+    }
+
+    fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError> {
+        self.ensure_probed()?;
+        // `input` doubles as the latched input of a suspended partial
+        // session — refuse to clobber it mid-session.
+        if self.active {
+            return Err(InferenceError::SessionState {
+                backend: "st".into(),
+                expected: "idle (a partial session is in flight)",
+            });
+        }
+        check_shapes(&self.spec(), x, out)?;
+        self.input.copy_from_slice(x);
+        self.run_program_io()?;
+        out.copy_from_slice(&self.out_buf);
+        Ok(())
+    }
+
+    fn last_meter(&self) -> Option<Meter> {
+        Some(self.last.clone())
+    }
+
+    fn partial(&mut self) -> Option<&mut dyn PartialBackend> {
+        Some(self)
+    }
+}
+
+impl PartialBackend for StBackend {
+    fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError> {
+        self.ensure_probed()?;
+        if x.len() != self.input.len() {
+            return Err(InferenceError::ShapeMismatch {
+                what: "input",
+                expected: self.input.len(),
+                got: x.len(),
+            });
+        }
+        self.input.copy_from_slice(x);
+        self.rows_done = 0;
+        self.active = true;
+        self.done = false;
+        Ok(())
+    }
+
+    fn in_flight(&self) -> bool {
+        self.active
+    }
+
+    fn remaining_rows(&self) -> usize {
+        if !self.active || self.done {
+            return 0;
+        }
+        self.plan.total_rows() - self.rows_done
+    }
+
+    fn next_row_macs(&self) -> f64 {
+        if !self.active || self.done {
+            return 0.0;
+        }
+        self.plan.row_macs(self.rows_done)
+    }
+
+    fn step(&mut self, row_budget: usize) -> Result<usize, InferenceError> {
+        if !self.active {
+            return Err(InferenceError::SessionState {
+                backend: "st".into(),
+                expected: "begun",
+            });
+        }
+        if self.done || row_budget == 0 {
+            return Ok(0);
+        }
+        let total = self.plan.total_rows();
+        let consumed = row_budget.min(total - self.rows_done);
+        // Run the POU before committing the completing rows: a
+        // transient interpreter error leaves the session one step
+        // short, so the next `step` retries instead of wedging at
+        // rows_done == total with done == false.
+        if self.rows_done + consumed >= total {
+            self.run_program_io()?;
+            self.done = true;
+        }
+        self.rows_done += consumed;
+        Ok(consumed)
+    }
+
+    fn finished(&self) -> bool {
+        self.done
+    }
+
+    fn finish(&mut self, out: &mut [f32]) -> Result<(), InferenceError> {
+        if !self.done {
+            return Err(InferenceError::SessionState {
+                backend: "st".into(),
+                expected: "finished",
+            });
+        }
+        if out.len() != self.out_buf.len() {
+            return Err(InferenceError::ShapeMismatch {
+                what: "output",
+                expected: self.out_buf.len(),
+                got: out.len(),
+            });
+        }
+        out.copy_from_slice(&self.out_buf);
+        self.active = false;
+        self.done = false;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Act;
+
+    fn toy() -> Model {
+        Model::new(vec![
+            Layer::Input { dim: 4 },
+            Layer::dense(
+                (0..12).map(|i| (i as f32) * 0.1 - 0.6).collect(),
+                vec![0.1, -0.1, 0.2],
+                4,
+                Act::Relu,
+            ),
+            Layer::dense(
+                (0..6).map(|i| 0.3 - (i as f32) * 0.07).collect(),
+                vec![0.05, -0.3],
+                3,
+                Act::None,
+            ),
+        ])
+    }
+
+    #[test]
+    fn engine_spec_reports_capabilities() {
+        let b = EngineBackend::new(toy());
+        let s = b.spec();
+        assert_eq!((s.in_dim, s.out_dim), (4, 2));
+        assert!(s.supports_partial);
+        assert!(!s.supports_meter);
+        assert_eq!(s.quantization, None);
+    }
+
+    #[test]
+    fn engine_infer_into_matches_infer() {
+        let mut b = EngineBackend::new(toy());
+        let x = [0.4, -0.2, 0.9, 1.4];
+        let via_vec = b.infer(&x).unwrap();
+        let mut out = [0.0f32; 2];
+        b.infer_into(&x, &mut out).unwrap();
+        assert_eq!(out.to_vec(), via_vec);
+    }
+
+    #[test]
+    fn engine_shape_mismatch_is_typed() {
+        let mut b = EngineBackend::new(toy());
+        let mut out = [0.0f32; 2];
+        match b.infer_into(&[1.0; 3], &mut out) {
+            Err(InferenceError::ShapeMismatch { expected: 4, got: 3, .. }) => {}
+            other => panic!("want ShapeMismatch, got {other:?}"),
+        }
+        match b.infer_into(&[1.0; 4], &mut out[..1]) {
+            Err(InferenceError::ShapeMismatch { expected: 2, got: 1, .. }) => {}
+            other => panic!("want ShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_partial_session_matches_single_shot() {
+        let x = [0.7, -0.4, 1.1, 0.2];
+        let want = EngineBackend::new(toy()).infer(&x).unwrap();
+        let mut b = EngineBackend::new(toy());
+        let p = b.partial().expect("engine supports partial");
+        p.begin(&x).unwrap();
+        assert!(p.in_flight());
+        let mut steps = 0;
+        while !p.finished() {
+            assert!(p.next_row_macs() >= 0.0);
+            assert!(p.step(2).unwrap() >= 1);
+            steps += 1;
+            assert!(steps < 100, "did not converge");
+        }
+        assert_eq!(p.remaining_rows(), 0);
+        let mut out = [0.0f32; 2];
+        p.finish(&mut out).unwrap();
+        assert_eq!(out.to_vec(), want);
+        assert!(!p.in_flight());
+    }
+
+    #[test]
+    fn engine_step_before_begin_is_session_error() {
+        let mut b = EngineBackend::new(toy());
+        match PartialBackend::step(&mut b, 1) {
+            Err(InferenceError::SessionState { .. }) => {}
+            other => panic!("want SessionState, got {other:?}"),
+        }
+        let mut out = [0.0f32; 2];
+        match PartialBackend::finish(&mut b, &mut out) {
+            Err(InferenceError::SessionState { .. }) => {}
+            other => panic!("want SessionState, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infer_into_rejected_while_partial_session_in_flight() {
+        let mut b = EngineBackend::new(toy());
+        let x = [0.1f32, 0.2, 0.3, 0.4];
+        let want = EngineBackend::new(toy()).infer(&x).unwrap();
+        PartialBackend::begin(&mut b, &x).unwrap();
+        b.step(2).unwrap();
+        // A single-shot call mid-session would corrupt the suspended
+        // activations — it must be refused, not silently served.
+        let mut out = [0.0f32; 2];
+        match b.infer_into(&x, &mut out) {
+            Err(InferenceError::SessionState { .. }) => {}
+            other => panic!("want SessionState, got {other:?}"),
+        }
+        // The session itself is unharmed and completes correctly.
+        while !b.finished() {
+            b.step(2).unwrap();
+        }
+        PartialBackend::finish(&mut b, &mut out).unwrap();
+        assert_eq!(out.to_vec(), want);
+        // Idle again: single-shot works.
+        b.infer_into(&x, &mut out).unwrap();
+    }
+
+    #[test]
+    fn default_batch_equals_sequential() {
+        let mut b = EngineBackend::new(toy());
+        let xs: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut batched = vec![0.0f32; 6];
+        assert_eq!(b.infer_batch(&xs, &mut batched).unwrap(), 3);
+        for i in 0..3 {
+            let one = b.infer(&xs[i * 4..(i + 1) * 4]).unwrap();
+            assert_eq!(&batched[i * 2..(i + 1) * 2], &one[..]);
+        }
+    }
+
+    #[test]
+    fn batch_shape_errors_are_typed() {
+        let mut b = EngineBackend::new(toy());
+        let mut out = vec![0.0f32; 2];
+        match b.infer_batch(&[0.0; 5], &mut out) {
+            Err(InferenceError::ShapeMismatch { what: "batch input", .. }) => {}
+            other => panic!("want batch input mismatch, got {other:?}"),
+        }
+        match b.infer_batch(&[0.0; 8], &mut out[..1]) {
+            Err(InferenceError::ShapeMismatch { what: "batch output", .. }) => {}
+            other => panic!("want batch output mismatch, got {other:?}"),
+        }
+    }
+}

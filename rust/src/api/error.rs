@@ -1,0 +1,139 @@
+//! Typed inference errors.
+//!
+//! The old `defense::Backend` reported every failure as an untyped
+//! `anyhow!` string, which made router policy impossible: a shape bug
+//! (caller error, never retry) was indistinguishable from a flaky
+//! backend (retry elsewhere). Consumers that don't care still get free
+//! conversion into `anyhow::Error` via `?`.
+
+use std::fmt;
+
+/// Why an inference request failed.
+#[derive(Debug)]
+pub enum InferenceError {
+    /// An input/output buffer had the wrong length for the model.
+    ShapeMismatch {
+        /// Which buffer ("input", "output", "batch input", ...).
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// The backend exists but cannot serve right now (missing
+    /// artifacts, uninitialized program instance, ...).
+    BackendUnavailable { backend: String, reason: String },
+    /// The backend does not implement the requested operation
+    /// (e.g. partial inference on a single-shot substrate).
+    Unsupported { backend: String, op: &'static str },
+    /// The backend tried and failed mid-execution.
+    ExecutionFailed { backend: String, source: anyhow::Error },
+    /// A partial-session call arrived in the wrong state
+    /// (`step` before `begin`, `finish` before completion, ...).
+    SessionState { backend: String, expected: &'static str },
+    /// A router had no backends registered.
+    NoBackends,
+    /// A router exhausted every candidate backend.
+    AllBackendsFailed {
+        /// (backend name, error description) per attempt, in try order.
+        failures: Vec<(String, String)>,
+    },
+}
+
+impl InferenceError {
+    /// True when the fault lies with the backend (flaky execution,
+    /// missing artifacts, bad session state) — the class a router
+    /// should penalize and retry elsewhere. False for caller-side
+    /// errors ([`InferenceError::ShapeMismatch`]) and router
+    /// aggregates, which say nothing about the backend's health.
+    pub fn is_backend_fault(&self) -> bool {
+        matches!(
+            self,
+            InferenceError::BackendUnavailable { .. }
+                | InferenceError::Unsupported { .. }
+                | InferenceError::ExecutionFailed { .. }
+                | InferenceError::SessionState { .. }
+        )
+    }
+}
+
+impl fmt::Display for InferenceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InferenceError::ShapeMismatch { what, expected, got } => {
+                write!(f, "shape mismatch: {what} has length {got}, model expects {expected}")
+            }
+            InferenceError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend {backend} unavailable: {reason}")
+            }
+            InferenceError::Unsupported { backend, op } => {
+                write!(f, "backend {backend} does not support {op}")
+            }
+            InferenceError::ExecutionFailed { backend, source } => {
+                write!(f, "backend {backend} execution failed: {source}")
+            }
+            InferenceError::SessionState { backend, expected } => {
+                write!(
+                    f,
+                    "backend {backend}: invalid session state, expected {expected}"
+                )
+            }
+            InferenceError::NoBackends => write!(f, "no backends registered"),
+            InferenceError::AllBackendsFailed { failures } => {
+                write!(f, "all {} backend(s) failed:", failures.len())?;
+                for (name, err) in failures {
+                    write!(f, " [{name}: {err}]")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for InferenceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            InferenceError::ExecutionFailed { source, .. } => {
+                let e: &(dyn std::error::Error + Send + Sync + 'static) =
+                    source.as_ref();
+                Some(e)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = InferenceError::ShapeMismatch {
+            what: "input",
+            expected: 400,
+            got: 3,
+        };
+        let s = e.to_string();
+        assert!(s.contains("400") && s.contains("3") && s.contains("input"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(InferenceError::NoBackends)?
+        }
+        let err = fails().unwrap_err();
+        assert!(err.downcast_ref::<InferenceError>().is_some());
+    }
+
+    #[test]
+    fn execution_failed_preserves_source() {
+        let e = InferenceError::ExecutionFailed {
+            backend: "xla".into(),
+            source: anyhow::anyhow!("pjrt: device lost"),
+        };
+        assert!(std::error::Error::source(&e)
+            .unwrap()
+            .to_string()
+            .contains("device lost"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Resumable inference: the §6.3 `begin`/`step`/`finish` sub-API.
+//!
+//! A multipart inference runs one logical request across many PLC scan
+//! cycles. The session protocol:
+//!
+//! 1. [`PartialBackend::begin`] latches the input and resets the row
+//!    cursor;
+//! 2. the scheduler calls [`PartialBackend::step`] with a per-cycle
+//!    row budget until [`PartialBackend::finished`] — using
+//!    [`PartialBackend::next_row_macs`] to convert rows into modeled
+//!    µs on a hardware profile;
+//! 3. [`PartialBackend::finish`] writes the logits and closes the
+//!    session.
+//!
+//! The coordinator's `MultipartSession` drives this over *any* capable
+//! backend; it no longer owns a concrete engine model.
+
+use super::backend::Backend;
+use super::error::InferenceError;
+
+/// A backend capable of resumable (multipart) inference.
+///
+/// At most one session is active per backend; `begin` while a session
+/// is in flight restarts it (matching the paper's semantics where a
+/// new scan value preempts a stale inference).
+pub trait PartialBackend: Backend {
+    /// Start a session for input `x` (length `spec().in_dim`).
+    fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError>;
+
+    /// A session is active (begun and not yet finished+collected).
+    fn in_flight(&self) -> bool;
+
+    /// Rows left before the session completes (0 once finished).
+    fn remaining_rows(&self) -> usize;
+
+    /// Modeled multiply-accumulate count of the next row — the
+    /// scheduler's unit of cost. 0.0 when no row remains.
+    fn next_row_macs(&self) -> f64;
+
+    /// Advance by at most `row_budget` rows; returns rows actually
+    /// consumed (≥ 1 while unfinished rows remain — a single row is
+    /// the minimum schedulable unit).
+    fn step(&mut self, row_budget: usize) -> Result<usize, InferenceError>;
+
+    /// All rows have been consumed; `finish` may be called.
+    fn finished(&self) -> bool;
+
+    /// Write the session's logits into `out` (length
+    /// `spec().out_dim`) and close the session.
+    fn finish(&mut self, out: &mut [f32]) -> Result<(), InferenceError>;
+}

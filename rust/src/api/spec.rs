@@ -1,0 +1,121 @@
+//! Capability descriptors: what a backend's model looks like and what
+//! the backend can do with it.
+
+use crate::quant::Scheme;
+
+/// Shape + capability descriptor returned by [`crate::api::Backend::spec`].
+///
+/// Consumers negotiate against this instead of downcasting to concrete
+/// backend types: the multipart coordinator checks `supports_partial`,
+/// the PLC cost reports check `supports_meter`, quantized serving
+/// checks `quantization`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Flattened input feature count.
+    pub in_dim: usize,
+    /// Flattened output (logit) count.
+    pub out_dim: usize,
+    /// The backend can run resumable `begin`/`step`/`finish` sessions
+    /// (paper §6.3 multipart inference).
+    pub supports_partial: bool,
+    /// The backend meters ST instruction costs per inference
+    /// ([`crate::api::Backend::last_meter`] returns `Some`).
+    pub supports_meter: bool,
+    /// Integer quantization scheme the weights are stored in, if any
+    /// (paper §6.1); `None` means f32 (`REAL`).
+    pub quantization: Option<Scheme>,
+}
+
+impl ModelSpec {
+    /// A plain f32 single-shot model — the common case; flip the
+    /// capability flags on the result as needed.
+    pub fn dense_f32(in_dim: usize, out_dim: usize) -> ModelSpec {
+        ModelSpec {
+            in_dim,
+            out_dim,
+            supports_partial: false,
+            supports_meter: false,
+            quantization: None,
+        }
+    }
+}
+
+/// One schedulable chunk of a resumable inference: `rows` rows, each
+/// costing `macs_per_row` multiply-accumulates in the PLC timing model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowChunk {
+    pub rows: usize,
+    pub macs_per_row: f64,
+}
+
+/// The row-level execution plan of a model, used by backends whose
+/// substrate cannot pause mid-layer (the ST interpreter) to expose a
+/// §6.3-schedulable cost structure, and by the coordinator to budget
+/// cycles.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RowPlan {
+    pub chunks: Vec<RowChunk>,
+}
+
+impl RowPlan {
+    /// Plan for a dense MLP given its layer sizes
+    /// (`[in, hidden.., out]`): layer *i* contributes `sizes[i+1]` rows
+    /// of `sizes[i]` MACs each — exactly the engine's chunking.
+    pub fn from_layer_sizes(sizes: &[usize]) -> RowPlan {
+        let chunks = sizes
+            .windows(2)
+            .map(|w| RowChunk { rows: w[1], macs_per_row: w[0] as f64 })
+            .collect();
+        RowPlan { chunks }
+    }
+
+    /// Degenerate single-chunk plan (used when only total dims are
+    /// known: `out_dim` rows of `in_dim` MACs).
+    pub fn single(in_dim: usize, out_dim: usize) -> RowPlan {
+        RowPlan {
+            chunks: vec![RowChunk {
+                rows: out_dim.max(1),
+                macs_per_row: in_dim as f64,
+            }],
+        }
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.chunks.iter().map(|c| c.rows).sum()
+    }
+
+    /// MACs of the row at global row index `pos` (row indices run
+    /// through the chunks in order). Returns 0.0 past the end.
+    pub fn row_macs(&self, pos: usize) -> f64 {
+        let mut seen = 0usize;
+        for c in &self.chunks {
+            if pos < seen + c.rows {
+                return c.macs_per_row;
+            }
+            seen += c.rows;
+        }
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_from_sizes_matches_engine_chunking() {
+        let p = RowPlan::from_layer_sizes(&[8, 16, 4]);
+        assert_eq!(p.total_rows(), 20);
+        assert_eq!(p.row_macs(0), 8.0);
+        assert_eq!(p.row_macs(15), 8.0);
+        assert_eq!(p.row_macs(16), 16.0);
+        assert_eq!(p.row_macs(19), 16.0);
+        assert_eq!(p.row_macs(20), 0.0);
+    }
+
+    #[test]
+    fn single_plan_never_empty() {
+        let p = RowPlan::single(400, 0);
+        assert_eq!(p.total_rows(), 1);
+    }
+}

@@ -1,9 +1,10 @@
-//! Coordination layer: inference-backend router and the §6.3 multipart
-//! scheduler (splitting inference across scan cycles under a per-cycle
-//! CPU budget).
+//! Coordination layer over the [`crate::api`] inference contract: the
+//! policy router (with error fallback + penalties) and the §6.3
+//! multipart scheduler (splitting inference across scan cycles under a
+//! per-cycle CPU budget, on any [`crate::api::PartialBackend`]).
 
 pub mod multipart;
 pub mod router;
 
 pub use multipart::{MultipartSession, MultipartStats};
-pub use router::{InferenceRouter, RoutePolicy};
+pub use router::{BackendStats, InferenceRouter, RoutePolicy, ERROR_PENALTY_US};

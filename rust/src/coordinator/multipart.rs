@@ -1,12 +1,12 @@
 //! Multipart inference (paper §6.3): when the model does not fit the
 //! scan cycle, split the computation across cycles. The scheduler
-//! walks the engine model's (layer, row) chunks, charging each row its
-//! modeled on-PLC cost and stopping when the cycle's ML budget is
-//! spent. Correctness invariant (property-tested): any schedule yields
-//! the single-shot output exactly.
+//! drives any [`PartialBackend`]'s `begin`/`step`/`finish` session,
+//! charging each row its modeled on-PLC cost and stopping when the
+//! cycle's ML budget is spent. Correctness invariant (property-tested):
+//! any schedule yields the single-shot output exactly.
 
-use crate::engine::model::{Cursor, Model};
-use crate::engine::Layer;
+use crate::api::{Backend, EngineBackend, InferenceError, PartialBackend};
+use crate::engine::{Layer, Model};
 use crate::plc::HwProfile;
 
 /// ST-equivalent modeled cost per MAC on a profile, anchored to the
@@ -21,12 +21,16 @@ pub fn us_per_mac(profile: &HwProfile) -> f64 {
         + 1.05 * profile.costs.branch
 }
 
-/// Modeled cost (µs) of one output row of a layer.
+/// Modeled cost (µs) of one output row costing `macs` MACs.
+pub fn row_macs_cost_us(macs: f64, profile: &HwProfile) -> f64 {
+    // per-row call overhead (method dispatch + epilogue)
+    macs * us_per_mac(profile) + profile.costs.call
+}
+
+/// Modeled cost (µs) of one output row of an engine layer.
 pub fn row_cost_us(layer: &Layer, profile: &HwProfile) -> f64 {
     let rows = layer.chunk_rows().max(1) as f64;
-    let per_row_macs = layer.macs() as f64 / rows;
-    // per-row call overhead (method dispatch + epilogue)
-    per_row_macs * us_per_mac(profile) + profile.costs.call
+    row_macs_cost_us(layer.macs() as f64 / rows, profile)
 }
 
 /// Statistics from a multipart run.
@@ -40,37 +44,53 @@ pub struct MultipartStats {
     pub total_us: f64,
 }
 
-/// A resumable inference session over an engine model.
+/// A resumable inference session scheduled over any capable backend
+/// (engine, ST interpreter, ...) — the §6.3 coordinator. It owns no
+/// concrete model; all substrate access goes through
+/// [`PartialBackend`].
 pub struct MultipartSession {
-    pub model: Model,
+    backend: Box<dyn PartialBackend>,
     pub profile: HwProfile,
-    cursor: Cursor,
-    input: Vec<f32>,
+    out_buf: Vec<f32>,
     pub stats: MultipartStats,
 }
 
 impl MultipartSession {
+    /// Engine-backed session (the common §6.3 configuration).
     pub fn new(model: Model, profile: HwProfile) -> MultipartSession {
-        let in_dim = model.in_dim();
-        MultipartSession {
-            model,
+        MultipartSession::with_backend(
+            Box::new(EngineBackend::new(model)),
             profile,
-            cursor: Cursor::default(),
-            input: vec![0.0; in_dim],
+        )
+    }
+
+    /// Session over an arbitrary resumable backend.
+    pub fn with_backend(
+        backend: Box<dyn PartialBackend>,
+        profile: HwProfile,
+    ) -> MultipartSession {
+        let out_dim = backend.spec().out_dim;
+        MultipartSession {
+            backend,
+            profile,
+            out_buf: vec![0.0; out_dim],
             stats: MultipartStats::default(),
         }
     }
 
-    /// Begin a new inference with input `x` (resets the cursor).
-    pub fn begin(&mut self, x: &[f32]) {
-        assert_eq!(x.len(), self.input.len());
-        self.input.copy_from_slice(x);
-        self.cursor = Cursor::default();
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Begin a new inference with input `x` (resets the session).
+    pub fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError> {
+        self.backend.begin(x)?;
         self.stats = MultipartStats::default();
+        Ok(())
     }
 
     pub fn in_flight(&self) -> bool {
-        self.cursor != Cursor::default()
+        self.backend.in_flight()
     }
 
     /// Run one scan cycle's worth of work under `budget_us` of modeled
@@ -78,62 +98,75 @@ impl MultipartSession {
     /// this cycle. Always makes progress (at least one row per cycle),
     /// matching the paper's behaviour where a single row is the minimum
     /// schedulable unit.
-    pub fn step_cycle(&mut self, budget_us: f64) -> Option<Vec<f32>> {
+    pub fn step_cycle(
+        &mut self,
+        budget_us: f64,
+    ) -> Result<Option<Vec<f32>>, InferenceError> {
         let mut spent = 0.0f64;
         let mut rows_done = 0usize;
-        let mut result = None;
-        loop {
-            if self.cursor.layer >= self.model.layers().len() {
-                break;
-            }
+        let mut step_err = None;
+        while !self.backend.finished() {
             let cost =
-                row_cost_us(&self.model.layers()[self.cursor.layer], &self.profile);
+                row_macs_cost_us(self.backend.next_row_macs(), &self.profile);
             if rows_done > 0 && spent + cost > budget_us {
                 break;
             }
-            let (c, out) =
-                self.model.infer_partial(&self.input, self.cursor, 1);
-            self.cursor = c;
-            spent += cost;
-            rows_done += 1;
-            if let Some(out) = out {
-                result = Some(out);
-                break;
+            match self.backend.step(1) {
+                Ok(0) => break,
+                Ok(consumed) => {
+                    spent += cost;
+                    rows_done += consumed;
+                }
+                Err(e) => {
+                    step_err = Some(e);
+                    break;
+                }
             }
         }
+        // Charge the cycle before propagating any error: rows already
+        // executed consumed real budget even if a later step faulted,
+        // and a retried cycle does not re-step them.
         self.stats.cycles += 1;
         self.stats.total_us += spent;
         if spent > self.stats.max_cycle_us {
             self.stats.max_cycle_us = spent;
         }
-        if result.is_some() {
-            self.cursor = Cursor::default();
+        if let Some(e) = step_err {
+            return Err(e);
         }
-        result
+        if self.backend.finished() {
+            self.backend.finish(&mut self.out_buf)?;
+            Ok(Some(self.out_buf.clone()))
+        } else {
+            Ok(None)
+        }
     }
 
     /// Run a whole inference under a fixed per-cycle budget; returns
-    /// (output, cycles used). Output latency = cycles × scan period.
+    /// (output, cycles used), or `None` when `max_cycles` was not
+    /// enough. Output latency = cycles × scan period.
     pub fn run_to_completion(
         &mut self,
         x: &[f32],
         budget_us: f64,
         max_cycles: u64,
-    ) -> Option<(Vec<f32>, u64)> {
-        self.begin(x);
+    ) -> Result<Option<(Vec<f32>, u64)>, InferenceError> {
+        self.begin(x)?;
         for cycle in 1..=max_cycles {
-            if let Some(out) = self.step_cycle(budget_us) {
-                return Some((out, cycle));
+            if let Some(out) = self.step_cycle(budget_us)? {
+                return Ok(Some((out, cycle)));
             }
         }
-        None
+        Ok(None)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{Act, Layer};
+    use crate::api::{Backend, RowPlan, StBackend};
+    use crate::engine::Act;
+    use crate::util::fixtures;
     use crate::util::prop::{prop_assert, prop_check};
 
     fn model() -> Model {
@@ -165,6 +198,7 @@ mod tests {
             let budget = g.f64_in(0.5, 50.0);
             let got = sess
                 .run_to_completion(&x, budget, 10_000)
+                .expect("no backend error")
                 .expect("must finish");
             prop_assert(
                 got.0 == want,
@@ -178,9 +212,10 @@ mod tests {
     fn smaller_budget_takes_more_cycles() {
         let x = [0.3f32; 8];
         let mut s1 = MultipartSession::new(model(), HwProfile::beaglebone());
-        let (_, fast) = s1.run_to_completion(&x, 1e9, 10).unwrap();
+        let (_, fast) = s1.run_to_completion(&x, 1e9, 10).unwrap().unwrap();
         let mut s2 = MultipartSession::new(model(), HwProfile::beaglebone());
-        let (_, slow) = s2.run_to_completion(&x, 1.0, 10_000).unwrap();
+        let (_, slow) =
+            s2.run_to_completion(&x, 1.0, 10_000).unwrap().unwrap();
         assert_eq!(fast, 1, "unlimited budget completes in one cycle");
         assert!(slow > fast, "tight budget spreads across cycles ({slow})");
     }
@@ -188,9 +223,10 @@ mod tests {
     #[test]
     fn budget_respected_beyond_first_row() {
         let mut sess = MultipartSession::new(model(), HwProfile::beaglebone());
-        sess.begin(&[0.1; 8]);
-        let budget = 2.0 * row_cost_us(&model().layers()[1], &HwProfile::beaglebone());
-        while sess.step_cycle(budget).is_none() {}
+        sess.begin(&[0.1; 8]).unwrap();
+        let budget =
+            2.0 * row_cost_us(&model().layers()[1], &HwProfile::beaglebone());
+        while sess.step_cycle(budget).unwrap().is_none() {}
         // max cycle time may exceed budget by at most one row's cost
         // (minimum progress guarantee).
         let max_row = model()
@@ -208,5 +244,59 @@ mod tests {
             row_cost_us(&l, &HwProfile::wago_pfc100())
                 > row_cost_us(&l, &HwProfile::beaglebone())
         );
+    }
+
+    /// The shared 8-16-4 fixture as an ST-interpreter backend (ported
+    /// ICSML code + weights on disk, with the real layer plan) and as
+    /// an engine model.
+    fn st_backend_and_reference(tag: &str) -> (StBackend, Model) {
+        let (st, reference) = fixtures::ported_mlp_8_16_4(77, tag);
+        let st = st.with_plan(RowPlan::from_layer_sizes(&fixtures::MLP_SIZES));
+        (st, reference)
+    }
+
+    #[test]
+    fn multipart_schedules_over_st_backend() {
+        // The acceptance property of the backend-agnostic redesign: a
+        // full §6.3 inference through a *non-engine* backend (the ST
+        // interpreter PLC), schedule-invariant vs the single-shot
+        // engine result for any per-cycle budget.
+        let (st, mut reference) = st_backend_and_reference("invariance");
+        assert!(st.spec().supports_partial);
+        let mut sess =
+            MultipartSession::with_backend(Box::new(st), HwProfile::beaglebone());
+        assert_eq!(sess.backend_name(), "st");
+        prop_check(10, |g| {
+            let x: Vec<f32> = (0..8).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let want = reference.infer(&x);
+            let budget = g.f64_in(0.5, 30.0);
+            let (got, cycles) = sess
+                .run_to_completion(&x, budget, 10_000)
+                .expect("no backend error")
+                .expect("must finish");
+            prop_assert(cycles >= 1, "at least one cycle")?;
+            let dev = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            prop_assert(
+                dev < 1e-5,
+                format!("st multipart {got:?} != engine single {want:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn st_tight_budget_spreads_across_cycles() {
+        let (st, _) = st_backend_and_reference("budget");
+        let mut sess =
+            MultipartSession::with_backend(Box::new(st), HwProfile::beaglebone());
+        let x = [0.25f32; 8];
+        let (_, one) = sess.run_to_completion(&x, 1e9, 10).unwrap().unwrap();
+        assert_eq!(one, 1);
+        let (_, many) =
+            sess.run_to_completion(&x, 1.0, 10_000).unwrap().unwrap();
+        assert!(many > 1, "tight budget must take multiple cycles ({many})");
     }
 }

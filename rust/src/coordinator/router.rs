@@ -3,38 +3,76 @@
 //! policy. On a real deployment the ST path *is* the PLC; the router
 //! exists so the serving examples and benchmarks can exercise all
 //! paths uniformly and fall back when a backend is unavailable.
+//!
+//! Resilience: a request only fails when *every* registered backend
+//! fails. On a backend error the router records a latency penalty
+//! against it (so `FastestObserved` stops re-picking a flaky-but-fast
+//! backend) and retries the next-best candidate per policy.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::api::{Backend, InferenceError};
 
-use crate::defense::Backend;
+/// Modeled latency charged per error when ranking backends: one full
+/// second — a flaky backend has to be *very* fast to stay attractive.
+pub const ERROR_PENALTY_US: f64 = 1e6;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
-    /// Always use the named backend.
+    /// Prefer the named backend; fall back to the others (ranked by
+    /// observed score) only when it fails.
     Pinned,
-    /// Fastest observed mean latency (after a warmup per backend).
+    /// Fastest observed mean latency (after a warmup per backend),
+    /// errors penalized.
     FastestObserved,
 }
 
 /// Per-backend running statistics.
 #[derive(Debug, Clone, Default)]
 pub struct BackendStats {
+    /// Successful requests.
     pub requests: u64,
+    /// Total latency of successful requests (µs).
     pub total_us: f64,
+    /// All errors, including caller-side shape bugs.
     pub errors: u64,
+    /// Backend-fault errors ([`crate::api::InferenceError::is_backend_fault`]);
+    /// only these carry penalty.
+    pub faults: u64,
+    /// Accumulated fault penalty (µs), [`ERROR_PENALTY_US`] per fault.
+    pub penalty_us: f64,
 }
 
 impl BackendStats {
+    /// Mean latency over *successful* requests.
     pub fn mean_us(&self) -> f64 {
         if self.requests == 0 {
             f64::INFINITY
         } else {
             self.total_us / self.requests as f64
         }
+    }
+
+    /// Ranking score: mean over successes + faults, with each fault
+    /// charged [`ERROR_PENALTY_US`]. Caller-side errors don't count as
+    /// attempts, so they neither boost nor demote. No signal → infinite
+    /// (the exploration pass handles untried backends separately).
+    pub fn score_us(&self) -> f64 {
+        let attempts = self.requests + self.faults;
+        if attempts == 0 {
+            f64::INFINITY
+        } else {
+            (self.total_us + self.penalty_us) / attempts as f64
+        }
+    }
+
+    /// Has latency signal (successes or penalized faults). Caller-side
+    /// errors don't count — a backend that only ever saw malformed
+    /// requests still deserves its exploration pass.
+    fn tried(&self) -> bool {
+        self.requests + self.faults > 0
     }
 }
 
@@ -70,62 +108,156 @@ impl InferenceRouter {
         self.stats.get(name)
     }
 
-    /// Pick a backend per policy.
-    fn pick(&self) -> Result<String> {
-        anyhow::ensure!(!self.backends.is_empty(), "no backends registered");
-        match self.policy {
-            RoutePolicy::Pinned => self
+    /// Rank every registered backend per policy: the policy's first
+    /// choice leads, the rest follow as fallbacks (best score first).
+    fn ranked(&self) -> Result<Vec<String>, InferenceError> {
+        if self.backends.is_empty() {
+            return Err(InferenceError::NoBackends);
+        }
+        // Untried backends first (exploration, registration-name
+        // order), then by score.
+        let mut order: Vec<String> = Vec::with_capacity(self.backends.len());
+        for (name, s) in &self.stats {
+            if self.backends.contains_key(name) && !s.tried() {
+                order.push(name.clone());
+            }
+        }
+        let mut tried: Vec<&String> = self
+            .stats
+            .iter()
+            .filter(|(n, s)| self.backends.contains_key(*n) && s.tried())
+            .map(|(n, _)| n)
+            .collect();
+        tried.sort_by(|a, b| {
+            self.stats[*a]
+                .score_us()
+                .partial_cmp(&self.stats[*b].score_us())
+                .unwrap()
+                .then_with(|| a.cmp(b))
+        });
+        order.extend(tried.into_iter().cloned());
+
+        if self.policy == RoutePolicy::Pinned {
+            // A pinned backend leads; an unset or unregistered pin is
+            // a config error we tolerate by serving from the ranked
+            // list — a request only fails when every backend fails.
+            if let Some(pinned) = self
                 .pinned
                 .clone()
                 .filter(|p| self.backends.contains_key(p))
-                .ok_or_else(|| anyhow::anyhow!("pinned backend missing")),
-            RoutePolicy::FastestObserved => {
-                // Prefer any backend that has not been tried yet
-                // (exploration), then the fastest mean.
-                if let Some((name, _)) = self
-                    .stats
-                    .iter()
-                    .find(|(_, s)| s.requests == 0)
-                {
-                    return Ok(name.clone());
-                }
-                Ok(self
-                    .stats
-                    .iter()
-                    .min_by(|a, b| {
-                        a.1.mean_us().partial_cmp(&b.1.mean_us()).unwrap()
-                    })
-                    .map(|(n, _)| n.clone())
-                    .unwrap())
+            {
+                order.retain(|n| *n != pinned);
+                order.insert(0, pinned);
             }
+        }
+        Ok(order)
+    }
+
+    /// Record `n` served requests under one wall-clock measurement (a
+    /// batch counts per row, so per-request means stay comparable
+    /// between batch and single traffic).
+    fn record_ok(&mut self, name: &str, t: Instant, n: u64) {
+        let s = self.stats.get_mut(name).unwrap();
+        s.requests += n;
+        s.total_us += t.elapsed().as_secs_f64() * 1e6;
+    }
+
+    fn record_err(&mut self, name: &str, e: &InferenceError) {
+        let s = self.stats.get_mut(name).unwrap();
+        s.errors += 1;
+        // Only backend faults skew the ranking: a caller-side shape
+        // bug fails identically everywhere and says nothing about
+        // this backend's health.
+        if e.is_backend_fault() {
+            s.faults += 1;
+            s.penalty_us += ERROR_PENALTY_US;
         }
     }
 
-    /// Route one inference request.
-    pub fn infer(&mut self, x: &[f32]) -> Result<(String, Vec<f32>)> {
-        let name = self.pick()?;
-        let t = Instant::now();
-        let backend = self.backends.get_mut(&name).unwrap();
-        match backend.infer(x) {
-            Ok(out) => {
-                let s = self.stats.get_mut(&name).unwrap();
-                s.requests += 1;
-                s.total_us += t.elapsed().as_secs_f64() * 1e6;
-                Ok((name, out))
-            }
-            Err(e) => {
-                let s = self.stats.get_mut(&name).unwrap();
-                s.errors += 1;
-                Err(e)
+    /// Route one inference into a caller-provided buffer; returns the
+    /// backend that served it. Backends whose `out_dim` does not match
+    /// `out.len()` are skipped as failures. (The zero-allocation
+    /// contract applies to `Backend::infer_into`; the router's own
+    /// ranking bookkeeping is control-plane and may allocate.)
+    pub fn infer_into(
+        &mut self,
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<String, InferenceError> {
+        let mut failures = Vec::new();
+        for name in self.ranked()? {
+            let t = Instant::now();
+            let backend = self.backends.get_mut(&name).unwrap();
+            match backend.infer_into(x, out) {
+                Ok(()) => {
+                    self.record_ok(&name, t, 1);
+                    return Ok(name);
+                }
+                Err(e) => {
+                    self.record_err(&name, &e);
+                    failures.push((name, e.to_string()));
+                }
             }
         }
+        Err(InferenceError::AllBackendsFailed { failures })
+    }
+
+    /// Route one inference request, allocating the output (sized per
+    /// serving backend).
+    pub fn infer(
+        &mut self,
+        x: &[f32],
+    ) -> Result<(String, Vec<f32>), InferenceError> {
+        let mut failures = Vec::new();
+        let mut out = Vec::new();
+        for name in self.ranked()? {
+            let t = Instant::now();
+            let backend = self.backends.get_mut(&name).unwrap();
+            out.resize(backend.spec().out_dim, 0.0);
+            match backend.infer_into(x, &mut out) {
+                Ok(()) => {
+                    self.record_ok(&name, t, 1);
+                    return Ok((name, out));
+                }
+                Err(e) => {
+                    self.record_err(&name, &e);
+                    failures.push((name, e.to_string()));
+                }
+            }
+        }
+        Err(InferenceError::AllBackendsFailed { failures })
+    }
+
+    /// Route a batch (`n` row-major inputs → `n` outputs) through one
+    /// backend, falling back per policy like [`InferenceRouter::infer`].
+    pub fn infer_batch_into(
+        &mut self,
+        xs: &[f32],
+        out: &mut [f32],
+    ) -> Result<(String, usize), InferenceError> {
+        let mut failures = Vec::new();
+        for name in self.ranked()? {
+            let t = Instant::now();
+            let backend = self.backends.get_mut(&name).unwrap();
+            match backend.infer_batch(xs, out) {
+                Ok(n) => {
+                    self.record_ok(&name, t, n as u64);
+                    return Ok((name, n));
+                }
+                Err(e) => {
+                    self.record_err(&name, &e);
+                    failures.push((name, e.to_string()));
+                }
+            }
+        }
+        Err(InferenceError::AllBackendsFailed { failures })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::defense::EngineBackend;
+    use crate::api::{EngineBackend, ModelSpec};
     use crate::engine::{Act, Layer, Model};
     use crate::util::prop::{prop_assert, prop_check};
 
@@ -140,20 +272,48 @@ mod tests {
 
     struct SlowBackend(EngineBackend, std::time::Duration);
     impl Backend for SlowBackend {
-        fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-            std::thread::sleep(self.1);
-            self.0.infer(x)
-        }
         fn name(&self) -> &'static str {
             "slow"
+        }
+        fn spec(&self) -> ModelSpec {
+            self.0.spec()
+        }
+        fn infer_into(
+            &mut self,
+            x: &[f32],
+            out: &mut [f32],
+        ) -> Result<(), InferenceError> {
+            std::thread::sleep(self.1);
+            self.0.infer_into(x, out)
+        }
+    }
+
+    /// A backend that always fails mid-execution, instantly.
+    struct FailingBackend;
+    impl Backend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+        fn spec(&self) -> ModelSpec {
+            ModelSpec::dense_f32(2, 2)
+        }
+        fn infer_into(
+            &mut self,
+            _x: &[f32],
+            _out: &mut [f32],
+        ) -> Result<(), InferenceError> {
+            Err(InferenceError::ExecutionFailed {
+                backend: "failing".into(),
+                source: anyhow::anyhow!("synthetic fault"),
+            })
         }
     }
 
     #[test]
     fn pinned_policy_routes_to_pinned() {
         let mut r = InferenceRouter::new(RoutePolicy::Pinned);
-        r.register("a", Box::new(EngineBackend(tiny_model(1.0))));
-        r.register("b", Box::new(EngineBackend(tiny_model(2.0))));
+        r.register("a", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("b", Box::new(EngineBackend::new(tiny_model(2.0))));
         r.pinned = Some("b".to_string());
         let (name, out) = r.infer(&[1.0, 1.0]).unwrap();
         assert_eq!(name, "b");
@@ -166,11 +326,11 @@ mod tests {
         r.register(
             "slow",
             Box::new(SlowBackend(
-                EngineBackend(tiny_model(1.0)),
+                EngineBackend::new(tiny_model(1.0)),
                 std::time::Duration::from_millis(8),
             )),
         );
-        r.register("fast", Box::new(EngineBackend(tiny_model(1.0))));
+        r.register("fast", Box::new(EngineBackend::new(tiny_model(1.0))));
         // Exploration touches both; afterwards all routes go fast.
         for _ in 0..6 {
             r.infer(&[1.0, 1.0]).unwrap();
@@ -186,8 +346,8 @@ mod tests {
         // identical outputs for the same request.
         prop_check(30, |g| {
             let x = [g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0)];
-            let mut a = EngineBackend(tiny_model(1.5));
-            let mut b = EngineBackend(tiny_model(1.5));
+            let mut a = EngineBackend::new(tiny_model(1.5));
+            let mut b = EngineBackend::new(tiny_model(1.5));
             prop_assert(
                 a.infer(&x).unwrap() == b.infer(&x).unwrap(),
                 "backend divergence",
@@ -198,6 +358,108 @@ mod tests {
     #[test]
     fn empty_router_errors() {
         let mut r = InferenceRouter::new(RoutePolicy::Pinned);
-        assert!(r.infer(&[0.0]).is_err());
+        match r.infer(&[0.0]) {
+            Err(InferenceError::NoBackends) => {}
+            other => panic!("want NoBackends, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_fall_back_to_next_backend() {
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register("failing", Box::new(FailingBackend));
+        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        // Every request is served despite the failing backend; by
+        // exploration order "failing" is tried (and penalized) first.
+        for _ in 0..5 {
+            let (name, out) = r.infer(&[1.0, 1.0]).unwrap();
+            assert_eq!(name, "good");
+            assert_eq!(out, vec![2.0, 2.0]);
+        }
+        assert!(r.stats("failing").unwrap().errors >= 1);
+        assert_eq!(r.stats("good").unwrap().requests, 5);
+    }
+
+    #[test]
+    fn pinned_unset_still_serves_from_ranked_list() {
+        let mut r = InferenceRouter::new(RoutePolicy::Pinned);
+        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        // pinned left at None: a config gap, not a request failure.
+        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        assert_eq!(name, "good");
+    }
+
+    #[test]
+    fn pinned_falls_back_when_pinned_fails() {
+        let mut r = InferenceRouter::new(RoutePolicy::Pinned);
+        r.register("failing", Box::new(FailingBackend));
+        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.pinned = Some("failing".to_string());
+        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        assert_eq!(name, "good");
+        assert_eq!(r.stats("failing").unwrap().errors, 1);
+    }
+
+    #[test]
+    fn error_penalty_demotes_flaky_fast_backend() {
+        // A backend that fails instantly used to keep an untouched
+        // (infinite→unset) mean and could be re-picked forever; with
+        // the penalty its score is worse than any honest backend.
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register("failing", Box::new(FailingBackend));
+        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        for _ in 0..3 {
+            r.infer(&[1.0, 1.0]).unwrap();
+        }
+        let flaky = r.stats("failing").unwrap();
+        let good = r.stats("good").unwrap();
+        assert!(flaky.score_us() > good.score_us());
+        assert!(flaky.score_us() >= ERROR_PENALTY_US);
+        // Only the exploration pass touched it; afterwards ranking
+        // keeps it behind "good" (but still available as fallback).
+        assert_eq!(flaky.errors, 1);
+    }
+
+    #[test]
+    fn caller_shape_bug_does_not_penalize_backends() {
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        // Wrong input length: a caller bug, not a backend fault.
+        assert!(r.infer(&[1.0, 2.0, 3.0]).is_err());
+        let s = r.stats("good").unwrap();
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.faults, 0);
+        assert_eq!(s.penalty_us, 0.0, "ShapeMismatch must not add penalty");
+        assert_eq!(
+            s.score_us(),
+            f64::INFINITY,
+            "a caller bug is not a latency signal"
+        );
+        // The backend still serves and ranks normally afterwards.
+        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        assert_eq!(name, "good");
+    }
+
+    #[test]
+    fn all_failing_reports_every_attempt() {
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register("f1", Box::new(FailingBackend));
+        r.register("f2", Box::new(FailingBackend));
+        match r.infer(&[1.0, 1.0]) {
+            Err(InferenceError::AllBackendsFailed { failures }) => {
+                assert_eq!(failures.len(), 2);
+            }
+            other => panic!("want AllBackendsFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infer_into_routes_without_allocating_output() {
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register("good", Box::new(EngineBackend::new(tiny_model(3.0))));
+        let mut out = [0.0f32; 2];
+        let name = r.infer_into(&[1.0, 1.0], &mut out).unwrap();
+        assert_eq!(name, "good");
+        assert_eq!(out, [6.0, 6.0]);
     }
 }

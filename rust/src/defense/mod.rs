@@ -1,87 +1,20 @@
 //! The §7 on-PLC anomaly-detection application: sliding window over
 //! (TB0, Wd) ADC readings → 400-feature vector → classifier →
-//! debounced detection, behind a pluggable inference backend.
+//! debounced detection, behind the pluggable [`crate::api::Backend`]
+//! inference contract.
+//!
+//! This module is a pure *consumer* of the inference API — the trait
+//! and the backend adapters live in [`crate::api`] (historically they
+//! were defined here; see `API.md` for migration notes).
 
 use std::collections::VecDeque;
 
-use crate::engine::Model;
-use crate::st::{Interp, Meter, Value};
+use crate::api::{Backend, InferenceError};
 
 /// Window length per feature (paper: 10 Hz x 20 s).
 pub const WINDOW: usize = 200;
 /// Total classifier inputs (2 features x WINDOW).
 pub const FEATURES: usize = 2 * WINDOW;
-
-/// An inference backend the detector can run on.
-pub trait Backend {
-    /// Classifier logits for one feature vector.
-    fn infer(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>>;
-    fn name(&self) -> &'static str;
-    /// Metered ST ops for the last inference (ST backend only).
-    fn last_meter(&self) -> Option<Meter> {
-        None
-    }
-}
-
-/// Native-engine backend.
-pub struct EngineBackend(pub Model);
-
-impl Backend for EngineBackend {
-    fn infer(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        Ok(self.0.infer(x))
-    }
-    fn name(&self) -> &'static str {
-        "engine"
-    }
-}
-
-/// ST-interpreter backend: the ported ICSML program running on the
-/// simulated PLC. Feeds the program's `inputs` array, runs one scan of
-/// the inference POU, reads `outputs`.
-pub struct StBackend {
-    pub interp: Interp,
-    pub program: String,
-    last: Meter,
-}
-
-impl StBackend {
-    pub fn new(interp: Interp, program: impl Into<String>) -> StBackend {
-        StBackend { interp, program: program.into(), last: Meter::new() }
-    }
-}
-
-impl Backend for StBackend {
-    fn infer(&mut self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-        let inst = self
-            .interp
-            .program_instance(&self.program)
-            .ok_or_else(|| anyhow::anyhow!("no program {}", self.program))?;
-        match self.interp.instance_field(inst, "inputs") {
-            Some(Value::ArrF32(a)) => {
-                anyhow::ensure!(a.borrow().len() == x.len(), "input size");
-                a.borrow_mut().copy_from_slice(x);
-            }
-            other => anyhow::bail!("bad inputs field: {other:?}"),
-        }
-        let before = self.interp.meter.clone();
-        self.interp
-            .run_program(&self.program)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        self.last = self.interp.meter.since(&before);
-        match self.interp.instance_field(inst, "outputs") {
-            Some(Value::ArrF32(a)) => Ok(a.borrow().clone()),
-            other => anyhow::bail!("bad outputs field: {other:?}"),
-        }
-    }
-
-    fn name(&self) -> &'static str {
-        "st"
-    }
-
-    fn last_meter(&self) -> Option<Meter> {
-        Some(self.last.clone())
-    }
-}
 
 /// Sliding-window feature extractor. Layout matches training
 /// (`train.window_matrix`): `[tb0 oldest..newest | wd oldest..newest]`.
@@ -142,29 +75,49 @@ pub struct Detector {
     pub threshold: u32,
     consecutive: u32,
     features: Vec<f32>,
+    /// Preallocated logit buffer sized to the backend's `out_dim`
+    /// (`observe` is on the scan-cycle hot path: no per-call
+    /// allocation).
+    logits: Vec<f32>,
 }
 
 impl Detector {
     pub fn new(backend: Box<dyn Backend>, threshold: u32) -> Detector {
+        let out_dim = backend.spec().out_dim;
         Detector {
             backend,
             window: SlidingWindow::new(),
             threshold,
             consecutive: 0,
             features: vec![0.0; FEATURES],
+            logits: vec![0.0; out_dim],
         }
     }
 
     /// Feed one scan's readings; returns `Some(positive)` once the
     /// window is warm (positive = attack detected this cycle after
-    /// debounce).
-    pub fn observe(&mut self, tb0: f64, wd: f64) -> anyhow::Result<Option<bool>> {
+    /// debounce). A model with fewer than 2 logits is a typed
+    /// [`InferenceError::ShapeMismatch`], not a panic.
+    pub fn observe(
+        &mut self,
+        tb0: f64,
+        wd: f64,
+    ) -> Result<Option<bool>, InferenceError> {
+        // Fail on the first call, not after WINDOW warm-up cycles:
+        // the logit count is fixed at construction.
+        if self.logits.len() < 2 {
+            return Err(InferenceError::ShapeMismatch {
+                what: "detector logits",
+                expected: 2,
+                got: self.logits.len(),
+            });
+        }
         if !self.window.push(tb0, wd) {
             return Ok(None);
         }
         self.window.fill_features(&mut self.features);
-        let logits = self.backend.infer(&self.features)?;
-        let attack = logits[1] > logits[0];
+        self.backend.infer_into(&self.features, &mut self.logits)?;
+        let attack = self.logits[1] > self.logits[0];
         if attack {
             self.consecutive += 1;
         } else {
@@ -177,7 +130,8 @@ impl Detector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{Act, Layer};
+    use crate::api::EngineBackend;
+    use crate::engine::{Act, Layer, Model};
 
     #[test]
     fn window_layout_matches_training() {
@@ -221,7 +175,7 @@ mod tests {
     #[test]
     fn detector_debounce_and_fire() {
         let mut det =
-            Detector::new(Box::new(EngineBackend(threshold_model())), 3);
+            Detector::new(Box::new(EngineBackend::new(threshold_model())), 3);
         // Warm the window with wd = 20 (mean 20 > 10: benign).
         let mut fired = false;
         for _ in 0..WINDOW + 10 {
@@ -241,5 +195,23 @@ mod tests {
         }
         let at = detect_at.expect("must detect");
         assert!(at >= 2, "debounce needs >= threshold cycles, got {at}");
+    }
+
+    #[test]
+    fn single_logit_model_is_typed_error_not_panic() {
+        // One-logit model: the old code indexed logits[1] and panicked.
+        let m = Model::new(vec![Layer::dense(
+            vec![0.0f32; FEATURES],
+            vec![0.0f32],
+            FEATURES,
+            Act::None,
+        )]);
+        let mut det = Detector::new(Box::new(EngineBackend::new(m)), 3);
+        // Misconfiguration surfaces on the very first observation, not
+        // after the window warms up.
+        match det.observe(1.0, 1.0) {
+            Err(InferenceError::ShapeMismatch { expected: 2, got: 1, .. }) => {}
+            other => panic!("want ShapeMismatch, got {other:?}"),
+        }
     }
 }

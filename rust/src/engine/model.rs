@@ -62,9 +62,12 @@ impl Model {
         self.layers.iter().map(Layer::macs).sum()
     }
 
-    /// Single-shot inference.
-    pub fn infer(&mut self, x: &[f32]) -> Vec<f32> {
+    /// Single-shot inference into a caller-provided buffer — the
+    /// allocation-free hot path (`out.len()` must equal
+    /// [`Model::out_dim`]).
+    pub fn infer_into(&mut self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.in_dim());
+        assert_eq!(out.len(), self.out_dim());
         self.buf_a[..x.len()].copy_from_slice(x);
         let mut cur_len = x.len();
         let n_layers = self.layers.len();
@@ -85,8 +88,16 @@ impl Model {
             );
             cur_len = out_len;
         }
-        let out = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
-        out[..cur_len].to_vec()
+        let src = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
+        out.copy_from_slice(&src[..cur_len]);
+    }
+
+    /// Single-shot inference (allocating wrapper over
+    /// [`Model::infer_into`]).
+    pub fn infer(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.out_dim()];
+        self.infer_into(x, &mut out);
+        out
     }
 
     /// Resumable inference: advance from `cursor` by at most
@@ -100,10 +111,26 @@ impl Model {
     pub fn infer_partial(
         &mut self,
         x: &[f32],
+        cursor: Cursor,
+        row_budget: usize,
+    ) -> (Cursor, Option<Vec<f32>>) {
+        let mut out = vec![0.0f32; self.out_dim()];
+        let (c, done) = self.infer_partial_into(x, cursor, row_budget, &mut out);
+        (c, done.then_some(out))
+    }
+
+    /// [`Model::infer_partial`] writing the completed output into a
+    /// caller-provided buffer (no allocation); returns the new cursor
+    /// and whether the inference completed this call.
+    pub fn infer_partial_into(
+        &mut self,
+        x: &[f32],
         mut cursor: Cursor,
         mut row_budget: usize,
-    ) -> (Cursor, Option<Vec<f32>>) {
+        out: &mut [f32],
+    ) -> (Cursor, bool) {
         assert_eq!(x.len(), self.in_dim());
+        assert_eq!(out.len(), self.out_dim());
         if cursor.layer == 0 && cursor.row == 0 {
             self.buf_a[..x.len()].copy_from_slice(x);
         }
@@ -136,16 +163,29 @@ impl Model {
         }
         if cursor.layer == n_layers {
             let cur_len = self.out_dim();
-            let out = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
-            (cursor, Some(out[..cur_len].to_vec()))
+            let src = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
+            out.copy_from_slice(&src[..cur_len]);
+            (cursor, true)
         } else {
-            (cursor, None)
+            (cursor, false)
         }
     }
 
     /// Total chunk rows across all layers (for budgeting).
     pub fn total_rows(&self) -> usize {
         self.layers.iter().map(Layer::chunk_rows).sum()
+    }
+
+    /// Rows left from `cursor` to the end of the model.
+    pub fn remaining_rows(&self, cursor: Cursor) -> usize {
+        if cursor.layer >= self.layers.len() {
+            return 0;
+        }
+        let rest: usize = self.layers[cursor.layer..]
+            .iter()
+            .map(Layer::chunk_rows)
+            .sum();
+        rest - cursor.row
     }
 }
 
@@ -232,5 +272,27 @@ mod tests {
     fn macs_sum() {
         let m = toy_model();
         assert_eq!(m.macs(), 4 + 12 + 6);
+    }
+
+    #[test]
+    fn infer_into_matches_infer() {
+        let mut m = toy_model();
+        let x = [0.5, -0.25, 1.0, 2.0];
+        let want = m.infer(&x);
+        let mut out = [0.0f32; 2];
+        m.infer_into(&x, &mut out);
+        assert_eq!(out.to_vec(), want);
+    }
+
+    #[test]
+    fn remaining_rows_counts_down() {
+        let mut m = toy_model();
+        let total = m.total_rows();
+        assert_eq!(m.remaining_rows(Cursor::default()), total);
+        let (c, _) = m.infer_partial(&[0.0; 4], Cursor::default(), 3);
+        assert_eq!(m.remaining_rows(c), total - 3);
+        let (c, done) = m.infer_partial(&[0.0; 4], c, total);
+        assert!(done.is_some());
+        assert_eq!(m.remaining_rows(c), 0);
     }
 }

@@ -5,6 +5,7 @@
 
 use anyhow::Result;
 
+use crate::api::Backend as _;
 use crate::defense::Detector;
 use crate::msf::{Attack, Simulator};
 use crate::plc::{HwProfile, ScanCycle};
@@ -138,7 +139,8 @@ impl HitlRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::defense::{Detector, EngineBackend, FEATURES, WINDOW};
+    use crate::api::EngineBackend;
+    use crate::defense::{Detector, FEATURES, WINDOW};
     use crate::engine::{Act, Layer, Model};
     use crate::msf::AttackFamily;
 
@@ -151,7 +153,7 @@ mod tests {
         }
         let b = vec![0.0f32, 17.0];
         let m = Model::new(vec![Layer::dense(w, b, FEATURES, Act::None)]);
-        Detector::new(Box::new(EngineBackend(m)), 5)
+        Detector::new(Box::new(EngineBackend::new(m)), 5)
     }
 
     #[test]

@@ -6,26 +6,35 @@
 //!
 //! The crate hosts every substrate the paper depends on (see DESIGN.md):
 //!
+//! * [`api`] — **the inference contract**: the [`api::Backend`] trait
+//!   (allocation-free `infer_into`, batch-first `infer_batch`, typed
+//!   [`api::InferenceError`], [`api::ModelSpec`] capability discovery)
+//!   plus the [`api::PartialBackend`] resumable sub-API for §6.3
+//!   multipart inference. Every substrate below implements it; every
+//!   consumer is written against it. See `API.md`.
 //! * [`st`] — an IEC 61131-3 Structured Text lexer/parser/interpreter
 //!   with the standard's restrictions enforced and instruction costs
 //!   metered (the Codesys-runtime substitute the benchmarks run on).
 //! * [`icsml_st`] — the ICSML framework itself, written in ST, embedded
 //!   as assets and executed by [`st`].
 //! * [`engine`] — a native-Rust ICSML engine with identical semantics
-//!   (the paper's §5.4 "reimplemented in C++ -O3" comparator and the
-//!   executor behind multipart inference).
+//!   (the paper's §5.4 "reimplemented in C++ -O3" comparator; served
+//!   through [`api::EngineBackend`]).
 //! * [`plc`] — scan-cycle PLC simulator: ADC models, Table-1 hardware
 //!   profiles, timing + memory accounting.
 //! * [`msf`] — MSF desalination plant + cascaded PID + attack injector
 //!   (the Simulink HITL substitute).
 //! * [`hitl`] / [`defense`] — the §7 case study: closed loop + on-PLC
-//!   anomaly detector.
+//!   anomaly detector (a consumer of [`api::Backend`]).
 //! * [`quant`] — §6.1 SINT/INT/DINT integer quantization.
 //! * [`porting`] — §4.3 (+§8.2) model porting: manifest → ST codegen.
 //! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas models
-//!   (the TFLite-comparator path).
-//! * [`coordinator`] — inference router + §6.3 multipart scheduler.
+//!   (the TFLite-comparator path; served through
+//!   [`runtime::XlaBackend`]).
+//! * [`coordinator`] — backend router with policy fallback + the §6.3
+//!   multipart scheduler, both generic over [`api::Backend`].
 
+pub mod api;
 pub mod coordinator;
 pub mod defense;
 pub mod engine;
@@ -38,6 +47,8 @@ pub mod quant;
 pub mod runtime;
 pub mod st;
 pub mod util;
+
+pub use api::{Backend, InferenceError, ModelSpec, PartialBackend, RowPlan};
 
 /// Returns the repository root (assumes `cargo run`/`cargo test` from the
 /// workspace, or the `ICSML_ROOT` env var in deployed settings).

@@ -11,8 +11,9 @@
 //! * `serve`   — batch-serve eval windows through the router.
 
 use anyhow::Result;
+use icsml::api::{Backend, EngineBackend, StBackend};
 use icsml::coordinator::{InferenceRouter, RoutePolicy};
-use icsml::defense::{Detector, EngineBackend, StBackend};
+use icsml::defense::Detector;
 use icsml::hitl::HitlRunner;
 use icsml::msf::{Attack, AttackFamily};
 use icsml::plc::{profiles::KERAS_MODEL_SIZES, HwProfile, PLC_SPECS};
@@ -156,7 +157,6 @@ fn port(args: &Args) -> Result<()> {
 }
 
 fn infer(args: &Args) -> Result<()> {
-    use icsml::defense::Backend;
     let m = Manifest::load(&icsml::artifacts_dir())?;
     let spec = m.model("classifier")?;
     let idx = args.opt_usize("index", 0);
@@ -176,10 +176,11 @@ fn infer(args: &Args) -> Result<()> {
     } else if args.has("xla") {
         let rt = Runtime::cpu()?;
         let exe = rt.load_hlo(&m.hlo_path("classifier_b1")?)?;
-        let mut b = XlaBackend { exe, in_dim: 400 };
+        let mut b = XlaBackend::new(exe, 400, 2);
         ("xla", b.infer(xi)?)
     } else {
-        let mut b = EngineBackend(porting::load_engine_model(&m.root, spec)?);
+        let mut b =
+            EngineBackend::new(porting::load_engine_model(&m.root, spec)?);
         ("engine", b.infer(xi)?)
     };
     let verdict = if out[1] > out[0] { "ATTACK" } else { "normal" };
@@ -197,7 +198,7 @@ fn hitl(args: &Args) -> Result<()> {
     let start = args.opt_usize("start", 4360) as u64;
 
     let engine = porting::load_engine_model(&m.root, spec)?;
-    let detector = Detector::new(Box::new(EngineBackend(engine)), 5);
+    let detector = Detector::new(Box::new(EngineBackend::new(engine)), 5);
     let runner = HitlRunner::new(
         7,
         true,
@@ -240,11 +241,13 @@ fn serve(args: &Args) -> Result<()> {
     let mut router = InferenceRouter::new(RoutePolicy::FastestObserved);
     router.register(
         "engine",
-        Box::new(EngineBackend(porting::load_engine_model(&m.root, spec)?)),
+        Box::new(EngineBackend::new(porting::load_engine_model(
+            &m.root, spec,
+        )?)),
     );
     if let Ok(rt) = Runtime::cpu() {
         if let Ok(exe) = rt.load_hlo(&m.hlo_path("classifier_b1")?) {
-            router.register("xla", Box::new(XlaBackend { exe, in_dim: 400 }));
+            router.register("xla", Box::new(XlaBackend::new(exe, 400, 2)));
         }
     }
     let mut attacks = 0;

@@ -12,7 +12,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::defense::Backend;
+use crate::api::{Backend, InferenceError, ModelSpec};
 
 /// PJRT CPU client wrapper. Create once; compile many executables.
 pub struct Runtime {
@@ -87,17 +87,103 @@ impl Executable {
     }
 }
 
-/// Defense backend running the AOT classifier through PJRT.
+/// Inference backend running an AOT classifier through PJRT.
+///
+/// The executable's leading dimension is its compiled batch size
+/// (`classifier_b1` → 1) and is **fixed at AOT time** — PJRT rejects
+/// any other shape. [`XlaBackend::infer_batch`] overrides the trait's
+/// per-row default with true batched execution: whole
+/// `compiled_batch`-sized chunks go through XLA in single calls, and
+/// batches that are not a multiple of it are rejected up front (no
+/// per-row fallback exists on a fixed-batch executable). Likewise,
+/// single-request `infer_into` is `Unsupported` when
+/// `compiled_batch > 1`.
 pub struct XlaBackend {
     pub exe: Executable,
-    pub in_dim: usize,
+    in_dim: usize,
+    out_dim: usize,
+    compiled_batch: usize,
+}
+
+impl XlaBackend {
+    pub fn new(exe: Executable, in_dim: usize, out_dim: usize) -> XlaBackend {
+        XlaBackend { exe, in_dim, out_dim, compiled_batch: 1 }
+    }
+
+    /// Declare the executable's compiled batch dimension (an artifact
+    /// lowered with `batch=n` serves n rows per XLA call).
+    pub fn with_compiled_batch(mut self, n: usize) -> XlaBackend {
+        self.compiled_batch = n.max(1);
+        self
+    }
+
+    fn run_rows(
+        &mut self,
+        rows: usize,
+        xs: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), InferenceError> {
+        let got = self.exe.run_f32(xs, &[rows, self.in_dim]).map_err(|e| {
+            InferenceError::ExecutionFailed { backend: "xla".into(), source: e }
+        })?;
+        // A wrong-sized result is the backend misbehaving, not a
+        // caller shape bug — classify as a (penalizable) fault.
+        if got.len() != out.len() {
+            return Err(InferenceError::ExecutionFailed {
+                backend: "xla".into(),
+                source: anyhow::anyhow!(
+                    "executable returned {} values, expected {}",
+                    got.len(),
+                    out.len()
+                ),
+            });
+        }
+        out.copy_from_slice(&got);
+        Ok(())
+    }
 }
 
 impl Backend for XlaBackend {
-    fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-        self.exe.run_f32(x, &[1, self.in_dim])
-    }
     fn name(&self) -> &'static str {
         "xla"
+    }
+
+    fn spec(&self) -> ModelSpec {
+        ModelSpec::dense_f32(self.in_dim, self.out_dim)
+    }
+
+    fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError> {
+        if self.compiled_batch != 1 {
+            return Err(InferenceError::Unsupported {
+                backend: "xla".into(),
+                op: "single-request inference on a fixed-batch executable",
+            });
+        }
+        crate::api::backend::check_shapes(&self.spec(), x, out)?;
+        self.run_rows(1, x, out)
+    }
+
+    fn infer_batch(&mut self, xs: &[f32], out: &mut [f32]) -> Result<usize, InferenceError> {
+        let n = crate::api::backend::check_batch_shapes(&self.spec(), xs, out)?;
+        // Whole compiled-batch chunks execute in one XLA call each.
+        // The executable's batch dimension is fixed at AOT time, so a
+        // ragged tail cannot run — reject it rather than produce a
+        // partial batch.
+        let b = self.compiled_batch;
+        if n % b != 0 {
+            return Err(InferenceError::ShapeMismatch {
+                what: "batch rows (must be a multiple of the compiled batch)",
+                expected: b,
+                got: n,
+            });
+        }
+        let mut row = 0usize;
+        while row < n {
+            let (i0, i1) = (row * self.in_dim, (row + b) * self.in_dim);
+            let (o0, o1) = (row * self.out_dim, (row + b) * self.out_dim);
+            self.run_rows(b, &xs[i0..i1], &mut out[o0..o1])?;
+            row += b;
+        }
+        Ok(n)
     }
 }

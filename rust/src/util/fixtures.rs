@@ -1,0 +1,76 @@
+//! Shared model fixtures for the API contract tests (unit tests in
+//! `coordinator::multipart` and the `tests/api_contract.rs`
+//! integration suite use the same ported model, so the two cannot
+//! drift apart).
+//!
+//! Not part of the public API — exported `#[doc(hidden)]` because
+//! integration tests link the library without `cfg(test)`.
+
+use crate::api::StBackend;
+use crate::engine::{Act, Layer, Model};
+use crate::porting::{
+    codegen::CodegenOptions, generate_st_program, LayerSpec, ModelSpec,
+};
+use crate::util::{binio, json::Json, rng::SplitMix64};
+
+/// Layer sizes of the fixture MLP (`RowPlan::from_layer_sizes` input).
+pub const MLP_SIZES: [usize; 3] = [8, 16, 4];
+const MLP_ACTS: [&str; 2] = ["relu", "linear"];
+
+fn mlp_weights(seed: u64) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let mut rng = SplitMix64::new(seed);
+    MLP_SIZES
+        .windows(2)
+        .map(|s| {
+            let w: Vec<f32> = (0..s[0] * s[1])
+                .map(|_| rng.uniform(-0.8, 0.8) as f32)
+                .collect();
+            let b: Vec<f32> =
+                (0..s[1]).map(|_| rng.uniform(-0.2, 0.2) as f32).collect();
+            (w, b)
+        })
+        .collect()
+}
+
+/// A seeded 8-16-4 MLP on the native engine.
+pub fn mlp_8_16_4(seed: u64) -> Model {
+    let layers = mlp_weights(seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, (w, b))| {
+            Layer::dense(w, b, MLP_SIZES[i], Act::from_name(MLP_ACTS[i]).unwrap())
+        })
+        .collect();
+    Model::new(layers)
+}
+
+/// The same MLP ported to ICSML ST (weights written under a
+/// `tag`-unique temp dir so parallel tests don't race) and loaded on
+/// the interpreter, plus the identical engine model as reference.
+pub fn ported_mlp_8_16_4(seed: u64, tag: &str) -> (StBackend, Model) {
+    let dir = std::env::temp_dir().join(format!("icsml_fixture_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut specs = Vec::new();
+    for (i, (w, b)) in mlp_weights(seed).iter().enumerate() {
+        binio::write_f32(&dir.join(format!("l{i}_w.bin")), w).unwrap();
+        binio::write_f32(&dir.join(format!("l{i}_b.bin")), b).unwrap();
+        specs.push(LayerSpec {
+            inputs: MLP_SIZES[i],
+            neurons: MLP_SIZES[i + 1],
+            weights: format!("l{i}_w.bin"),
+            biases: format!("l{i}_b.bin"),
+        });
+    }
+    let spec = ModelSpec {
+        name: "fixture".into(),
+        sizes: MLP_SIZES.to_vec(),
+        activations: MLP_ACTS.iter().map(|s| s.to_string()).collect(),
+        weights_dir: ".".into(),
+        layers: specs,
+        report: Json::Null,
+    };
+    let src = generate_st_program(&spec, &CodegenOptions::default());
+    let mut interp = crate::icsml_st::load(&src).unwrap();
+    interp.io_dir = dir;
+    (StBackend::new(interp, "MAIN"), mlp_8_16_4(seed))
+}

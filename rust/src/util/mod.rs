@@ -15,6 +15,8 @@ pub mod bench;
 pub mod benchkit;
 pub mod binio;
 pub mod cli;
+#[doc(hidden)]
+pub mod fixtures;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,231 @@
+//! Contract tests for the `icsml::api` inference API:
+//!
+//! * the engine hot path (`infer_into`) performs **zero heap
+//!   allocations** per call (counting global allocator);
+//! * `infer_batch` equals N sequential `infer_into` calls on every
+//!   backend (engine, ST interpreter, and XLA when artifacts exist);
+//! * the router survives failing backends (policy fallback).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use icsml::api::{Backend, EngineBackend, InferenceError, ModelSpec};
+use icsml::coordinator::{InferenceRouter, RoutePolicy};
+use icsml::util::binio;
+use icsml::util::fixtures::{mlp_8_16_4, ported_mlp_8_16_4};
+use icsml::util::prop::{prop_assert, prop_check};
+
+// ---------------------------------------------------------------------
+// Counting allocator: per-thread allocation counter so parallel test
+// threads don't pollute each other's counts. The thread-local is
+// const-initialized and `Cell<u64>` has no destructor, so reading it
+// inside the allocator cannot itself allocate or recurse.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// Zero-allocation hot path
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_infer_into_is_allocation_free() {
+    let mut b = EngineBackend::new(mlp_8_16_4(42));
+    let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.9).cos()).collect();
+    let mut out = [0.0f32; 4];
+
+    // Warm up: first calls may touch lazily-grown internal scratch.
+    for _ in 0..3 {
+        b.infer_into(&x, &mut out).unwrap();
+    }
+
+    let before = allocations_on_this_thread();
+    for _ in 0..1000 {
+        b.infer_into(&x, &mut out).unwrap();
+    }
+    let delta = allocations_on_this_thread() - before;
+    assert_eq!(
+        delta, 0,
+        "engine infer_into allocated {delta} times over 1000 calls"
+    );
+}
+
+#[test]
+fn engine_batch_is_allocation_free() {
+    let mut b = EngineBackend::new(mlp_8_16_4(43));
+    let xs: Vec<f32> = (0..8 * 32).map(|i| (i as f32 * 0.13).sin()).collect();
+    let mut out = vec![0.0f32; 4 * 32];
+    for _ in 0..3 {
+        b.infer_batch(&xs, &mut out).unwrap();
+    }
+    let before = allocations_on_this_thread();
+    for _ in 0..100 {
+        b.infer_batch(&xs, &mut out).unwrap();
+    }
+    assert_eq!(allocations_on_this_thread() - before, 0);
+}
+
+// ---------------------------------------------------------------------
+// infer_batch == N x infer_into
+// ---------------------------------------------------------------------
+
+fn batch_matches_sequential(b: &mut dyn Backend, tol: f32) {
+    let ModelSpec { in_dim, out_dim, .. } = b.spec();
+    prop_check(15, |g| {
+        let n = g.usize_in(1..=5);
+        let xs: Vec<f32> =
+            (0..n * in_dim).map(|_| g.f32_in(-1.5, 1.5)).collect();
+        let mut batched = vec![0.0f32; n * out_dim];
+        let served = b.infer_batch(&xs, &mut batched).unwrap();
+        prop_assert(served == n, format!("served {served} != {n}"))?;
+        for i in 0..n {
+            let mut one = vec![0.0f32; out_dim];
+            b.infer_into(&xs[i * in_dim..(i + 1) * in_dim], &mut one)
+                .unwrap();
+            for k in 0..out_dim {
+                let (a, c) = (batched[i * out_dim + k], one[k]);
+                prop_assert(
+                    (a - c).abs() <= tol,
+                    format!("row {i} logit {k}: batch {a} vs sequential {c}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_batch_matches_sequential() {
+    let mut b = EngineBackend::new(mlp_8_16_4(7));
+    batch_matches_sequential(&mut b, 0.0);
+}
+
+#[test]
+fn st_batch_matches_sequential() {
+    let (mut b, _) = ported_mlp_8_16_4(7, "batch");
+    batch_matches_sequential(&mut b, 0.0);
+}
+
+#[test]
+fn st_and_engine_agree_through_the_api() {
+    let (mut st, reference) = ported_mlp_8_16_4(11, "agree");
+    let mut eng = EngineBackend::new(reference);
+    prop_check(10, |g| {
+        let x: Vec<f32> = (0..8).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let a = st.infer(&x).unwrap();
+        let b = eng.infer(&x).unwrap();
+        let dev = a
+            .iter()
+            .zip(&b)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f32, f32::max);
+        prop_assert(dev < 1e-5, format!("st {a:?} vs engine {b:?}"))
+    });
+}
+
+/// XLA leg of the batch property — runs only when AOT artifacts exist
+/// (`make artifacts`), mirroring `runtime_integration.rs`.
+#[test]
+fn xla_batch_matches_sequential_when_artifacts_exist() {
+    let root = icsml::artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts built (run `make artifacts`)");
+        return;
+    }
+    use icsml::porting::Manifest;
+    use icsml::runtime::{Runtime, XlaBackend};
+    let m = Manifest::load(&root).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&m.hlo_path("classifier_b1").unwrap()).unwrap();
+    let mut xla = XlaBackend::new(exe, 400, 2);
+
+    let x = binio::read_f32(
+        &m.root
+            .join(m.dataset.expect("eval_windows").as_str().unwrap()),
+    )
+    .unwrap();
+    let n = 4usize;
+    let mut batched = vec![0.0f32; n * 2];
+    assert_eq!(xla.infer_batch(&x[..n * 400], &mut batched).unwrap(), n);
+    for i in 0..n {
+        let mut one = [0.0f32; 2];
+        xla.infer_into(&x[i * 400..(i + 1) * 400], &mut one).unwrap();
+        assert_eq!(&batched[i * 2..(i + 1) * 2], &one[..]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Router resilience
+// ---------------------------------------------------------------------
+
+struct AlwaysFails;
+impl Backend for AlwaysFails {
+    fn name(&self) -> &'static str {
+        "always-fails"
+    }
+    fn spec(&self) -> ModelSpec {
+        ModelSpec::dense_f32(8, 4)
+    }
+    fn infer_into(
+        &mut self,
+        _x: &[f32],
+        _out: &mut [f32],
+    ) -> Result<(), InferenceError> {
+        Err(InferenceError::ExecutionFailed {
+            backend: "always-fails".into(),
+            source: anyhow::anyhow!("synthetic runtime fault"),
+        })
+    }
+}
+
+#[test]
+fn router_serves_every_request_despite_failing_backend() {
+    let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+    r.register("bad", Box::new(AlwaysFails));
+    r.register("engine", Box::new(EngineBackend::new(mlp_8_16_4(3))));
+    let x = [0.2f32; 8];
+    for i in 0..20 {
+        let (name, out) = r.infer(&x).unwrap_or_else(|e| {
+            panic!("request {i} failed despite healthy fallback: {e}")
+        });
+        assert_eq!(name, "engine");
+        assert_eq!(out.len(), 4);
+    }
+    let bad = r.stats("bad").unwrap();
+    let good = r.stats("engine").unwrap();
+    assert_eq!(good.requests, 20);
+    assert!(bad.errors >= 1, "failing backend was explored and penalized");
+    assert!(
+        bad.score_us() > good.score_us(),
+        "error penalty must demote the failing backend"
+    );
+}

@@ -6,7 +6,7 @@
 //! logits must match the Python-exported expected logits), and all
 //! three Rust backends (ST interpreter, native engine, XLA) agree.
 
-use icsml::defense::{Backend, EngineBackend, StBackend};
+use icsml::api::{Backend, EngineBackend, StBackend};
 use icsml::porting::{self, codegen::CodegenOptions, Manifest};
 use icsml::runtime::{Runtime, XlaBackend};
 use icsml::util::binio;
@@ -71,7 +71,7 @@ fn three_backends_agree_on_the_classifier() {
 
     // Engine backend from exported weights.
     let engine = porting::load_engine_model(&m.root, spec).unwrap();
-    let mut eng = EngineBackend(engine);
+    let mut eng = EngineBackend::new(engine);
 
     // ST backend from generated ICSML code.
     let st_src = porting::generate_st_program(spec, &CodegenOptions::default());
@@ -82,7 +82,7 @@ fn three_backends_agree_on_the_classifier() {
     // XLA backend from the AOT artifact.
     let rt = Runtime::cpu().unwrap();
     let exe = rt.load_hlo(&m.hlo_path("classifier_b1").unwrap()).unwrap();
-    let mut xla = XlaBackend { exe, in_dim: 400 };
+    let mut xla = XlaBackend::new(exe, 400, 2);
 
     let ds = &m.dataset;
     let x = binio::read_f32(
