@@ -45,7 +45,7 @@ fn detector(man: &Manifest, backend: &str) -> Result<Detector> {
             let mut it = icsml::icsml_st::load(&src)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             it.io_dir = man.root.join(&spec.weights_dir);
-            Box::new(StBackend::new(it, "MAIN"))
+            Box::new(StBackend::new(it, "MAIN")?)
         }
     };
     Ok(Detector::new(b, 5))

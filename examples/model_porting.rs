@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     let mut it =
         icsml::icsml_st::load(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
     it.io_dir = root.join(&spec.weights_dir);
-    let mut st = StBackend::new(it, "MAIN");
+    let mut st = StBackend::new(it, "MAIN")?;
 
     // 3. XLA comparator.
     let rt = Runtime::cpu()?;

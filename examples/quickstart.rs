@@ -63,7 +63,7 @@ fn main() -> Result<()> {
     let mut interp = icsml::icsml_st::load(&st_src)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     interp.io_dir = dir;
-    let mut st = StBackend::new(interp, "MAIN");
+    let mut st = StBackend::new(interp, "MAIN")?;
     let y_st = st.infer(&x)?;
 
     println!("engine : {y_engine:?}");

@@ -1,0 +1,149 @@
+//! Interp-vs-VM wall clock on dense-MLP forward passes — the ISSUE 2
+//! acceptance benchmark for the bytecode tier.
+//!
+//! Every configuration runs the same generated ICSML ST program on both
+//! tiers with identical weights and inputs; before timing, outputs are
+//! checked bit-identical and `Meter` deltas exactly equal (a slow
+//! differential harness is a useless one if the fast tier cheats).
+//!
+//! Modes:
+//!   (default)        timing table on stdout
+//!   --json[=PATH]    also write BENCH_st_vm.json (ns/inference,
+//!                    ops per abstract-op figures, speedups)
+//!   --smoke          one differential iteration per config, no timing
+//!                    (CI's fast bytecode-regression gate)
+
+use icsml::st::Meter;
+use icsml::util::bench::Bench;
+use icsml::util::benchkit::{
+    self, json_flag, smoke_flag, write_bench_json, BenchRecord,
+};
+use icsml::util::json::Json;
+use icsml::util::rng::SplitMix64;
+
+struct Config {
+    label: &'static str,
+    sizes: &'static [usize],
+}
+
+const CONFIGS: &[Config] = &[
+    Config { label: "mlp_8_16_4", sizes: &[8, 16, 4] },
+    Config { label: "dense_64x64x3", sizes: &[64, 64, 64, 64] },
+    Config { label: "dense_128x128", sizes: &[128, 128, 128] },
+];
+
+fn main() {
+    let smoke = smoke_flag();
+    let json_path = json_flag("st_vm");
+    let bench = Bench::from_env();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+
+    println!("\nST execution tiers — tree-walker (oracle) vs register-bytecode VM");
+    let mut t = icsml::util::bench::Table::new(&[
+        "model",
+        "interp ns/inf",
+        "vm ns/inf",
+        "speedup",
+        "ops/inf",
+        "vm ops/us",
+    ]);
+
+    for cfg in CONFIGS {
+        let acts: Vec<&str> = std::iter::repeat("relu")
+            .take(cfg.sizes.len() - 2)
+            .chain(std::iter::once("linear"))
+            .collect();
+        let (spec, dir) =
+            benchkit::random_spec(cfg.label, cfg.sizes, &acts, 0xC0FFEE);
+        let mut it = benchkit::st_model(&spec, &dir, true);
+        let mut vm = benchkit::st_model_vm(&spec, &dir, true);
+
+        let mut rng = SplitMix64::new(17);
+        let x: Vec<f32> = (0..cfg.sizes[0])
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+        benchkit::st_set_inputs(&mut it, &x);
+        benchkit::vm_set_inputs(&mut vm, &x);
+
+        // Differential gate before any timing: bit-identical outputs,
+        // exactly equal meter deltas.
+        let im: Meter = benchkit::st_infer_meter(&mut it);
+        let vmm: Meter = benchkit::vm_infer_meter(&mut vm);
+        assert_eq!(im, vmm, "{}: meter divergence between tiers", cfg.label);
+        let inst = it.program_instance("MAIN").unwrap();
+        let a = match it.instance_field(inst, "outputs").unwrap() {
+            icsml::st::Value::ArrF32(a) => a.borrow().clone(),
+            other => panic!("outputs: {other:?}"),
+        };
+        let b = benchkit::vm_outputs(&vm);
+        assert_eq!(a.len(), b.len(), "{}: output dims", cfg.label);
+        for (i, (x0, x1)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x0.to_bits(),
+                x1.to_bits(),
+                "{}: output[{i}] diverged ({x0} vs {x1})",
+                cfg.label
+            );
+        }
+        let ops = im.total_ops();
+        if smoke {
+            println!("smoke OK: {} ({} abstract ops, meters equal)", cfg.label, ops);
+            continue;
+        }
+
+        let si = bench.run(&format!("interp/{}", cfg.label), || {
+            std::hint::black_box(benchkit::st_infer_meter(&mut it));
+        });
+        let sv = bench.run(&format!("vm/{}", cfg.label), || {
+            std::hint::black_box(benchkit::vm_infer_meter(&mut vm));
+        });
+
+        let speedup = si.mean_ns / sv.mean_ns.max(1.0);
+        t.row(&[
+            cfg.label.to_string(),
+            format!("{:.0}", si.mean_ns),
+            format!("{:.0}", sv.mean_ns),
+            format!("{speedup:.2}x"),
+            ops.to_string(),
+            format!("{:.1}", ops as f64 / (sv.mean_ns / 1e3)),
+        ]);
+        records.push(BenchRecord {
+            name: format!("interp/{}", cfg.label),
+            mean_ns: si.mean_ns,
+            median_ns: si.median_ns,
+            ops_per_inference: ops,
+        });
+        records.push(BenchRecord {
+            name: format!("vm/{}", cfg.label),
+            mean_ns: sv.mean_ns,
+            median_ns: sv.median_ns,
+            ops_per_inference: ops,
+        });
+        speedups.push((cfg.label, speedup));
+    }
+
+    if smoke {
+        println!("bytecode smoke: all configs bit-identical across tiers");
+        return;
+    }
+    t.print();
+    println!(
+        "acceptance target: >= 3x VM speedup on dense-MLP forward passes."
+    );
+
+    if let Some(path) = json_path {
+        let extras = vec![(
+            "speedup",
+            Json::obj(
+                speedups
+                    .iter()
+                    .map(|(k, v)| (*k, Json::Num(*v)))
+                    .collect(),
+            ),
+        )];
+        write_bench_json(&path, "st_vm", &records, extras)
+            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        println!("wrote {}", path.display());
+    }
+}

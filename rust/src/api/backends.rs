@@ -1,9 +1,9 @@
 //! The two in-crate execution substrates behind [`Backend`]: the
-//! native engine and the ST-interpreter PLC. (The XLA/PJRT adapter
+//! native engine and the ST PLC on its bytecode VM. (The XLA/PJRT adapter
 //! lives in [`crate::runtime`] next to the PJRT types it wraps.)
 
 use crate::engine::{Cursor, Layer, Model};
-use crate::st::{Interp, Meter, Value};
+use crate::st::{Interp, Meter, Value, Vm};
 
 use super::backend::{check_shapes, Backend};
 use super::error::InferenceError;
@@ -171,18 +171,24 @@ impl PartialBackend for EngineBackend {
     }
 }
 
-/// ST-interpreter backend: the ported ICSML program running on the
-/// simulated PLC. Feeds the program's `inputs` array, runs one scan of
-/// the inference POU, reads `outputs`.
+/// ST backend: the ported ICSML program running on the simulated PLC.
+/// Feeds the program's `inputs` array, runs one scan of the inference
+/// POU, reads `outputs`.
 ///
-/// The interpreter cannot pause mid-POU, so the partial session
+/// Scans execute on the bytecode [`Vm`] — the ST runtime's fast tier.
+/// The tree-walking [`Interp`] remains the reference oracle (the
+/// constructor consumes one and adopts its state), and the two tiers
+/// are bit-equivalent in outputs *and* meters, so the §6.3 cost
+/// accounting below is unchanged (`tests/st_differential.rs`).
+///
+/// The ST substrate cannot pause mid-POU, so the partial session
 /// emulates §6.3 scheduling: `step` advances a row cursor through the
 /// model's [`RowPlan`] (cost accounting, cycle counts and latency are
 /// therefore faithful to the schedule) and the POU executes once on the
 /// completing step. The output is schedule-invariant by construction
 /// and cross-checked against the engine in the coordinator tests.
 pub struct StBackend {
-    pub interp: Interp,
+    pub vm: Vm,
     pub program: String,
     last: Meter,
     dims: (usize, usize),
@@ -195,21 +201,39 @@ pub struct StBackend {
 }
 
 impl StBackend {
-    pub fn new(interp: Interp, program: impl Into<String>) -> StBackend {
+    /// Compile the interpreter's unit to bytecode and probe the
+    /// program's I/O dims. Errors with a typed
+    /// [`InferenceError::BackendUnavailable`] when the program is
+    /// missing or its `inputs`/`outputs` are not `ARRAY OF REAL` —
+    /// previously this fabricated a zero-dim [`ModelSpec`] that
+    /// poisoned router ranking.
+    pub fn new(
+        interp: Interp,
+        program: impl Into<String>,
+    ) -> Result<StBackend, InferenceError> {
         let program = program.into();
-        let dims = Self::probe_dims(&interp, &program).unwrap_or((0, 0));
-        StBackend {
+        let vm = Vm::from_interp(interp);
+        let dims = Self::probe_dims(&vm, &program).ok_or_else(|| {
+            InferenceError::BackendUnavailable {
+                backend: "st".into(),
+                reason: format!(
+                    "program {program} not found or missing inputs/outputs \
+                     ARRAY OF REAL fields"
+                ),
+            }
+        })?;
+        Ok(StBackend {
             plan: RowPlan::single(dims.0, dims.1),
             input: vec![0.0; dims.0],
             out_buf: vec![0.0; dims.1],
-            interp,
+            vm,
             program,
             last: Meter::new(),
             dims,
             rows_done: 0,
             active: false,
             done: false,
-        }
+        })
     }
 
     /// Attach the model's real layer structure so multipart scheduling
@@ -220,30 +244,13 @@ impl StBackend {
         self
     }
 
-    /// The constructor probe failed (program missing or its
-    /// `inputs`/`outputs` fields are not `ARRAY OF REAL`) — surface
-    /// the root cause instead of a misleading 0-dim shape mismatch.
-    fn ensure_probed(&self) -> Result<(), InferenceError> {
-        if self.dims == (0, 0) {
-            return Err(InferenceError::BackendUnavailable {
-                backend: "st".into(),
-                reason: format!(
-                    "program {} not found or missing inputs/outputs \
-                     ARRAY OF REAL fields",
-                    self.program
-                ),
-            });
-        }
-        Ok(())
-    }
-
-    fn probe_dims(interp: &Interp, program: &str) -> Option<(usize, usize)> {
-        let inst = interp.program_instance(program)?;
-        let i = match interp.instance_field(inst, "inputs") {
+    fn probe_dims(vm: &Vm, program: &str) -> Option<(usize, usize)> {
+        let inst = vm.program_instance(program)?;
+        let i = match vm.instance_field(inst, "inputs") {
             Some(Value::ArrF32(a)) => a.borrow().len(),
             _ => return None,
         };
-        let o = match interp.instance_field(inst, "outputs") {
+        let o = match vm.instance_field(inst, "outputs") {
             Some(Value::ArrF32(a)) => a.borrow().len(),
             _ => return None,
         };
@@ -253,13 +260,13 @@ impl StBackend {
     /// Run one scan of the POU: `self.input` → program → `self.out_buf`.
     fn run_program_io(&mut self) -> Result<(), InferenceError> {
         let inst = self
-            .interp
+            .vm
             .program_instance(&self.program)
             .ok_or_else(|| InferenceError::BackendUnavailable {
                 backend: "st".into(),
                 reason: format!("no program {}", self.program),
             })?;
-        match self.interp.instance_field(inst, "inputs") {
+        match self.vm.instance_field(inst, "inputs") {
             Some(Value::ArrF32(a)) => {
                 let mut b = a.borrow_mut();
                 // Program arrays disagreeing with the probed dims is
@@ -283,15 +290,15 @@ impl StBackend {
                 })
             }
         }
-        let before = self.interp.meter.clone();
-        self.interp.run_program(&self.program).map_err(|e| {
+        let before = self.vm.meter.clone();
+        self.vm.run_program(&self.program).map_err(|e| {
             InferenceError::ExecutionFailed {
                 backend: "st".into(),
                 source: anyhow::anyhow!("{e}"),
             }
         })?;
-        self.last = self.interp.meter.since(&before);
-        match self.interp.instance_field(inst, "outputs") {
+        self.last = self.vm.meter.since(&before);
+        match self.vm.instance_field(inst, "outputs") {
             Some(Value::ArrF32(a)) => {
                 let b = a.borrow();
                 if b.len() != self.out_buf.len() {
@@ -331,7 +338,6 @@ impl Backend for StBackend {
     }
 
     fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError> {
-        self.ensure_probed()?;
         // `input` doubles as the latched input of a suspended partial
         // session — refuse to clobber it mid-session.
         if self.active {
@@ -358,7 +364,6 @@ impl Backend for StBackend {
 
 impl PartialBackend for StBackend {
     fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError> {
-        self.ensure_probed()?;
         if x.len() != self.input.len() {
             return Err(InferenceError::ShapeMismatch {
                 what: "input",

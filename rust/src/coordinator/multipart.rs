@@ -45,7 +45,7 @@ pub struct MultipartStats {
 }
 
 /// A resumable inference session scheduled over any capable backend
-/// (engine, ST interpreter, ...) — the §6.3 coordinator. It owns no
+/// (engine, ST bytecode VM, ...) — the §6.3 coordinator. It owns no
 /// concrete model; all substrate access goes through
 /// [`PartialBackend`].
 pub struct MultipartSession {
@@ -246,9 +246,9 @@ mod tests {
         );
     }
 
-    /// The shared 8-16-4 fixture as an ST-interpreter backend (ported
-    /// ICSML code + weights on disk, with the real layer plan) and as
-    /// an engine model.
+    /// The shared 8-16-4 fixture as an ST backend (ported ICSML code +
+    /// weights on disk, executing on the bytecode VM, with the real
+    /// layer plan) and as an engine model.
     fn st_backend_and_reference(tag: &str) -> (StBackend, Model) {
         let (st, reference) = fixtures::ported_mlp_8_16_4(77, tag);
         let st = st.with_plan(RowPlan::from_layer_sizes(&fixtures::MLP_SIZES));
@@ -259,8 +259,8 @@ mod tests {
     fn multipart_schedules_over_st_backend() {
         // The acceptance property of the backend-agnostic redesign: a
         // full §6.3 inference through a *non-engine* backend (the ST
-        // interpreter PLC), schedule-invariant vs the single-shot
-        // engine result for any per-cycle budget.
+        // PLC on the bytecode VM), schedule-invariant vs the
+        // single-shot engine result for any per-cycle budget.
         let (st, mut reference) = st_backend_and_reference("invariance");
         assert!(st.spec().supports_partial);
         let mut sess =

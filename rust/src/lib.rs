@@ -12,9 +12,11 @@
 //!   plus the [`api::PartialBackend`] resumable sub-API for §6.3
 //!   multipart inference. Every substrate below implements it; every
 //!   consumer is written against it. See `API.md`.
-//! * [`st`] — an IEC 61131-3 Structured Text lexer/parser/interpreter
-//!   with the standard's restrictions enforced and instruction costs
-//!   metered (the Codesys-runtime substitute the benchmarks run on).
+//! * [`st`] — an IEC 61131-3 Structured Text front end with two
+//!   execution tiers: the tree-walking [`st::Interp`] oracle and the
+//!   register-bytecode [`st::Vm`] fast tier, both enforcing the
+//!   standard's restrictions and metering identical instruction costs
+//!   (the Codesys-runtime substitute the benchmarks run on).
 //! * [`icsml_st`] — the ICSML framework itself, written in ST, embedded
 //!   as assets and executed by [`st`].
 //! * [`engine`] — a native-Rust ICSML engine with identical semantics

@@ -171,7 +171,7 @@ fn infer(args: &Args) -> Result<()> {
         let mut it =
             icsml::icsml_st::load(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
         it.io_dir = m.root.join(&spec.weights_dir);
-        let mut b = StBackend::new(it, "MAIN");
+        let mut b = StBackend::new(it, "MAIN")?;
         ("st", b.infer(xi)?)
     } else if args.has("xla") {
         let rt = Runtime::cpu()?;

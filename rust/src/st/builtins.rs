@@ -1,9 +1,17 @@
 //! Pure-math builtin implementations shared by the interpreter.
 //!
 //! Kept separate so the native engine can reuse the exact IEC semantics
-//! (e.g. REAL_TO_INT round-half-away-from-zero) when cross-validating.
+//! (e.g. REAL_TO_INT round-half-away-from-zero) when cross-validating,
+//! and so the two execution tiers (tree-walking [`super::interp::Interp`]
+//! and the bytecode [`super::vm::Vm`]) share one implementation of the
+//! intrinsic and file-I/O operations — meter-for-meter.
 
-use super::ir::IntTy;
+use std::path::Path;
+
+use super::cost::Meter;
+use super::interp::{rerr, RuntimeError};
+use super::ir::{Builtin, IntTy, NumKind};
+use super::value::Value;
 
 /// IEC REAL->ANY_INT conversion: round to nearest, half away from zero
 /// (what Codesys implements), then wrap to the target width.
@@ -23,6 +31,212 @@ pub fn trunc_to_int(v: f64) -> i64 {
 #[inline]
 pub fn floor_to_int(v: f64) -> i64 {
     v.floor() as i64
+}
+
+/// Execute a pure (non-I/O) intrinsic over already-evaluated argument
+/// values, metering exactly what the tree-walker meters. Shared by
+/// `Interp::intrinsic` and the VM's `Intrinsic` opcode so the two tiers
+/// cannot drift.
+///
+/// `BinArr`/`ArrBin` are not pure — route them to [`exec_file_io`].
+pub(crate) fn eval_intrinsic(
+    meter: &mut Meter,
+    b: Builtin,
+    kind: NumKind,
+    vals: &[Value],
+) -> Value {
+    let as_f64 = |v: &Value| match kind {
+        NumKind::F32 => v.real() as f64,
+        NumKind::F64 => v.lreal(),
+        NumKind::Int => v.int() as f64,
+    };
+    let wrap = |x: f64| match kind {
+        NumKind::F32 => Value::Real(x as f32),
+        NumKind::F64 => Value::LReal(x),
+        NumKind::Int => Value::Int(x as i64),
+    };
+    match b {
+        Builtin::Abs => {
+            meter.int_ops += 1;
+            match kind {
+                NumKind::Int => Value::Int(vals[0].int().abs()),
+                _ => wrap(as_f64(&vals[0]).abs()),
+            }
+        }
+        Builtin::Sqrt => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).sqrt())
+        }
+        Builtin::Exp => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).exp())
+        }
+        Builtin::Ln => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).ln())
+        }
+        Builtin::Log => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).log10())
+        }
+        Builtin::Sin => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).sin())
+        }
+        Builtin::Cos => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).cos())
+        }
+        Builtin::Tan => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).tan())
+        }
+        Builtin::Atan => {
+            meter.fp_trans += 1;
+            wrap(as_f64(&vals[0]).atan())
+        }
+        Builtin::Min => {
+            meter.cmp += 1;
+            match kind {
+                NumKind::Int => Value::Int(vals[0].int().min(vals[1].int())),
+                _ => wrap(as_f64(&vals[0]).min(as_f64(&vals[1]))),
+            }
+        }
+        Builtin::Max => {
+            meter.cmp += 1;
+            match kind {
+                NumKind::Int => Value::Int(vals[0].int().max(vals[1].int())),
+                _ => wrap(as_f64(&vals[0]).max(as_f64(&vals[1]))),
+            }
+        }
+        Builtin::Limit => {
+            meter.cmp += 2;
+            match kind {
+                NumKind::Int => Value::Int(
+                    vals[1].int().clamp(vals[0].int(), vals[2].int()),
+                ),
+                _ => wrap(
+                    as_f64(&vals[1]).clamp(as_f64(&vals[0]), as_f64(&vals[2])),
+                ),
+            }
+        }
+        Builtin::Trunc => {
+            meter.converts += 1;
+            Value::Int(trunc_to_int(as_f64(&vals[0])))
+        }
+        Builtin::Floor => {
+            meter.converts += 1;
+            Value::Int(floor_to_int(as_f64(&vals[0])))
+        }
+        Builtin::BinArr | Builtin::ArrBin => {
+            unreachable!("file I/O routed through exec_file_io")
+        }
+    }
+}
+
+/// BINARR / ARRBIN over already-evaluated operands: the framework's
+/// binary file I/O. `bytes` is the requested byte count, `ptr` the
+/// destination (BINARR) or source (ARRBIN) pointer, `elem_bytes` the
+/// element width for integer arrays. Shared by both execution tiers.
+pub(crate) fn exec_file_io(
+    meter: &mut Meter,
+    io_dir: &Path,
+    b: Builtin,
+    fname: &str,
+    bytes: i64,
+    ptr: &Value,
+    elem_bytes: usize,
+    line: u32,
+) -> Result<Value, RuntimeError> {
+    if bytes < 0 {
+        return Err(rerr(line, "negative byte count"));
+    }
+    let bytes = bytes as usize;
+    let path = io_dir.join(fname);
+    meter.io_calls += 1;
+    meter.io_bytes += bytes as u64;
+    let n = bytes / elem_bytes;
+
+    match (b, ptr) {
+        (Builtin::BinArr, Value::PtrF32(a, off)) => {
+            let data = std::fs::read(&path).map_err(|e| {
+                rerr(line, format!("BINARR {}: {e}", path.display()))
+            })?;
+            if data.len() < bytes {
+                return Err(rerr(line, "BINARR: file smaller than requested"));
+            }
+            let mut arr = a.borrow_mut();
+            if off + n > arr.len() {
+                return Err(rerr(line, "BINARR: destination overflow"));
+            }
+            for (i, c) in data[..bytes].chunks_exact(4).enumerate() {
+                arr[off + i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            Ok(Value::Bool(true))
+        }
+        (Builtin::BinArr, Value::PtrInt(a, off)) => {
+            let data = std::fs::read(&path).map_err(|e| {
+                rerr(line, format!("BINARR {}: {e}", path.display()))
+            })?;
+            if data.len() < bytes {
+                return Err(rerr(line, "BINARR: file smaller than requested"));
+            }
+            let mut arr = a.borrow_mut();
+            if off + n > arr.len() {
+                return Err(rerr(line, "BINARR: destination overflow"));
+            }
+            for i in 0..n {
+                let chunk = &data[i * elem_bytes..(i + 1) * elem_bytes];
+                arr[off + i] = match elem_bytes {
+                    1 => chunk[0] as i8 as i64,
+                    2 => i16::from_le_bytes([chunk[0], chunk[1]]) as i64,
+                    4 => i32::from_le_bytes([
+                        chunk[0], chunk[1], chunk[2], chunk[3],
+                    ]) as i64,
+                    8 => i64::from_le_bytes(chunk.try_into().unwrap()),
+                    _ => return Err(rerr(line, "bad element width")),
+                };
+            }
+            Ok(Value::Bool(true))
+        }
+        (Builtin::ArrBin, Value::PtrF32(a, off)) => {
+            let arr = a.borrow();
+            if off + n > arr.len() {
+                return Err(rerr(line, "ARRBIN: source overflow"));
+            }
+            let mut out = Vec::with_capacity(bytes);
+            for i in 0..n {
+                out.extend_from_slice(&arr[off + i].to_le_bytes());
+            }
+            std::fs::write(&path, out).map_err(|e| {
+                rerr(line, format!("ARRBIN {}: {e}", path.display()))
+            })?;
+            Ok(Value::Bool(true))
+        }
+        (Builtin::ArrBin, Value::PtrInt(a, off)) => {
+            let arr = a.borrow();
+            if off + n > arr.len() {
+                return Err(rerr(line, "ARRBIN: source overflow"));
+            }
+            let mut out = Vec::with_capacity(bytes);
+            for i in 0..n {
+                let v = arr[off + i];
+                match elem_bytes {
+                    1 => out.push(v as u8),
+                    2 => out.extend_from_slice(&(v as i16).to_le_bytes()),
+                    4 => out.extend_from_slice(&(v as i32).to_le_bytes()),
+                    8 => out.extend_from_slice(&v.to_le_bytes()),
+                    _ => return Err(rerr(line, "bad element width")),
+                }
+            }
+            std::fs::write(&path, out).map_err(|e| {
+                rerr(line, format!("ARRBIN {}: {e}", path.display()))
+            })?;
+            Ok(Value::Bool(true))
+        }
+        (_, Value::Null) => Err(rerr(line, "null pointer in file I/O")),
+        _ => Err(rerr(line, "unsupported pointer kind in file I/O")),
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,959 @@
+//! Register bytecode for the ST runtime — the compiled tier.
+//!
+//! [`super::lower`] already resolves every name, type and slot; this
+//! module performs the *second*, mechanical lowering: the [`ir`] tree
+//! becomes a flat, register-addressed instruction stream with resolved
+//! jump targets. [`super::vm::Vm`] executes it over a contiguous
+//! register arena; [`super::interp::Interp`] remains the reference
+//! oracle.
+//!
+//! Register model: each POU body gets a frame of `n_regs` registers.
+//! Registers `0..n_slots` *are* the IR frame slots (slot 0 = return
+//! value); registers above the slots are expression temporaries
+//! assigned by a watermark allocator, so a statement's temps are dead
+//! at the next statement boundary.
+//!
+//! Meter discipline (the hard requirement): every opcode applies
+//! exactly the [`super::cost::Meter`] increments the tree-walker
+//! applies for the IR node(s) it encodes, so a successful execution
+//! meters **identically** on both tiers — the PLC timing model
+//! (`plc/profiles.rs`) depends on it, and `tests/st_differential.rs`
+//! enforces it. The one tolerated divergence: when execution aborts
+//! with a runtime error mid-statement, the two tiers may disagree on
+//! counters *after* the already-divergent failure point (the interp
+//! pre-bumps some counters before evaluating operands; the VM has
+//! already evaluated operands when the op runs). Error programs
+//! must still fail on both tiers.
+
+use std::rc::Rc;
+
+use super::ir::*;
+
+/// Sentinel register meaning "no operand" (e.g. `p^` with no offset).
+pub const NO_REG: u16 = u16::MAX;
+
+/// Placeholder for a jump target that is patched before `compile_fn`
+/// returns. Deliberately out of range (never a valid pc): a bug that
+/// leaves one unpatched indexes past the op stream and fails fast
+/// instead of silently jumping to pc 0.
+const PENDING: u32 = u32::MAX;
+
+/// How a store treats its value, mirroring `Interp::assign`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyMode {
+    /// Move the handle/value (scalar assignment).
+    Move,
+    /// Deep-copy into the destination's storage, metering bytes.
+    Copy,
+    /// Copy iff the runtime value is an aggregate (FB output binding —
+    /// the interp decides by inspecting the value).
+    Auto,
+}
+
+/// One instruction. `dst`/`a`/`b`/... address registers relative to
+/// the executing frame's base; indices into the [`Unit`] (functions,
+/// FBs, structs) are resolved at compile time.
+#[derive(Debug, Clone)]
+pub enum Op {
+    // ------------------------------------------------------ constants
+    ConstBool { dst: u16, v: bool },
+    ConstInt { dst: u16, v: i64 },
+    ConstF32 { dst: u16, v: f32 },
+    ConstF64 { dst: u16, v: f64 },
+    ConstStr { dst: u16, v: Rc<str> },
+    ConstNull { dst: u16 },
+    /// Unmetered register copy (loop-variable materialization).
+    Mov { dst: u16, src: u16 },
+
+    // ----------------------------------------------- reads (loads +1)
+    LoadLocal { dst: u16, slot: u16 },
+    LoadGlobal { dst: u16, g: u16 },
+    LoadSelf { dst: u16, f: u16 },
+    LoadField { dst: u16, base: u16, f: u16 },
+    LoadFbField { dst: u16, base: u16, f: u16 },
+    LoadIdx { dst: u16, base: u16, idx: u16, len: u32, kind: ElemKind, line: u32 },
+    LoadPtr { dst: u16, p: u16, off: u16, kind: PtrKind, line: u32 },
+
+    // ---------------------------------------------- ADR (int_ops +1)
+    AdrLocal { dst: u16, slot: u16, kind: PtrKind },
+    AdrGlobal { dst: u16, g: u16, kind: PtrKind },
+    AdrSelf { dst: u16, f: u16, kind: PtrKind },
+    AdrField { dst: u16, base: u16, f: u16, kind: PtrKind },
+    AdrFbField { dst: u16, base: u16, f: u16, kind: PtrKind },
+    AdrIdx { dst: u16, base: u16, idx: u16, len: u32, kind: PtrKind, line: u32 },
+    AdrPtr { dst: u16, p: u16, off: u16, kind: PtrKind, line: u32 },
+
+    // ---------------------------------------------------------- unary
+    NegF32 { dst: u16, src: u16 },
+    NegF64 { dst: u16, src: u16 },
+    NegInt { dst: u16, src: u16 },
+    NotBool { dst: u16, src: u16 },
+
+    // ------------------------- arithmetic, specialized per repr kind
+    ArithF32 { op: ArithOp, dst: u16, a: u16, b: u16, line: u32 },
+    ArithF64 { op: ArithOp, dst: u16, a: u16, b: u16, line: u32 },
+    ArithInt { op: ArithOp, dst: u16, a: u16, b: u16, line: u32 },
+    CmpF32 { op: CmpOp, dst: u16, a: u16, b: u16 },
+    CmpF64 { op: CmpOp, dst: u16, a: u16, b: u16 },
+    CmpInt { op: CmpOp, dst: u16, a: u16, b: u16 },
+    CmpBool { op: CmpOp, dst: u16, a: u16, b: u16 },
+    BoolB { op: BoolOp, dst: u16, a: u16, b: u16 },
+    IntB { op: BoolOp, dst: u16, a: u16, b: u16 },
+
+    // ------------------------------------- conversions (converts +1)
+    IntToF32 { dst: u16, src: u16 },
+    IntToF64 { dst: u16, src: u16 },
+    F32ToF64 { dst: u16, src: u16 },
+    F64ToF32 { dst: u16, src: u16 },
+    F32ToInt { dst: u16, src: u16, ty: IntTy },
+    F64ToInt { dst: u16, src: u16, ty: IntTy },
+    IntNarrow { dst: u16, src: u16, ty: IntTy },
+    BoolToInt { dst: u16, src: u16 },
+
+    // ---------------------------------------------------------- calls
+    CallFn { dst: u16, fid: u32, args: Box<[u16]> },
+    CallMethod { dst: u16, fb: u32, midx: u32, self_r: u16, args: Box<[u16]> },
+    CallIface {
+        dst: u16,
+        iface: u32,
+        mid: u32,
+        self_r: u16,
+        args: Box<[u16]>,
+        line: u32,
+    },
+    /// Validate the FB reference of an `inst(...)` invocation before
+    /// its inputs are stored (the interp errors at this point).
+    CheckFb { r: u16, line: u32 },
+    InvokeFbBody { fb_r: u16, fb_id: u32, line: u32 },
+    /// FB-invocation input binding: `store_field` semantics
+    /// (stores +1, copy bytes metered when `copy`).
+    StoreFbInput { fb_r: u16, fidx: u16, src: u16, copy: bool },
+    /// FB-invocation output read: unmetered field clone.
+    LoadFbOutput { dst: u16, fb_r: u16, fidx: u16 },
+
+    // ------------------------------------------------- struct literal
+    StructNew { dst: u16, sid: u32 },
+    StructSet { s: u16, fidx: u16, src: u16 },
+
+    // ------------------------------------------------------ builtins
+    Intrinsic { dst: u16, b: Builtin, kind: NumKind, args: Box<[u16]> },
+    FileIo { dst: u16, b: Builtin, args: Box<[u16]>, line: u32 },
+
+    // ------------------------------------------------------- stores
+    StoreLocal { src: u16, slot: u16, copy: CopyMode },
+    StoreGlobal { src: u16, g: u16, copy: CopyMode },
+    /// stores +2: `Interp::assign` bumps once, then delegates to
+    /// `store_field`, which bumps again. Quirk preserved bit-for-bit.
+    StoreSelf { src: u16, f: u16, copy: CopyMode },
+    StoreField { src: u16, base: u16, f: u16, copy: CopyMode },
+    /// stores +2 — same double-bump as [`Op::StoreSelf`].
+    StoreFbField { src: u16, base: u16, f: u16, copy: CopyMode },
+    StoreIdx { src: u16, base: u16, idx: u16, len: u32, kind: ElemKind, line: u32 },
+    StorePtr { src: u16, p: u16, off: u16, kind: PtrKind, line: u32 },
+
+    // ------------------------------------------------- control flow
+    Jump { t: u32 },
+    JumpIfFalse { c: u16, t: u32 },
+    /// branches +1 (IF / CASE / WHILE / REPEAT decision points).
+    BumpBranch,
+    /// Jump to `t` when the scrutinee falls in any range (unmetered,
+    /// like the interp's label scan).
+    CaseJump { src: u16, ranges: Rc<Vec<(i64, i64)>>, t: u32 },
+    /// FOR head: jump to `exit` when done (unmetered, matching the
+    /// interp's loop-condition test); otherwise branches +1.
+    ForCheck { i: u16, to: u16, step: u16, exit: u32 },
+    /// int_ops +1; `i += step` (wrapping).
+    ForIncr { i: u16, step: u16 },
+    /// Errors with "FOR step of 0" like the interp's pre-loop check.
+    ForStepCheck { step: u16 },
+    Ret,
+}
+
+/// A compiled POU body.
+#[derive(Debug, Clone)]
+pub struct Code {
+    pub name: String,
+    /// Frame width: IR slots first, expression temps above.
+    pub n_regs: u16,
+    pub ops: Vec<Op>,
+}
+
+/// Compiled bytecode for a whole [`Unit`], indexed in parallel with
+/// the unit's own tables.
+#[derive(Debug, Default, Clone)]
+pub struct CodeUnit {
+    pub funcs: Vec<Code>,
+    /// `fb_methods[fb_id][method_idx]`.
+    pub fb_methods: Vec<Vec<Code>>,
+    pub fb_bodies: Vec<Option<Code>>,
+    pub programs: Vec<Code>,
+}
+
+/// Compile every POU body in the unit.
+pub fn compile_unit(unit: &Unit) -> CodeUnit {
+    CodeUnit {
+        funcs: unit.funcs.iter().map(compile_fn).collect(),
+        fb_methods: unit
+            .fbs
+            .iter()
+            .map(|fb| fb.methods.iter().map(compile_fn).collect())
+            .collect(),
+        fb_bodies: unit
+            .fbs
+            .iter()
+            .map(|fb| fb.body.as_ref().map(compile_fn))
+            .collect(),
+        programs: unit.programs.iter().map(|p| compile_fn(&p.body)).collect(),
+    }
+}
+
+// Register-file size is a static program-size limit, not a runtime
+// condition: slot indices are u16 in the IR itself, and the temp
+// watermark only exceeds u16 on a ~65k-deep right-nested expression —
+// which the recursive lowerer cannot produce without exhausting its own
+// stack first. Treated like the other static IEC limits (panic with
+// the POU named), not plumbed through as a typed error.
+fn compile_fn(fd: &FuncDef) -> Code {
+    let n_slots = fd.slots.len();
+    assert!(n_slots < NO_REG as usize, "{}: too many slots", fd.name);
+    let mut fc = Fc {
+        ops: Vec::new(),
+        next: n_slots as u16,
+        max: n_slots as u16,
+        loops: Vec::new(),
+    };
+    fc.block(&fd.body);
+    fc.ops.push(Op::Ret);
+    Code { name: fd.name.clone(), n_regs: fc.max, ops: fc.ops }
+}
+
+#[derive(Default)]
+struct LoopFrame {
+    exit_patches: Vec<usize>,
+    cont_patches: Vec<usize>,
+}
+
+/// Per-body compiler state.
+struct Fc {
+    ops: Vec<Op>,
+    /// Watermark temp allocator: next free register.
+    next: u16,
+    max: u16,
+    loops: Vec<LoopFrame>,
+}
+
+impl Fc {
+    fn alloc(&mut self) -> u16 {
+        let r = self.next;
+        self.next = self
+            .next
+            .checked_add(1)
+            .filter(|&n| n < NO_REG)
+            .expect("register file overflow");
+        if self.next > self.max {
+            self.max = self.next;
+        }
+        r
+    }
+
+    fn emit(&mut self, op: Op) -> usize {
+        self.ops.push(op);
+        self.ops.len() - 1
+    }
+
+    fn here(&self) -> u32 {
+        self.ops.len() as u32
+    }
+
+    fn patch(&mut self, idx: usize, target: u32) {
+        match &mut self.ops[idx] {
+            Op::Jump { t }
+            | Op::JumpIfFalse { t, .. }
+            | Op::CaseJump { t, .. }
+            | Op::ForCheck { exit: t, .. } => *t = target,
+            other => unreachable!("patching non-jump {other:?}"),
+        }
+    }
+
+    fn block(&mut self, body: &[St]) {
+        for st in body {
+            let mark = self.next;
+            self.stmt(st);
+            self.next = mark;
+        }
+    }
+
+    // ------------------------------------------------------ statements
+    fn stmt(&mut self, st: &St) {
+        match st {
+            St::Assign(lv, e, copy) => {
+                let r = self.ex(e);
+                let mode = if *copy { CopyMode::Copy } else { CopyMode::Move };
+                self.store_lv(lv, r, mode);
+            }
+            St::If(arms, else_body) => {
+                self.emit(Op::BumpBranch);
+                let mut end_patches = Vec::new();
+                for (cond, body) in arms {
+                    let mark = self.next;
+                    let rc = self.ex(cond);
+                    self.next = mark;
+                    let jf = self.emit(Op::JumpIfFalse { c: rc, t: PENDING });
+                    self.block(body);
+                    end_patches.push(self.emit(Op::Jump { t: PENDING }));
+                    let after = self.here();
+                    self.patch(jf, after);
+                }
+                self.block(else_body);
+                let end = self.here();
+                for p in end_patches {
+                    self.patch(p, end);
+                }
+            }
+            St::Case(scrut, arms, else_body) => {
+                self.emit(Op::BumpBranch);
+                let mark = self.next;
+                let rs = self.ex(scrut);
+                let mut arm_jumps = Vec::new();
+                for (ranges, _) in arms {
+                    arm_jumps.push(self.emit(Op::CaseJump {
+                        src: rs,
+                        ranges: ranges.clone(),
+                        t: PENDING,
+                    }));
+                }
+                let else_jump = self.emit(Op::Jump { t: PENDING });
+                self.next = mark;
+                let mut end_patches = Vec::new();
+                for (j, (_, body)) in arms.iter().enumerate() {
+                    let here = self.here();
+                    self.patch(arm_jumps[j], here);
+                    self.block(body);
+                    end_patches.push(self.emit(Op::Jump { t: PENDING }));
+                }
+                let else_at = self.here();
+                self.patch(else_jump, else_at);
+                self.block(else_body);
+                let end = self.here();
+                for p in end_patches {
+                    self.patch(p, end);
+                }
+            }
+            St::For { var, from, to, by, body } => {
+                // Loop registers live for the whole statement.
+                let ri = self.ex(from);
+                let rto = self.ex(to);
+                let rstep = match by {
+                    Some(b) => self.ex(b),
+                    None => {
+                        let d = self.alloc();
+                        self.emit(Op::ConstInt { dst: d, v: 1 });
+                        d
+                    }
+                };
+                let rtmp = self.alloc();
+                self.emit(Op::ForStepCheck { step: rstep });
+                let head = self.here();
+                let fc =
+                    self.emit(Op::ForCheck { i: ri, to: rto, step: rstep, exit: PENDING });
+                self.emit(Op::Mov { dst: rtmp, src: ri });
+                let mark = self.next;
+                self.store_lv(var, rtmp, CopyMode::Move);
+                self.next = mark;
+                self.loops.push(LoopFrame::default());
+                self.block(body);
+                let lf = self.loops.pop().unwrap();
+                let cont = self.here();
+                for p in lf.cont_patches {
+                    self.patch(p, cont);
+                }
+                self.emit(Op::ForIncr { i: ri, step: rstep });
+                self.emit(Op::Jump { t: head });
+                let exit = self.here();
+                self.patch(fc, exit);
+                for p in lf.exit_patches {
+                    self.patch(p, exit);
+                }
+            }
+            St::While(cond, body) => {
+                let head = self.here();
+                self.emit(Op::BumpBranch);
+                let mark = self.next;
+                let rc = self.ex(cond);
+                self.next = mark;
+                let jf = self.emit(Op::JumpIfFalse { c: rc, t: PENDING });
+                self.loops.push(LoopFrame::default());
+                self.block(body);
+                let lf = self.loops.pop().unwrap();
+                for p in lf.cont_patches {
+                    self.patch(p, head);
+                }
+                self.emit(Op::Jump { t: head });
+                let exit = self.here();
+                self.patch(jf, exit);
+                for p in lf.exit_patches {
+                    self.patch(p, exit);
+                }
+            }
+            St::Repeat(body, until) => {
+                let top = self.here();
+                self.loops.push(LoopFrame::default());
+                self.block(body);
+                let lf = self.loops.pop().unwrap();
+                let cont = self.here();
+                for p in lf.cont_patches {
+                    self.patch(p, cont);
+                }
+                self.emit(Op::BumpBranch);
+                let mark = self.next;
+                let ru = self.ex(until);
+                self.next = mark;
+                self.emit(Op::JumpIfFalse { c: ru, t: top });
+                let exit = self.here();
+                for p in lf.exit_patches {
+                    self.patch(p, exit);
+                }
+            }
+            // EXIT/CONTINUE outside a loop end the POU (the interp's
+            // Flow propagates to run_func); lower rejects them anyway.
+            St::Exit => {
+                if self.loops.is_empty() {
+                    self.emit(Op::Ret);
+                } else {
+                    let j = self.emit(Op::Jump { t: PENDING });
+                    self.loops.last_mut().unwrap().exit_patches.push(j);
+                }
+            }
+            St::Continue => {
+                if self.loops.is_empty() {
+                    self.emit(Op::Ret);
+                } else {
+                    let j = self.emit(Op::Jump { t: PENDING });
+                    self.loops.last_mut().unwrap().cont_patches.push(j);
+                }
+            }
+            St::Return => {
+                self.emit(Op::Ret);
+            }
+            St::Expr(e) => {
+                self.ex(e);
+            }
+            St::FbInvoke { fb, fb_id, inputs, outputs, line } => {
+                let fb_r = self.ex(fb);
+                self.emit(Op::CheckFb { r: fb_r, line: *line });
+                for (fidx, e, copy) in inputs {
+                    let mark = self.next;
+                    let r = self.ex(e);
+                    self.next = mark;
+                    self.emit(Op::StoreFbInput {
+                        fb_r,
+                        fidx: *fidx,
+                        src: r,
+                        copy: *copy,
+                    });
+                }
+                self.emit(Op::InvokeFbBody {
+                    fb_r,
+                    fb_id: *fb_id as u32,
+                    line: *line,
+                });
+                for (fidx, lv) in outputs {
+                    let mark = self.next;
+                    let r = self.alloc();
+                    self.emit(Op::LoadFbOutput { dst: r, fb_r, fidx: *fidx });
+                    self.store_lv(lv, r, CopyMode::Auto);
+                    self.next = mark;
+                }
+            }
+        }
+    }
+
+    // --------------------------------------------------------- stores
+    fn store_lv(&mut self, lv: &Lv, src: u16, copy: CopyMode) {
+        match lv {
+            Lv::Local(s) => {
+                self.emit(Op::StoreLocal { src, slot: *s, copy });
+            }
+            Lv::Global(g) => {
+                self.emit(Op::StoreGlobal { src, g: *g, copy });
+            }
+            Lv::SelfField(f) => {
+                self.emit(Op::StoreSelf { src, f: *f, copy });
+            }
+            Lv::Field(base, f) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                self.next = mark;
+                self.emit(Op::StoreField { src, base: rb, f: *f, copy });
+            }
+            Lv::FbField(base, f) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                self.next = mark;
+                self.emit(Op::StoreFbField { src, base: rb, f: *f, copy });
+            }
+            Lv::Idx(base, idx, len, kind, line) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                let ri = self.ex(idx);
+                self.next = mark;
+                self.emit(Op::StoreIdx {
+                    src,
+                    base: rb,
+                    idx: ri,
+                    len: *len,
+                    kind: *kind,
+                    line: *line,
+                });
+            }
+            Lv::PtrAt(base, off, kind, line) => {
+                let mark = self.next;
+                let rp = self.ex(base);
+                let roff = match off {
+                    Some(o) => self.ex(o),
+                    None => NO_REG,
+                };
+                self.next = mark;
+                self.emit(Op::StorePtr {
+                    src,
+                    p: rp,
+                    off: roff,
+                    kind: *kind,
+                    line: *line,
+                });
+            }
+        }
+    }
+
+    // ---------------------------------------------------- expressions
+    /// Compile an expression; the result lands in the returned temp.
+    fn ex(&mut self, e: &Ex) -> u16 {
+        match e {
+            Ex::KBool(v) => {
+                let d = self.alloc();
+                self.emit(Op::ConstBool { dst: d, v: *v });
+                d
+            }
+            Ex::KInt(v) => {
+                let d = self.alloc();
+                self.emit(Op::ConstInt { dst: d, v: *v });
+                d
+            }
+            Ex::KReal(v) => {
+                let d = self.alloc();
+                self.emit(Op::ConstF32 { dst: d, v: *v });
+                d
+            }
+            Ex::KLReal(v) => {
+                let d = self.alloc();
+                self.emit(Op::ConstF64 { dst: d, v: *v });
+                d
+            }
+            Ex::KStr(s) => {
+                let d = self.alloc();
+                self.emit(Op::ConstStr { dst: d, v: s.clone() });
+                d
+            }
+            Ex::KNull => {
+                let d = self.alloc();
+                self.emit(Op::ConstNull { dst: d });
+                d
+            }
+            Ex::Local(s) => {
+                let d = self.alloc();
+                self.emit(Op::LoadLocal { dst: d, slot: *s });
+                d
+            }
+            Ex::Global(g) => {
+                let d = self.alloc();
+                self.emit(Op::LoadGlobal { dst: d, g: *g });
+                d
+            }
+            Ex::SelfField(f) => {
+                let d = self.alloc();
+                self.emit(Op::LoadSelf { dst: d, f: *f });
+                d
+            }
+            Ex::Field(base, f) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::LoadField { dst: d, base: rb, f: *f });
+                d
+            }
+            Ex::FbField(base, f) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::LoadFbField { dst: d, base: rb, f: *f });
+                d
+            }
+            Ex::Idx(base, idx, len, kind, line) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                let ri = self.ex(idx);
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::LoadIdx {
+                    dst: d,
+                    base: rb,
+                    idx: ri,
+                    len: *len,
+                    kind: *kind,
+                    line: *line,
+                });
+                d
+            }
+            Ex::PtrLoad(base, off, kind, line) => {
+                let mark = self.next;
+                let rp = self.ex(base);
+                let roff = match off {
+                    Some(o) => self.ex(o),
+                    None => NO_REG,
+                };
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::LoadPtr {
+                    dst: d,
+                    p: rp,
+                    off: roff,
+                    kind: *kind,
+                    line: *line,
+                });
+                d
+            }
+            Ex::Adr(lv, kind) => self.adr(lv, *kind),
+            Ex::NegF32(x) => self.unary(x, |d, s| Op::NegF32 { dst: d, src: s }),
+            Ex::NegF64(x) => self.unary(x, |d, s| Op::NegF64 { dst: d, src: s }),
+            Ex::NegInt(x) => self.unary(x, |d, s| Op::NegInt { dst: d, src: s }),
+            Ex::Not(x) => self.unary(x, |d, s| Op::NotBool { dst: d, src: s }),
+            Ex::Arith(op, kind, a, b, line) => {
+                let (op, kind, line) = (*op, *kind, *line);
+                self.binary(a, b, |d, ra, rb| match kind {
+                    NumKind::F32 => {
+                        Op::ArithF32 { op, dst: d, a: ra, b: rb, line }
+                    }
+                    NumKind::F64 => {
+                        Op::ArithF64 { op, dst: d, a: ra, b: rb, line }
+                    }
+                    NumKind::Int => {
+                        Op::ArithInt { op, dst: d, a: ra, b: rb, line }
+                    }
+                })
+            }
+            Ex::Cmp(op, kind, a, b) => {
+                let (op, kind) = (*op, *kind);
+                self.binary(a, b, |d, ra, rb| match kind {
+                    NumKind::F32 => Op::CmpF32 { op, dst: d, a: ra, b: rb },
+                    NumKind::F64 => Op::CmpF64 { op, dst: d, a: ra, b: rb },
+                    NumKind::Int => Op::CmpInt { op, dst: d, a: ra, b: rb },
+                })
+            }
+            Ex::CmpBool(op, a, b) => {
+                let op = *op;
+                self.binary(a, b, |d, ra, rb| Op::CmpBool {
+                    op,
+                    dst: d,
+                    a: ra,
+                    b: rb,
+                })
+            }
+            Ex::BoolB(op, a, b) => {
+                let op = *op;
+                self.binary(a, b, |d, ra, rb| Op::BoolB {
+                    op,
+                    dst: d,
+                    a: ra,
+                    b: rb,
+                })
+            }
+            Ex::IntB(op, a, b) => {
+                let op = *op;
+                self.binary(a, b, |d, ra, rb| Op::IntB {
+                    op,
+                    dst: d,
+                    a: ra,
+                    b: rb,
+                })
+            }
+            Ex::IntToF32(x) => {
+                self.unary(x, |d, s| Op::IntToF32 { dst: d, src: s })
+            }
+            Ex::IntToF64(x) => {
+                self.unary(x, |d, s| Op::IntToF64 { dst: d, src: s })
+            }
+            Ex::F32ToF64(x) => {
+                self.unary(x, |d, s| Op::F32ToF64 { dst: d, src: s })
+            }
+            Ex::F64ToF32(x) => {
+                self.unary(x, |d, s| Op::F64ToF32 { dst: d, src: s })
+            }
+            Ex::F32ToInt(x, it) => {
+                let it = *it;
+                self.unary(x, move |d, s| Op::F32ToInt { dst: d, src: s, ty: it })
+            }
+            Ex::F64ToInt(x, it) => {
+                let it = *it;
+                self.unary(x, move |d, s| Op::F64ToInt { dst: d, src: s, ty: it })
+            }
+            Ex::IntNarrow(x, it) => {
+                let it = *it;
+                self.unary(x, move |d, s| Op::IntNarrow { dst: d, src: s, ty: it })
+            }
+            Ex::BoolToInt(x) => {
+                self.unary(x, |d, s| Op::BoolToInt { dst: d, src: s })
+            }
+            Ex::StructLit(sid, fields) => {
+                let d = self.alloc();
+                self.emit(Op::StructNew { dst: d, sid: *sid as u32 });
+                for (fidx, e) in fields {
+                    let mark = self.next;
+                    let r = self.ex(e);
+                    self.next = mark;
+                    self.emit(Op::StructSet { s: d, fidx: *fidx, src: r });
+                }
+                d
+            }
+            Ex::CallFn(fid, args) => {
+                let mark = self.next;
+                let regs: Box<[u16]> =
+                    args.iter().map(|a| self.ex(a)).collect();
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::CallFn { dst: d, fid: *fid as u32, args: regs });
+                d
+            }
+            Ex::CallMethod(fb, midx, self_e, args) => {
+                let mark = self.next;
+                let rs = self.ex(self_e);
+                let regs: Box<[u16]> =
+                    args.iter().map(|a| self.ex(a)).collect();
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::CallMethod {
+                    dst: d,
+                    fb: *fb as u32,
+                    midx: *midx as u32,
+                    self_r: rs,
+                    args: regs,
+                });
+                d
+            }
+            Ex::CallIface(iid, mid, self_e, args, line) => {
+                let mark = self.next;
+                let rs = self.ex(self_e);
+                let regs: Box<[u16]> =
+                    args.iter().map(|a| self.ex(a)).collect();
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::CallIface {
+                    dst: d,
+                    iface: *iid as u32,
+                    mid: *mid as u32,
+                    self_r: rs,
+                    args: regs,
+                    line: *line,
+                });
+                d
+            }
+            Ex::Intrinsic(b, kind, args, line) => {
+                let mark = self.next;
+                let regs: Box<[u16]> =
+                    args.iter().map(|a| self.ex(a)).collect();
+                self.next = mark;
+                let d = self.alloc();
+                match b {
+                    Builtin::BinArr | Builtin::ArrBin => {
+                        self.emit(Op::FileIo {
+                            dst: d,
+                            b: *b,
+                            args: regs,
+                            line: *line,
+                        });
+                    }
+                    _ => {
+                        self.emit(Op::Intrinsic {
+                            dst: d,
+                            b: *b,
+                            kind: *kind,
+                            args: regs,
+                        });
+                    }
+                }
+                d
+            }
+        }
+    }
+
+    fn unary(&mut self, x: &Ex, make: impl FnOnce(u16, u16) -> Op) -> u16 {
+        let mark = self.next;
+        let rs = self.ex(x);
+        self.next = mark;
+        let d = self.alloc();
+        self.emit(make(d, rs));
+        d
+    }
+
+    fn binary(
+        &mut self,
+        a: &Ex,
+        b: &Ex,
+        make: impl FnOnce(u16, u16, u16) -> Op,
+    ) -> u16 {
+        let mark = self.next;
+        let ra = self.ex(a);
+        let rb = self.ex(b);
+        self.next = mark;
+        let d = self.alloc();
+        self.emit(make(d, ra, rb));
+        d
+    }
+
+    /// ADR(lvalue): int_ops +1 happens in the emitted Adr* op.
+    fn adr(&mut self, lv: &Lv, kind: PtrKind) -> u16 {
+        match lv {
+            Lv::Local(s) => {
+                let d = self.alloc();
+                self.emit(Op::AdrLocal { dst: d, slot: *s, kind });
+                d
+            }
+            Lv::Global(g) => {
+                let d = self.alloc();
+                self.emit(Op::AdrGlobal { dst: d, g: *g, kind });
+                d
+            }
+            Lv::SelfField(f) => {
+                let d = self.alloc();
+                self.emit(Op::AdrSelf { dst: d, f: *f, kind });
+                d
+            }
+            Lv::Field(base, f) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::AdrField { dst: d, base: rb, f: *f, kind });
+                d
+            }
+            Lv::FbField(base, f) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::AdrFbField { dst: d, base: rb, f: *f, kind });
+                d
+            }
+            Lv::Idx(base, idx, len, _, line) => {
+                let mark = self.next;
+                let rb = self.ex(base);
+                let ri = self.ex(idx);
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::AdrIdx {
+                    dst: d,
+                    base: rb,
+                    idx: ri,
+                    len: *len,
+                    kind,
+                    line: *line,
+                });
+                d
+            }
+            Lv::PtrAt(base, off, _, line) => {
+                let mark = self.next;
+                let rp = self.ex(base);
+                let roff = match off {
+                    Some(o) => self.ex(o),
+                    None => NO_REG,
+                };
+                self.next = mark;
+                let d = self.alloc();
+                self.emit(Op::AdrPtr {
+                    dst: d,
+                    p: rp,
+                    off: roff,
+                    kind,
+                    line: *line,
+                });
+                d
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compile_src(src: &str) -> (Unit, CodeUnit) {
+        let unit = crate::st::compile(src).expect("compile");
+        let code = compile_unit(&unit);
+        (unit, code)
+    }
+
+    #[test]
+    fn compiles_flat_ops_with_resolved_jumps() {
+        let (_, code) = compile_src(
+            "PROGRAM p VAR i, s : DINT; END_VAR\n\
+             FOR i := 0 TO 9 DO\n\
+               IF i MOD 2 = 0 THEN s := s + i; END_IF\n\
+             END_FOR\n\
+             END_PROGRAM",
+        );
+        let ops = &code.programs[0].ops;
+        assert!(matches!(ops.last(), Some(Op::Ret)));
+        // Every jump target must land inside the op stream.
+        let n = ops.len() as u32;
+        for op in ops {
+            match op {
+                Op::Jump { t }
+                | Op::JumpIfFalse { t, .. }
+                | Op::CaseJump { t, .. }
+                | Op::ForCheck { exit: t, .. } => {
+                    // Every patched target lands strictly inside the
+                    // stream (the trailing Ret follows all patch
+                    // points); the PENDING placeholder (u32::MAX)
+                    // would fail this, catching unpatched jumps.
+                    assert!(*t < n, "unpatched or wild jump target {t}");
+                }
+                _ => {}
+            }
+        }
+        assert!(ops.iter().any(|o| matches!(o, Op::ForCheck { .. })));
+        assert!(ops.iter().any(|o| matches!(o, Op::ForIncr { .. })));
+    }
+
+    #[test]
+    fn frame_width_covers_slots_and_temps() {
+        let (unit, code) = compile_src(
+            "FUNCTION f : REAL VAR_INPUT a, b, c : REAL; END_VAR\n\
+             f := a * b + b * c + a * c;\n\
+             END_FUNCTION\n\
+             PROGRAM p VAR x : REAL; END_VAR x := f(1.0, 2.0, 3.0); END_PROGRAM",
+        );
+        let f = &code.funcs[0];
+        assert!(f.n_regs as usize > unit.funcs[0].slots.len());
+    }
+
+    #[test]
+    fn case_compiles_to_range_dispatch() {
+        let (_, code) = compile_src(
+            "PROGRAM p VAR x : DINT; END_VAR\n\
+             CASE x OF 0..4: x := 1; 7: x := 2; ELSE x := 3; END_CASE\n\
+             END_PROGRAM",
+        );
+        let ops = &code.programs[0].ops;
+        let cases: Vec<_> = ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::CaseJump { ranges, .. } => Some(ranges.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(*cases[0], vec![(0, 4)]);
+        assert_eq!(*cases[1], vec![(7, 7)]);
+    }
+}

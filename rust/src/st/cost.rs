@@ -108,4 +108,92 @@ mod tests {
         let m = Meter { loads: 1, stores: 2, fp_add: 3, ..Meter::default() };
         assert_eq!(m.total_ops(), 6);
     }
+
+    /// Every op-class counter participates in `total_ops`; the byte
+    /// counters (copy/io) deliberately do not. A counter added to the
+    /// struct but forgotten in `total_ops` would silently skew the
+    /// ops/cycle figures in BENCH_st_vm.json.
+    #[test]
+    fn total_ops_counts_each_class_once_and_no_bytes() {
+        let m = Meter {
+            loads: 1,
+            stores: 1,
+            fp_add: 1,
+            fp_mul: 1,
+            fp_div: 1,
+            fp_trans: 1,
+            int_ops: 1,
+            cmp: 1,
+            fp_cmp: 1,
+            branches: 1,
+            calls: 1,
+            converts: 1,
+            copy_bytes: 1000,
+            io_calls: 7,
+            io_bytes: 1000,
+        };
+        // 12 op classes; io_calls is I/O accounting, not CPU ops.
+        assert_eq!(m.total_ops(), 12);
+    }
+
+    #[test]
+    fn since_full_delta_across_every_counter() {
+        let a = Meter {
+            loads: 10,
+            stores: 9,
+            fp_add: 8,
+            fp_mul: 7,
+            fp_div: 6,
+            fp_trans: 5,
+            int_ops: 4,
+            cmp: 3,
+            fp_cmp: 2,
+            branches: 1,
+            calls: 11,
+            converts: 12,
+            copy_bytes: 13,
+            io_calls: 14,
+            io_bytes: 15,
+        };
+        let mut b = a.clone();
+        b.loads += 100;
+        b.stores += 99;
+        b.fp_add += 98;
+        b.fp_mul += 97;
+        b.fp_div += 96;
+        b.fp_trans += 95;
+        b.int_ops += 94;
+        b.cmp += 93;
+        b.fp_cmp += 92;
+        b.branches += 91;
+        b.calls += 90;
+        b.converts += 89;
+        b.copy_bytes += 88;
+        b.io_calls += 87;
+        b.io_bytes += 86;
+        let d = b.since(&a);
+        assert_eq!(
+            (d.loads, d.stores, d.fp_add, d.fp_mul, d.fp_div),
+            (100, 99, 98, 97, 96)
+        );
+        assert_eq!(
+            (d.fp_trans, d.int_ops, d.cmp, d.fp_cmp, d.branches),
+            (95, 94, 93, 92, 91)
+        );
+        assert_eq!((d.calls, d.converts), (90, 89));
+        assert_eq!((d.copy_bytes, d.io_calls, d.io_bytes), (88, 87, 86));
+        // since(self) is the zero delta; zero delta has no ops.
+        assert_eq!(b.since(&b).total_ops(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn since_panics_when_counters_go_backwards() {
+        let mut a = Meter::new();
+        a.loads = 5;
+        let b = Meter::new();
+        // b predates a: counters "went backwards".
+        let _ = b.since(&a);
+    }
 }

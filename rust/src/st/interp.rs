@@ -32,7 +32,7 @@ impl std::fmt::Display for RuntimeError {
 
 impl std::error::Error for RuntimeError {}
 
-fn rerr(line: u32, msg: impl Into<String>) -> RuntimeError {
+pub(crate) fn rerr(line: u32, msg: impl Into<String>) -> RuntimeError {
     RuntimeError { line, message: msg.into() }
 }
 
@@ -254,21 +254,13 @@ impl Interp {
         frame.reserve(fd.slots.len());
         frame.push(fd.slots[0].init.deep_clone()); // return slot
         for (i, a) in args.into_iter().enumerate() {
-            if i < fd.n_inputs {
+            if i < fd.n_inputs && a.is_aggregate() {
                 // call-by-value: aggregates copied, bytes metered
-                match &a {
-                    Value::ArrF32(_)
-                    | Value::ArrF64(_)
-                    | Value::ArrInt(_)
-                    | Value::ArrRef(_)
-                    | Value::Struct(_) => {
-                        self.meter.copy_bytes += a.byte_size();
-                        frame.push(a.deep_clone());
-                    }
-                    _ => frame.push(a),
-                }
+                self.meter.copy_bytes += a.byte_size();
+                frame.push(a.deep_clone());
             } else {
-                frame.push(a); // VAR_IN_OUT: shares the handle
+                // scalar input, or VAR_IN_OUT sharing the handle
+                frame.push(a);
             }
         }
         for slot in fd.slots.iter().skip(frame.len()) {
@@ -342,7 +334,11 @@ impl Interp {
                         _ => {}
                     }
                     self.meter.int_ops += 1;
-                    i += step;
+                    // Wrapping, like every other IEC integer op (and the
+                    // bytecode VM's ForIncr — the tiers must agree even
+                    // at i64 extremes, where a debug-build `+=` would
+                    // abort here while the VM wrapped).
+                    i = i.wrapping_add(step);
                 }
                 Ok(Flow::Normal)
             }
@@ -398,11 +394,7 @@ impl Interp {
                 self.run_func(body, Vec::new(), Some(inst))?;
                 for (fidx, lv) in outputs {
                     let v = self.instances[inst].fields[*fidx as usize].clone();
-                    let copy = matches!(
-                        v,
-                        Value::ArrF32(_) | Value::ArrF64(_) | Value::ArrInt(_)
-                            | Value::ArrRef(_) | Value::Struct(_)
-                    );
+                    let copy = v.is_aggregate();
                     self.assign(lv, v, copy, cx)?;
                 }
                 Ok(Flow::Normal)
@@ -1016,92 +1008,7 @@ impl Interp {
         for a in args {
             vals.push(self.eval(a, cx)?);
         }
-        let as_f64 = |v: &Value| match kind {
-            NumKind::F32 => v.real() as f64,
-            NumKind::F64 => v.lreal(),
-            NumKind::Int => v.int() as f64,
-        };
-        let wrap = |x: f64| match kind {
-            NumKind::F32 => Value::Real(x as f32),
-            NumKind::F64 => Value::LReal(x),
-            NumKind::Int => Value::Int(x as i64),
-        };
-        Ok(match b {
-            Builtin::Abs => {
-                self.meter.int_ops += 1;
-                match kind {
-                    NumKind::Int => Value::Int(vals[0].int().abs()),
-                    _ => wrap(as_f64(&vals[0]).abs()),
-                }
-            }
-            Builtin::Sqrt => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).sqrt())
-            }
-            Builtin::Exp => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).exp())
-            }
-            Builtin::Ln => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).ln())
-            }
-            Builtin::Log => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).log10())
-            }
-            Builtin::Sin => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).sin())
-            }
-            Builtin::Cos => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).cos())
-            }
-            Builtin::Tan => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).tan())
-            }
-            Builtin::Atan => {
-                self.meter.fp_trans += 1;
-                wrap(as_f64(&vals[0]).atan())
-            }
-            Builtin::Min => {
-                self.meter.cmp += 1;
-                match kind {
-                    NumKind::Int => Value::Int(vals[0].int().min(vals[1].int())),
-                    _ => wrap(as_f64(&vals[0]).min(as_f64(&vals[1]))),
-                }
-            }
-            Builtin::Max => {
-                self.meter.cmp += 1;
-                match kind {
-                    NumKind::Int => Value::Int(vals[0].int().max(vals[1].int())),
-                    _ => wrap(as_f64(&vals[0]).max(as_f64(&vals[1]))),
-                }
-            }
-            Builtin::Limit => {
-                self.meter.cmp += 2;
-                match kind {
-                    NumKind::Int => Value::Int(
-                        vals[1].int().clamp(vals[0].int(), vals[2].int()),
-                    ),
-                    _ => wrap(
-                        as_f64(&vals[1])
-                            .clamp(as_f64(&vals[0]), as_f64(&vals[2])),
-                    ),
-                }
-            }
-            Builtin::Trunc => {
-                self.meter.converts += 1;
-                Value::Int(builtins::trunc_to_int(as_f64(&vals[0])))
-            }
-            Builtin::Floor => {
-                self.meter.converts += 1;
-                Value::Int(builtins::floor_to_int(as_f64(&vals[0])))
-            }
-            Builtin::BinArr | Builtin::ArrBin => unreachable!(),
-        })
+        Ok(builtins::eval_intrinsic(&mut self.meter, b, kind, &vals))
     }
 
     /// BINARR / ARRBIN: the framework's binary file I/O utilities.
@@ -1124,99 +1031,20 @@ impl Interp {
             Some(e) => self.eval(e, cx)?.int() as usize,
             None => 4,
         };
-        if bytes < 0 {
-            return Err(rerr(line, "negative byte count"));
-        }
-        let bytes = bytes as usize;
-        let path = self.io_dir.join(fname.as_ref());
-        self.meter.io_calls += 1;
-        self.meter.io_bytes += bytes as u64;
-        let n = bytes / elem_bytes;
-
-        match (b, &ptr) {
-            (Builtin::BinArr, Value::PtrF32(a, off)) => {
-                let data = std::fs::read(&path).map_err(|e| {
-                    rerr(line, format!("BINARR {}: {e}", path.display()))
-                })?;
-                if data.len() < bytes {
-                    return Err(rerr(line, "BINARR: file smaller than requested"));
-                }
-                let mut arr = a.borrow_mut();
-                if off + n > arr.len() {
-                    return Err(rerr(line, "BINARR: destination overflow"));
-                }
-                for (i, c) in data[..bytes].chunks_exact(4).enumerate() {
-                    arr[off + i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-                }
-                Ok(Value::Bool(true))
-            }
-            (Builtin::BinArr, Value::PtrInt(a, off)) => {
-                let data = std::fs::read(&path).map_err(|e| {
-                    rerr(line, format!("BINARR {}: {e}", path.display()))
-                })?;
-                if data.len() < bytes {
-                    return Err(rerr(line, "BINARR: file smaller than requested"));
-                }
-                let mut arr = a.borrow_mut();
-                if off + n > arr.len() {
-                    return Err(rerr(line, "BINARR: destination overflow"));
-                }
-                for i in 0..n {
-                    let chunk = &data[i * elem_bytes..(i + 1) * elem_bytes];
-                    arr[off + i] = match elem_bytes {
-                        1 => chunk[0] as i8 as i64,
-                        2 => i16::from_le_bytes([chunk[0], chunk[1]]) as i64,
-                        4 => i32::from_le_bytes([
-                            chunk[0], chunk[1], chunk[2], chunk[3],
-                        ]) as i64,
-                        8 => i64::from_le_bytes(chunk.try_into().unwrap()),
-                        _ => return Err(rerr(line, "bad element width")),
-                    };
-                }
-                Ok(Value::Bool(true))
-            }
-            (Builtin::ArrBin, Value::PtrF32(a, off)) => {
-                let arr = a.borrow();
-                if off + n > arr.len() {
-                    return Err(rerr(line, "ARRBIN: source overflow"));
-                }
-                let mut out = Vec::with_capacity(bytes);
-                for i in 0..n {
-                    out.extend_from_slice(&arr[off + i].to_le_bytes());
-                }
-                std::fs::write(&path, out).map_err(|e| {
-                    rerr(line, format!("ARRBIN {}: {e}", path.display()))
-                })?;
-                Ok(Value::Bool(true))
-            }
-            (Builtin::ArrBin, Value::PtrInt(a, off)) => {
-                let arr = a.borrow();
-                if off + n > arr.len() {
-                    return Err(rerr(line, "ARRBIN: source overflow"));
-                }
-                let mut out = Vec::with_capacity(bytes);
-                for i in 0..n {
-                    let v = arr[off + i];
-                    match elem_bytes {
-                        1 => out.push(v as u8),
-                        2 => out.extend_from_slice(&(v as i16).to_le_bytes()),
-                        4 => out.extend_from_slice(&(v as i32).to_le_bytes()),
-                        8 => out.extend_from_slice(&v.to_le_bytes()),
-                        _ => return Err(rerr(line, "bad element width")),
-                    }
-                }
-                std::fs::write(&path, out).map_err(|e| {
-                    rerr(line, format!("ARRBIN {}: {e}", path.display()))
-                })?;
-                Ok(Value::Bool(true))
-            }
-            (_, Value::Null) => Err(rerr(line, "null pointer in file I/O")),
-            _ => Err(rerr(line, "unsupported pointer kind in file I/O")),
-        }
+        builtins::exec_file_io(
+            &mut self.meter,
+            &self.io_dir,
+            b,
+            fname.as_ref(),
+            bytes,
+            &ptr,
+            elem_bytes,
+            line,
+        )
     }
 }
 
-fn cmp_ord(op: CmpOp, ord: Option<std::cmp::Ordering>) -> bool {
+pub(crate) fn cmp_ord(op: CmpOp, ord: Option<std::cmp::Ordering>) -> bool {
     use std::cmp::Ordering::*;
     match (op, ord) {
         (CmpOp::Eq, Some(Equal)) => true,
@@ -1231,8 +1059,8 @@ fn cmp_ord(op: CmpOp, ord: Option<std::cmp::Ordering>) -> bool {
 
 /// Copy `src` into `dst`'s existing storage (ST value semantics: array
 /// assignment fills the destination's fixed memory, keeping pointers to
-/// it valid). No-op on self-assignment.
-fn copy_into(src: &Value, dst: &Value) -> Result<(), RuntimeError> {
+/// it valid). No-op on self-assignment. Shared with the bytecode VM.
+pub(crate) fn copy_into(src: &Value, dst: &Value) -> Result<(), RuntimeError> {
     match (src, dst) {
         (Value::ArrF32(s), Value::ArrF32(d)) => {
             if !Rc::ptr_eq(s, d) {

@@ -399,6 +399,46 @@ mod tests {
         assert_eq!(IntTy::Lint.wrap(i64::MIN), i64::MIN);
     }
 
+    /// SINT boundary behavior: the exact values the §6.1 quantized
+    /// weights live at. 127 and -128 are fixed points; one past either
+    /// end wraps to the opposite sign.
+    #[test]
+    fn sint_min_max_edges() {
+        assert_eq!(IntTy::Sint.wrap(127), 127);
+        assert_eq!(IntTy::Sint.wrap(128), -128);
+        assert_eq!(IntTy::Sint.wrap(-128), -128);
+        assert_eq!(IntTy::Sint.wrap(-129), 127);
+        assert_eq!(IntTy::Sint.wrap(255), -1);
+        assert_eq!(IntTy::Sint.wrap(256), 0);
+    }
+
+    /// WORD/BYTE/DWORD are unsigned bit-string types: wrap is a pure
+    /// mask, never sign-extending.
+    #[test]
+    fn bitstring_masking() {
+        assert_eq!(IntTy::Word.wrap(0x1_FFFF), 0xFFFF);
+        assert_eq!(IntTy::Word.wrap(-1), 0xFFFF);
+        assert_eq!(IntTy::Word.wrap(0x8000), 0x8000, "no sign extension");
+        assert_eq!(IntTy::Byte.wrap(0x100), 0);
+        assert_eq!(IntTy::Byte.wrap(-2), 0xFE);
+        assert_eq!(IntTy::Dword.wrap(0x1_0000_0000), 0);
+        assert_eq!(IntTy::Dword.wrap(-1), 0xFFFF_FFFF);
+    }
+
+    /// Signed widths wrap two's-complement at every boundary; 64-bit
+    /// widths are identity (no mask exists for them).
+    #[test]
+    fn signed_wrap_boundaries_and_identity() {
+        assert_eq!(IntTy::Int.wrap(32_767), 32_767);
+        assert_eq!(IntTy::Int.wrap(32_768), -32_768);
+        assert_eq!(IntTy::Int.wrap(-32_769), 32_767);
+        assert_eq!(IntTy::Dint.wrap(2_147_483_648), -2_147_483_648);
+        assert_eq!(IntTy::Dint.wrap(-2_147_483_649), 2_147_483_647);
+        assert_eq!(IntTy::Lint.wrap(i64::MAX), i64::MAX);
+        assert_eq!(IntTy::Ulint.wrap(-1), -1, "64-bit storage is identity");
+        assert_eq!(IntTy::Udint.wrap(-1), 4_294_967_295);
+    }
+
     #[test]
     fn ty_sizes() {
         let unit = Unit::default();

@@ -1,9 +1,12 @@
 //! IEC 61131-3 Structured Text substrate.
 //!
 //! The Codesys-runtime substitute the paper's benchmarks run on: a
-//! lexer, parser, semantic checker and tree-walking interpreter for the
-//! ST subset that the ICSML framework (and realistic PLC control code)
-//! needs, with the standard's restrictions *enforced*:
+//! lexer, parser, semantic checker and **two execution tiers** — the
+//! tree-walking [`Interp`] (the §5.4 vendor-runtime reference oracle)
+//! and the register-bytecode [`Vm`] ([`bytecode`] + [`vm`], the fast
+//! tier serving `StBackend`) — for the ST subset that the ICSML
+//! framework (and realistic PLC control code) needs, with the
+//! standard's restrictions *enforced*:
 //!
 //! * **No recursion** (IEC 61131-3 forbids it so maximum program memory
 //!   is computable): [`sema`] rejects call-graph cycles, including
@@ -22,6 +25,7 @@
 
 pub mod ast;
 pub mod builtins;
+pub mod bytecode;
 pub mod cost;
 pub mod interp;
 pub mod ir;
@@ -30,6 +34,7 @@ pub mod lower;
 pub mod parser;
 pub mod sema;
 pub mod value;
+pub mod vm;
 
 pub use cost::Meter;
 pub use interp::{Interp, RuntimeError};
@@ -37,6 +42,7 @@ pub use lexer::{lex, LexError, Token, TokenKind};
 pub use parser::{parse, ParseError};
 pub use sema::SemaError;
 pub use value::Value;
+pub use vm::Vm;
 
 /// Compile ST source text to an executable [`ir::Unit`].
 ///

@@ -65,6 +65,23 @@ impl Value {
         }
     }
 
+    /// True for values with ST *value semantics* on assignment and
+    /// call-by-value (arrays and structs — deep-copied and metered);
+    /// false for scalars and reference-like values (pointers, FB
+    /// references). The single source of truth for every copy-or-move
+    /// decision in both execution tiers.
+    #[inline]
+    pub fn is_aggregate(&self) -> bool {
+        matches!(
+            self,
+            Value::ArrF32(_)
+                | Value::ArrF64(_)
+                | Value::ArrInt(_)
+                | Value::ArrRef(_)
+                | Value::Struct(_)
+        )
+    }
+
     /// Byte size of the payload (used to meter VAR_INPUT copies).
     pub fn byte_size(&self) -> u64 {
         match self {
@@ -85,6 +102,64 @@ impl Value {
             | Value::PtrF64(..)
             | Value::PtrInt(..) => 8,
             Value::Null => 8,
+        }
+    }
+
+    /// Structural, bit-exact equality: floats compare by bit pattern
+    /// (NaN == NaN, 0.0 != -0.0), aggregates compare element-wise, and
+    /// pointers compare (offset, pointed-to contents). Used by the
+    /// interpreter-vs-VM differential harness, where "the same program
+    /// state" must mean the same bits, not approximately equal floats.
+    pub fn bits_eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Real(a), Value::Real(b)) => a.to_bits() == b.to_bits(),
+            (Value::LReal(a), Value::LReal(b)) => a.to_bits() == b.to_bits(),
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::ArrF32(a), Value::ArrF32(b)) => {
+                let (a, b) = (a.borrow(), b.borrow());
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|(x, y)| {
+                        x.to_bits() == y.to_bits()
+                    })
+            }
+            (Value::ArrF64(a), Value::ArrF64(b)) => {
+                let (a, b) = (a.borrow(), b.borrow());
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|(x, y)| {
+                        x.to_bits() == y.to_bits()
+                    })
+            }
+            (Value::ArrInt(a), Value::ArrInt(b)) => *a.borrow() == *b.borrow(),
+            (Value::ArrRef(a), Value::ArrRef(b))
+            | (Value::Struct(a), Value::Struct(b)) => {
+                let (a, b) = (a.borrow(), b.borrow());
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|(x, y)| x.bits_eq(y))
+            }
+            (Value::FbRef(a), Value::FbRef(b)) => a == b,
+            (Value::PtrF32(a, ao), Value::PtrF32(b, bo)) => {
+                ao == bo
+                    && a.borrow().len() == b.borrow().len()
+                    && a.borrow()
+                        .iter()
+                        .zip(b.borrow().iter())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (Value::PtrF64(a, ao), Value::PtrF64(b, bo)) => {
+                ao == bo
+                    && a.borrow().len() == b.borrow().len()
+                    && a.borrow()
+                        .iter()
+                        .zip(b.borrow().iter())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (Value::PtrInt(a, ao), Value::PtrInt(b, bo)) => {
+                ao == bo && *a.borrow() == *b.borrow()
+            }
+            (Value::Null, Value::Null) => true,
+            _ => false,
         }
     }
 

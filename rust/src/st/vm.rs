@@ -1,0 +1,1240 @@
+//! Register VM executing [`super::bytecode`] — the ST runtime's fast
+//! tier.
+//!
+//! Holds the same load-time state as [`Interp`] (globals, FB-instance
+//! arena, program instances, meter, I/O dir) and exposes the same host
+//! API, so backends and tests can swap tiers freely. Call frames live
+//! in one contiguous `Vec<Value>` register arena: a call pushes the
+//! callee's frame onto the arena (return slot, arguments, slot
+//! initializers, temporaries) and truncates it on return — replacing
+//! the interpreter's `frame_pool` recycling with strictly
+//! stack-disciplined storage.
+//!
+//! Correctness contract: identical outputs *and* identical
+//! [`Meter`](super::cost::Meter) counters to the tree-walking oracle on
+//! every successful execution, and an error whenever the oracle errors
+//! (`tests/st_differential.rs` drives both tiers over the whole
+//! end-to-end corpus plus the ICSML MLP models).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use super::builtins;
+use super::bytecode::{self, Code, CodeUnit, CopyMode, Op, NO_REG};
+use super::cost::Meter;
+use super::interp::{cmp_ord, copy_into, rerr, FbInstance, Interp, RuntimeError};
+use super::ir::*;
+use super::value::Value;
+
+/// The bytecode execution tier.
+pub struct Vm {
+    pub unit: Rc<Unit>,
+    code: Rc<CodeUnit>,
+    pub globals: Vec<Value>,
+    pub instances: Vec<FbInstance>,
+    /// Arena index of each program's instance (parallel to
+    /// `unit.programs`).
+    pub program_instances: Vec<usize>,
+    pub meter: Meter,
+    /// Base directory for BINARR/ARRBIN file access.
+    pub io_dir: PathBuf,
+    /// The call-frame arena: every live frame's registers,
+    /// stack-disciplined.
+    regs: Vec<Value>,
+}
+
+impl Vm {
+    /// Compile and instantiate a unit (globals, program instances, FB
+    /// arena — laid out exactly as [`Interp::new`] lays them out, so
+    /// `FbRef` handles are identical across tiers).
+    pub fn new(unit: Unit) -> Vm {
+        Vm::from_interp(Interp::new(unit))
+    }
+
+    /// Adopt an interpreter's load-time state wholesale and compile its
+    /// unit to bytecode. Any host-side mutation already applied to the
+    /// interpreter (globals, instance fields, `io_dir`, meter) carries
+    /// over bit-for-bit.
+    pub fn from_interp(mut interp: Interp) -> Vm {
+        let code = Rc::new(bytecode::compile_unit(&interp.unit));
+        Vm {
+            unit: Rc::clone(&interp.unit),
+            code,
+            globals: std::mem::take(&mut interp.globals),
+            instances: std::mem::take(&mut interp.instances),
+            program_instances: std::mem::take(&mut interp.program_instances),
+            meter: std::mem::take(&mut interp.meter),
+            io_dir: std::mem::replace(&mut interp.io_dir, PathBuf::new()),
+            regs: Vec::new(),
+        }
+    }
+
+    /// Set the BINARR/ARRBIN base directory.
+    pub fn with_io_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.io_dir = dir.into();
+        self
+    }
+
+    // ------------------------------------------------------- host API
+    // Mirrors Interp's host API over the same state layout; a change
+    // to name resolution here must land in interp.rs too (and vice
+    // versa) until the shared load-time state is factored into one
+    // struct both tiers embed — see ROADMAP open items.
+    pub fn program_instance(&self, name: &str) -> Option<usize> {
+        let pid = self.unit.find_program(name)?;
+        Some(self.program_instances[pid])
+    }
+
+    /// Read a field of an arena instance by name (program VARs included).
+    pub fn instance_field(&self, inst: usize, field: &str) -> Option<Value> {
+        let fi = self.field_index(inst, field)?;
+        Some(self.instances[inst].fields[fi].clone())
+    }
+
+    pub fn set_instance_field(
+        &mut self,
+        inst: usize,
+        field: &str,
+        value: Value,
+    ) -> Result<(), RuntimeError> {
+        let fi = self
+            .field_index(inst, field)
+            .ok_or_else(|| rerr(0, format!("no field {field}")))?;
+        self.instances[inst].fields[fi] = value;
+        Ok(())
+    }
+
+    fn field_index(&self, inst: usize, field: &str) -> Option<usize> {
+        let i = &self.instances[inst];
+        let defs = if i.fb_id == usize::MAX {
+            let pid = self
+                .program_instances
+                .iter()
+                .position(|&x| x == inst)?;
+            &self.unit.programs[pid].fields
+        } else {
+            &self.unit.fbs[i.fb_id].fields
+        };
+        defs.iter().position(|f| f.name.eq_ignore_ascii_case(field))
+    }
+
+    pub fn global(&self, name: &str) -> Option<Value> {
+        self.unit.find_global(name).map(|g| self.globals[g].clone())
+    }
+
+    pub fn set_global(&mut self, name: &str, value: Value) -> bool {
+        match self.unit.find_global(name) {
+            Some(g) => {
+                self.globals[g] = value;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run a PROGRAM body once (one "scan" of that task).
+    pub fn run_program(&mut self, name: &str) -> Result<(), RuntimeError> {
+        let pid = self
+            .unit
+            .find_program(name)
+            .ok_or_else(|| rerr(0, format!("no program {name}")))?;
+        let inst = self.program_instances[pid];
+        let unit = Rc::clone(&self.unit);
+        let cu = Rc::clone(&self.code);
+        let fd = &unit.programs[pid].body;
+        let code = &cu.programs[pid];
+        let base = self.push_frame_vals(fd, code, Vec::new())?;
+        let r = self.exec(code, base, Some(inst));
+        self.regs.truncate(base);
+        r
+    }
+
+    /// Call a FUNCTION by name with host-supplied arguments.
+    pub fn call_function(
+        &mut self,
+        name: &str,
+        args: Vec<Value>,
+    ) -> Result<Value, RuntimeError> {
+        let fid = self
+            .unit
+            .find_function(name)
+            .ok_or_else(|| rerr(0, format!("no function {name}")))?;
+        let unit = Rc::clone(&self.unit);
+        let cu = Rc::clone(&self.code);
+        let fd = &unit.funcs[fid];
+        let code = &cu.funcs[fid];
+        let base = self.push_frame_vals(fd, code, args)?;
+        let r = self.exec(code, base, None);
+        let ret = std::mem::replace(&mut self.regs[base], Value::Null);
+        self.regs.truncate(base);
+        r?;
+        Ok(ret)
+    }
+
+    /// Call a method on an arena instance by name.
+    pub fn call_method(
+        &mut self,
+        inst: usize,
+        method: &str,
+        args: Vec<Value>,
+    ) -> Result<Value, RuntimeError> {
+        let fb_id = self.instances[inst].fb_id;
+        let unit = Rc::clone(&self.unit);
+        let cu = Rc::clone(&self.code);
+        let fb = &unit.fbs[fb_id];
+        let midx = fb
+            .methods
+            .iter()
+            .position(|m| m.name.eq_ignore_ascii_case(method))
+            .ok_or_else(|| rerr(0, format!("no method {method}")))?;
+        let fd = &fb.methods[midx];
+        let code = &cu.fb_methods[fb_id][midx];
+        let base = self.push_frame_vals(fd, code, args)?;
+        let r = self.exec(code, base, Some(inst));
+        let ret = std::mem::replace(&mut self.regs[base], Value::Null);
+        self.regs.truncate(base);
+        r?;
+        Ok(ret)
+    }
+
+    // ----------------------------------------------------- frame setup
+    /// Push a frame whose arguments are host-supplied values. Mirrors
+    /// `Interp::run_func`'s metering: calls +1, VAR_INPUT aggregates
+    /// deep-copied with bytes metered, VAR_IN_OUT sharing the handle.
+    fn push_frame_vals(
+        &mut self,
+        fd: &FuncDef,
+        code: &Code,
+        args: Vec<Value>,
+    ) -> Result<usize, RuntimeError> {
+        self.meter.calls += 1;
+        if args.len() != fd.n_inputs + fd.n_inouts {
+            return Err(rerr(
+                0,
+                format!(
+                    "{}: expected {} args, got {}",
+                    fd.name,
+                    fd.n_inputs + fd.n_inouts,
+                    args.len()
+                ),
+            ));
+        }
+        let base = self.regs.len();
+        self.regs.reserve(code.n_regs as usize);
+        self.regs.push(fd.slots[0].init.deep_clone());
+        let n_args = args.len();
+        for (i, a) in args.into_iter().enumerate() {
+            self.push_arg(i < fd.n_inputs, a);
+        }
+        self.fill_frame(fd, code, n_args);
+        Ok(base)
+    }
+
+    /// Push a frame whose arguments live in the caller's registers
+    /// (moved out; the compiler guarantees argument registers are dead
+    /// temps).
+    fn push_frame_regs(
+        &mut self,
+        fd: &FuncDef,
+        code: &Code,
+        arg_regs: &[u16],
+        caller_base: usize,
+    ) -> Result<usize, RuntimeError> {
+        self.meter.calls += 1;
+        if arg_regs.len() != fd.n_inputs + fd.n_inouts {
+            return Err(rerr(
+                0,
+                format!(
+                    "{}: expected {} args, got {}",
+                    fd.name,
+                    fd.n_inputs + fd.n_inouts,
+                    arg_regs.len()
+                ),
+            ));
+        }
+        let base = self.regs.len();
+        self.regs.reserve(code.n_regs as usize);
+        self.regs.push(fd.slots[0].init.deep_clone());
+        for (i, &r) in arg_regs.iter().enumerate() {
+            let a = std::mem::replace(
+                &mut self.regs[caller_base + r as usize],
+                Value::Null,
+            );
+            self.push_arg(i < fd.n_inputs, a);
+        }
+        self.fill_frame(fd, code, arg_regs.len());
+        Ok(base)
+    }
+
+    #[inline]
+    fn push_arg(&mut self, is_input: bool, a: Value) {
+        if is_input && a.is_aggregate() {
+            // call-by-value: aggregates copied, bytes metered
+            self.meter.copy_bytes += a.byte_size();
+            let copy = a.deep_clone();
+            self.regs.push(copy);
+        } else {
+            // scalar input, or VAR_IN_OUT sharing the handle
+            self.regs.push(a);
+        }
+    }
+
+    #[inline]
+    fn fill_frame(&mut self, fd: &FuncDef, code: &Code, n_args: usize) {
+        for slot in fd.slots.iter().skip(1 + n_args) {
+            self.regs.push(slot.init.deep_clone());
+        }
+        for _ in fd.slots.len()..code.n_regs as usize {
+            self.regs.push(Value::Null);
+        }
+    }
+
+    // ------------------------------------------------------- execution
+    /// Threaded dispatch over the op stream of one frame.
+    fn exec(
+        &mut self,
+        code: &Code,
+        base: usize,
+        self_idx: Option<usize>,
+    ) -> Result<(), RuntimeError> {
+        macro_rules! reg {
+            ($i:expr) => {
+                self.regs[base + $i as usize]
+            };
+        }
+        macro_rules! take {
+            ($i:expr) => {
+                std::mem::replace(&mut reg!($i), Value::Null)
+            };
+        }
+        let ops = &code.ops;
+        let mut pc = 0usize;
+        loop {
+            match &ops[pc] {
+                // -------------------------------------------- constants
+                Op::ConstBool { dst, v } => reg!(*dst) = Value::Bool(*v),
+                Op::ConstInt { dst, v } => reg!(*dst) = Value::Int(*v),
+                Op::ConstF32 { dst, v } => reg!(*dst) = Value::Real(*v),
+                Op::ConstF64 { dst, v } => reg!(*dst) = Value::LReal(*v),
+                Op::ConstStr { dst, v } => reg!(*dst) = Value::Str(v.clone()),
+                Op::ConstNull { dst } => reg!(*dst) = Value::Null,
+                Op::Mov { dst, src } => {
+                    let v = reg!(*src).clone();
+                    reg!(*dst) = v;
+                }
+
+                // ------------------------------------------------ reads
+                Op::LoadLocal { dst, slot } => {
+                    self.meter.loads += 1;
+                    let v = reg!(*slot).clone();
+                    reg!(*dst) = v;
+                }
+                Op::LoadGlobal { dst, g } => {
+                    self.meter.loads += 1;
+                    reg!(*dst) = self.globals[*g as usize].clone();
+                }
+                Op::LoadSelf { dst, f } => {
+                    self.meter.loads += 1;
+                    let inst = self_idx
+                        .ok_or_else(|| rerr(0, "no self in this context"))?;
+                    reg!(*dst) =
+                        self.instances[inst].fields[*f as usize].clone();
+                }
+                Op::LoadField { dst, base: b, f } => {
+                    self.meter.loads += 1;
+                    let v = match &reg!(*b) {
+                        Value::Struct(s) => s.borrow()[*f as usize].clone(),
+                        _ => return Err(rerr(0, "field read on non-struct")),
+                    };
+                    reg!(*dst) = v;
+                }
+                Op::LoadFbField { dst, base: b, f } => {
+                    self.meter.loads += 1;
+                    let h = match &reg!(*b) {
+                        Value::FbRef(h) => *h,
+                        _ => return Err(rerr(0, "FB instance not bound")),
+                    };
+                    reg!(*dst) = self.instances[h].fields[*f as usize].clone();
+                }
+                Op::LoadIdx { dst, base: b, idx, len, kind, line } => {
+                    let i = reg!(*idx).int();
+                    self.meter.loads += 1;
+                    if i < 0 || i as u32 >= *len {
+                        return Err(rerr(
+                            *line,
+                            format!(
+                                "array index {i} out of bounds (len {len})"
+                            ),
+                        ));
+                    }
+                    let i = i as usize;
+                    let v = match (kind, &reg!(*b)) {
+                        (ElemKind::F32, Value::ArrF32(a)) => {
+                            Value::Real(a.borrow()[i])
+                        }
+                        (ElemKind::F64, Value::ArrF64(a)) => {
+                            Value::LReal(a.borrow()[i])
+                        }
+                        (ElemKind::Int, Value::ArrInt(a)) => {
+                            Value::Int(a.borrow()[i])
+                        }
+                        (ElemKind::Ref, Value::ArrRef(a)) => {
+                            a.borrow()[i].clone()
+                        }
+                        _ => {
+                            return Err(rerr(*line, "array read type mismatch"))
+                        }
+                    };
+                    reg!(*dst) = v;
+                }
+                Op::LoadPtr { dst, p, off, kind, line } => {
+                    let extra = if *off == NO_REG {
+                        0
+                    } else {
+                        reg!(*off).int()
+                    };
+                    self.meter.loads += 1;
+                    if extra < 0 {
+                        return Err(rerr(*line, "negative pointer offset"));
+                    }
+                    let v = match (kind, &reg!(*p)) {
+                        (PtrKind::F32, Value::PtrF32(a, base_off)) => {
+                            let arr = a.borrow();
+                            let i = base_off + extra as usize;
+                            if i >= arr.len() {
+                                return Err(rerr(
+                                    *line,
+                                    "pointer read out of bounds",
+                                ));
+                            }
+                            Value::Real(arr[i])
+                        }
+                        (PtrKind::F64, Value::PtrF64(a, base_off)) => {
+                            let arr = a.borrow();
+                            let i = base_off + extra as usize;
+                            if i >= arr.len() {
+                                return Err(rerr(
+                                    *line,
+                                    "pointer read out of bounds",
+                                ));
+                            }
+                            Value::LReal(arr[i])
+                        }
+                        (PtrKind::Int, Value::PtrInt(a, base_off)) => {
+                            let arr = a.borrow();
+                            let i = base_off + extra as usize;
+                            if i >= arr.len() {
+                                return Err(rerr(
+                                    *line,
+                                    "pointer read out of bounds",
+                                ));
+                            }
+                            Value::Int(arr[i])
+                        }
+                        (_, Value::Null) => {
+                            return Err(rerr(*line, "null pointer read"))
+                        }
+                        _ => {
+                            return Err(rerr(
+                                *line,
+                                "pointer read type mismatch",
+                            ))
+                        }
+                    };
+                    reg!(*dst) = v;
+                }
+
+                // -------------------------------------------------- ADR
+                Op::AdrLocal { dst, slot, kind } => {
+                    self.meter.int_ops += 1;
+                    let v = adr_of_array(*kind, reg!(*slot).clone(), 0)?;
+                    reg!(*dst) = v;
+                }
+                Op::AdrGlobal { dst, g, kind } => {
+                    self.meter.int_ops += 1;
+                    let v =
+                        adr_of_array(*kind, self.globals[*g as usize].clone(), 0)?;
+                    reg!(*dst) = v;
+                }
+                Op::AdrSelf { dst, f, kind } => {
+                    self.meter.int_ops += 1;
+                    let inst = self_idx
+                        .ok_or_else(|| rerr(0, "no self in this context"))?;
+                    let v = adr_of_array(
+                        *kind,
+                        self.instances[inst].fields[*f as usize].clone(),
+                        0,
+                    )?;
+                    reg!(*dst) = v;
+                }
+                Op::AdrField { dst, base: b, f, kind } => {
+                    self.meter.int_ops += 1;
+                    let fv = match &reg!(*b) {
+                        Value::Struct(s) => s.borrow()[*f as usize].clone(),
+                        _ => return Err(rerr(0, "ADR through non-struct")),
+                    };
+                    let v = adr_of_array(*kind, fv, 0)?;
+                    reg!(*dst) = v;
+                }
+                Op::AdrFbField { dst, base: b, f, kind } => {
+                    self.meter.int_ops += 1;
+                    let h = match &reg!(*b) {
+                        Value::FbRef(h) => *h,
+                        _ => return Err(rerr(0, "FB instance not bound")),
+                    };
+                    let fv = self.instances[h].fields[*f as usize].clone();
+                    let v = adr_of_array(*kind, fv, 0)?;
+                    reg!(*dst) = v;
+                }
+                Op::AdrIdx { dst, base: b, idx, len, kind, line } => {
+                    self.meter.int_ops += 1;
+                    let i = reg!(*idx).int();
+                    if i < 0 || i as u32 >= *len {
+                        return Err(rerr(*line, "ADR index out of bounds"));
+                    }
+                    let bv = take!(*b);
+                    let v = adr_of_array(*kind, bv, i as usize)?;
+                    reg!(*dst) = v;
+                }
+                Op::AdrPtr { dst, p, off, kind, line } => {
+                    self.meter.int_ops += 1;
+                    let extra = if *off == NO_REG {
+                        0
+                    } else {
+                        reg!(*off).int()
+                    };
+                    if extra < 0 {
+                        return Err(rerr(*line, "negative pointer offset"));
+                    }
+                    let pv = take!(*p);
+                    let v = match (kind, pv) {
+                        (PtrKind::F32, Value::PtrF32(a, o)) => {
+                            Value::PtrF32(a, o + extra as usize)
+                        }
+                        (PtrKind::F64, Value::PtrF64(a, o)) => {
+                            Value::PtrF64(a, o + extra as usize)
+                        }
+                        (PtrKind::Int, Value::PtrInt(a, o)) => {
+                            Value::PtrInt(a, o + extra as usize)
+                        }
+                        (_, Value::Null) => {
+                            return Err(rerr(*line, "ADR through null pointer"))
+                        }
+                        _ => {
+                            return Err(rerr(*line, "ADR pointer kind mismatch"))
+                        }
+                    };
+                    reg!(*dst) = v;
+                }
+
+                // ------------------------------------------------ unary
+                Op::NegF32 { dst, src } => {
+                    self.meter.fp_add += 1;
+                    let v = -reg!(*src).real();
+                    reg!(*dst) = Value::Real(v);
+                }
+                Op::NegF64 { dst, src } => {
+                    self.meter.fp_add += 1;
+                    let v = -reg!(*src).lreal();
+                    reg!(*dst) = Value::LReal(v);
+                }
+                Op::NegInt { dst, src } => {
+                    self.meter.int_ops += 1;
+                    let v = -reg!(*src).int();
+                    reg!(*dst) = Value::Int(v);
+                }
+                Op::NotBool { dst, src } => {
+                    self.meter.int_ops += 1;
+                    let v = !reg!(*src).bool();
+                    reg!(*dst) = Value::Bool(v);
+                }
+
+                // ------------------------------------------- arithmetic
+                Op::ArithF32 { op, dst, a, b, line } => {
+                    let x = reg!(*a).real();
+                    let y = reg!(*b).real();
+                    let v = match op {
+                        ArithOp::Add => {
+                            self.meter.fp_add += 1;
+                            x + y
+                        }
+                        ArithOp::Sub => {
+                            self.meter.fp_add += 1;
+                            x - y
+                        }
+                        ArithOp::Mul => {
+                            self.meter.fp_mul += 1;
+                            x * y
+                        }
+                        ArithOp::Div => {
+                            self.meter.fp_div += 1;
+                            x / y
+                        }
+                        ArithOp::Pow => {
+                            self.meter.fp_trans += 1;
+                            x.powf(y)
+                        }
+                        ArithOp::Mod => {
+                            return Err(rerr(*line, "MOD on REAL"))
+                        }
+                    };
+                    reg!(*dst) = Value::Real(v);
+                }
+                Op::ArithF64 { op, dst, a, b, line } => {
+                    let x = reg!(*a).lreal();
+                    let y = reg!(*b).lreal();
+                    let v = match op {
+                        ArithOp::Add => {
+                            self.meter.fp_add += 1;
+                            x + y
+                        }
+                        ArithOp::Sub => {
+                            self.meter.fp_add += 1;
+                            x - y
+                        }
+                        ArithOp::Mul => {
+                            self.meter.fp_mul += 1;
+                            x * y
+                        }
+                        ArithOp::Div => {
+                            self.meter.fp_div += 1;
+                            x / y
+                        }
+                        ArithOp::Pow => {
+                            self.meter.fp_trans += 1;
+                            x.powf(y)
+                        }
+                        ArithOp::Mod => {
+                            return Err(rerr(*line, "MOD on LREAL"))
+                        }
+                    };
+                    reg!(*dst) = Value::LReal(v);
+                }
+                Op::ArithInt { op, dst, a, b, line } => {
+                    self.meter.int_ops += 1;
+                    let x = reg!(*a).int();
+                    let y = reg!(*b).int();
+                    let v = match op {
+                        ArithOp::Add => x.wrapping_add(y),
+                        ArithOp::Sub => x.wrapping_sub(y),
+                        ArithOp::Mul => x.wrapping_mul(y),
+                        ArithOp::Div => {
+                            if y == 0 {
+                                return Err(rerr(
+                                    *line,
+                                    "integer division by zero",
+                                ));
+                            }
+                            x.wrapping_div(y)
+                        }
+                        ArithOp::Mod => {
+                            if y == 0 {
+                                return Err(rerr(*line, "MOD by zero"));
+                            }
+                            x.wrapping_rem(y)
+                        }
+                        ArithOp::Pow => {
+                            self.meter.fp_trans += 1;
+                            (x as f64).powf(y as f64) as i64
+                        }
+                    };
+                    reg!(*dst) = Value::Int(v);
+                }
+                Op::CmpF32 { op, dst, a, b } => {
+                    self.meter.fp_cmp += 1;
+                    let r = cmp_ord(
+                        *op,
+                        reg!(*a).real().partial_cmp(&reg!(*b).real()),
+                    );
+                    reg!(*dst) = Value::Bool(r);
+                }
+                Op::CmpF64 { op, dst, a, b } => {
+                    self.meter.fp_cmp += 1;
+                    let r = cmp_ord(
+                        *op,
+                        reg!(*a).lreal().partial_cmp(&reg!(*b).lreal()),
+                    );
+                    reg!(*dst) = Value::Bool(r);
+                }
+                Op::CmpInt { op, dst, a, b } => {
+                    self.meter.cmp += 1;
+                    let r =
+                        cmp_ord(*op, Some(reg!(*a).int().cmp(&reg!(*b).int())));
+                    reg!(*dst) = Value::Bool(r);
+                }
+                Op::CmpBool { op, dst, a, b } => {
+                    self.meter.cmp += 1;
+                    let av = reg!(*a).bool();
+                    let bv = reg!(*b).bool();
+                    let v = match op {
+                        CmpOp::Eq => av == bv,
+                        CmpOp::Neq => av != bv,
+                        _ => return Err(rerr(0, "ordering on BOOL")),
+                    };
+                    reg!(*dst) = Value::Bool(v);
+                }
+                Op::BoolB { op, dst, a, b } => {
+                    self.meter.int_ops += 1;
+                    let av = reg!(*a).bool();
+                    let bv = reg!(*b).bool();
+                    let v = match op {
+                        BoolOp::And => av && bv,
+                        BoolOp::Or => av || bv,
+                        BoolOp::Xor => av ^ bv,
+                    };
+                    reg!(*dst) = Value::Bool(v);
+                }
+                Op::IntB { op, dst, a, b } => {
+                    self.meter.int_ops += 1;
+                    let av = reg!(*a).int();
+                    let bv = reg!(*b).int();
+                    let v = match op {
+                        BoolOp::And => av & bv,
+                        BoolOp::Or => av | bv,
+                        BoolOp::Xor => av ^ bv,
+                    };
+                    reg!(*dst) = Value::Int(v);
+                }
+
+                // ------------------------------------------ conversions
+                Op::IntToF32 { dst, src } => {
+                    self.meter.converts += 1;
+                    let v = reg!(*src).int() as f32;
+                    reg!(*dst) = Value::Real(v);
+                }
+                Op::IntToF64 { dst, src } => {
+                    self.meter.converts += 1;
+                    let v = reg!(*src).int() as f64;
+                    reg!(*dst) = Value::LReal(v);
+                }
+                Op::F32ToF64 { dst, src } => {
+                    self.meter.converts += 1;
+                    let v = reg!(*src).real() as f64;
+                    reg!(*dst) = Value::LReal(v);
+                }
+                Op::F64ToF32 { dst, src } => {
+                    self.meter.converts += 1;
+                    let v = reg!(*src).lreal() as f32;
+                    reg!(*dst) = Value::Real(v);
+                }
+                Op::F32ToInt { dst, src, ty } => {
+                    self.meter.converts += 1;
+                    let v =
+                        builtins::real_to_int(reg!(*src).real() as f64, *ty);
+                    reg!(*dst) = Value::Int(v);
+                }
+                Op::F64ToInt { dst, src, ty } => {
+                    self.meter.converts += 1;
+                    let v = builtins::real_to_int(reg!(*src).lreal(), *ty);
+                    reg!(*dst) = Value::Int(v);
+                }
+                Op::IntNarrow { dst, src, ty } => {
+                    self.meter.converts += 1;
+                    let v = ty.wrap(reg!(*src).int());
+                    reg!(*dst) = Value::Int(v);
+                }
+                Op::BoolToInt { dst, src } => {
+                    self.meter.converts += 1;
+                    let v = reg!(*src).bool() as i64;
+                    reg!(*dst) = Value::Int(v);
+                }
+
+                // ------------------------------------------------ calls
+                Op::CallFn { dst, fid, args } => {
+                    let unit = Rc::clone(&self.unit);
+                    let cu = Rc::clone(&self.code);
+                    let fd = &unit.funcs[*fid as usize];
+                    let callee = &cu.funcs[*fid as usize];
+                    let nbase = self.push_frame_regs(fd, callee, args, base)?;
+                    let r = self.exec(callee, nbase, None);
+                    let ret =
+                        std::mem::replace(&mut self.regs[nbase], Value::Null);
+                    self.regs.truncate(nbase);
+                    r?;
+                    reg!(*dst) = ret;
+                }
+                Op::CallMethod { dst, fb, midx, self_r, args } => {
+                    let inst = match &reg!(*self_r) {
+                        Value::FbRef(h) => *h,
+                        _ => return Err(rerr(0, "FB instance not bound")),
+                    };
+                    let unit = Rc::clone(&self.unit);
+                    let cu = Rc::clone(&self.code);
+                    let fd = &unit.fbs[*fb as usize].methods[*midx as usize];
+                    let callee = &cu.fb_methods[*fb as usize][*midx as usize];
+                    let nbase = self.push_frame_regs(fd, callee, args, base)?;
+                    let r = self.exec(callee, nbase, Some(inst));
+                    let ret =
+                        std::mem::replace(&mut self.regs[nbase], Value::Null);
+                    self.regs.truncate(nbase);
+                    r?;
+                    reg!(*dst) = ret;
+                }
+                Op::CallIface { dst, iface, mid, self_r, args, line } => {
+                    let inst = match &reg!(*self_r) {
+                        Value::FbRef(h) => *h,
+                        Value::Null => {
+                            return Err(rerr(
+                                *line,
+                                "interface variable is not bound",
+                            ))
+                        }
+                        _ => return Err(rerr(*line, "bad interface value")),
+                    };
+                    let fb_id = self.instances[inst].fb_id;
+                    let unit = Rc::clone(&self.unit);
+                    let cu = Rc::clone(&self.code);
+                    let table = unit.fbs[fb_id].vtables[*iface as usize]
+                        .as_ref()
+                        .ok_or_else(|| {
+                            rerr(
+                                *line,
+                                format!(
+                                    "{} does not implement {}",
+                                    unit.fbs[fb_id].name,
+                                    unit.ifaces[*iface as usize].name
+                                ),
+                            )
+                        })?;
+                    let midx = table[*mid as usize];
+                    let fd = &unit.fbs[fb_id].methods[midx];
+                    let callee = &cu.fb_methods[fb_id][midx];
+                    let nbase = self.push_frame_regs(fd, callee, args, base)?;
+                    let r = self.exec(callee, nbase, Some(inst));
+                    let ret =
+                        std::mem::replace(&mut self.regs[nbase], Value::Null);
+                    self.regs.truncate(nbase);
+                    r?;
+                    reg!(*dst) = ret;
+                }
+                Op::CheckFb { r, line } => {
+                    if !matches!(&reg!(*r), Value::FbRef(_)) {
+                        return Err(rerr(*line, "FB instance not bound"));
+                    }
+                }
+                Op::InvokeFbBody { fb_r, fb_id, line } => {
+                    let inst = match &reg!(*fb_r) {
+                        Value::FbRef(h) => *h,
+                        _ => return Err(rerr(*line, "FB instance not bound")),
+                    };
+                    let unit = Rc::clone(&self.unit);
+                    let cu = Rc::clone(&self.code);
+                    let fd = unit.fbs[*fb_id as usize]
+                        .body
+                        .as_ref()
+                        .ok_or_else(|| rerr(*line, "FB has no body"))?;
+                    let callee = cu.fb_bodies[*fb_id as usize]
+                        .as_ref()
+                        .expect("FB body compiled");
+                    let nbase = self.push_frame_regs(fd, callee, &[], base)?;
+                    let r = self.exec(callee, nbase, Some(inst));
+                    self.regs.truncate(nbase);
+                    r?;
+                }
+                Op::StoreFbInput { fb_r, fidx, src, copy } => {
+                    let inst = match &reg!(*fb_r) {
+                        Value::FbRef(h) => *h,
+                        _ => return Err(rerr(0, "FB instance not bound")),
+                    };
+                    let v = take!(*src);
+                    self.meter.stores += 1;
+                    if *copy {
+                        self.meter.copy_bytes += v.byte_size();
+                        let dst =
+                            self.instances[inst].fields[*fidx as usize].clone();
+                        copy_into(&v, &dst)?;
+                    } else {
+                        self.instances[inst].fields[*fidx as usize] = v;
+                    }
+                }
+                Op::LoadFbOutput { dst, fb_r, fidx } => {
+                    let inst = match &reg!(*fb_r) {
+                        Value::FbRef(h) => *h,
+                        _ => return Err(rerr(0, "FB instance not bound")),
+                    };
+                    // Unmetered, like the interp's direct field clone.
+                    reg!(*dst) =
+                        self.instances[inst].fields[*fidx as usize].clone();
+                }
+
+                // --------------------------------------- struct literal
+                Op::StructNew { dst, sid } => {
+                    let unit = Rc::clone(&self.unit);
+                    let vals: Vec<Value> = unit.structs[*sid as usize]
+                        .fields
+                        .iter()
+                        .map(|f| f.init.deep_clone())
+                        .collect();
+                    reg!(*dst) = Value::Struct(Rc::new(
+                        std::cell::RefCell::new(vals),
+                    ));
+                }
+                Op::StructSet { s, fidx, src } => {
+                    let v = take!(*src);
+                    self.meter.stores += 1;
+                    match &reg!(*s) {
+                        Value::Struct(st) => {
+                            st.borrow_mut()[*fidx as usize] = v
+                        }
+                        _ => {
+                            return Err(rerr(0, "struct literal store target"))
+                        }
+                    }
+                }
+
+                // --------------------------------------------- builtins
+                Op::Intrinsic { dst, b, kind, args } => {
+                    debug_assert!(args.len() <= 4);
+                    let mut vals =
+                        [Value::Null, Value::Null, Value::Null, Value::Null];
+                    for (i, &r) in args.iter().enumerate() {
+                        vals[i] = take!(r);
+                    }
+                    let v = builtins::eval_intrinsic(
+                        &mut self.meter,
+                        *b,
+                        *kind,
+                        &vals[..args.len()],
+                    );
+                    reg!(*dst) = v;
+                }
+                Op::FileIo { dst, b, args, line } => {
+                    let fname = match take!(args[0]) {
+                        Value::Str(s) => s,
+                        _ => {
+                            return Err(rerr(
+                                *line,
+                                "BINARR/ARRBIN: filename not a STRING",
+                            ))
+                        }
+                    };
+                    let bytes = reg!(args[1]).int();
+                    let ptr = take!(args[2]);
+                    let elem_bytes = if args.len() > 3 {
+                        reg!(args[3]).int() as usize
+                    } else {
+                        4
+                    };
+                    let v = builtins::exec_file_io(
+                        &mut self.meter,
+                        &self.io_dir,
+                        *b,
+                        fname.as_ref(),
+                        bytes,
+                        &ptr,
+                        elem_bytes,
+                        *line,
+                    )?;
+                    reg!(*dst) = v;
+                }
+
+                // ----------------------------------------------- stores
+                Op::StoreLocal { src, slot, copy } => {
+                    self.meter.stores += 1;
+                    let v = take!(*src);
+                    if should_copy(*copy, &v) {
+                        self.meter.copy_bytes += v.byte_size();
+                        let dst = reg!(*slot).clone();
+                        copy_into(&v, &dst)?;
+                    } else {
+                        reg!(*slot) = v;
+                    }
+                }
+                Op::StoreGlobal { src, g, copy } => {
+                    self.meter.stores += 1;
+                    let v = take!(*src);
+                    if should_copy(*copy, &v) {
+                        self.meter.copy_bytes += v.byte_size();
+                        let dst = self.globals[*g as usize].clone();
+                        copy_into(&v, &dst)?;
+                    } else {
+                        self.globals[*g as usize] = v;
+                    }
+                }
+                Op::StoreSelf { src, f, copy } => {
+                    // assign() bumps once, store_field bumps again.
+                    self.meter.stores += 1;
+                    let inst = self_idx
+                        .ok_or_else(|| rerr(0, "no self in this context"))?;
+                    self.meter.stores += 1;
+                    let v = take!(*src);
+                    if should_copy(*copy, &v) {
+                        self.meter.copy_bytes += v.byte_size();
+                        let dst =
+                            self.instances[inst].fields[*f as usize].clone();
+                        copy_into(&v, &dst)?;
+                    } else {
+                        self.instances[inst].fields[*f as usize] = v;
+                    }
+                }
+                Op::StoreField { src, base: b, f, copy } => {
+                    self.meter.stores += 1;
+                    let v = take!(*src);
+                    let s = match &reg!(*b) {
+                        Value::Struct(s) => s.clone(),
+                        _ => return Err(rerr(0, "field store on non-struct")),
+                    };
+                    if should_copy(*copy, &v) {
+                        self.meter.copy_bytes += v.byte_size();
+                        let dst = s.borrow()[*f as usize].clone();
+                        copy_into(&v, &dst)?;
+                    } else {
+                        s.borrow_mut()[*f as usize] = v;
+                    }
+                }
+                Op::StoreFbField { src, base: b, f, copy } => {
+                    // assign() + store_field double bump, like StoreSelf.
+                    self.meter.stores += 1;
+                    let inst = match &reg!(*b) {
+                        Value::FbRef(h) => *h,
+                        _ => return Err(rerr(0, "FB instance not bound")),
+                    };
+                    self.meter.stores += 1;
+                    let v = take!(*src);
+                    if should_copy(*copy, &v) {
+                        self.meter.copy_bytes += v.byte_size();
+                        let dst =
+                            self.instances[inst].fields[*f as usize].clone();
+                        copy_into(&v, &dst)?;
+                    } else {
+                        self.instances[inst].fields[*f as usize] = v;
+                    }
+                }
+                Op::StoreIdx { src, base: b, idx, len, kind, line } => {
+                    self.meter.stores += 1;
+                    let i = reg!(*idx).int();
+                    if i < 0 || i as u32 >= *len {
+                        return Err(rerr(
+                            *line,
+                            format!(
+                                "array index {i} out of bounds (len {len})"
+                            ),
+                        ));
+                    }
+                    let i = i as usize;
+                    let v = take!(*src);
+                    match (kind, &reg!(*b), v) {
+                        (ElemKind::F32, Value::ArrF32(a), Value::Real(x)) => {
+                            a.borrow_mut()[i] = x;
+                        }
+                        (ElemKind::F64, Value::ArrF64(a), Value::LReal(x)) => {
+                            a.borrow_mut()[i] = x;
+                        }
+                        (ElemKind::Int, Value::ArrInt(a), Value::Int(x)) => {
+                            a.borrow_mut()[i] = x;
+                        }
+                        (ElemKind::Int, Value::ArrInt(a), Value::Bool(x)) => {
+                            a.borrow_mut()[i] = x as i64;
+                        }
+                        (ElemKind::Ref, Value::ArrRef(a), x) => {
+                            a.borrow_mut()[i] = x;
+                        }
+                        _ => {
+                            return Err(rerr(
+                                *line,
+                                "array element store type mismatch",
+                            ))
+                        }
+                    }
+                }
+                Op::StorePtr { src, p, off, kind, line } => {
+                    self.meter.stores += 1;
+                    let extra = if *off == NO_REG {
+                        0
+                    } else {
+                        reg!(*off).int()
+                    };
+                    if extra < 0 {
+                        return Err(rerr(*line, "negative pointer offset"));
+                    }
+                    let v = take!(*src);
+                    match (kind, &reg!(*p), v) {
+                        (
+                            PtrKind::F32,
+                            Value::PtrF32(a, base_off),
+                            Value::Real(x),
+                        ) => {
+                            let i = base_off + extra as usize;
+                            let mut arr = a.borrow_mut();
+                            if i >= arr.len() {
+                                return Err(rerr(
+                                    *line,
+                                    "pointer store out of bounds",
+                                ));
+                            }
+                            arr[i] = x;
+                        }
+                        (
+                            PtrKind::F64,
+                            Value::PtrF64(a, base_off),
+                            Value::LReal(x),
+                        ) => {
+                            let i = base_off + extra as usize;
+                            let mut arr = a.borrow_mut();
+                            if i >= arr.len() {
+                                return Err(rerr(
+                                    *line,
+                                    "pointer store out of bounds",
+                                ));
+                            }
+                            arr[i] = x;
+                        }
+                        (
+                            PtrKind::Int,
+                            Value::PtrInt(a, base_off),
+                            Value::Int(x),
+                        ) => {
+                            let i = base_off + extra as usize;
+                            let mut arr = a.borrow_mut();
+                            if i >= arr.len() {
+                                return Err(rerr(
+                                    *line,
+                                    "pointer store out of bounds",
+                                ));
+                            }
+                            arr[i] = x;
+                        }
+                        (_, Value::Null, _) => {
+                            return Err(rerr(*line, "null pointer store"))
+                        }
+                        _ => {
+                            return Err(rerr(
+                                *line,
+                                "pointer store type mismatch",
+                            ))
+                        }
+                    }
+                }
+
+                // ----------------------------------------- control flow
+                Op::Jump { t } => {
+                    pc = *t as usize;
+                    continue;
+                }
+                Op::JumpIfFalse { c, t } => {
+                    if !reg!(*c).bool() {
+                        pc = *t as usize;
+                        continue;
+                    }
+                }
+                Op::BumpBranch => {
+                    self.meter.branches += 1;
+                }
+                Op::CaseJump { src, ranges, t } => {
+                    let v = reg!(*src).int();
+                    if ranges.iter().any(|(lo, hi)| v >= *lo && v <= *hi) {
+                        pc = *t as usize;
+                        continue;
+                    }
+                }
+                Op::ForCheck { i, to, step, exit } => {
+                    let iv = reg!(*i).int();
+                    let tv = reg!(*to).int();
+                    let sv = reg!(*step).int();
+                    if (sv > 0 && iv > tv) || (sv < 0 && iv < tv) {
+                        pc = *exit as usize;
+                        continue;
+                    }
+                    self.meter.branches += 1;
+                }
+                Op::ForIncr { i, step } => {
+                    self.meter.int_ops += 1;
+                    let v = reg!(*i).int().wrapping_add(reg!(*step).int());
+                    reg!(*i) = Value::Int(v);
+                }
+                Op::ForStepCheck { step } => {
+                    if reg!(*step).int() == 0 {
+                        return Err(rerr(0, "FOR step of 0"));
+                    }
+                }
+                Op::Ret => return Ok(()),
+            }
+            pc += 1;
+        }
+    }
+}
+
+#[inline]
+fn should_copy(mode: CopyMode, v: &Value) -> bool {
+    match mode {
+        CopyMode::Copy => true,
+        CopyMode::Move => false,
+        CopyMode::Auto => v.is_aggregate(),
+    }
+}
+
+/// ADR over an array value (offset = element index), mirroring
+/// `Interp::adr`'s final match.
+#[inline]
+fn adr_of_array(
+    kind: PtrKind,
+    v: Value,
+    offset: usize,
+) -> Result<Value, RuntimeError> {
+    Ok(match (kind, v) {
+        (PtrKind::F32, Value::ArrF32(a)) => Value::PtrF32(a, offset),
+        (PtrKind::F64, Value::ArrF64(a)) => Value::PtrF64(a, offset),
+        (PtrKind::Int, Value::ArrInt(a)) => Value::PtrInt(a, offset),
+        (_, other) => {
+            return Err(rerr(0, format!("ADR of unsupported value {other:?}")))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::st;
+
+    fn run_both(src: &str, prog: &str, scans: usize) -> (Interp, Vm) {
+        let unit = st::compile(src).expect("compile");
+        let mut it = Interp::new(unit.clone());
+        let mut vm = Vm::new(unit);
+        for _ in 0..scans {
+            it.run_program(prog).expect("interp run");
+            vm.run_program(prog).expect("vm run");
+        }
+        (it, vm)
+    }
+
+    fn assert_state_eq(it: &Interp, vm: &Vm, prog: &str) {
+        assert_eq!(it.meter, vm.meter, "meters diverged");
+        let pid = it.unit.find_program(prog).unwrap();
+        let inst = it.program_instances[pid];
+        for f in &it.unit.programs[pid].fields {
+            let a = it.instance_field(inst, &f.name).unwrap();
+            let b = vm.instance_field(inst, &f.name).unwrap();
+            assert!(a.bits_eq(&b), "field {} diverged: {a:?} vs {b:?}", f.name);
+        }
+    }
+
+    /// In-module smoke only — the full corpus (loops, calls, FBs,
+    /// pointers, file I/O, error parity, ICSML models) lives in the
+    /// one canonical harness, `tests/st_differential.rs`.
+    #[test]
+    fn arithmetic_matches_interp() {
+        let (it, vm) = run_both(
+            "PROGRAM p VAR x : REAL; i : DINT; END_VAR\n\
+             x := 2.0 + 3.0 * 4.0 - 1.0 / 2.0;\n\
+             i := 17 MOD 5 + 2 * 3;\n\
+             END_PROGRAM",
+            "p",
+            2,
+        );
+        assert_state_eq(&it, &vm, "p");
+    }
+
+    #[test]
+    fn frame_arena_drains_after_calls() {
+        let src = "FUNCTION f : DINT VAR_INPUT n : DINT; END_VAR\n\
+             f := n * 2;\n\
+             END_FUNCTION\n\
+             PROGRAM p VAR s : DINT; i : DINT; END_VAR\n\
+             FOR i := 0 TO 9 DO s := s + f(i); END_FOR\n\
+             END_PROGRAM";
+        let unit = st::compile(src).unwrap();
+        let mut vm = Vm::new(unit);
+        vm.run_program("p").unwrap();
+        assert!(vm.regs.is_empty(), "arena leaked {} registers", vm.regs.len());
+    }
+}

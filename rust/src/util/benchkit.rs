@@ -1,13 +1,14 @@
 //! Shared helpers for the paper-figure benchmarks (`rust/benches/*`):
 //! ST benchmark-program generation (the paper's §5.2/§5.3 models),
-//! per-phase metering, and temp-weight plumbing.
+//! per-phase metering, temp-weight plumbing, and machine-readable
+//! result emission (`--json`).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::icsml_st;
 use crate::porting::{codegen::CodegenOptions, generate_st_program, LayerSpec,
                      ModelSpec};
-use crate::st::{Interp, Meter, Value};
+use crate::st::{Interp, Meter, Value, Vm};
 use crate::util::{binio, json::Json, rng::SplitMix64};
 
 /// Build a ModelSpec with random weights written to a temp dir.
@@ -63,11 +64,26 @@ pub fn st_model(spec: &ModelSpec, dir: &PathBuf, fused: bool) -> Interp {
     it
 }
 
+/// Load the generated ST program for a spec on the bytecode VM tier:
+/// exactly [`st_model`]'s preparation (weights dir attached, init scan
+/// done on the oracle), with the prepared state adopted wholesale —
+/// one loader path, two tiers.
+pub fn st_model_vm(spec: &ModelSpec, dir: &PathBuf, fused: bool) -> Vm {
+    Vm::from_interp(st_model(spec, dir, fused))
+}
+
 /// Run one inference scan and return the metered delta.
 pub fn st_infer_meter(it: &mut Interp) -> Meter {
     let before = it.meter.clone();
     it.run_program("MAIN").unwrap();
     it.meter.since(&before)
+}
+
+/// Run one VM inference scan and return the metered delta.
+pub fn vm_infer_meter(vm: &mut Vm) -> Meter {
+    let before = vm.meter.clone();
+    vm.run_program("MAIN").unwrap();
+    vm.meter.since(&before)
 }
 
 /// Write an input vector into the generated program's `inputs` array.
@@ -77,6 +93,95 @@ pub fn st_set_inputs(it: &mut Interp, x: &[f32]) {
         Value::ArrF32(a) => a.borrow_mut().copy_from_slice(x),
         other => panic!("inputs: {other:?}"),
     }
+}
+
+/// Same for the VM tier.
+pub fn vm_set_inputs(vm: &mut Vm, x: &[f32]) {
+    let inst = vm.program_instance("MAIN").unwrap();
+    match vm.instance_field(inst, "inputs").unwrap() {
+        Value::ArrF32(a) => a.borrow_mut().copy_from_slice(x),
+        other => panic!("inputs: {other:?}"),
+    }
+}
+
+/// Read the generated program's `outputs` array.
+pub fn vm_outputs(vm: &Vm) -> Vec<f32> {
+    let inst = vm.program_instance("MAIN").unwrap();
+    match vm.instance_field(inst, "outputs").unwrap() {
+        Value::ArrF32(a) => a.borrow().clone(),
+        other => panic!("outputs: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------- JSON mode
+
+/// One measured configuration for the machine-readable bench report.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Configuration label, e.g. `"interp/64x64x3"`.
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    /// Abstract ST ops executed per inference (`Meter::total_ops`).
+    pub ops_per_inference: u64,
+}
+
+impl BenchRecord {
+    /// Abstract ops retired per wall-clock nanosecond — the
+    /// "ops/cycle"-style throughput figure for the executing tier.
+    pub fn ops_per_ns(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            self.ops_per_inference as f64 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+/// `--json[=PATH]` flag scan for `harness = false` bench mains.
+/// Returns the output path when JSON emission was requested
+/// (default `BENCH_<tag>.json` in the current directory).
+pub fn json_flag(tag: &str) -> Option<PathBuf> {
+    for a in std::env::args() {
+        if a == "--json" {
+            return Some(PathBuf::from(format!("BENCH_{tag}.json")));
+        }
+        if let Some(path) = a.strip_prefix("--json=") {
+            return Some(PathBuf::from(path));
+        }
+    }
+    None
+}
+
+/// `--smoke` flag scan: one-iteration correctness run for CI.
+pub fn smoke_flag() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Serialize bench records (plus free-form extras such as speedup
+/// summaries) to a JSON report the repo can track over time.
+pub fn write_bench_json(
+    path: &Path,
+    bench: &str,
+    records: &[BenchRecord],
+    extras: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let mut results = Vec::new();
+    for r in records {
+        results.push(Json::obj(vec![
+            ("name", Json::Str(r.name.clone())),
+            ("mean_ns", Json::Num(r.mean_ns)),
+            ("median_ns", Json::Num(r.median_ns)),
+            ("ops_per_inference", Json::Num(r.ops_per_inference as f64)),
+            ("ops_per_ns", Json::Num(r.ops_per_ns())),
+        ]));
+    }
+    let mut pairs = vec![
+        ("bench", Json::Str(bench.to_string())),
+        ("results", Json::Arr(results)),
+    ];
+    pairs.extend(extras);
+    std::fs::write(path, Json::obj(pairs).to_string() + "\n")
 }
 
 /// The paper's Fig. 4 stack sizes: `width` in/out, `depth` dense+ReLU.

@@ -72,5 +72,7 @@ pub fn ported_mlp_8_16_4(seed: u64, tag: &str) -> (StBackend, Model) {
     let src = generate_st_program(&spec, &CodegenOptions::default());
     let mut interp = crate::icsml_st::load(&src).unwrap();
     interp.io_dir = dir;
-    (StBackend::new(interp, "MAIN"), mlp_8_16_4(seed))
+    let st = StBackend::new(interp, "MAIN")
+        .expect("fixture program probes inputs/outputs");
+    (st, mlp_8_16_4(seed))
 }

@@ -77,7 +77,7 @@ fn three_backends_agree_on_the_classifier() {
     let st_src = porting::generate_st_program(spec, &CodegenOptions::default());
     let mut it = icsml_st::load(&st_src).unwrap();
     it.io_dir = m.root.join(&spec.weights_dir);
-    let mut st = StBackend::new(it, "MAIN");
+    let mut st = StBackend::new(it, "MAIN").unwrap();
 
     // XLA backend from the AOT artifact.
     let rt = Runtime::cpu().unwrap();

@@ -1,0 +1,469 @@
+//! Differential harness: the bytecode VM versus the tree-walking
+//! interpreter (the reference oracle) over the end-to-end ST corpus and
+//! the ICSML MLP models.
+//!
+//! The contract under test (ISSUE 2 acceptance): for every program,
+//! both tiers produce **bit-identical** program state / outputs and
+//! **exactly equal** `Meter` counters after every scan — the PLC timing
+//! model consumes those counters, so VM speed must not change a single
+//! modeled microsecond. Programs that fail at runtime must fail on both
+//! tiers with the same message and line.
+
+use icsml::icsml_st;
+use icsml::porting::{codegen::CodegenOptions, generate_st_program};
+use icsml::st::{self, Interp, Value, Vm};
+use icsml::util::benchkit;
+
+/// Run `prog` for `scans` scans on both tiers and assert meters and the
+/// full program field state agree bit-for-bit after every scan.
+fn diff_unit(unit: st::ir::Unit, prog: &str, scans: usize) -> (Interp, Vm) {
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new(unit);
+    for scan in 0..scans {
+        it.run_program(prog).expect("interp scan");
+        vm.run_program(prog).expect("vm scan");
+        assert_eq!(
+            it.meter, vm.meter,
+            "meter divergence after scan {scan} of {prog}"
+        );
+        assert_program_state_eq(&it, &vm, prog);
+    }
+    (it, vm)
+}
+
+fn diff_src(src: &str, prog: &str, scans: usize) {
+    let unit = st::compile(src).expect("compile");
+    diff_unit(unit, prog, scans);
+}
+
+fn diff_framework_src(app: &str, prog: &str, scans: usize) {
+    let unit = icsml_st::compile_with_framework(app).expect("compile");
+    diff_unit(unit, prog, scans);
+}
+
+fn assert_program_state_eq(it: &Interp, vm: &Vm, prog: &str) {
+    let pid = it.unit.find_program(prog).expect("program exists");
+    let inst = it.program_instances[pid];
+    assert_eq!(inst, vm.program_instances[pid], "instance layout diverged");
+    for f in &it.unit.programs[pid].fields {
+        let a = it.instance_field(inst, &f.name).unwrap();
+        let b = vm.instance_field(inst, &f.name).unwrap();
+        assert!(
+            a.bits_eq(&b),
+            "program {prog} field {}: interp {a:?} vs vm {b:?}",
+            f.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------- corpus
+
+#[test]
+fn arithmetic_and_precedence() {
+    diff_src(
+        "PROGRAM p VAR x : REAL; i : DINT; END_VAR\n\
+         x := 2.0 + 3.0 * 4.0 - 1.0 / 2.0;\n\
+         i := 17 MOD 5 + 2 * 3;\n\
+         END_PROGRAM",
+        "p",
+        2,
+    );
+}
+
+#[test]
+fn loop_zoo() {
+    diff_src(
+        "PROGRAM p VAR s, j, c, r, n : DINT; i : DINT; END_VAR\n\
+         s := 0; j := 0; c := 0; r := 0;\n\
+         FOR i := 1 TO 100 DO\n\
+           s := s + i;\n\
+           IF i = 10 THEN EXIT; END_IF\n\
+         END_FOR\n\
+         FOR i := 10 TO 0 BY -2 DO j := j + 1; END_FOR\n\
+         FOR i := 0 TO 9 DO\n\
+           IF i MOD 2 = 0 THEN CONTINUE; END_IF\n\
+           c := c + 1;\n\
+         END_FOR\n\
+         n := 5;\n\
+         WHILE n > 0 DO r := r + n; n := n - 1; END_WHILE\n\
+         REPEAT c := c + 1; UNTIL c >= 9 END_REPEAT\n\
+         CASE r OF\n\
+           0..9: r := -1;\n\
+           15: r := 100;\n\
+           ELSE r := -2;\n\
+         END_CASE\n\
+         END_PROGRAM",
+        "p",
+        3,
+    );
+}
+
+#[test]
+fn function_calls_and_copy_semantics() {
+    diff_src(
+        "FUNCTION first : REAL\n\
+         VAR_INPUT a : ARRAY[0..255] OF REAL; END_VAR\n\
+         a[0] := 42.0;\n\
+         first := a[0];\n\
+         END_FUNCTION\n\
+         FUNCTION fill : BOOL\n\
+         VAR_IN_OUT a : ARRAY[0..3] OF REAL; END_VAR\n\
+         VAR i : DINT; END_VAR\n\
+         FOR i := 0 TO 3 DO a[i] := INT_TO_REAL(DINT_TO_INT(i)) * 2.0; END_FOR\n\
+         fill := TRUE;\n\
+         END_FUNCTION\n\
+         PROGRAM p VAR\n\
+           arr : ARRAY[0..255] OF REAL;\n\
+           small : ARRAY[0..3] OF REAL;\n\
+           x, y, z : REAL; ok : BOOL;\n\
+         END_VAR\n\
+         arr[0] := 7.0;\n\
+         x := first(arr);\n\
+         y := arr[0];\n\
+         ok := fill(small);\n\
+         z := small[3];\n\
+         END_PROGRAM",
+        "p",
+        2,
+    );
+}
+
+#[test]
+fn pointers_adr_and_pointer_stores() {
+    diff_src(
+        "PROGRAM p VAR\n\
+           a : ARRAY[0..9] OF REAL;\n\
+           pr : POINTER TO REAL;\n\
+           x, y : REAL; i : DINT;\n\
+         END_VAR\n\
+         FOR i := 0 TO 9 DO a[i] := 0.5 * DINT_TO_REAL(i); END_FOR\n\
+         pr := ADR(a);\n\
+         x := pr^ + pr[4];\n\
+         pr := ADR(a[5]);\n\
+         y := pr[2];\n\
+         pr[2] := 99.0;\n\
+         END_PROGRAM",
+        "p",
+        2,
+    );
+}
+
+#[test]
+fn structs_literals_and_copies() {
+    diff_src(
+        "TYPE point : STRUCT x : REAL; y : REAL; tag : DINT; END_STRUCT END_TYPE\n\
+         PROGRAM p VAR\n\
+           a : point := (x := 1.0, y := 2.0);\n\
+           b : point;\n\
+           r : REAL;\n\
+         END_VAR\n\
+         b := a;\n\
+         b.y := 10.0;\n\
+         a := (x := r, y := b.y, tag := 3);\n\
+         r := a.y + b.y + a.x;\n\
+         END_PROGRAM",
+        "p",
+        2,
+    );
+}
+
+#[test]
+fn fb_methods_invocation_and_interfaces() {
+    diff_src(
+        "INTERFACE IOp\n\
+           METHOD apply : REAL VAR_INPUT x : REAL; END_VAR END_METHOD\n\
+         END_INTERFACE\n\
+         FUNCTION_BLOCK FB_Twice IMPLEMENTS IOp\n\
+         METHOD apply : REAL VAR_INPUT x : REAL; END_VAR\n\
+           apply := 2.0 * x;\n\
+         END_METHOD\n\
+         END_FUNCTION_BLOCK\n\
+         FUNCTION_BLOCK FB_Square IMPLEMENTS IOp\n\
+         METHOD apply : REAL VAR_INPUT x : REAL; END_VAR\n\
+           apply := x * x;\n\
+         END_METHOD\n\
+         END_FUNCTION_BLOCK\n\
+         FUNCTION_BLOCK FB_Ctr\n\
+         VAR_INPUT inc : DINT; END_VAR\n\
+         VAR_OUTPUT out : DINT; END_VAR\n\
+         VAR count : DINT; END_VAR\n\
+         count := count + inc;\n\
+         out := count;\n\
+         END_FUNCTION_BLOCK\n\
+         PROGRAM p VAR\n\
+           t : FB_Twice; s : FB_Square;\n\
+           ops : ARRAY[0..1] OF IOp;\n\
+           c : FB_Ctr; got : DINT;\n\
+           i : DINT; r : REAL; op : IOp;\n\
+         END_VAR\n\
+         ops[0] := t; ops[1] := s;\n\
+         FOR i := 0 TO 1 DO\n\
+           op := ops[i];\n\
+           r := r + op.apply(3.0);\n\
+         END_FOR\n\
+         c(inc := 5);\n\
+         c(inc := 7, out => got);\n\
+         END_PROGRAM",
+        "p",
+        3,
+    );
+}
+
+#[test]
+fn multidim_arrays_and_conversions() {
+    diff_src(
+        "PROGRAM p VAR\n\
+           m : ARRAY[0..2, 0..3] OF REAL;\n\
+           s : SINT; u : USINT; big : DINT;\n\
+           x : REAL; i, j : DINT; t : DINT;\n\
+         END_VAR\n\
+         FOR i := 0 TO 2 DO\n\
+           FOR j := 0 TO 3 DO\n\
+             m[i, j] := DINT_TO_REAL(i) * 10.0 + DINT_TO_REAL(j);\n\
+           END_FOR\n\
+         END_FOR\n\
+         x := m[2, 1];\n\
+         big := 300;\n\
+         s := DINT_TO_SINT(big);\n\
+         u := DINT_TO_USINT(big);\n\
+         t := TRUNC(3.9) + FLOOR(-2.1) + REAL_TO_DINT(2.5);\n\
+         END_PROGRAM",
+        "p",
+        2,
+    );
+}
+
+#[test]
+fn builtin_math_and_globals() {
+    let src = "VAR_GLOBAL g : REAL; END_VAR\n\
+         PROGRAM writer g := g + 5.5; END_PROGRAM\n\
+         PROGRAM reader VAR x, a, b, c, d : REAL; END_VAR\n\
+         x := g * 2.0;\n\
+         a := SQRT(16.0) + EXP(0.0) + LN(1.0);\n\
+         b := MAX(1.5, MIN(9.0, 3.25));\n\
+         c := LIMIT(0.0, -5.0, 1.0);\n\
+         d := ABS(-3.5) + SIN(0.0) + COS(0.0) + ATAN(1.0);\n\
+         END_PROGRAM";
+    let unit = st::compile(src).expect("compile");
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new(unit);
+    for _ in 0..2 {
+        it.run_program("writer").unwrap();
+        vm.run_program("writer").unwrap();
+        it.run_program("reader").unwrap();
+        vm.run_program("reader").unwrap();
+    }
+    assert_eq!(it.meter, vm.meter);
+    for (g, (a, b)) in
+        it.unit.globals.iter().zip(it.globals.iter().zip(&vm.globals))
+    {
+        assert!(a.bits_eq(b), "global {}: {a:?} vs {b:?}", g.name);
+    }
+    assert_program_state_eq(&it, &vm, "reader");
+}
+
+#[test]
+fn binarr_arrbin_file_io() {
+    let dir = std::env::temp_dir().join("icsml_st_diff_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = "PROGRAM p VAR\n\
+           a : ARRAY[0..7] OF REAL;\n\
+           b : ARRAY[0..7] OF REAL;\n\
+           i : DINT; ok : BOOL; s : REAL;\n\
+         END_VAR\n\
+         FOR i := 0 TO 7 DO a[i] := DINT_TO_REAL(i) * 1.5; END_FOR\n\
+         ok := ARRBIN('diff_roundtrip.bin', 8 * SIZEOF(REAL), ADR(a));\n\
+         ok := BINARR('diff_roundtrip.bin', 8 * SIZEOF(REAL), ADR(b));\n\
+         FOR i := 0 TO 7 DO s := s + b[i]; END_FOR\n\
+         END_PROGRAM";
+    let unit = st::compile(src).unwrap();
+    let mut it = Interp::new(unit.clone()).with_io_dir(&dir);
+    let mut vm = Vm::new(unit).with_io_dir(&dir);
+    it.run_program("p").unwrap();
+    vm.run_program("p").unwrap();
+    assert_eq!(it.meter, vm.meter);
+    assert_program_state_eq(&it, &vm, "p");
+}
+
+#[test]
+fn function_results_match_via_host_call() {
+    let src = "FUNCTION poly : REAL\n\
+         VAR_INPUT x : REAL; END_VAR\n\
+         poly := x * x * 0.5 - 3.0 * x + 1.0;\n\
+         END_FUNCTION\n\
+         PROGRAM p END_PROGRAM";
+    let unit = st::compile(src).unwrap();
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new(unit);
+    for k in 0..8 {
+        let x = Value::Real(k as f32 * 0.37 - 1.0);
+        let a = it.call_function("poly", vec![x.clone()]).unwrap();
+        let b = vm.call_function("poly", vec![x]).unwrap();
+        assert!(a.bits_eq(&b), "poly({k}): {a:?} vs {b:?}");
+    }
+    assert_eq!(it.meter, vm.meter);
+}
+
+// ----------------------------------------------------- error-path parity
+
+#[test]
+fn runtime_errors_agree() {
+    let cases = [
+        (
+            "PROGRAM p VAR a : ARRAY[0..3] OF REAL; i : DINT; x : REAL; END_VAR\n\
+             i := 7;\n\
+             x := a[i];\n\
+             END_PROGRAM",
+            "out of bounds",
+        ),
+        (
+            "INTERFACE IOp METHOD go : BOOL END_METHOD END_INTERFACE\n\
+             FUNCTION_BLOCK FB_A IMPLEMENTS IOp\n\
+             METHOD go : BOOL go := TRUE; END_METHOD\n\
+             END_FUNCTION_BLOCK\n\
+             PROGRAM p VAR op : IOp; ok : BOOL; END_VAR\n\
+             ok := op.go();\n\
+             END_PROGRAM",
+            "not bound",
+        ),
+        (
+            "PROGRAM p VAR i, j : DINT; END_VAR\n\
+             j := 0;\n\
+             i := 10 / j;\n\
+             END_PROGRAM",
+            "division by zero",
+        ),
+        (
+            "PROGRAM p VAR i, s : DINT; n : DINT; END_VAR\n\
+             n := 0;\n\
+             FOR i := 0 TO 5 BY n DO s := s + 1; END_FOR\n\
+             END_PROGRAM",
+            "FOR step of 0",
+        ),
+    ];
+    for (src, needle) in cases {
+        let unit = st::compile(src).expect("compile");
+        let ie = Interp::new(unit.clone()).run_program("p").unwrap_err();
+        let ve = Vm::new(unit).run_program("p").unwrap_err();
+        assert!(
+            ie.message.contains(needle),
+            "oracle error {:?} missing {needle:?}",
+            ie.message
+        );
+        assert_eq!(ie.message, ve.message, "error message diverged");
+        assert_eq!(ie.line, ve.line, "error line diverged");
+    }
+}
+
+// -------------------------------------------------- ICSML MLP models
+
+/// The paper-table configuration: a dense MLP ported to ICSML ST with
+/// weights on disk, run through both tiers across several scans and
+/// inputs. Outputs must agree to the bit, meters exactly.
+fn diff_mlp(fused: bool, seed: u64) {
+    let name = format!("diff_mlp_{fused}_{seed}");
+    let (spec, dir) =
+        benchkit::random_spec(&name, &[8, 16, 4], &["relu", "linear"], seed);
+    let src = generate_st_program(
+        &spec,
+        &CodegenOptions { program: "MAIN".into(), fused_activations: fused },
+    );
+    let unit = icsml_st::compile_with_framework(&src).expect("MLP compiles");
+    let mut it = Interp::new(unit.clone()).with_io_dir(&dir);
+    let mut vm = Vm::new(unit).with_io_dir(&dir);
+    // Init scan (BINARR weight loading + layer wiring).
+    it.run_program("MAIN").unwrap();
+    vm.run_program("MAIN").unwrap();
+    assert_eq!(it.meter, vm.meter, "init scan meters");
+
+    let inst = it.program_instance("MAIN").unwrap();
+    for trial in 0..5 {
+        let x: Vec<f32> =
+            (0..8).map(|i| ((i + 8 * trial) as f32 * 0.61).sin()).collect();
+        benchkit::st_set_inputs(&mut it, &x);
+        benchkit::vm_set_inputs(&mut vm, &x);
+        it.run_program("MAIN").unwrap();
+        vm.run_program("MAIN").unwrap();
+        assert_eq!(it.meter, vm.meter, "inference meters, trial {trial}");
+        let a = it.instance_field(inst, "outputs").unwrap();
+        let b = vm.instance_field(inst, "outputs").unwrap();
+        assert!(a.bits_eq(&b), "outputs diverged: {a:?} vs {b:?}");
+        assert_program_state_eq(&it, &vm, "MAIN");
+    }
+}
+
+#[test]
+fn icsml_mlp_fused_activations_bit_identical() {
+    diff_mlp(true, 1311);
+}
+
+#[test]
+fn icsml_mlp_separate_activations_bit_identical() {
+    diff_mlp(false, 2718);
+}
+
+/// The framework's quantized path (§6.1) through both tiers.
+#[test]
+fn icsml_quant_dense_bit_identical() {
+    let app = "
+PROGRAM p
+VAR
+    x : ARRAY[0..2] OF REAL := [0.5, -0.25, 1.0];
+    b : ARRAY[0..1] OF REAL := [0.1, -0.2];
+    yq : ARRAY[0..1] OF REAL;
+    wq : ARRAY[0..5] OF SINT := [12, 25, -38, 6, -63, 31];
+    xq : ARRAY[0..2] OF DINT;
+    sw : ARRAY[0..1] OF REAL := [0.002, 0.004];
+    dims : ARRAY[0..0] OF UDINT := [2];
+    qd : FB_QuantDenseS;
+    ok : BOOL;
+END_VAR
+    qd.wq := ADR(wq); qd.xq := ADR(xq);
+    qd.scales := (address := ADR(sw), length := 2,
+                  dimensions := ADR(dims), dimensions_num := 1);
+    qd.biases := (address := ADR(b), length := 2,
+                  dimensions := ADR(dims), dimensions_num := 1);
+    qd.inMem := (address := ADR(x), length := 3,
+                 dimensions := ADR(dims), dimensions_num := 1);
+    qd.outMem := (address := ADR(yq), length := 2,
+                  dimensions := ADR(dims), dimensions_num := 1);
+    qd.s_x := 0.01;
+    qd.neurons := 2; qd.inputs := 3;
+    ok := qd.eval();
+END_PROGRAM";
+    diff_framework_src(app, "p", 2);
+}
+
+/// Softmax + concat layers exercise EXP, pointer loops and dataMem
+/// copies through the whole FB_Model machinery.
+#[test]
+fn icsml_softmax_and_concat_bit_identical() {
+    let app = "
+PROGRAM p
+VAR
+    xa : ARRAY[0..1] OF REAL := [1.0, 2.0];
+    xb : ARRAY[0..2] OF REAL := [3.0, 4.0, 5.0];
+    cat_out : ARRAY[0..4] OF REAL;
+    sm_out : ARRAY[0..4] OF REAL;
+    dims : ARRAY[0..0] OF UDINT := [5];
+    cat : FB_Concat;
+    sm : FB_Activation;
+    model : FB_Model;
+    ok : BOOL;
+END_VAR
+    cat.inA := (address := ADR(xa), length := 2,
+                dimensions := ADR(dims), dimensions_num := 1);
+    cat.inB := (address := ADR(xb), length := 3,
+                dimensions := ADR(dims), dimensions_num := 1);
+    cat.outMem := (address := ADR(cat_out), length := 5,
+                   dimensions := ADR(dims), dimensions_num := 1);
+    sm.inMem := cat.outMem;
+    sm.outMem := (address := ADR(sm_out), length := 5,
+                  dimensions := ADR(dims), dimensions_num := 1);
+    sm.act := ACT_SOFTMAX;
+    ok := model.addLayer(cat);
+    ok := model.addLayer(sm);
+    ok := model.infer();
+END_PROGRAM";
+    diff_framework_src(app, "p", 2);
+}
