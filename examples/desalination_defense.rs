@@ -14,7 +14,7 @@
 //! Outputs Fig. 7 series to /tmp/icsml_fig7.csv.
 
 use anyhow::Result;
-use icsml::api::{EngineBackend, StBackend};
+use icsml::api::{Backend, EngineBackend, StBackend};
 use icsml::defense::Detector;
 use icsml::hitl::HitlRunner;
 use icsml::msf::{Attack, AttackFamily};
@@ -24,6 +24,8 @@ use icsml::runtime::{Runtime, XlaBackend};
 
 fn detector(man: &Manifest, backend: &str) -> Result<Detector> {
     let spec = man.model("classifier")?;
+    // Each detector gets its own session; the backend handle is the
+    // shared, immutable part.
     let b: Box<dyn icsml::api::Backend> = match backend {
         "engine" => Box::new(EngineBackend::new(porting::load_engine_model(
             &man.root, spec,
@@ -32,8 +34,8 @@ fn detector(man: &Manifest, backend: &str) -> Result<Detector> {
             let rt = Runtime::cpu()?;
             Box::new(XlaBackend::new(
                 rt.load_hlo(&man.hlo_path("classifier_b1")?)?,
-                400,
-                2,
+                spec.in_dim(),
+                spec.out_dim(),
             ))
         }
         _ => {
@@ -48,7 +50,7 @@ fn detector(man: &Manifest, backend: &str) -> Result<Detector> {
             Box::new(StBackend::new(it, "MAIN")?)
         }
     };
-    Ok(Detector::new(b, 5))
+    Ok(Detector::new(b.session()?, 5))
 }
 
 fn main() -> Result<()> {

@@ -7,7 +7,7 @@
 //! `cargo run --release --example model_porting`
 
 use anyhow::Result;
-use icsml::api::{Backend, StBackend};
+use icsml::api::{Backend, Session as _, StBackend};
 use icsml::plc::HwProfile;
 use icsml::porting::{self, codegen::CodegenOptions, Manifest};
 use icsml::runtime::{Runtime, XlaBackend};
@@ -35,23 +35,24 @@ fn main() -> Result<()> {
     let mut it =
         icsml::icsml_st::load(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
     it.io_dir = root.join(&spec.weights_dir);
-    let mut st = StBackend::new(it, "MAIN")?;
+    let st_backend = StBackend::new(it, "MAIN")?;
+    let mut st = st_backend.session()?;
 
-    // 3. XLA comparator.
+    // 3. XLA comparator (dims from the manifest spec, not hardcoded).
     let rt = Runtime::cpu()?;
-    let mut xla =
-        XlaBackend::new(rt.load_hlo(&man.hlo_path("classifier_b1")?)?, 400, 2);
+    let xla_backend = XlaBackend::new(
+        rt.load_hlo(&man.hlo_path("classifier_b1")?)?,
+        spec.in_dim(),
+        spec.out_dim(),
+    );
+    let mut xla = xla_backend.session()?;
 
     // 4. Evaluate a slice: accuracy + ST-vs-XLA agreement + modeled
     //    on-PLC cost of one inference.
     let ds = &man.dataset;
     let n = ds.expect("eval_n").as_usize().unwrap().min(200);
-    let x = binio::read_f32(
-        &root.join(ds.expect("eval_windows").as_str().unwrap()),
-    )?;
-    let y = binio::read_i32(
-        &root.join(ds.expect("eval_labels").as_str().unwrap()),
-    )?;
+    let x = binio::read_f32(&man.dataset_path("eval_windows")?)?;
+    let y = binio::read_i32(&man.dataset_path("eval_labels")?)?;
 
     let (mut correct, mut max_dev) = (0usize, 0.0f32);
     for i in 0..n {

@@ -6,7 +6,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
-use icsml::api::{Backend, EngineBackend, StBackend};
+use icsml::api::{Backend, EngineBackend, Session as _, StBackend};
 use icsml::engine::{Act, Layer, Model};
 use icsml::plc::HwProfile;
 use icsml::porting::{codegen::CodegenOptions, generate_st_program,
@@ -57,14 +57,17 @@ fn main() -> Result<()> {
     // 3. Run the same input everywhere.
     let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).sin()).collect();
 
-    let mut engine = EngineBackend::new(Model::new(layers));
-    let y_engine = engine.infer(&x)?;
+    // Backends are immutable, shareable handles; inference happens
+    // through per-caller sessions (the Engine/Session split).
+    let engine = EngineBackend::new(Model::new(layers));
+    let y_engine = engine.session()?.infer(&x)?;
 
     let mut interp = icsml::icsml_st::load(&st_src)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     interp.io_dir = dir;
-    let mut st = StBackend::new(interp, "MAIN")?;
-    let y_st = st.infer(&x)?;
+    let st = StBackend::new(interp, "MAIN")?;
+    let mut st_session = st.session()?;
+    let y_st = st_session.infer(&x)?;
 
     println!("engine : {y_engine:?}");
     println!("st/plc : {y_st:?}");
@@ -76,8 +79,9 @@ fn main() -> Result<()> {
     println!("max deviation: {max_dev:.2e}\n");
     assert!(max_dev < 1e-5);
 
-    // 4. Modeled on-PLC cost of the ST inference.
-    if let Some(m) = st.last_meter() {
+    // 4. Modeled on-PLC cost of the ST inference (metered on the
+    //    session that ran it).
+    if let Some(m) = st_session.last_meter() {
         for p in [HwProfile::beaglebone(), HwProfile::wago_pfc100()] {
             println!("modeled CPU time on {:>18}: {:>8.1} µs", p.name,
                      p.time_us(&m));

@@ -1,0 +1,186 @@
+//! `serve::Pool` throughput at 1→N workers — the ISSUE 3 acceptance
+//! benchmark for the Engine/Session split.
+//!
+//! One shared `EngineBackend` (a dense 128-128-128-10 MLP), a wave of
+//! pipelined requests per configuration, wall-clock requests/s. Before
+//! any timing, a correctness gate checks the pooled results are
+//! bit-identical to one sequential session (a fast pool that cheats is
+//! useless).
+//!
+//! Modes:
+//!   (default)        throughput table on stdout
+//!   --json[=PATH]    also write BENCH_serve.json (ns/request per
+//!                    worker count, scaling vs 1 worker)
+//!   --smoke          correctness gate only, no timing (CI's fast
+//!                    serve-pool regression check)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use icsml::api::{Backend, EngineBackend, Session as _, SharedBackend};
+use icsml::engine::{Act, Layer, Model};
+use icsml::serve::{Pool, PoolConfig};
+use icsml::util::benchkit::{
+    json_flag, smoke_flag, write_bench_json, BenchRecord,
+};
+use icsml::util::json::Json;
+use icsml::util::rng::SplitMix64;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const MAX_BATCH: usize = 8;
+
+fn dense_model(sizes: &[usize], seed: u64) -> Model {
+    let mut rng = SplitMix64::new(seed);
+    let layers = sizes
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| {
+            let weights: Vec<f32> = (0..w[0] * w[1])
+                .map(|_| rng.uniform(-0.5, 0.5) as f32)
+                .collect();
+            let biases: Vec<f32> =
+                (0..w[1]).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+            let act = if i + 2 == sizes.len() { Act::None } else { Act::Relu };
+            Layer::dense(weights, biases, w[0], act)
+        })
+        .collect();
+    Model::new(layers)
+}
+
+fn request_wave(in_dim: usize, count: usize) -> Vec<Vec<f32>> {
+    let mut rng = SplitMix64::new(0xD15EA5E);
+    (0..count)
+        .map(|_| {
+            (0..in_dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+        })
+        .collect()
+}
+
+/// Submit the whole wave pipelined, wait for every ticket, return
+/// (elapsed seconds, outputs).
+fn drive(pool: &Pool, wave: &[Vec<f32>]) -> (f64, Vec<Vec<f32>>) {
+    let t0 = Instant::now();
+    let tickets: Vec<_> = wave.iter().map(|x| pool.submit(x)).collect();
+    let outs: Vec<Vec<f32>> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("pool request failed"))
+        .collect();
+    (t0.elapsed().as_secs_f64(), outs)
+}
+
+fn main() {
+    let smoke = smoke_flag();
+    let json_path = json_flag("serve");
+    let sizes = [128usize, 128, 128, 10];
+    let backend: SharedBackend =
+        Arc::new(EngineBackend::new(dense_model(&sizes, 0xC0FFEE)));
+
+    // ---------------- correctness gate (always) -----------------------
+    let gate_wave = request_wave(sizes[0], 64);
+    let mut reference = backend.session().expect("session");
+    let want: Vec<Vec<f32>> = gate_wave
+        .iter()
+        .map(|x| reference.infer(x).expect("reference inference"))
+        .collect();
+    {
+        let pool = Pool::new(
+            Arc::clone(&backend),
+            PoolConfig { workers: 2, max_batch: MAX_BATCH },
+        );
+        let (_, outs) = drive(&pool, &gate_wave);
+        for (i, (got, want)) in outs.iter().zip(&want).enumerate() {
+            assert_eq!(got.len(), want.len(), "request {i}: output dims");
+            for (k, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "request {i} logit {k}: pool {a} vs sequential {b}"
+                );
+            }
+        }
+        assert_eq!(pool.errors(), 0, "gate wave saw errors");
+    }
+    if smoke {
+        println!(
+            "serve-pool smoke OK: {} pooled requests bit-identical to the \
+             sequential session",
+            gate_wave.len()
+        );
+        return;
+    }
+
+    // ---------------- throughput sweep --------------------------------
+    let requests = 4000usize;
+    let wave = request_wave(sizes[0], requests);
+    println!(
+        "\nserve::Pool throughput — shared engine backend, dense \
+         {sizes:?}, {requests} pipelined requests, micro-batch {MAX_BATCH}"
+    );
+    let mut t = icsml::util::bench::Table::new(&[
+        "workers",
+        "req/s",
+        "ns/req",
+        "mean batch",
+        "scaling vs w1",
+    ]);
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut scaling: Vec<(String, f64)> = Vec::new();
+    let mut base_rps = 0.0f64;
+
+    for &workers in &WORKER_COUNTS {
+        let pool = Pool::new(
+            Arc::clone(&backend),
+            PoolConfig { workers, max_batch: MAX_BATCH },
+        );
+        // Warmup wave: spin sessions up, settle allocator high-water.
+        let _ = drive(&pool, &wave[..256.min(wave.len())]);
+        let (secs, outs) = drive(&pool, &wave);
+        assert_eq!(outs.len(), requests);
+        let rps = requests as f64 / secs.max(1e-12);
+        if workers == WORKER_COUNTS[0] {
+            base_rps = rps;
+        }
+        let ns_per_req = secs * 1e9 / requests as f64;
+        let mean_batch =
+            pool.served() as f64 / pool.batches().max(1) as f64;
+        let rel = rps / base_rps.max(1e-12);
+        t.row(&[
+            workers.to_string(),
+            format!("{rps:.0}"),
+            format!("{ns_per_req:.0}"),
+            format!("{mean_batch:.2}"),
+            format!("{rel:.2}x"),
+        ]);
+        records.push(BenchRecord {
+            name: format!("pool/w{workers}"),
+            mean_ns: ns_per_req,
+            median_ns: ns_per_req,
+            ops_per_inference: 0,
+        });
+        scaling.push((format!("w{workers}"), rel));
+    }
+    t.print();
+    println!(
+        "(pipelined wall-clock; scaling >1x at w>1 shows the shared \
+         backend serves threads concurrently)"
+    );
+
+    if let Some(path) = json_path {
+        let extras = vec![
+            (
+                "scaling_vs_w1",
+                Json::obj(
+                    scaling
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("requests", Json::Num(requests as f64)),
+            ("max_batch", Json::Num(MAX_BATCH as f64)),
+        ];
+        write_bench_json(&path, "serve", &records, extras)
+            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        println!("wrote {}", path.display());
+    }
+}

@@ -1,13 +1,22 @@
-//! The [`Backend`] trait — the crate's one inference contract.
+//! The [`Backend`] trait — the crate's immutable model-handle
+//! contract.
+//!
+//! A backend owns everything *shared* about a loaded model — weights
+//! behind `Arc` on the engine, the compiled `st::bytecode` program +
+//! state image on the ST PLC, the PJRT executable on XLA — and answers
+//! identity/capability queries over `&self`. All mutable per-request
+//! state (scratch buffers, partial-inference cursors, meters) lives in
+//! the [`Session`]s it mints: share the backend (`Arc<dyn Backend +
+//! Send + Sync>`), give every caller/thread its own session.
 
-use crate::st::Meter;
+use std::sync::Arc;
 
 use super::error::InferenceError;
-use super::partial::PartialBackend;
+use super::session::Session;
 use super::spec::ModelSpec;
 
 /// Validate single-request buffers against a spec — the one
-/// single-shot shape contract, shared by every backend
+/// single-shot shape contract, shared by every session
 /// implementation.
 pub fn check_shapes(
     spec: &ModelSpec,
@@ -32,8 +41,8 @@ pub fn check_shapes(
 }
 
 /// Validate batch buffers against a spec and return the row count —
-/// the one batch shape contract, shared by the trait default and
-/// overriding backends (XLA).
+/// the one batch shape contract, shared by the session default and
+/// overriding sessions (XLA).
 pub fn check_batch_shapes(
     spec: &ModelSpec,
     xs: &[f32],
@@ -57,14 +66,14 @@ pub fn check_batch_shapes(
     Ok(n)
 }
 
-/// An inference execution substrate.
+/// An immutable handle to a loaded model on one execution substrate.
 ///
-/// The only method an implementor *must* provide beyond identity is
-/// [`Backend::infer_into`] — the single-request, allocation-free hot
-/// path. Everything else ([`Backend::infer`], [`Backend::infer_batch`])
-/// has a correct default built on it; backends override the defaults
-/// only when their substrate can do better (e.g. XLA executing a whole
-/// batch in one call).
+/// Identity and capabilities are `&self`; inference happens through
+/// per-caller [`Session`]s ([`Backend::session`]). The in-crate
+/// backends (engine, ST) are `Send + Sync` — one handle serves any
+/// number of threads, each minting its own sessions — and a
+/// [`SharedBackend`] is the currency the router and `serve::Pool`
+/// deal in.
 pub trait Backend {
     /// Stable identifier ("engine", "st", "xla", ...).
     fn name(&self) -> &'static str;
@@ -72,54 +81,12 @@ pub trait Backend {
     /// Shape and capability descriptor for the loaded model.
     fn spec(&self) -> ModelSpec;
 
-    /// Classifier logits for one feature vector, written into `out`.
-    ///
-    /// `x.len()` must equal `spec().in_dim` and `out.len()` must equal
-    /// `spec().out_dim`; anything else is a
-    /// [`InferenceError::ShapeMismatch`]. Implementations must not
-    /// allocate on the hot path where the substrate allows it (the
-    /// engine path is allocation-free; asserted in
-    /// `tests/api_contract.rs`).
-    fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError>;
-
-    /// Allocating convenience wrapper around [`Backend::infer_into`].
-    fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>, InferenceError> {
-        let mut out = vec![0.0f32; self.spec().out_dim];
-        self.infer_into(x, &mut out)?;
-        Ok(out)
-    }
-
-    /// Batched inference: `xs` holds `n` row-major feature vectors
-    /// (`n * in_dim` values), `out` receives `n * out_dim` logits.
-    /// Returns `n`.
-    ///
-    /// The default implementation loops [`Backend::infer_into`] and is
-    /// exactly equivalent to `n` sequential calls (property-tested in
-    /// `tests/api_contract.rs`); backends with a genuinely batched
-    /// substrate override it.
-    fn infer_batch(&mut self, xs: &[f32], out: &mut [f32]) -> Result<usize, InferenceError> {
-        let spec = self.spec();
-        let (in_dim, out_dim) = (spec.in_dim, spec.out_dim);
-        let n = check_batch_shapes(&spec, xs, out)?;
-        for i in 0..n {
-            self.infer_into(
-                &xs[i * in_dim..(i + 1) * in_dim],
-                &mut out[i * out_dim..(i + 1) * out_dim],
-            )?;
-        }
-        Ok(n)
-    }
-
-    /// Metered ST ops for the last inference (backends with
-    /// `spec().supports_meter` only).
-    fn last_meter(&self) -> Option<Meter> {
-        None
-    }
-
-    /// Access the resumable §6.3 sub-API, when
-    /// `spec().supports_partial`. Returns `None` on single-shot-only
-    /// substrates; capable backends return `self`.
-    fn partial(&mut self) -> Option<&mut dyn PartialBackend> {
-        None
-    }
+    /// Mint a fresh, independent inference session. Cheap relative to
+    /// model loading; sessions own all mutable state, so sessions from
+    /// one backend never observe each other.
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError>;
 }
+
+/// A thread-shareable backend handle — what multi-session consumers
+/// (router, `serve::Pool`, the concurrency tests) pass around.
+pub type SharedBackend = Arc<dyn Backend + Send + Sync>;

@@ -1,36 +1,69 @@
 //! The two in-crate execution substrates behind [`Backend`]: the
-//! native engine and the ST PLC on its bytecode VM. (The XLA/PJRT adapter
-//! lives in [`crate::runtime`] next to the PJRT types it wraps.)
+//! native engine and the ST PLC on its bytecode VM. (The XLA/PJRT
+//! adapter lives in [`crate::runtime`] next to the PJRT types it
+//! wraps.)
+//!
+//! Both follow the same shape: the backend is the immutable, `Send +
+//! Sync` model handle (engine weights behind `Arc<Model>`; the ST
+//! program as a shared compiled [`CodeUnit`] plus a
+//! [`HostImage`] state snapshot), and every [`Backend::session`] call
+//! mints an independent [`Session`] owning all mutable scratch.
 
-use crate::engine::{Cursor, Layer, Model};
-use crate::st::{Interp, Meter, Value, Vm};
+use std::sync::Arc;
+
+use crate::engine::{Activations, Cursor, Layer, Model};
+use crate::st::bytecode::CodeUnit;
+use crate::st::{Host, HostImage, Interp, Meter, Value, Vm};
 
 use super::backend::{check_shapes, Backend};
 use super::error::InferenceError;
-use super::partial::PartialBackend;
+use super::partial::PartialSession;
+use super::session::Session;
 use super::spec::{ModelSpec, RowPlan};
 
-/// Native-engine backend (the §5.4 comparator). Fully resumable: the
-/// engine evaluates in (layer, row) chunks, so the partial session maps
-/// 1:1 onto [`Model::infer_partial_into`].
+// ---------------------------------------------------------------------
+// Native engine
+// ---------------------------------------------------------------------
+
+/// Native-engine backend (the §5.4 comparator): immutable weights
+/// behind `Arc`, shared by every session and thread.
 pub struct EngineBackend {
-    pub model: Model,
-    input: Vec<f32>,
-    out_buf: Vec<f32>,
-    cursor: Option<Cursor>,
-    done: bool,
+    model: Arc<Model>,
+    spec: ModelSpec,
+}
+
+/// The engine capability descriptor for a model (shared between the
+/// backend and its sessions).
+fn engine_spec(model: &Model) -> ModelSpec {
+    let quantization = model.layers().iter().find_map(|l| match l {
+        Layer::QuantDense { scheme, .. } => Some(*scheme),
+        _ => None,
+    });
+    ModelSpec {
+        in_dim: model.in_dim(),
+        out_dim: model.out_dim(),
+        supports_partial: true,
+        supports_meter: false,
+        quantization,
+        batch_granularity: 1,
+    }
 }
 
 impl EngineBackend {
     pub fn new(model: Model) -> EngineBackend {
-        let (in_dim, out_dim) = (model.in_dim(), model.out_dim());
-        EngineBackend {
-            model,
-            input: vec![0.0; in_dim],
-            out_buf: vec![0.0; out_dim],
-            cursor: None,
-            done: false,
-        }
+        EngineBackend::shared(Arc::new(model))
+    }
+
+    /// Wrap an already-shared model (e.g. one `Arc<Model>` behind
+    /// several differently-configured backends).
+    pub fn shared(model: Arc<Model>) -> EngineBackend {
+        let spec = engine_spec(&model);
+        EngineBackend { model, spec }
+    }
+
+    /// The shared weights.
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
     }
 }
 
@@ -40,27 +73,62 @@ impl Backend for EngineBackend {
     }
 
     fn spec(&self) -> ModelSpec {
-        let quantization = self.model.layers().iter().find_map(|l| match l {
-            Layer::QuantDense { scheme, .. } => Some(*scheme),
-            _ => None,
-        });
-        ModelSpec {
-            in_dim: self.model.in_dim(),
-            out_dim: self.model.out_dim(),
-            supports_partial: true,
-            supports_meter: false,
-            quantization,
+        self.spec.clone()
+    }
+
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+        Ok(Box::new(EngineSession::new(Arc::clone(&self.model))))
+    }
+}
+
+/// One caller's engine session: pre-sized activation buffers over the
+/// shared model. Fully resumable: the engine evaluates in (layer, row)
+/// chunks, so the partial sub-API maps 1:1 onto
+/// [`Model::infer_partial_with`], and the suspended state lives
+/// entirely in this session's [`Activations`].
+pub struct EngineSession {
+    model: Arc<Model>,
+    spec: ModelSpec,
+    acts: Activations,
+    input: Vec<f32>,
+    out_buf: Vec<f32>,
+    cursor: Option<Cursor>,
+    done: bool,
+}
+
+impl EngineSession {
+    pub fn new(model: Arc<Model>) -> EngineSession {
+        let spec = engine_spec(&model);
+        EngineSession {
+            acts: Activations::for_model(&model),
+            input: vec![0.0; spec.in_dim],
+            out_buf: vec![0.0; spec.out_dim],
+            model,
+            spec,
+            cursor: None,
+            done: false,
         }
+    }
+}
+
+impl Session for EngineSession {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn spec(&self) -> ModelSpec {
+        self.spec.clone()
     }
 
     fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError> {
-        // Single-shot and partial evaluation share the model's
-        // ping-pong activation buffers: running one while a session is
-        // suspended would silently corrupt the session's state.
+        // Single-shot and partial evaluation share this session's
+        // activation buffers: running one while a partial inference is
+        // suspended would silently corrupt its state. (Other sessions
+        // are unaffected — the restriction is per-session now.)
         if self.cursor.is_some() {
             return Err(InferenceError::SessionState {
                 backend: "engine".into(),
-                expected: "idle (a partial session is in flight)",
+                expected: "idle (a partial inference is in flight)",
             });
         }
         // Validate against the cached buffer lengths: `spec()` walks
@@ -79,16 +147,16 @@ impl Backend for EngineBackend {
                 got: out.len(),
             });
         }
-        self.model.infer_into(x, out);
+        self.model.infer_with(&mut self.acts, x, out);
         Ok(())
     }
 
-    fn partial(&mut self) -> Option<&mut dyn PartialBackend> {
+    fn partial(&mut self) -> Option<&mut dyn PartialSession> {
         Some(self)
     }
 }
 
-impl PartialBackend for EngineBackend {
+impl PartialSession for EngineSession {
     fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError> {
         if x.len() != self.input.len() {
             return Err(InferenceError::ShapeMismatch {
@@ -135,7 +203,8 @@ impl PartialBackend for EngineBackend {
             return Ok(0);
         }
         let before = self.model.remaining_rows(c);
-        let (c, done) = self.model.infer_partial_into(
+        let (c, done) = self.model.infer_partial_with(
+            &mut self.acts,
             &self.input,
             c,
             row_budget,
@@ -171,49 +240,44 @@ impl PartialBackend for EngineBackend {
     }
 }
 
+// ---------------------------------------------------------------------
+// ST PLC (bytecode VM)
+// ---------------------------------------------------------------------
+
 /// ST backend: the ported ICSML program running on the simulated PLC.
-/// Feeds the program's `inputs` array, runs one scan of the inference
-/// POU, reads `outputs`.
+///
+/// The handle is `Send + Sync`: it holds the once-compiled bytecode
+/// ([`CodeUnit`] behind `Arc`) and a [`HostImage`] snapshot of the
+/// adopted interpreter state (globals, instances, `io_dir`, meter —
+/// any host-side mutation applied before construction is captured).
+/// Every session restores the image into a private [`Vm`] — sessions
+/// share code and the image, never runtime state.
 ///
 /// Scans execute on the bytecode [`Vm`] — the ST runtime's fast tier.
 /// The tree-walking [`Interp`] remains the reference oracle (the
 /// constructor consumes one and adopts its state), and the two tiers
 /// are bit-equivalent in outputs *and* meters, so the §6.3 cost
 /// accounting below is unchanged (`tests/st_differential.rs`).
-///
-/// The ST substrate cannot pause mid-POU, so the partial session
-/// emulates §6.3 scheduling: `step` advances a row cursor through the
-/// model's [`RowPlan`] (cost accounting, cycle counts and latency are
-/// therefore faithful to the schedule) and the POU executes once on the
-/// completing step. The output is schedule-invariant by construction
-/// and cross-checked against the engine in the coordinator tests.
 pub struct StBackend {
-    pub vm: Vm,
-    pub program: String,
-    last: Meter,
+    code: Arc<CodeUnit>,
+    image: Arc<HostImage>,
+    program: String,
     dims: (usize, usize),
     plan: RowPlan,
-    input: Vec<f32>,
-    out_buf: Vec<f32>,
-    rows_done: usize,
-    active: bool,
-    done: bool,
 }
 
 impl StBackend {
-    /// Compile the interpreter's unit to bytecode and probe the
-    /// program's I/O dims. Errors with a typed
+    /// Compile the interpreter's unit to bytecode, snapshot its state,
+    /// and probe the program's I/O dims. Errors with a typed
     /// [`InferenceError::BackendUnavailable`] when the program is
-    /// missing or its `inputs`/`outputs` are not `ARRAY OF REAL` —
-    /// previously this fabricated a zero-dim [`ModelSpec`] that
-    /// poisoned router ranking.
+    /// missing or its `inputs`/`outputs` are not `ARRAY OF REAL`.
     pub fn new(
         interp: Interp,
         program: impl Into<String>,
     ) -> Result<StBackend, InferenceError> {
         let program = program.into();
         let vm = Vm::from_interp(interp);
-        let dims = Self::probe_dims(&vm, &program).ok_or_else(|| {
+        let dims = probe_dims(&vm, &program).ok_or_else(|| {
             InferenceError::BackendUnavailable {
                 backend: "st".into(),
                 reason: format!(
@@ -222,17 +286,14 @@ impl StBackend {
                 ),
             }
         })?;
+        let code = Arc::clone(vm.code());
+        let image = Arc::new(vm.host.image());
         Ok(StBackend {
-            plan: RowPlan::single(dims.0, dims.1),
-            input: vec![0.0; dims.0],
-            out_buf: vec![0.0; dims.1],
-            vm,
+            code,
+            image,
             program,
-            last: Meter::new(),
             dims,
-            rows_done: 0,
-            active: false,
-            done: false,
+            plan: RowPlan::single(dims.0, dims.1),
         })
     }
 
@@ -243,20 +304,85 @@ impl StBackend {
         self.plan = plan;
         self
     }
+}
 
-    fn probe_dims(vm: &Vm, program: &str) -> Option<(usize, usize)> {
-        let inst = vm.program_instance(program)?;
-        let i = match vm.instance_field(inst, "inputs") {
-            Some(Value::ArrF32(a)) => a.borrow().len(),
-            _ => return None,
-        };
-        let o = match vm.instance_field(inst, "outputs") {
-            Some(Value::ArrF32(a)) => a.borrow().len(),
-            _ => return None,
-        };
-        Some((i, o))
+fn probe_dims(vm: &Vm, program: &str) -> Option<(usize, usize)> {
+    let inst = vm.program_instance(program)?;
+    let i = match vm.instance_field(inst, "inputs") {
+        Some(Value::ArrF32(a)) => a.borrow().len(),
+        _ => return None,
+    };
+    let o = match vm.instance_field(inst, "outputs") {
+        Some(Value::ArrF32(a)) => a.borrow().len(),
+        _ => return None,
+    };
+    Some((i, o))
+}
+
+fn st_spec(dims: (usize, usize)) -> ModelSpec {
+    ModelSpec {
+        in_dim: dims.0,
+        out_dim: dims.1,
+        supports_partial: true,
+        supports_meter: true,
+        quantization: None,
+        batch_granularity: 1,
+    }
+}
+
+impl Backend for StBackend {
+    fn name(&self) -> &'static str {
+        "st"
     }
 
+    fn spec(&self) -> ModelSpec {
+        st_spec(self.dims)
+    }
+
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+        let host = Host::from_image(&self.image);
+        let vm = Vm::with_host(host, Arc::clone(&self.code));
+        Ok(Box::new(StSession {
+            vm,
+            program: self.program.clone(),
+            last: Meter::new(),
+            dims: self.dims,
+            plan: self.plan.clone(),
+            input: vec![0.0; self.dims.0],
+            out_buf: vec![0.0; self.dims.1],
+            rows_done: 0,
+            active: false,
+            done: false,
+        }))
+    }
+}
+
+/// One caller's ST session: a private [`Vm`] (restored from the
+/// backend's state image) plus request buffers. The generated
+/// programs' lazy first-scan initialization (BINARR weight loading)
+/// runs once per session, against the backend's captured `io_dir`.
+///
+/// The ST substrate cannot pause mid-POU, so the partial sub-API
+/// emulates §6.3 scheduling: `step` advances a row cursor through the
+/// model's [`RowPlan`] (cost accounting, cycle counts and latency are
+/// therefore faithful to the schedule) and the POU executes once on
+/// the completing step. The output is schedule-invariant by
+/// construction and cross-checked against the engine in the
+/// coordinator tests.
+pub struct StSession {
+    pub vm: Vm,
+    program: String,
+    last: Meter,
+    dims: (usize, usize),
+    plan: RowPlan,
+    input: Vec<f32>,
+    out_buf: Vec<f32>,
+    rows_done: usize,
+    active: bool,
+    done: bool,
+}
+
+impl StSession {
     /// Run one scan of the POU: `self.input` → program → `self.out_buf`.
     fn run_program_io(&mut self) -> Result<(), InferenceError> {
         let inst = self
@@ -322,28 +448,22 @@ impl StBackend {
     }
 }
 
-impl Backend for StBackend {
+impl Session for StSession {
     fn name(&self) -> &'static str {
         "st"
     }
 
     fn spec(&self) -> ModelSpec {
-        ModelSpec {
-            in_dim: self.dims.0,
-            out_dim: self.dims.1,
-            supports_partial: true,
-            supports_meter: true,
-            quantization: None,
-        }
+        st_spec(self.dims)
     }
 
     fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError> {
         // `input` doubles as the latched input of a suspended partial
-        // session — refuse to clobber it mid-session.
+        // inference — refuse to clobber it mid-flight.
         if self.active {
             return Err(InferenceError::SessionState {
                 backend: "st".into(),
-                expected: "idle (a partial session is in flight)",
+                expected: "idle (a partial inference is in flight)",
             });
         }
         check_shapes(&self.spec(), x, out)?;
@@ -357,12 +477,12 @@ impl Backend for StBackend {
         Some(self.last.clone())
     }
 
-    fn partial(&mut self) -> Option<&mut dyn PartialBackend> {
+    fn partial(&mut self) -> Option<&mut dyn PartialSession> {
         Some(self)
     }
 }
 
-impl PartialBackend for StBackend {
+impl PartialSession for StSession {
     fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError> {
         if x.len() != self.input.len() {
             return Err(InferenceError::ShapeMismatch {
@@ -409,7 +529,7 @@ impl PartialBackend for StBackend {
         let total = self.plan.total_rows();
         let consumed = row_budget.min(total - self.rows_done);
         // Run the POU before committing the completing rows: a
-        // transient interpreter error leaves the session one step
+        // transient interpreter error leaves the inference one step
         // short, so the next `step` retries instead of wedging at
         // rows_done == total with done == false.
         if self.rows_done + consumed >= total {
@@ -480,23 +600,25 @@ mod tests {
 
     #[test]
     fn engine_infer_into_matches_infer() {
-        let mut b = EngineBackend::new(toy());
+        let b = EngineBackend::new(toy());
+        let mut s = b.session().unwrap();
         let x = [0.4, -0.2, 0.9, 1.4];
-        let via_vec = b.infer(&x).unwrap();
+        let via_vec = s.infer(&x).unwrap();
         let mut out = [0.0f32; 2];
-        b.infer_into(&x, &mut out).unwrap();
+        s.infer_into(&x, &mut out).unwrap();
         assert_eq!(out.to_vec(), via_vec);
     }
 
     #[test]
     fn engine_shape_mismatch_is_typed() {
-        let mut b = EngineBackend::new(toy());
+        let b = EngineBackend::new(toy());
+        let mut s = b.session().unwrap();
         let mut out = [0.0f32; 2];
-        match b.infer_into(&[1.0; 3], &mut out) {
+        match s.infer_into(&[1.0; 3], &mut out) {
             Err(InferenceError::ShapeMismatch { expected: 4, got: 3, .. }) => {}
             other => panic!("want ShapeMismatch, got {other:?}"),
         }
-        match b.infer_into(&[1.0; 4], &mut out[..1]) {
+        match s.infer_into(&[1.0; 4], &mut out[..1]) {
             Err(InferenceError::ShapeMismatch { expected: 2, got: 1, .. }) => {}
             other => panic!("want ShapeMismatch, got {other:?}"),
         }
@@ -505,9 +627,10 @@ mod tests {
     #[test]
     fn engine_partial_session_matches_single_shot() {
         let x = [0.7, -0.4, 1.1, 0.2];
-        let want = EngineBackend::new(toy()).infer(&x).unwrap();
-        let mut b = EngineBackend::new(toy());
-        let p = b.partial().expect("engine supports partial");
+        let b = EngineBackend::new(toy());
+        let want = b.session().unwrap().infer(&x).unwrap();
+        let mut s = b.session().unwrap();
+        let p = s.partial().expect("engine supports partial");
         p.begin(&x).unwrap();
         assert!(p.in_flight());
         let mut steps = 0;
@@ -526,65 +649,95 @@ mod tests {
 
     #[test]
     fn engine_step_before_begin_is_session_error() {
-        let mut b = EngineBackend::new(toy());
-        match PartialBackend::step(&mut b, 1) {
+        let b = EngineBackend::new(toy());
+        let mut s = EngineSession::new(Arc::clone(b.model()));
+        match PartialSession::step(&mut s, 1) {
             Err(InferenceError::SessionState { .. }) => {}
             other => panic!("want SessionState, got {other:?}"),
         }
         let mut out = [0.0f32; 2];
-        match PartialBackend::finish(&mut b, &mut out) {
+        match PartialSession::finish(&mut s, &mut out) {
             Err(InferenceError::SessionState { .. }) => {}
             other => panic!("want SessionState, got {other:?}"),
         }
     }
 
     #[test]
-    fn infer_into_rejected_while_partial_session_in_flight() {
-        let mut b = EngineBackend::new(toy());
+    fn infer_into_rejected_while_partial_in_flight() {
+        let b = EngineBackend::new(toy());
         let x = [0.1f32, 0.2, 0.3, 0.4];
-        let want = EngineBackend::new(toy()).infer(&x).unwrap();
-        PartialBackend::begin(&mut b, &x).unwrap();
-        b.step(2).unwrap();
-        // A single-shot call mid-session would corrupt the suspended
+        let want = b.session().unwrap().infer(&x).unwrap();
+        let mut s = EngineSession::new(Arc::clone(b.model()));
+        PartialSession::begin(&mut s, &x).unwrap();
+        s.step(2).unwrap();
+        // A single-shot call mid-flight would corrupt the suspended
         // activations — it must be refused, not silently served.
         let mut out = [0.0f32; 2];
-        match b.infer_into(&x, &mut out) {
+        match Session::infer_into(&mut s, &x, &mut out) {
             Err(InferenceError::SessionState { .. }) => {}
             other => panic!("want SessionState, got {other:?}"),
         }
-        // The session itself is unharmed and completes correctly.
-        while !b.finished() {
-            b.step(2).unwrap();
+        // The partial inference itself is unharmed and completes
+        // correctly.
+        while !s.finished() {
+            s.step(2).unwrap();
         }
-        PartialBackend::finish(&mut b, &mut out).unwrap();
+        PartialSession::finish(&mut s, &mut out).unwrap();
         assert_eq!(out.to_vec(), want);
         // Idle again: single-shot works.
-        b.infer_into(&x, &mut out).unwrap();
+        Session::infer_into(&mut s, &x, &mut out).unwrap();
     }
 
     #[test]
     fn default_batch_equals_sequential() {
-        let mut b = EngineBackend::new(toy());
+        let b = EngineBackend::new(toy());
+        let mut s = b.session().unwrap();
         let xs: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin()).collect();
         let mut batched = vec![0.0f32; 6];
-        assert_eq!(b.infer_batch(&xs, &mut batched).unwrap(), 3);
+        assert_eq!(s.infer_batch(&xs, &mut batched).unwrap(), 3);
         for i in 0..3 {
-            let one = b.infer(&xs[i * 4..(i + 1) * 4]).unwrap();
+            let one = s.infer(&xs[i * 4..(i + 1) * 4]).unwrap();
             assert_eq!(&batched[i * 2..(i + 1) * 2], &one[..]);
         }
     }
 
     #[test]
     fn batch_shape_errors_are_typed() {
-        let mut b = EngineBackend::new(toy());
+        let b = EngineBackend::new(toy());
+        let mut s = b.session().unwrap();
         let mut out = vec![0.0f32; 2];
-        match b.infer_batch(&[0.0; 5], &mut out) {
+        match s.infer_batch(&[0.0; 5], &mut out) {
             Err(InferenceError::ShapeMismatch { what: "batch input", .. }) => {}
             other => panic!("want batch input mismatch, got {other:?}"),
         }
-        match b.infer_batch(&[0.0; 8], &mut out[..1]) {
+        match s.infer_batch(&[0.0; 8], &mut out[..1]) {
             Err(InferenceError::ShapeMismatch { what: "batch output", .. }) => {}
             other => panic!("want batch output mismatch, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn sessions_over_one_backend_are_independent() {
+        let b = EngineBackend::new(toy());
+        let xa = [0.4, -0.2, 0.9, 1.4];
+        let xb = [-0.3, 0.8, -1.2, 0.5];
+        let want_a = b.session().unwrap().infer(&xa).unwrap();
+        let want_b = b.session().unwrap().infer(&xb).unwrap();
+        // Suspend a partial inference in session 1, serve single-shot
+        // traffic from session 2, then resume 1 — the old design
+        // refused this with a `SessionState` error at backend scope.
+        let mut s1 = b.session().unwrap();
+        let mut s2 = b.session().unwrap();
+        let p1 = s1.partial().unwrap();
+        p1.begin(&xa).unwrap();
+        p1.step(2).unwrap();
+        assert_eq!(s2.infer(&xb).unwrap(), want_b);
+        let p1 = s1.partial().unwrap();
+        while !p1.finished() {
+            p1.step(3).unwrap();
+        }
+        let mut out = [0.0f32; 2];
+        p1.finish(&mut out).unwrap();
+        assert_eq!(out.to_vec(), want_a);
     }
 }

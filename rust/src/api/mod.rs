@@ -1,42 +1,60 @@
 //! The inference API: the vendor-neutral contract every execution
 //! substrate implements (paper §4's framework API + §6.3 multipart
-//! inference, generalized).
+//! inference, generalized to a serving system).
 //!
 //! The paper's point is that ML inference should run natively on *any*
 //! IEC 61131-3 runtime; this module is the Rust expression of that
-//! portability claim. Everything that executes a model — the native
-//! engine, the ST-interpreter PLC, the XLA/PJRT runtime — implements
-//! [`Backend`], and everything that consumes inference — the §7
-//! detector, the router, the §6.3 multipart scheduler, the serving
-//! CLI — is written against the trait, never against a concrete
-//! substrate.
+//! portability claim — scaled past the paper's one-PLC framing. The
+//! contract is two-level:
+//!
+//! * [`Backend`] — an **immutable model handle**: weights, compiled
+//!   ST bytecode, XLA executables behind `Arc`; identity and
+//!   capability queries over `&self`. The in-crate backends are
+//!   `Send + Sync` ([`SharedBackend`]), so one handle serves any
+//!   number of threads.
+//! * [`Session`] — **per-request mutable state** minted by
+//!   [`Backend::session`]: scratch buffers, the resumable §6.3
+//!   `begin`/`step`/`finish` cursor ([`PartialSession`]), the last
+//!   [`crate::st::Meter`]. One caller per session; concurrency is many
+//!   sessions, not locks.
+//!
+//! Everything that executes a model — the native engine, the
+//! ST-interpreter PLC, the XLA/PJRT runtime — implements [`Backend`];
+//! everything that consumes inference — the §7 detector, the router,
+//! the §6.3 multipart scheduler, `serve::Pool`, the serving CLI — is
+//! written against the traits, never against a concrete substrate.
 //!
 //! Contract highlights (see `API.md` at the repo root):
 //!
-//! * **Allocation-free hot path** — [`Backend::infer_into`] writes
-//!   logits into a caller-provided buffer; the engine path performs no
-//!   heap allocation per call (asserted by `tests/api_contract.rs`).
-//! * **Batch-first** — [`Backend::infer_batch`] serves N requests in
-//!   one call. The default implementation loops `infer_into`; backends
+//! * **Allocation-free hot path** — [`Session::infer_into`] writes
+//!   logits into a caller-provided buffer; the engine session performs
+//!   no heap allocation per call (asserted by `tests/api_contract.rs`).
+//! * **Batch-first** — [`Session::infer_batch`] serves N requests in
+//!   one call. The default implementation loops `infer_into`; sessions
 //!   with true batched execution (XLA) override it.
+//! * **Concurrent by construction** — N threads × M sessions over one
+//!   shared backend produce bit-identical results to sequential
+//!   execution (asserted by `tests/concurrency.rs`).
 //! * **Typed errors** — [`InferenceError`] replaces ad-hoc `anyhow!`
 //!   strings so routers can distinguish a shape bug from a flaky
 //!   backend.
 //! * **Capability discovery** — [`ModelSpec`] reports dimensions and
 //!   what the backend can do (`supports_partial`, `supports_meter`,
 //!   `quantization`), so schedulers negotiate instead of downcasting.
-//! * **Resumable inference** — [`PartialBackend`] folds the §6.3
-//!   `begin`/`step(row_budget)`/`finish` session into the contract;
-//!   the multipart coordinator schedules over any capable backend.
+//! * **Resumable inference** — [`PartialSession`] folds the §6.3
+//!   `begin`/`step(row_budget)`/`finish` sub-API into the session;
+//!   the multipart coordinator schedules over any capable session.
 
 pub mod backend;
 pub mod backends;
 pub mod error;
 pub mod partial;
+pub mod session;
 pub mod spec;
 
-pub use backend::Backend;
-pub use backends::{EngineBackend, StBackend};
+pub use backend::{Backend, SharedBackend};
+pub use backends::{EngineBackend, EngineSession, StBackend, StSession};
 pub use error::InferenceError;
-pub use partial::PartialBackend;
+pub use partial::PartialSession;
+pub use session::Session;
 pub use spec::{ModelSpec, RowPlan};

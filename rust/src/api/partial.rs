@@ -3,34 +3,40 @@
 //! A multipart inference runs one logical request across many PLC scan
 //! cycles. The session protocol:
 //!
-//! 1. [`PartialBackend::begin`] latches the input and resets the row
+//! 1. [`PartialSession::begin`] latches the input and resets the row
 //!    cursor;
-//! 2. the scheduler calls [`PartialBackend::step`] with a per-cycle
-//!    row budget until [`PartialBackend::finished`] — using
-//!    [`PartialBackend::next_row_macs`] to convert rows into modeled
+//! 2. the scheduler calls [`PartialSession::step`] with a per-cycle
+//!    row budget until [`PartialSession::finished`] — using
+//!    [`PartialSession::next_row_macs`] to convert rows into modeled
 //!    µs on a hardware profile;
-//! 3. [`PartialBackend::finish`] writes the logits and closes the
+//! 3. [`PartialSession::finish`] writes the logits and closes the
 //!    session.
 //!
-//! The coordinator's `MultipartSession` drives this over *any* capable
-//! backend; it no longer owns a concrete engine model.
+//! Since the move to the Engine/Session split, the suspended state
+//! lives inside one [`Session`] — many multipart inferences can be in
+//! flight over one shared backend (one per session), where the old
+//! design allowed one per *backend* and guarded it with `SessionState`
+//! refusals. The coordinator's `MultipartSession` drives this over any
+//! capable session.
 
-use super::backend::Backend;
 use super::error::InferenceError;
+use super::session::Session;
 
-/// A backend capable of resumable (multipart) inference.
+/// A session capable of resumable (multipart) inference.
 ///
-/// At most one session is active per backend; `begin` while a session
-/// is in flight restarts it (matching the paper's semantics where a
-/// new scan value preempts a stale inference).
-pub trait PartialBackend: Backend {
-    /// Start a session for input `x` (length `spec().in_dim`).
+/// At most one partial inference is active per session; `begin` while
+/// one is in flight restarts it (matching the paper's semantics where
+/// a new scan value preempts a stale inference).
+pub trait PartialSession: Session {
+    /// Start a resumable inference for input `x` (length
+    /// `spec().in_dim`).
     fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError>;
 
-    /// A session is active (begun and not yet finished+collected).
+    /// A partial inference is active (begun and not yet
+    /// finished+collected).
     fn in_flight(&self) -> bool;
 
-    /// Rows left before the session completes (0 once finished).
+    /// Rows left before the inference completes (0 once finished).
     fn remaining_rows(&self) -> usize;
 
     /// Modeled multiply-accumulate count of the next row — the
@@ -45,7 +51,7 @@ pub trait PartialBackend: Backend {
     /// All rows have been consumed; `finish` may be called.
     fn finished(&self) -> bool;
 
-    /// Write the session's logits into `out` (length
-    /// `spec().out_dim`) and close the session.
+    /// Write the inference's logits into `out` (length
+    /// `spec().out_dim`) and close it.
     fn finish(&mut self, out: &mut [f32]) -> Result<(), InferenceError>;
 }

@@ -1,0 +1,89 @@
+//! The [`Session`] trait — per-request mutable inference state.
+//!
+//! A [`super::Backend`] is an immutable model handle; a `Session` is
+//! everything mutable about serving requests from it: scratch buffers,
+//! latched partial-inference state, the last [`Meter`]. Sessions are
+//! cheap to mint ([`super::Backend::session`]), owned by exactly one
+//! caller, and deliberately **not** `Sync` — concurrency comes from
+//! many sessions over one shared backend, not from locking inside a
+//! session.
+
+use crate::st::Meter;
+
+use super::backend::check_batch_shapes;
+use super::error::InferenceError;
+use super::partial::PartialSession;
+use super::spec::ModelSpec;
+
+/// One caller's mutable inference state over a shared model.
+///
+/// The only method an implementor *must* provide beyond identity is
+/// [`Session::infer_into`] — the single-request, allocation-free hot
+/// path. Everything else ([`Session::infer`], [`Session::infer_batch`])
+/// has a correct default built on it; sessions override the defaults
+/// only when their substrate can do better (e.g. XLA executing a whole
+/// batch in one call).
+pub trait Session {
+    /// Stable identifier of the backing substrate ("engine", "st",
+    /// "xla", ...).
+    fn name(&self) -> &'static str;
+
+    /// Shape and capability descriptor for the loaded model.
+    fn spec(&self) -> ModelSpec;
+
+    /// Classifier logits for one feature vector, written into `out`.
+    ///
+    /// `x.len()` must equal `spec().in_dim` and `out.len()` must equal
+    /// `spec().out_dim`; anything else is a
+    /// [`InferenceError::ShapeMismatch`]. Implementations must not
+    /// allocate on the hot path where the substrate allows it (the
+    /// engine session is allocation-free; asserted in
+    /// `tests/api_contract.rs`).
+    fn infer_into(&mut self, x: &[f32], out: &mut [f32])
+        -> Result<(), InferenceError>;
+
+    /// Allocating convenience wrapper around [`Session::infer_into`].
+    fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>, InferenceError> {
+        let mut out = vec![0.0f32; self.spec().out_dim];
+        self.infer_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    /// Batched inference: `xs` holds `n` row-major feature vectors
+    /// (`n * in_dim` values), `out` receives `n * out_dim` logits.
+    /// Returns `n`.
+    ///
+    /// The default implementation loops [`Session::infer_into`] and is
+    /// exactly equivalent to `n` sequential calls (property-tested in
+    /// `tests/api_contract.rs`); sessions with a genuinely batched
+    /// substrate override it.
+    fn infer_batch(
+        &mut self,
+        xs: &[f32],
+        out: &mut [f32],
+    ) -> Result<usize, InferenceError> {
+        let spec = self.spec();
+        let (in_dim, out_dim) = (spec.in_dim, spec.out_dim);
+        let n = check_batch_shapes(&spec, xs, out)?;
+        for i in 0..n {
+            self.infer_into(
+                &xs[i * in_dim..(i + 1) * in_dim],
+                &mut out[i * out_dim..(i + 1) * out_dim],
+            )?;
+        }
+        Ok(n)
+    }
+
+    /// Metered ST ops for the last inference (sessions whose backend
+    /// reports `spec().supports_meter` only).
+    fn last_meter(&self) -> Option<Meter> {
+        None
+    }
+
+    /// Access the resumable §6.3 sub-API, when
+    /// `spec().supports_partial`. Returns `None` on single-shot-only
+    /// substrates; capable sessions return `self`.
+    fn partial(&mut self) -> Option<&mut dyn PartialSession> {
+        None
+    }
+}

@@ -24,6 +24,12 @@ pub struct ModelSpec {
     /// Integer quantization scheme the weights are stored in, if any
     /// (paper §6.1); `None` means f32 (`REAL`).
     pub quantization: Option<Scheme>,
+    /// Batch sizes the substrate can execute must be multiples of
+    /// this (1 everywhere except fixed-batch AOT executables, where it
+    /// is the compiled batch dimension). Schedulers — notably
+    /// `serve::Pool`'s micro-batcher — use it to cut servable chunks
+    /// instead of submitting doomed ragged batches.
+    pub batch_granularity: usize,
 }
 
 impl ModelSpec {
@@ -36,6 +42,7 @@ impl ModelSpec {
             supports_partial: false,
             supports_meter: false,
             quantization: None,
+            batch_granularity: 1,
         }
     }
 }

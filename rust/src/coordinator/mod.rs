@@ -1,10 +1,15 @@
 //! Coordination layer over the [`crate::api`] inference contract: the
-//! policy router (with error fallback + penalties) and the §6.3
-//! multipart scheduler (splitting inference across scan cycles under a
-//! per-cycle CPU budget, on any [`crate::api::PartialBackend`]).
+//! policy router (a shared control plane with per-caller
+//! [`router::RouterSession`]s, error fallback + penalties) and the
+//! §6.3 multipart scheduler (splitting inference across scan cycles
+//! under a per-cycle CPU budget, on any partial-capable
+//! [`crate::api::Session`]).
 
 pub mod multipart;
 pub mod router;
 
 pub use multipart::{MultipartSession, MultipartStats};
-pub use router::{BackendStats, InferenceRouter, RoutePolicy, ERROR_PENALTY_US};
+pub use router::{
+    BackendStats, InferenceRouter, RoutePolicy, RouterSession,
+    ERROR_PENALTY_US,
+};

@@ -1,11 +1,18 @@
 //! Multipart inference (paper §6.3): when the model does not fit the
 //! scan cycle, split the computation across cycles. The scheduler
-//! drives any [`PartialBackend`]'s `begin`/`step`/`finish` session,
-//! charging each row its modeled on-PLC cost and stopping when the
-//! cycle's ML budget is spent. Correctness invariant (property-tested):
-//! any schedule yields the single-shot output exactly.
+//! drives any partial-capable [`Session`]'s `begin`/`step`/`finish`
+//! sub-API, charging each row its modeled on-PLC cost and stopping
+//! when the cycle's ML budget is spent. Correctness invariant
+//! (property-tested): any schedule yields the single-shot output
+//! exactly.
+//!
+//! Since the Engine/Session split the coordinator holds a [`Session`],
+//! not a whole backend — any number of multipart inferences can be in
+//! flight over one shared backend, one per session.
 
-use crate::api::{Backend, EngineBackend, InferenceError, PartialBackend};
+use std::sync::Arc;
+
+use crate::api::{Backend, EngineSession, InferenceError, Session};
 use crate::engine::{Layer, Model};
 use crate::plc::HwProfile;
 
@@ -44,12 +51,12 @@ pub struct MultipartStats {
     pub total_us: f64,
 }
 
-/// A resumable inference session scheduled over any capable backend
-/// (engine, ST bytecode VM, ...) — the §6.3 coordinator. It owns no
-/// concrete model; all substrate access goes through
-/// [`PartialBackend`].
+/// A resumable inference scheduled over any capable session (engine,
+/// ST bytecode VM, ...) — the §6.3 coordinator. It owns no concrete
+/// model; all substrate access goes through the session's
+/// [`crate::api::PartialSession`] sub-API.
 pub struct MultipartSession {
-    backend: Box<dyn PartialBackend>,
+    session: Box<dyn Session>,
     pub profile: HwProfile,
     out_buf: Vec<f32>,
     pub stats: MultipartStats,
@@ -58,39 +65,56 @@ pub struct MultipartSession {
 impl MultipartSession {
     /// Engine-backed session (the common §6.3 configuration).
     pub fn new(model: Model, profile: HwProfile) -> MultipartSession {
-        MultipartSession::with_backend(
-            Box::new(EngineBackend::new(model)),
+        MultipartSession::with_session(
+            Box::new(EngineSession::new(Arc::new(model))),
             profile,
         )
+        .expect("engine sessions support partial inference")
     }
 
-    /// Session over an arbitrary resumable backend.
-    pub fn with_backend(
-        backend: Box<dyn PartialBackend>,
+    /// Coordinator over a session minted from `backend` (checks the
+    /// partial capability up front).
+    pub fn over_backend(
+        backend: &dyn Backend,
         profile: HwProfile,
-    ) -> MultipartSession {
-        let out_dim = backend.spec().out_dim;
-        MultipartSession {
-            backend,
+    ) -> Result<MultipartSession, InferenceError> {
+        MultipartSession::with_session(backend.session()?, profile)
+    }
+
+    /// Coordinator over an arbitrary session; typed error when the
+    /// session's substrate cannot resume.
+    pub fn with_session(
+        mut session: Box<dyn Session>,
+        profile: HwProfile,
+    ) -> Result<MultipartSession, InferenceError> {
+        if session.partial().is_none() {
+            return Err(InferenceError::Unsupported {
+                backend: session.name().to_string(),
+                op: "partial (multipart) inference",
+            });
+        }
+        let out_dim = session.spec().out_dim;
+        Ok(MultipartSession {
+            session,
             profile,
             out_buf: vec![0.0; out_dim],
             stats: MultipartStats::default(),
-        }
+        })
     }
 
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.session.name()
     }
 
     /// Begin a new inference with input `x` (resets the session).
     pub fn begin(&mut self, x: &[f32]) -> Result<(), InferenceError> {
-        self.backend.begin(x)?;
+        self.session.partial().unwrap().begin(x)?;
         self.stats = MultipartStats::default();
         Ok(())
     }
 
-    pub fn in_flight(&self) -> bool {
-        self.backend.in_flight()
+    pub fn in_flight(&mut self) -> bool {
+        self.session.partial().unwrap().in_flight()
     }
 
     /// Run one scan cycle's worth of work under `budget_us` of modeled
@@ -105,13 +129,14 @@ impl MultipartSession {
         let mut spent = 0.0f64;
         let mut rows_done = 0usize;
         let mut step_err = None;
-        while !self.backend.finished() {
-            let cost =
-                row_macs_cost_us(self.backend.next_row_macs(), &self.profile);
+        let profile = self.profile.clone();
+        let partial = self.session.partial().unwrap();
+        while !partial.finished() {
+            let cost = row_macs_cost_us(partial.next_row_macs(), &profile);
             if rows_done > 0 && spent + cost > budget_us {
                 break;
             }
-            match self.backend.step(1) {
+            match partial.step(1) {
                 Ok(0) => break,
                 Ok(consumed) => {
                     spent += cost;
@@ -123,6 +148,12 @@ impl MultipartSession {
                 }
             }
         }
+        let finished = partial.finished() && step_err.is_none();
+        let finish_result = if finished {
+            Some(partial.finish(&mut self.out_buf))
+        } else {
+            None
+        };
         // Charge the cycle before propagating any error: rows already
         // executed consumed real budget even if a later step faulted,
         // and a retried cycle does not re-step them.
@@ -134,11 +165,10 @@ impl MultipartSession {
         if let Some(e) = step_err {
             return Err(e);
         }
-        if self.backend.finished() {
-            self.backend.finish(&mut self.out_buf)?;
-            Ok(Some(self.out_buf.clone()))
-        } else {
-            Ok(None)
+        match finish_result {
+            Some(Ok(())) => Ok(Some(self.out_buf.clone())),
+            Some(Err(e)) => Err(e),
+            None => Ok(None),
         }
     }
 
@@ -264,7 +294,8 @@ mod tests {
         let (st, mut reference) = st_backend_and_reference("invariance");
         assert!(st.spec().supports_partial);
         let mut sess =
-            MultipartSession::with_backend(Box::new(st), HwProfile::beaglebone());
+            MultipartSession::over_backend(&st, HwProfile::beaglebone())
+                .unwrap();
         assert_eq!(sess.backend_name(), "st");
         prop_check(10, |g| {
             let x: Vec<f32> = (0..8).map(|_| g.f32_in(-1.0, 1.0)).collect();
@@ -291,7 +322,8 @@ mod tests {
     fn st_tight_budget_spreads_across_cycles() {
         let (st, _) = st_backend_and_reference("budget");
         let mut sess =
-            MultipartSession::with_backend(Box::new(st), HwProfile::beaglebone());
+            MultipartSession::over_backend(&st, HwProfile::beaglebone())
+                .unwrap();
         let x = [0.25f32; 8];
         let (_, one) = sess.run_to_completion(&x, 1e9, 10).unwrap().unwrap();
         assert_eq!(one, 1);

@@ -4,15 +4,24 @@
 //! exists so the serving examples and benchmarks can exercise all
 //! paths uniformly and fall back when a backend is unavailable.
 //!
+//! Shape (post Engine/Session split): the router itself is a **shared,
+//! `Sync` control plane** — immutable backend handles plus ranking
+//! statistics behind a `Mutex`. Serving state is per caller: each
+//! caller mints a [`RouterSession`] ([`InferenceRouter::session`])
+//! holding lazily-created per-backend [`Session`]s. Many router
+//! sessions route concurrently over one router; the stats lock is
+//! control-plane only and never held across an inference call.
+//!
 //! Resilience: a request only fails when *every* registered backend
 //! fails. On a backend error the router records a latency penalty
 //! against it (so `FastestObserved` stops re-picking a flaky-but-fast
 //! backend) and retries the next-best candidate per policy.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::api::{Backend, InferenceError};
+use crate::api::{Backend, InferenceError, Session, SharedBackend};
 
 /// Modeled latency charged per error when ranking backends: one full
 /// second — a flaky backend has to be *very* fast to stay attractive.
@@ -76,10 +85,13 @@ impl BackendStats {
     }
 }
 
-/// The router.
+/// The shared router: immutable backend handles + locked statistics.
+/// Registration happens before sharing (`&mut self`); everything on
+/// the serving path is `&self`, so one router serves any number of
+/// threads (`tests/concurrency.rs` hammers exactly this).
 pub struct InferenceRouter {
-    backends: BTreeMap<String, Box<dyn Backend>>,
-    stats: BTreeMap<String, BackendStats>,
+    backends: BTreeMap<String, SharedBackend>,
+    stats: Mutex<BTreeMap<String, BackendStats>>,
     pub policy: RoutePolicy,
     pub pinned: Option<String>,
 }
@@ -88,15 +100,18 @@ impl InferenceRouter {
     pub fn new(policy: RoutePolicy) -> InferenceRouter {
         InferenceRouter {
             backends: BTreeMap::new(),
-            stats: BTreeMap::new(),
+            stats: Mutex::new(BTreeMap::new()),
             policy,
             pinned: None,
         }
     }
 
-    pub fn register(&mut self, name: impl Into<String>, b: Box<dyn Backend>) {
+    pub fn register(&mut self, name: impl Into<String>, b: SharedBackend) {
         let name = name.into();
-        self.stats.insert(name.clone(), BackendStats::default());
+        self.stats
+            .lock()
+            .unwrap()
+            .insert(name.clone(), BackendStats::default());
         self.backends.insert(name, b);
     }
 
@@ -104,8 +119,16 @@ impl InferenceRouter {
         self.backends.keys().cloned().collect()
     }
 
-    pub fn stats(&self, name: &str) -> Option<&BackendStats> {
-        self.stats.get(name)
+    /// Snapshot of one backend's statistics.
+    pub fn stats(&self, name: &str) -> Option<BackendStats> {
+        self.stats.lock().unwrap().get(name).cloned()
+    }
+
+    /// Mint a per-caller routing session. Backend sessions inside it
+    /// are created lazily, the first time the ranking reaches each
+    /// backend.
+    pub fn session(&self) -> RouterSession<'_> {
+        RouterSession { router: self, sessions: BTreeMap::new() }
     }
 
     /// Rank every registered backend per policy: the policy's first
@@ -114,24 +137,24 @@ impl InferenceRouter {
         if self.backends.is_empty() {
             return Err(InferenceError::NoBackends);
         }
+        let stats = self.stats.lock().unwrap();
         // Untried backends first (exploration, registration-name
         // order), then by score.
         let mut order: Vec<String> = Vec::with_capacity(self.backends.len());
-        for (name, s) in &self.stats {
+        for (name, s) in stats.iter() {
             if self.backends.contains_key(name) && !s.tried() {
                 order.push(name.clone());
             }
         }
-        let mut tried: Vec<&String> = self
-            .stats
+        let mut tried: Vec<&String> = stats
             .iter()
             .filter(|(n, s)| self.backends.contains_key(*n) && s.tried())
             .map(|(n, _)| n)
             .collect();
         tried.sort_by(|a, b| {
-            self.stats[*a]
+            stats[*a]
                 .score_us()
-                .partial_cmp(&self.stats[*b].score_us())
+                .partial_cmp(&stats[*b].score_us())
                 .unwrap()
                 .then_with(|| a.cmp(b))
         });
@@ -156,14 +179,16 @@ impl InferenceRouter {
     /// Record `n` served requests under one wall-clock measurement (a
     /// batch counts per row, so per-request means stay comparable
     /// between batch and single traffic).
-    fn record_ok(&mut self, name: &str, t: Instant, n: u64) {
-        let s = self.stats.get_mut(name).unwrap();
+    fn record_ok(&self, name: &str, t: Instant, n: u64) {
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.get_mut(name).unwrap();
         s.requests += n;
         s.total_us += t.elapsed().as_secs_f64() * 1e6;
     }
 
-    fn record_err(&mut self, name: &str, e: &InferenceError) {
-        let s = self.stats.get_mut(name).unwrap();
+    fn record_err(&self, name: &str, e: &InferenceError) {
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.get_mut(name).unwrap();
         s.errors += 1;
         // Only backend faults skew the ranking: a caller-side shape
         // bug fails identically everywhere and says nothing about
@@ -173,11 +198,48 @@ impl InferenceRouter {
             s.penalty_us += ERROR_PENALTY_US;
         }
     }
+}
+
+/// One caller's routing state: lazily-created sessions over the shared
+/// router's backends. Not `Sync` — every concurrent caller takes its
+/// own (`router.session()`), which is exactly what makes the router
+/// itself lock-free on the data plane.
+pub struct RouterSession<'r> {
+    router: &'r InferenceRouter,
+    sessions: BTreeMap<String, Box<dyn Session>>,
+}
+
+impl RouterSession<'_> {
+    /// Get-or-create the cached session for `name`.
+    fn session_for(
+        &mut self,
+        name: &str,
+    ) -> Result<&mut Box<dyn Session>, InferenceError> {
+        if !self.sessions.contains_key(name) {
+            let backend = self.router.backends.get(name).ok_or_else(|| {
+                InferenceError::BackendUnavailable {
+                    backend: name.to_string(),
+                    reason: "unregistered".into(),
+                }
+            })?;
+            let session = backend.session()?;
+            self.sessions.insert(name.to_string(), session);
+        }
+        Ok(self.sessions.get_mut(name).unwrap())
+    }
+
+    /// After a backend fault the cached session may hold corrupted
+    /// mid-request state — drop it so the next attempt starts fresh.
+    fn retire_on_fault(&mut self, name: &str, e: &InferenceError) {
+        if e.is_backend_fault() {
+            self.sessions.remove(name);
+        }
+    }
 
     /// Route one inference into a caller-provided buffer; returns the
     /// backend that served it. Backends whose `out_dim` does not match
     /// `out.len()` are skipped as failures. (The zero-allocation
-    /// contract applies to `Backend::infer_into`; the router's own
+    /// contract applies to `Session::infer_into`; the router's own
     /// ranking bookkeeping is control-plane and may allocate.)
     pub fn infer_into(
         &mut self,
@@ -185,16 +247,24 @@ impl InferenceRouter {
         out: &mut [f32],
     ) -> Result<String, InferenceError> {
         let mut failures = Vec::new();
-        for name in self.ranked()? {
-            let t = Instant::now();
-            let backend = self.backends.get_mut(&name).unwrap();
-            match backend.infer_into(x, out) {
+        for name in self.router.ranked()? {
+            // Start the clock only once the session exists: lazy
+            // session minting (an ST image restore + first-scan weight
+            // load can be milliseconds) must not skew the backend's
+            // latency ranking.
+            let mut t = Instant::now();
+            let r = self.session_for(&name).and_then(|s| {
+                t = Instant::now();
+                s.infer_into(x, out)
+            });
+            match r {
                 Ok(()) => {
-                    self.record_ok(&name, t, 1);
+                    self.router.record_ok(&name, t, 1);
                     return Ok(name);
                 }
                 Err(e) => {
-                    self.record_err(&name, &e);
+                    self.router.record_err(&name, &e);
+                    self.retire_on_fault(&name, &e);
                     failures.push((name, e.to_string()));
                 }
             }
@@ -210,17 +280,21 @@ impl InferenceRouter {
     ) -> Result<(String, Vec<f32>), InferenceError> {
         let mut failures = Vec::new();
         let mut out = Vec::new();
-        for name in self.ranked()? {
-            let t = Instant::now();
-            let backend = self.backends.get_mut(&name).unwrap();
-            out.resize(backend.spec().out_dim, 0.0);
-            match backend.infer_into(x, &mut out) {
+        for name in self.router.ranked()? {
+            let mut t = Instant::now();
+            let r = self.session_for(&name).and_then(|s| {
+                out.resize(s.spec().out_dim, 0.0);
+                t = Instant::now();
+                s.infer_into(x, &mut out)
+            });
+            match r {
                 Ok(()) => {
-                    self.record_ok(&name, t, 1);
+                    self.router.record_ok(&name, t, 1);
                     return Ok((name, out));
                 }
                 Err(e) => {
-                    self.record_err(&name, &e);
+                    self.router.record_err(&name, &e);
+                    self.retire_on_fault(&name, &e);
                     failures.push((name, e.to_string()));
                 }
             }
@@ -229,23 +303,27 @@ impl InferenceRouter {
     }
 
     /// Route a batch (`n` row-major inputs → `n` outputs) through one
-    /// backend, falling back per policy like [`InferenceRouter::infer`].
+    /// backend, falling back per policy like [`RouterSession::infer`].
     pub fn infer_batch_into(
         &mut self,
         xs: &[f32],
         out: &mut [f32],
     ) -> Result<(String, usize), InferenceError> {
         let mut failures = Vec::new();
-        for name in self.ranked()? {
-            let t = Instant::now();
-            let backend = self.backends.get_mut(&name).unwrap();
-            match backend.infer_batch(xs, out) {
+        for name in self.router.ranked()? {
+            let mut t = Instant::now();
+            let r = self.session_for(&name).and_then(|s| {
+                t = Instant::now();
+                s.infer_batch(xs, out)
+            });
+            match r {
                 Ok(n) => {
-                    self.record_ok(&name, t, n as u64);
+                    self.router.record_ok(&name, t, n as u64);
                     return Ok((name, n));
                 }
                 Err(e) => {
-                    self.record_err(&name, &e);
+                    self.router.record_err(&name, &e);
+                    self.retire_on_fault(&name, &e);
                     failures.push((name, e.to_string()));
                 }
             }
@@ -257,7 +335,9 @@ impl InferenceRouter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::{EngineBackend, ModelSpec};
+    use std::sync::Arc;
+
+    use crate::api::{Backend, EngineBackend, ModelSpec};
     use crate::engine::{Act, Layer, Model};
     use crate::util::prop::{prop_assert, prop_check};
 
@@ -270,8 +350,21 @@ mod tests {
         )])
     }
 
+    /// A backend whose sessions sleep before serving.
     struct SlowBackend(EngineBackend, std::time::Duration);
     impl Backend for SlowBackend {
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+        fn spec(&self) -> ModelSpec {
+            self.0.spec()
+        }
+        fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+            Ok(Box::new(SlowSession(self.0.session()?, self.1)))
+        }
+    }
+    struct SlowSession(Box<dyn Session>, std::time::Duration);
+    impl Session for SlowSession {
         fn name(&self) -> &'static str {
             "slow"
         }
@@ -288,9 +381,21 @@ mod tests {
         }
     }
 
-    /// A backend that always fails mid-execution, instantly.
+    /// A backend whose sessions always fail mid-execution, instantly.
     struct FailingBackend;
     impl Backend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+        fn spec(&self) -> ModelSpec {
+            ModelSpec::dense_f32(2, 2)
+        }
+        fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+            Ok(Box::new(FailingSession))
+        }
+    }
+    struct FailingSession;
+    impl Session for FailingSession {
         fn name(&self) -> &'static str {
             "failing"
         }
@@ -312,10 +417,11 @@ mod tests {
     #[test]
     fn pinned_policy_routes_to_pinned() {
         let mut r = InferenceRouter::new(RoutePolicy::Pinned);
-        r.register("a", Box::new(EngineBackend::new(tiny_model(1.0))));
-        r.register("b", Box::new(EngineBackend::new(tiny_model(2.0))));
+        r.register("a", Arc::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("b", Arc::new(EngineBackend::new(tiny_model(2.0))));
         r.pinned = Some("b".to_string());
-        let (name, out) = r.infer(&[1.0, 1.0]).unwrap();
+        let mut sess = r.session();
+        let (name, out) = sess.infer(&[1.0, 1.0]).unwrap();
         assert_eq!(name, "b");
         assert_eq!(out, vec![4.0, 4.0]);
     }
@@ -325,17 +431,18 @@ mod tests {
         let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
         r.register(
             "slow",
-            Box::new(SlowBackend(
+            Arc::new(SlowBackend(
                 EngineBackend::new(tiny_model(1.0)),
                 std::time::Duration::from_millis(8),
             )),
         );
-        r.register("fast", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("fast", Arc::new(EngineBackend::new(tiny_model(1.0))));
+        let mut sess = r.session();
         // Exploration touches both; afterwards all routes go fast.
         for _ in 0..6 {
-            r.infer(&[1.0, 1.0]).unwrap();
+            sess.infer(&[1.0, 1.0]).unwrap();
         }
-        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        let (name, _) = sess.infer(&[1.0, 1.0]).unwrap();
         assert_eq!(name, "fast");
         assert!(r.stats("slow").unwrap().requests >= 1);
     }
@@ -346,10 +453,11 @@ mod tests {
         // identical outputs for the same request.
         prop_check(30, |g| {
             let x = [g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0)];
-            let mut a = EngineBackend::new(tiny_model(1.5));
-            let mut b = EngineBackend::new(tiny_model(1.5));
+            let a = EngineBackend::new(tiny_model(1.5));
+            let b = EngineBackend::new(tiny_model(1.5));
             prop_assert(
-                a.infer(&x).unwrap() == b.infer(&x).unwrap(),
+                a.session().unwrap().infer(&x).unwrap()
+                    == b.session().unwrap().infer(&x).unwrap(),
                 "backend divergence",
             )
         });
@@ -357,8 +465,9 @@ mod tests {
 
     #[test]
     fn empty_router_errors() {
-        let mut r = InferenceRouter::new(RoutePolicy::Pinned);
-        match r.infer(&[0.0]) {
+        let r = InferenceRouter::new(RoutePolicy::Pinned);
+        let mut sess = r.session();
+        match sess.infer(&[0.0]) {
             Err(InferenceError::NoBackends) => {}
             other => panic!("want NoBackends, got {other:?}"),
         }
@@ -367,12 +476,13 @@ mod tests {
     #[test]
     fn errors_fall_back_to_next_backend() {
         let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
-        r.register("failing", Box::new(FailingBackend));
-        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("failing", Arc::new(FailingBackend));
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(1.0))));
+        let mut sess = r.session();
         // Every request is served despite the failing backend; by
         // exploration order "failing" is tried (and penalized) first.
         for _ in 0..5 {
-            let (name, out) = r.infer(&[1.0, 1.0]).unwrap();
+            let (name, out) = sess.infer(&[1.0, 1.0]).unwrap();
             assert_eq!(name, "good");
             assert_eq!(out, vec![2.0, 2.0]);
         }
@@ -383,19 +493,19 @@ mod tests {
     #[test]
     fn pinned_unset_still_serves_from_ranked_list() {
         let mut r = InferenceRouter::new(RoutePolicy::Pinned);
-        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(1.0))));
         // pinned left at None: a config gap, not a request failure.
-        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        let (name, _) = r.session().infer(&[1.0, 1.0]).unwrap();
         assert_eq!(name, "good");
     }
 
     #[test]
     fn pinned_falls_back_when_pinned_fails() {
         let mut r = InferenceRouter::new(RoutePolicy::Pinned);
-        r.register("failing", Box::new(FailingBackend));
-        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("failing", Arc::new(FailingBackend));
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(1.0))));
         r.pinned = Some("failing".to_string());
-        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        let (name, _) = r.session().infer(&[1.0, 1.0]).unwrap();
         assert_eq!(name, "good");
         assert_eq!(r.stats("failing").unwrap().errors, 1);
     }
@@ -406,10 +516,11 @@ mod tests {
         // (infinite→unset) mean and could be re-picked forever; with
         // the penalty its score is worse than any honest backend.
         let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
-        r.register("failing", Box::new(FailingBackend));
-        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("failing", Arc::new(FailingBackend));
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(1.0))));
+        let mut sess = r.session();
         for _ in 0..3 {
-            r.infer(&[1.0, 1.0]).unwrap();
+            sess.infer(&[1.0, 1.0]).unwrap();
         }
         let flaky = r.stats("failing").unwrap();
         let good = r.stats("good").unwrap();
@@ -423,9 +534,10 @@ mod tests {
     #[test]
     fn caller_shape_bug_does_not_penalize_backends() {
         let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
-        r.register("good", Box::new(EngineBackend::new(tiny_model(1.0))));
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(1.0))));
+        let mut sess = r.session();
         // Wrong input length: a caller bug, not a backend fault.
-        assert!(r.infer(&[1.0, 2.0, 3.0]).is_err());
+        assert!(sess.infer(&[1.0, 2.0, 3.0]).is_err());
         let s = r.stats("good").unwrap();
         assert_eq!(s.errors, 1);
         assert_eq!(s.faults, 0);
@@ -436,16 +548,16 @@ mod tests {
             "a caller bug is not a latency signal"
         );
         // The backend still serves and ranks normally afterwards.
-        let (name, _) = r.infer(&[1.0, 1.0]).unwrap();
+        let (name, _) = sess.infer(&[1.0, 1.0]).unwrap();
         assert_eq!(name, "good");
     }
 
     #[test]
     fn all_failing_reports_every_attempt() {
         let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
-        r.register("f1", Box::new(FailingBackend));
-        r.register("f2", Box::new(FailingBackend));
-        match r.infer(&[1.0, 1.0]) {
+        r.register("f1", Arc::new(FailingBackend));
+        r.register("f2", Arc::new(FailingBackend));
+        match r.session().infer(&[1.0, 1.0]) {
             Err(InferenceError::AllBackendsFailed { failures }) => {
                 assert_eq!(failures.len(), 2);
             }
@@ -456,10 +568,27 @@ mod tests {
     #[test]
     fn infer_into_routes_without_allocating_output() {
         let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
-        r.register("good", Box::new(EngineBackend::new(tiny_model(3.0))));
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(3.0))));
+        let mut sess = r.session();
         let mut out = [0.0f32; 2];
-        let name = r.infer_into(&[1.0, 1.0], &mut out).unwrap();
+        let name = sess.infer_into(&[1.0, 1.0], &mut out).unwrap();
         assert_eq!(name, "good");
         assert_eq!(out, [6.0, 6.0]);
+    }
+
+    #[test]
+    fn concurrent_router_sessions_share_stats() {
+        // Two sessions over one shared router: both serve, stats
+        // aggregate under the lock. (The heavy multi-thread version
+        // lives in tests/concurrency.rs.)
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(1.0))));
+        let mut s1 = r.session();
+        let mut s2 = r.session();
+        for _ in 0..4 {
+            s1.infer(&[1.0, 1.0]).unwrap();
+            s2.infer(&[1.0, 1.0]).unwrap();
+        }
+        assert_eq!(r.stats("good").unwrap().requests, 8);
     }
 }

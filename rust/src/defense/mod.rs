@@ -1,15 +1,17 @@
 //! The §7 on-PLC anomaly-detection application: sliding window over
 //! (TB0, Wd) ADC readings → 400-feature vector → classifier →
-//! debounced detection, behind the pluggable [`crate::api::Backend`]
+//! debounced detection, behind the pluggable [`crate::api::Session`]
 //! inference contract.
 //!
-//! This module is a pure *consumer* of the inference API — the trait
+//! This module is a pure *consumer* of the inference API — the traits
 //! and the backend adapters live in [`crate::api`] (historically they
-//! were defined here; see `API.md` for migration notes).
+//! were defined here; see `API.md` for migration notes). A detector
+//! owns one [`Session`]; many detectors can watch many streams over
+//! one shared backend.
 
 use std::collections::VecDeque;
 
-use crate::api::{Backend, InferenceError};
+use crate::api::{InferenceError, Session};
 
 /// Window length per feature (paper: 10 Hz x 20 s).
 pub const WINDOW: usize = 200;
@@ -70,22 +72,24 @@ impl SlidingWindow {
 /// classifications (a window-based model needs several malicious
 /// samples before flagging — the paper's ~5 s detection latency).
 pub struct Detector {
-    pub backend: Box<dyn Backend>,
+    pub session: Box<dyn Session>,
     pub window: SlidingWindow,
     pub threshold: u32,
     consecutive: u32,
     features: Vec<f32>,
-    /// Preallocated logit buffer sized to the backend's `out_dim`
+    /// Preallocated logit buffer sized to the model's `out_dim`
     /// (`observe` is on the scan-cycle hot path: no per-call
     /// allocation).
     logits: Vec<f32>,
 }
 
 impl Detector {
-    pub fn new(backend: Box<dyn Backend>, threshold: u32) -> Detector {
-        let out_dim = backend.spec().out_dim;
+    /// Detector over one inference session (mint it from a shared
+    /// backend: `Detector::new(backend.session()?, 5)`).
+    pub fn new(session: Box<dyn Session>, threshold: u32) -> Detector {
+        let out_dim = session.spec().out_dim;
         Detector {
-            backend,
+            session,
             window: SlidingWindow::new(),
             threshold,
             consecutive: 0,
@@ -116,7 +120,7 @@ impl Detector {
             return Ok(None);
         }
         self.window.fill_features(&mut self.features);
-        self.backend.infer_into(&self.features, &mut self.logits)?;
+        self.session.infer_into(&self.features, &mut self.logits)?;
         let attack = self.logits[1] > self.logits[0];
         if attack {
             self.consecutive += 1;
@@ -130,7 +134,7 @@ impl Detector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::EngineBackend;
+    use crate::api::{Backend, EngineBackend};
     use crate::engine::{Act, Layer, Model};
 
     #[test]
@@ -174,8 +178,10 @@ mod tests {
 
     #[test]
     fn detector_debounce_and_fire() {
-        let mut det =
-            Detector::new(Box::new(EngineBackend::new(threshold_model())), 3);
+        let mut det = Detector::new(
+            EngineBackend::new(threshold_model()).session().unwrap(),
+            3,
+        );
         // Warm the window with wd = 20 (mean 20 > 10: benign).
         let mut fired = false;
         for _ in 0..WINDOW + 10 {
@@ -206,7 +212,8 @@ mod tests {
             FEATURES,
             Act::None,
         )]);
-        let mut det = Detector::new(Box::new(EngineBackend::new(m)), 3);
+        let mut det =
+            Detector::new(EngineBackend::new(m).session().unwrap(), 3);
         // Misconfiguration surfaces on the very first observation, not
         // after the window warms up.
         match det.observe(1.0, 1.0) {

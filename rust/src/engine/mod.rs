@@ -14,4 +14,4 @@ pub mod layers;
 pub mod model;
 
 pub use layers::{Act, Layer};
-pub use model::{Cursor, Model};
+pub use model::{Activations, Cursor, Model};

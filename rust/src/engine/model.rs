@@ -1,17 +1,57 @@
 //! Sequential model executor with preallocated buffers (no allocation
 //! on the inference hot path) and chunk-resumable evaluation for §6.3
 //! multipart inference.
+//!
+//! The weights ([`Model`]) and the mutable evaluation scratch
+//! ([`Activations`]) are split: every inference entry point has a
+//! `&self` variant taking external activations
+//! ([`Model::infer_with`] / [`Model::infer_partial_with`]), so one
+//! `Arc<Model>` serves any number of concurrent sessions, each owning
+//! its own `Activations`. The historical `&mut self` methods remain as
+//! thin wrappers over a model-owned scratch for single-threaded use.
 
 use super::layers::Layer;
 
-/// A sequential ICSML model on the native engine.
-#[derive(Debug, Clone)]
-pub struct Model {
-    layers: Vec<Layer>,
-    /// Ping-pong activation buffers, preallocated to the max layer dim.
+/// The mutable evaluation state of one in-flight model evaluation:
+/// ping-pong activation buffers + the quantization scratch. Per
+/// session/thread; the model itself stays immutable and shared.
+#[derive(Debug, Clone, Default)]
+pub struct Activations {
     buf_a: Vec<f32>,
     buf_b: Vec<f32>,
     scratch: Vec<i32>,
+}
+
+impl Activations {
+    /// Activations pre-sized for `model` (the zero-alloc hot path
+    /// requires the buffers to be grown before the first call).
+    pub fn for_model(model: &Model) -> Activations {
+        let mut a = Activations::default();
+        a.ensure(model.max_dim);
+        a
+    }
+
+    #[inline]
+    fn ensure(&mut self, dim: usize) {
+        if self.buf_a.len() < dim {
+            self.buf_a.resize(dim, 0.0);
+            self.buf_b.resize(dim, 0.0);
+        }
+    }
+}
+
+/// A sequential ICSML model on the native engine. Weights are
+/// immutable after construction (`&self` inference via
+/// [`Model::infer_with`]); the lazily-populated scratch only backs the
+/// `&mut self` convenience wrappers, so a shared `Arc<Model>` that is
+/// only ever used through sessions carries no per-call buffers.
+#[derive(Debug, Clone)]
+pub struct Model {
+    layers: Vec<Layer>,
+    max_dim: usize,
+    /// `None` until the first `&mut self` inference call; sessions
+    /// never touch it (they own their [`Activations`]).
+    acts: Option<Activations>,
 }
 
 /// A resumable position inside a model evaluation: `(layer, next_row)`.
@@ -37,12 +77,7 @@ impl Model {
             .flat_map(|l| [l.in_dim(), l.out_dim()])
             .max()
             .unwrap();
-        Model {
-            layers,
-            buf_a: vec![0.0; max_dim],
-            buf_b: vec![0.0; max_dim],
-            scratch: Vec::new(),
-        }
+        Model { layers, max_dim, acts: None }
     }
 
     pub fn layers(&self) -> &[Layer] {
@@ -62,34 +97,51 @@ impl Model {
         self.layers.iter().map(Layer::macs).sum()
     }
 
-    /// Single-shot inference into a caller-provided buffer — the
-    /// allocation-free hot path (`out.len()` must equal
+    /// Single-shot inference into a caller-provided buffer using
+    /// caller-owned [`Activations`] — the allocation-free, `&self`
+    /// (thread-shareable) hot path (`out.len()` must equal
     /// [`Model::out_dim`]).
-    pub fn infer_into(&mut self, x: &[f32], out: &mut [f32]) {
+    pub fn infer_with(
+        &self,
+        acts: &mut Activations,
+        x: &[f32],
+        out: &mut [f32],
+    ) {
         assert_eq!(x.len(), self.in_dim());
         assert_eq!(out.len(), self.out_dim());
-        self.buf_a[..x.len()].copy_from_slice(x);
+        acts.ensure(self.max_dim);
+        acts.buf_a[..x.len()].copy_from_slice(x);
         let mut cur_len = x.len();
         let n_layers = self.layers.len();
         for i in 0..n_layers {
             let l = &self.layers[i];
             let out_len = l.out_dim();
             let (src, dst) = if i % 2 == 0 {
-                (&self.buf_a, &mut self.buf_b)
+                (&acts.buf_a, &mut acts.buf_b)
             } else {
-                (&self.buf_b, &mut self.buf_a)
+                (&acts.buf_b, &mut acts.buf_a)
             };
             l.eval_rows(
                 0,
                 l.chunk_rows(),
                 &src[..cur_len],
                 &mut dst[..out_len],
-                &mut self.scratch,
+                &mut acts.scratch,
             );
             cur_len = out_len;
         }
-        let src = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
+        let src = if n_layers % 2 == 0 { &acts.buf_a } else { &acts.buf_b };
         out.copy_from_slice(&src[..cur_len]);
+    }
+
+    /// Single-shot inference via the model-owned scratch (convenience
+    /// for single-threaded callers; sessions use [`Model::infer_with`]).
+    /// The scratch is created on the first call and reused afterwards,
+    /// so steady-state calls stay allocation-free.
+    pub fn infer_into(&mut self, x: &[f32], out: &mut [f32]) {
+        let mut acts = self.acts.take().unwrap_or_default();
+        self.infer_with(&mut acts, x, out);
+        self.acts = Some(acts);
     }
 
     /// Single-shot inference (allocating wrapper over
@@ -125,14 +177,33 @@ impl Model {
     pub fn infer_partial_into(
         &mut self,
         x: &[f32],
+        cursor: Cursor,
+        row_budget: usize,
+        out: &mut [f32],
+    ) -> (Cursor, bool) {
+        let mut acts = self.acts.take().unwrap_or_default();
+        let r = self.infer_partial_with(&mut acts, x, cursor, row_budget, out);
+        self.acts = Some(acts);
+        r
+    }
+
+    /// Resumable inference over caller-owned [`Activations`] — the
+    /// `&self` session variant of [`Model::infer_partial_into`]. The
+    /// suspended state between calls lives entirely in `acts`, so
+    /// independent sessions over one shared model never interfere.
+    pub fn infer_partial_with(
+        &self,
+        acts: &mut Activations,
+        x: &[f32],
         mut cursor: Cursor,
         mut row_budget: usize,
         out: &mut [f32],
     ) -> (Cursor, bool) {
         assert_eq!(x.len(), self.in_dim());
         assert_eq!(out.len(), self.out_dim());
+        acts.ensure(self.max_dim);
         if cursor.layer == 0 && cursor.row == 0 {
-            self.buf_a[..x.len()].copy_from_slice(x);
+            acts.buf_a[..x.len()].copy_from_slice(x);
         }
         let n_layers = self.layers.len();
         while cursor.layer < n_layers && row_budget > 0 {
@@ -143,16 +214,16 @@ impl Model {
             let cur_len = l.in_dim();
             let out_len = l.out_dim();
             let (src, dst) = if i % 2 == 0 {
-                (&self.buf_a, &mut self.buf_b)
+                (&acts.buf_a, &mut acts.buf_b)
             } else {
-                (&self.buf_b, &mut self.buf_a)
+                (&acts.buf_b, &mut acts.buf_a)
             };
             l.eval_rows(
                 cursor.row,
                 cursor.row + take,
                 &src[..cur_len],
                 &mut dst[..out_len],
-                &mut self.scratch,
+                &mut acts.scratch,
             );
             cursor.row += take;
             row_budget -= take;
@@ -163,7 +234,8 @@ impl Model {
         }
         if cursor.layer == n_layers {
             let cur_len = self.out_dim();
-            let src = if n_layers % 2 == 0 { &self.buf_a } else { &self.buf_b };
+            let src =
+                if n_layers % 2 == 0 { &acts.buf_a } else { &acts.buf_b };
             out.copy_from_slice(&src[..cur_len]);
             (cursor, true)
         } else {
@@ -282,6 +354,38 @@ mod tests {
         let mut out = [0.0f32; 2];
         m.infer_into(&x, &mut out);
         assert_eq!(out.to_vec(), want);
+    }
+
+    #[test]
+    fn infer_with_matches_infer_into_and_sessions_are_independent() {
+        let mut m = toy_model();
+        let xa = [0.5, -0.25, 1.0, 2.0];
+        let xb = [-1.0, 0.75, 0.1, -0.4];
+        let want_a = m.infer(&xa);
+        let want_b = m.infer(&xb);
+        // Two activation sets over the same immutable model, with an
+        // interleaved partial evaluation in one of them: neither may
+        // observe the other.
+        let mut acts1 = Activations::for_model(&m);
+        let mut acts2 = Activations::for_model(&m);
+        let mut out_a = [0.0f32; 2];
+        let mut out_b = [0.0f32; 2];
+        let (c, done) = m.infer_partial_with(
+            &mut acts1,
+            &xa,
+            Cursor::default(),
+            2,
+            &mut out_a,
+        );
+        assert!(!done);
+        m.infer_with(&mut acts2, &xb, &mut out_b);
+        assert_eq!(out_b.to_vec(), want_b);
+        // Resume the suspended session; it must be unharmed.
+        let total = m.total_rows();
+        let (_, done) =
+            m.infer_partial_with(&mut acts1, &xa, c, total, &mut out_a);
+        assert!(done);
+        assert_eq!(out_a.to_vec(), want_a);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::api::Backend as _;
+use crate::api::Session as _;
 use crate::defense::Detector;
 use crate::msf::{Attack, Simulator};
 use crate::plc::{HwProfile, ScanCycle};
@@ -84,7 +84,7 @@ impl HitlRunner {
             if let Some(det) = self.detector.as_mut() {
                 if let Some(fire) = det.observe(r.tb0_adc, r.wd_adc)? {
                     detected = fire;
-                    if let Some(m) = det.backend.last_meter() {
+                    if let Some(m) = det.session.last_meter() {
                         ml_meter = m;
                     }
                 }
@@ -139,7 +139,7 @@ impl HitlRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::EngineBackend;
+    use crate::api::{Backend, EngineBackend};
     use crate::defense::{Detector, FEATURES, WINDOW};
     use crate::engine::{Act, Layer, Model};
     use crate::msf::AttackFamily;
@@ -153,7 +153,7 @@ mod tests {
         }
         let b = vec![0.0f32, 17.0];
         let m = Model::new(vec![Layer::dense(w, b, FEATURES, Act::None)]);
-        Detector::new(Box::new(EngineBackend::new(m)), 5)
+        Detector::new(EngineBackend::new(m).session().unwrap(), 5)
     }
 
     #[test]

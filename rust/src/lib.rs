@@ -6,12 +6,14 @@
 //!
 //! The crate hosts every substrate the paper depends on (see DESIGN.md):
 //!
-//! * [`api`] — **the inference contract**: the [`api::Backend`] trait
-//!   (allocation-free `infer_into`, batch-first `infer_batch`, typed
-//!   [`api::InferenceError`], [`api::ModelSpec`] capability discovery)
-//!   plus the [`api::PartialBackend`] resumable sub-API for §6.3
-//!   multipart inference. Every substrate below implements it; every
-//!   consumer is written against it. See `API.md`.
+//! * [`api`] — **the inference contract**, two-level: [`api::Backend`]
+//!   is the immutable, thread-shareable model handle; [`api::Session`]
+//!   is per-request mutable state it mints (allocation-free
+//!   `infer_into`, batch-first `infer_batch`, the [`api::PartialSession`]
+//!   resumable sub-API for §6.3 multipart inference, typed
+//!   [`api::InferenceError`], [`api::ModelSpec`] capability
+//!   discovery). Every substrate below implements it; every consumer
+//!   is written against it. See `API.md`.
 //! * [`st`] — an IEC 61131-3 Structured Text front end with two
 //!   execution tiers: the tree-walking [`st::Interp`] oracle and the
 //!   register-bytecode [`st::Vm`] fast tier, both enforcing the
@@ -33,8 +35,12 @@
 //! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas models
 //!   (the TFLite-comparator path; served through
 //!   [`runtime::XlaBackend`]).
-//! * [`coordinator`] — backend router with policy fallback + the §6.3
-//!   multipart scheduler, both generic over [`api::Backend`].
+//! * [`coordinator`] — shared backend router (per-caller routing
+//!   sessions, policy fallback) + the §6.3 multipart scheduler, both
+//!   generic over the [`api`] traits.
+//! * [`serve`] — the concurrent serving layer: [`serve::Pool`] shards
+//!   requests across worker threads with per-worker sessions and
+//!   micro-batching over one shared backend.
 
 pub mod api;
 pub mod coordinator;
@@ -47,10 +53,14 @@ pub mod plc;
 pub mod porting;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod st;
 pub mod util;
 
-pub use api::{Backend, InferenceError, ModelSpec, PartialBackend, RowPlan};
+pub use api::{
+    Backend, InferenceError, ModelSpec, PartialSession, RowPlan, Session,
+    SharedBackend,
+};
 
 /// Returns the repository root (assumes `cargo run`/`cargo test` from the
 /// workspace, or the `ICSML_ROOT` env var in deployed settings).

@@ -8,11 +8,15 @@
 //! * `infer`   — classify one eval window on a chosen backend.
 //! * `hitl`    — run the §7 HITL case study (short form; the full
 //!               driver is `examples/desalination_defense.rs`).
-//! * `serve`   — batch-serve eval windows through the router.
+//! * `serve`   — serve eval windows through a `serve::Pool` (shared
+//!               backend, per-worker sessions, micro-batching):
+//!               `--requests N --workers W --batch B [--xla]`.
+
+use std::sync::Arc;
 
 use anyhow::Result;
-use icsml::api::{Backend, EngineBackend, StBackend};
-use icsml::coordinator::{InferenceRouter, RoutePolicy};
+use icsml::api::{Backend, EngineBackend, Session as _, SharedBackend,
+                 StBackend};
 use icsml::defense::Detector;
 use icsml::hitl::HitlRunner;
 use icsml::msf::{Attack, AttackFamily};
@@ -20,6 +24,7 @@ use icsml::plc::{profiles::KERAS_MODEL_SIZES, HwProfile, PLC_SPECS};
 use icsml::porting::{self, codegen::CodegenOptions, Manifest};
 use icsml::quant::{memory_requirements, Scheme};
 use icsml::runtime::{Runtime, XlaBackend};
+use icsml::serve::{Pool, PoolConfig};
 use icsml::util::bench::Table;
 use icsml::util::binio;
 use icsml::util::cli::Args;
@@ -43,7 +48,7 @@ fn main() -> Result<()> {
                  [options]\n  port  --model classifier [--out FILE] \
                  [--no-fused]\n  infer --index N [--st|--engine|--xla]\n  \
                  hitl  --steps N --attack combined --magnitude 0.5\n  \
-                 serve --requests N"
+                 serve --requests N --workers W --batch B [--xla]"
             );
             Ok(())
         }
@@ -159,29 +164,33 @@ fn port(args: &Args) -> Result<()> {
 fn infer(args: &Args) -> Result<()> {
     let m = Manifest::load(&icsml::artifacts_dir())?;
     let spec = m.model("classifier")?;
+    let (in_dim, out_dim) = (spec.in_dim(), spec.out_dim());
+    anyhow::ensure!(out_dim >= 2, "classifier needs >= 2 logits");
     let idx = args.opt_usize("index", 0);
-    let x = binio::read_f32(
-        &m.root
-            .join(m.dataset.expect("eval_windows").as_str().unwrap()),
-    )?;
-    let xi = &x[idx * 400..(idx + 1) * 400];
+    let x = binio::read_f32(&m.dataset_path("eval_windows")?)?;
+    anyhow::ensure!(
+        (idx + 1) * in_dim <= x.len(),
+        "window {idx} out of range ({} windows in dataset)",
+        x.len() / in_dim.max(1)
+    );
+    let xi = &x[idx * in_dim..(idx + 1) * in_dim];
 
     let (name, out): (&str, Vec<f32>) = if args.has("st") {
         let src = porting::generate_st_program(spec, &CodegenOptions::default());
         let mut it =
             icsml::icsml_st::load(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
         it.io_dir = m.root.join(&spec.weights_dir);
-        let mut b = StBackend::new(it, "MAIN")?;
-        ("st", b.infer(xi)?)
+        let b = StBackend::new(it, "MAIN")?;
+        ("st", b.session()?.infer(xi)?)
     } else if args.has("xla") {
         let rt = Runtime::cpu()?;
         let exe = rt.load_hlo(&m.hlo_path("classifier_b1")?)?;
-        let mut b = XlaBackend::new(exe, 400, 2);
-        ("xla", b.infer(xi)?)
+        let b = XlaBackend::new(exe, in_dim, out_dim);
+        ("xla", b.session()?.infer(xi)?)
     } else {
-        let mut b =
+        let b =
             EngineBackend::new(porting::load_engine_model(&m.root, spec)?);
-        ("engine", b.infer(xi)?)
+        ("engine", b.session()?.infer(xi)?)
     };
     let verdict = if out[1] > out[0] { "ATTACK" } else { "normal" };
     println!("backend={name} window={idx} logits={out:?} -> {verdict}");
@@ -198,7 +207,8 @@ fn hitl(args: &Args) -> Result<()> {
     let start = args.opt_usize("start", 4360) as u64;
 
     let engine = porting::load_engine_model(&m.root, spec)?;
-    let detector = Detector::new(Box::new(EngineBackend::new(engine)), 5);
+    let detector =
+        Detector::new(EngineBackend::new(engine).session()?, 5);
     let runner = HitlRunner::new(
         7,
         true,
@@ -231,41 +241,63 @@ fn hitl(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let m = Manifest::load(&icsml::artifacts_dir())?;
     let spec = m.model("classifier")?;
+    // Dims come from the manifest spec — nothing is hardcoded to the
+    // 400-feature classifier any more.
+    let (in_dim, out_dim) = (spec.in_dim(), spec.out_dim());
+    anyhow::ensure!(out_dim >= 2, "classifier needs >= 2 logits");
     let n = args.opt_usize("requests", 100);
-    let x = binio::read_f32(
-        &m.root
-            .join(m.dataset.expect("eval_windows").as_str().unwrap()),
-    )?;
-    let total = x.len() / 400;
-
-    let mut router = InferenceRouter::new(RoutePolicy::FastestObserved);
-    router.register(
-        "engine",
-        Box::new(EngineBackend::new(porting::load_engine_model(
-            &m.root, spec,
-        )?)),
+    let workers = args.opt_usize("workers", 4);
+    let batch = args.opt_usize("batch", 8);
+    let x = binio::read_f32(&m.dataset_path("eval_windows")?)?;
+    anyhow::ensure!(
+        x.len() >= in_dim,
+        "eval dataset smaller than one input window"
     );
-    if let Ok(rt) = Runtime::cpu() {
-        if let Ok(exe) = rt.load_hlo(&m.hlo_path("classifier_b1")?) {
-            router.register("xla", Box::new(XlaBackend::new(exe, 400, 2)));
-        }
-    }
-    let mut attacks = 0;
-    for i in 0..n {
-        let xi = &x[(i % total) * 400..(i % total + 1) * 400];
-        let (_, out) = router.infer(xi)?;
+    let total = x.len() / in_dim;
+
+    let backend: SharedBackend = if args.has("xla") {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo(&m.hlo_path("classifier_b1")?)?;
+        Arc::new(XlaBackend::new(exe, in_dim, out_dim))
+    } else {
+        Arc::new(EngineBackend::new(porting::load_engine_model(
+            &m.root, spec,
+        )?))
+    };
+    println!(
+        "serving {n} requests on backend '{}' — {workers} workers, \
+         micro-batch {batch}",
+        backend.name()
+    );
+
+    let pool = Pool::new(backend, PoolConfig { workers, max_batch: batch });
+    let t0 = std::time::Instant::now();
+    // Pipelined submission: all tickets in flight keeps every worker
+    // busy and gives micro-batching something to coalesce.
+    let tickets: Vec<_> = (0..n)
+        .map(|i| {
+            let w = i % total;
+            pool.submit(&x[w * in_dim..(w + 1) * in_dim])
+        })
+        .collect();
+    let mut attacks = 0u64;
+    for t in tickets {
+        let out = t.wait()?;
         if out[1] > out[0] {
             attacks += 1;
         }
     }
-    println!("served {n} requests: {attacks} flagged as attacks");
-    for name in router.backend_names() {
-        let s = router.stats(&name).unwrap();
-        println!(
-            "  {name}: {} requests, mean {:.1} µs",
-            s.requests,
-            s.mean_us()
-        );
-    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n} requests in {secs:.3} s ({:.0} req/s): {attacks} \
+         flagged as attacks",
+        n as f64 / secs.max(1e-9)
+    );
+    println!(
+        "  {} batch calls (mean batch {:.2}); per-worker shares: {:?}",
+        pool.batches(),
+        pool.served() as f64 / pool.batches().max(1) as f64,
+        pool.worker_served()
+    );
     Ok(())
 }

@@ -30,6 +30,20 @@ pub struct ModelSpec {
     pub report: Json,
 }
 
+impl ModelSpec {
+    /// Flattened input feature count, from the manifest's layer sizes.
+    /// (`Manifest::load` validates `sizes` is non-empty, so consumers
+    /// never hardcode dims like the old `x.len() / 400`.)
+    pub fn in_dim(&self) -> usize {
+        self.sizes.first().copied().unwrap_or(0)
+    }
+
+    /// Flattened output (logit) count.
+    pub fn out_dim(&self) -> usize {
+        self.sizes.last().copied().unwrap_or(0)
+    }
+}
+
 /// Parsed artifacts manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -79,7 +93,8 @@ impl Manifest {
                 })
                 .collect();
             anyhow::ensure!(
-                layers.len() + 1 == sizes.len()
+                !sizes.is_empty()
+                    && layers.len() + 1 == sizes.len()
                     && activations.len() == layers.len(),
                 "model {name}: inconsistent manifest"
             );
@@ -133,6 +148,20 @@ impl Manifest {
             .get(name)
             .map(|rel| self.root.join(rel))
             .ok_or_else(|| anyhow::anyhow!("manifest has no HLO {name}"))
+    }
+
+    /// Resolve a `dataset` entry (e.g. `"eval_windows"`) to an
+    /// absolute path — a typed error on a malformed manifest, where
+    /// the old `m.dataset.expect(key).as_str().unwrap()` call sites
+    /// panicked.
+    pub fn dataset_path(&self, key: &str) -> Result<PathBuf> {
+        let entry = self.dataset.get(key).ok_or_else(|| {
+            anyhow::anyhow!("manifest dataset has no entry {key:?}")
+        })?;
+        let rel = entry.as_str().ok_or_else(|| {
+            anyhow::anyhow!("manifest dataset entry {key:?} is not a path")
+        })?;
+        Ok(self.root.join(rel))
     }
 }
 

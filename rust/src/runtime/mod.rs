@@ -9,10 +9,11 @@
 //! rejects; the text parser reassigns ids (see /opt/xla-example).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::api::{Backend, InferenceError, ModelSpec};
+use crate::api::{Backend, InferenceError, ModelSpec, Session};
 
 /// PJRT CPU client wrapper. Create once; compile many executables.
 pub struct Runtime {
@@ -56,6 +57,15 @@ pub struct Executable {
     pub name: String,
 }
 
+// SAFETY: a loaded PJRT executable is immutable after compilation and
+// the PJRT C API is documented thread-safe for execution; the binding
+// wraps a C++ shared_ptr with no Rust-side interior mutability. The
+// Rust binding simply does not declare the markers. Sharing an
+// `Arc<Executable>` across `XlaSession`s matches how PJRT is used from
+// multi-threaded C++ serving code.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
 impl Executable {
     /// Execute with one f32 input tensor; returns the flattened f32
     /// output (AOT lowering uses `return_tuple=True`, so the result is
@@ -87,11 +97,13 @@ impl Executable {
     }
 }
 
-/// Inference backend running an AOT classifier through PJRT.
+/// Inference backend running an AOT classifier through PJRT: an
+/// immutable handle to the compiled executable (shared by every
+/// session via `Arc`).
 ///
 /// The executable's leading dimension is its compiled batch size
 /// (`classifier_b1` → 1) and is **fixed at AOT time** — PJRT rejects
-/// any other shape. [`XlaBackend::infer_batch`] overrides the trait's
+/// any other shape. [`XlaSession::infer_batch`] overrides the trait's
 /// per-row default with true batched execution: whole
 /// `compiled_batch`-sized chunks go through XLA in single calls, and
 /// batches that are not a multiple of it are rejected up front (no
@@ -99,7 +111,7 @@ impl Executable {
 /// single-request `infer_into` is `Unsupported` when
 /// `compiled_batch > 1`.
 pub struct XlaBackend {
-    pub exe: Executable,
+    exe: Arc<Executable>,
     in_dim: usize,
     out_dim: usize,
     compiled_batch: usize,
@@ -107,7 +119,7 @@ pub struct XlaBackend {
 
 impl XlaBackend {
     pub fn new(exe: Executable, in_dim: usize, out_dim: usize) -> XlaBackend {
-        XlaBackend { exe, in_dim, out_dim, compiled_batch: 1 }
+        XlaBackend { exe: Arc::new(exe), in_dim, out_dim, compiled_batch: 1 }
     }
 
     /// Declare the executable's compiled batch dimension (an artifact
@@ -117,6 +129,46 @@ impl XlaBackend {
         self
     }
 
+    /// The shared executable.
+    pub fn executable(&self) -> &Arc<Executable> {
+        &self.exe
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn spec(&self) -> ModelSpec {
+        ModelSpec {
+            batch_granularity: self.compiled_batch,
+            ..ModelSpec::dense_f32(self.in_dim, self.out_dim)
+        }
+    }
+
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+        Ok(Box::new(XlaSession {
+            exe: Arc::clone(&self.exe),
+            in_dim: self.in_dim,
+            out_dim: self.out_dim,
+            compiled_batch: self.compiled_batch,
+        }))
+    }
+}
+
+/// One caller's XLA session. PJRT owns all execution state device-side
+/// per call, so the session is a thin cursor over the shared
+/// executable — it exists so XLA serves through the same
+/// session-shaped API as every other substrate.
+pub struct XlaSession {
+    exe: Arc<Executable>,
+    in_dim: usize,
+    out_dim: usize,
+    compiled_batch: usize,
+}
+
+impl XlaSession {
     fn run_rows(
         &mut self,
         rows: usize,
@@ -143,13 +195,16 @@ impl XlaBackend {
     }
 }
 
-impl Backend for XlaBackend {
+impl Session for XlaSession {
     fn name(&self) -> &'static str {
         "xla"
     }
 
     fn spec(&self) -> ModelSpec {
-        ModelSpec::dense_f32(self.in_dim, self.out_dim)
+        ModelSpec {
+            batch_granularity: self.compiled_batch,
+            ..ModelSpec::dense_f32(self.in_dim, self.out_dim)
+        }
     }
 
     fn infer_into(&mut self, x: &[f32], out: &mut [f32]) -> Result<(), InferenceError> {

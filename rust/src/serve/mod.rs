@@ -1,0 +1,19 @@
+//! Concurrent serving on top of the Engine/Session split.
+//!
+//! The paper frames ICSML as one PLC running one scan loop; the
+//! ROADMAP's north star is a serving system watching *fleets* of
+//! controllers (the deployment model the PLC-security literature
+//! assumes — many detection streams, one inference service). This
+//! module is the first concurrency substrate built on the two-level
+//! API contract: a [`Pool`] shards requests across N worker threads,
+//! each worker owning a private [`crate::api::Session`] over one
+//! shared [`crate::api::Backend`], with opportunistic micro-batching
+//! of queued requests.
+//!
+//! Throughput scaling is measured by `benches/serve_pool.rs`
+//! (`BENCH_serve.json`); bit-identical-to-sequential results are
+//! asserted by `tests/concurrency.rs`.
+
+pub mod pool;
+
+pub use pool::{Pool, PoolConfig, Ticket};

@@ -1,0 +1,417 @@
+//! [`Pool`]: a fixed set of worker threads serving inference requests
+//! from one shared backend.
+//!
+//! Design:
+//!
+//! * **Shared backend, private sessions.** Workers receive an
+//!   `Arc<dyn Backend + Send + Sync>` and mint their [`Session`]
+//!   *inside* the worker thread — sessions are deliberately not
+//!   `Send`, so this is the only sound construction, and it is exactly
+//!   what the Engine/Session split exists for.
+//! * **One shared queue** (`Mutex<Receiver>`): the classic
+//!   work-stealing-free competitive-consumer pool. Fairness comes from
+//!   the OS scheduler; the lock is held only to pop, never to serve.
+//! * **Micro-batching.** After blocking on one request, a worker
+//!   drains up to `max_batch - 1` more without blocking and serves
+//!   them through one [`Session::infer_batch`] call. For the engine
+//!   this is exactly equivalent to sequential `infer_into` (the API
+//!   contract), so batching never changes results — asserted in
+//!   `tests/concurrency.rs`. If a substrate rejects a ragged batch
+//!   (fixed-batch XLA), the worker falls back to per-request serving.
+//! * **No new dependencies**: `std::sync::mpsc` + threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::{Backend, InferenceError, Session, SharedBackend};
+
+/// Pool sizing knobs.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker threads (each with a private session). Clamped to ≥ 1.
+    pub workers: usize,
+    /// Max requests served per `infer_batch` call. Clamped to ≥ 1.
+    pub max_batch: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { workers: 4, max_batch: 8 }
+    }
+}
+
+struct Job {
+    x: Vec<f32>,
+    resp: Sender<Result<Vec<f32>, InferenceError>>,
+}
+
+/// Per-pool counters (atomics: read without stopping the workers).
+#[derive(Default)]
+struct Counters {
+    served: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// A handle to an in-flight request; [`Ticket::wait`] blocks for the
+/// result. Submitting many tickets before waiting keeps every worker
+/// busy (that is the bench's pipelining model).
+pub struct Ticket {
+    rx: Receiver<Result<Vec<f32>, InferenceError>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Vec<f32>, InferenceError> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(InferenceError::BackendUnavailable {
+                backend: "pool".into(),
+                reason: "worker disconnected before replying".into(),
+            })
+        })
+    }
+}
+
+/// The worker pool. Dropping it shuts the queue and joins every
+/// worker.
+pub struct Pool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    counters: Arc<Counters>,
+    worker_served: Arc<Vec<AtomicU64>>,
+    in_dim: usize,
+}
+
+impl Pool {
+    /// Spin up `cfg.workers` threads over one shared backend.
+    pub fn new(backend: SharedBackend, cfg: PoolConfig) -> Pool {
+        let n_workers = cfg.workers.max(1);
+        let max_batch = cfg.max_batch.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let counters = Arc::new(Counters::default());
+        let worker_served: Arc<Vec<AtomicU64>> = Arc::new(
+            (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+        );
+        let in_dim = backend.spec().in_dim;
+        let workers = (0..n_workers)
+            .map(|w| {
+                let backend = Arc::clone(&backend);
+                let rx = Arc::clone(&rx);
+                let counters = Arc::clone(&counters);
+                let worker_served = Arc::clone(&worker_served);
+                std::thread::spawn(move || {
+                    worker_loop(
+                        w,
+                        backend,
+                        rx,
+                        max_batch,
+                        counters,
+                        worker_served,
+                    )
+                })
+            })
+            .collect();
+        Pool {
+            tx: Some(tx),
+            workers,
+            counters,
+            worker_served,
+            in_dim,
+        }
+    }
+
+    /// Enqueue one request; returns immediately with a [`Ticket`].
+    pub fn submit(&self, x: &[f32]) -> Ticket {
+        let (resp, rx) = channel();
+        let job = Job { x: x.to_vec(), resp };
+        if let Some(tx) = &self.tx {
+            // A send error means every worker is gone; the ticket then
+            // reports BackendUnavailable from its closed channel.
+            let _ = tx.send(job);
+        }
+        Ticket { rx }
+    }
+
+    /// Blocking convenience: submit + wait.
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>, InferenceError> {
+        self.submit(x).wait()
+    }
+
+    /// Requests answered successfully so far.
+    pub fn served(&self) -> u64 {
+        self.counters.served.load(Ordering::Relaxed)
+    }
+
+    /// Request groups executed (served / batches = mean group size,
+    /// regardless of whether a group went through `infer_batch` or the
+    /// per-request fallback).
+    pub fn batches(&self) -> u64 {
+        self.counters.batches.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered with an error.
+    pub fn errors(&self) -> u64 {
+        self.counters.errors.load(Ordering::Relaxed)
+    }
+
+    /// Per-worker served counts (shard-balance introspection for the
+    /// bench and tests).
+    pub fn worker_served(&self) -> Vec<u64> {
+        self.worker_served
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// The pool's expected input length (from the backend spec).
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // Closing the channel ends every worker's recv loop.
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn unavailable(reason: &str) -> InferenceError {
+    InferenceError::BackendUnavailable {
+        backend: "pool".into(),
+        reason: reason.to_string(),
+    }
+}
+
+fn worker_loop(
+    w: usize,
+    backend: SharedBackend,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    max_batch: usize,
+    counters: Arc<Counters>,
+    worker_served: Arc<Vec<AtomicU64>>,
+) {
+    // Sessions are minted on the worker thread (they are not Send).
+    // A backend that cannot create sessions still drains the queue,
+    // answering every request with the typed reason.
+    let mut session: Option<Box<dyn Session>> = None;
+    let mut session_err = String::new();
+    match backend.session() {
+        Ok(s) => session = Some(s),
+        Err(e) => session_err = e.to_string(),
+    }
+    let (in_dim, out_dim, granularity) = match &session {
+        Some(s) => {
+            let spec = s.spec();
+            (spec.in_dim, spec.out_dim, spec.batch_granularity.max(1))
+        }
+        None => (0, 0, 1),
+    };
+
+    // Reused across batches: after warmup these hit their high-water
+    // capacity and stop allocating.
+    let mut xs: Vec<f32> = Vec::new();
+    let mut out: Vec<f32> = Vec::new();
+    let mut jobs: Vec<Job> = Vec::new();
+
+    loop {
+        jobs.clear();
+        {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return, // a sibling panicked; shut down
+            };
+            match guard.recv() {
+                Ok(j) => jobs.push(j),
+                Err(_) => return, // pool dropped: queue closed
+            }
+            while jobs.len() < max_batch {
+                match guard.try_recv() {
+                    Ok(j) => jobs.push(j),
+                    Err(TryRecvError::Empty)
+                    | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+        } // queue lock released before any inference work
+
+        let Some(session) = session.as_mut() else {
+            for j in jobs.drain(..) {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = j.resp.send(Err(unavailable(&session_err)));
+            }
+            continue;
+        };
+
+        // Split off malformed requests so one bad client cannot poison
+        // a whole batch.
+        let mut batch: Vec<Job> = Vec::with_capacity(jobs.len());
+        for j in jobs.drain(..) {
+            if j.x.len() == in_dim {
+                batch.push(j);
+            } else {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = j.resp.send(Err(InferenceError::ShapeMismatch {
+                    what: "input",
+                    expected: in_dim,
+                    got: j.x.len(),
+                }));
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+
+        // Fixed-batch substrates (XLA with compiled_batch > 1) can
+        // only execute multiples of their granularity: cut the largest
+        // servable head chunk and answer the remainder with a typed
+        // error up front — single requests are *unservable* there, so
+        // holding them back would strand them, and submitting a ragged
+        // batch would doom the whole group.
+        let head = if granularity > 1 {
+            let m = (batch.len() / granularity) * granularity;
+            for j in batch.drain(m..) {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = j.resp.send(Err(InferenceError::ShapeMismatch {
+                    what: "batch rows (must be a multiple of the \
+                           compiled batch)",
+                    expected: granularity,
+                    got: 1,
+                }));
+            }
+            m
+        } else {
+            batch.len()
+        };
+        if head == 0 {
+            continue;
+        }
+
+        let n = batch.len();
+        let mut group_served = 0u64;
+        let mut served_batched = false;
+        if n > 1 || granularity > 1 {
+            xs.clear();
+            for j in &batch {
+                xs.extend_from_slice(&j.x);
+            }
+            out.clear();
+            out.resize(n * out_dim, 0.0);
+            // Batch path; equivalence with sequential infer_into is
+            // part of the Session contract. If a substrate still
+            // refuses the batch, fall through to the per-request path
+            // below.
+            if session.infer_batch(&xs, &mut out).is_ok() {
+                for (i, j) in batch.drain(..).enumerate() {
+                    group_served += 1;
+                    worker_served[w].fetch_add(1, Ordering::Relaxed);
+                    let _ = j
+                        .resp
+                        .send(Ok(out[i * out_dim..(i + 1) * out_dim].to_vec()));
+                }
+                served_batched = true;
+            }
+        }
+        if !served_batched {
+            for j in batch.drain(..) {
+                out.clear();
+                out.resize(out_dim, 0.0);
+                match session.infer_into(&j.x, &mut out) {
+                    Ok(()) => {
+                        group_served += 1;
+                        worker_served[w].fetch_add(1, Ordering::Relaxed);
+                        let _ = j.resp.send(Ok(out.clone()));
+                    }
+                    Err(e) => {
+                        counters.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = j.resp.send(Err(e));
+                    }
+                }
+            }
+        }
+        // One "batch" per drained group that served anything, whatever
+        // path executed it — so served/batches is a true mean group
+        // size even when a substrate forces per-request fallback.
+        if group_served > 0 {
+            counters.served.fetch_add(group_served, Ordering::Relaxed);
+            counters.batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Backend, EngineBackend};
+    use crate::engine::{Act, Layer, Model};
+
+    fn model() -> Model {
+        Model::new(vec![
+            Layer::dense(
+                (0..8 * 6).map(|i| ((i % 11) as f32) * 0.1 - 0.5).collect(),
+                vec![0.05; 6],
+                8,
+                Act::Relu,
+            ),
+            Layer::dense(
+                (0..6 * 3).map(|i| 0.3 - (i % 4) as f32 * 0.1).collect(),
+                vec![0.0; 3],
+                6,
+                Act::None,
+            ),
+        ])
+    }
+
+    #[test]
+    fn pool_matches_sequential_session() {
+        let backend = Arc::new(EngineBackend::new(model()));
+        let mut reference = backend.session().unwrap();
+        let inputs: Vec<Vec<f32>> = (0..40)
+            .map(|i| {
+                (0..8).map(|k| ((i * 8 + k) as f32 * 0.17).sin()).collect()
+            })
+            .collect();
+        let want: Vec<Vec<f32>> =
+            inputs.iter().map(|x| reference.infer(x).unwrap()).collect();
+
+        let pool =
+            Pool::new(backend, PoolConfig { workers: 3, max_batch: 4 });
+        // Pipelined: all tickets in flight at once.
+        let tickets: Vec<Ticket> =
+            inputs.iter().map(|x| pool.submit(x)).collect();
+        for (t, w) in tickets.into_iter().zip(&want) {
+            let got = t.wait().unwrap();
+            assert_eq!(&got, w, "pool result must be bit-identical");
+        }
+        assert_eq!(pool.served(), 40);
+        assert_eq!(pool.errors(), 0);
+        assert!(pool.batches() <= 40, "batching must coalesce, not inflate");
+        let per_worker = pool.worker_served();
+        assert_eq!(per_worker.iter().sum::<u64>(), 40);
+    }
+
+    #[test]
+    fn pool_reports_shape_mismatch_per_request() {
+        let backend = Arc::new(EngineBackend::new(model()));
+        let pool = Pool::new(backend, PoolConfig::default());
+        match pool.infer(&[0.0; 3]) {
+            Err(InferenceError::ShapeMismatch { expected: 8, got: 3, .. }) => {}
+            other => panic!("want ShapeMismatch, got {other:?}"),
+        }
+        // Healthy traffic still flows afterwards.
+        assert_eq!(pool.infer(&[0.1; 8]).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn pool_shuts_down_cleanly() {
+        let backend = Arc::new(EngineBackend::new(model()));
+        let pool =
+            Pool::new(backend, PoolConfig { workers: 2, max_batch: 2 });
+        assert_eq!(pool.infer(&[0.2; 8]).unwrap().len(), 3);
+        drop(pool); // joins workers; must not hang or panic
+    }
+}

@@ -25,7 +25,7 @@
 //! already evaluated operands when the op runs). Error programs
 //! must still fail on both tiers.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::ir::*;
 
@@ -60,7 +60,7 @@ pub enum Op {
     ConstInt { dst: u16, v: i64 },
     ConstF32 { dst: u16, v: f32 },
     ConstF64 { dst: u16, v: f64 },
-    ConstStr { dst: u16, v: Rc<str> },
+    ConstStr { dst: u16, v: Arc<str> },
     ConstNull { dst: u16 },
     /// Unmetered register copy (loop-variable materialization).
     Mov { dst: u16, src: u16 },
@@ -158,7 +158,7 @@ pub enum Op {
     BumpBranch,
     /// Jump to `t` when the scrutinee falls in any range (unmetered,
     /// like the interp's label scan).
-    CaseJump { src: u16, ranges: Rc<Vec<(i64, i64)>>, t: u32 },
+    CaseJump { src: u16, ranges: Arc<Vec<(i64, i64)>>, t: u32 },
     /// FOR head: jump to `exit` when done (unmetered, matching the
     /// interp's loop-condition test); otherwise branches +1.
     ForCheck { i: u16, to: u16, step: u16, exit: u32 },

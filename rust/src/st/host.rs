@@ -1,0 +1,525 @@
+//! Shared runtime state + host API of the ST execution tiers.
+//!
+//! [`Host`] owns everything both tiers ([`super::Interp`],
+//! [`super::Vm`]) load at instantiation time — globals, the FB-instance
+//! arena, program-instance handles, the cost [`Meter`], the file-I/O
+//! base dir — together with the by-name accessors the embedding host
+//! uses (`program_instance`, `instance_field`, `global`, …). The tiers
+//! embed one `Host` and `Deref` to it, so name resolution has a single
+//! implementation and cannot drift between tiers (it used to be
+//! duplicated in `interp.rs` and `vm.rs`).
+//!
+//! [`HostImage`] is a `Send + Sync` snapshot of a `Host`: runtime
+//! values use `Rc<RefCell<…>>` handles and are pinned to one thread,
+//! but a snapshot flattens them into plain buffers (preserving aliasing
+//! — two fields sharing one array, or a `POINTER` into a global, come
+//! back sharing storage after [`Host::from_image`]). This is what lets
+//! one immutable ST backend mint independent per-request sessions on
+//! any thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use super::cost::Meter;
+use super::interp::{rerr, RuntimeError};
+use super::ir::{Ty, Unit};
+use super::value::Value;
+
+/// One live FB (or program) instance.
+#[derive(Debug, Clone)]
+pub struct FbInstance {
+    /// FB type id, or `usize::MAX` for program instances.
+    pub fb_id: usize,
+    pub fields: Vec<Value>,
+}
+
+/// The load-time state + host API shared by both execution tiers.
+pub struct Host {
+    pub unit: Arc<Unit>,
+    pub globals: Vec<Value>,
+    pub instances: Vec<FbInstance>,
+    /// Arena index of each program's instance (parallel to
+    /// `unit.programs`).
+    pub program_instances: Vec<usize>,
+    pub meter: Meter,
+    /// Base directory for BINARR/ARRBIN file access.
+    pub io_dir: PathBuf,
+}
+
+impl Host {
+    /// Instantiate a compiled unit: allocate globals, program
+    /// instances, and every FB instance they declare. Allocation order
+    /// (globals first, then per-program fields, nested FB fields
+    /// allocated while their declaring field is instantiated) fixes
+    /// the `FbRef` arena indices — both tiers and [`HostImage`] rely
+    /// on it being deterministic.
+    pub fn new(unit: Arc<Unit>) -> Host {
+        let mut host = Host {
+            unit: unit.clone(),
+            globals: Vec::new(),
+            instances: Vec::new(),
+            program_instances: Vec::new(),
+            meter: Meter::new(),
+            io_dir: PathBuf::from("."),
+        };
+        for g in &unit.globals {
+            let v = host.instantiate_value(&g.ty, &g.init);
+            host.globals.push(v);
+        }
+        for p in &unit.programs {
+            let fields: Vec<Value> = p
+                .fields
+                .iter()
+                .map(|f| host.instantiate_value(&f.ty, &f.init))
+                .collect();
+            let idx = host.instances.len();
+            host.instances.push(FbInstance { fb_id: usize::MAX, fields });
+            host.program_instances.push(idx);
+        }
+        host
+    }
+
+    /// Create a runtime value; FB-typed declarations allocate an arena
+    /// instance (recursively for the FB's own fields — which sema
+    /// guarantees contain no further FBs).
+    fn instantiate_value(
+        &mut self,
+        ty: &Ty,
+        init: &super::value::Init,
+    ) -> Value {
+        if let Ty::Fb(fb_id) = ty {
+            let fb = &self.unit.clone().fbs[*fb_id];
+            let fields: Vec<Value> =
+                fb.fields.iter().map(|f| f.init.to_value()).collect();
+            let idx = self.instances.len();
+            self.instances.push(FbInstance { fb_id: *fb_id, fields });
+            return Value::FbRef(idx);
+        }
+        init.to_value()
+    }
+
+    // ------------------------------------------------------- host API
+    pub fn program_instance(&self, name: &str) -> Option<usize> {
+        let pid = self.unit.find_program(name)?;
+        Some(self.program_instances[pid])
+    }
+
+    /// Read a field of an arena instance by name (program VARs included).
+    pub fn instance_field(&self, inst: usize, field: &str) -> Option<Value> {
+        let fi = self.field_index(inst, field)?;
+        Some(self.instances[inst].fields[fi].clone())
+    }
+
+    pub fn set_instance_field(
+        &mut self,
+        inst: usize,
+        field: &str,
+        value: Value,
+    ) -> Result<(), RuntimeError> {
+        let fi = self
+            .field_index(inst, field)
+            .ok_or_else(|| rerr(0, format!("no field {field}")))?;
+        self.instances[inst].fields[fi] = value;
+        Ok(())
+    }
+
+    fn field_index(&self, inst: usize, field: &str) -> Option<usize> {
+        let i = &self.instances[inst];
+        let defs = if i.fb_id == usize::MAX {
+            let pid = self
+                .program_instances
+                .iter()
+                .position(|&x| x == inst)?;
+            &self.unit.programs[pid].fields
+        } else {
+            &self.unit.fbs[i.fb_id].fields
+        };
+        defs.iter().position(|f| f.name.eq_ignore_ascii_case(field))
+    }
+
+    pub fn global(&self, name: &str) -> Option<Value> {
+        self.unit.find_global(name).map(|g| self.globals[g].clone())
+    }
+
+    pub fn set_global(&mut self, name: &str, value: Value) -> bool {
+        match self.unit.find_global(name) {
+            Some(g) => {
+                self.globals[g] = value;
+                true
+            }
+            None => false,
+        }
+    }
+
+    // ------------------------------------------------------- snapshot
+    /// Snapshot the full runtime state into a `Send + Sync` image.
+    pub fn image(&self) -> HostImage {
+        let mut enc = Encoder { map: HashMap::new(), bufs: Vec::new() };
+        let globals: Vec<ImgValue> =
+            self.globals.iter().map(|v| enc.value(v)).collect();
+        let instances: Vec<(usize, Vec<ImgValue>)> = self
+            .instances
+            .iter()
+            .map(|i| {
+                (i.fb_id, i.fields.iter().map(|v| enc.value(v)).collect())
+            })
+            .collect();
+        HostImage {
+            unit: self.unit.clone(),
+            globals,
+            instances,
+            program_instances: self.program_instances.clone(),
+            meter: self.meter.clone(),
+            io_dir: self.io_dir.clone(),
+            bufs: enc.bufs,
+        }
+    }
+
+    /// Rebuild a live `Host` from an image. Aliasing among the image's
+    /// values (shared arrays, pointers into them) is restored exactly;
+    /// floats come back bit-identical.
+    pub fn from_image(img: &HostImage) -> Host {
+        let mut dec =
+            Decoder { built: vec![None; img.bufs.len()], bufs: &img.bufs };
+        let globals: Vec<Value> =
+            img.globals.iter().map(|v| dec.value(v)).collect();
+        let instances: Vec<FbInstance> = img
+            .instances
+            .iter()
+            .map(|(fb_id, fields)| FbInstance {
+                fb_id: *fb_id,
+                fields: fields.iter().map(|v| dec.value(v)).collect(),
+            })
+            .collect();
+        Host {
+            unit: img.unit.clone(),
+            globals,
+            instances,
+            program_instances: img.program_instances.clone(),
+            meter: img.meter.clone(),
+            io_dir: img.io_dir.clone(),
+        }
+    }
+}
+
+/// A `Send + Sync` snapshot of a [`Host`] (compiled unit + flattened
+/// runtime state). Cheap to restore: one pass over the value graph,
+/// one buffer clone per distinct array/struct.
+#[derive(Debug, Clone)]
+pub struct HostImage {
+    unit: Arc<Unit>,
+    globals: Vec<ImgValue>,
+    instances: Vec<(usize, Vec<ImgValue>)>,
+    program_instances: Vec<usize>,
+    meter: Meter,
+    io_dir: PathBuf,
+    bufs: Vec<ImgBuf>,
+}
+
+impl HostImage {
+    pub fn unit(&self) -> &Arc<Unit> {
+        &self.unit
+    }
+
+    pub fn io_dir(&self) -> &PathBuf {
+        &self.io_dir
+    }
+}
+
+/// Flattened value: aggregates refer to [`ImgBuf`]s by index, so
+/// aliasing survives the round trip.
+#[derive(Debug, Clone)]
+enum ImgValue {
+    Bool(bool),
+    Int(i64),
+    Real(f32),
+    LReal(f64),
+    Str(Arc<str>),
+    ArrF32(usize),
+    ArrF64(usize),
+    ArrInt(usize),
+    ArrRef(usize),
+    Struct(usize),
+    FbRef(usize),
+    PtrF32(usize, usize),
+    PtrF64(usize, usize),
+    PtrInt(usize, usize),
+    Null,
+}
+
+/// One distinct heap buffer of the snapshotted state.
+#[derive(Debug, Clone)]
+enum ImgBuf {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    Int(Vec<i64>),
+    Vals(Vec<ImgValue>),
+}
+
+struct Encoder {
+    /// `Rc` allocation address -> buffer id (the aliasing map).
+    map: HashMap<usize, usize>,
+    bufs: Vec<ImgBuf>,
+}
+
+impl Encoder {
+    fn value(&mut self, v: &Value) -> ImgValue {
+        match v {
+            Value::Bool(b) => ImgValue::Bool(*b),
+            Value::Int(v) => ImgValue::Int(*v),
+            Value::Real(v) => ImgValue::Real(*v),
+            Value::LReal(v) => ImgValue::LReal(*v),
+            Value::Str(s) => ImgValue::Str(s.clone()),
+            Value::ArrF32(a) => ImgValue::ArrF32(self.buf_f32(a)),
+            Value::ArrF64(a) => ImgValue::ArrF64(self.buf_f64(a)),
+            Value::ArrInt(a) => ImgValue::ArrInt(self.buf_int(a)),
+            Value::ArrRef(a) => ImgValue::ArrRef(self.buf_vals(a)),
+            Value::Struct(s) => ImgValue::Struct(self.buf_vals(s)),
+            Value::FbRef(h) => ImgValue::FbRef(*h),
+            Value::PtrF32(a, o) => ImgValue::PtrF32(self.buf_f32(a), *o),
+            Value::PtrF64(a, o) => ImgValue::PtrF64(self.buf_f64(a), *o),
+            Value::PtrInt(a, o) => ImgValue::PtrInt(self.buf_int(a), *o),
+            Value::Null => ImgValue::Null,
+        }
+    }
+
+    fn buf_f32(&mut self, a: &Rc<RefCell<Vec<f32>>>) -> usize {
+        let key = Rc::as_ptr(a) as usize;
+        if let Some(&id) = self.map.get(&key) {
+            return id;
+        }
+        let id = self.bufs.len();
+        self.map.insert(key, id);
+        self.bufs.push(ImgBuf::F32(a.borrow().clone()));
+        id
+    }
+
+    fn buf_f64(&mut self, a: &Rc<RefCell<Vec<f64>>>) -> usize {
+        let key = Rc::as_ptr(a) as usize;
+        if let Some(&id) = self.map.get(&key) {
+            return id;
+        }
+        let id = self.bufs.len();
+        self.map.insert(key, id);
+        self.bufs.push(ImgBuf::F64(a.borrow().clone()));
+        id
+    }
+
+    fn buf_int(&mut self, a: &Rc<RefCell<Vec<i64>>>) -> usize {
+        let key = Rc::as_ptr(a) as usize;
+        if let Some(&id) = self.map.get(&key) {
+            return id;
+        }
+        let id = self.bufs.len();
+        self.map.insert(key, id);
+        self.bufs.push(ImgBuf::Int(a.borrow().clone()));
+        id
+    }
+
+    fn buf_vals(&mut self, a: &Rc<RefCell<Vec<Value>>>) -> usize {
+        let key = Rc::as_ptr(a) as usize;
+        if let Some(&id) = self.map.get(&key) {
+            return id;
+        }
+        // Reserve the slot before recursing so a (hypothetical) cyclic
+        // graph cannot re-enter and double-allocate the buffer.
+        let id = self.bufs.len();
+        self.map.insert(key, id);
+        self.bufs.push(ImgBuf::Vals(Vec::new()));
+        let vals: Vec<ImgValue> =
+            a.borrow().iter().map(|v| self.value(v)).collect();
+        self.bufs[id] = ImgBuf::Vals(vals);
+        id
+    }
+}
+
+/// A restored buffer handle (shared among every value that aliased the
+/// original).
+#[derive(Clone)]
+enum BuiltBuf {
+    F32(Rc<RefCell<Vec<f32>>>),
+    F64(Rc<RefCell<Vec<f64>>>),
+    Int(Rc<RefCell<Vec<i64>>>),
+    Vals(Rc<RefCell<Vec<Value>>>),
+}
+
+struct Decoder<'a> {
+    built: Vec<Option<BuiltBuf>>,
+    bufs: &'a [ImgBuf],
+}
+
+impl Decoder<'_> {
+    fn value(&mut self, v: &ImgValue) -> Value {
+        match v {
+            ImgValue::Bool(b) => Value::Bool(*b),
+            ImgValue::Int(v) => Value::Int(*v),
+            ImgValue::Real(v) => Value::Real(*v),
+            ImgValue::LReal(v) => Value::LReal(*v),
+            ImgValue::Str(s) => Value::Str(s.clone()),
+            ImgValue::ArrF32(id) => Value::ArrF32(self.f32_buf(*id)),
+            ImgValue::ArrF64(id) => Value::ArrF64(self.f64_buf(*id)),
+            ImgValue::ArrInt(id) => Value::ArrInt(self.int_buf(*id)),
+            ImgValue::ArrRef(id) => Value::ArrRef(self.vals_buf(*id)),
+            ImgValue::Struct(id) => Value::Struct(self.vals_buf(*id)),
+            ImgValue::FbRef(h) => Value::FbRef(*h),
+            ImgValue::PtrF32(id, o) => Value::PtrF32(self.f32_buf(*id), *o),
+            ImgValue::PtrF64(id, o) => Value::PtrF64(self.f64_buf(*id), *o),
+            ImgValue::PtrInt(id, o) => Value::PtrInt(self.int_buf(*id), *o),
+            ImgValue::Null => Value::Null,
+        }
+    }
+
+    fn buf(&mut self, id: usize) -> BuiltBuf {
+        if let Some(b) = &self.built[id] {
+            return b.clone();
+        }
+        let built = match &self.bufs[id] {
+            ImgBuf::F32(v) => {
+                BuiltBuf::F32(Rc::new(RefCell::new(v.clone())))
+            }
+            ImgBuf::F64(v) => {
+                BuiltBuf::F64(Rc::new(RefCell::new(v.clone())))
+            }
+            ImgBuf::Int(v) => {
+                BuiltBuf::Int(Rc::new(RefCell::new(v.clone())))
+            }
+            ImgBuf::Vals(vs) => {
+                // Publish the handle before recursing (cycle guard,
+                // mirroring the encoder).
+                let rc = Rc::new(RefCell::new(Vec::new()));
+                self.built[id] = Some(BuiltBuf::Vals(rc.clone()));
+                let vals: Vec<Value> =
+                    vs.iter().map(|v| self.value(v)).collect();
+                *rc.borrow_mut() = vals;
+                return BuiltBuf::Vals(rc);
+            }
+        };
+        self.built[id] = Some(built.clone());
+        built
+    }
+
+    fn f32_buf(&mut self, id: usize) -> Rc<RefCell<Vec<f32>>> {
+        match self.buf(id) {
+            BuiltBuf::F32(rc) => rc,
+            _ => unreachable!("image buffer {id} is not f32"),
+        }
+    }
+
+    fn f64_buf(&mut self, id: usize) -> Rc<RefCell<Vec<f64>>> {
+        match self.buf(id) {
+            BuiltBuf::F64(rc) => rc,
+            _ => unreachable!("image buffer {id} is not f64"),
+        }
+    }
+
+    fn int_buf(&mut self, id: usize) -> Rc<RefCell<Vec<i64>>> {
+        match self.buf(id) {
+            BuiltBuf::Int(rc) => rc,
+            _ => unreachable!("image buffer {id} is not int"),
+        }
+    }
+
+    fn vals_buf(&mut self, id: usize) -> Rc<RefCell<Vec<Value>>> {
+        match self.buf(id) {
+            BuiltBuf::Vals(rc) => rc,
+            _ => unreachable!("image buffer {id} is not a value vec"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(vals: &[f32]) -> Value {
+        Value::ArrF32(Rc::new(RefCell::new(vals.to_vec())))
+    }
+
+    /// Snapshot/restore must preserve aliasing: a pointer into an
+    /// array and a second handle to the same array keep sharing
+    /// storage after the round trip.
+    #[test]
+    fn image_round_trip_preserves_aliasing() {
+        let mut host = Host::new(Arc::new(Unit::default()));
+        let shared = arr(&[1.0, 2.0, 3.0]);
+        let ptr = match &shared {
+            Value::ArrF32(a) => Value::PtrF32(a.clone(), 1),
+            _ => unreachable!(),
+        };
+        host.globals = vec![shared, ptr, arr(&[9.0])];
+        host.meter.loads = 42;
+
+        let img = host.image();
+        let restored = Host::from_image(&img);
+        assert_eq!(restored.meter.loads, 42);
+        let (a, p, b) = (
+            restored.globals[0].clone(),
+            restored.globals[1].clone(),
+            restored.globals[2].clone(),
+        );
+        // Write through the pointer; the array handle must see it.
+        match (&a, &p) {
+            (Value::ArrF32(arr), Value::PtrF32(parr, off)) => {
+                assert!(Rc::ptr_eq(arr, parr), "aliasing lost");
+                assert_eq!(*off, 1);
+                parr.borrow_mut()[1] = 7.5;
+                assert_eq!(arr.borrow()[1], 7.5);
+            }
+            other => panic!("unexpected restored values: {other:?}"),
+        }
+        // The unrelated array is detached storage.
+        match (&a, &b) {
+            (Value::ArrF32(x), Value::ArrF32(y)) => {
+                assert!(!Rc::ptr_eq(x, y));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Restoring twice yields independent states (the per-session
+    /// guarantee behind the ST backend).
+    #[test]
+    fn restored_hosts_are_independent() {
+        let mut host = Host::new(Arc::new(Unit::default()));
+        host.globals = vec![arr(&[1.0, 2.0])];
+        let img = host.image();
+        let h1 = Host::from_image(&img);
+        let h2 = Host::from_image(&img);
+        match (&h1.globals[0], &h2.globals[0]) {
+            (Value::ArrF32(a), Value::ArrF32(b)) => {
+                a.borrow_mut()[0] = 100.0;
+                assert_eq!(b.borrow()[0], 1.0, "sessions must not share");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Nested aggregates (structs holding pointers) round-trip with
+    /// aliasing intact — the shape the ICSML `Memory` structs produce.
+    #[test]
+    fn struct_with_pointer_round_trips() {
+        let backing = Rc::new(RefCell::new(vec![1.0f32, 2.0]));
+        let st = Value::Struct(Rc::new(RefCell::new(vec![
+            Value::PtrF32(backing.clone(), 0),
+            Value::Int(2),
+        ])));
+        let mut host = Host::new(Arc::new(Unit::default()));
+        host.globals = vec![Value::ArrF32(backing), st];
+        let img = host.image();
+        let r = Host::from_image(&img);
+        match (&r.globals[0], &r.globals[1]) {
+            (Value::ArrF32(arr), Value::Struct(s)) => {
+                match &s.borrow()[0] {
+                    Value::PtrF32(p, 0) => {
+                        assert!(Rc::ptr_eq(arr, p), "struct ptr aliasing");
+                    }
+                    other => panic!("bad struct field: {other:?}"),
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -9,13 +9,17 @@
 //! allocated at load, IEC-style). `VAR_INPUT` aggregate arguments are
 //! deep-copied (bytes metered); `VAR_IN_OUT` and POINTER values alias.
 
+use std::ops::{Deref, DerefMut};
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use super::builtins;
-use super::cost::Meter;
+use super::host::Host;
 use super::ir::*;
 use super::value::Value;
+
+pub use super::host::FbInstance;
 
 /// Runtime failure with source-line context.
 #[derive(Debug, Clone)]
@@ -36,14 +40,6 @@ pub(crate) fn rerr(line: u32, msg: impl Into<String>) -> RuntimeError {
     RuntimeError { line, message: msg.into() }
 }
 
-/// One live FB (or program) instance.
-#[derive(Debug, Clone)]
-pub struct FbInstance {
-    /// FB type id, or `usize::MAX` for program instances.
-    pub fb_id: usize,
-    pub fields: Vec<Value>,
-}
-
 /// Control-flow signal from statement execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Flow {
@@ -59,126 +55,54 @@ struct Cx {
     self_idx: Option<usize>,
 }
 
-/// The ST virtual machine.
+/// The ST virtual machine (tree-walking tier).
+///
+/// Load-time state and the by-name host API live in the embedded
+/// [`Host`] (shared with the bytecode [`super::Vm`] so the two tiers
+/// cannot drift); `Interp` itself adds only the execution engine and
+/// its frame pool. `Deref` keeps the familiar `interp.globals` /
+/// `interp.meter` / `interp.instance_field(…)` surface intact.
 pub struct Interp {
-    pub unit: Rc<Unit>,
-    pub globals: Vec<Value>,
-    pub instances: Vec<FbInstance>,
-    /// Arena index of each program's instance (parallel to
-    /// `unit.programs`).
-    pub program_instances: Vec<usize>,
-    pub meter: Meter,
-    /// Base directory for BINARR/ARRBIN file access.
-    pub io_dir: PathBuf,
+    pub host: Host,
     /// Frame pool: recycled `Vec<Value>` allocations for POU calls
     /// (the interpreter's hottest allocation site — see
     /// EXPERIMENTS.md §Perf).
     frame_pool: Vec<Vec<Value>>,
 }
 
+impl Deref for Interp {
+    type Target = Host;
+    fn deref(&self) -> &Host {
+        &self.host
+    }
+}
+
+impl DerefMut for Interp {
+    fn deref_mut(&mut self) -> &mut Host {
+        &mut self.host
+    }
+}
+
 impl Interp {
     /// Instantiate a compiled unit: allocate globals, program instances,
     /// and every FB instance they declare.
     pub fn new(unit: Unit) -> Self {
-        let unit = Rc::new(unit);
-        let mut interp = Interp {
-            unit: unit.clone(),
-            globals: Vec::new(),
-            instances: Vec::new(),
-            program_instances: Vec::new(),
-            meter: Meter::new(),
-            io_dir: PathBuf::from("."),
+        Interp {
+            host: Host::new(Arc::new(unit)),
             frame_pool: Vec::new(),
-        };
-        for g in &unit.globals {
-            let v = interp.instantiate_value(&g.ty, &g.init);
-            interp.globals.push(v);
         }
-        for p in &unit.programs {
-            let fields: Vec<Value> = p
-                .fields
-                .iter()
-                .map(|f| interp.instantiate_value(&f.ty, &f.init))
-                .collect();
-            let idx = interp.instances.len();
-            interp.instances.push(FbInstance { fb_id: usize::MAX, fields });
-            interp.program_instances.push(idx);
-        }
-        interp
     }
 
     /// Set the BINARR/ARRBIN base directory.
     pub fn with_io_dir(mut self, dir: impl Into<PathBuf>) -> Self {
-        self.io_dir = dir.into();
+        self.host.io_dir = dir.into();
         self
     }
 
-    /// Create a runtime value; FB-typed declarations allocate an arena
-    /// instance (recursively for the FB's own fields — which sema
-    /// guarantees contain no further FBs).
-    fn instantiate_value(&mut self, ty: &Ty, init: &Value) -> Value {
-        if let Ty::Fb(fb_id) = ty {
-            let fb = &self.unit.clone().fbs[*fb_id];
-            let fields: Vec<Value> =
-                fb.fields.iter().map(|f| f.init.deep_clone()).collect();
-            let idx = self.instances.len();
-            self.instances.push(FbInstance { fb_id: *fb_id, fields });
-            return Value::FbRef(idx);
-        }
-        init.deep_clone()
-    }
-
-    // ------------------------------------------------------- host API
-    pub fn program_instance(&self, name: &str) -> Option<usize> {
-        let pid = self.unit.find_program(name)?;
-        Some(self.program_instances[pid])
-    }
-
-    /// Read a field of an arena instance by name (program VARs included).
-    pub fn instance_field(&self, inst: usize, field: &str) -> Option<Value> {
-        let fi = self.field_index(inst, field)?;
-        Some(self.instances[inst].fields[fi].clone())
-    }
-
-    pub fn set_instance_field(
-        &mut self,
-        inst: usize,
-        field: &str,
-        value: Value,
-    ) -> Result<(), RuntimeError> {
-        let fi = self
-            .field_index(inst, field)
-            .ok_or_else(|| rerr(0, format!("no field {field}")))?;
-        self.instances[inst].fields[fi] = value;
-        Ok(())
-    }
-
-    fn field_index(&self, inst: usize, field: &str) -> Option<usize> {
-        let i = &self.instances[inst];
-        let defs = if i.fb_id == usize::MAX {
-            let pid = self
-                .program_instances
-                .iter()
-                .position(|&x| x == inst)?;
-            &self.unit.programs[pid].fields
-        } else {
-            &self.unit.fbs[i.fb_id].fields
-        };
-        defs.iter().position(|f| f.name.eq_ignore_ascii_case(field))
-    }
-
-    pub fn global(&self, name: &str) -> Option<Value> {
-        self.unit.find_global(name).map(|g| self.globals[g].clone())
-    }
-
-    pub fn set_global(&mut self, name: &str, value: Value) -> bool {
-        match self.unit.find_global(name) {
-            Some(g) => {
-                self.globals[g] = value;
-                true
-            }
-            None => false,
-        }
+    /// Surrender the load-time state (used by [`super::Vm::from_interp`]
+    /// to adopt it wholesale).
+    pub fn into_host(self) -> Host {
+        self.host
     }
 
     /// Run a PROGRAM body once (one "scan" of that task).
@@ -252,7 +176,7 @@ impl Interp {
             self.frame_pool.pop().unwrap_or_default();
         frame.clear();
         frame.reserve(fd.slots.len());
-        frame.push(fd.slots[0].init.deep_clone()); // return slot
+        frame.push(fd.slots[0].init.to_value()); // return slot
         for (i, a) in args.into_iter().enumerate() {
             if i < fd.n_inputs && a.is_aggregate() {
                 // call-by-value: aggregates copied, bytes metered
@@ -264,7 +188,7 @@ impl Interp {
             }
         }
         for slot in fd.slots.iter().skip(frame.len()) {
-            frame.push(slot.init.deep_clone());
+            frame.push(slot.init.to_value());
         }
         let mut cx = Cx { frame, self_idx };
         let flow = self.exec_block(&fd.body, &mut cx);
@@ -820,7 +744,7 @@ impl Interp {
                 let mut vals: Vec<Value> = unit.structs[*sid]
                     .fields
                     .iter()
-                    .map(|f| f.init.deep_clone())
+                    .map(|f| f.init.to_value())
                     .collect();
                 for (idx, e) in fields {
                     vals[*idx as usize] = self.eval(e, cx)?;
@@ -1031,9 +955,10 @@ impl Interp {
             Some(e) => self.eval(e, cx)?.int() as usize,
             None => 4,
         };
+        let host = &mut self.host;
         builtins::exec_file_io(
-            &mut self.meter,
-            &self.io_dir,
+            &mut host.meter,
+            &host.io_dir,
             b,
             fname.as_ref(),
             bytes,

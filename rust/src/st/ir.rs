@@ -5,9 +5,9 @@
 //! are specialized per representation — the interpreter does no name or
 //! type resolution at runtime.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use super::value::Value;
+use super::value::Init;
 
 /// IEC integer widths (share `i64` runtime storage).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,7 +80,7 @@ pub enum Ty {
     Real,
     LReal,
     Str,
-    Arr(Box<Ty>, Rc<Vec<(i64, i64)>>),
+    Arr(Box<Ty>, Arc<Vec<(i64, i64)>>),
     Struct(usize),
     Fb(usize),
     Iface(usize),
@@ -203,7 +203,7 @@ pub enum Ex {
     KInt(i64),
     KReal(f32),
     KLReal(f64),
-    KStr(Rc<str>),
+    KStr(Arc<str>),
     KNull,
     /// Frame slot read.
     Local(u16),
@@ -273,7 +273,7 @@ pub enum St {
     /// `copy` true => deep-copy assignment (array/struct), metered.
     Assign(Lv, Ex, bool),
     If(Vec<(Ex, Vec<St>)>, Vec<St>),
-    Case(Ex, Vec<(Rc<Vec<(i64, i64)>>, Vec<St>)>, Vec<St>),
+    Case(Ex, Vec<(Arc<Vec<(i64, i64)>>, Vec<St>)>, Vec<St>),
     For {
         var: Lv,
         from: Ex,
@@ -302,8 +302,10 @@ pub enum St {
 pub struct VarDef {
     pub name: String,
     pub ty: Ty,
-    /// Initial value template (deep-cloned on frame/instance creation).
-    pub init: Value,
+    /// Initial-value template (materialized via [`Init::to_value`] on
+    /// frame/instance creation). Plain data, so the compiled unit stays
+    /// `Send + Sync`.
+    pub init: Init,
 }
 
 /// A compiled POU body (function, method, FB body, or program body).
@@ -444,11 +446,11 @@ mod tests {
         let unit = Unit::default();
         assert_eq!(Ty::Real.byte_size(&unit), 4);
         assert_eq!(Ty::Int(IntTy::Sint).byte_size(&unit), 1);
-        let arr = Ty::Arr(Box::new(Ty::Real), Rc::new(vec![(0, 9)]));
+        let arr = Ty::Arr(Box::new(Ty::Real), Arc::new(vec![(0, 9)]));
         assert_eq!(arr.byte_size(&unit), 40);
         assert_eq!(arr.arr_len(), Some(10));
         let arr2 =
-            Ty::Arr(Box::new(Ty::Real), Rc::new(vec![(0, 1), (0, 2)]));
+            Ty::Arr(Box::new(Ty::Real), Arc::new(vec![(0, 1), (0, 2)]));
         assert_eq!(arr2.arr_len(), Some(6));
     }
 }

@@ -7,13 +7,12 @@
 //! VAR_IN_OUT, ADR only on statically allocated arrays).
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::ast;
 use super::ir::*;
 use super::sema::SemaError;
-use super::value::Value;
-use std::cell::RefCell;
+use super::value::Init;
 
 /// Lower a parsed file to an executable unit.
 pub fn lower(file: &ast::File) -> Result<Unit, SemaError> {
@@ -222,7 +221,7 @@ impl<'a> Lowerer<'a> {
                     }
                     bounds.push((lo, hi));
                 }
-                Ok(Ty::Arr(Box::new(e), Rc::new(bounds)))
+                Ok(Ty::Arr(Box::new(e), Arc::new(bounds)))
             }
         }
     }
@@ -374,25 +373,25 @@ impl<'a> Lowerer<'a> {
         Ok(())
     }
 
-    /// Build the initial [`Value`] template for a declaration.
+    /// Build the initial-value [`Init`] template for a declaration.
     fn init_value(
         &self,
         ty: &Ty,
         init: Option<&ast::Initializer>,
         consts: &HashMap<String, Const>,
         line: u32,
-    ) -> Result<Value, SemaError> {
+    ) -> Result<Init, SemaError> {
         match init {
             None => Ok(self.zero_value(ty)),
             Some(ast::Initializer::Expr(e)) => {
                 let c = self.const_eval(e, consts, line)?;
                 match (ty, c) {
-                    (Ty::Bool, Const::Bool(b)) => Ok(Value::Bool(b)),
-                    (Ty::Int(it), Const::Int(v)) => Ok(Value::Int(it.wrap(v))),
-                    (Ty::Real, Const::Int(v)) => Ok(Value::Real(v as f32)),
-                    (Ty::Real, Const::Real(v)) => Ok(Value::Real(v as f32)),
-                    (Ty::LReal, Const::Int(v)) => Ok(Value::LReal(v as f64)),
-                    (Ty::LReal, Const::Real(v)) => Ok(Value::LReal(v)),
+                    (Ty::Bool, Const::Bool(b)) => Ok(Init::Bool(b)),
+                    (Ty::Int(it), Const::Int(v)) => Ok(Init::Int(it.wrap(v))),
+                    (Ty::Real, Const::Int(v)) => Ok(Init::Real(v as f32)),
+                    (Ty::Real, Const::Real(v)) => Ok(Init::Real(v as f32)),
+                    (Ty::LReal, Const::Int(v)) => Ok(Init::LReal(v as f64)),
+                    (Ty::LReal, Const::Real(v)) => Ok(Init::LReal(v)),
                     _ => Err(err(line, "initializer type mismatch")),
                 }
             }
@@ -419,17 +418,15 @@ impl<'a> Lowerer<'a> {
                     vals.push(Const::Int(0));
                 }
                 match elem {
-                    Ty::Real => Ok(Value::ArrF32(Rc::new(RefCell::new(
+                    Ty::Real => Ok(Init::ArrF32(
                         vals.iter().map(|c| const_f64(*c) as f32).collect(),
-                    )))),
-                    Ty::LReal => Ok(Value::ArrF64(Rc::new(RefCell::new(
+                    )),
+                    Ty::LReal => Ok(Init::ArrF64(
                         vals.iter().map(|c| const_f64(*c)).collect(),
-                    )))),
-                    Ty::Int(_) | Ty::Bool => {
-                        Ok(Value::ArrInt(Rc::new(RefCell::new(
-                            vals.iter().map(|c| const_i64(*c)).collect(),
-                        ))))
-                    }
+                    )),
+                    Ty::Int(_) | Ty::Bool => Ok(Init::ArrInt(
+                        vals.iter().map(|c| const_i64(*c)).collect(),
+                    )),
                     _ => Err(err(line, "array initializer element type")),
                 }
             }
@@ -439,8 +436,8 @@ impl<'a> Lowerer<'a> {
                     _ => return Err(err(line, "struct initializer on non-struct")),
                 };
                 let def = self.unit.structs[sid].clone();
-                let mut vals: Vec<Value> =
-                    def.fields.iter().map(|f| f.init.deep_clone()).collect();
+                let mut vals: Vec<Init> =
+                    def.fields.iter().map(|f| f.init.clone()).collect();
                 for (name, e) in fields {
                     let idx = def
                         .fields
@@ -456,40 +453,36 @@ impl<'a> Lowerer<'a> {
                         line,
                     )?;
                 }
-                Ok(Value::Struct(Rc::new(RefCell::new(vals))))
+                Ok(Init::Struct(vals))
             }
         }
     }
 
-    fn zero_value(&self, ty: &Ty) -> Value {
+    fn zero_value(&self, ty: &Ty) -> Init {
         match ty {
-            Ty::Bool => Value::Bool(false),
-            Ty::Int(_) => Value::Int(0),
-            Ty::Real => Value::Real(0.0),
-            Ty::LReal => Value::LReal(0.0),
-            Ty::Str => Value::Str(Rc::from("")),
+            Ty::Bool => Init::Bool(false),
+            Ty::Int(_) => Init::Int(0),
+            Ty::Real => Init::Real(0.0),
+            Ty::LReal => Init::LReal(0.0),
+            Ty::Str => Init::Str(Arc::from("")),
             Ty::Arr(elem, _) => {
                 let len = ty.arr_len().unwrap();
                 match elem.as_ref() {
-                    Ty::Real => Value::ArrF32(Rc::new(RefCell::new(vec![0.0; len]))),
-                    Ty::LReal => Value::ArrF64(Rc::new(RefCell::new(vec![0.0; len]))),
-                    Ty::Int(_) | Ty::Bool => {
-                        Value::ArrInt(Rc::new(RefCell::new(vec![0; len])))
-                    }
-                    Ty::Iface(_) => Value::ArrRef(Rc::new(RefCell::new(
-                        vec![Value::Null; len],
-                    ))),
+                    Ty::Real => Init::ArrF32(vec![0.0; len]),
+                    Ty::LReal => Init::ArrF64(vec![0.0; len]),
+                    Ty::Int(_) | Ty::Bool => Init::ArrInt(vec![0; len]),
+                    Ty::Iface(_) => Init::ArrRef(vec![Init::Null; len]),
                     _ => unreachable!("checked in resolve_type"),
                 }
             }
-            Ty::Struct(id) => Value::Struct(Rc::new(RefCell::new(
+            Ty::Struct(id) => Init::Struct(
                 self.unit.structs[*id]
                     .fields
                     .iter()
-                    .map(|f| f.init.deep_clone())
+                    .map(|f| f.init.clone())
                     .collect(),
-            ))),
-            Ty::Fb(_) | Ty::Iface(_) | Ty::Ptr(_) => Value::Null,
+            ),
+            Ty::Fb(_) | Ty::Iface(_) | Ty::Ptr(_) => Init::Null,
         }
     }
 
@@ -644,7 +637,7 @@ impl<'a> Lowerer<'a> {
             cx.slots.push(VarDef {
                 name: "__ret".into(),
                 ty: Ty::Bool,
-                init: Value::Bool(false),
+                init: Init::Bool(false),
             });
         }
 
@@ -872,7 +865,7 @@ impl<'a> Lowerer<'a> {
                             }
                         }
                     }
-                    iarms.push((Rc::new(ranges), self.lower_block(body, cx)?));
+                    iarms.push((Arc::new(ranges), self.lower_block(body, cx)?));
                 }
                 St::Case(se, iarms, self.lower_block(else_body, cx)?)
             }
@@ -1042,7 +1035,7 @@ impl<'a> Lowerer<'a> {
             E::IntLit(v) => Ok((Ex::KInt(*v), Ty::Int(IntTy::Dint))),
             E::RealLit(v) => Ok((Ex::KReal(*v as f32), Ty::Real)),
             E::BoolLit(b) => Ok((Ex::KBool(*b), Ty::Bool)),
-            E::StrLit(s) => Ok((Ex::KStr(Rc::from(s.as_str())), Ty::Str)),
+            E::StrLit(s) => Ok((Ex::KStr(Arc::from(s.as_str())), Ty::Str)),
             E::NullLit => Ok((Ex::KNull, Ty::Ptr(Box::new(Ty::Real)))),
             E::TypedLit(tname, lit) => {
                 if tname == "REAL" {
@@ -1216,7 +1209,7 @@ impl<'a> Lowerer<'a> {
     fn flat_index(
         &mut self,
         idxs: &[ast::Expr],
-        dims: &Rc<Vec<(i64, i64)>>,
+        dims: &Arc<Vec<(i64, i64)>>,
         cx: &mut BodyCx,
         line: u32,
     ) -> Result<(Ex, u32), SemaError> {

@@ -27,6 +27,7 @@ pub mod ast;
 pub mod builtins;
 pub mod bytecode;
 pub mod cost;
+pub mod host;
 pub mod interp;
 pub mod ir;
 pub mod lexer;
@@ -37,6 +38,7 @@ pub mod value;
 pub mod vm;
 
 pub use cost::Meter;
+pub use host::{FbInstance, Host, HostImage};
 pub use interp::{Interp, RuntimeError};
 pub use lexer::{lex, LexError, Token, TokenKind};
 pub use parser::{parse, ParseError};

@@ -11,6 +11,7 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// A runtime value.
 #[derive(Debug, Clone)]
@@ -22,7 +23,10 @@ pub enum Value {
     Real(f32),
     /// LREAL (IEC 64-bit float).
     LReal(f64),
-    Str(Rc<str>),
+    /// Strings are immutable in the supported subset, so the handle is
+    /// `Arc` — it lives inside the (shared, `Send + Sync`) compiled
+    /// [`super::ir::Unit`] as well as in runtime state.
+    Str(Arc<str>),
     ArrF32(Rc<RefCell<Vec<f32>>>),
     ArrF64(Rc<RefCell<Vec<f64>>>),
     ArrInt(Rc<RefCell<Vec<i64>>>),
@@ -215,9 +219,77 @@ impl Value {
     }
 }
 
+/// A `Send + Sync` initial-value template for a declaration.
+///
+/// [`Value`] handles aggregates through `Rc<RefCell<…>>`, which pins a
+/// compiled unit to one thread. Initializers never alias (every
+/// frame/instance creation materializes a fresh copy), so the compiled
+/// [`super::ir::Unit`] stores this plain-data mirror instead and both
+/// execution tiers call [`Init::to_value`] where they previously
+/// deep-cloned a template `Value`. This is what makes a compiled unit
+/// shareable across threads (`Arc<Unit>` behind the ST backend).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Bool(bool),
+    Int(i64),
+    Real(f32),
+    LReal(f64),
+    Str(Arc<str>),
+    ArrF32(Vec<f32>),
+    ArrF64(Vec<f64>),
+    ArrInt(Vec<i64>),
+    ArrRef(Vec<Init>),
+    Struct(Vec<Init>),
+    Null,
+}
+
+impl Init {
+    /// Materialize a fresh runtime value (the moral equivalent of
+    /// `template.deep_clone()` on the old `Value` templates: every call
+    /// yields detached storage).
+    pub fn to_value(&self) -> Value {
+        match self {
+            Init::Bool(b) => Value::Bool(*b),
+            Init::Int(v) => Value::Int(*v),
+            Init::Real(v) => Value::Real(*v),
+            Init::LReal(v) => Value::LReal(*v),
+            Init::Str(s) => Value::Str(s.clone()),
+            Init::ArrF32(v) => {
+                Value::ArrF32(Rc::new(RefCell::new(v.clone())))
+            }
+            Init::ArrF64(v) => {
+                Value::ArrF64(Rc::new(RefCell::new(v.clone())))
+            }
+            Init::ArrInt(v) => {
+                Value::ArrInt(Rc::new(RefCell::new(v.clone())))
+            }
+            Init::ArrRef(v) => Value::ArrRef(Rc::new(RefCell::new(
+                v.iter().map(Init::to_value).collect(),
+            ))),
+            Init::Struct(v) => Value::Struct(Rc::new(RefCell::new(
+                v.iter().map(Init::to_value).collect(),
+            ))),
+            Init::Null => Value::Null,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn init_to_value_detaches_storage() {
+        let init = Init::ArrF32(vec![1.0, 2.0]);
+        let a = init.to_value();
+        let b = init.to_value();
+        if let (Value::ArrF32(ra), Value::ArrF32(rb)) = (&a, &b) {
+            ra.borrow_mut()[0] = 9.0;
+            assert_eq!(rb.borrow()[0], 1.0, "instances must not alias");
+        } else {
+            unreachable!()
+        }
+    }
 
     #[test]
     fn deep_clone_detaches_arrays() {

@@ -16,31 +16,44 @@
 //! (`tests/st_differential.rs` drives both tiers over the whole
 //! end-to-end corpus plus the ICSML MLP models).
 
+use std::ops::{Deref, DerefMut};
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use super::builtins;
 use super::bytecode::{self, Code, CodeUnit, CopyMode, Op, NO_REG};
-use super::cost::Meter;
-use super::interp::{cmp_ord, copy_into, rerr, FbInstance, Interp, RuntimeError};
+use super::host::Host;
+use super::interp::{cmp_ord, copy_into, rerr, Interp, RuntimeError};
 use super::ir::*;
 use super::value::Value;
 
 /// The bytecode execution tier.
+///
+/// Load-time state and the by-name host API live in the embedded
+/// [`Host`] — the *same* struct [`Interp`] embeds, so name resolution
+/// has exactly one implementation across tiers. `Vm` adds the shared
+/// compiled [`CodeUnit`] (an `Arc`: one compilation serves every
+/// session minted from an ST backend) and the register arena.
 pub struct Vm {
-    pub unit: Rc<Unit>,
-    code: Rc<CodeUnit>,
-    pub globals: Vec<Value>,
-    pub instances: Vec<FbInstance>,
-    /// Arena index of each program's instance (parallel to
-    /// `unit.programs`).
-    pub program_instances: Vec<usize>,
-    pub meter: Meter,
-    /// Base directory for BINARR/ARRBIN file access.
-    pub io_dir: PathBuf,
+    pub host: Host,
+    code: Arc<CodeUnit>,
     /// The call-frame arena: every live frame's registers,
     /// stack-disciplined.
     regs: Vec<Value>,
+}
+
+impl Deref for Vm {
+    type Target = Host;
+    fn deref(&self) -> &Host {
+        &self.host
+    }
+}
+
+impl DerefMut for Vm {
+    fn deref_mut(&mut self) -> &mut Host {
+        &mut self.host
+    }
 }
 
 impl Vm {
@@ -55,81 +68,30 @@ impl Vm {
     /// unit to bytecode. Any host-side mutation already applied to the
     /// interpreter (globals, instance fields, `io_dir`, meter) carries
     /// over bit-for-bit.
-    pub fn from_interp(mut interp: Interp) -> Vm {
-        let code = Rc::new(bytecode::compile_unit(&interp.unit));
-        Vm {
-            unit: Rc::clone(&interp.unit),
-            code,
-            globals: std::mem::take(&mut interp.globals),
-            instances: std::mem::take(&mut interp.instances),
-            program_instances: std::mem::take(&mut interp.program_instances),
-            meter: std::mem::take(&mut interp.meter),
-            io_dir: std::mem::replace(&mut interp.io_dir, PathBuf::new()),
-            regs: Vec::new(),
-        }
+    pub fn from_interp(interp: Interp) -> Vm {
+        let host = interp.into_host();
+        let code = Arc::new(bytecode::compile_unit(&host.unit));
+        Vm { host, code, regs: Vec::new() }
+    }
+
+    /// Assemble a tier from an already-compiled unit (shared `Arc`)
+    /// and a live [`Host`] — the per-session constructor behind the ST
+    /// backend: state comes from a restored
+    /// [`HostImage`](super::host::HostImage), code is compiled once
+    /// and shared.
+    pub fn with_host(host: Host, code: Arc<CodeUnit>) -> Vm {
+        Vm { host, code, regs: Vec::new() }
+    }
+
+    /// The compiled bytecode (shareable across sessions/threads).
+    pub fn code(&self) -> &Arc<CodeUnit> {
+        &self.code
     }
 
     /// Set the BINARR/ARRBIN base directory.
     pub fn with_io_dir(mut self, dir: impl Into<PathBuf>) -> Self {
-        self.io_dir = dir.into();
+        self.host.io_dir = dir.into();
         self
-    }
-
-    // ------------------------------------------------------- host API
-    // Mirrors Interp's host API over the same state layout; a change
-    // to name resolution here must land in interp.rs too (and vice
-    // versa) until the shared load-time state is factored into one
-    // struct both tiers embed — see ROADMAP open items.
-    pub fn program_instance(&self, name: &str) -> Option<usize> {
-        let pid = self.unit.find_program(name)?;
-        Some(self.program_instances[pid])
-    }
-
-    /// Read a field of an arena instance by name (program VARs included).
-    pub fn instance_field(&self, inst: usize, field: &str) -> Option<Value> {
-        let fi = self.field_index(inst, field)?;
-        Some(self.instances[inst].fields[fi].clone())
-    }
-
-    pub fn set_instance_field(
-        &mut self,
-        inst: usize,
-        field: &str,
-        value: Value,
-    ) -> Result<(), RuntimeError> {
-        let fi = self
-            .field_index(inst, field)
-            .ok_or_else(|| rerr(0, format!("no field {field}")))?;
-        self.instances[inst].fields[fi] = value;
-        Ok(())
-    }
-
-    fn field_index(&self, inst: usize, field: &str) -> Option<usize> {
-        let i = &self.instances[inst];
-        let defs = if i.fb_id == usize::MAX {
-            let pid = self
-                .program_instances
-                .iter()
-                .position(|&x| x == inst)?;
-            &self.unit.programs[pid].fields
-        } else {
-            &self.unit.fbs[i.fb_id].fields
-        };
-        defs.iter().position(|f| f.name.eq_ignore_ascii_case(field))
-    }
-
-    pub fn global(&self, name: &str) -> Option<Value> {
-        self.unit.find_global(name).map(|g| self.globals[g].clone())
-    }
-
-    pub fn set_global(&mut self, name: &str, value: Value) -> bool {
-        match self.unit.find_global(name) {
-            Some(g) => {
-                self.globals[g] = value;
-                true
-            }
-            None => false,
-        }
     }
 
     /// Run a PROGRAM body once (one "scan" of that task).
@@ -139,8 +101,8 @@ impl Vm {
             .find_program(name)
             .ok_or_else(|| rerr(0, format!("no program {name}")))?;
         let inst = self.program_instances[pid];
-        let unit = Rc::clone(&self.unit);
-        let cu = Rc::clone(&self.code);
+        let unit = Arc::clone(&self.unit);
+        let cu = Arc::clone(&self.code);
         let fd = &unit.programs[pid].body;
         let code = &cu.programs[pid];
         let base = self.push_frame_vals(fd, code, Vec::new())?;
@@ -159,8 +121,8 @@ impl Vm {
             .unit
             .find_function(name)
             .ok_or_else(|| rerr(0, format!("no function {name}")))?;
-        let unit = Rc::clone(&self.unit);
-        let cu = Rc::clone(&self.code);
+        let unit = Arc::clone(&self.unit);
+        let cu = Arc::clone(&self.code);
         let fd = &unit.funcs[fid];
         let code = &cu.funcs[fid];
         let base = self.push_frame_vals(fd, code, args)?;
@@ -179,8 +141,8 @@ impl Vm {
         args: Vec<Value>,
     ) -> Result<Value, RuntimeError> {
         let fb_id = self.instances[inst].fb_id;
-        let unit = Rc::clone(&self.unit);
-        let cu = Rc::clone(&self.code);
+        let unit = Arc::clone(&self.unit);
+        let cu = Arc::clone(&self.code);
         let fb = &unit.fbs[fb_id];
         let midx = fb
             .methods
@@ -221,7 +183,7 @@ impl Vm {
         }
         let base = self.regs.len();
         self.regs.reserve(code.n_regs as usize);
-        self.regs.push(fd.slots[0].init.deep_clone());
+        self.regs.push(fd.slots[0].init.to_value());
         let n_args = args.len();
         for (i, a) in args.into_iter().enumerate() {
             self.push_arg(i < fd.n_inputs, a);
@@ -254,7 +216,7 @@ impl Vm {
         }
         let base = self.regs.len();
         self.regs.reserve(code.n_regs as usize);
-        self.regs.push(fd.slots[0].init.deep_clone());
+        self.regs.push(fd.slots[0].init.to_value());
         for (i, &r) in arg_regs.iter().enumerate() {
             let a = std::mem::replace(
                 &mut self.regs[caller_base + r as usize],
@@ -282,7 +244,7 @@ impl Vm {
     #[inline]
     fn fill_frame(&mut self, fd: &FuncDef, code: &Code, n_args: usize) {
         for slot in fd.slots.iter().skip(1 + n_args) {
-            self.regs.push(slot.init.deep_clone());
+            self.regs.push(slot.init.to_value());
         }
         for _ in fd.slots.len()..code.n_regs as usize {
             self.regs.push(Value::Null);
@@ -741,8 +703,8 @@ impl Vm {
 
                 // ------------------------------------------------ calls
                 Op::CallFn { dst, fid, args } => {
-                    let unit = Rc::clone(&self.unit);
-                    let cu = Rc::clone(&self.code);
+                    let unit = Arc::clone(&self.unit);
+                    let cu = Arc::clone(&self.code);
                     let fd = &unit.funcs[*fid as usize];
                     let callee = &cu.funcs[*fid as usize];
                     let nbase = self.push_frame_regs(fd, callee, args, base)?;
@@ -758,8 +720,8 @@ impl Vm {
                         Value::FbRef(h) => *h,
                         _ => return Err(rerr(0, "FB instance not bound")),
                     };
-                    let unit = Rc::clone(&self.unit);
-                    let cu = Rc::clone(&self.code);
+                    let unit = Arc::clone(&self.unit);
+                    let cu = Arc::clone(&self.code);
                     let fd = &unit.fbs[*fb as usize].methods[*midx as usize];
                     let callee = &cu.fb_methods[*fb as usize][*midx as usize];
                     let nbase = self.push_frame_regs(fd, callee, args, base)?;
@@ -782,8 +744,8 @@ impl Vm {
                         _ => return Err(rerr(*line, "bad interface value")),
                     };
                     let fb_id = self.instances[inst].fb_id;
-                    let unit = Rc::clone(&self.unit);
-                    let cu = Rc::clone(&self.code);
+                    let unit = Arc::clone(&self.unit);
+                    let cu = Arc::clone(&self.code);
                     let table = unit.fbs[fb_id].vtables[*iface as usize]
                         .as_ref()
                         .ok_or_else(|| {
@@ -817,8 +779,8 @@ impl Vm {
                         Value::FbRef(h) => *h,
                         _ => return Err(rerr(*line, "FB instance not bound")),
                     };
-                    let unit = Rc::clone(&self.unit);
-                    let cu = Rc::clone(&self.code);
+                    let unit = Arc::clone(&self.unit);
+                    let cu = Arc::clone(&self.code);
                     let fd = unit.fbs[*fb_id as usize]
                         .body
                         .as_ref()
@@ -859,11 +821,11 @@ impl Vm {
 
                 // --------------------------------------- struct literal
                 Op::StructNew { dst, sid } => {
-                    let unit = Rc::clone(&self.unit);
+                    let unit = Arc::clone(&self.unit);
                     let vals: Vec<Value> = unit.structs[*sid as usize]
                         .fields
                         .iter()
-                        .map(|f| f.init.deep_clone())
+                        .map(|f| f.init.to_value())
                         .collect();
                     reg!(*dst) = Value::Struct(Rc::new(
                         std::cell::RefCell::new(vals),
@@ -915,9 +877,12 @@ impl Vm {
                     } else {
                         4
                     };
+                    // Split the borrow through `host` explicitly:
+                    // `meter` and `io_dir` both live behind the Deref.
+                    let host = &mut self.host;
                     let v = builtins::exec_file_io(
-                        &mut self.meter,
-                        &self.io_dir,
+                        &mut host.meter,
+                        &host.io_dir,
                         *b,
                         fname.as_ref(),
                         bytes,

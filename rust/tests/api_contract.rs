@@ -1,15 +1,23 @@
-//! Contract tests for the `icsml::api` inference API:
+//! Contract tests for the `icsml::api` inference API (post
+//! Engine/Session split):
 //!
-//! * the engine hot path (`infer_into`) performs **zero heap
-//!   allocations** per call (counting global allocator);
+//! * the engine session hot path (`Session::infer_into`) performs
+//!   **zero heap allocations** per call (counting global allocator);
 //! * `infer_batch` equals N sequential `infer_into` calls on every
 //!   backend (engine, ST interpreter, and XLA when artifacts exist);
-//! * the router survives failing backends (policy fallback).
+//! * the router survives failing backends (policy fallback through a
+//!   per-caller `RouterSession`).
+//!
+//! The N-threads × M-sessions bit-identity properties live in
+//! `tests/concurrency.rs`.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
+use std::sync::Arc;
 
-use icsml::api::{Backend, EngineBackend, InferenceError, ModelSpec};
+use icsml::api::{
+    Backend, EngineBackend, InferenceError, ModelSpec, Session,
+};
 use icsml::coordinator::{InferenceRouter, RoutePolicy};
 use icsml::util::binio;
 use icsml::util::fixtures::{mlp_8_16_4, ported_mlp_8_16_4};
@@ -58,38 +66,42 @@ fn allocations_on_this_thread() -> u64 {
 // ---------------------------------------------------------------------
 
 #[test]
-fn engine_infer_into_is_allocation_free() {
-    let mut b = EngineBackend::new(mlp_8_16_4(42));
+fn engine_session_infer_into_is_allocation_free() {
+    let b = EngineBackend::new(mlp_8_16_4(42));
+    // Session creation allocates (buffers are minted here, exactly so
+    // the per-call path doesn't have to).
+    let mut s = b.session().unwrap();
     let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.9).cos()).collect();
     let mut out = [0.0f32; 4];
 
     // Warm up: first calls may touch lazily-grown internal scratch.
     for _ in 0..3 {
-        b.infer_into(&x, &mut out).unwrap();
+        s.infer_into(&x, &mut out).unwrap();
     }
 
     let before = allocations_on_this_thread();
     for _ in 0..1000 {
-        b.infer_into(&x, &mut out).unwrap();
+        s.infer_into(&x, &mut out).unwrap();
     }
     let delta = allocations_on_this_thread() - before;
     assert_eq!(
         delta, 0,
-        "engine infer_into allocated {delta} times over 1000 calls"
+        "engine session infer_into allocated {delta} times over 1000 calls"
     );
 }
 
 #[test]
-fn engine_batch_is_allocation_free() {
-    let mut b = EngineBackend::new(mlp_8_16_4(43));
+fn engine_session_batch_is_allocation_free() {
+    let b = EngineBackend::new(mlp_8_16_4(43));
+    let mut s = b.session().unwrap();
     let xs: Vec<f32> = (0..8 * 32).map(|i| (i as f32 * 0.13).sin()).collect();
     let mut out = vec![0.0f32; 4 * 32];
     for _ in 0..3 {
-        b.infer_batch(&xs, &mut out).unwrap();
+        s.infer_batch(&xs, &mut out).unwrap();
     }
     let before = allocations_on_this_thread();
     for _ in 0..100 {
-        b.infer_batch(&xs, &mut out).unwrap();
+        s.infer_batch(&xs, &mut out).unwrap();
     }
     assert_eq!(allocations_on_this_thread() - before, 0);
 }
@@ -98,18 +110,18 @@ fn engine_batch_is_allocation_free() {
 // infer_batch == N x infer_into
 // ---------------------------------------------------------------------
 
-fn batch_matches_sequential(b: &mut dyn Backend, tol: f32) {
-    let ModelSpec { in_dim, out_dim, .. } = b.spec();
+fn batch_matches_sequential(s: &mut dyn Session, tol: f32) {
+    let ModelSpec { in_dim, out_dim, .. } = s.spec();
     prop_check(15, |g| {
         let n = g.usize_in(1..=5);
         let xs: Vec<f32> =
             (0..n * in_dim).map(|_| g.f32_in(-1.5, 1.5)).collect();
         let mut batched = vec![0.0f32; n * out_dim];
-        let served = b.infer_batch(&xs, &mut batched).unwrap();
+        let served = s.infer_batch(&xs, &mut batched).unwrap();
         prop_assert(served == n, format!("served {served} != {n}"))?;
         for i in 0..n {
             let mut one = vec![0.0f32; out_dim];
-            b.infer_into(&xs[i * in_dim..(i + 1) * in_dim], &mut one)
+            s.infer_into(&xs[i * in_dim..(i + 1) * in_dim], &mut one)
                 .unwrap();
             for k in 0..out_dim {
                 let (a, c) = (batched[i * out_dim + k], one[k]);
@@ -125,24 +137,28 @@ fn batch_matches_sequential(b: &mut dyn Backend, tol: f32) {
 
 #[test]
 fn engine_batch_matches_sequential() {
-    let mut b = EngineBackend::new(mlp_8_16_4(7));
-    batch_matches_sequential(&mut b, 0.0);
+    let b = EngineBackend::new(mlp_8_16_4(7));
+    let mut s = b.session().unwrap();
+    batch_matches_sequential(s.as_mut(), 0.0);
 }
 
 #[test]
 fn st_batch_matches_sequential() {
-    let (mut b, _) = ported_mlp_8_16_4(7, "batch");
-    batch_matches_sequential(&mut b, 0.0);
+    let (b, _) = ported_mlp_8_16_4(7, "batch");
+    let mut s = b.session().unwrap();
+    batch_matches_sequential(s.as_mut(), 0.0);
 }
 
 #[test]
 fn st_and_engine_agree_through_the_api() {
-    let (mut st, reference) = ported_mlp_8_16_4(11, "agree");
-    let mut eng = EngineBackend::new(reference);
+    let (st, reference) = ported_mlp_8_16_4(11, "agree");
+    let eng = EngineBackend::new(reference);
+    let mut st_s = st.session().unwrap();
+    let mut eng_s = eng.session().unwrap();
     prop_check(10, |g| {
         let x: Vec<f32> = (0..8).map(|_| g.f32_in(-1.0, 1.0)).collect();
-        let a = st.infer(&x).unwrap();
-        let b = eng.infer(&x).unwrap();
+        let a = st_s.infer(&x).unwrap();
+        let b = eng_s.infer(&x).unwrap();
         let dev = a
             .iter()
             .zip(&b)
@@ -164,22 +180,22 @@ fn xla_batch_matches_sequential_when_artifacts_exist() {
     use icsml::porting::Manifest;
     use icsml::runtime::{Runtime, XlaBackend};
     let m = Manifest::load(&root).unwrap();
+    let spec = m.model("classifier").unwrap();
+    let (in_dim, out_dim) = (spec.in_dim(), spec.out_dim());
     let rt = Runtime::cpu().unwrap();
     let exe = rt.load_hlo(&m.hlo_path("classifier_b1").unwrap()).unwrap();
-    let mut xla = XlaBackend::new(exe, 400, 2);
+    let xla = XlaBackend::new(exe, in_dim, out_dim);
+    let mut s = xla.session().unwrap();
 
-    let x = binio::read_f32(
-        &m.root
-            .join(m.dataset.expect("eval_windows").as_str().unwrap()),
-    )
-    .unwrap();
+    let x = binio::read_f32(&m.dataset_path("eval_windows").unwrap()).unwrap();
     let n = 4usize;
-    let mut batched = vec![0.0f32; n * 2];
-    assert_eq!(xla.infer_batch(&x[..n * 400], &mut batched).unwrap(), n);
+    let mut batched = vec![0.0f32; n * out_dim];
+    assert_eq!(s.infer_batch(&x[..n * in_dim], &mut batched).unwrap(), n);
     for i in 0..n {
-        let mut one = [0.0f32; 2];
-        xla.infer_into(&x[i * 400..(i + 1) * 400], &mut one).unwrap();
-        assert_eq!(&batched[i * 2..(i + 1) * 2], &one[..]);
+        let mut one = vec![0.0f32; out_dim];
+        s.infer_into(&x[i * in_dim..(i + 1) * in_dim], &mut one)
+            .unwrap();
+        assert_eq!(&batched[i * out_dim..(i + 1) * out_dim], &one[..]);
     }
 }
 
@@ -189,6 +205,18 @@ fn xla_batch_matches_sequential_when_artifacts_exist() {
 
 struct AlwaysFails;
 impl Backend for AlwaysFails {
+    fn name(&self) -> &'static str {
+        "always-fails"
+    }
+    fn spec(&self) -> ModelSpec {
+        ModelSpec::dense_f32(8, 4)
+    }
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+        Ok(Box::new(AlwaysFailsSession))
+    }
+}
+struct AlwaysFailsSession;
+impl Session for AlwaysFailsSession {
     fn name(&self) -> &'static str {
         "always-fails"
     }
@@ -210,11 +238,12 @@ impl Backend for AlwaysFails {
 #[test]
 fn router_serves_every_request_despite_failing_backend() {
     let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
-    r.register("bad", Box::new(AlwaysFails));
-    r.register("engine", Box::new(EngineBackend::new(mlp_8_16_4(3))));
+    r.register("bad", Arc::new(AlwaysFails));
+    r.register("engine", Arc::new(EngineBackend::new(mlp_8_16_4(3))));
+    let mut sess = r.session();
     let x = [0.2f32; 8];
     for i in 0..20 {
-        let (name, out) = r.infer(&x).unwrap_or_else(|e| {
+        let (name, out) = sess.infer(&x).unwrap_or_else(|e| {
             panic!("request {i} failed despite healthy fallback: {e}")
         });
         assert_eq!(name, "engine");

@@ -1,0 +1,229 @@
+//! Concurrency contract of the Engine/Session split (run in CI with
+//! `--release`):
+//!
+//! * N threads × M sessions over **one shared backend** produce
+//!   bit-identical outputs to sequential `infer_into` — engine and ST;
+//! * router statistics stay consistent under contention (every request
+//!   accounted for exactly once);
+//! * the `serve::Pool` answers pipelined traffic bit-identically to a
+//!   single sequential session;
+//! * the shared handles really are `Send + Sync` (compile-time
+//!   assertions).
+
+use std::sync::Arc;
+use std::thread;
+
+use icsml::api::{
+    Backend, EngineBackend, Session, SharedBackend, StBackend,
+};
+use icsml::coordinator::{InferenceRouter, RoutePolicy};
+use icsml::serve::{Pool, PoolConfig};
+use icsml::util::fixtures::{mlp_8_16_4, ported_mlp_8_16_4};
+
+const THREADS: usize = 4;
+const SESSIONS_PER_THREAD: usize = 2;
+
+/// Deterministic input corpus: `count` vectors of length `dim`.
+fn corpus(dim: usize, count: usize) -> Vec<Vec<f32>> {
+    (0..count)
+        .map(|i| {
+            (0..dim)
+                .map(|k| ((i * dim + k) as f32 * 0.0937).sin() * 1.3)
+                .collect()
+        })
+        .collect()
+}
+
+/// Serve the whole corpus through one fresh session, returning the
+/// logits as bit patterns.
+fn serve_corpus(
+    backend: &dyn Backend,
+    inputs: &[Vec<f32>],
+) -> Vec<Vec<u32>> {
+    let mut session = backend.session().expect("session");
+    let out_dim = session.spec().out_dim;
+    let mut out = vec![0.0f32; out_dim];
+    inputs
+        .iter()
+        .map(|x| {
+            session.infer_into(x, &mut out).expect("infer");
+            out.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect()
+}
+
+/// The acceptance property: ≥ THREADS threads, each running
+/// SESSIONS_PER_THREAD sessions over the same shared backend, all
+/// bit-identical to the sequential reference.
+fn assert_concurrent_bit_identical(backend: SharedBackend, in_dim: usize) {
+    let inputs = Arc::new(corpus(in_dim, 24));
+    let want = Arc::new(serve_corpus(backend.as_ref(), &inputs));
+
+    thread::scope(|scope| {
+        for t in 0..THREADS {
+            let backend = Arc::clone(&backend);
+            let inputs = Arc::clone(&inputs);
+            let want = Arc::clone(&want);
+            scope.spawn(move || {
+                // Sessions are minted inside the thread (they are
+                // intentionally not Send); interleave M of them so the
+                // test also exercises session independence.
+                let mut sessions: Vec<Box<dyn Session>> = (0
+                    ..SESSIONS_PER_THREAD)
+                    .map(|_| backend.session().expect("session"))
+                    .collect();
+                for (i, x) in inputs.iter().enumerate() {
+                    for (si, s) in sessions.iter_mut().enumerate() {
+                        let got = s.infer(x).expect("infer");
+                        let bits: Vec<u32> =
+                            got.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(
+                            bits, want[i],
+                            "thread {t} session {si} input {i}: \
+                             concurrent result diverged from sequential"
+                        );
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn engine_concurrent_sessions_bit_identical_to_sequential() {
+    let backend: SharedBackend = Arc::new(EngineBackend::new(mlp_8_16_4(91)));
+    assert_concurrent_bit_identical(backend, 8);
+}
+
+#[test]
+fn st_concurrent_sessions_bit_identical_to_sequential() {
+    // The ported ICSML program: shared compiled bytecode + state
+    // image; every session replays the BINARR weight loading from the
+    // fixture dir on its first scan (concurrent reads of the same
+    // files).
+    let (st, _) = ported_mlp_8_16_4(91, "concurrency");
+    let backend: SharedBackend = Arc::new(st);
+    assert_concurrent_bit_identical(backend, 8);
+}
+
+#[test]
+fn mixed_single_shot_and_partial_sessions_do_not_interfere() {
+    // One thread drives a suspended §6.3 partial inference while
+    // others hammer single-shot traffic on the same backend.
+    let backend: SharedBackend = Arc::new(EngineBackend::new(mlp_8_16_4(17)));
+    let x_partial: Vec<f32> =
+        (0..8).map(|k| (k as f32 * 0.31).cos()).collect();
+    let want_partial = backend.session().unwrap().infer(&x_partial).unwrap();
+    let inputs = corpus(8, 16);
+    let want = serve_corpus(backend.as_ref(), &inputs);
+
+    thread::scope(|scope| {
+        {
+            let backend = Arc::clone(&backend);
+            let x_partial = x_partial.clone();
+            let want_partial = want_partial.clone();
+            scope.spawn(move || {
+                let mut s = backend.session().unwrap();
+                let p = s.partial().expect("engine resumes");
+                p.begin(&x_partial).unwrap();
+                // Step one row at a time, yielding between steps so
+                // the single-shot threads interleave heavily.
+                while !p.finished() {
+                    p.step(1).unwrap();
+                    thread::yield_now();
+                }
+                let mut out = vec![0.0f32; want_partial.len()];
+                p.finish(&mut out).unwrap();
+                assert_eq!(out, want_partial, "suspended partial corrupted");
+            });
+        }
+        for _ in 0..3 {
+            let backend = Arc::clone(&backend);
+            let inputs = inputs.clone();
+            let want = want.clone();
+            scope.spawn(move || {
+                let mut s = backend.session().unwrap();
+                for (i, x) in inputs.iter().enumerate() {
+                    let got: Vec<u32> = s
+                        .infer(x)
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    assert_eq!(got, want[i]);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn router_stats_consistent_under_contention() {
+    let mut router = InferenceRouter::new(RoutePolicy::FastestObserved);
+    router.register("a", Arc::new(EngineBackend::new(mlp_8_16_4(5))));
+    router.register("b", Arc::new(EngineBackend::new(mlp_8_16_4(5))));
+    let router = Arc::new(router);
+
+    const REQS_PER_THREAD: usize = 50;
+    let x: Vec<f32> = (0..8).map(|k| (k as f32 * 0.21).sin()).collect();
+    let want = router.session().infer(&x).unwrap().1;
+
+    thread::scope(|scope| {
+        for _ in 0..THREADS {
+            let router = Arc::clone(&router);
+            let x = x.clone();
+            let want = want.clone();
+            scope.spawn(move || {
+                let mut sess = router.session();
+                for _ in 0..REQS_PER_THREAD {
+                    let (_, out) = sess.infer(&x).expect("routed");
+                    assert_eq!(out, want);
+                }
+            });
+        }
+    });
+
+    // Every request (including the warmup one above) is recorded
+    // exactly once, across whichever backends ranking chose.
+    let total: u64 = ["a", "b"]
+        .iter()
+        .map(|n| router.stats(n).unwrap().requests)
+        .sum();
+    assert_eq!(total, (THREADS * REQS_PER_THREAD) as u64 + 1);
+    for n in ["a", "b"] {
+        let s = router.stats(n).unwrap();
+        assert_eq!(s.errors, 0, "backend {n} saw spurious errors");
+    }
+}
+
+#[test]
+fn pool_pipelined_traffic_is_bit_identical() {
+    let backend: SharedBackend = Arc::new(EngineBackend::new(mlp_8_16_4(29)));
+    let inputs = corpus(8, 64);
+    let want = serve_corpus(backend.as_ref(), &inputs);
+
+    let pool = Pool::new(
+        Arc::clone(&backend),
+        PoolConfig { workers: THREADS, max_batch: 5 },
+    );
+    let tickets: Vec<_> = inputs.iter().map(|x| pool.submit(x)).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let got: Vec<u32> =
+            t.wait().unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want[i], "pooled request {i} diverged");
+    }
+    assert_eq!(pool.served(), inputs.len() as u64);
+    assert_eq!(pool.errors(), 0);
+}
+
+#[test]
+fn shared_handles_are_send_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<EngineBackend>();
+    assert_send_sync::<StBackend>();
+    assert_send_sync::<InferenceRouter>();
+    assert_send_sync::<Pool>();
+    assert_send_sync::<icsml::st::HostImage>();
+    assert_send_sync::<icsml::st::ir::Unit>();
+    assert_send_sync::<icsml::st::bytecode::CodeUnit>();
+}

@@ -6,7 +6,7 @@
 //! logits must match the Python-exported expected logits), and all
 //! three Rust backends (ST interpreter, native engine, XLA) agree.
 
-use icsml::api::{Backend, EngineBackend, StBackend};
+use icsml::api::{Backend, EngineBackend, Session as _, StBackend};
 use icsml::porting::{self, codegen::CodegenOptions, Manifest};
 use icsml::runtime::{Runtime, XlaBackend};
 use icsml::util::binio;
@@ -40,14 +40,8 @@ fn classifier_hlo_matches_python_logits() {
 
     let ds = &m.dataset;
     let n = ds.expect("eval_n").as_usize().unwrap().min(64);
-    let x = binio::read_f32(
-        &m.root.join(ds.expect("eval_windows").as_str().unwrap()),
-    )
-    .unwrap();
-    let z = binio::read_f32(
-        &m.root.join(ds.expect("eval_logits").as_str().unwrap()),
-    )
-    .unwrap();
+    let x = binio::read_f32(&m.dataset_path("eval_windows").unwrap()).unwrap();
+    let z = binio::read_f32(&m.dataset_path("eval_logits").unwrap()).unwrap();
 
     for i in 0..n {
         let xi = &x[i * 400..(i + 1) * 400];
@@ -68,34 +62,32 @@ fn classifier_hlo_matches_python_logits() {
 fn three_backends_agree_on_the_classifier() {
     let Some(m) = manifest_or_skip() else { return };
     let spec = m.model("classifier").unwrap();
+    let (in_dim, out_dim) = (spec.in_dim(), spec.out_dim());
 
     // Engine backend from exported weights.
     let engine = porting::load_engine_model(&m.root, spec).unwrap();
-    let mut eng = EngineBackend::new(engine);
+    let mut eng = EngineBackend::new(engine).session().unwrap();
 
     // ST backend from generated ICSML code.
     let st_src = porting::generate_st_program(spec, &CodegenOptions::default());
     let mut it = icsml_st::load(&st_src).unwrap();
     it.io_dir = m.root.join(&spec.weights_dir);
-    let mut st = StBackend::new(it, "MAIN").unwrap();
+    let mut st = StBackend::new(it, "MAIN").unwrap().session().unwrap();
 
-    // XLA backend from the AOT artifact.
+    // XLA backend from the AOT artifact (dims from the manifest).
     let rt = Runtime::cpu().unwrap();
     let exe = rt.load_hlo(&m.hlo_path("classifier_b1").unwrap()).unwrap();
-    let mut xla = XlaBackend::new(exe, 400, 2);
+    let mut xla =
+        XlaBackend::new(exe, in_dim, out_dim).session().unwrap();
 
-    let ds = &m.dataset;
-    let x = binio::read_f32(
-        &m.root.join(ds.expect("eval_windows").as_str().unwrap()),
-    )
-    .unwrap();
+    let x = binio::read_f32(&m.dataset_path("eval_windows").unwrap()).unwrap();
 
     for i in 0..8 {
-        let xi = &x[i * 400..(i + 1) * 400];
+        let xi = &x[i * in_dim..(i + 1) * in_dim];
         let a = eng.infer(xi).unwrap();
         let b = st.infer(xi).unwrap();
         let c = xla.infer(xi).unwrap();
-        for k in 0..2 {
+        for k in 0..out_dim {
             assert!(
                 (a[k] - b[k]).abs() < 1e-3,
                 "sample {i}: engine {} vs st {}",
@@ -120,14 +112,8 @@ fn engine_accuracy_matches_training_report() {
 
     let ds = &m.dataset;
     let n = ds.expect("eval_n").as_usize().unwrap();
-    let x = binio::read_f32(
-        &m.root.join(ds.expect("eval_windows").as_str().unwrap()),
-    )
-    .unwrap();
-    let y = binio::read_i32(
-        &m.root.join(ds.expect("eval_labels").as_str().unwrap()),
-    )
-    .unwrap();
+    let x = binio::read_f32(&m.dataset_path("eval_windows").unwrap()).unwrap();
+    let y = binio::read_i32(&m.dataset_path("eval_labels").unwrap()).unwrap();
 
     let mut correct = 0usize;
     for i in 0..n {
