@@ -8,18 +8,22 @@
 //! useless).
 //!
 //! Modes:
-//!   (default)        throughput table on stdout
+//!   (default)        throughput table + deadline scenario on stdout
 //!   --json[=PATH]    also write BENCH_serve.json (ns/request per
-//!                    worker count, scaling vs 1 worker)
+//!                    worker count, scaling vs 1 worker,
+//!                    deadline-hit/shed rates)
 //!   --smoke          correctness gate only, no timing (CI's fast
-//!                    serve-pool regression check)
+//!                    serve-pool regression check; also asserts zero
+//!                    sheds under no-deadline load)
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use icsml::api::{Backend, EngineBackend, Session as _, SharedBackend};
+use icsml::api::{
+    Backend, EngineBackend, InferenceError, Session as _, SharedBackend,
+};
 use icsml::engine::{Act, Layer, Model};
-use icsml::serve::{Pool, PoolConfig};
+use icsml::serve::{Deadline, Pool, PoolConfig, Priority, SubmitOptions};
 use icsml::util::benchkit::{
     json_flag, smoke_flag, write_bench_json, BenchRecord,
 };
@@ -99,11 +103,17 @@ fn main() {
             }
         }
         assert_eq!(pool.errors(), 0, "gate wave saw errors");
+        assert_eq!(
+            pool.shed(),
+            0,
+            "no-deadline load must never shed — the deadline scheduler \
+             must be invisible to plain FIFO traffic"
+        );
     }
     if smoke {
         println!(
             "serve-pool smoke OK: {} pooled requests bit-identical to the \
-             sequential session",
+             sequential session, zero sheds under no-deadline load",
             gate_wave.len()
         );
         return;
@@ -165,6 +175,103 @@ fn main() {
          backend serves threads concurrently)"
     );
 
+    // ---------------- deadline scenario -------------------------------
+    // Mixed-criticality burst: 25% control-class with a tight
+    // deadline, 25% defense-class with a looser one, 50% batch-class
+    // without any. Budgets are multiples of a calibrated sequential
+    // per-request cost so the scenario stresses the scheduler
+    // comparably on any machine. Reported (not asserted): per-class
+    // deadline hit rates and the overall shed rate.
+    const CONTROL_BUDGET_X: f64 = 50.0;
+    const DEFENSE_BUDGET_X: f64 = 400.0;
+    let t0 = Instant::now();
+    for x in wave.iter().take(256) {
+        let _ = reference.infer(x).expect("calibration inference");
+    }
+    let per_req_us = t0.elapsed().as_secs_f64() * 1e6 / 256.0;
+
+    let dl_requests = 3000usize;
+    let pool = Pool::new(
+        Arc::clone(&backend),
+        PoolConfig { workers: 4, max_batch: MAX_BATCH },
+    );
+    // class index: 0 = control, 1 = defense, 2 = batch (no deadline)
+    let class_of = |i: usize| match i % 4 {
+        0 => 0usize,
+        1 => 1,
+        _ => 2,
+    };
+    let tickets: Vec<_> = wave
+        .iter()
+        .take(dl_requests)
+        .enumerate()
+        .map(|(i, x)| match class_of(i) {
+            0 => pool
+                .submit_with(
+                    x,
+                    SubmitOptions::new()
+                        .priority(Priority::Control)
+                        .deadline(Deadline::within_us(
+                            per_req_us * CONTROL_BUDGET_X,
+                        )),
+                )
+                .expect("no admission gate"),
+            1 => pool
+                .submit_with(
+                    x,
+                    SubmitOptions::new()
+                        .priority(Priority::Defense)
+                        .deadline(Deadline::within_us(
+                            per_req_us * DEFENSE_BUDGET_X,
+                        )),
+                )
+                .expect("no admission gate"),
+            _ => pool.submit(x),
+        })
+        .collect();
+    let mut ok = [0u64; 3];
+    let mut shed = [0u64; 3];
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Ok(_) => ok[class_of(i)] += 1,
+            Err(InferenceError::DeadlineExceeded { .. }) => {
+                shed[class_of(i)] += 1
+            }
+            Err(e) => panic!("deadline wave request {i} failed: {e}"),
+        }
+    }
+    let rate = |k: usize| {
+        let tot = ok[k] + shed[k];
+        if tot == 0 {
+            1.0
+        } else {
+            ok[k] as f64 / tot as f64
+        }
+    };
+    let (control_hit, defense_hit) = (rate(0), rate(1));
+    let deadlined_ok = ok[0] + ok[1];
+    let deadlined_tot = deadlined_ok + shed[0] + shed[1];
+    let hit_rate = deadlined_ok as f64 / (deadlined_tot as f64).max(1.0);
+    let shed_rate = pool.shed() as f64 / dl_requests as f64;
+    assert_eq!(
+        ok[2] as usize,
+        dl_requests - dl_requests / 4 - dl_requests / 4,
+        "batch-class (no deadline) requests can never be shed"
+    );
+    println!(
+        "\ndeadline scenario — {dl_requests} mixed requests, calibrated \
+         {per_req_us:.1} us/request, budgets {CONTROL_BUDGET_X:.0}x \
+         (control) / {DEFENSE_BUDGET_X:.0}x (defense):"
+    );
+    println!(
+        "  control hit {:.1}%  defense hit {:.1}%  overall deadline hit \
+         {:.1}%  shed rate {:.1}%",
+        control_hit * 100.0,
+        defense_hit * 100.0,
+        hit_rate * 100.0,
+        shed_rate * 100.0
+    );
+
     if let Some(path) = json_path {
         let extras = vec![
             (
@@ -178,6 +285,18 @@ fn main() {
             ),
             ("requests", Json::Num(requests as f64)),
             ("max_batch", Json::Num(MAX_BATCH as f64)),
+            (
+                "deadline",
+                Json::obj(vec![
+                    ("calibration_us_per_req", Json::Num(per_req_us)),
+                    ("control_budget_x", Json::Num(CONTROL_BUDGET_X)),
+                    ("defense_budget_x", Json::Num(DEFENSE_BUDGET_X)),
+                    ("control_hit_rate", Json::Num(control_hit)),
+                    ("defense_hit_rate", Json::Num(defense_hit)),
+                    ("deadline_hit_rate", Json::Num(hit_rate)),
+                    ("shed_rate", Json::Num(shed_rate)),
+                ]),
+            ),
         ];
         write_bench_json(&path, "serve", &records, extras)
             .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));

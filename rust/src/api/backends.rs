@@ -50,6 +50,7 @@ fn engine_spec(model: &Model) -> ModelSpec {
 }
 
 impl EngineBackend {
+    /// Take ownership of a model and wrap it in a shareable handle.
     pub fn new(model: Model) -> EngineBackend {
         EngineBackend::shared(Arc::new(model))
     }
@@ -97,6 +98,8 @@ pub struct EngineSession {
 }
 
 impl EngineSession {
+    /// Mint a session over shared weights, pre-sizing every buffer
+    /// (the per-call hot path then never allocates).
     pub fn new(model: Arc<Model>) -> EngineSession {
         let spec = engine_spec(&model);
         EngineSession {
@@ -370,6 +373,8 @@ impl Backend for StBackend {
 /// construction and cross-checked against the engine in the
 /// coordinator tests.
 pub struct StSession {
+    /// The session's private VM (public so hosts can poke PLC state —
+    /// globals, instance fields — between scans, as the examples do).
     pub vm: Vm,
     program: String,
     last: Meter,

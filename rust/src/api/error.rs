@@ -15,20 +15,56 @@ pub enum InferenceError {
     ShapeMismatch {
         /// Which buffer ("input", "output", "batch input", ...).
         what: &'static str,
+        /// Length the model requires.
         expected: usize,
+        /// Length the caller supplied.
         got: usize,
     },
     /// The backend exists but cannot serve right now (missing
     /// artifacts, uninitialized program instance, ...).
-    BackendUnavailable { backend: String, reason: String },
+    BackendUnavailable {
+        /// Which backend refused ("engine", "st", "xla", "pool", ...).
+        backend: String,
+        /// Human-readable refusal reason.
+        reason: String,
+    },
     /// The backend does not implement the requested operation
     /// (e.g. partial inference on a single-shot substrate).
-    Unsupported { backend: String, op: &'static str },
+    Unsupported {
+        /// Which backend refused.
+        backend: String,
+        /// The unimplemented operation.
+        op: &'static str,
+    },
     /// The backend tried and failed mid-execution.
-    ExecutionFailed { backend: String, source: anyhow::Error },
+    ExecutionFailed {
+        /// Which backend failed.
+        backend: String,
+        /// The underlying execution error.
+        source: anyhow::Error,
+    },
     /// A partial-session call arrived in the wrong state
     /// (`step` before `begin`, `finish` before completion, ...).
-    SessionState { backend: String, expected: &'static str },
+    SessionState {
+        /// Which backend's session refused.
+        backend: String,
+        /// The state the call required.
+        expected: &'static str,
+    },
+    /// The request's deadline passed (or provably cannot be met)
+    /// before it was served — the request is *shed*, never answered
+    /// late (`serve::Pool` scheduling, PR 4). Not a backend fault: it
+    /// signals load or an infeasible budget, not broken hardware.
+    DeadlineExceeded {
+        /// Where the miss was detected: `"admission"` (rejected at
+        /// ingress by the cost-model gate), `"queue"` (expired while
+        /// waiting for a worker), or `"router"` (expired between
+        /// fallback attempts).
+        stage: &'static str,
+        /// Microseconds by which the deadline was — or, for admission
+        /// rejections, would have been — missed.
+        late_us: f64,
+    },
     /// A router had no backends registered.
     NoBackends,
     /// A router exhausted every candidate backend.
@@ -42,8 +78,9 @@ impl InferenceError {
     /// True when the fault lies with the backend (flaky execution,
     /// missing artifacts, bad session state) — the class a router
     /// should penalize and retry elsewhere. False for caller-side
-    /// errors ([`InferenceError::ShapeMismatch`]) and router
-    /// aggregates, which say nothing about the backend's health.
+    /// errors ([`InferenceError::ShapeMismatch`]), load/deadline sheds
+    /// ([`InferenceError::DeadlineExceeded`]) and router aggregates,
+    /// which say nothing about the backend's health.
     pub fn is_backend_fault(&self) -> bool {
         matches!(
             self,
@@ -74,6 +111,13 @@ impl fmt::Display for InferenceError {
                 write!(
                     f,
                     "backend {backend}: invalid session state, expected {expected}"
+                )
+            }
+            InferenceError::DeadlineExceeded { stage, late_us } => {
+                write!(
+                    f,
+                    "deadline exceeded at {stage} by {late_us:.1} us \
+                     (request shed, not served late)"
                 )
             }
             InferenceError::NoBackends => write!(f, "no backends registered"),
@@ -123,6 +167,17 @@ mod tests {
         }
         let err = fails().unwrap_err();
         assert!(err.downcast_ref::<InferenceError>().is_some());
+    }
+
+    #[test]
+    fn deadline_exceeded_is_not_a_backend_fault() {
+        let e = InferenceError::DeadlineExceeded {
+            stage: "queue",
+            late_us: 12.5,
+        };
+        assert!(!e.is_backend_fault(), "a shed says nothing about health");
+        let s = e.to_string();
+        assert!(s.contains("queue") && s.contains("12.5"));
     }
 
     #[test]

@@ -44,6 +44,7 @@
 //! * **Resumable inference** — [`PartialSession`] folds the §6.3
 //!   `begin`/`step(row_budget)`/`finish` sub-API into the session;
 //!   the multipart coordinator schedules over any capable session.
+#![deny(missing_docs)]
 
 pub mod backend;
 pub mod backends;

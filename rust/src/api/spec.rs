@@ -19,7 +19,7 @@ pub struct ModelSpec {
     /// (paper §6.3 multipart inference).
     pub supports_partial: bool,
     /// The backend meters ST instruction costs per inference
-    /// ([`crate::api::Backend::last_meter`] returns `Some`).
+    /// ([`crate::api::Session::last_meter`] returns `Some`).
     pub supports_meter: bool,
     /// Integer quantization scheme the weights are stored in, if any
     /// (paper §6.1); `None` means f32 (`REAL`).
@@ -51,7 +51,9 @@ impl ModelSpec {
 /// costing `macs_per_row` multiply-accumulates in the PLC timing model.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RowChunk {
+    /// Number of schedulable rows in this chunk.
     pub rows: usize,
+    /// Modeled multiply-accumulates each row costs.
     pub macs_per_row: f64,
 }
 
@@ -61,6 +63,7 @@ pub struct RowChunk {
 /// cycles.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RowPlan {
+    /// The plan's chunks, in execution order.
     pub chunks: Vec<RowChunk>,
 }
 
@@ -87,6 +90,7 @@ impl RowPlan {
         }
     }
 
+    /// Total schedulable rows across every chunk.
     pub fn total_rows(&self) -> usize {
         self.chunks.iter().map(|c| c.rows).sum()
     }

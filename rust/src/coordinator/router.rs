@@ -22,6 +22,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::api::{Backend, InferenceError, Session, SharedBackend};
+use crate::serve::Deadline;
 
 /// Modeled latency charged per error when ranking backends: one full
 /// second — a flaky backend has to be *very* fast to stay attractive.
@@ -246,8 +247,39 @@ impl RouterSession<'_> {
         x: &[f32],
         out: &mut [f32],
     ) -> Result<String, InferenceError> {
+        self.route_into(x, out, None)
+    }
+
+    /// Deadline pass-through of [`RouterSession::infer_into`]: the
+    /// caller's `serve`-layer deadline bounds the *whole* fallback
+    /// chain, not each attempt — once it expires, remaining candidate
+    /// backends are not tried and the request is shed with
+    /// [`InferenceError::DeadlineExceeded`] (a late answer is
+    /// worthless to a scan cycle, so burning more backends on it only
+    /// steals time from live requests).
+    pub fn infer_into_by(
+        &mut self,
+        x: &[f32],
+        out: &mut [f32],
+        deadline: Deadline,
+    ) -> Result<String, InferenceError> {
+        self.route_into(x, out, Some(deadline))
+    }
+
+    fn route_into(
+        &mut self,
+        x: &[f32],
+        out: &mut [f32],
+        deadline: Option<Deadline>,
+    ) -> Result<String, InferenceError> {
         let mut failures = Vec::new();
         for name in self.router.ranked()? {
+            if let Some(d) = deadline.filter(|d| d.expired()) {
+                return Err(InferenceError::DeadlineExceeded {
+                    stage: "router",
+                    late_us: d.late_by_us(Instant::now()),
+                });
+            }
             // Start the clock only once the session exists: lazy
             // session minting (an ST image restore + first-scan weight
             // load can be milliseconds) must not skew the backend's
@@ -563,6 +595,31 @@ mod tests {
             }
             other => panic!("want AllBackendsFailed, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn expired_deadline_stops_fallback_iteration() {
+        let mut r = InferenceRouter::new(RoutePolicy::FastestObserved);
+        r.register("good", Arc::new(EngineBackend::new(tiny_model(1.0))));
+        let mut sess = r.session();
+        let mut out = [0.0f32; 2];
+        // An already-expired deadline sheds before any backend is
+        // tried — no stats recorded, no backend penalized.
+        let d = crate::serve::Deadline::within_us(0.0);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        match sess.infer_into_by(&[1.0, 1.0], &mut out, d) {
+            Err(InferenceError::DeadlineExceeded {
+                stage: "router", ..
+            }) => {}
+            other => panic!("want router shed, got {other:?}"),
+        }
+        let s = r.stats("good").unwrap();
+        assert_eq!(s.requests + s.errors, 0, "no backend was touched");
+        // A live deadline routes normally.
+        let d = crate::serve::Deadline::within_us(30e6);
+        let name = sess.infer_into_by(&[1.0, 1.0], &mut out, d).unwrap();
+        assert_eq!(name, "good");
+        assert_eq!(out, [2.0, 2.0]);
     }
 
     #[test]

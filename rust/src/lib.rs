@@ -39,8 +39,12 @@
 //!   sessions, policy fallback) + the §6.3 multipart scheduler, both
 //!   generic over the [`api`] traits.
 //! * [`serve`] — the concurrent serving layer: [`serve::Pool`] shards
-//!   requests across worker threads with per-worker sessions and
-//!   micro-batching over one shared backend.
+//!   requests across worker threads with per-worker sessions over one
+//!   shared backend, scheduled by priority class + earliest deadline
+//!   ([`serve::DeadlineQueue`]), with deadline-compatible
+//!   micro-batching, typed sheds and a cost-model
+//!   [`serve::Admission`] gate (see `docs/ARCHITECTURE.md` for the
+//!   whole-stack map).
 
 pub mod api;
 pub mod coordinator;

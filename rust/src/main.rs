@@ -9,8 +9,10 @@
 //! * `hitl`    — run the §7 HITL case study (short form; the full
 //!               driver is `examples/desalination_defense.rs`).
 //! * `serve`   — serve eval windows through a `serve::Pool` (shared
-//!               backend, per-worker sessions, micro-batching):
-//!               `--requests N --workers W --batch B [--xla]`.
+//!               backend, per-worker sessions, deadline-aware
+//!               micro-batching): `--requests N --workers W --batch B
+//!               [--xla] [--deadline-us D] [--class
+//!               control|defense|batch] [--admit bbb|wago]`.
 
 use std::sync::Arc;
 
@@ -24,7 +26,9 @@ use icsml::plc::{profiles::KERAS_MODEL_SIZES, HwProfile, PLC_SPECS};
 use icsml::porting::{self, codegen::CodegenOptions, Manifest};
 use icsml::quant::{memory_requirements, Scheme};
 use icsml::runtime::{Runtime, XlaBackend};
-use icsml::serve::{Pool, PoolConfig};
+use icsml::serve::{
+    Admission, Deadline, Pool, PoolConfig, Priority, SubmitOptions,
+};
 use icsml::util::bench::Table;
 use icsml::util::binio;
 use icsml::util::cli::Args;
@@ -48,7 +52,9 @@ fn main() -> Result<()> {
                  [options]\n  port  --model classifier [--out FILE] \
                  [--no-fused]\n  infer --index N [--st|--engine|--xla]\n  \
                  hitl  --steps N --attack combined --magnitude 0.5\n  \
-                 serve --requests N --workers W --batch B [--xla]"
+                 serve --requests N --workers W --batch B [--xla] \
+                 [--deadline-us D] [--class control|defense|batch] \
+                 [--admit bbb|wago]"
             );
             Ok(())
         }
@@ -248,6 +254,26 @@ fn serve(args: &Args) -> Result<()> {
     let n = args.opt_usize("requests", 100);
     let workers = args.opt_usize("workers", 4);
     let batch = args.opt_usize("batch", 8);
+    // Deadline-aware options (PR 4): a per-request wall-clock budget,
+    // a priority class, and an optional admission profile that gates
+    // ingress on the PLC cost model.
+    let deadline_us = args.opt_f64("deadline-us", 0.0);
+    let class = args.opt_or("class", "batch");
+    let priority = Priority::from_name(&class)
+        .ok_or_else(|| anyhow::anyhow!("unknown priority class {class:?}"))?;
+    let admission = match args.opt("admit") {
+        Some(name) => {
+            let profile = HwProfile::by_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown hardware profile {name:?}")
+            })?;
+            // Coarse per-request MAC estimate from the manifest's
+            // layer sizes.
+            let macs: usize =
+                spec.sizes.windows(2).map(|w| w[0] * w[1]).sum();
+            Some(Admission::from_macs(profile, macs as f64))
+        }
+        None => None,
+    };
     let x = binio::read_f32(&m.dataset_path("eval_windows")?)?;
     anyhow::ensure!(
         x.len() >= in_dim,
@@ -266,33 +292,84 @@ fn serve(args: &Args) -> Result<()> {
     };
     println!(
         "serving {n} requests on backend '{}' — {workers} workers, \
-         micro-batch {batch}",
-        backend.name()
+         micro-batch {batch}, class {}{}",
+        backend.name(),
+        priority.name(),
+        if deadline_us > 0.0 {
+            format!(", deadline {deadline_us} us/request")
+        } else {
+            String::new()
+        }
     );
 
-    let pool = Pool::new(backend, PoolConfig { workers, max_batch: batch });
+    let cfg = PoolConfig { workers, max_batch: batch };
+    let pool = match admission {
+        Some(a) => {
+            println!(
+                "  admission gate on {} (modeled {:.1} us/request)",
+                a.profile().name,
+                a.estimate_us()
+            );
+            Pool::with_admission(backend, cfg, a)
+        }
+        None => Pool::new(backend, cfg),
+    };
     let t0 = std::time::Instant::now();
     // Pipelined submission: all tickets in flight keeps every worker
-    // busy and gives micro-batching something to coalesce.
+    // busy and gives micro-batching something to coalesce. With a
+    // deadline, each request's budget starts at its own submit
+    // instant; admission rejections surface as shed tickets here.
+    let mut rejected = 0u64;
     let tickets: Vec<_> = (0..n)
         .map(|i| {
             let w = i % total;
-            pool.submit(&x[w * in_dim..(w + 1) * in_dim])
+            let window = &x[w * in_dim..(w + 1) * in_dim];
+            // Class (and admission, when a deadline is set) apply to
+            // every request; without --deadline-us the requests are
+            // undeadlined but still scheduled in their band.
+            let mut opts = SubmitOptions::new().priority(priority);
+            if deadline_us > 0.0 {
+                opts = opts.deadline(Deadline::within_us(deadline_us));
+            }
+            match pool.submit_with(window, opts) {
+                Ok(t) => Some(t),
+                Err(_) => {
+                    rejected += 1;
+                    None
+                }
+            }
         })
         .collect();
     let mut attacks = 0u64;
-    for t in tickets {
-        let out = t.wait()?;
-        if out[1] > out[0] {
-            attacks += 1;
+    let mut shed = 0u64;
+    let mut answered = 0u64;
+    for t in tickets.into_iter().flatten() {
+        match t.wait() {
+            Ok(out) => {
+                answered += 1;
+                if out[1] > out[0] {
+                    attacks += 1;
+                }
+            }
+            Err(icsml::api::InferenceError::DeadlineExceeded { .. }) => {
+                shed += 1;
+            }
+            Err(e) => return Err(e.into()),
         }
     }
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "served {n} requests in {secs:.3} s ({:.0} req/s): {attacks} \
-         flagged as attacks",
-        n as f64 / secs.max(1e-9)
+        "served {answered}/{n} requests in {secs:.3} s ({:.0} req/s): \
+         {attacks} flagged as attacks",
+        answered as f64 / secs.max(1e-9)
     );
+    if deadline_us > 0.0 {
+        println!(
+            "  deadline hit rate {:.1}% — {shed} shed in queue, \
+             {rejected} rejected at admission",
+            100.0 * answered as f64 / (n as f64).max(1.0)
+        );
+    }
     println!(
         "  {} batch calls (mean batch {:.2}); per-worker shares: {:?}",
         pool.batches(),

@@ -102,6 +102,14 @@ impl HwProfile {
         self.costs.time_us(m) * self.profiler_overhead
     }
 
+    /// Modeled CPU time as a wall-clock [`std::time::Duration`] — the
+    /// budget→deadline bridge used by `serve::Deadline::for_meter`:
+    /// the serving tier can commit to answering no later than this
+    /// device would have computed the same metered workload.
+    pub fn budget(&self, m: &Meter) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(self.time_us(m).max(0.0) / 1e6)
+    }
+
     /// BeagleBone Black (1 GHz Cortex-A8, 512 MB) — Codesys soft-PLC.
     /// Per-class costs calibrated against the paper's §5.2 anchors.
     pub fn beaglebone() -> HwProfile {
@@ -246,6 +254,15 @@ mod tests {
         assert!(HwProfile::by_name("wago").is_some());
         assert!(HwProfile::by_name("BBB").is_some());
         assert!(HwProfile::by_name("cray").is_none());
+    }
+
+    #[test]
+    fn budget_duration_matches_time_us() {
+        let bbb = HwProfile::beaglebone();
+        let mut m = Meter::new();
+        m.fp_add = 1000;
+        let us = bbb.time_us(&m);
+        assert!((bbb.budget(&m).as_secs_f64() * 1e6 - us).abs() < 1e-6);
     }
 
     #[test]

@@ -70,6 +70,16 @@ impl ScanCycle {
     pub fn ml_budget_us(&self, control_us: f64) -> f64 {
         (self.period_us - control_us).max(0.0)
     }
+
+    /// [`ScanCycle::ml_budget_us`] as a wall-clock duration — the
+    /// budget→deadline bridge used by `serve::Deadline::for_scan` (an
+    /// in-cycle inference answered after this much wall time has by
+    /// definition overrun the cycle).
+    pub fn ml_budget(&self, control_us: f64) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(
+            self.ml_budget_us(control_us) / 1e6,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -98,6 +108,13 @@ mod tests {
         let sc = ScanCycle::new(HwProfile::beaglebone(), 100.0);
         assert_eq!(sc.ml_budget_us(150.0), 0.0);
         assert_eq!(sc.ml_budget_us(40.0), 60.0);
+    }
+
+    #[test]
+    fn ml_budget_duration_matches_us() {
+        let sc = ScanCycle::new(HwProfile::beaglebone(), 100_000.0);
+        assert_eq!(sc.ml_budget(40_000.0).as_micros(), 60_000);
+        assert_eq!(sc.ml_budget(200_000.0), std::time::Duration::ZERO);
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Ingress admission control: reject work that cannot finish in
+//! budget *before* it queues.
+//!
+//! Shedding at the worker (see `serve::pool`) protects the pool from
+//! serving stale answers; admission protects the *queue* — under
+//! overload it is strictly better to refuse a doomed deadline at
+//! submit time (the caller can fail over, degrade, or drop) than to
+//! let it occupy queue slots and be shed later anyway. The estimate
+//! comes from the repo's PLC cost model (`plc/profiles.rs` cost
+//! vectors over a calibrated [`Meter`], or a coarse MAC count), the
+//! same modeled microseconds the §6.3 multipart scheduler budgets
+//! with.
+
+use crate::api::InferenceError;
+use crate::plc::HwProfile;
+use crate::st::Meter;
+
+use super::queue::Deadline;
+
+/// A per-request cost estimate plus the admission formula.
+///
+/// Attached to a pool via `Pool::with_admission`, it turns
+/// `Pool::submit_with` into a gate: a request whose deadline cannot be
+/// met even if everything already queued is served on schedule is
+/// rejected with [`InferenceError::DeadlineExceeded`] at submit time.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    profile: HwProfile,
+    est_us: f64,
+}
+
+impl Admission {
+    /// Gate on an explicit per-request estimate (µs).
+    pub fn new(profile: HwProfile, est_us: f64) -> Admission {
+        Admission { profile, est_us: est_us.max(0.0) }
+    }
+
+    /// Estimate from a calibrated abstract-op [`Meter`] (e.g. the
+    /// `last_meter()` of one warmup inference on an ST session):
+    /// `profile.time_us(meter)` modeled microseconds per request.
+    pub fn from_meter(profile: HwProfile, m: &Meter) -> Admission {
+        let est_us = profile.time_us(m);
+        Admission::new(profile, est_us)
+    }
+
+    /// Coarse estimate from a dense MAC count (for substrates that do
+    /// not meter): each MAC is costed as one FP multiply, one FP add
+    /// and two loads on the profile's cost vector. A lower bound — it
+    /// ignores activations, call and branch overhead.
+    pub fn from_macs(profile: HwProfile, macs: f64) -> Admission {
+        let mut m = Meter::new();
+        let n = macs.max(0.0) as u64;
+        m.fp_mul = n;
+        m.fp_add = n;
+        m.loads = 2 * n;
+        Admission::from_meter(profile, &m)
+    }
+
+    /// The modeled per-request cost (µs).
+    pub fn estimate_us(&self) -> f64 {
+        self.est_us
+    }
+
+    /// The hardware profile the estimate is modeled on.
+    pub fn profile(&self) -> &HwProfile {
+        &self.profile
+    }
+
+    /// Modeled completion time (µs from now) of a request arriving
+    /// behind `queued` requests on a pool with `workers` workers: the
+    /// backlog is assumed evenly spread, so the new request waits
+    /// `⌊queued / workers⌋` service times and then runs once.
+    pub fn projected_us(&self, queued: usize, workers: usize) -> f64 {
+        let ahead = (queued / workers.max(1)) + 1;
+        self.est_us * ahead as f64
+    }
+
+    /// The admission formula: admit unless the request's deadline is
+    /// sooner than its modeled completion
+    /// ([`Admission::projected_us`]). Requests without a deadline are
+    /// always admitted — there is nothing to miss.
+    pub fn admit(
+        &self,
+        deadline: Option<&Deadline>,
+        queued: usize,
+        workers: usize,
+    ) -> Result<(), InferenceError> {
+        let Some(d) = deadline else { return Ok(()) };
+        let needed = self.projected_us(queued, workers);
+        let remaining = d.remaining_us();
+        if remaining < needed {
+            return Err(InferenceError::DeadlineExceeded {
+                stage: "admission",
+                late_us: needed - remaining,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(est_us: f64) -> Admission {
+        Admission::new(HwProfile::beaglebone(), est_us)
+    }
+
+    #[test]
+    fn no_deadline_always_admitted() {
+        let a = gate(1e9);
+        assert!(a.admit(None, 10_000, 1).is_ok());
+    }
+
+    #[test]
+    fn infeasible_deadline_rejected_at_ingress() {
+        let a = gate(1_000_000.0); // 1 s per request, modeled
+        let d = Deadline::within_us(1_000.0); // 1 ms budget
+        match a.admit(Some(&d), 0, 4) {
+            Err(InferenceError::DeadlineExceeded { stage, late_us }) => {
+                assert_eq!(stage, "admission");
+                assert!(late_us > 0.0);
+            }
+            other => panic!("want DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn feasible_deadline_admitted() {
+        let a = gate(100.0); // 100 µs per request
+        let d = Deadline::within_us(1_000_000.0); // 1 s budget
+        assert!(a.admit(Some(&d), 8, 4).is_ok());
+    }
+
+    #[test]
+    fn backlog_counts_against_the_budget() {
+        let a = gate(1_000.0);
+        // Same generous-ish budget: an empty pool admits, a deep
+        // backlog on one worker does not.
+        let near = Deadline::within_us(5_000.0);
+        assert!(a.admit(Some(&near), 0, 1).is_ok());
+        let near = Deadline::within_us(5_000.0);
+        assert!(a.admit(Some(&near), 100, 1).is_err());
+        // More workers absorb the same backlog.
+        let near = Deadline::within_us(5_000.0);
+        assert!(a.admit(Some(&near), 3, 4).is_ok());
+    }
+
+    #[test]
+    fn mac_estimate_scales_with_model() {
+        let small = Admission::from_macs(HwProfile::beaglebone(), 1_000.0);
+        let big = Admission::from_macs(HwProfile::beaglebone(), 100_000.0);
+        assert!(big.estimate_us() > 50.0 * small.estimate_us());
+        assert!(small.estimate_us() > 0.0);
+    }
+
+    #[test]
+    fn meter_estimate_matches_profile_time() {
+        let profile = HwProfile::beaglebone();
+        let mut m = Meter::new();
+        m.fp_mul = 8256;
+        m.loads = 29_708;
+        let a = Admission::from_meter(profile.clone(), &m);
+        assert!((a.estimate_us() - profile.time_us(&m)).abs() < 1e-9);
+        assert_eq!(a.profile().name, "BeagleBone Black");
+    }
+}

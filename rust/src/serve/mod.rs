@@ -1,19 +1,43 @@
-//! Concurrent serving on top of the Engine/Session split.
+//! Concurrent serving on top of the Engine/Session split, scheduled
+//! by scan-cycle deadlines.
 //!
 //! The paper frames ICSML as one PLC running one scan loop; the
 //! ROADMAP's north star is a serving system watching *fleets* of
 //! controllers (the deployment model the PLC-security literature
 //! assumes — many detection streams, one inference service). This
-//! module is the first concurrency substrate built on the two-level
-//! API contract: a [`Pool`] shards requests across N worker threads,
-//! each worker owning a private [`crate::api::Session`] over one
-//! shared [`crate::api::Backend`], with opportunistic micro-batching
-//! of queued requests.
+//! module is the concurrency substrate built on the two-level API
+//! contract, in three layers:
 //!
-//! Throughput scaling is measured by `benches/serve_pool.rs`
-//! (`BENCH_serve.json`); bit-identical-to-sequential results are
-//! asserted by `tests/concurrency.rs`.
+//! * [`queue`] — the scheduler: priority classes
+//!   ([`Priority::Control`] > [`Priority::Defense`] >
+//!   [`Priority::Batch`]), optional per-request [`Deadline`]s (given
+//!   directly, or derived from the PLC cost model via
+//!   [`Deadline::for_meter`] / [`Deadline::for_scan`]), and the
+//!   lock-sheltered earliest-deadline-first [`DeadlineQueue`].
+//! * [`admission`] — the ingress gate: an [`Admission`] estimate over
+//!   `plc/profiles.rs` cost vectors rejects requests whose deadline
+//!   provably cannot be met behind the current backlog.
+//! * [`pool`] — the workers: a [`Pool`] shards requests across N
+//!   threads, each owning a private [`crate::api::Session`] over one
+//!   shared [`crate::api::Backend`], micro-batching queued requests
+//!   only when every batch member's deadline survives the projected
+//!   completion time, and *shedding* expired requests
+//!   ([`crate::api::InferenceError::DeadlineExceeded`]) instead of
+//!   serving them late.
+//!
+//! Throughput scaling plus deadline-hit/shed rates are measured by
+//! `benches/serve_pool.rs` (`BENCH_serve.json`);
+//! bit-identical-to-sequential results and the deadline semantics
+//! (expired ⇒ shed, urgent ⇒ never delayed by batch formation,
+//! no deadlines ⇒ exact FIFO) are asserted by
+//! `tests/concurrency.rs`. The end-to-end picture lives in
+//! `docs/ARCHITECTURE.md`.
+#![deny(missing_docs)]
 
+pub mod admission;
 pub mod pool;
+pub mod queue;
 
+pub use admission::Admission;
 pub use pool::{Pool, PoolConfig, Ticket};
+pub use queue::{Deadline, DeadlineQueue, Meta, Priority, SubmitOptions};

@@ -1,5 +1,5 @@
 //! [`Pool`]: a fixed set of worker threads serving inference requests
-//! from one shared backend.
+//! from one shared backend, under deadline-aware scheduling.
 //!
 //! Design:
 //!
@@ -8,24 +8,42 @@
 //!   *inside* the worker thread — sessions are deliberately not
 //!   `Send`, so this is the only sound construction, and it is exactly
 //!   what the Engine/Session split exists for.
-//! * **One shared queue** (`Mutex<Receiver>`): the classic
-//!   work-stealing-free competitive-consumer pool. Fairness comes from
-//!   the OS scheduler; the lock is held only to pop, never to serve.
-//! * **Micro-batching.** After blocking on one request, a worker
-//!   drains up to `max_batch - 1` more without blocking and serves
-//!   them through one [`Session::infer_batch`] call. For the engine
-//!   this is exactly equivalent to sequential `infer_into` (the API
-//!   contract), so batching never changes results — asserted in
-//!   `tests/concurrency.rs`. If a substrate rejects a ragged batch
-//!   (fixed-batch XLA), the worker falls back to per-request serving.
-//! * **No new dependencies**: `std::sync::mpsc` + threads.
+//! * **One shared [`DeadlineQueue`]** (`serve::queue`): priority bands
+//!   (`Control` > `Defense` > `Batch`) with earliest-deadline-first
+//!   ordering inside each band, strict FIFO for undeadlined traffic.
+//!   The lock is held only to push/pop, never to serve.
+//! * **Deadline-compatible micro-batching.** After blocking on one
+//!   request, a worker drains up to `max_batch - 1` more *only while
+//!   every member of the forming batch (and the candidate) can still
+//!   meet its deadline at the projected batch completion time*,
+//!   estimated from a per-worker moving average of measured service
+//!   time. An urgent request is therefore never delayed by a filling
+//!   batch; undeadlined traffic batches exactly like the old FIFO
+//!   pool. Batches go through one [`Session::infer_batch`] call
+//!   (bit-equivalent to sequential `infer_into` — the API contract,
+//!   asserted in `tests/concurrency.rs`), with per-request fallback
+//!   when a substrate rejects the batch.
+//! * **Sheds, not stale answers.** A request whose [`Deadline`] has
+//!   passed when a worker picks it up is answered with
+//!   [`InferenceError::DeadlineExceeded`] instead of being served
+//!   late ([`Pool::shed`] counts them). An optional ingress
+//!   [`Admission`] gate rejects provably-infeasible deadlines at
+//!   [`Pool::submit_with`] time, before they occupy queue slots.
+//! * **No worker, no hang.** If every worker has exited (e.g. a
+//!   backend that panics), pending and future requests fail with a
+//!   typed error instead of blocking [`Ticket::wait`] forever.
+//! * **No new dependencies**: `std::sync` primitives + threads.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::api::{Backend, InferenceError, Session, SharedBackend};
+
+use super::admission::Admission;
+use super::queue::{Deadline, DeadlineQueue, Meta, SubmitOptions};
 
 /// Pool sizing knobs.
 #[derive(Debug, Clone)]
@@ -53,6 +71,7 @@ struct Counters {
     served: AtomicU64,
     batches: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
 }
 
 /// A handle to an in-flight request; [`Ticket::wait`] blocks for the
@@ -63,6 +82,10 @@ pub struct Ticket {
 }
 
 impl Ticket {
+    /// Block until the request resolves. Never hangs: if the serving
+    /// side is gone (queue closed, all workers exited, worker died
+    /// mid-request) the disconnected channel resolves to a typed
+    /// [`InferenceError::BackendUnavailable`].
     pub fn wait(self) -> Result<Vec<f32>, InferenceError> {
         self.rx.recv().unwrap_or_else(|_| {
             Err(InferenceError::BackendUnavailable {
@@ -76,62 +99,147 @@ impl Ticket {
 /// The worker pool. Dropping it shuts the queue and joins every
 /// worker.
 pub struct Pool {
-    tx: Option<Sender<Job>>,
+    queue: Arc<DeadlineQueue<Job>>,
     workers: Vec<JoinHandle<()>>,
+    n_workers: usize,
     counters: Arc<Counters>,
     worker_served: Arc<Vec<AtomicU64>>,
+    admission: Option<Admission>,
     in_dim: usize,
 }
 
 impl Pool {
     /// Spin up `cfg.workers` threads over one shared backend.
     pub fn new(backend: SharedBackend, cfg: PoolConfig) -> Pool {
+        Pool::build(backend, cfg, None)
+    }
+
+    /// Like [`Pool::new`], with an ingress [`Admission`] gate:
+    /// [`Pool::submit_with`] rejects requests whose deadline the cost
+    /// model says cannot be met behind the current backlog.
+    pub fn with_admission(
+        backend: SharedBackend,
+        cfg: PoolConfig,
+        admission: Admission,
+    ) -> Pool {
+        Pool::build(backend, cfg, Some(admission))
+    }
+
+    fn build(
+        backend: SharedBackend,
+        cfg: PoolConfig,
+        admission: Option<Admission>,
+    ) -> Pool {
         let n_workers = cfg.workers.max(1);
         let max_batch = cfg.max_batch.max(1);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(DeadlineQueue::new());
         let counters = Arc::new(Counters::default());
-        let worker_served: Arc<Vec<AtomicU64>> = Arc::new(
-            (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
-        );
+        let worker_served: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_workers).map(|_| AtomicU64::new(0)).collect());
+        let live = Arc::new(AtomicUsize::new(n_workers));
         let in_dim = backend.spec().in_dim;
         let workers = (0..n_workers)
             .map(|w| {
-                let backend = Arc::clone(&backend);
-                let rx = Arc::clone(&rx);
-                let counters = Arc::clone(&counters);
-                let worker_served = Arc::clone(&worker_served);
-                std::thread::spawn(move || {
-                    worker_loop(
-                        w,
-                        backend,
-                        rx,
-                        max_batch,
-                        counters,
-                        worker_served,
-                    )
-                })
+                let ctx = WorkerCtx {
+                    w,
+                    backend: Arc::clone(&backend),
+                    queue: Arc::clone(&queue),
+                    max_batch,
+                    counters: Arc::clone(&counters),
+                    worker_served: Arc::clone(&worker_served),
+                    live: Arc::clone(&live),
+                };
+                std::thread::spawn(move || worker_loop(ctx))
             })
             .collect();
         Pool {
-            tx: Some(tx),
+            queue,
             workers,
+            n_workers,
             counters,
             worker_served,
+            admission,
             in_dim,
         }
     }
 
-    /// Enqueue one request; returns immediately with a [`Ticket`].
-    pub fn submit(&self, x: &[f32]) -> Ticket {
+    fn enqueue(&self, x: &[f32], opts: SubmitOptions) -> Ticket {
         let (resp, rx) = channel();
         let job = Job { x: x.to_vec(), resp };
-        if let Some(tx) = &self.tx {
-            // A send error means every worker is gone; the ticket then
-            // reports BackendUnavailable from its closed channel.
-            let _ = tx.send(job);
-        }
+        // A failed push means the queue is closed (every worker gone);
+        // the dropped job closes the response channel and the ticket
+        // reports BackendUnavailable.
+        let _ = self.queue.push(opts.priority, opts.deadline, job);
         Ticket { rx }
+    }
+
+    /// Enqueue one best-effort request (`Batch` class, no deadline —
+    /// the old FIFO front door); returns immediately with a
+    /// [`Ticket`].
+    pub fn submit(&self, x: &[f32]) -> Ticket {
+        self.enqueue(x, SubmitOptions::default())
+    }
+
+    /// Enqueue one request with scheduling options — the
+    /// deadline-aware front door.
+    ///
+    /// With an [`Admission`] gate attached
+    /// ([`Pool::with_admission`]), a deadline the cost model says
+    /// cannot be met behind the current backlog is rejected here with
+    /// [`InferenceError::DeadlineExceeded`] instead of queueing;
+    /// without a gate, submission always succeeds and infeasible
+    /// deadlines are shed at the worker.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use icsml::api::{EngineBackend, SharedBackend};
+    /// use icsml::engine::{Act, Layer, Model};
+    /// use icsml::serve::{Deadline, Pool, PoolConfig, Priority, SubmitOptions};
+    ///
+    /// let model = Model::new(vec![Layer::dense(
+    ///     vec![0.5; 4],
+    ///     vec![0.0; 2],
+    ///     2,
+    ///     Act::None,
+    /// )]);
+    /// let backend: SharedBackend = Arc::new(EngineBackend::new(model));
+    /// let pool = Pool::new(backend, PoolConfig::default());
+    ///
+    /// // A control-class request with ten seconds of budget: served.
+    /// let ticket = pool
+    ///     .submit_with(
+    ///         &[1.0, 1.0],
+    ///         SubmitOptions::new()
+    ///             .priority(Priority::Control)
+    ///             .deadline(Deadline::within_us(10_000_000.0)),
+    ///     )
+    ///     .unwrap();
+    /// assert_eq!(ticket.wait().unwrap().len(), 2);
+    ///
+    /// // A zero-budget deadline is shed, never served late.
+    /// let late = pool
+    ///     .submit_with(
+    ///         &[1.0, 1.0],
+    ///         SubmitOptions::new().deadline(Deadline::within_us(0.0)),
+    ///     )
+    ///     .unwrap()
+    ///     .wait();
+    /// assert!(late.is_err());
+    /// assert_eq!(pool.shed(), 1);
+    /// ```
+    pub fn submit_with(
+        &self,
+        x: &[f32],
+        opts: SubmitOptions,
+    ) -> Result<Ticket, InferenceError> {
+        if let Some(adm) = &self.admission {
+            adm.admit(
+                opts.deadline.as_ref(),
+                self.queue.len(),
+                self.n_workers,
+            )?;
+        }
+        Ok(self.enqueue(x, opts))
     }
 
     /// Blocking convenience: submit + wait.
@@ -151,9 +259,23 @@ impl Pool {
         self.counters.batches.load(Ordering::Relaxed)
     }
 
-    /// Requests answered with an error.
+    /// Requests answered with an error (excluding sheds).
     pub fn errors(&self) -> u64 {
         self.counters.errors.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed because their deadline expired before service
+    /// ([`InferenceError::DeadlineExceeded`]). Always 0 under
+    /// no-deadline load — asserted by the serve_pool bench's `--smoke`
+    /// gate.
+    pub fn shed(&self) -> u64 {
+        self.counters.shed.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently queued (the admission gate's backlog
+    /// signal).
+    pub fn queued(&self) -> usize {
+        self.queue.len()
     }
 
     /// Per-worker served counts (shard-balance introspection for the
@@ -173,8 +295,9 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        // Closing the channel ends every worker's recv loop.
-        self.tx.take();
+        // Closing the queue ends every worker's pop loop once the
+        // pending items are drained and served.
+        self.queue.close();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -188,20 +311,64 @@ fn unavailable(reason: &str) -> InferenceError {
     }
 }
 
-fn worker_loop(
+/// Everything one worker thread needs (bundled so the loop has a
+/// single argument).
+struct WorkerCtx {
     w: usize,
     backend: SharedBackend,
-    rx: Arc<Mutex<Receiver<Job>>>,
+    queue: Arc<DeadlineQueue<Job>>,
     max_batch: usize,
     counters: Arc<Counters>,
     worker_served: Arc<Vec<AtomicU64>>,
-) {
+    live: Arc<AtomicUsize>,
+}
+
+/// Runs on worker exit — including a panicking unwind. When the
+/// *last* worker goes, pending requests would otherwise wait forever
+/// on a queue nobody reads; close it and answer them with a typed
+/// error (the `Ticket::wait`-never-hangs guarantee).
+struct ExitGuard {
+    queue: Arc<DeadlineQueue<Job>>,
+    counters: Arc<Counters>,
+    live: Arc<AtomicUsize>,
+}
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.queue.close();
+            for (_, job) in self.queue.drain() {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = job
+                    .resp
+                    .send(Err(unavailable("all pool workers exited")));
+            }
+        }
+    }
+}
+
+/// `deadline` (if any) can still be met if service completes `us`
+/// microseconds after `now`.
+fn fits(deadline: Option<Deadline>, now: Instant, us: f64) -> bool {
+    match deadline {
+        None => true,
+        Some(d) => now + Duration::from_secs_f64(us.max(0.0) / 1e6)
+            <= d.instant(),
+    }
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    let _guard = ExitGuard {
+        queue: Arc::clone(&ctx.queue),
+        counters: Arc::clone(&ctx.counters),
+        live: Arc::clone(&ctx.live),
+    };
     // Sessions are minted on the worker thread (they are not Send).
     // A backend that cannot create sessions still drains the queue,
     // answering every request with the typed reason.
     let mut session: Option<Box<dyn Session>> = None;
     let mut session_err = String::new();
-    match backend.session() {
+    match ctx.backend.session() {
         Ok(s) => session = Some(s),
         Err(e) => session_err = e.to_string(),
     }
@@ -213,53 +380,86 @@ fn worker_loop(
         None => (0, 0, 1),
     };
 
+    // Per-worker moving average of measured per-request service time
+    // (µs) — the batch-formation cost model. 0 until the first
+    // measurement, which disables compatibility pruning exactly like
+    // the old FIFO pool (nothing is known yet, and undeadlined
+    // traffic never needs it).
+    let mut est_us = 0.0f64;
+
     // Reused across batches: after warmup these hit their high-water
     // capacity and stop allocating.
     let mut xs: Vec<f32> = Vec::new();
     let mut out: Vec<f32> = Vec::new();
-    let mut jobs: Vec<Job> = Vec::new();
+    let mut group: Vec<(Meta, Job)> = Vec::new();
 
     loop {
-        jobs.clear();
-        {
-            let guard = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => return, // a sibling panicked; shut down
-            };
-            match guard.recv() {
-                Ok(j) => jobs.push(j),
-                Err(_) => return, // pool dropped: queue closed
-            }
-            while jobs.len() < max_batch {
-                match guard.try_recv() {
-                    Ok(j) => jobs.push(j),
-                    Err(TryRecvError::Empty)
-                    | Err(TryRecvError::Disconnected) => break,
+        group.clear();
+        match ctx.queue.pop_wait() {
+            Some(e) => group.push(e),
+            None => return, // pool dropped: queue closed and drained
+        }
+        // Micro-batch formation: drain the queue's best entries while
+        // (a) the batch has room and (b) the projected completion of
+        // the *grown* batch still meets every member's deadline and
+        // the candidate's own. The moment the best queued entry is
+        // incompatible we stop — it will head its own group on the
+        // next loop turn, never waiting out a batch it cannot afford.
+        while group.len() < ctx.max_batch {
+            let popped = if est_us > 0.0 {
+                let projected = est_us * (group.len() + 1) as f64;
+                let now = Instant::now();
+                let group_deadline =
+                    group.iter().filter_map(|(m, _)| m.deadline).min();
+                if !fits(group_deadline, now, projected) {
+                    break;
                 }
+                ctx.queue
+                    .try_pop_if(|m| fits(m.deadline, now, projected))
+            } else {
+                ctx.queue.try_pop_if(|_| true)
+            };
+            match popped {
+                Some(e) => group.push(e),
+                None => break,
             }
-        } // queue lock released before any inference work
+        }
 
         let Some(session) = session.as_mut() else {
-            for j in jobs.drain(..) {
-                counters.errors.fetch_add(1, Ordering::Relaxed);
+            for (_, j) in group.drain(..) {
+                ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = j.resp.send(Err(unavailable(&session_err)));
             }
             continue;
         };
 
-        // Split off malformed requests so one bad client cannot poison
-        // a whole batch.
-        let mut batch: Vec<Job> = Vec::with_capacity(jobs.len());
-        for j in jobs.drain(..) {
-            if j.x.len() == in_dim {
-                batch.push(j);
-            } else {
-                counters.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = j.resp.send(Err(InferenceError::ShapeMismatch {
-                    what: "input",
-                    expected: in_dim,
-                    got: j.x.len(),
-                }));
+        // Shed expired requests (a deadline that passed while queued
+        // is answered with the typed shed error, *never* served late)
+        // and split off malformed ones so one bad client cannot
+        // poison a whole batch.
+        let now = Instant::now();
+        let mut batch: Vec<Job> = Vec::with_capacity(group.len());
+        for (meta, j) in group.drain(..) {
+            match meta.deadline {
+                Some(d) if d.expired_at(now) => {
+                    ctx.counters.shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = j.resp.send(Err(
+                        InferenceError::DeadlineExceeded {
+                            stage: "queue",
+                            late_us: d.late_by_us(now),
+                        },
+                    ));
+                }
+                _ if j.x.len() != in_dim => {
+                    ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ =
+                        j.resp.send(Err(InferenceError::ShapeMismatch {
+                            what: "input",
+                            expected: in_dim,
+                            got: j.x.len(),
+                        }));
+                }
+                _ => batch.push(j),
             }
         }
         if batch.is_empty() {
@@ -275,7 +475,7 @@ fn worker_loop(
         let head = if granularity > 1 {
             let m = (batch.len() / granularity) * granularity;
             for j in batch.drain(m..) {
-                counters.errors.fetch_add(1, Ordering::Relaxed);
+                ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = j.resp.send(Err(InferenceError::ShapeMismatch {
                     what: "batch rows (must be a multiple of the \
                            compiled batch)",
@@ -292,6 +492,7 @@ fn worker_loop(
         }
 
         let n = batch.len();
+        let t_serve = Instant::now();
         let mut group_served = 0u64;
         let mut served_batched = false;
         if n > 1 || granularity > 1 {
@@ -308,10 +509,11 @@ fn worker_loop(
             if session.infer_batch(&xs, &mut out).is_ok() {
                 for (i, j) in batch.drain(..).enumerate() {
                     group_served += 1;
-                    worker_served[w].fetch_add(1, Ordering::Relaxed);
-                    let _ = j
-                        .resp
-                        .send(Ok(out[i * out_dim..(i + 1) * out_dim].to_vec()));
+                    ctx.worker_served[ctx.w]
+                        .fetch_add(1, Ordering::Relaxed);
+                    let _ = j.resp.send(Ok(
+                        out[i * out_dim..(i + 1) * out_dim].to_vec()
+                    ));
                 }
                 served_batched = true;
             }
@@ -323,11 +525,12 @@ fn worker_loop(
                 match session.infer_into(&j.x, &mut out) {
                     Ok(()) => {
                         group_served += 1;
-                        worker_served[w].fetch_add(1, Ordering::Relaxed);
+                        ctx.worker_served[ctx.w]
+                            .fetch_add(1, Ordering::Relaxed);
                         let _ = j.resp.send(Ok(out.clone()));
                     }
                     Err(e) => {
-                        counters.errors.fetch_add(1, Ordering::Relaxed);
+                        ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
                         let _ = j.resp.send(Err(e));
                     }
                 }
@@ -337,8 +540,19 @@ fn worker_loop(
         // path executed it — so served/batches is a true mean group
         // size even when a substrate forces per-request fallback.
         if group_served > 0 {
-            counters.served.fetch_add(group_served, Ordering::Relaxed);
-            counters.batches.fetch_add(1, Ordering::Relaxed);
+            ctx.counters
+                .served
+                .fetch_add(group_served, Ordering::Relaxed);
+            ctx.counters.batches.fetch_add(1, Ordering::Relaxed);
+            // Fold the measured per-request service time into the
+            // batch-formation estimate (moving average, α = 0.4).
+            let per_req_us =
+                t_serve.elapsed().as_secs_f64() * 1e6 / group_served as f64;
+            est_us = if est_us <= 0.0 {
+                per_req_us
+            } else {
+                0.6 * est_us + 0.4 * per_req_us
+            };
         }
     }
 }
@@ -348,6 +562,8 @@ mod tests {
     use super::*;
     use crate::api::{Backend, EngineBackend};
     use crate::engine::{Act, Layer, Model};
+    use crate::plc::HwProfile;
+    use crate::serve::Priority;
 
     fn model() -> Model {
         Model::new(vec![
@@ -389,6 +605,7 @@ mod tests {
         }
         assert_eq!(pool.served(), 40);
         assert_eq!(pool.errors(), 0);
+        assert_eq!(pool.shed(), 0, "no-deadline load must never shed");
         assert!(pool.batches() <= 40, "batching must coalesce, not inflate");
         let per_worker = pool.worker_served();
         assert_eq!(per_worker.iter().sum::<u64>(), 40);
@@ -413,5 +630,58 @@ mod tests {
             Pool::new(backend, PoolConfig { workers: 2, max_batch: 2 });
         assert_eq!(pool.infer(&[0.2; 8]).unwrap().len(), 3);
         drop(pool); // joins workers; must not hang or panic
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_not_served() {
+        let backend = Arc::new(EngineBackend::new(model()));
+        let pool = Pool::new(backend, PoolConfig::default());
+        let r = pool
+            .submit_with(
+                &[0.1; 8],
+                SubmitOptions::new().deadline(Deadline::within_us(0.0)),
+            )
+            .unwrap()
+            .wait();
+        match r {
+            Err(InferenceError::DeadlineExceeded { stage: "queue", .. }) => {}
+            other => panic!("want queue shed, got {other:?}"),
+        }
+        assert_eq!(pool.shed(), 1);
+        assert_eq!(pool.served(), 0, "a shed request is never served");
+        // A generous deadline is served normally afterwards.
+        let ok = pool
+            .submit_with(
+                &[0.1; 8],
+                SubmitOptions::new()
+                    .priority(Priority::Control)
+                    .deadline(Deadline::within_us(30_000_000.0)),
+            )
+            .unwrap()
+            .wait();
+        assert_eq!(ok.unwrap().len(), 3);
+    }
+
+    #[test]
+    fn admission_gate_rejects_infeasible_budget_at_submit() {
+        let backend = Arc::new(EngineBackend::new(model()));
+        // A deliberately absurd modeled cost: every deadlined request
+        // is infeasible, undeadlined traffic is untouched.
+        let pool = Pool::with_admission(
+            backend,
+            PoolConfig::default(),
+            Admission::new(HwProfile::beaglebone(), 1e12),
+        );
+        match pool.submit_with(
+            &[0.1; 8],
+            SubmitOptions::new().deadline(Deadline::within_us(1_000.0)),
+        ) {
+            Err(InferenceError::DeadlineExceeded {
+                stage: "admission", ..
+            }) => {}
+            other => panic!("want admission rejection, got {other:?}"),
+        }
+        assert_eq!(pool.shed(), 0, "rejected at ingress, not queued");
+        assert_eq!(pool.infer(&[0.1; 8]).unwrap().len(), 3);
     }
 }

@@ -1,0 +1,533 @@
+//! Deadline-aware request scheduling: the [`DeadlineQueue`] behind
+//! [`crate::serve::Pool`].
+//!
+//! The paper's core constraint is that inference must fit inside a
+//! PLC's hard scan-cycle budget (§6.3); a serving tier in front of a
+//! controller fleet inherits the same law — an answer that arrives
+//! after the scan cycle that needed it is worthless, and a defense
+//! that blows the cycle is a defense operators turn off. So the pool's
+//! old FIFO `mpsc` channel is replaced by a scheduler with three
+//! properties:
+//!
+//! 1. **Priority bands** ([`Priority`]): `Control` (closes a control
+//!    loop) preempts `Defense` (detection streams) preempts `Batch`
+//!    (offline scoring). A band is drained before the next is looked
+//!    at.
+//! 2. **Earliest-deadline-first within a band**: requests carrying a
+//!    [`Deadline`] pop before undeadlined ones, tightest first.
+//!    Undeadlined requests keep strict FIFO order (submission
+//!    sequence), so a pool fed only plain `submit` calls behaves
+//!    bit-identically to the old FIFO queue.
+//! 3. **Lock-sheltered**: one `Mutex` around three binary heaps plus a
+//!    `Condvar`; the lock is held only to push/pop, never while
+//!    serving. Workers block on the condvar, so an idle pool burns no
+//!    CPU.
+//!
+//! Expiry is *not* handled here — the queue ranks, the worker sheds
+//! (see `serve::pool`): a request whose deadline has passed when a
+//! worker picks it up is answered with
+//! [`crate::api::InferenceError::DeadlineExceeded`] instead of being
+//! served late.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::plc::{HwProfile, ScanCycle};
+use crate::st::Meter;
+
+/// Request priority class, declared in scheduling order: an earlier
+/// variant always pops before a later one, whatever the deadlines say.
+///
+/// The classes mirror the deployment model of the PLC-security
+/// literature: `Control` requests close a control loop this scan
+/// cycle, `Defense` requests feed the §7 detection streams, `Batch`
+/// requests are throughput traffic (re-scoring, evaluation) that can
+/// always wait.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// In-the-loop control inference: most urgent, never queued behind
+    /// anything else.
+    Control,
+    /// Online detection / monitoring traffic.
+    Defense,
+    /// Offline or best-effort traffic (the default for plain
+    /// `Pool::submit`).
+    #[default]
+    Batch,
+}
+
+/// Number of priority bands (one heap each).
+pub(crate) const BANDS: usize = 3;
+
+impl Priority {
+    /// The band index this class schedules in (0 = most urgent).
+    pub fn band(self) -> usize {
+        self as usize
+    }
+
+    /// All classes, in scheduling order.
+    pub const ALL: [Priority; BANDS] =
+        [Priority::Control, Priority::Defense, Priority::Batch];
+
+    /// Parse a class name as used by the `serve` CLI
+    /// (`control`/`defense`/`batch`, case-insensitive).
+    pub fn from_name(name: &str) -> Option<Priority> {
+        match name.to_ascii_lowercase().as_str() {
+            "control" => Some(Priority::Control),
+            "defense" => Some(Priority::Defense),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    /// The class name (`"control"`/`"defense"`/`"batch"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Control => "control",
+            Priority::Defense => "defense",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// An absolute wall-clock expiry for one request.
+///
+/// A deadline can be given directly ([`Deadline::at`] /
+/// [`Deadline::within`]) or derived from the repo's PLC cost model:
+/// [`Deadline::for_meter`] budgets the wall-clock time the inference
+/// *would* take on real PLC hardware (`HwProfile::time_us` over a
+/// calibrated [`Meter`]), and [`Deadline::for_scan`] budgets the slack
+/// a scan cycle has left after its control task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Deadline(Instant);
+
+impl Deadline {
+    /// Expire at an absolute instant.
+    pub fn at(t: Instant) -> Deadline {
+        Deadline(t)
+    }
+
+    /// Expire `d` from now.
+    pub fn within(d: Duration) -> Deadline {
+        Deadline(Instant::now() + d)
+    }
+
+    /// Expire `us` microseconds from now (negative or NaN budgets
+    /// clamp to "already due").
+    pub fn within_us(us: f64) -> Deadline {
+        Deadline::within(Duration::from_secs_f64(us.max(0.0) / 1e6))
+    }
+
+    /// Budget the modeled PLC execution time of a metered workload:
+    /// the serving tier commits to answering no later than the real
+    /// controller hardware would have.
+    pub fn for_meter(profile: &HwProfile, m: &Meter) -> Deadline {
+        Deadline::within(profile.budget(m))
+    }
+
+    /// Budget a scan cycle's remaining ML slack (period minus the
+    /// control task) — the §6.3 deadline of an in-cycle inference.
+    pub fn for_scan(cycle: &ScanCycle, control_us: f64) -> Deadline {
+        Deadline::within(cycle.ml_budget(control_us))
+    }
+
+    /// The absolute expiry instant.
+    pub fn instant(&self) -> Instant {
+        self.0
+    }
+
+    /// Microseconds left before expiry (0 once due).
+    pub fn remaining_us(&self) -> f64 {
+        self.0
+            .saturating_duration_since(Instant::now())
+            .as_secs_f64()
+            * 1e6
+    }
+
+    /// The deadline is due at `now` (due-exactly-now counts as
+    /// expired, so a zero budget always sheds).
+    pub fn expired_at(&self, now: Instant) -> bool {
+        now >= self.0
+    }
+
+    /// The deadline is due.
+    pub fn expired(&self) -> bool {
+        self.expired_at(Instant::now())
+    }
+
+    /// Microseconds past expiry at `now` (0 if still live).
+    pub fn late_by_us(&self, now: Instant) -> f64 {
+        now.saturating_duration_since(self.0).as_secs_f64() * 1e6
+    }
+}
+
+/// Per-request scheduling options for `Pool::submit_with`.
+///
+/// The default (`SubmitOptions::default()`) is what plain
+/// `Pool::submit` uses: `Batch` class, no deadline — the old FIFO
+/// behavior.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Priority class (band) the request schedules in.
+    pub priority: Priority,
+    /// Optional expiry; an expired request is shed, never served late.
+    pub deadline: Option<Deadline>,
+}
+
+impl SubmitOptions {
+    /// Default options: `Batch` class, no deadline.
+    pub fn new() -> SubmitOptions {
+        SubmitOptions::default()
+    }
+
+    /// Set the priority class.
+    pub fn priority(mut self, p: Priority) -> SubmitOptions {
+        self.priority = p;
+        self
+    }
+
+    /// Set the deadline.
+    pub fn deadline(mut self, d: Deadline) -> SubmitOptions {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// Scheduling metadata travelling with each queued item.
+#[derive(Debug, Clone, Copy)]
+pub struct Meta {
+    /// Priority class the item was submitted with.
+    pub priority: Priority,
+    /// Optional expiry.
+    pub deadline: Option<Deadline>,
+    /// Queue-assigned submission sequence number (the FIFO tie-break).
+    pub seq: u64,
+}
+
+/// Heap entry: ordered so the max-heap's top is the next item to
+/// serve — earliest deadline first, undeadlined items last among
+/// their band, FIFO (lowest `seq`) within ties.
+struct Ranked<T> {
+    meta: Meta,
+    item: T,
+}
+
+impl<T> Ord for Ranked<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // "Greater" pops first from BinaryHeap: an earlier deadline
+        // ranks greater; a present deadline ranks greater than none;
+        // ties resolve to the lower submission sequence (FIFO).
+        let by_deadline = match (self.meta.deadline, other.meta.deadline) {
+            (Some(a), Some(b)) => b.cmp(&a),
+            (Some(_), None) => Ordering::Greater,
+            (None, Some(_)) => Ordering::Less,
+            (None, None) => Ordering::Equal,
+        };
+        by_deadline.then_with(|| other.meta.seq.cmp(&self.meta.seq))
+    }
+}
+
+impl<T> PartialOrd for Ranked<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> PartialEq for Ranked<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Ranked<T> {}
+
+struct Inner<T> {
+    bands: [BinaryHeap<Ranked<T>>; BANDS],
+    seq: u64,
+    len: usize,
+    closed: bool,
+}
+
+/// A closeable, priority-banded, earliest-deadline-first queue.
+///
+/// `push` is non-blocking; [`DeadlineQueue::pop_wait`] blocks on a
+/// condvar until an item or close+empty. Batch formation uses
+/// [`DeadlineQueue::try_pop_if`]: pop the *best* queued item only if a
+/// caller predicate admits it — the predicate sees the item's [`Meta`]
+/// and typically checks deadline compatibility with a forming batch.
+pub struct DeadlineQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for DeadlineQueue<T> {
+    fn default() -> Self {
+        DeadlineQueue::new()
+    }
+}
+
+impl<T> DeadlineQueue<T> {
+    /// An open, empty queue.
+    pub fn new() -> DeadlineQueue<T> {
+        DeadlineQueue {
+            inner: Mutex::new(Inner {
+                bands: [
+                    BinaryHeap::new(),
+                    BinaryHeap::new(),
+                    BinaryHeap::new(),
+                ],
+                seq: 0,
+                len: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Ignore poisoning: the queue's state is just pending requests,
+    /// and a panicking worker must not wedge its siblings (the pool
+    /// additionally drains + fails pending requests when the *last*
+    /// worker dies).
+    fn lock(&self) -> MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Enqueue one item. Returns `false` when the queue is closed —
+    /// the item is dropped, which is how a pool with no live workers
+    /// fails a `Ticket` (the dropped response channel reports it).
+    pub fn push(
+        &self,
+        priority: Priority,
+        deadline: Option<Deadline>,
+        item: T,
+    ) -> bool {
+        {
+            let mut q = self.lock();
+            if q.closed {
+                return false;
+            }
+            let meta = Meta { priority, deadline, seq: q.seq };
+            q.seq += 1;
+            q.len += 1;
+            q.bands[priority.band()].push(Ranked { meta, item });
+        }
+        self.cv.notify_one();
+        true
+    }
+
+    fn pop_best(q: &mut Inner<T>) -> Option<(Meta, T)> {
+        let Inner { bands, len, .. } = q;
+        for heap in bands.iter_mut() {
+            if let Some(r) = heap.pop() {
+                *len -= 1;
+                return Some((r.meta, r.item));
+            }
+        }
+        None
+    }
+
+    /// Blocking pop of the next item to serve. Returns `None` only
+    /// once the queue is closed *and* drained — pending items are
+    /// always handed out, even after close.
+    pub fn pop_wait(&self) -> Option<(Meta, T)> {
+        let mut q = self.lock();
+        loop {
+            if let Some(e) = Self::pop_best(&mut q) {
+                return Some(e);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self
+                .cv
+                .wait(q)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking conditional pop: if the queue's best item passes
+    /// `admit`, pop and return it; otherwise (or when empty) return
+    /// `None` *without* popping. Never skips past the best item —
+    /// scheduling order is preserved even when a batch stops filling.
+    pub fn try_pop_if<F>(&self, mut admit: F) -> Option<(Meta, T)>
+    where
+        F: FnMut(&Meta) -> bool,
+    {
+        let mut q = self.lock();
+        let Inner { bands, len, .. } = &mut *q;
+        for heap in bands.iter_mut() {
+            let admitted = match heap.peek() {
+                Some(top) => admit(&top.meta),
+                None => continue,
+            };
+            if !admitted {
+                return None;
+            }
+            let r = heap.pop().expect("peeked entry vanished");
+            *len -= 1;
+            return Some((r.meta, r.item));
+        }
+        None
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.lock().len
+    }
+
+    /// No items queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: further pushes fail, blocked poppers drain the
+    /// remaining items and then observe the close.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Pop everything still queued (used by the pool to fail pending
+    /// requests when the last worker exits).
+    pub fn drain(&self) -> Vec<(Meta, T)> {
+        let mut q = self.lock();
+        let mut out = Vec::with_capacity(q.len);
+        while let Some(e) = Self::pop_best(&mut q) {
+            out.push(e);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_without_deadlines() {
+        let q: DeadlineQueue<u32> = DeadlineQueue::new();
+        for i in 0..10u32 {
+            assert!(q.push(Priority::Batch, None, i));
+        }
+        for i in 0..10u32 {
+            let (meta, item) = q.pop_wait().expect("queued");
+            assert_eq!(item, i, "no-deadline traffic must stay FIFO");
+            assert_eq!(meta.seq, i as u64);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn earliest_deadline_first_within_band() {
+        let q: DeadlineQueue<&str> = DeadlineQueue::new();
+        let now = Instant::now();
+        q.push(
+            Priority::Batch,
+            Some(Deadline::at(now + Duration::from_millis(30))),
+            "late",
+        );
+        q.push(Priority::Batch, None, "none");
+        q.push(
+            Priority::Batch,
+            Some(Deadline::at(now + Duration::from_millis(10))),
+            "tight",
+        );
+        assert_eq!(q.pop_wait().unwrap().1, "tight");
+        assert_eq!(q.pop_wait().unwrap().1, "late");
+        assert_eq!(q.pop_wait().unwrap().1, "none");
+    }
+
+    #[test]
+    fn priority_bands_preempt_deadlines() {
+        let q: DeadlineQueue<&str> = DeadlineQueue::new();
+        q.push(
+            Priority::Batch,
+            Some(Deadline::within(Duration::from_millis(1))),
+            "batch-tight",
+        );
+        q.push(Priority::Defense, None, "defense");
+        q.push(Priority::Control, None, "control");
+        // Band order wins over any deadline in a lower band.
+        assert_eq!(q.pop_wait().unwrap().1, "control");
+        assert_eq!(q.pop_wait().unwrap().1, "defense");
+        assert_eq!(q.pop_wait().unwrap().1, "batch-tight");
+    }
+
+    #[test]
+    fn try_pop_if_respects_predicate_and_order() {
+        let q: DeadlineQueue<u32> = DeadlineQueue::new();
+        q.push(Priority::Batch, Some(Deadline::within_us(1e6)), 1);
+        q.push(Priority::Batch, None, 2);
+        // Predicate rejects the best (deadlined) entry: nothing pops,
+        // including the compatible one *behind* it.
+        assert!(q.try_pop_if(|m| m.deadline.is_none()).is_none());
+        assert_eq!(q.len(), 2);
+        // Accepting predicate pops in scheduling order.
+        assert_eq!(q.try_pop_if(|_| true).unwrap().1, 1);
+        assert_eq!(q.try_pop_if(|_| true).unwrap().1, 2);
+        assert!(q.try_pop_if(|_| true).is_none());
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q: DeadlineQueue<u32> = DeadlineQueue::new();
+        q.push(Priority::Batch, None, 7);
+        q.close();
+        assert!(!q.push(Priority::Batch, None, 8), "push after close");
+        assert_eq!(q.pop_wait().unwrap().1, 7, "pending items still served");
+        assert!(q.pop_wait().is_none(), "closed + empty ends the loop");
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_push() {
+        use std::sync::Arc;
+        let q: Arc<DeadlineQueue<u32>> = Arc::new(DeadlineQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(Priority::Control, None, 42);
+        assert_eq!(h.join().unwrap().unwrap().1, 42);
+    }
+
+    #[test]
+    fn deadline_arithmetic() {
+        let d = Deadline::within_us(50_000.0);
+        assert!(!d.expired());
+        assert!(d.remaining_us() > 0.0);
+        let past = Deadline::within_us(0.0);
+        // A zero budget is due immediately ("now >= deadline").
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(past.expired());
+        assert!(past.late_by_us(Instant::now()) > 0.0);
+        // Negative / NaN budgets clamp instead of panicking.
+        let _ = Deadline::within_us(-5.0);
+        let _ = Deadline::within_us(f64::NAN);
+    }
+
+    #[test]
+    fn priority_parse_roundtrip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Priority::from_name("CONTROL"), Some(Priority::Control));
+        assert_eq!(Priority::from_name("nope"), None);
+        assert_eq!(Priority::default(), Priority::Batch);
+    }
+
+    #[test]
+    fn deadline_from_cost_model() {
+        let profile = crate::plc::HwProfile::beaglebone();
+        let mut m = Meter::new();
+        m.fp_mul = 1_000_000; // ~34 ms modeled
+        let d = Deadline::for_meter(&profile, &m);
+        let rem = d.remaining_us();
+        assert!(rem > 10_000.0 && rem < 60_000.0, "got {rem} µs");
+
+        let cycle = ScanCycle::new(profile, 100_000.0);
+        let d = Deadline::for_scan(&cycle, 40_000.0);
+        let rem = d.remaining_us();
+        assert!(rem > 30_000.0 && rem <= 60_000.0, "got {rem} µs");
+    }
+}

@@ -7,17 +7,23 @@
 //!   accounted for exactly once);
 //! * the `serve::Pool` answers pipelined traffic bit-identically to a
 //!   single sequential session;
+//! * the deadline scheduler's semantics hold: an expired request is
+//!   shed (never served), an urgent request is never delayed behind
+//!   batch-class traffic, no-deadline traffic keeps exact FIFO order,
+//!   and `Ticket::wait` never hangs on a dead pool;
 //! * the shared handles really are `Send + Sync` (compile-time
 //!   assertions).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use icsml::api::{
-    Backend, EngineBackend, Session, SharedBackend, StBackend,
+    Backend, EngineBackend, InferenceError, ModelSpec, Session,
+    SharedBackend, StBackend,
 };
 use icsml::coordinator::{InferenceRouter, RoutePolicy};
-use icsml::serve::{Pool, PoolConfig};
+use icsml::serve::{Deadline, Pool, PoolConfig, Priority, SubmitOptions};
 use icsml::util::fixtures::{mlp_8_16_4, ported_mlp_8_16_4};
 
 const THREADS: usize = 4;
@@ -216,6 +222,232 @@ fn pool_pipelined_traffic_is_bit_identical() {
     assert_eq!(pool.errors(), 0);
 }
 
+// ---------------------------------------------------------------------
+// Deadline-scheduler semantics (PR 4)
+// ---------------------------------------------------------------------
+
+/// A backend whose sessions log the id tag (`x[0]`) of every request
+/// they serve, optionally sleeping per request — the probe for
+/// service-order and shed assertions.
+struct RecordingBackend {
+    inner: EngineBackend,
+    log: Arc<Mutex<Vec<u32>>>,
+    delay: Duration,
+}
+
+impl RecordingBackend {
+    fn shared(
+        log: Arc<Mutex<Vec<u32>>>,
+        delay: Duration,
+    ) -> SharedBackend {
+        Arc::new(RecordingBackend {
+            inner: EngineBackend::new(mlp_8_16_4(7)),
+            log,
+            delay,
+        })
+    }
+}
+
+impl Backend for RecordingBackend {
+    fn name(&self) -> &'static str {
+        "recording"
+    }
+    fn spec(&self) -> ModelSpec {
+        self.inner.spec()
+    }
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+        Ok(Box::new(RecordingSession {
+            inner: self.inner.session()?,
+            log: Arc::clone(&self.log),
+            delay: self.delay,
+        }))
+    }
+}
+
+struct RecordingSession {
+    inner: Box<dyn Session>,
+    log: Arc<Mutex<Vec<u32>>>,
+    delay: Duration,
+}
+
+impl Session for RecordingSession {
+    fn name(&self) -> &'static str {
+        "recording"
+    }
+    fn spec(&self) -> ModelSpec {
+        self.inner.spec()
+    }
+    fn infer_into(
+        &mut self,
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), InferenceError> {
+        self.log.lock().unwrap().push(x[0] as u32);
+        if !self.delay.is_zero() {
+            thread::sleep(self.delay);
+        }
+        self.inner.infer_into(x, out)
+    }
+}
+
+/// A valid 8-dim input carrying `id` in its first feature.
+fn tagged(id: u32) -> Vec<f32> {
+    let mut v = vec![0.25f32; 8];
+    v[0] = id as f32;
+    v
+}
+
+#[test]
+fn expired_request_is_shed_never_served() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let backend = RecordingBackend::shared(Arc::clone(&log), Duration::ZERO);
+    let pool = Pool::new(backend, PoolConfig { workers: 2, max_batch: 4 });
+    let r = pool
+        .submit_with(
+            &tagged(99),
+            SubmitOptions::new().deadline(Deadline::within_us(0.0)),
+        )
+        .unwrap()
+        .wait();
+    match r {
+        Err(InferenceError::DeadlineExceeded { stage: "queue", .. }) => {}
+        other => panic!("want queue shed, got {other:?}"),
+    }
+    assert_eq!(pool.shed(), 1);
+    // The backend never executed the shed request.
+    assert!(
+        !log.lock().unwrap().contains(&99),
+        "an expired request must never reach the model"
+    );
+    // Healthy traffic is unaffected.
+    assert_eq!(pool.infer(&tagged(1)).unwrap().len(), 4);
+    assert!(log.lock().unwrap().contains(&1));
+}
+
+#[test]
+fn no_deadline_traffic_stays_fifo_on_one_worker() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let backend = RecordingBackend::shared(Arc::clone(&log), Duration::ZERO);
+    let pool = Pool::new(backend, PoolConfig { workers: 1, max_batch: 4 });
+    let tickets: Vec<_> =
+        (0..24u32).map(|i| pool.submit(&tagged(i))).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(pool.shed(), 0, "no-deadline load must never shed");
+    // With one worker and no deadlines the scheduler degenerates to
+    // the old pool's exact FIFO service order (bit-identity of the
+    // *results* is covered by pool_pipelined_traffic_is_bit_identical).
+    let served = log.lock().unwrap().clone();
+    assert_eq!(served, (0..24).collect::<Vec<u32>>());
+}
+
+#[test]
+fn urgent_request_is_not_delayed_behind_batch_class() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let delay = Duration::from_millis(150);
+    let backend = RecordingBackend::shared(Arc::clone(&log), delay);
+    let pool = Pool::new(backend, PoolConfig { workers: 1, max_batch: 4 });
+
+    // Occupy the single worker, and wait until it has *started* (its
+    // session logs before sleeping) so everything below queues.
+    let filler = pool.submit(&tagged(0));
+    let t0 = Instant::now();
+    while log.lock().unwrap().is_empty() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "worker never started the filler request"
+        );
+        thread::yield_now();
+    }
+
+    // Six batch-class requests pile up, then one control-class
+    // request arrives last.
+    let batch_tickets: Vec<_> =
+        (1..=6u32).map(|i| pool.submit(&tagged(i))).collect();
+    let urgent = pool
+        .submit_with(
+            &tagged(7),
+            SubmitOptions::new().priority(Priority::Control),
+        )
+        .unwrap();
+
+    urgent.wait().unwrap();
+    filler.wait().unwrap();
+    for t in batch_tickets {
+        t.wait().unwrap();
+    }
+
+    let served = log.lock().unwrap().clone();
+    let pos = |id: u32| {
+        served
+            .iter()
+            .position(|&v| v == id)
+            .unwrap_or_else(|| panic!("request {id} never served"))
+    };
+    assert_eq!(pos(0), 0, "filler was being served first");
+    for id in 1..=6u32 {
+        assert!(
+            pos(7) < pos(id),
+            "control-class request served after batch-class {id} \
+             (order: {served:?})"
+        );
+    }
+}
+
+/// A backend whose sessions panic on the first inference — the
+/// worker-death scenario for the `Ticket::wait`-never-hangs fix.
+struct PanickingBackend;
+impl Backend for PanickingBackend {
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+    fn spec(&self) -> ModelSpec {
+        ModelSpec::dense_f32(2, 2)
+    }
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+        Ok(Box::new(PanickingSession))
+    }
+}
+struct PanickingSession;
+impl Session for PanickingSession {
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+    fn spec(&self) -> ModelSpec {
+        ModelSpec::dense_f32(2, 2)
+    }
+    fn infer_into(
+        &mut self,
+        _x: &[f32],
+        _out: &mut [f32],
+    ) -> Result<(), InferenceError> {
+        panic!("synthetic worker death");
+    }
+}
+
+#[test]
+fn ticket_wait_errors_instead_of_hanging_when_all_workers_exit() {
+    let pool = Pool::new(
+        Arc::new(PanickingBackend),
+        PoolConfig { workers: 1, max_batch: 2 },
+    );
+    // Three pipelined requests; the lone worker dies serving the
+    // first. Every ticket must resolve to a typed error — before the
+    // fix, requests still queued when the last worker exited blocked
+    // `wait` forever.
+    let tickets = [
+        pool.submit(&[0.0, 0.0]),
+        pool.submit(&[0.0, 0.0]),
+        pool.submit(&[0.0, 0.0]),
+    ];
+    for t in tickets {
+        assert!(t.wait().is_err(), "dead pool must fail, not hang");
+    }
+    // And the dead pool keeps failing fast.
+    assert!(pool.infer(&[0.0, 0.0]).is_err());
+}
+
 #[test]
 fn shared_handles_are_send_sync() {
     fn assert_send_sync<T: Send + Sync>() {}
@@ -223,6 +455,8 @@ fn shared_handles_are_send_sync() {
     assert_send_sync::<StBackend>();
     assert_send_sync::<InferenceRouter>();
     assert_send_sync::<Pool>();
+    assert_send_sync::<icsml::serve::Admission>();
+    assert_send_sync::<icsml::serve::DeadlineQueue<Vec<f32>>>();
     assert_send_sync::<icsml::st::HostImage>();
     assert_send_sync::<icsml::st::ir::Unit>();
     assert_send_sync::<icsml::st::bytecode::CodeUnit>();
