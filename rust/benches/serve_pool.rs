@@ -8,25 +8,37 @@
 //! useless).
 //!
 //! Modes:
-//!   (default)        throughput table + deadline scenario on stdout
+//!   (default)        throughput table + deadline scenario + open-loop
+//!                    network latency percentiles on stdout
 //!   --json[=PATH]    also write BENCH_serve.json (ns/request per
 //!                    worker count, scaling vs 1 worker,
-//!                    deadline-hit/shed rates)
-//!   --smoke          correctness gate only, no timing (CI's fast
-//!                    serve-pool regression check; also asserts zero
-//!                    sheds under no-deadline load)
+//!                    deadline-hit/shed rates, open_loop{...}
+//!                    percentiles over the netserve client)
+//!   --smoke          correctness gate + netserve loopback smoke, no
+//!                    timing (CI's fast regression check: pooled and
+//!                    networked results bit-identical to a sequential
+//!                    session, mixed-class wave, zero sheds, clean
+//!                    shutdown)
 
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use icsml::api::{
     Backend, EngineBackend, InferenceError, Session as _, SharedBackend,
 };
 use icsml::engine::{Act, Layer, Model};
+use icsml::netserve::proto::ErrorCode;
+use icsml::netserve::{
+    Client, ModelRegistry, NetOptions, NetServer, RegistryConfig,
+    ServerConfig, StaticLoader,
+};
 use icsml::serve::{Deadline, Pool, PoolConfig, Priority, SubmitOptions};
 use icsml::util::benchkit::{
     json_flag, smoke_flag, write_bench_json, BenchRecord,
 };
+use icsml::util::fixtures::mlp_8_16_4;
 use icsml::util::json::Json;
 use icsml::util::rng::SplitMix64;
 
@@ -116,6 +128,7 @@ fn main() {
              sequential session, zero sheds under no-deadline load",
             gate_wave.len()
         );
+        netserve_smoke(&backend, &gate_wave, &want);
         return;
     }
 
@@ -272,6 +285,86 @@ fn main() {
         shed_rate * 100.0
     );
 
+    // ---------------- open-loop network latency -----------------------
+    // Closed-loop throughput hides queueing: a closed-loop driver
+    // only submits as fast as replies return, so the queue never
+    // grows and the tail looks flat. An open-loop generator fires at
+    // a fixed arrival rate regardless of completions — the shape real
+    // sensor traffic has — and queue delay shows up where it belongs,
+    // in p95/p99. Probe the network path's closed-loop capacity
+    // first, then drive open-loop at fractions of it.
+    let net_requests = 2000usize;
+    let registry = bench_registry(&backend, 4);
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        registry,
+        ServerConfig::default(),
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr();
+
+    let capacity_rps = {
+        let mut c = Client::connect(addr).expect("connect");
+        c.set_timeout(Some(Duration::from_secs(60))).expect("timeout");
+        let probe = net_requests / 2;
+        let t0 = Instant::now();
+        for i in 0..probe {
+            c.submit("bench", &wave[i % wave.len()], &NetOptions::new())
+                .expect("submit");
+        }
+        for _ in 0..probe {
+            let r = c.recv().expect("recv");
+            r.result.unwrap_or_else(|e| {
+                panic!("capacity probe request {} failed: {}", r.id, e.msg)
+            });
+        }
+        probe as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+    };
+    println!(
+        "\nopen-loop network latency — loopback netserve, 4 workers, \
+         closed-loop capacity {capacity_rps:.0} req/s:"
+    );
+    let mut open_loop_runs: Vec<Json> = Vec::new();
+    let mut ot = icsml::util::bench::Table::new(&[
+        "load",
+        "rate req/s",
+        "p50 us",
+        "p95 us",
+        "p99 us",
+        "errors",
+    ]);
+    for &load in &[0.5f64, 0.8] {
+        let rate = (capacity_rps * load).max(1.0);
+        let (lat_us, sheds, errors) =
+            open_loop(addr, &wave, net_requests, rate);
+        let (p50, p95, p99) =
+            (pct(&lat_us, 0.50), pct(&lat_us, 0.95), pct(&lat_us, 0.99));
+        ot.row(&[
+            format!("{:.0}%", load * 100.0),
+            format!("{rate:.0}"),
+            format!("{p50:.0}"),
+            format!("{p95:.0}"),
+            format!("{p99:.0}"),
+            format!("{}", sheds + errors),
+        ]);
+        open_loop_runs.push(Json::obj(vec![
+            ("load_factor", Json::Num(load)),
+            ("rate_rps", Json::Num(rate)),
+            ("requests", Json::Num(net_requests as f64)),
+            ("p50_us", Json::Num(p50)),
+            ("p95_us", Json::Num(p95)),
+            ("p99_us", Json::Num(p99)),
+            ("sheds", Json::Num(sheds as f64)),
+            ("errors", Json::Num(errors as f64)),
+        ]));
+    }
+    ot.print();
+    println!(
+        "(arrival-rate-driven over the netserve client; queue delay \
+         surfaces in the tail as load approaches capacity)"
+    );
+    server.shutdown();
+
     if let Some(path) = json_path {
         let extras = vec![
             (
@@ -285,6 +378,13 @@ fn main() {
             ),
             ("requests", Json::Num(requests as f64)),
             ("max_batch", Json::Num(MAX_BATCH as f64)),
+            (
+                "open_loop",
+                Json::obj(vec![
+                    ("capacity_rps", Json::Num(capacity_rps)),
+                    ("runs", Json::Arr(open_loop_runs.clone())),
+                ]),
+            ),
             (
                 "deadline",
                 Json::obj(vec![
@@ -302,4 +402,168 @@ fn main() {
             .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
         println!("wrote {}", path.display());
     }
+}
+
+/// Registry exposing the bench backend as `"bench"` plus a small
+/// second model `"aux"` (multi-model routing stays on the smoke path).
+fn bench_registry(
+    backend: &SharedBackend,
+    workers: usize,
+) -> Arc<ModelRegistry> {
+    let mut loader = StaticLoader::new();
+    loader.insert("bench", Arc::clone(backend), 1);
+    let aux: SharedBackend =
+        Arc::new(EngineBackend::new(mlp_8_16_4(3)));
+    loader.insert("aux", aux, 1);
+    Arc::new(ModelRegistry::new(
+        Box::new(loader),
+        RegistryConfig {
+            max_models: usize::MAX,
+            max_bytes: u64::MAX,
+            pool: PoolConfig { workers, max_batch: MAX_BATCH },
+        },
+    ))
+}
+
+/// CI loopback smoke: spawn a server, pipeline the gate wave through
+/// the network client with mixed priority classes (generous deadlines
+/// on the deadlined classes), and require every reply bit-identical
+/// to the sequential reference, zero sheds, and a clean shutdown.
+fn netserve_smoke(
+    backend: &SharedBackend,
+    gate_wave: &[Vec<f32>],
+    want: &[Vec<f32>],
+) {
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        bench_registry(backend, 2),
+        ServerConfig::default(),
+    )
+    .expect("bind loopback");
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(60))).expect("timeout");
+    let classes =
+        [Priority::Control, Priority::Defense, Priority::Batch];
+    for (i, x) in gate_wave.iter().enumerate() {
+        // Deadlines generous enough to never shed (10 s): the smoke
+        // asserts the happy path end-to-end, not load behavior.
+        let mut opts = NetOptions::new().priority(classes[i % 3]);
+        if i % 3 != 2 {
+            opts = opts.deadline_us(10_000_000.0);
+        }
+        c.submit("bench", x, &opts).expect("submit");
+    }
+    let mut got: Vec<Option<Vec<f32>>> = vec![None; gate_wave.len()];
+    for _ in 0..gate_wave.len() {
+        let r = c.recv().expect("recv");
+        let y = r.result.unwrap_or_else(|e| {
+            panic!("smoke request {} failed: {}", r.id, e.msg)
+        });
+        got[r.id as usize] = Some(y);
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let g = g.as_ref().expect("reply for every request");
+        assert_eq!(g.len(), w.len(), "request {i}: output dims");
+        for (k, (a, b)) in g.iter().zip(w).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "request {i} logit {k}: network {a} vs sequential {b}"
+            );
+        }
+    }
+    // The second registered model serves on the same connection.
+    let y = c
+        .infer("aux", &[0.25; 8], &NetOptions::new())
+        .expect("aux model");
+    assert_eq!(y.len(), 4);
+    assert_eq!(
+        server.stats().error_frames(),
+        0,
+        "mixed-class smoke wave must see zero sheds/errors"
+    );
+    server.shutdown();
+    println!(
+        "netserve smoke OK: {} mixed-class networked requests \
+         bit-identical to the sequential session across 2 models, zero \
+         sheds, clean shutdown",
+        gate_wave.len()
+    );
+}
+
+/// Drive `n` requests at a fixed arrival rate (open loop) and return
+/// (sorted latencies in us, sheds, other errors). One thread paces
+/// submissions, the caller's thread drains replies; send timestamps
+/// cross threads through release/acquire atomics indexed by wire id.
+fn open_loop(
+    addr: SocketAddr,
+    wave: &[Vec<f32>],
+    n: usize,
+    rate_rps: f64,
+) -> (Vec<f64>, u64, u64) {
+    let sender_client = Client::connect(addr).expect("connect");
+    let mut recv_client =
+        sender_client.try_clone().expect("clone connection");
+    recv_client
+        .set_timeout(Some(Duration::from_secs(60)))
+        .expect("timeout");
+    let send_ns: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let t0 = Instant::now();
+    let sender = {
+        let send_ns = Arc::clone(&send_ns);
+        let inputs: Vec<Vec<f32>> = wave.to_vec();
+        std::thread::spawn(move || {
+            let mut c = sender_client;
+            for i in 0..n {
+                let target =
+                    Duration::from_secs_f64(i as f64 / rate_rps);
+                loop {
+                    let elapsed = t0.elapsed();
+                    if elapsed >= target {
+                        break;
+                    }
+                    std::thread::sleep(
+                        (target - elapsed).min(Duration::from_micros(500)),
+                    );
+                }
+                send_ns[i].store(
+                    t0.elapsed().as_nanos() as u64,
+                    Ordering::Release,
+                );
+                c.submit(
+                    "bench",
+                    &inputs[i % inputs.len()],
+                    &NetOptions::new(),
+                )
+                .expect("open-loop submit");
+            }
+        })
+    };
+    let mut lat_us = Vec::with_capacity(n);
+    let (mut sheds, mut errors) = (0u64, 0u64);
+    for _ in 0..n {
+        let r = recv_client.recv().expect("open-loop recv");
+        let now_ns = t0.elapsed().as_nanos() as u64;
+        let sent_ns = send_ns[r.id as usize].load(Ordering::Acquire);
+        match r.result {
+            Ok(_) => {
+                lat_us.push((now_ns.saturating_sub(sent_ns)) as f64 / 1e3)
+            }
+            Err(e) if e.code == ErrorCode::DeadlineExceeded => sheds += 1,
+            Err(_) => errors += 1,
+        }
+    }
+    sender.join().expect("sender thread");
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lat_us, sheds, errors)
+}
+
+/// Quantile of an ascending-sorted sample (nearest-rank).
+fn pct(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
 }

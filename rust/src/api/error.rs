@@ -65,6 +65,22 @@ pub enum InferenceError {
         /// rejections, would have been — missed.
         late_us: f64,
     },
+    /// No model by the requested name exists in the serving registry
+    /// (`netserve::ModelRegistry`): none of the configured manifest
+    /// roots export it. A caller-side error — retrying elsewhere or
+    /// later cannot help.
+    ModelNotFound {
+        /// The model name the request asked for.
+        model: String,
+    },
+    /// The model is known to the registry but cannot be made (or
+    /// kept) resident under the registry's configured engine/byte
+    /// budget — e.g. its weights alone exceed the whole budget. A
+    /// capacity condition, not a broken backend.
+    Evicted {
+        /// The model that lost (or could not gain) residency.
+        model: String,
+    },
     /// A router had no backends registered.
     NoBackends,
     /// A router exhausted every candidate backend.
@@ -78,9 +94,11 @@ impl InferenceError {
     /// True when the fault lies with the backend (flaky execution,
     /// missing artifacts, bad session state) — the class a router
     /// should penalize and retry elsewhere. False for caller-side
-    /// errors ([`InferenceError::ShapeMismatch`]), load/deadline sheds
-    /// ([`InferenceError::DeadlineExceeded`]) and router aggregates,
-    /// which say nothing about the backend's health.
+    /// errors ([`InferenceError::ShapeMismatch`],
+    /// [`InferenceError::ModelNotFound`]), load/deadline/capacity
+    /// sheds ([`InferenceError::DeadlineExceeded`],
+    /// [`InferenceError::Evicted`]) and router aggregates, which say
+    /// nothing about the backend's health.
     pub fn is_backend_fault(&self) -> bool {
         matches!(
             self,
@@ -118,6 +136,16 @@ impl fmt::Display for InferenceError {
                     f,
                     "deadline exceeded at {stage} by {late_us:.1} us \
                      (request shed, not served late)"
+                )
+            }
+            InferenceError::ModelNotFound { model } => {
+                write!(f, "model {model:?} is not in the registry")
+            }
+            InferenceError::Evicted { model } => {
+                write!(
+                    f,
+                    "model {model:?} cannot be resident under the \
+                     registry budget (evicted)"
                 )
             }
             InferenceError::NoBackends => write!(f, "no backends registered"),
@@ -178,6 +206,16 @@ mod tests {
         assert!(!e.is_backend_fault(), "a shed says nothing about health");
         let s = e.to_string();
         assert!(s.contains("queue") && s.contains("12.5"));
+    }
+
+    #[test]
+    fn registry_errors_are_not_backend_faults() {
+        let missing = InferenceError::ModelNotFound { model: "nope".into() };
+        assert!(!missing.is_backend_fault(), "a bad name is a caller error");
+        assert!(missing.to_string().contains("nope"));
+        let evicted = InferenceError::Evicted { model: "big".into() };
+        assert!(!evicted.is_backend_fault(), "capacity says nothing of health");
+        assert!(evicted.to_string().contains("big"));
     }
 
     #[test]

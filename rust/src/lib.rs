@@ -45,6 +45,12 @@
 //!   micro-batching, typed sheds and a cost-model
 //!   [`serve::Admission`] gate (see `docs/ARCHITECTURE.md` for the
 //!   whole-stack map).
+//! * [`netserve`] — the network front door over [`serve`]: a
+//!   length-prefixed binary wire protocol, a nonblocking poll-reactor
+//!   TCP server completing requests from ticket readiness (no thread
+//!   per in-flight request), a lazily-loading LRU
+//!   [`netserve::ModelRegistry`] routing named models to per-model
+//!   pools, and a blocking [`netserve::Client`].
 
 pub mod api;
 pub mod coordinator;
@@ -53,6 +59,7 @@ pub mod engine;
 pub mod hitl;
 pub mod icsml_st;
 pub mod msf;
+pub mod netserve;
 pub mod plc;
 pub mod porting;
 pub mod quant;

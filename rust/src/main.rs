@@ -13,6 +13,13 @@
 //!               micro-batching): `--requests N --workers W --batch B
 //!               [--xla] [--deadline-us D] [--class
 //!               control|defense|batch] [--admit bbb|wago]`.
+//! * `listen`  — network front door: bind a `netserve::NetServer`
+//!               over a lazily-loading model registry: `--addr A
+//!               [--roots DIR,DIR,...] [--workers W] [--batch B]
+//!               [--max-models N] [--max-mb MB] [--for-secs S]`.
+//! * `client`  — drive a running `listen` server over TCP:
+//!               `--addr A --model NAME --requests N [--class C]
+//!               [--deadline-us D] [--dim K]`.
 
 use std::sync::Arc;
 
@@ -22,7 +29,12 @@ use icsml::api::{Backend, EngineBackend, Session as _, SharedBackend,
 use icsml::defense::Detector;
 use icsml::hitl::HitlRunner;
 use icsml::msf::{Attack, AttackFamily};
+use icsml::netserve::{
+    proto::ErrorCode, Client, ManifestLoader, ModelRegistry, NetOptions,
+    NetServer, RegistryConfig, ServerConfig,
+};
 use icsml::plc::{profiles::KERAS_MODEL_SIZES, HwProfile, PLC_SPECS};
+use icsml::porting::manifest::ManifestSet;
 use icsml::porting::{self, codegen::CodegenOptions, Manifest};
 use icsml::quant::{memory_requirements, Scheme};
 use icsml::runtime::{Runtime, XlaBackend};
@@ -43,18 +55,26 @@ fn main() -> Result<()> {
         Some("infer") => infer(&args),
         Some("hitl") => hitl(&args),
         Some("serve") => serve(&args),
+        Some("listen") => listen(&args),
+        Some("client") => client(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: icsml <table1|fig3|table2|port|infer|hitl|serve> \
+                "usage: icsml \
+                 <table1|fig3|table2|port|infer|hitl|serve|listen|client> \
                  [options]\n  port  --model classifier [--out FILE] \
                  [--no-fused]\n  infer --index N [--st|--engine|--xla]\n  \
                  hitl  --steps N --attack combined --magnitude 0.5\n  \
                  serve --requests N --workers W --batch B [--xla] \
                  [--deadline-us D] [--class control|defense|batch] \
-                 [--admit bbb|wago]"
+                 [--admit bbb|wago]\n  \
+                 listen --addr 127.0.0.1:9470 [--roots DIR,DIR] \
+                 [--workers W] [--batch B] [--max-models N] [--max-mb MB] \
+                 [--for-secs S]\n  \
+                 client --addr 127.0.0.1:9470 --model classifier \
+                 --requests N [--class C] [--deadline-us D] [--dim K]"
             );
             Ok(())
         }
@@ -375,6 +395,143 @@ fn serve(args: &Args) -> Result<()> {
         pool.batches(),
         pool.served() as f64 / pool.batches().max(1) as f64,
         pool.worker_served()
+    );
+    Ok(())
+}
+
+fn listen(args: &Args) -> Result<()> {
+    let addr = args.opt_or("addr", "127.0.0.1:9470");
+    let workers = args.opt_usize("workers", 4);
+    let batch = args.opt_usize("batch", 8);
+    let max_models = args.opt_usize("max-models", 0);
+    let max_mb = args.opt_f64("max-mb", 0.0);
+    let for_secs = args.opt_f64("for-secs", 0.0);
+    let roots: Vec<std::path::PathBuf> = match args.opt("roots") {
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(std::path::PathBuf::from)
+            .collect(),
+        None => vec![icsml::artifacts_dir()],
+    };
+    let set = ManifestSet::load_roots(&roots)?;
+    let names = set.names();
+    let cfg = RegistryConfig {
+        max_models: if max_models == 0 { usize::MAX } else { max_models },
+        max_bytes: if max_mb <= 0.0 {
+            u64::MAX
+        } else {
+            (max_mb * 1024.0 * 1024.0) as u64
+        },
+        pool: PoolConfig { workers, max_batch: batch },
+    };
+    let registry = Arc::new(ModelRegistry::new(
+        Box::new(ManifestLoader::new(set)),
+        cfg,
+    ));
+    let server = NetServer::bind(
+        addr.as_str(),
+        Arc::clone(&registry),
+        ServerConfig::default(),
+    )?;
+    println!(
+        "listening on {} — {} model(s) {:?}, {workers} workers x \
+         micro-batch {batch} per model",
+        server.local_addr(),
+        names.len(),
+        names
+    );
+    let started = std::time::Instant::now();
+    let tick = if for_secs > 0.0 {
+        std::time::Duration::from_secs_f64(for_secs.min(5.0))
+    } else {
+        std::time::Duration::from_secs(5)
+    };
+    loop {
+        std::thread::sleep(tick);
+        let s = server.stats();
+        println!(
+            "[{:>7.1}s] conns {} requests {} ok {} errors {} \
+             (resident models {} / {:.1} MiB)",
+            started.elapsed().as_secs_f64(),
+            s.accepted(),
+            s.requests(),
+            s.responses(),
+            s.error_frames(),
+            registry.resident(),
+            registry.resident_bytes() as f64 / (1024.0 * 1024.0),
+        );
+        if for_secs > 0.0 && started.elapsed().as_secs_f64() >= for_secs {
+            break;
+        }
+    }
+    server.shutdown();
+    println!("shut down cleanly");
+    Ok(())
+}
+
+fn client(args: &Args) -> Result<()> {
+    let addr = args.opt_or("addr", "127.0.0.1:9470");
+    let model = args.opt_or("model", "classifier");
+    let n = args.opt_usize("requests", 100);
+    let class = args.opt_or("class", "batch");
+    let priority = Priority::from_name(&class)
+        .ok_or_else(|| anyhow::anyhow!("unknown priority class {class:?}"))?;
+    let deadline_us = args.opt_f64("deadline-us", 0.0);
+    let dim = args.opt_usize("dim", 0);
+    // Inputs: either synthetic windows of --dim features, or the
+    // local manifest's eval windows for the named model.
+    let (x, in_dim) = if dim > 0 {
+        let x: Vec<f32> =
+            (0..dim * 16).map(|i| (i % 17) as f32 / 17.0).collect();
+        (x, dim)
+    } else {
+        let m = Manifest::load(&icsml::artifacts_dir())?;
+        let spec = m.model(&model)?;
+        let x = binio::read_f32(&m.dataset_path("eval_windows")?)?;
+        (x, spec.in_dim())
+    };
+    anyhow::ensure!(x.len() >= in_dim, "need at least one input window");
+    let total = x.len() / in_dim;
+
+    let mut c = Client::connect(addr.as_str())?;
+    let mut opts = NetOptions::new().priority(priority);
+    if deadline_us > 0.0 {
+        opts = opts.deadline_us(deadline_us);
+    }
+    println!(
+        "driving {n} requests for model {model:?} at {addr} \
+         (class {}{})",
+        priority.name(),
+        if deadline_us > 0.0 {
+            format!(", deadline {deadline_us} us")
+        } else {
+            String::new()
+        }
+    );
+    let t0 = std::time::Instant::now();
+    // Pipeline: submit everything, then drain replies by id.
+    for i in 0..n {
+        let w = i % total;
+        c.submit(&model, &x[w * in_dim..(w + 1) * in_dim], &opts)?;
+    }
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    for _ in 0..n {
+        let reply = c.recv()?;
+        match reply.result {
+            Ok(_) => ok += 1,
+            Err(e) if e.code == ErrorCode::DeadlineExceeded => shed += 1,
+            Err(e) => {
+                failed += 1;
+                eprintln!("request {}: {}", reply.id, e.msg);
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{ok}/{n} answered in {secs:.3} s ({:.0} req/s); {shed} shed, \
+         {failed} failed",
+        ok as f64 / secs.max(1e-9)
     );
     Ok(())
 }

@@ -1,0 +1,204 @@
+//! Blocking client for the netserve wire protocol.
+//!
+//! The client is deliberately simple: a blocking `TcpStream`, an
+//! incremental decode buffer, and three verbs — [`Client::submit`]
+//! (fire a request, get its wire id back), [`Client::recv`] (block
+//! for the next reply, whichever request it answers), and
+//! [`Client::infer`] (submit + wait, the one-liner). Pipelining is
+//! first-class: submit any number of requests before receiving, and
+//! match replies to requests by id — the server answers in completion
+//! order, not submission order.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::api::InferenceError;
+use crate::serve::Priority;
+
+use super::proto::{
+    decode, Decoded, ErrorFrame, Frame, RequestFrame, DEFAULT_MAX_FRAME,
+};
+
+/// Per-request options carried on the wire (the client-side mirror of
+/// [`SubmitOptions`](crate::serve::SubmitOptions)).
+#[derive(Debug, Clone, Copy)]
+pub struct NetOptions {
+    /// Priority class the server schedules the request in.
+    pub priority: Priority,
+    /// Deadline budget in microseconds from submission, if any. The
+    /// server converts it to an absolute deadline on receipt;
+    /// expired requests are shed with
+    /// [`InferenceError::DeadlineExceeded`], never answered late.
+    pub deadline_us: Option<f64>,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions { priority: Priority::Batch, deadline_us: None }
+    }
+}
+
+impl NetOptions {
+    /// Batch priority, no deadline.
+    pub fn new() -> NetOptions {
+        NetOptions::default()
+    }
+
+    /// Set the priority class.
+    pub fn priority(mut self, p: Priority) -> NetOptions {
+        self.priority = p;
+        self
+    }
+
+    /// Set the deadline budget, in microseconds from submission.
+    pub fn deadline_us(mut self, us: f64) -> NetOptions {
+        self.deadline_us = Some(us);
+        self
+    }
+}
+
+/// One reply off the wire, matched to its request by `id`.
+#[derive(Debug)]
+pub struct NetReply {
+    /// The wire id of the request this answers.
+    pub id: u64,
+    /// The model output, or the server's typed error frame.
+    pub result: Result<Vec<f32>, ErrorFrame>,
+}
+
+/// Blocking connection to a [`NetServer`](super::NetServer).
+pub struct Client {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream, rbuf: Vec::new(), next_id: 0 })
+    }
+
+    /// Bound how long [`Client::recv`] blocks (`None` = forever). A
+    /// timed-out `recv` returns the underlying io error; the
+    /// connection stays usable.
+    pub fn set_timeout(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> io::Result<()> {
+        self.stream.set_read_timeout(timeout)
+    }
+
+    /// A second handle over the same connection, with its own decode
+    /// buffer. Intended for the split sender/receiver shape (one
+    /// thread submits, another receives): exactly **one** handle may
+    /// call [`Client::recv`], and exactly one may call
+    /// [`Client::submit`] — two readers would tear frames apart, and
+    /// two writers would interleave ids.
+    pub fn try_clone(&self) -> io::Result<Client> {
+        Ok(Client {
+            stream: self.stream.try_clone()?,
+            rbuf: Vec::new(),
+            next_id: self.next_id,
+        })
+    }
+
+    /// Send one request and return the wire id its reply will carry.
+    /// Does not wait for the reply — pipeline as many as you like.
+    pub fn submit(
+        &mut self,
+        model: &str,
+        x: &[f32],
+        opts: &NetOptions,
+    ) -> io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut wire = Vec::with_capacity(64 + 4 * x.len());
+        Frame::Request(RequestFrame {
+            id,
+            priority: opts.priority,
+            deadline_us: opts.deadline_us,
+            model: model.to_string(),
+            payload: x.to_vec(),
+        })
+        .encode(&mut wire);
+        self.stream.write_all(&wire)?;
+        Ok(id)
+    }
+
+    /// Block for the next reply (success or typed error), in server
+    /// completion order.
+    pub fn recv(&mut self) -> io::Result<NetReply> {
+        loop {
+            match decode(&self.rbuf, DEFAULT_MAX_FRAME) {
+                Decoded::Frame(frame, used) => {
+                    self.rbuf.drain(..used);
+                    return match frame {
+                        Frame::Response(r) => Ok(NetReply {
+                            id: r.id,
+                            result: Ok(r.payload),
+                        }),
+                        Frame::Error(e) => Ok(NetReply {
+                            id: e.id,
+                            result: Err(e),
+                        }),
+                        Frame::Request(_) => Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "server sent a request frame",
+                        )),
+                    };
+                }
+                Decoded::Incomplete => {
+                    let mut buf = [0u8; 16384];
+                    let n = self.stream.read(&mut buf)?;
+                    if n == 0 {
+                        return Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            "server closed the connection",
+                        ));
+                    }
+                    self.rbuf.extend_from_slice(&buf[..n]);
+                }
+                Decoded::Corrupt(msg) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        msg,
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Blocking convenience: submit one request and wait for *its*
+    /// reply, reconstructing the typed error on failure. Replies to
+    /// other pipelined requests that arrive first are discarded — use
+    /// [`Client::submit`]/[`Client::recv`] directly when pipelining.
+    pub fn infer(
+        &mut self,
+        model: &str,
+        x: &[f32],
+        opts: &NetOptions,
+    ) -> Result<Vec<f32>, InferenceError> {
+        let id = self.submit(model, x, opts).map_err(io_unavailable)?;
+        loop {
+            let reply = self.recv().map_err(io_unavailable)?;
+            if reply.id != id {
+                continue;
+            }
+            return match reply.result {
+                Ok(y) => Ok(y),
+                Err(e) => Err(e.to_error()),
+            };
+        }
+    }
+}
+
+fn io_unavailable(e: io::Error) -> InferenceError {
+    InferenceError::BackendUnavailable {
+        backend: "netserve".into(),
+        reason: e.to_string(),
+    }
+}

@@ -1,0 +1,44 @@
+//! Network front door: async TCP ingress + multi-model registry.
+//!
+//! Everything below this module serves requests that originate *in
+//! process*. This layer opens the stack to the network — the
+//! deployment shape an ICS detection service actually runs in: many
+//! per-plant / per-PLC-class models behind one endpoint, thousands of
+//! concurrent in-flight requests, a fixed thread budget.
+//!
+//! Four pieces, composed left to right on the request path:
+//!
+//! * [`proto`] — a length-prefixed, versioned binary wire protocol
+//!   carrying model name, priority class, deadline budget and f32
+//!   payload, with typed request/response/error frames and an
+//!   incremental, non-panicking decoder.
+//! * [`Client`] — the blocking caller side: connect, pipeline
+//!   submissions, match replies by id, reconstruct typed
+//!   [`InferenceError`](crate::api::InferenceError)s from error
+//!   frames.
+//! * [`ModelRegistry`] — named engines loaded lazily from manifest
+//!   roots (or injected by tests via [`StaticLoader`]), each behind
+//!   its own [`serve::Pool`](crate::serve::Pool), cached under an
+//!   LRU byte/engine budget.
+//! * [`NetServer`] — a single-threaded poll reactor (std only, no new
+//!   deps) that parses frames, routes them through the registry into
+//!   pools, and completes responses from ticket readiness
+//!   ([`serve::Ticket::try_wait`](crate::serve::Ticket::try_wait)) —
+//!   O(workers) threads however many requests are in flight.
+//!
+//! See `docs/ARCHITECTURE.md` ("life of a networked query") and the
+//! "Network serving & model registry" section of `API.md`.
+
+#![deny(missing_docs)]
+
+pub mod client;
+pub mod proto;
+pub mod registry;
+pub mod server;
+
+pub use client::{Client, NetOptions, NetReply};
+pub use registry::{
+    LoadedModel, ManifestLoader, ModelEntry, ModelLoader, ModelRegistry,
+    RegistryConfig, StaticLoader,
+};
+pub use server::{NetServer, ServerConfig, ServerStats};

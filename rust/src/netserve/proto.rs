@@ -1,0 +1,762 @@
+//! Length-prefixed binary wire protocol for the network front door.
+//!
+//! Every frame on the wire is a `u32` little-endian length prefix
+//! (counting the *body only*, not the prefix itself) followed by the
+//! body:
+//!
+//! ```text
+//! [len: u32 LE] [magic: u16 LE] [version: u8] [kind: u8] [id: u64 LE] [rest…]
+//! ```
+//!
+//! `rest` depends on `kind`:
+//!
+//! * **Request** (`kind = 1`): `priority: u8` (band, `0 = Control`,
+//!   `1 = Defense`, `2 = Batch`), `has_deadline: u8`,
+//!   `deadline_us: f64 LE` (budget *relative to receipt*, in
+//!   microseconds; ignored unless `has_deadline != 0`),
+//!   `model_len: u16 LE` + UTF-8 model name, `n: u32 LE` + `n` f32 LE
+//!   input features. Deadlines travel as relative budgets because the
+//!   client and server clocks are unrelated; the server converts to an
+//!   absolute [`Deadline`](crate::serve::Deadline) on arrival.
+//! * **Response** (`kind = 2`): `n: u32 LE` + `n` f32 LE outputs.
+//! * **Error** (`kind = 3`): `code: u16 LE`, `late_us: f64 LE`,
+//!   `expected: u32 LE`, `got: u32 LE`, `model_len: u16 LE` + model
+//!   name, `msg_len: u16 LE` + human-readable message. The fixed
+//!   fields carry the machine-readable payload of the matching
+//!   [`InferenceError`] variant so a client can reconstruct a typed
+//!   error (see [`ErrorFrame::to_error`]); fields that don't apply to
+//!   a given code are zero/empty.
+//!
+//! Decoding is incremental and non-panicking: [`decode`] looks at a
+//! byte buffer and reports a complete frame, "need more bytes", or a
+//! corrupt stream — never indexes out of bounds, and bounds every
+//! allocation by the validated length prefix. That is what lets the
+//! server's event loop feed it straight from nonblocking reads.
+
+use crate::api::InferenceError;
+use crate::serve::Priority;
+
+/// First two body bytes of every frame — rejects non-protocol peers
+/// (an HTTP probe, a port scanner) before any field is trusted.
+pub const MAGIC: u16 = 0x4e53; // "NS"
+
+/// Wire protocol version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Default cap on a single frame body, in bytes (16 MiB). A length
+/// prefix above the cap marks the stream corrupt instead of letting a
+/// hostile peer make the server reserve gigabytes.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 24;
+
+/// Bytes of the fixed body header shared by every kind:
+/// magic (2) + version (1) + kind (1) + id (8).
+const HEADER: usize = 12;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_ERROR: u8 = 3;
+
+/// Machine-readable error category carried by an error frame — the
+/// wire image of [`InferenceError`]'s variants, plus
+/// [`ErrorCode::Protocol`] for failures of the conversation itself
+/// (malformed frame, unsupported version).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum ErrorCode {
+    /// The frame or stream was malformed; the server closes the
+    /// connection after sending this.
+    Protocol = 1,
+    /// Input length did not match the model
+    /// ([`InferenceError::ShapeMismatch`]).
+    ShapeMismatch = 2,
+    /// The serving stack refused ([`InferenceError::BackendUnavailable`]).
+    BackendUnavailable = 3,
+    /// Operation not implemented ([`InferenceError::Unsupported`]).
+    Unsupported = 4,
+    /// Execution failed mid-flight ([`InferenceError::ExecutionFailed`]).
+    ExecutionFailed = 5,
+    /// Session-state misuse ([`InferenceError::SessionState`]).
+    SessionState = 6,
+    /// The request was shed ([`InferenceError::DeadlineExceeded`]).
+    DeadlineExceeded = 7,
+    /// No backends registered ([`InferenceError::NoBackends`]).
+    NoBackends = 8,
+    /// Every backend failed ([`InferenceError::AllBackendsFailed`]).
+    AllBackendsFailed = 9,
+    /// Unknown model name ([`InferenceError::ModelNotFound`]).
+    ModelNotFound = 10,
+    /// Model cannot be resident under the registry budget
+    /// ([`InferenceError::Evicted`]).
+    Evicted = 11,
+}
+
+impl ErrorCode {
+    /// Decode a wire value; `None` for codes this build doesn't know.
+    pub fn from_u16(v: u16) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::Protocol,
+            2 => ErrorCode::ShapeMismatch,
+            3 => ErrorCode::BackendUnavailable,
+            4 => ErrorCode::Unsupported,
+            5 => ErrorCode::ExecutionFailed,
+            6 => ErrorCode::SessionState,
+            7 => ErrorCode::DeadlineExceeded,
+            8 => ErrorCode::NoBackends,
+            9 => ErrorCode::AllBackendsFailed,
+            10 => ErrorCode::ModelNotFound,
+            11 => ErrorCode::Evicted,
+            _ => return None,
+        })
+    }
+}
+
+/// An inference request as it travels client → server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// Caller-chosen correlation id, echoed verbatim in the reply.
+    /// Replies may arrive out of submission order.
+    pub id: u64,
+    /// Priority class the request schedules in.
+    pub priority: Priority,
+    /// Remaining deadline budget in microseconds at send time, if any.
+    pub deadline_us: Option<f64>,
+    /// Registry name of the model to run.
+    pub model: String,
+    /// Flattened f32 input features.
+    pub payload: Vec<f32>,
+}
+
+/// A successful reply, server → client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    /// The request id this answers.
+    pub id: u64,
+    /// Flattened f32 model outputs.
+    pub payload: Vec<f32>,
+}
+
+/// A typed failure reply, server → client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorFrame {
+    /// The request id this answers; `0` when the failure is not
+    /// attributable to any single request (corrupt stream).
+    pub id: u64,
+    /// Machine-readable category.
+    pub code: ErrorCode,
+    /// Microseconds late, for [`ErrorCode::DeadlineExceeded`]; else 0.
+    pub late_us: f64,
+    /// Expected length, for [`ErrorCode::ShapeMismatch`]; else 0.
+    pub expected: u32,
+    /// Supplied length, for [`ErrorCode::ShapeMismatch`]; else 0.
+    pub got: u32,
+    /// Model name, for registry errors; else empty.
+    pub model: String,
+    /// Human-readable description (always safe to log).
+    pub msg: String,
+}
+
+/// Any frame the protocol can carry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server inference request.
+    Request(RequestFrame),
+    /// Server → client success.
+    Response(ResponseFrame),
+    /// Server → client typed failure.
+    Error(ErrorFrame),
+}
+
+/// Outcome of one [`decode`] attempt over a byte buffer.
+#[derive(Debug)]
+pub enum Decoded {
+    /// A complete frame, and how many buffer bytes it consumed
+    /// (prefix + body) — the caller drains that many and tries again.
+    Frame(Frame, usize),
+    /// The buffer holds only part of a frame; read more bytes.
+    Incomplete,
+    /// The stream is not speaking this protocol (bad magic/version,
+    /// oversized or impossible length, malformed fields). The
+    /// connection cannot be resynchronized and must be closed.
+    Corrupt(String),
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append `s` as `u16` length + UTF-8 bytes, truncating at `u16::MAX`
+/// (registry names and error messages are far shorter in practice).
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let mut end = s.len().min(u16::MAX as usize);
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u16(out, end as u16);
+    out.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+/// Incremental field reader over one frame body. All methods are
+/// bounds-checked; `None` means the body ended early (a corrupt frame,
+/// since the length prefix promised more).
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let s = self.buf.get(self.pos..end)?;
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    fn u16(&mut self) -> Option<u16> {
+        self.take(2).map(|b| u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| {
+            u64::from_le_bytes([
+                b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+            ])
+        })
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+
+    fn f32s(&mut self) -> Option<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        )
+    }
+
+    fn str(&mut self) -> Option<String> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).ok()
+    }
+
+    fn exhausted(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+impl Frame {
+    /// Correlation id of the request this frame belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Request(r) => r.id,
+            Frame::Response(r) => r.id,
+            Frame::Error(e) => e.id,
+        }
+    }
+
+    /// Append the length-prefixed wire image of `self` to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let mut body = Vec::with_capacity(HEADER + 32);
+        put_u16(&mut body, MAGIC);
+        body.push(VERSION);
+        match self {
+            Frame::Request(r) => {
+                body.push(KIND_REQUEST);
+                put_u64(&mut body, r.id);
+                body.push(r.priority.band() as u8);
+                body.push(u8::from(r.deadline_us.is_some()));
+                put_f64(&mut body, r.deadline_us.unwrap_or(0.0));
+                put_str(&mut body, &r.model);
+                put_f32s(&mut body, &r.payload);
+            }
+            Frame::Response(r) => {
+                body.push(KIND_RESPONSE);
+                put_u64(&mut body, r.id);
+                put_f32s(&mut body, &r.payload);
+            }
+            Frame::Error(e) => {
+                body.push(KIND_ERROR);
+                put_u64(&mut body, e.id);
+                put_u16(&mut body, e.code as u16);
+                put_f64(&mut body, e.late_us);
+                put_u32(&mut body, e.expected);
+                put_u32(&mut body, e.got);
+                put_str(&mut body, &e.model);
+                put_str(&mut body, &e.msg);
+            }
+        }
+        put_u32(out, body.len() as u32);
+        out.extend_from_slice(&body);
+    }
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// `max_frame` caps the accepted body length ([`DEFAULT_MAX_FRAME`]
+/// for both sides of this repo). Never panics, never reads past
+/// `buf`, and never allocates more than the validated prefix allows.
+pub fn decode(buf: &[u8], max_frame: usize) -> Decoded {
+    if buf.len() < 4 {
+        return Decoded::Incomplete;
+    }
+    let len =
+        u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > max_frame {
+        return Decoded::Corrupt(format!(
+            "frame length {len} exceeds cap {max_frame}"
+        ));
+    }
+    if len < HEADER {
+        return Decoded::Corrupt(format!(
+            "frame length {len} below minimum header {HEADER}"
+        ));
+    }
+    if buf.len() < 4 + len {
+        return Decoded::Incomplete;
+    }
+    let mut c = Cursor::new(&buf[4..4 + len]);
+    // The header reads cannot fail (len >= HEADER), but stay on the
+    // checked path anyway.
+    let (magic, version, kind, id) =
+        match (c.u16(), c.u8(), c.u8(), c.u64()) {
+            (Some(m), Some(v), Some(k), Some(i)) => (m, v, k, i),
+            _ => return Decoded::Corrupt("truncated header".into()),
+        };
+    if magic != MAGIC {
+        return Decoded::Corrupt(format!("bad magic {magic:#06x}"));
+    }
+    if version != VERSION {
+        return Decoded::Corrupt(format!(
+            "unsupported protocol version {version} (this build speaks {VERSION})"
+        ));
+    }
+    let frame = match kind {
+        KIND_REQUEST => decode_request(&mut c, id),
+        KIND_RESPONSE => decode_response(&mut c, id),
+        KIND_ERROR => decode_error(&mut c, id),
+        other => {
+            return Decoded::Corrupt(format!("unknown frame kind {other}"))
+        }
+    };
+    match frame {
+        Some(f) => Decoded::Frame(f, 4 + len),
+        None => Decoded::Corrupt(format!(
+            "malformed kind-{kind} body (id {id})"
+        )),
+    }
+}
+
+fn decode_request(c: &mut Cursor<'_>, id: u64) -> Option<Frame> {
+    let band = c.u8()?;
+    let priority =
+        Priority::ALL.into_iter().find(|p| p.band() as u8 == band)?;
+    let has_deadline = c.u8()? != 0;
+    let budget = c.f64()?;
+    let deadline_us = if has_deadline {
+        if !budget.is_finite() {
+            return None;
+        }
+        Some(budget)
+    } else {
+        None
+    };
+    let model = c.str()?;
+    let payload = c.f32s()?;
+    c.exhausted().then_some(Frame::Request(RequestFrame {
+        id,
+        priority,
+        deadline_us,
+        model,
+        payload,
+    }))
+}
+
+fn decode_response(c: &mut Cursor<'_>, id: u64) -> Option<Frame> {
+    let payload = c.f32s()?;
+    c.exhausted()
+        .then_some(Frame::Response(ResponseFrame { id, payload }))
+}
+
+fn decode_error(c: &mut Cursor<'_>, id: u64) -> Option<Frame> {
+    let code = ErrorCode::from_u16(c.u16()?)?;
+    let late_us = c.f64()?;
+    let expected = c.u32()?;
+    let got = c.u32()?;
+    let model = c.str()?;
+    let msg = c.str()?;
+    c.exhausted().then_some(Frame::Error(ErrorFrame {
+        id,
+        code,
+        late_us,
+        expected,
+        got,
+        model,
+        msg,
+    }))
+}
+
+impl ErrorFrame {
+    /// A protocol-level failure (malformed stream, version mismatch),
+    /// not tied to any [`InferenceError`].
+    pub fn protocol(id: u64, msg: impl Into<String>) -> ErrorFrame {
+        ErrorFrame {
+            id,
+            code: ErrorCode::Protocol,
+            late_us: 0.0,
+            expected: 0,
+            got: 0,
+            model: String::new(),
+            msg: msg.into(),
+        }
+    }
+
+    /// The wire image of a typed serving error, keeping the fields a
+    /// client needs to reconstruct the variant.
+    pub fn from_error(id: u64, err: &InferenceError) -> ErrorFrame {
+        let mut f = ErrorFrame {
+            id,
+            code: ErrorCode::ExecutionFailed,
+            late_us: 0.0,
+            expected: 0,
+            got: 0,
+            model: String::new(),
+            msg: err.to_string(),
+        };
+        match err {
+            InferenceError::ShapeMismatch { expected, got, .. } => {
+                f.code = ErrorCode::ShapeMismatch;
+                f.expected = *expected as u32;
+                f.got = *got as u32;
+            }
+            InferenceError::BackendUnavailable { .. } => {
+                f.code = ErrorCode::BackendUnavailable;
+            }
+            InferenceError::Unsupported { .. } => {
+                f.code = ErrorCode::Unsupported;
+            }
+            InferenceError::ExecutionFailed { .. } => {
+                f.code = ErrorCode::ExecutionFailed;
+            }
+            InferenceError::SessionState { .. } => {
+                f.code = ErrorCode::SessionState;
+            }
+            InferenceError::DeadlineExceeded { late_us, .. } => {
+                f.code = ErrorCode::DeadlineExceeded;
+                f.late_us = *late_us;
+            }
+            InferenceError::ModelNotFound { model } => {
+                f.code = ErrorCode::ModelNotFound;
+                f.model = model.clone();
+            }
+            InferenceError::Evicted { model } => {
+                f.code = ErrorCode::Evicted;
+                f.model = model.clone();
+            }
+            InferenceError::NoBackends => {
+                f.code = ErrorCode::NoBackends;
+            }
+            InferenceError::AllBackendsFailed { .. } => {
+                f.code = ErrorCode::AllBackendsFailed;
+            }
+        }
+        f
+    }
+
+    /// Best-effort reconstruction of the typed error on the client
+    /// side. Variants whose payload doesn't fully survive the wire
+    /// (error sources, static strs) come back with the preserved
+    /// machine fields and the human-readable message.
+    pub fn to_error(&self) -> InferenceError {
+        match self.code {
+            ErrorCode::ShapeMismatch => InferenceError::ShapeMismatch {
+                what: "input",
+                expected: self.expected as usize,
+                got: self.got as usize,
+            },
+            ErrorCode::DeadlineExceeded => {
+                InferenceError::DeadlineExceeded {
+                    stage: "remote",
+                    late_us: self.late_us,
+                }
+            }
+            ErrorCode::ModelNotFound => InferenceError::ModelNotFound {
+                model: self.model.clone(),
+            },
+            ErrorCode::Evicted => InferenceError::Evicted {
+                model: self.model.clone(),
+            },
+            ErrorCode::NoBackends => InferenceError::NoBackends,
+            ErrorCode::AllBackendsFailed => {
+                InferenceError::AllBackendsFailed {
+                    failures: vec![("remote".into(), self.msg.clone())],
+                }
+            }
+            ErrorCode::Unsupported => InferenceError::Unsupported {
+                backend: "netserve".into(),
+                op: "remote operation",
+            },
+            ErrorCode::SessionState => InferenceError::SessionState {
+                backend: "netserve".into(),
+                expected: "remote session state",
+            },
+            ErrorCode::ExecutionFailed => InferenceError::ExecutionFailed {
+                backend: "netserve".into(),
+                source: anyhow::anyhow!("{}", self.msg),
+            },
+            ErrorCode::Protocol | ErrorCode::BackendUnavailable => {
+                InferenceError::BackendUnavailable {
+                    backend: "netserve".into(),
+                    reason: self.msg.clone(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode_one(f: &Frame) -> Vec<u8> {
+        let mut out = Vec::new();
+        f.encode(&mut out);
+        out
+    }
+
+    fn sample_request() -> Frame {
+        Frame::Request(RequestFrame {
+            id: 7,
+            priority: Priority::Control,
+            deadline_us: Some(1500.0),
+            model: "classifier".into(),
+            payload: vec![0.25, -1.0, 3.5],
+        })
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let frames = [
+            sample_request(),
+            Frame::Request(RequestFrame {
+                id: 8,
+                priority: Priority::Batch,
+                deadline_us: None,
+                model: "m".into(),
+                payload: vec![],
+            }),
+            Frame::Response(ResponseFrame {
+                id: 7,
+                payload: vec![1.0, 2.0],
+            }),
+            Frame::Error(ErrorFrame {
+                id: 9,
+                code: ErrorCode::ModelNotFound,
+                late_us: 0.0,
+                expected: 0,
+                got: 0,
+                model: "ghost".into(),
+                msg: "model \"ghost\" is not in the registry".into(),
+            }),
+        ];
+        for f in &frames {
+            let wire = encode_one(f);
+            match decode(&wire, DEFAULT_MAX_FRAME) {
+                Decoded::Frame(back, used) => {
+                    assert_eq!(&back, f);
+                    assert_eq!(used, wire.len());
+                }
+                other => panic!("expected frame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_incomplete_not_corrupt() {
+        let wire = encode_one(&sample_request());
+        for cut in 0..wire.len() {
+            match decode(&wire[..cut], DEFAULT_MAX_FRAME) {
+                Decoded::Incomplete => {}
+                other => panic!("cut at {cut}: expected Incomplete, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn decode_consumes_exactly_one_frame() {
+        let mut wire = encode_one(&sample_request());
+        let first_len = wire.len();
+        Frame::Response(ResponseFrame { id: 1, payload: vec![9.0] })
+            .encode(&mut wire);
+        match decode(&wire, DEFAULT_MAX_FRAME) {
+            Decoded::Frame(Frame::Request(_), used) => {
+                assert_eq!(used, first_len);
+                match decode(&wire[used..], DEFAULT_MAX_FRAME) {
+                    Decoded::Frame(Frame::Response(r), _) => {
+                        assert_eq!(r.payload, vec![9.0]);
+                    }
+                    other => panic!("expected response, got {other:?}"),
+                }
+            }
+            other => panic!("expected request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_corrupt() {
+        let mut wire = Vec::new();
+        put_u32(&mut wire, (DEFAULT_MAX_FRAME as u32) + 1);
+        assert!(matches!(
+            decode(&wire, DEFAULT_MAX_FRAME),
+            Decoded::Corrupt(_)
+        ));
+    }
+
+    #[test]
+    fn runt_length_prefix_is_corrupt() {
+        let mut wire = Vec::new();
+        put_u32(&mut wire, 3); // below the 12-byte header
+        wire.extend_from_slice(&[0, 0, 0]);
+        assert!(matches!(
+            decode(&wire, DEFAULT_MAX_FRAME),
+            Decoded::Corrupt(_)
+        ));
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_corrupt() {
+        let mut wire = encode_one(&sample_request());
+        wire[4] ^= 0xff; // magic low byte
+        assert!(matches!(
+            decode(&wire, DEFAULT_MAX_FRAME),
+            Decoded::Corrupt(_)
+        ));
+
+        let mut wire = encode_one(&sample_request());
+        wire[6] = VERSION + 1;
+        match decode(&wire, DEFAULT_MAX_FRAME) {
+            Decoded::Corrupt(msg) => assert!(msg.contains("version")),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_count_mismatch_is_corrupt() {
+        // A response whose f32 count promises more floats than the
+        // frame carries: shrink the body but keep the count.
+        let mut wire = encode_one(&Frame::Response(ResponseFrame {
+            id: 1,
+            payload: vec![1.0, 2.0, 3.0],
+        }));
+        // Drop the last float and fix up the length prefix; the inner
+        // count still says 3.
+        let len = wire.len() - 4;
+        wire.truncate(len);
+        let body_len = (len - 8) as u32;
+        wire[..4].copy_from_slice(&body_len.to_le_bytes());
+        assert!(matches!(
+            decode(&wire, DEFAULT_MAX_FRAME),
+            Decoded::Corrupt(_)
+        ));
+    }
+
+    #[test]
+    fn error_frames_reconstruct_typed_errors() {
+        let cases: Vec<InferenceError> = vec![
+            InferenceError::ShapeMismatch {
+                what: "input",
+                expected: 8,
+                got: 3,
+            },
+            InferenceError::DeadlineExceeded {
+                stage: "queue",
+                late_us: 42.5,
+            },
+            InferenceError::ModelNotFound { model: "ghost".into() },
+            InferenceError::Evicted { model: "big".into() },
+        ];
+        for err in &cases {
+            let wire = encode_one(&Frame::Error(ErrorFrame::from_error(3, err)));
+            let back = match decode(&wire, DEFAULT_MAX_FRAME) {
+                Decoded::Frame(Frame::Error(e), _) => e.to_error(),
+                other => panic!("expected error frame, got {other:?}"),
+            };
+            match (err, &back) {
+                (
+                    InferenceError::ShapeMismatch { expected, got, .. },
+                    InferenceError::ShapeMismatch {
+                        expected: e2,
+                        got: g2,
+                        ..
+                    },
+                ) => assert_eq!((expected, got), (e2, g2)),
+                (
+                    InferenceError::DeadlineExceeded { late_us, .. },
+                    InferenceError::DeadlineExceeded { late_us: l2, .. },
+                ) => assert_eq!(late_us, l2),
+                (
+                    InferenceError::ModelNotFound { model },
+                    InferenceError::ModelNotFound { model: m2 },
+                ) => assert_eq!(model, m2),
+                (
+                    InferenceError::Evicted { model },
+                    InferenceError::Evicted { model: m2 },
+                ) => assert_eq!(model, m2),
+                (a, b) => panic!("variant mismatch: {a:?} vs {b:?}"),
+            }
+            assert!(!back.is_backend_fault() || err.is_backend_fault());
+        }
+    }
+
+    #[test]
+    fn non_finite_deadline_is_corrupt() {
+        let mut wire = Vec::new();
+        Frame::Request(RequestFrame {
+            id: 1,
+            priority: Priority::Batch,
+            deadline_us: Some(f64::NAN),
+            model: "m".into(),
+            payload: vec![],
+        })
+        .encode(&mut wire);
+        assert!(matches!(
+            decode(&wire, DEFAULT_MAX_FRAME),
+            Decoded::Corrupt(_)
+        ));
+    }
+}

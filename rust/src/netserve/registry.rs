@@ -1,0 +1,540 @@
+//! Lazy multi-model registry: named engines behind one server.
+//!
+//! The realistic ICS deployment shape is one detection service
+//! fronting *many* models — per-plant, per-PLC-class, per-sensor —
+//! far more than fit in memory at once on an edge box. The
+//! [`ModelRegistry`] owns that working set: it loads a named engine
+//! on first use (through a pluggable [`ModelLoader`]), wraps it in
+//! its own [`Pool`] of workers, caches the result behind an `Arc`,
+//! and evicts least-recently-used entries when a configurable
+//! engine-count or byte budget is exceeded.
+//!
+//! Concurrency contract:
+//!
+//! * `get_or_load` for an already-resident model is a short
+//!   mutex-protected map hit.
+//! * A cold load runs *outside* the registry lock; concurrent callers
+//!   asking for the same name park on a condvar and share the single
+//!   load (the loader is invoked exactly once per residency).
+//! * Eviction only drops the registry's own `Arc`. In-flight requests
+//!   holding a [`ModelEntry`] keep its pool alive until they finish;
+//!   the worker threads of an evicted pool are joined by whichever
+//!   thread drops the last reference, never under the registry lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::{EngineBackend, InferenceError, SharedBackend};
+use crate::porting::load_engine_model;
+use crate::porting::manifest::ManifestSet;
+use crate::serve::{Pool, PoolConfig};
+
+/// A backend produced by a [`ModelLoader`], plus its residency cost.
+#[derive(Clone)]
+pub struct LoadedModel {
+    /// The engine, ready to serve.
+    pub backend: SharedBackend,
+    /// Bytes this model holds resident (weights + activations); the
+    /// unit the registry's byte budget is charged in.
+    pub bytes: u64,
+}
+
+/// Source of named models for a [`ModelRegistry`].
+///
+/// `load` may be slow (disk reads, weight parsing); the registry
+/// guarantees it is called outside the registry lock and at most once
+/// per residency of a given name.
+pub trait ModelLoader: Send + Sync {
+    /// Produce the backend for `name`, or a typed error —
+    /// [`InferenceError::ModelNotFound`] when no such model exists.
+    fn load(&self, name: &str) -> Result<LoadedModel, InferenceError>;
+
+    /// Every name this loader can produce (sorted, for display).
+    fn names(&self) -> Vec<String>;
+}
+
+/// In-memory [`ModelLoader`] over pre-built backends — the fixture
+/// loader used by tests and benches, and the simplest way to serve
+/// models that never touch disk.
+#[derive(Default)]
+pub struct StaticLoader {
+    models: HashMap<String, LoadedModel>,
+    loads: AtomicU64,
+}
+
+impl StaticLoader {
+    /// An empty loader; add models with [`StaticLoader::insert`].
+    pub fn new() -> StaticLoader {
+        StaticLoader::default()
+    }
+
+    /// Register `backend` under `name`, charging `bytes` against the
+    /// registry budget.
+    pub fn insert(
+        &mut self,
+        name: impl Into<String>,
+        backend: SharedBackend,
+        bytes: u64,
+    ) {
+        self.models
+            .insert(name.into(), LoadedModel { backend, bytes });
+    }
+
+    /// How many times `load` has succeeded — lets tests assert the
+    /// registry's load-exactly-once contract.
+    pub fn loads(&self) -> u64 {
+        self.loads.load(Ordering::Relaxed)
+    }
+}
+
+impl ModelLoader for StaticLoader {
+    fn load(&self, name: &str) -> Result<LoadedModel, InferenceError> {
+        match self.models.get(name) {
+            Some(m) => {
+                self.loads.fetch_add(1, Ordering::Relaxed);
+                Ok(m.clone())
+            }
+            None => Err(InferenceError::ModelNotFound {
+                model: name.to_string(),
+            }),
+        }
+    }
+
+    fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// [`ModelLoader`] over exported artifact manifests: resolves a name
+/// through a [`ManifestSet`] (first root wins), reads the weights
+/// from disk, and builds a native [`EngineBackend`].
+pub struct ManifestLoader {
+    set: ManifestSet,
+}
+
+impl ManifestLoader {
+    /// Serve every model the manifest roots export.
+    pub fn new(set: ManifestSet) -> ManifestLoader {
+        ManifestLoader { set }
+    }
+
+    /// Residency estimate for a manifest model: weights + biases as
+    /// f32s. Deliberately ignores the per-session activation scratch,
+    /// which is bounded and small next to the weights.
+    fn estimate_bytes(spec: &crate::porting::manifest::ModelSpec) -> u64 {
+        spec.layers
+            .iter()
+            .map(|l| 4 * (l.inputs as u64 * l.neurons as u64 + l.neurons as u64))
+            .sum()
+    }
+}
+
+impl ModelLoader for ManifestLoader {
+    fn load(&self, name: &str) -> Result<LoadedModel, InferenceError> {
+        let (manifest, spec) = self.set.model(name).map_err(|_| {
+            InferenceError::ModelNotFound {
+                model: name.to_string(),
+            }
+        })?;
+        let model = load_engine_model(&manifest.root, spec).map_err(
+            |e| InferenceError::BackendUnavailable {
+                backend: "registry".into(),
+                reason: format!("loading {name}: {e:#}"),
+            },
+        )?;
+        Ok(LoadedModel {
+            backend: Arc::new(EngineBackend::new(model)),
+            bytes: ManifestLoader::estimate_bytes(spec),
+        })
+    }
+
+    fn names(&self) -> Vec<String> {
+        self.set.names()
+    }
+}
+
+/// Registry sizing knobs.
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Max resident models; the LRU entry is evicted beyond this.
+    pub max_models: usize,
+    /// Max total resident bytes across models (as charged by the
+    /// loader); LRU entries are evicted until the new model fits.
+    pub max_bytes: u64,
+    /// Pool sizing applied to every per-model worker pool.
+    pub pool: PoolConfig,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> RegistryConfig {
+        RegistryConfig {
+            max_models: usize::MAX,
+            max_bytes: u64::MAX,
+            pool: PoolConfig { workers: 2, max_batch: 8 },
+        }
+    }
+}
+
+/// A resident model: its serving pool plus bookkeeping. Handed out as
+/// `Arc<ModelEntry>` so eviction can never yank a pool out from under
+/// an in-flight request.
+pub struct ModelEntry {
+    name: String,
+    pool: Pool,
+    bytes: u64,
+}
+
+impl ModelEntry {
+    /// Registry name this entry serves.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The model's worker pool; submit requests here.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// Bytes charged against the registry budget.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+enum Slot {
+    /// Another thread is running the loader; park on the condvar.
+    Loading,
+    /// Resident. `last_used` is the registry tick of the most recent
+    /// `get_or_load` hit — the LRU ordering key.
+    Ready { entry: Arc<ModelEntry>, last_used: u64 },
+}
+
+struct Inner {
+    slots: HashMap<String, Slot>,
+    tick: u64,
+    resident_bytes: u64,
+}
+
+/// Lazily-loading, LRU-evicting cache of named model pools.
+pub struct ModelRegistry {
+    loader: Box<dyn ModelLoader>,
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    loads: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// A registry over `loader` with the given budgets.
+    pub fn new(
+        loader: Box<dyn ModelLoader>,
+        cfg: RegistryConfig,
+    ) -> ModelRegistry {
+        ModelRegistry {
+            loader,
+            cfg,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+            }),
+            cv: Condvar::new(),
+            loads: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The resident entry for `name`, loading it first if necessary.
+    ///
+    /// Concurrent calls for the same cold name share one load. Errors
+    /// are typed: [`InferenceError::ModelNotFound`] for unknown names,
+    /// [`InferenceError::Evicted`] when the model alone exceeds the
+    /// whole byte budget, loader failures as reported.
+    pub fn get_or_load(
+        &self,
+        name: &str,
+    ) -> Result<Arc<ModelEntry>, InferenceError> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            match inner.slots.get(name) {
+                Some(Slot::Loading) => {
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                Some(Slot::Ready { .. }) => {
+                    inner.tick += 1;
+                    let tick = inner.tick;
+                    if let Some(Slot::Ready { entry, last_used }) =
+                        inner.slots.get_mut(name)
+                    {
+                        *last_used = tick;
+                        return Ok(Arc::clone(entry));
+                    }
+                }
+                None => break,
+            }
+        }
+
+        // Claim the load and run it without the lock.
+        inner.slots.insert(name.to_string(), Slot::Loading);
+        drop(inner);
+        let loaded = self.loader.load(name);
+
+        let mut inner = self.inner.lock().unwrap();
+        let loaded = match loaded {
+            Ok(l) => l,
+            Err(e) => {
+                inner.slots.remove(name);
+                self.cv.notify_all();
+                return Err(e);
+            }
+        };
+        if loaded.bytes > self.cfg.max_bytes {
+            inner.slots.remove(name);
+            self.cv.notify_all();
+            return Err(InferenceError::Evicted {
+                model: name.to_string(),
+            });
+        }
+
+        // Evict LRU entries until the newcomer fits both budgets.
+        // Collect the dropped Arcs and release them *after* the lock:
+        // dropping the last reference joins the pool's workers.
+        let mut dropped: Vec<Arc<ModelEntry>> = Vec::new();
+        loop {
+            let ready = inner
+                .slots
+                .values()
+                .filter(|s| matches!(s, Slot::Ready { .. }))
+                .count();
+            let over_count = ready + 1 > self.cfg.max_models;
+            let over_bytes = ready > 0
+                && inner.resident_bytes + loaded.bytes
+                    > self.cfg.max_bytes;
+            if !over_count && !over_bytes {
+                break;
+            }
+            let victim = inner
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready { last_used, .. } => {
+                        Some((*last_used, k.clone()))
+                    }
+                    Slot::Loading => None,
+                })
+                .min()
+                .map(|(_, k)| k);
+            let Some(victim) = victim else { break };
+            if let Some(Slot::Ready { entry, .. }) =
+                inner.slots.remove(&victim)
+            {
+                inner.resident_bytes =
+                    inner.resident_bytes.saturating_sub(entry.bytes);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                dropped.push(entry);
+            }
+        }
+
+        self.loads.fetch_add(1, Ordering::Relaxed);
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            pool: Pool::new(loaded.backend, self.cfg.pool.clone()),
+            bytes: loaded.bytes,
+        });
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.resident_bytes += loaded.bytes;
+        inner.slots.insert(
+            name.to_string(),
+            Slot::Ready { entry: Arc::clone(&entry), last_used: tick },
+        );
+        self.cv.notify_all();
+        drop(inner);
+        drop(dropped);
+        Ok(entry)
+    }
+
+    /// Models currently resident.
+    pub fn resident(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .slots
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { .. }))
+            .count()
+    }
+
+    /// Bytes currently charged against the byte budget.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// Successful loads since construction.
+    pub fn loads(&self) -> u64 {
+        self.loads.load(Ordering::Relaxed)
+    }
+
+    /// Entries evicted since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Every name the underlying loader can serve.
+    pub fn names(&self) -> Vec<String> {
+        self.loader.names()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fixtures;
+
+    fn fixture_loader(names: &[(&str, u64)]) -> StaticLoader {
+        let mut l = StaticLoader::new();
+        for (i, (name, bytes)) in names.iter().enumerate() {
+            let backend: SharedBackend = Arc::new(EngineBackend::new(
+                fixtures::mlp_8_16_4(1 + i as u64),
+            ));
+            l.insert(*name, backend, *bytes);
+        }
+        l
+    }
+
+    fn registry(
+        loader: StaticLoader,
+        max_models: usize,
+        max_bytes: u64,
+    ) -> ModelRegistry {
+        ModelRegistry::new(
+            Box::new(loader),
+            RegistryConfig {
+                max_models,
+                max_bytes,
+                pool: PoolConfig { workers: 1, max_batch: 4 },
+            },
+        )
+    }
+
+    #[test]
+    fn lru_eviction_respects_touch_order() {
+        let reg = registry(
+            fixture_loader(&[("a", 1), ("b", 1), ("c", 1)]),
+            2,
+            u64::MAX,
+        );
+        reg.get_or_load("a").unwrap();
+        reg.get_or_load("b").unwrap();
+        reg.get_or_load("a").unwrap(); // touch: b is now LRU
+        reg.get_or_load("c").unwrap(); // evicts b, not a
+        assert_eq!(reg.resident(), 2);
+        assert_eq!(reg.evictions(), 1);
+        // a and c are hot: hitting them must not reload.
+        let before = reg.loads();
+        reg.get_or_load("a").unwrap();
+        reg.get_or_load("c").unwrap();
+        assert_eq!(reg.loads(), before);
+        // b was evicted: hitting it reloads.
+        reg.get_or_load("b").unwrap();
+        assert_eq!(reg.loads(), before + 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts_until_the_newcomer_fits() {
+        let reg = registry(
+            fixture_loader(&[("a", 40), ("b", 40), ("c", 40)]),
+            usize::MAX,
+            100,
+        );
+        reg.get_or_load("a").unwrap();
+        reg.get_or_load("b").unwrap();
+        assert_eq!(reg.resident_bytes(), 80);
+        reg.get_or_load("c").unwrap(); // 80 + 40 > 100: evicts a
+        assert_eq!(reg.resident(), 2);
+        assert_eq!(reg.resident_bytes(), 80);
+        assert_eq!(reg.evictions(), 1);
+    }
+
+    #[test]
+    fn model_larger_than_whole_budget_is_a_typed_evicted_error() {
+        let reg =
+            registry(fixture_loader(&[("big", 1000)]), usize::MAX, 100);
+        match reg.get_or_load("big") {
+            Err(InferenceError::Evicted { model }) => {
+                assert_eq!(model, "big");
+            }
+            other => panic!("expected Evicted, got {other:?}"),
+        }
+        // The failed load must not leave a wedged Loading slot.
+        assert_eq!(reg.resident(), 0);
+        assert!(matches!(
+            reg.get_or_load("big"),
+            Err(InferenceError::Evicted { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_model_is_model_not_found() {
+        let reg =
+            registry(fixture_loader(&[("a", 1)]), usize::MAX, u64::MAX);
+        match reg.get_or_load("ghost") {
+            Err(InferenceError::ModelNotFound { model }) => {
+                assert_eq!(model, "ghost");
+            }
+            other => panic!("expected ModelNotFound, got {other:?}"),
+        }
+        // And the name is retryable (no stuck Loading slot).
+        assert!(reg.get_or_load("ghost").is_err());
+        assert!(reg.get_or_load("a").is_ok());
+    }
+
+    #[test]
+    fn concurrent_get_or_load_loads_exactly_once() {
+        let reg = Arc::new(registry(
+            fixture_loader(&[("m", 1)]),
+            usize::MAX,
+            u64::MAX,
+        ));
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let reg = Arc::clone(&reg);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let entry = reg.get_or_load("m").unwrap();
+                    entry.pool().infer(&[0.0; 8]).unwrap()
+                })
+            })
+            .collect();
+        let outputs: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(reg.loads(), 1, "8 racers share a single load");
+        for o in &outputs {
+            assert_eq!(o, &outputs[0], "same model, same answer");
+        }
+    }
+
+    #[test]
+    fn eviction_does_not_break_inflight_holders() {
+        let reg = registry(
+            fixture_loader(&[("a", 1), ("b", 1)]),
+            1,
+            u64::MAX,
+        );
+        let held = reg.get_or_load("a").unwrap();
+        reg.get_or_load("b").unwrap(); // evicts a from the registry
+        assert_eq!(reg.evictions(), 1);
+        // The held Arc keeps a's pool fully serviceable.
+        let y = held.pool().infer(&[0.5; 8]).unwrap();
+        assert_eq!(y.len(), 4);
+        assert_eq!(held.name(), "a");
+        assert_eq!(held.bytes(), 1);
+    }
+}

@@ -1,0 +1,411 @@
+//! Nonblocking TCP front door over the model registry.
+//!
+//! One reactor thread owns every connection: it accepts, reads,
+//! parses frames, routes requests into per-model [`Pool`]s through
+//! the [`ModelRegistry`], polls outstanding [`Ticket`]s with
+//! [`Ticket::try_wait`], and flushes replies — all without ever
+//! blocking on a single request. Thread budget is **O(workers)**: the
+//! reactor plus the pool workers, regardless of how many thousands of
+//! requests are in flight. That is the property ROADMAP item 1 asks
+//! for; a thread-per-request design melts exactly when an ICS
+//! detection service is needed most (alarm storms).
+//!
+//! The loop is a minimal poll-style reactor on `std` only — no mio,
+//! no epoll binding, no new dependencies. Every socket is
+//! nonblocking; when a full pass makes no progress (no bytes moved,
+//! no ticket completed, no connection accepted) the reactor sleeps
+//! [`ServerConfig::idle_sleep`] before the next pass, trading a
+//! bounded sliver of idle latency for zero busy-spin.
+//!
+//! Failure containment: a malformed or hostile stream gets a typed
+//! [`ErrorCode::Protocol`](super::proto::ErrorCode::Protocol) error
+//! frame and a close — it never panics the reactor, wedges the loop,
+//! or affects other connections. Per-request failures (unknown model,
+//! shed deadline, shape mismatch) travel back as error frames on a
+//! healthy connection.
+//!
+//! [`Pool`]: crate::serve::Pool
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::serve::{Deadline, SubmitOptions, Ticket};
+
+use super::proto::{
+    self, Decoded, ErrorFrame, Frame, ResponseFrame, DEFAULT_MAX_FRAME,
+};
+use super::registry::ModelRegistry;
+
+/// Reactor sizing and robustness knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Largest accepted frame body, in bytes
+    /// ([`DEFAULT_MAX_FRAME`]). Bigger prefixes mark the stream
+    /// corrupt.
+    pub max_frame: usize,
+    /// Max simultaneously-open connections; beyond this, new peers
+    /// wait in the OS accept backlog.
+    pub max_conns: usize,
+    /// How long the reactor sleeps after a pass that made no
+    /// progress.
+    pub idle_sleep: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_frame: DEFAULT_MAX_FRAME,
+            max_conns: 1024,
+            idle_sleep: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Monotonic counters the reactor publishes (all `Relaxed`; read
+/// them for monitoring, not for synchronization).
+#[derive(Default)]
+pub struct ServerStats {
+    accepted: AtomicU64,
+    requests: AtomicU64,
+    responses: AtomicU64,
+    error_frames: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+impl ServerStats {
+    /// Connections accepted since bind.
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Request frames parsed.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Successful response frames sent.
+    pub fn responses(&self) -> u64 {
+        self.responses.load(Ordering::Relaxed)
+    }
+
+    /// Typed error frames sent (per-request failures *and* protocol
+    /// errors).
+    pub fn error_frames(&self) -> u64 {
+        self.error_frames.load(Ordering::Relaxed)
+    }
+
+    /// Corrupt-stream events (each also closes its connection).
+    pub fn protocol_errors(&self) -> u64 {
+        self.protocol_errors.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a running network server. Dropping it stops the reactor
+/// and joins its thread; in-flight pool work is abandoned (tickets
+/// dropped), pool workers themselves are owned by the registry.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (use port 0 for an OS-assigned port) and start the
+    /// reactor thread serving `registry`.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        registry: Arc<ModelRegistry>,
+        cfg: ServerConfig,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let thread = {
+            let stop = Arc::clone(&stop);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name("netserve-reactor".into())
+                .spawn(move || {
+                    reactor(listener, registry, cfg, stop, stats)
+                })?
+        };
+        Ok(NetServer { addr, stop, stats, thread: Some(thread) })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The reactor's monitoring counters.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Stop the reactor and join its thread. (Dropping the server
+    /// does the same; this just names the intent.)
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// One client connection's state, owned by the reactor.
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed inbound bytes.
+    rbuf: Vec<u8>,
+    /// Encoded outbound bytes not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// How much of `wbuf` the socket has taken.
+    wpos: usize,
+    /// In-flight requests: (wire id, pool ticket).
+    pending: Vec<(u64, Ticket)>,
+    /// Peer half-closed its write side; serve what's pending, then
+    /// close.
+    eof: bool,
+    /// Stream is corrupt: stop parsing, close once `wbuf` drains.
+    close_after_flush: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: Vec::new(),
+            eof: false,
+            close_after_flush: false,
+            dead: false,
+        }
+    }
+
+    fn send(&mut self, frame: &Frame) {
+        frame.encode(&mut self.wbuf);
+    }
+}
+
+fn reactor(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        let mut progress = false;
+        while conns.len() < cfg.max_conns {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    stats.accepted.fetch_add(1, Ordering::Relaxed);
+                    conns.push(Conn::new(stream));
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        for conn in conns.iter_mut() {
+            progress |= service(conn, &registry, &cfg, &stats);
+        }
+        conns.retain(|c| !c.dead);
+        if !progress {
+            std::thread::sleep(cfg.idle_sleep);
+        }
+    }
+}
+
+/// One nonblocking pass over a connection:
+/// read → parse/dispatch → poll tickets → flush. Returns whether any
+/// progress was made.
+fn service(
+    conn: &mut Conn,
+    registry: &ModelRegistry,
+    cfg: &ServerConfig,
+    stats: &ServerStats,
+) -> bool {
+    let mut progress = false;
+
+    // Read until the socket runs dry.
+    if !conn.eof && !conn.close_after_flush {
+        let mut buf = [0u8; 16384];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.eof = true;
+                    progress = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&buf[..n]);
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return true;
+                }
+            }
+        }
+    }
+
+    // Parse every complete frame buffered so far.
+    let mut consumed = 0;
+    while !conn.close_after_flush {
+        match proto::decode(&conn.rbuf[consumed..], cfg.max_frame) {
+            Decoded::Frame(frame, used) => {
+                consumed += used;
+                progress = true;
+                dispatch(conn, frame, registry, stats);
+            }
+            Decoded::Incomplete => break,
+            Decoded::Corrupt(msg) => {
+                stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                stats.error_frames.fetch_add(1, Ordering::Relaxed);
+                conn.send(&Frame::Error(ErrorFrame::protocol(0, msg)));
+                conn.close_after_flush = true;
+                conn.rbuf.clear();
+                consumed = 0;
+                progress = true;
+                break;
+            }
+        }
+    }
+    if consumed > 0 {
+        conn.rbuf.drain(..consumed);
+    }
+
+    // Complete whatever the pool has finished, without blocking.
+    let mut i = 0;
+    while i < conn.pending.len() {
+        match conn.pending[i].1.try_wait() {
+            Some(result) => {
+                let (id, _) = conn.pending.swap_remove(i);
+                progress = true;
+                match result {
+                    Ok(payload) => {
+                        stats.responses.fetch_add(1, Ordering::Relaxed);
+                        conn.send(&Frame::Response(ResponseFrame {
+                            id,
+                            payload,
+                        }));
+                    }
+                    Err(e) => {
+                        stats
+                            .error_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        conn.send(&Frame::Error(ErrorFrame::from_error(
+                            id, &e,
+                        )));
+                    }
+                }
+            }
+            None => i += 1,
+        }
+    }
+
+    // Flush until the socket pushes back.
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                return true;
+            }
+            Ok(n) => {
+                conn.wpos += n;
+                progress = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return true;
+            }
+        }
+    }
+    if conn.wpos == conn.wbuf.len() && conn.wpos > 0 {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+
+    let flushed = conn.wbuf.is_empty();
+    if conn.close_after_flush && flushed {
+        conn.dead = true;
+    }
+    if conn.eof && flushed && conn.pending.is_empty() {
+        conn.dead = true;
+    }
+    progress
+}
+
+/// Route one parsed frame. Requests go through the registry into the
+/// model's pool; anything else from a client is a protocol violation.
+fn dispatch(
+    conn: &mut Conn,
+    frame: Frame,
+    registry: &ModelRegistry,
+    stats: &ServerStats,
+) {
+    let req = match frame {
+        Frame::Request(r) => r,
+        other => {
+            stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            stats.error_frames.fetch_add(1, Ordering::Relaxed);
+            conn.send(&Frame::Error(ErrorFrame::protocol(
+                other.id(),
+                "clients may only send request frames",
+            )));
+            conn.close_after_flush = true;
+            return;
+        }
+    };
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    let entry = match registry.get_or_load(&req.model) {
+        Ok(e) => e,
+        Err(e) => {
+            stats.error_frames.fetch_add(1, Ordering::Relaxed);
+            conn.send(&Frame::Error(ErrorFrame::from_error(req.id, &e)));
+            return;
+        }
+    };
+    let mut opts = SubmitOptions::new().priority(req.priority);
+    if let Some(us) = req.deadline_us {
+        opts = opts.deadline(Deadline::within_us(us));
+    }
+    match entry.pool().submit_with(&req.payload, opts) {
+        Ok(ticket) => conn.pending.push((req.id, ticket)),
+        Err(e) => {
+            stats.error_frames.fetch_add(1, Ordering::Relaxed);
+            conn.send(&Frame::Error(ErrorFrame::from_error(req.id, &e)));
+        }
+    }
+}

@@ -165,6 +165,79 @@ impl Manifest {
     }
 }
 
+/// Several artifact roots acting as one multi-model namespace — the
+/// deployment shape `netserve::ModelRegistry` loads from: one serving
+/// process fronting many exported model sets (per-plant manifests,
+/// per-PLC-class manifests, ...). Lookup is first-root-wins, so
+/// earlier roots shadow later ones on name collisions.
+#[derive(Debug, Clone)]
+pub struct ManifestSet {
+    manifests: Vec<Manifest>,
+}
+
+impl ManifestSet {
+    /// Load `manifest.json` from each root, in order. Errors if any
+    /// root fails to load, or no roots are given.
+    pub fn load_roots(roots: &[PathBuf]) -> Result<ManifestSet> {
+        anyhow::ensure!(!roots.is_empty(), "no manifest roots given");
+        let manifests = roots
+            .iter()
+            .map(|r| Manifest::load(r))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ManifestSet { manifests })
+    }
+
+    /// Discover manifest roots under `dir`: the directory itself when
+    /// it holds a `manifest.json`, otherwise every immediate
+    /// subdirectory that does (sorted by name for determinism).
+    pub fn discover(dir: &Path) -> Result<ManifestSet> {
+        if dir.join("manifest.json").exists() {
+            return ManifestSet::load_roots(&[dir.to_path_buf()]);
+        }
+        let mut roots: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("scan {}", dir.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.join("manifest.json").exists())
+            .collect();
+        roots.sort();
+        anyhow::ensure!(
+            !roots.is_empty(),
+            "no manifest.json under {} or its subdirectories",
+            dir.display()
+        );
+        ManifestSet::load_roots(&roots)
+    }
+
+    /// The spec for `name` plus the manifest (root) that owns it —
+    /// first root wins when several export the same name.
+    pub fn model(&self, name: &str) -> Result<(&Manifest, &ModelSpec)> {
+        self.manifests
+            .iter()
+            .find_map(|m| m.models.get(name).map(|s| (m, s)))
+            .ok_or_else(|| {
+                anyhow::anyhow!("no manifest root has model {name}")
+            })
+    }
+
+    /// Every exported model name across the roots, sorted + deduped.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .manifests
+            .iter()
+            .flat_map(|m| m.models.keys().cloned())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// The loaded manifests, in root order.
+    pub fn manifests(&self) -> &[Manifest] {
+        &self.manifests
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -35,7 +35,9 @@
 //! * **No new dependencies**: `std::sync` primitives + threads.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{
+    channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -75,24 +77,66 @@ struct Counters {
 }
 
 /// A handle to an in-flight request; [`Ticket::wait`] blocks for the
-/// result. Submitting many tickets before waiting keeps every worker
-/// busy (that is the bench's pipelining model).
+/// result, [`Ticket::try_wait`] / [`Ticket::wait_timeout`] probe it
+/// without committing a thread. Submitting many tickets before
+/// waiting keeps every worker busy (that is the bench's pipelining
+/// model), and the non-blocking probes are how the `netserve` event
+/// loop drives thousands of in-flight requests over W workers without
+/// a blocked thread per request.
+///
+/// A ticket resolves exactly once: a probe that returns `None` leaves
+/// the eventual result intact for a later probe or a final
+/// [`Ticket::wait`]; after the result has been taken, further probes
+/// report the serving side as disconnected.
 pub struct Ticket {
     rx: Receiver<Result<Vec<f32>, InferenceError>>,
 }
 
 impl Ticket {
+    /// The typed resolution of a dead serving side (queue closed, all
+    /// workers exited, worker died mid-request).
+    fn disconnected() -> Result<Vec<f32>, InferenceError> {
+        Err(InferenceError::BackendUnavailable {
+            backend: "pool".into(),
+            reason: "worker disconnected before replying".into(),
+        })
+    }
+
     /// Block until the request resolves. Never hangs: if the serving
     /// side is gone (queue closed, all workers exited, worker died
     /// mid-request) the disconnected channel resolves to a typed
     /// [`InferenceError::BackendUnavailable`].
     pub fn wait(self) -> Result<Vec<f32>, InferenceError> {
-        self.rx.recv().unwrap_or_else(|_| {
-            Err(InferenceError::BackendUnavailable {
-                backend: "pool".into(),
-                reason: "worker disconnected before replying".into(),
-            })
-        })
+        self.rx.recv().unwrap_or_else(|_| Ticket::disconnected())
+    }
+
+    /// Non-blocking readiness probe: `Some(result)` once the request
+    /// has resolved (or the serving side is gone), `None` while it is
+    /// still in flight. A `None` never loses the eventual result.
+    pub fn try_wait(&mut self) -> Option<Result<Vec<f32>, InferenceError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Ticket::disconnected()),
+        }
+    }
+
+    /// Bounded blocking wait: the result if the request resolves (or
+    /// the serving side dies) within `timeout`, `None` on timeout. A
+    /// timed-out wait never loses the eventual result — a later
+    /// probe or [`Ticket::wait`] still returns it (asserted in
+    /// `tests/concurrency.rs`).
+    pub fn wait_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Option<Result<Vec<f32>, InferenceError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                Some(Ticket::disconnected())
+            }
+        }
     }
 }
 
@@ -621,6 +665,33 @@ mod tests {
         }
         // Healthy traffic still flows afterwards.
         assert_eq!(pool.infer(&[0.1; 8]).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn ticket_probes_resolve_without_losing_the_result() {
+        let backend = Arc::new(EngineBackend::new(model()));
+        let pool = Pool::new(backend, PoolConfig::default());
+        let mut t = pool.submit(&[0.1; 8]);
+        // Probe until resolved (bounded), then confirm the result was
+        // delivered through the probe path, not lost.
+        let mut got = None;
+        for _ in 0..600 {
+            if let Some(r) = t.wait_timeout(Duration::from_millis(50)) {
+                got = Some(r);
+                break;
+            }
+        }
+        assert_eq!(got.expect("ticket never resolved").unwrap().len(), 3);
+
+        // A dead pool resolves probes with the typed error instead of
+        // returning None forever.
+        let backend = Arc::new(EngineBackend::new(model()));
+        let pool2 = Pool::new(backend, PoolConfig::default());
+        let mut t2 = pool2.submit(&[0.1; 8]);
+        let _ = t2.wait_timeout(Duration::from_secs(30)).expect("served");
+        drop(pool2); // joins workers: the serving side is gone for sure
+        let again = t2.try_wait().expect("resolved tickets stay resolved");
+        assert!(again.is_err(), "second take reports disconnection");
     }
 
     #[test]

@@ -449,8 +449,50 @@ fn ticket_wait_errors_instead_of_hanging_when_all_workers_exit() {
 }
 
 #[test]
+fn ticket_timed_out_wait_does_not_lose_the_result() {
+    // One worker, each request pinned under a 200 ms service time:
+    // early probes *must* time out, and the eventual result must
+    // still arrive on a later probe of the same ticket.
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let backend =
+        RecordingBackend::shared(Arc::clone(&log), Duration::from_millis(200));
+    let pool = Pool::new(backend, PoolConfig { workers: 1, max_batch: 1 });
+    let mut ticket = pool.submit(&tagged(42));
+
+    // The request needs 200 ms of service; these probes land well
+    // inside that window.
+    assert!(ticket.try_wait().is_none(), "instant probe must miss");
+    assert!(
+        ticket.wait_timeout(Duration::from_millis(20)).is_none(),
+        "a 20 ms probe of a 200 ms request must time out"
+    );
+
+    // Keep probing with short timeouts: the timed-out waits above
+    // must not have consumed or dropped the eventual result.
+    let t0 = Instant::now();
+    let result = loop {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "result lost after a timed-out wait"
+        );
+        if let Some(r) = ticket.wait_timeout(Duration::from_millis(50)) {
+            break r;
+        }
+    };
+    assert_eq!(result.unwrap().len(), 4);
+    assert!(log.lock().unwrap().contains(&42));
+
+    // Once resolved (and the pool torn down), further probes report
+    // the worker-side channel as gone rather than blocking or
+    // panicking.
+    drop(pool);
+    assert!(ticket.try_wait().is_some());
+}
+
+#[test]
 fn shared_handles_are_send_sync() {
     fn assert_send_sync<T: Send + Sync>() {}
+    fn assert_send<T: Send>() {}
     assert_send_sync::<EngineBackend>();
     assert_send_sync::<StBackend>();
     assert_send_sync::<InferenceRouter>();
@@ -460,4 +502,10 @@ fn shared_handles_are_send_sync() {
     assert_send_sync::<icsml::st::HostImage>();
     assert_send_sync::<icsml::st::ir::Unit>();
     assert_send_sync::<icsml::st::bytecode::CodeUnit>();
+    assert_send_sync::<icsml::netserve::ModelRegistry>();
+    assert_send_sync::<icsml::netserve::ServerStats>();
+    assert_send_sync::<icsml::netserve::NetServer>();
+    // A Ticket crosses threads (reactor completes what a pool worker
+    // resolves) but is single-consumer, so Send without Sync.
+    assert_send::<icsml::serve::Ticket>();
 }

@@ -1,0 +1,275 @@
+//! End-to-end tests for the network front door: wire-protocol
+//! robustness (hostile bytes never panic or wedge the reactor),
+//! typed errors over the wire, and the headline scale property —
+//! 1000+ concurrent in-flight requests across multiple registered
+//! models served by O(workers) threads.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use icsml::api::{
+    Backend, EngineBackend, InferenceError, Session as _, SharedBackend,
+};
+use icsml::netserve::proto::{
+    self, Decoded, ErrorCode, Frame, RequestFrame, DEFAULT_MAX_FRAME,
+};
+use icsml::netserve::{
+    Client, ModelRegistry, NetOptions, NetServer, RegistryConfig,
+    ServerConfig, StaticLoader,
+};
+use icsml::serve::{PoolConfig, Priority};
+use icsml::util::fixtures;
+
+/// Two distinct fixture models (8 inputs, 4 outputs, different
+/// weights) behind a registry with the given pool size.
+fn two_model_registry(workers: usize) -> Arc<ModelRegistry> {
+    let mut loader = StaticLoader::new();
+    let alpha: SharedBackend =
+        Arc::new(EngineBackend::new(fixtures::mlp_8_16_4(1)));
+    let beta: SharedBackend =
+        Arc::new(EngineBackend::new(fixtures::mlp_8_16_4(2)));
+    loader.insert("alpha", alpha, 1);
+    loader.insert("beta", beta, 1);
+    Arc::new(ModelRegistry::new(
+        Box::new(loader),
+        RegistryConfig {
+            max_models: usize::MAX,
+            max_bytes: u64::MAX,
+            pool: PoolConfig { workers, max_batch: 8 },
+        },
+    ))
+}
+
+fn spawn_server(workers: usize) -> NetServer {
+    NetServer::bind(
+        "127.0.0.1:0",
+        two_model_registry(workers),
+        ServerConfig::default(),
+    )
+    .expect("bind loopback")
+}
+
+/// What the engine itself says for `x` — the reference the network
+/// path must match bit-for-bit.
+fn reference(seed: u64, x: &[f32]) -> Vec<f32> {
+    EngineBackend::new(fixtures::mlp_8_16_4(seed))
+        .session()
+        .unwrap()
+        .infer(x)
+        .unwrap()
+}
+
+/// Read frames off a raw socket until one decodes (or EOF).
+fn read_one_frame(stream: &mut TcpStream) -> Option<Frame> {
+    let mut acc = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        match proto::decode(&acc, DEFAULT_MAX_FRAME) {
+            Decoded::Frame(f, _) => return Some(f),
+            Decoded::Corrupt(msg) => panic!("server sent garbage: {msg}"),
+            Decoded::Incomplete => {}
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return None,
+            Ok(n) => acc.extend_from_slice(&buf[..n]),
+            Err(e) => panic!("read: {e}"),
+        }
+    }
+}
+
+#[test]
+fn network_path_is_bit_identical_to_the_engine() {
+    let server = spawn_server(2);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let x: Vec<f32> = (0..8).map(|i| 0.25 * i as f32 - 1.0).collect();
+    let y = c.infer("alpha", &x, &NetOptions::new()).unwrap();
+    assert_eq!(y, reference(1, &x), "alpha over TCP == alpha in process");
+    let y = c.infer("beta", &x, &NetOptions::new()).unwrap();
+    assert_eq!(y, reference(2, &x), "beta over TCP == beta in process");
+    server.shutdown();
+}
+
+#[test]
+fn model_not_found_is_an_error_frame_not_a_dropped_connection() {
+    let server = spawn_server(1);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    match c.infer("ghost", &[0.0; 8], &NetOptions::new()) {
+        Err(InferenceError::ModelNotFound { model }) => {
+            assert_eq!(model, "ghost");
+        }
+        other => panic!("expected ModelNotFound, got {other:?}"),
+    }
+    // The connection survived the typed failure.
+    let y = c.infer("alpha", &[0.0; 8], &NetOptions::new()).unwrap();
+    assert_eq!(y.len(), 4);
+}
+
+#[test]
+fn shape_mismatch_travels_as_a_typed_error_frame() {
+    let server = spawn_server(1);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    match c.infer("alpha", &[0.0; 3], &NetOptions::new()) {
+        Err(InferenceError::ShapeMismatch { expected, got, .. }) => {
+            assert_eq!((expected, got), (8, 3));
+        }
+        other => panic!("expected ShapeMismatch, got {other:?}"),
+    }
+    let _ = server;
+}
+
+#[test]
+fn expired_deadline_is_shed_with_a_typed_error() {
+    let server = spawn_server(1);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let opts = NetOptions::new()
+        .priority(Priority::Defense)
+        .deadline_us(0.0);
+    match c.infer("alpha", &[0.0; 8], &opts) {
+        Err(InferenceError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    // Shed, not wedged: an undeadlined request still succeeds.
+    let y = c.infer("alpha", &[0.0; 8], &NetOptions::new()).unwrap();
+    assert_eq!(y.len(), 4);
+}
+
+#[test]
+fn truncated_frame_and_disconnect_do_not_wedge_the_reactor() {
+    let server = spawn_server(1);
+    {
+        // A valid frame, cut mid-body, then a hard disconnect.
+        let mut wire = Vec::new();
+        Frame::Request(RequestFrame {
+            id: 1,
+            priority: Priority::Batch,
+            deadline_us: None,
+            model: "alpha".into(),
+            payload: vec![0.0; 8],
+        })
+        .encode(&mut wire);
+        let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+        raw.write_all(&wire[..wire.len() / 2]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+    } // dropped here, mid-frame
+    {
+        // A complete request whose sender vanishes before the reply.
+        let mut wire = Vec::new();
+        Frame::Request(RequestFrame {
+            id: 2,
+            priority: Priority::Batch,
+            deadline_us: None,
+            model: "alpha".into(),
+            payload: vec![0.0; 8],
+        })
+        .encode(&mut wire);
+        let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+        raw.write_all(&wire).unwrap();
+    } // dropped with the reply still in flight
+    // The reactor must still serve fresh connections.
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    let y = c.infer("alpha", &[0.5; 8], &NetOptions::new()).unwrap();
+    assert_eq!(y, reference(1, &[0.5; 8]));
+    server.shutdown();
+}
+
+#[test]
+fn oversized_length_prefix_gets_protocol_error_then_close() {
+    let server = spawn_server(1);
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    raw.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+    match read_one_frame(&mut raw) {
+        Some(Frame::Error(e)) => {
+            assert_eq!(e.code, ErrorCode::Protocol);
+            assert!(e.msg.contains("exceeds"), "msg: {}", e.msg);
+        }
+        other => panic!("expected protocol error frame, got {other:?}"),
+    }
+    // After the error frame the server closes the connection.
+    let mut rest = Vec::new();
+    raw.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    // And keeps serving everyone else.
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    assert!(c.infer("beta", &[0.0; 8], &NetOptions::new()).is_ok());
+}
+
+#[test]
+fn unknown_version_gets_protocol_error() {
+    let server = spawn_server(1);
+    let mut wire = Vec::new();
+    Frame::Request(RequestFrame {
+        id: 5,
+        priority: Priority::Batch,
+        deadline_us: None,
+        model: "alpha".into(),
+        payload: vec![0.0; 8],
+    })
+    .encode(&mut wire);
+    wire[6] = 99; // version byte
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    raw.write_all(&wire).unwrap();
+    match read_one_frame(&mut raw) {
+        Some(Frame::Error(e)) => {
+            assert_eq!(e.code, ErrorCode::Protocol);
+            assert!(e.msg.contains("version"), "msg: {}", e.msg);
+        }
+        other => panic!("expected protocol error frame, got {other:?}"),
+    }
+    let _ = server;
+}
+
+/// The acceptance headline: >= 1000 requests in flight at once,
+/// spread across two registered models and mixed priority classes,
+/// all answered correctly by a fixed thread budget (1 reactor +
+/// 2 models x 2 workers), with zero sheds.
+#[test]
+fn sustains_a_thousand_concurrent_inflight_requests() {
+    let server = spawn_server(2);
+    let addr = server.local_addr();
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 300;
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.set_timeout(Some(Duration::from_secs(60))).unwrap();
+                let model = if t % 2 == 0 { "alpha" } else { "beta" };
+                let seed = if t % 2 == 0 { 1 } else { 2 };
+                let class = match t % 3 {
+                    0 => Priority::Control,
+                    1 => Priority::Defense,
+                    _ => Priority::Batch,
+                };
+                let opts = NetOptions::new().priority(class);
+                let x: Vec<f32> =
+                    (0..8).map(|i| (t + i) as f32 * 0.125).collect();
+                let want = reference(seed, &x);
+                // Pipeline the whole wave before draining a single
+                // reply: every request is simultaneously in flight.
+                for _ in 0..PER_CLIENT {
+                    c.submit(model, &x, &opts).unwrap();
+                }
+                for _ in 0..PER_CLIENT {
+                    let reply = c.recv().unwrap();
+                    let y = reply.result.unwrap_or_else(|e| {
+                        panic!("request {} failed: {}", reply.id, e.msg)
+                    });
+                    assert_eq!(y, want, "replies stay bit-identical");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(server.stats().requests(), total);
+    assert_eq!(server.stats().responses(), total);
+    assert_eq!(server.stats().error_frames(), 0, "zero sheds or errors");
+    server.shutdown();
+}
