@@ -14,11 +14,13 @@
 //!                    worker count, scaling vs 1 worker,
 //!                    deadline-hit/shed rates, open_loop{...}
 //!                    percentiles over the netserve client)
-//!   --smoke          correctness gate + netserve loopback smoke, no
-//!                    timing (CI's fast regression check: pooled and
-//!                    networked results bit-identical to a sequential
-//!                    session, mixed-class wave, zero sheds, clean
-//!                    shutdown)
+//!   --smoke          correctness gate + netserve loopback smoke +
+//!                    chaos smoke, no timing (CI's fast regression
+//!                    check: pooled and networked results
+//!                    bit-identical to a sequential session,
+//!                    mixed-class wave, zero sheds, clean shutdown,
+//!                    and injected faults contained to their own
+//!                    tickets with the pool restaffing itself)
 
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,7 +36,10 @@ use icsml::netserve::{
     Client, ModelRegistry, NetOptions, NetServer, RegistryConfig,
     ServerConfig, StaticLoader,
 };
-use icsml::serve::{Deadline, Pool, PoolConfig, Priority, SubmitOptions};
+use icsml::serve::{
+    Deadline, Fault, FaultBackend, FaultPlan, Pool, PoolConfig, Priority,
+    SubmitOptions,
+};
 use icsml::util::benchkit::{
     json_flag, smoke_flag, write_bench_json, BenchRecord,
 };
@@ -129,6 +134,7 @@ fn main() {
             gate_wave.len()
         );
         netserve_smoke(&backend, &gate_wave, &want);
+        chaos_smoke(&backend, &gate_wave, &want);
         return;
     }
 
@@ -488,6 +494,66 @@ fn netserve_smoke(
          bit-identical to the sequential session across 2 models, zero \
          sheds, clean shutdown",
         gate_wave.len()
+    );
+}
+
+/// CI chaos smoke: one fault wave through a supervised pool behind a
+/// `FaultBackend` — a panic, a typed error and a latency spike fire
+/// at known request indices. The panic and the error each fail
+/// exactly one ticket, every survivor stays bit-identical to the
+/// sequential reference, and the pool restaffs to full strength.
+fn chaos_smoke(
+    backend: &SharedBackend,
+    gate_wave: &[Vec<f32>],
+    want: &[Vec<f32>],
+) {
+    let plan = FaultPlan::new()
+        .at(5, Fault::Panic)
+        .at(11, Fault::Error)
+        .at(17, Fault::Latency(Duration::from_millis(1)));
+    let faulty = FaultBackend::shared(Arc::clone(backend), plan);
+    let pool =
+        Pool::new(faulty, PoolConfig { workers: 2, max_batch: 1 });
+    let tickets: Vec<_> =
+        gate_wave.iter().map(|x| pool.submit(x)).collect();
+    let (mut panics, mut typed) = (0u64, 0u64);
+    let mut served = 0usize;
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Ok(y) => {
+                assert_eq!(
+                    y, want[i],
+                    "chaos survivor {i} stays bit-identical"
+                );
+                served += 1;
+            }
+            Err(InferenceError::BackendPanicked { .. }) => panics += 1,
+            Err(InferenceError::ExecutionFailed { .. }) => typed += 1,
+            Err(e) => {
+                panic!("chaos smoke request {i}: unplanned failure {e}")
+            }
+        }
+    }
+    assert_eq!(
+        (panics, typed),
+        (1, 1),
+        "each injected fault fails exactly one ticket"
+    );
+    assert_eq!(served, gate_wave.len() - 2);
+    let t0 = Instant::now();
+    while !pool.health().is_healthy() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "pool never restaffed: {:?}",
+            pool.health()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(pool.health().panics_contained, 1);
+    println!(
+        "chaos smoke OK: injected panic/error/latency contained to \
+         their own tickets, {served} survivors bit-identical, pool \
+         restaffed to full strength"
     );
 }
 

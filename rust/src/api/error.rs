@@ -81,6 +81,40 @@ pub enum InferenceError {
         /// The model that lost (or could not gain) residency.
         model: String,
     },
+    /// The backend panicked mid-execution. The panic was contained by
+    /// the pool's per-job `catch_unwind` (`serve::Pool` supervision):
+    /// only this request failed, the worker is respawned, and the
+    /// backend is quarantined after K consecutive faults. A backend
+    /// fault — a router should penalize and retry elsewhere.
+    BackendPanicked {
+        /// Which backend panicked.
+        backend: String,
+        /// The panic payload, rendered to a string when possible.
+        message: String,
+    },
+    /// The serving tier is at its in-flight capacity and refused the
+    /// request outright instead of queueing it unboundedly
+    /// (`netserve` connection / server caps). Not a backend fault: it
+    /// signals load, and the caller should back off and retry.
+    Overloaded {
+        /// Which limit was hit: `"connection"` (per-connection
+        /// in-flight cap) or `"server"` (global in-flight cap).
+        scope: &'static str,
+        /// Suggested client backoff before retrying, in microseconds.
+        retry_after_us: f64,
+    },
+    /// The transport connection died with requests still in flight;
+    /// their replies are unrecoverable (the server answers over the
+    /// connection they arrived on). The client's reconnect path
+    /// surfaces this after re-establishing the connection, so
+    /// *subsequent* requests succeed. Treated as a backend fault so
+    /// routers penalize the flaky route.
+    ConnectionLost {
+        /// Wire ids of the in-flight requests whose replies were lost.
+        lost_ids: Vec<u64>,
+        /// Why the connection died.
+        reason: String,
+    },
     /// A router had no backends registered.
     NoBackends,
     /// A router exhausted every candidate backend.
@@ -92,13 +126,15 @@ pub enum InferenceError {
 
 impl InferenceError {
     /// True when the fault lies with the backend (flaky execution,
-    /// missing artifacts, bad session state) — the class a router
-    /// should penalize and retry elsewhere. False for caller-side
-    /// errors ([`InferenceError::ShapeMismatch`],
+    /// missing artifacts, bad session state, contained panics, dead
+    /// transport) — the class a router should penalize and retry
+    /// elsewhere. False for caller-side errors
+    /// ([`InferenceError::ShapeMismatch`],
     /// [`InferenceError::ModelNotFound`]), load/deadline/capacity
     /// sheds ([`InferenceError::DeadlineExceeded`],
-    /// [`InferenceError::Evicted`]) and router aggregates, which say
-    /// nothing about the backend's health.
+    /// [`InferenceError::Evicted`], [`InferenceError::Overloaded`])
+    /// and router aggregates, which say nothing about the backend's
+    /// health.
     pub fn is_backend_fault(&self) -> bool {
         matches!(
             self,
@@ -106,6 +142,8 @@ impl InferenceError {
                 | InferenceError::Unsupported { .. }
                 | InferenceError::ExecutionFailed { .. }
                 | InferenceError::SessionState { .. }
+                | InferenceError::BackendPanicked { .. }
+                | InferenceError::ConnectionLost { .. }
         )
     }
 }
@@ -146,6 +184,27 @@ impl fmt::Display for InferenceError {
                     f,
                     "model {model:?} cannot be resident under the \
                      registry budget (evicted)"
+                )
+            }
+            InferenceError::BackendPanicked { backend, message } => {
+                write!(
+                    f,
+                    "backend {backend} panicked (contained): {message}"
+                )
+            }
+            InferenceError::Overloaded { scope, retry_after_us } => {
+                write!(
+                    f,
+                    "overloaded at the {scope} in-flight cap; retry \
+                     after {retry_after_us:.0} us"
+                )
+            }
+            InferenceError::ConnectionLost { lost_ids, reason } => {
+                write!(
+                    f,
+                    "connection lost with {} request(s) in flight \
+                     ({reason})",
+                    lost_ids.len()
                 )
             }
             InferenceError::NoBackends => write!(f, "no backends registered"),
@@ -216,6 +275,32 @@ mod tests {
         let evicted = InferenceError::Evicted { model: "big".into() };
         assert!(!evicted.is_backend_fault(), "capacity says nothing of health");
         assert!(evicted.to_string().contains("big"));
+    }
+
+    #[test]
+    fn panicked_and_lost_are_backend_faults_overload_is_not() {
+        let p = InferenceError::BackendPanicked {
+            backend: "engine".into(),
+            message: "index out of bounds".into(),
+        };
+        assert!(p.is_backend_fault(), "a panic is the backend's fault");
+        assert!(p.to_string().contains("engine"));
+        assert!(p.to_string().contains("index out of bounds"));
+
+        let lost = InferenceError::ConnectionLost {
+            lost_ids: vec![3, 9],
+            reason: "peer reset".into(),
+        };
+        assert!(lost.is_backend_fault(), "a dead route is penalized");
+        assert!(lost.to_string().contains("2 request(s)"));
+
+        let busy = InferenceError::Overloaded {
+            scope: "server",
+            retry_after_us: 1500.0,
+        };
+        assert!(!busy.is_backend_fault(), "load says nothing of health");
+        let s = busy.to_string();
+        assert!(s.contains("server") && s.contains("1500"));
     }
 
     #[test]

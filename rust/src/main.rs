@@ -21,7 +21,9 @@
 //!               `--addr A --model NAME --requests N [--class C]
 //!               [--deadline-us D] [--dim K]`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 use icsml::api::{Backend, EngineBackend, Session as _, SharedBackend,
@@ -399,6 +401,33 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Set by the SIGINT/SIGTERM handler; polled by `listen`'s stats
+/// loop to turn the signal into a graceful drain shutdown.
+static STOP_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGINT and SIGTERM into [`STOP_REQUESTED`]. Raw `signal(2)`
+/// through the C ABI — no new dependencies, and storing a flag is
+/// async-signal-safe. On non-unix targets this is a no-op (ctrl-C
+/// falls back to the default abort).
+#[cfg(unix)]
+fn install_stop_signals() {
+    extern "C" fn on_stop(_sig: i32) {
+        STOP_REQUESTED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_stop);
+        signal(SIGTERM, on_stop);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_stop_signals() {}
+
 fn listen(args: &Args) -> Result<()> {
     let addr = args.opt_or("addr", "127.0.0.1:9470");
     let workers = args.opt_usize("workers", 4);
@@ -441,23 +470,32 @@ fn listen(args: &Args) -> Result<()> {
         names.len(),
         names
     );
+    install_stop_signals();
+    let stats = server.stats_handle();
     let started = std::time::Instant::now();
     let tick = if for_secs > 0.0 {
         std::time::Duration::from_secs_f64(for_secs.min(5.0))
     } else {
         std::time::Duration::from_secs(5)
     };
-    loop {
-        std::thread::sleep(tick);
-        let s = server.stats();
+    'run: loop {
+        // Sleep in small slices so a SIGINT/SIGTERM turns into a
+        // drain within ~50 ms instead of waiting out a full tick.
+        let slept = std::time::Instant::now();
+        while slept.elapsed() < tick {
+            if STOP_REQUESTED.load(Ordering::SeqCst) {
+                break 'run;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
         println!(
             "[{:>7.1}s] conns {} requests {} ok {} errors {} \
              (resident models {} / {:.1} MiB)",
             started.elapsed().as_secs_f64(),
-            s.accepted(),
-            s.requests(),
-            s.responses(),
-            s.error_frames(),
+            stats.accepted(),
+            stats.requests(),
+            stats.responses(),
+            stats.error_frames(),
             registry.resident(),
             registry.resident_bytes() as f64 / (1024.0 * 1024.0),
         );
@@ -465,7 +503,23 @@ fn listen(args: &Args) -> Result<()> {
             break;
         }
     }
-    server.shutdown();
+    // Graceful exit either way (signal or --for-secs): stop accepting,
+    // let in-flight requests finish and flush, bounded by the grace
+    // period, then report the final totals.
+    if STOP_REQUESTED.load(Ordering::SeqCst) {
+        println!("signal received — draining");
+    }
+    server.shutdown_drain(Duration::from_secs(5));
+    println!(
+        "final: conns {} requests {} ok {} errors {} overloaded {} \
+         protocol-errors {}",
+        stats.accepted(),
+        stats.requests(),
+        stats.responses(),
+        stats.error_frames(),
+        stats.overloaded(),
+        stats.protocol_errors(),
+    );
     println!("shut down cleanly");
     Ok(())
 }

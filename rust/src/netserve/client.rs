@@ -8,17 +8,61 @@
 //! first-class: submit any number of requests before receiving, and
 //! match replies to requests by id — the server answers in completion
 //! order, not submission order.
+//!
+//! Flaky peers are survivable, not fatal: a client built with
+//! [`Client::connect_with`] owns a [`RetryPolicy`] and the full
+//! resolved address list. When the transport dies it reconnects under
+//! jittered exponential backoff, cycling through the addresses
+//! (failover). What *cannot* be recovered — replies to requests that
+//! were in flight when the connection died — is surfaced honestly:
+//! [`Client::recv_reconnecting`] returns a typed
+//! [`InferenceError::ConnectionLost`] naming the lost wire ids, and
+//! [`Client::infer`] (a self-contained, idempotent one-shot)
+//! resubmits itself after the reconnect instead.
 
-use std::io::{self, Read, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::api::InferenceError;
 use crate::serve::Priority;
+use crate::util::rng::SplitMix64;
 
 use super::proto::{
     decode, Decoded, ErrorFrame, Frame, RequestFrame, DEFAULT_MAX_FRAME,
 };
+
+/// Reconnect knobs for a [`Client`] that should survive transport
+/// failures ([`Client::connect_with`]).
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Connection attempts per recovery (each attempt tries every
+    /// resolved address before counting as failed). Clamped to ≥ 1.
+    pub max_reconnects: usize,
+    /// Delay after the first failed attempt; doubles per failure
+    /// (capped), with up to 50% random jitter so a fleet of
+    /// reconnecting clients never thunders in lockstep.
+    pub backoff: Duration,
+    /// Upper bound on the (pre-jitter) delay.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_reconnects: 5,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The default policy: 5 attempts, 10 ms → 500 ms backoff.
+    pub fn new() -> RetryPolicy {
+        RetryPolicy::default()
+    }
+}
 
 /// Per-request options carried on the wire (the client-side mirror of
 /// [`SubmitOptions`](crate::serve::SubmitOptions)).
@@ -72,23 +116,96 @@ pub struct Client {
     stream: TcpStream,
     rbuf: Vec<u8>,
     next_id: u64,
+    /// Every address the connect string resolved to — the failover
+    /// list reconnects cycle through.
+    addrs: Vec<SocketAddr>,
+    /// Mirror of the socket's read timeout, reapplied on reconnect.
+    timeout: Option<Duration>,
+    policy: Option<RetryPolicy>,
+    /// Wire ids submitted but not yet answered — the casualties a
+    /// dead connection is reported with.
+    pending_ids: Vec<u64>,
+    /// Backoff jitter stream (deterministic seed: reproducible tests,
+    /// and two clients still diverge after their first backoff).
+    rng: SplitMix64,
+}
+
+/// Try each resolved address in order; first success wins.
+fn connect_any(addrs: &[SocketAddr]) -> io::Result<TcpStream> {
+    let mut last: Option<io::Error> = None;
+    for addr in addrs {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true)?;
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        io::Error::new(
+            ErrorKind::InvalidInput,
+            "connect string resolved to no addresses",
+        )
+    }))
+}
+
+/// The error kinds that mean "the transport is gone" (reconnectable),
+/// as opposed to timeouts or decode problems (the connection is still
+/// standing).
+fn is_disconnect(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        ErrorKind::UnexpectedEof
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::ConnectionRefused
+            | ErrorKind::BrokenPipe
+            | ErrorKind::NotConnected
+    )
 }
 
 impl Client {
-    /// Connect to a server.
+    /// Connect to a server. A connect string that resolves to several
+    /// addresses doubles as a failover list for
+    /// [`Client::connect_with`]'s reconnect machinery.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(Client { stream, rbuf: Vec::new(), next_id: 0 })
+        let addrs: Vec<SocketAddr> = addr.to_socket_addrs()?.collect();
+        let stream = connect_any(&addrs)?;
+        Ok(Client {
+            stream,
+            rbuf: Vec::new(),
+            next_id: 0,
+            addrs,
+            timeout: None,
+            policy: None,
+            pending_ids: Vec::new(),
+            rng: SplitMix64::new(0xc11e_27_5eed),
+        })
+    }
+
+    /// Like [`Client::connect`], with a [`RetryPolicy`]: when the
+    /// transport later dies, the client reconnects (cycling the
+    /// resolved addresses under jittered exponential backoff) instead
+    /// of staying dead — see [`Client::recv_reconnecting`] and
+    /// [`Client::infer`].
+    pub fn connect_with<A: ToSocketAddrs>(
+        addr: A,
+        policy: RetryPolicy,
+    ) -> io::Result<Client> {
+        let mut c = Client::connect(addr)?;
+        c.policy = Some(policy);
+        Ok(c)
     }
 
     /// Bound how long [`Client::recv`] blocks (`None` = forever). A
     /// timed-out `recv` returns the underlying io error; the
-    /// connection stays usable.
+    /// connection stays usable. The bound survives reconnects.
     pub fn set_timeout(
         &mut self,
         timeout: Option<Duration>,
     ) -> io::Result<()> {
+        self.timeout = timeout;
         self.stream.set_read_timeout(timeout)
     }
 
@@ -97,13 +214,67 @@ impl Client {
     /// thread submits, another receives): exactly **one** handle may
     /// call [`Client::recv`], and exactly one may call
     /// [`Client::submit`] — two readers would tear frames apart, and
-    /// two writers would interleave ids.
+    /// two writers would interleave ids. The clone does **not** carry
+    /// the [`RetryPolicy`]: two handles reconnecting the same logical
+    /// client independently would race; recovery belongs to the
+    /// original.
     pub fn try_clone(&self) -> io::Result<Client> {
         Ok(Client {
             stream: self.stream.try_clone()?,
             rbuf: Vec::new(),
             next_id: self.next_id,
+            addrs: self.addrs.clone(),
+            timeout: self.timeout,
+            policy: None,
+            pending_ids: Vec::new(),
+            rng: SplitMix64::new(0xc11e_27_5eed ^ self.next_id),
         })
+    }
+
+    /// Wire ids submitted on this handle that have not been answered
+    /// yet (what [`InferenceError::ConnectionLost`] would report if
+    /// the transport died now).
+    pub fn pending_ids(&self) -> &[u64] {
+        &self.pending_ids
+    }
+
+    /// Tear down and re-establish the transport under the configured
+    /// [`RetryPolicy`], cycling through every resolved address with
+    /// jittered exponential backoff between attempts. The decode
+    /// buffer is reset; in-flight ids stay in [`Client::pending_ids`]
+    /// for the caller (or [`Client::recv_reconnecting`]) to account
+    /// for. Errors when no policy is configured or every attempt
+    /// failed.
+    pub fn reconnect(&mut self) -> io::Result<()> {
+        let policy = self.policy.clone().ok_or_else(|| {
+            io::Error::new(
+                ErrorKind::NotConnected,
+                "connection lost and no retry policy configured",
+            )
+        })?;
+        let mut delay = policy.backoff;
+        let mut last: Option<io::Error> = None;
+        for attempt in 0..policy.max_reconnects.max(1) {
+            if attempt > 0 {
+                let jitter = Duration::from_secs_f64(
+                    delay.as_secs_f64() * 0.5 * self.rng.next_f64(),
+                );
+                std::thread::sleep(delay + jitter);
+                delay = (delay * 2).min(policy.max_backoff);
+            }
+            match connect_any(&self.addrs) {
+                Ok(s) => {
+                    s.set_read_timeout(self.timeout)?;
+                    self.stream = s;
+                    self.rbuf.clear();
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            io::Error::new(ErrorKind::NotConnected, "reconnect failed")
+        }))
     }
 
     /// Send one request and return the wire id its reply will carry.
@@ -126,6 +297,7 @@ impl Client {
         })
         .encode(&mut wire);
         self.stream.write_all(&wire)?;
+        self.pending_ids.push(id);
         Ok(id)
     }
 
@@ -136,20 +308,24 @@ impl Client {
             match decode(&self.rbuf, DEFAULT_MAX_FRAME) {
                 Decoded::Frame(frame, used) => {
                     self.rbuf.drain(..used);
-                    return match frame {
-                        Frame::Response(r) => Ok(NetReply {
+                    let reply = match frame {
+                        Frame::Response(r) => NetReply {
                             id: r.id,
                             result: Ok(r.payload),
-                        }),
-                        Frame::Error(e) => Ok(NetReply {
+                        },
+                        Frame::Error(e) => NetReply {
                             id: e.id,
                             result: Err(e),
-                        }),
-                        Frame::Request(_) => Err(io::Error::new(
-                            io::ErrorKind::InvalidData,
-                            "server sent a request frame",
-                        )),
+                        },
+                        Frame::Request(_) => {
+                            return Err(io::Error::new(
+                                io::ErrorKind::InvalidData,
+                                "server sent a request frame",
+                            ))
+                        }
                     };
+                    self.pending_ids.retain(|&p| p != reply.id);
+                    return Ok(reply);
                 }
                 Decoded::Incomplete => {
                     let mut buf = [0u8; 16384];
@@ -172,26 +348,83 @@ impl Client {
         }
     }
 
+    /// Like [`Client::recv`], but a dead transport is survived: the
+    /// client reconnects under its [`RetryPolicy`] and the call
+    /// returns a typed [`InferenceError::ConnectionLost`] naming the
+    /// wire ids whose replies died with the old connection — the
+    /// server answers over the connection a request arrived on, so
+    /// those replies are unrecoverable and a robust caller must
+    /// decide which to resubmit. After the error the client is
+    /// connected again and *subsequent* traffic flows normally.
+    /// Timeouts and decode errors pass through untouched (the
+    /// connection is still standing); with no policy configured the
+    /// io error is surfaced as `BackendUnavailable`, exactly like
+    /// [`Client::recv`] callers would.
+    pub fn recv_reconnecting(&mut self) -> Result<NetReply, InferenceError> {
+        match self.recv() {
+            Ok(r) => Ok(r),
+            Err(e) if is_disconnect(&e) && self.policy.is_some() => {
+                let reason = e.to_string();
+                let lost_ids = std::mem::take(&mut self.pending_ids);
+                self.reconnect().map_err(io_unavailable)?;
+                Err(InferenceError::ConnectionLost { lost_ids, reason })
+            }
+            Err(e) => Err(io_unavailable(e)),
+        }
+    }
+
     /// Blocking convenience: submit one request and wait for *its*
     /// reply, reconstructing the typed error on failure. Replies to
     /// other pipelined requests that arrive first are discarded — use
     /// [`Client::submit`]/[`Client::recv`] directly when pipelining.
+    ///
+    /// Under a [`RetryPolicy`], a transport death is survived by
+    /// reconnecting and *resubmitting* — a one-shot infer is
+    /// idempotent, so retrying it is always safe. Requests pipelined
+    /// via [`Client::submit`] that were still in flight are dropped
+    /// without a report here; don't mix manual pipelining with
+    /// `infer` across failures — pipeline with
+    /// [`Client::recv_reconnecting`], which accounts for every id.
     pub fn infer(
         &mut self,
         model: &str,
         x: &[f32],
         opts: &NetOptions,
     ) -> Result<Vec<f32>, InferenceError> {
-        let id = self.submit(model, x, opts).map_err(io_unavailable)?;
-        loop {
-            let reply = self.recv().map_err(io_unavailable)?;
-            if reply.id != id {
-                continue;
-            }
-            return match reply.result {
-                Ok(y) => Ok(y),
-                Err(e) => Err(e.to_error()),
+        let mut reconnects_left =
+            self.policy.as_ref().map_or(0, |p| p.max_reconnects.max(1));
+        'attempt: loop {
+            let id = match self.submit(model, x, opts) {
+                Ok(id) => id,
+                Err(e) if reconnects_left > 0 && is_disconnect(&e) => {
+                    reconnects_left -= 1;
+                    self.pending_ids.clear();
+                    self.reconnect().map_err(io_unavailable)?;
+                    continue 'attempt;
+                }
+                Err(e) => return Err(io_unavailable(e)),
             };
+            loop {
+                let reply = match self.recv() {
+                    Ok(r) => r,
+                    Err(e)
+                        if reconnects_left > 0 && is_disconnect(&e) =>
+                    {
+                        reconnects_left -= 1;
+                        self.pending_ids.clear();
+                        self.reconnect().map_err(io_unavailable)?;
+                        continue 'attempt; // resubmit the one-shot
+                    }
+                    Err(e) => return Err(io_unavailable(e)),
+                };
+                if reply.id != id {
+                    continue;
+                }
+                return match reply.result {
+                    Ok(y) => Ok(y),
+                    Err(e) => Err(e.to_error()),
+                };
+            }
         }
     }
 }

@@ -15,7 +15,11 @@
 //! * [`Client`] — the blocking caller side: connect, pipeline
 //!   submissions, match replies by id, reconstruct typed
 //!   [`InferenceError`](crate::api::InferenceError)s from error
-//!   frames.
+//!   frames; with a [`RetryPolicy`], survive a dead transport by
+//!   reconnecting (address failover, jittered backoff) and surface
+//!   the unrecoverable in-flight replies as typed
+//!   [`ConnectionLost`](crate::api::InferenceError::ConnectionLost)
+//!   errors.
 //! * [`ModelRegistry`] — named engines loaded lazily from manifest
 //!   roots (or injected by tests via [`StaticLoader`]), each behind
 //!   its own [`serve::Pool`](crate::serve::Pool), cached under an
@@ -36,7 +40,7 @@ pub mod proto;
 pub mod registry;
 pub mod server;
 
-pub use client::{Client, NetOptions, NetReply};
+pub use client::{Client, NetOptions, NetReply, RetryPolicy};
 pub use registry::{
     LoadedModel, ManifestLoader, ModelEntry, ModelLoader, ModelRegistry,
     RegistryConfig, StaticLoader,

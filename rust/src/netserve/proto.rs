@@ -88,6 +88,20 @@ pub enum ErrorCode {
     /// Model cannot be resident under the registry budget
     /// ([`InferenceError::Evicted`]).
     Evicted = 11,
+    /// The server is at an in-flight cap and refused the request
+    /// ([`InferenceError::Overloaded`]); `late_us` carries the
+    /// retry-after hint in microseconds and `model` the cap scope
+    /// (`"connection"` or `"server"`).
+    Overloaded = 12,
+    /// The backend panicked and the pool contained it
+    /// ([`InferenceError::BackendPanicked`]); `model` carries the
+    /// backend name.
+    BackendPanicked = 13,
+    /// The transport died with requests in flight
+    /// ([`InferenceError::ConnectionLost`]); `model` carries the lost
+    /// wire ids as a comma-separated list (wire v1 reuses the existing
+    /// field set — see [`ErrorFrame::from_error`]).
+    ConnectionLost = 14,
 }
 
 impl ErrorCode {
@@ -105,6 +119,9 @@ impl ErrorCode {
             9 => ErrorCode::AllBackendsFailed,
             10 => ErrorCode::ModelNotFound,
             11 => ErrorCode::Evicted,
+            12 => ErrorCode::Overloaded,
+            13 => ErrorCode::BackendPanicked,
+            14 => ErrorCode::ConnectionLost,
             _ => return None,
         })
     }
@@ -494,6 +511,30 @@ impl ErrorFrame {
             InferenceError::AllBackendsFailed { .. } => {
                 f.code = ErrorCode::AllBackendsFailed;
             }
+            // The three robustness variants reuse the v1 field set so
+            // the wire version does not bump: `late_us` doubles as the
+            // retry-after hint, `model` as the scope / backend name /
+            // lost-id list.
+            InferenceError::Overloaded { scope, retry_after_us } => {
+                f.code = ErrorCode::Overloaded;
+                f.late_us = *retry_after_us;
+                f.model = (*scope).to_string();
+            }
+            InferenceError::BackendPanicked { backend, message } => {
+                f.code = ErrorCode::BackendPanicked;
+                f.model = backend.clone();
+                f.msg = message.clone();
+            }
+            InferenceError::ConnectionLost { lost_ids, reason } => {
+                f.code = ErrorCode::ConnectionLost;
+                f.got = lost_ids.len() as u32;
+                f.model = lost_ids
+                    .iter()
+                    .map(u64::to_string)
+                    .collect::<Vec<_>>()
+                    .join(",");
+                f.msg = reason.clone();
+            }
         }
         f
     }
@@ -538,6 +579,32 @@ impl ErrorFrame {
             ErrorCode::ExecutionFailed => InferenceError::ExecutionFailed {
                 backend: "netserve".into(),
                 source: anyhow::anyhow!("{}", self.msg),
+            },
+            ErrorCode::Overloaded => InferenceError::Overloaded {
+                scope: if self.model == "connection" {
+                    "connection"
+                } else {
+                    "server"
+                },
+                retry_after_us: self.late_us,
+            },
+            ErrorCode::BackendPanicked => {
+                InferenceError::BackendPanicked {
+                    backend: if self.model.is_empty() {
+                        "netserve".into()
+                    } else {
+                        self.model.clone()
+                    },
+                    message: self.msg.clone(),
+                }
+            }
+            ErrorCode::ConnectionLost => InferenceError::ConnectionLost {
+                lost_ids: self
+                    .model
+                    .split(',')
+                    .filter_map(|s| s.parse::<u64>().ok())
+                    .collect(),
+                reason: self.msg.clone(),
             },
             ErrorCode::Protocol | ErrorCode::BackendUnavailable => {
                 InferenceError::BackendUnavailable {
@@ -709,6 +776,18 @@ mod tests {
             },
             InferenceError::ModelNotFound { model: "ghost".into() },
             InferenceError::Evicted { model: "big".into() },
+            InferenceError::Overloaded {
+                scope: "connection",
+                retry_after_us: 750.0,
+            },
+            InferenceError::BackendPanicked {
+                backend: "engine".into(),
+                message: "synthetic".into(),
+            },
+            InferenceError::ConnectionLost {
+                lost_ids: vec![3, 17, 255],
+                reason: "peer reset".into(),
+            },
         ];
         for err in &cases {
             let wire = encode_one(&Frame::Error(ErrorFrame::from_error(3, err)));
@@ -737,6 +816,30 @@ mod tests {
                     InferenceError::Evicted { model },
                     InferenceError::Evicted { model: m2 },
                 ) => assert_eq!(model, m2),
+                (
+                    InferenceError::Overloaded {
+                        scope,
+                        retry_after_us,
+                    },
+                    InferenceError::Overloaded {
+                        scope: s2,
+                        retry_after_us: r2,
+                    },
+                ) => assert_eq!((scope, retry_after_us), (s2, r2)),
+                (
+                    InferenceError::BackendPanicked { backend, message },
+                    InferenceError::BackendPanicked {
+                        backend: b2,
+                        message: m2,
+                    },
+                ) => assert_eq!((backend, message), (b2, m2)),
+                (
+                    InferenceError::ConnectionLost { lost_ids, reason },
+                    InferenceError::ConnectionLost {
+                        lost_ids: l2,
+                        reason: r2,
+                    },
+                ) => assert_eq!((lost_ids, reason), (l2, r2)),
                 (a, b) => panic!("variant mismatch: {a:?} vs {b:?}"),
             }
             assert!(!back.is_backend_fault() || err.is_backend_fault());

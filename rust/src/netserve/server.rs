@@ -24,6 +24,19 @@
 //! shed deadline, shape mismatch) travel back as error frames on a
 //! healthy connection.
 //!
+//! Resource exhaustion is refused, not absorbed: per-connection and
+//! whole-server in-flight caps answer excess requests with a typed
+//! [`InferenceError::Overloaded`] frame carrying a retry-after hint
+//! (the connection stays healthy — overload is the *caller's* signal
+//! to back off, not a reason to cut them off), a stalled partial
+//! frame trips [`ServerConfig::read_timeout`], a connection holding
+//! no work for [`ServerConfig::idle_timeout`] is reclaimed, and a
+//! peer that stops draining its replies is dropped once
+//! [`ServerConfig::max_wbuf`] bytes back up. Shutdown has a graceful
+//! gear: [`NetServer::shutdown_drain`] stops accepting, lets
+//! in-flight requests finish within a grace budget, then joins the
+//! reactor.
+//!
 //! [`Pool`]: crate::serve::Pool
 
 use std::io::{ErrorKind, Read, Write};
@@ -31,8 +44,9 @@ use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::api::InferenceError;
 use crate::serve::{Deadline, SubmitOptions, Ticket};
 
 use super::proto::{
@@ -53,6 +67,26 @@ pub struct ServerConfig {
     /// How long the reactor sleeps after a pass that made no
     /// progress.
     pub idle_sleep: Duration,
+    /// Max in-flight requests per connection; excess requests are
+    /// answered with a typed [`InferenceError::Overloaded`] frame
+    /// (scope `"connection"`) and the connection stays open.
+    pub max_inflight_per_conn: usize,
+    /// Max in-flight requests across *all* connections; excess
+    /// requests get an [`InferenceError::Overloaded`] frame (scope
+    /// `"server"`). This bounds reactor memory no matter how many
+    /// peers pile on.
+    pub max_inflight_total: usize,
+    /// A connection with no in-flight work and no traffic for this
+    /// long is reclaimed (silent close — the peer walked away).
+    pub idle_timeout: Duration,
+    /// A partially-received frame older than this marks the stream
+    /// stalled: typed protocol error, then close. Bounds how long a
+    /// trickling (or wedged) peer can hold a connection's buffer.
+    pub read_timeout: Duration,
+    /// Max bytes of encoded replies allowed to back up for a peer
+    /// that is not reading; beyond this the connection is dropped
+    /// (a slow consumer must not grow server memory unboundedly).
+    pub max_wbuf: usize,
 }
 
 impl Default for ServerConfig {
@@ -61,6 +95,11 @@ impl Default for ServerConfig {
             max_frame: DEFAULT_MAX_FRAME,
             max_conns: 1024,
             idle_sleep: Duration::from_micros(200),
+            max_inflight_per_conn: 1024,
+            max_inflight_total: 4096,
+            idle_timeout: Duration::from_secs(60),
+            read_timeout: Duration::from_secs(10),
+            max_wbuf: 16 << 20,
         }
     }
 }
@@ -74,6 +113,7 @@ pub struct ServerStats {
     responses: AtomicU64,
     error_frames: AtomicU64,
     protocol_errors: AtomicU64,
+    overloaded: AtomicU64,
 }
 
 impl ServerStats {
@@ -102,6 +142,13 @@ impl ServerStats {
     pub fn protocol_errors(&self) -> u64 {
         self.protocol_errors.load(Ordering::Relaxed)
     }
+
+    /// Requests refused at an in-flight cap
+    /// ([`InferenceError::Overloaded`] frames sent; also counted in
+    /// [`ServerStats::error_frames`]).
+    pub fn overloaded(&self) -> u64 {
+        self.overloaded.load(Ordering::Relaxed)
+    }
 }
 
 /// Handle to a running network server. Dropping it stops the reactor
@@ -110,6 +157,7 @@ impl ServerStats {
 pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
     thread: Option<JoinHandle<()>>,
 }
@@ -126,17 +174,19 @@ impl NetServer {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let drain = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
         let thread = {
             let stop = Arc::clone(&stop);
+            let drain = Arc::clone(&drain);
             let stats = Arc::clone(&stats);
             std::thread::Builder::new()
                 .name("netserve-reactor".into())
                 .spawn(move || {
-                    reactor(listener, registry, cfg, stop, stats)
+                    reactor(listener, registry, cfg, stop, drain, stats)
                 })?
         };
-        Ok(NetServer { addr, stop, stats, thread: Some(thread) })
+        Ok(NetServer { addr, stop, drain, stats, thread: Some(thread) })
     }
 
     /// The bound address (resolves port 0 to the real port).
@@ -149,9 +199,38 @@ impl NetServer {
         &self.stats
     }
 
+    /// An owned handle to the counters that outlives the server —
+    /// for reading the final totals after a consuming
+    /// [`NetServer::shutdown_drain`].
+    pub fn stats_handle(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
     /// Stop the reactor and join its thread. (Dropping the server
-    /// does the same; this just names the intent.)
+    /// does the same; this just names the intent.) In-flight requests
+    /// are abandoned — use [`NetServer::shutdown_drain`] to let them
+    /// finish.
     pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    /// Graceful shutdown: stop accepting new connections and new
+    /// bytes, let already-received requests complete and their replies
+    /// flush, then stop the reactor. If draining takes longer than
+    /// `grace`, fall back to a hard stop so shutdown is always
+    /// bounded. The `icsml listen` subcommand routes SIGINT/SIGTERM
+    /// here.
+    pub fn shutdown_drain(mut self, grace: Duration) {
+        self.drain.store(true, Ordering::SeqCst);
+        let t0 = Instant::now();
+        while t0.elapsed() < grace {
+            match &self.thread {
+                Some(t) if !t.is_finished() => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                _ => break,
+            }
+        }
         self.halt();
     }
 
@@ -186,6 +265,12 @@ struct Conn {
     /// Stream is corrupt: stop parsing, close once `wbuf` drains.
     close_after_flush: bool,
     dead: bool,
+    /// Last pass that moved bytes or completed a ticket for this
+    /// connection (drives [`ServerConfig::idle_timeout`]).
+    last_activity: Instant,
+    /// When the currently-buffered *partial* frame started waiting
+    /// for its remainder (drives [`ServerConfig::read_timeout`]).
+    partial_since: Option<Instant>,
 }
 
 impl Conn {
@@ -199,6 +284,8 @@ impl Conn {
             eof: false,
             close_after_flush: false,
             dead: false,
+            last_activity: Instant::now(),
+            partial_since: None,
         }
     }
 
@@ -212,12 +299,14 @@ fn reactor(
     registry: Arc<ModelRegistry>,
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
 ) {
     let mut conns: Vec<Conn> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
+        let draining = drain.load(Ordering::SeqCst);
         let mut progress = false;
-        while conns.len() < cfg.max_conns {
+        while !draining && conns.len() < cfg.max_conns {
             match listener.accept() {
                 Ok((stream, _)) => {
                     if stream.set_nonblocking(true).is_err() {
@@ -233,10 +322,23 @@ fn reactor(
                 Err(_) => break,
             }
         }
+        // The global in-flight count: seeded from the per-connection
+        // truth each pass, kept exact across this pass's submissions
+        // and completions by `service`/`dispatch`.
+        let mut total: usize =
+            conns.iter().map(|c| c.pending.len()).sum();
         for conn in conns.iter_mut() {
-            progress |= service(conn, &registry, &cfg, &stats);
+            if draining {
+                // Drain mode: stop reading new bytes; what is already
+                // buffered or in flight still completes and flushes.
+                conn.eof = true;
+            }
+            progress |= service(conn, &registry, &cfg, &stats, &mut total);
         }
         conns.retain(|c| !c.dead);
+        if draining && conns.is_empty() {
+            return; // drained dry: a graceful exit
+        }
         if !progress {
             std::thread::sleep(cfg.idle_sleep);
         }
@@ -251,6 +353,7 @@ fn service(
     registry: &ModelRegistry,
     cfg: &ServerConfig,
     stats: &ServerStats,
+    total: &mut usize,
 ) -> bool {
     let mut progress = false;
 
@@ -285,7 +388,7 @@ fn service(
             Decoded::Frame(frame, used) => {
                 consumed += used;
                 progress = true;
-                dispatch(conn, frame, registry, stats);
+                dispatch(conn, frame, registry, cfg, stats, total);
             }
             Decoded::Incomplete => break,
             Decoded::Corrupt(msg) => {
@@ -303,6 +406,13 @@ fn service(
     if consumed > 0 {
         conn.rbuf.drain(..consumed);
     }
+    // Anything left over is a partial frame: start (or keep) its
+    // stall clock. A complete drain resets it.
+    if conn.rbuf.is_empty() || conn.close_after_flush {
+        conn.partial_since = None;
+    } else if conn.partial_since.is_none() {
+        conn.partial_since = Some(Instant::now());
+    }
 
     // Complete whatever the pool has finished, without blocking.
     let mut i = 0;
@@ -310,6 +420,7 @@ fn service(
         match conn.pending[i].1.try_wait() {
             Some(result) => {
                 let (id, _) = conn.pending.swap_remove(i);
+                *total = total.saturating_sub(1);
                 progress = true;
                 match result {
                     Ok(payload) => {
@@ -356,6 +467,46 @@ fn service(
         conn.wbuf.clear();
         conn.wpos = 0;
     }
+    // A peer that stops reading its replies must not grow server
+    // memory without bound: drop the connection once the backlog of
+    // encoded-but-unsent bytes exceeds the cap.
+    if conn.wbuf.len() - conn.wpos > cfg.max_wbuf {
+        conn.dead = true;
+        return true;
+    }
+
+    if progress {
+        conn.last_activity = Instant::now();
+    } else if !conn.close_after_flush {
+        // A frame header arrived but its body never followed: the
+        // stream is stalled (trickling or wedged peer). Typed error,
+        // then close — same containment as a corrupt stream.
+        if let Some(t0) = conn.partial_since {
+            if t0.elapsed() > cfg.read_timeout {
+                stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                stats.error_frames.fetch_add(1, Ordering::Relaxed);
+                conn.send(&Frame::Error(ErrorFrame::protocol(
+                    0,
+                    "read timed out mid-frame",
+                )));
+                conn.close_after_flush = true;
+                conn.rbuf.clear();
+                conn.partial_since = None;
+                progress = true;
+            }
+        }
+        // A connection holding no work and moving no bytes for the
+        // idle budget is reclaimed silently — the peer walked away.
+        if conn.pending.is_empty()
+            && conn.wbuf.is_empty()
+            && conn.rbuf.is_empty()
+            && !conn.eof
+            && conn.last_activity.elapsed() > cfg.idle_timeout
+        {
+            conn.dead = true;
+            return true;
+        }
+    }
 
     let flushed = conn.wbuf.is_empty();
     if conn.close_after_flush && flushed {
@@ -373,7 +524,9 @@ fn dispatch(
     conn: &mut Conn,
     frame: Frame,
     registry: &ModelRegistry,
+    cfg: &ServerConfig,
     stats: &ServerStats,
+    total: &mut usize,
 ) {
     let req = match frame {
         Frame::Request(r) => r,
@@ -389,6 +542,25 @@ fn dispatch(
         }
     };
     stats.requests.fetch_add(1, Ordering::Relaxed);
+    // In-flight caps: refuse with a typed Overloaded frame instead of
+    // queueing unboundedly. The connection stays healthy — overload
+    // tells the caller to back off, it is not the caller's fault. The
+    // retry hints are deliberately coarse: one idle-ish beat for a
+    // per-connection bump, several for whole-server saturation.
+    let over = if conn.pending.len() >= cfg.max_inflight_per_conn {
+        Some(("connection", 500.0))
+    } else if *total >= cfg.max_inflight_total {
+        Some(("server", 2_000.0))
+    } else {
+        None
+    };
+    if let Some((scope, retry_after_us)) = over {
+        stats.overloaded.fetch_add(1, Ordering::Relaxed);
+        stats.error_frames.fetch_add(1, Ordering::Relaxed);
+        let e = InferenceError::Overloaded { scope, retry_after_us };
+        conn.send(&Frame::Error(ErrorFrame::from_error(req.id, &e)));
+        return;
+    }
     let entry = match registry.get_or_load(&req.model) {
         Ok(e) => e,
         Err(e) => {
@@ -402,7 +574,10 @@ fn dispatch(
         opts = opts.deadline(Deadline::within_us(us));
     }
     match entry.pool().submit_with(&req.payload, opts) {
-        Ok(ticket) => conn.pending.push((req.id, ticket)),
+        Ok(ticket) => {
+            conn.pending.push((req.id, ticket));
+            *total += 1;
+        }
         Err(e) => {
             stats.error_frames.fetch_add(1, Ordering::Relaxed);
             conn.send(&Frame::Error(ErrorFrame::from_error(req.id, &e)));

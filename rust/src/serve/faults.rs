@@ -1,0 +1,367 @@
+//! Deterministic fault injection for robustness tests.
+//!
+//! [`FaultBackend`] wraps any [`Backend`] and makes chosen requests
+//! misbehave — panic, fail with a typed error, stall, or report a
+//! wrong shape — according to a seeded [`FaultPlan`]. The wrapper is
+//! what the chaos suite (`tests/chaos.rs`) and the serve bench's
+//! `--smoke` chaos pass drive the supervised [`Pool`](super::Pool)
+//! with: faults fire at known request indices, everything else is
+//! served by the inner backend bit-identically, so a test can assert
+//! both that the blast radius of each fault is exactly one ticket and
+//! that survivors match a clean reference run.
+//!
+//! Request indices are assigned by one shared atomic counter that
+//! lives in the *backend* (not the session): every session minted from
+//! the same `FaultBackend` — including the fresh sessions the pool
+//! supervisor mints after a contained panic — draws from the same
+//! sequence, so a plan entry fires exactly once no matter how workers
+//! die and respawn around it.
+//!
+//! Everything here is deterministic given the plan: no wall clock, no
+//! ambient randomness ([`FaultPlan::seeded`] uses the repo's
+//! [`SplitMix64`] stream).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::api::{
+    Backend, InferenceError, ModelSpec, Session, SharedBackend,
+};
+use crate::util::rng::SplitMix64;
+
+/// One way a request can misbehave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// The backend panics mid-request (the pool must contain it:
+    /// exactly this ticket fails with
+    /// [`InferenceError::BackendPanicked`]).
+    Panic,
+    /// The backend fails with a typed
+    /// [`InferenceError::ExecutionFailed`] — the well-behaved failure
+    /// mode; must not kill the worker or count toward quarantine.
+    Error,
+    /// The backend stalls for the given duration before serving
+    /// normally — an injected latency spike (deadlined requests behind
+    /// it get shed, undeadlined ones just wait).
+    Latency(Duration),
+    /// The backend reports a result-shape problem as a typed
+    /// [`InferenceError::ShapeMismatch`]. (The pool hands sessions a
+    /// correctly-sized output buffer by construction, so a
+    /// wrong-shaped *write* cannot reach a caller; the observable
+    /// misbehavior is the typed refusal.)
+    WrongShape,
+}
+
+/// Which request indices misbehave, and how. Indices count every
+/// `infer_into` row served through the wrapping [`FaultBackend`],
+/// across all its sessions, starting at 0.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: HashMap<u64, Fault>,
+}
+
+impl FaultPlan {
+    /// An empty plan: the wrapper is transparent.
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Make request `index` misbehave with `fault` (builder-style).
+    pub fn at(mut self, index: u64, fault: Fault) -> FaultPlan {
+        self.faults.insert(index, fault);
+        self
+    }
+
+    /// A reproducible random plan: each request index in
+    /// `0..horizon` misbehaves with probability `rate`, the fault kind
+    /// drawn uniformly from panic / typed error / 2 ms latency spike /
+    /// wrong shape. Same `seed` → same plan, on any machine.
+    pub fn seeded(seed: u64, horizon: u64, rate: f64) -> FaultPlan {
+        let mut rng = SplitMix64::new(seed);
+        let mut plan = FaultPlan::new();
+        for i in 0..horizon {
+            if rng.next_f64() >= rate {
+                continue;
+            }
+            let fault = match rng.below(4) {
+                0 => Fault::Panic,
+                1 => Fault::Error,
+                2 => Fault::Latency(Duration::from_millis(2)),
+                _ => Fault::WrongShape,
+            };
+            plan.faults.insert(i, fault);
+        }
+        plan
+    }
+
+    /// Number of faulted indices in the plan.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// True when no index is faulted.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// How many of the plan's entries are panics (the quarantine-
+    /// relevant kind).
+    pub fn panics(&self) -> usize {
+        self.faults.values().filter(|f| **f == Fault::Panic).count()
+    }
+}
+
+/// A [`Backend`] wrapper that injects the faults of a [`FaultPlan`]
+/// into an inner backend's request stream.
+///
+/// ```
+/// use std::sync::Arc;
+/// use icsml::api::{
+///     Backend, EngineBackend, InferenceError, Session, SharedBackend,
+/// };
+/// use icsml::engine::{Act, Layer, Model};
+/// use icsml::serve::{Fault, FaultBackend, FaultPlan};
+///
+/// let model = Model::new(vec![Layer::dense(
+///     vec![0.5; 4],
+///     vec![0.0; 2],
+///     2,
+///     Act::None,
+/// )]);
+/// let inner: SharedBackend = Arc::new(EngineBackend::new(model));
+/// let faulty = FaultBackend::new(
+///     inner,
+///     FaultPlan::new().at(1, Fault::Error),
+/// );
+/// let mut session = faulty.session().unwrap();
+/// assert!(session.infer(&[1.0, 1.0]).is_ok()); // index 0: clean
+/// assert!(matches!(
+///     session.infer(&[1.0, 1.0]),
+///     Err(InferenceError::ExecutionFailed { .. })
+/// )); // index 1: injected typed error
+/// assert!(session.infer(&[1.0, 1.0]).is_ok()); // index 2: clean
+/// assert_eq!(faulty.injected(), 1);
+/// ```
+pub struct FaultBackend {
+    inner: SharedBackend,
+    plan: Arc<FaultPlan>,
+    /// Global request-index source, shared by every session.
+    counter: Arc<AtomicU64>,
+    /// Faults actually fired so far.
+    injected: Arc<AtomicU64>,
+}
+
+impl FaultBackend {
+    /// Wrap `inner` so the requests named by `plan` misbehave.
+    pub fn new(inner: SharedBackend, plan: FaultPlan) -> FaultBackend {
+        FaultBackend {
+            inner,
+            plan: Arc::new(plan),
+            counter: Arc::new(AtomicU64::new(0)),
+            injected: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Like [`FaultBackend::new`], boxed into the [`SharedBackend`]
+    /// handle the pool and registry want.
+    pub fn shared(inner: SharedBackend, plan: FaultPlan) -> SharedBackend {
+        Arc::new(FaultBackend::new(inner, plan))
+    }
+
+    /// Requests that have entered the wrapper so far (clean + faulted).
+    pub fn requests(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+
+    /// Faults fired so far. Latency spikes count when they delay a
+    /// request; panics count *before* unwinding, so a contained panic
+    /// is visible here even though the request never completed.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+impl Backend for FaultBackend {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn spec(&self) -> ModelSpec {
+        self.inner.spec()
+    }
+
+    fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+        Ok(Box::new(FaultSession {
+            inner: self.inner.session()?,
+            plan: Arc::clone(&self.plan),
+            counter: Arc::clone(&self.counter),
+            injected: Arc::clone(&self.injected),
+        }))
+    }
+}
+
+struct FaultSession {
+    inner: Box<dyn Session>,
+    plan: Arc<FaultPlan>,
+    counter: Arc<AtomicU64>,
+    injected: Arc<AtomicU64>,
+}
+
+impl Session for FaultSession {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn spec(&self) -> ModelSpec {
+        self.inner.spec()
+    }
+
+    fn infer_into(
+        &mut self,
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), InferenceError> {
+        let i = self.counter.fetch_add(1, Ordering::Relaxed);
+        match self.plan.faults.get(&i) {
+            None => self.inner.infer_into(x, out),
+            Some(Fault::Panic) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                panic!("injected fault: panic at request {i}");
+            }
+            Some(Fault::Error) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                Err(InferenceError::ExecutionFailed {
+                    backend: "fault".into(),
+                    source: anyhow::anyhow!(
+                        "injected fault: typed error at request {i}"
+                    ),
+                })
+            }
+            Some(Fault::Latency(d)) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(*d);
+                self.inner.infer_into(x, out)
+            }
+            Some(Fault::WrongShape) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                Err(InferenceError::ShapeMismatch {
+                    what: "output (injected fault)",
+                    expected: out.len(),
+                    got: out.len() + 1,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EngineBackend;
+    use crate::engine::{Act, Layer, Model};
+    use crate::serve::{Pool, PoolConfig};
+
+    fn inner() -> SharedBackend {
+        Arc::new(EngineBackend::new(Model::new(vec![Layer::dense(
+            (0..4 * 2).map(|i| 0.1 * (i as f32 + 1.0)).collect(),
+            vec![0.0; 2],
+            2,
+            Act::None,
+        )])))
+    }
+
+    #[test]
+    fn plan_faults_fire_at_their_indices_and_nowhere_else() {
+        let plan = FaultPlan::new()
+            .at(1, Fault::Error)
+            .at(3, Fault::WrongShape)
+            .at(4, Fault::Latency(Duration::from_micros(100)));
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.panics(), 0);
+        let fb = FaultBackend::new(inner(), plan);
+        let mut clean = inner().session().unwrap();
+        let mut s = fb.session().unwrap();
+        let x = [0.4f32, -0.2];
+        let want = clean.infer(&x).unwrap();
+
+        assert_eq!(s.infer(&x).unwrap(), want, "index 0 is clean");
+        assert!(matches!(
+            s.infer(&x),
+            Err(InferenceError::ExecutionFailed { .. })
+        ));
+        assert_eq!(s.infer(&x).unwrap(), want, "index 2 is clean");
+        assert!(matches!(
+            s.infer(&x),
+            Err(InferenceError::ShapeMismatch { .. })
+        ));
+        // Index 4: delayed but correct — a latency fault never
+        // corrupts the result.
+        assert_eq!(s.infer(&x).unwrap(), want);
+        assert_eq!(fb.requests(), 5);
+        assert_eq!(fb.injected(), 3);
+    }
+
+    #[test]
+    fn indices_are_shared_across_sessions() {
+        let fb =
+            FaultBackend::new(inner(), FaultPlan::new().at(1, Fault::Error));
+        let mut a = fb.session().unwrap();
+        let mut b = fb.session().unwrap();
+        let x = [0.1f32, 0.1];
+        assert!(a.infer(&x).is_ok(), "index 0 via session a");
+        assert!(
+            b.infer(&x).is_err(),
+            "index 1 fires via a *different* session: the counter \
+             lives in the backend"
+        );
+        assert_eq!(fb.injected(), 1);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(42, 1000, 0.05);
+        let b = FaultPlan::seeded(42, 1000, 0.05);
+        assert_eq!(a.faults, b.faults, "same seed, same plan");
+        assert!(!a.is_empty(), "5% of 1000 indices faults some");
+        assert!(a.len() < 200, "rate stays in the right ballpark");
+        let c = FaultPlan::seeded(43, 1000, 0.05);
+        assert_ne!(a.faults, c.faults, "different seed, different plan");
+    }
+
+    #[test]
+    fn injected_panic_is_contained_by_the_supervised_pool() {
+        let fb = FaultBackend::shared(
+            inner(),
+            FaultPlan::new().at(2, Fault::Panic),
+        );
+        let pool =
+            Pool::new(fb, PoolConfig { workers: 1, max_batch: 1 });
+        let want = pool.infer(&[0.3, 0.3]).unwrap(); // index 0
+        let mut outcomes = Vec::new();
+        for _ in 0..4 {
+            outcomes.push(pool.infer(&[0.3, 0.3])); // indices 1..=4
+        }
+        let panics = outcomes
+            .iter()
+            .filter(|r| {
+                matches!(
+                    r,
+                    Err(InferenceError::BackendPanicked { .. })
+                )
+            })
+            .count();
+        assert_eq!(panics, 1, "exactly the planned request panicked");
+        for r in outcomes.into_iter().filter(|r| r.is_ok()) {
+            assert_eq!(r.unwrap(), want, "survivors are bit-identical");
+        }
+        // The pool restaffs after the contained panic.
+        let t0 = std::time::Instant::now();
+        while !pool.health().is_healthy() {
+            assert!(t0.elapsed() < Duration::from_secs(30));
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.health().panics_contained, 1);
+    }
+}

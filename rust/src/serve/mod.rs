@@ -23,7 +23,16 @@
 //!   only when every batch member's deadline survives the projected
 //!   completion time, and *shedding* expired requests
 //!   ([`crate::api::InferenceError::DeadlineExceeded`]) instead of
-//!   serving them late.
+//!   serving them late. Workers are *supervised*: backend panics are
+//!   contained per job ([`crate::api::InferenceError::BackendPanicked`]),
+//!   dead workers respawn under capped backoff, and a backend that
+//!   panics [`SupervisorConfig::quarantine_after`] times in a row is
+//!   quarantined ([`Pool::health`] reports all of it).
+//! * [`faults`] — deterministic fault injection: a seeded
+//!   [`FaultPlan`] makes chosen requests panic / fail / stall /
+//!   mis-shape through a [`FaultBackend`] wrapper, so the chaos suite
+//!   (`tests/chaos.rs`) can drive the supervision machinery on
+//!   purpose.
 //!
 //! Throughput scaling plus deadline-hit/shed rates are measured by
 //! `benches/serve_pool.rs` (`BENCH_serve.json`);
@@ -35,9 +44,11 @@
 #![deny(missing_docs)]
 
 pub mod admission;
+pub mod faults;
 pub mod pool;
 pub mod queue;
 
 pub use admission::Admission;
-pub use pool::{Pool, PoolConfig, Ticket};
+pub use faults::{Fault, FaultBackend, FaultPlan};
+pub use pool::{Pool, PoolConfig, PoolHealth, SupervisorConfig, Ticket};
 pub use queue::{Deadline, DeadlineQueue, Meta, Priority, SubmitOptions};

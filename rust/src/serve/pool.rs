@@ -1,5 +1,6 @@
 //! [`Pool`]: a fixed set of worker threads serving inference requests
-//! from one shared backend, under deadline-aware scheduling.
+//! from one shared backend, under deadline-aware scheduling and panic
+//! supervision.
 //!
 //! Design:
 //!
@@ -29,20 +30,38 @@
 //!   late ([`Pool::shed`] counts them). An optional ingress
 //!   [`Admission`] gate rejects provably-infeasible deadlines at
 //!   [`Pool::submit_with`] time, before they occupy queue slots.
-//! * **No worker, no hang.** If every worker has exited (e.g. a
-//!   backend that panics), pending and future requests fail with a
-//!   typed error instead of blocking [`Ticket::wait`] forever.
+//! * **Supervised workers, contained panics.** Every backend call runs
+//!   under `catch_unwind`: a panicking model fails *only its own
+//!   ticket* (typed [`InferenceError::BackendPanicked`]), never the
+//!   whole pool. The panicked worker retires (its session state is
+//!   suspect) and a supervisor thread respawns it with capped,
+//!   jittered exponential backoff; after
+//!   [`SupervisorConfig::quarantine_after`] consecutive panics the
+//!   backend is quarantined and the pool fails fast with a typed
+//!   error instead of burning respawns on a broken model.
+//!   [`Pool::health`] snapshots live workers / contained panics /
+//!   respawns / quarantine for monitors and the chaos tests.
+//! * **No worker, no hang.** If every worker is gone *and* none will
+//!   return (shutdown or quarantine), pending and future requests fail
+//!   with a typed error instead of blocking [`Ticket::wait`] forever.
+//!   A transient zero (workers dead, respawn pending) just delays
+//!   service — tickets still resolve once the supervisor restaffs.
 //! * **No new dependencies**: `std::sync` primitives + threads.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::mpsc::{
     channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
 };
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::api::{Backend, InferenceError, Session, SharedBackend};
+use crate::util::lock::lock_recover;
+use crate::util::rng::SplitMix64;
 
 use super::admission::Admission;
 use super::queue::{Deadline, DeadlineQueue, Meta, SubmitOptions};
@@ -62,6 +81,61 @@ impl Default for PoolConfig {
     }
 }
 
+/// Worker-supervision knobs ([`Pool::with_supervisor`]). The defaults
+/// suit tests and embedded deployments: near-immediate first respawn,
+/// sub-second cap, quarantine after eight straight panics.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Contained panics in a row (across all workers, with no
+    /// intervening successful request) after which the backend is
+    /// quarantined: workers stop touching it and answer with a typed
+    /// [`InferenceError::BackendUnavailable`]. Clamped to ≥ 1.
+    pub quarantine_after: u32,
+    /// Delay before the first respawn of a dead worker; doubles per
+    /// consecutive death (capped), with up to 50% random jitter so a
+    /// fleet of pools never thunders in lockstep.
+    pub respawn_backoff: Duration,
+    /// Upper bound on the (pre-jitter) respawn delay.
+    pub max_respawn_backoff: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            quarantine_after: 8,
+            respawn_backoff: Duration::from_millis(1),
+            max_respawn_backoff: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Point-in-time supervision snapshot ([`Pool::health`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolHealth {
+    /// Worker threads the pool was configured with.
+    pub workers_configured: usize,
+    /// Worker threads currently alive. Dips below `workers_configured`
+    /// while a respawn is in flight; recovers unless quarantined.
+    pub workers_live: usize,
+    /// Backend panics contained by `catch_unwind` so far.
+    pub panics_contained: u64,
+    /// Workers the supervisor has respawned so far.
+    pub respawns: u64,
+    /// Current run of contained panics with no intervening success
+    /// (the quarantine trigger counter).
+    pub consecutive_faults: u32,
+    /// True once the backend has been quarantined; the pool now fails
+    /// fast and no further respawns happen.
+    pub quarantined: bool,
+}
+
+impl PoolHealth {
+    /// Fully staffed and not quarantined.
+    pub fn is_healthy(&self) -> bool {
+        !self.quarantined && self.workers_live == self.workers_configured
+    }
+}
+
 struct Job {
     x: Vec<f32>,
     resp: Sender<Result<Vec<f32>, InferenceError>>,
@@ -74,6 +148,43 @@ struct Counters {
     batches: AtomicU64,
     errors: AtomicU64,
     shed: AtomicU64,
+}
+
+/// Supervision state shared by workers, the supervisor thread and the
+/// [`Pool`] handle.
+struct Supervision {
+    cfg: SupervisorConfig,
+    /// Set by `Pool::drop` before closing the queue: worker exits are
+    /// expected and must not trigger respawns.
+    shutdown: AtomicBool,
+    /// Set after `quarantine_after` consecutive contained panics.
+    quarantined: AtomicBool,
+    panics: AtomicU64,
+    respawns: AtomicU64,
+    consecutive: AtomicU32,
+}
+
+impl Supervision {
+    fn new(cfg: SupervisorConfig) -> Supervision {
+        Supervision {
+            cfg,
+            shutdown: AtomicBool::new(false),
+            quarantined: AtomicBool::new(false),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            consecutive: AtomicU32::new(0),
+        }
+    }
+
+    /// Record one contained panic; flips `quarantined` at the
+    /// configured streak.
+    fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        let streak = self.consecutive.fetch_add(1, Ordering::AcqRel) + 1;
+        if streak >= self.cfg.quarantine_after.max(1) {
+            self.quarantined.store(true, Ordering::SeqCst);
+        }
+    }
 }
 
 /// A handle to an in-flight request; [`Ticket::wait`] blocks for the
@@ -140,22 +251,37 @@ impl Ticket {
     }
 }
 
-/// The worker pool. Dropping it shuts the queue and joins every
-/// worker.
+/// The worker pool. Dropping it shuts the queue, retires the
+/// supervisor and joins every worker.
 pub struct Pool {
     queue: Arc<DeadlineQueue<Job>>,
-    workers: Vec<JoinHandle<()>>,
+    /// Shared with the supervisor, which pushes respawned handles.
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    supervisor: Option<JoinHandle<()>>,
     n_workers: usize,
     counters: Arc<Counters>,
     worker_served: Arc<Vec<AtomicU64>>,
+    live: Arc<AtomicUsize>,
+    sup: Arc<Supervision>,
     admission: Option<Admission>,
     in_dim: usize,
 }
 
 impl Pool {
-    /// Spin up `cfg.workers` threads over one shared backend.
+    /// Spin up `cfg.workers` threads over one shared backend, with
+    /// default supervision ([`SupervisorConfig::default`]).
     pub fn new(backend: SharedBackend, cfg: PoolConfig) -> Pool {
-        Pool::build(backend, cfg, None)
+        Pool::build(backend, cfg, None, SupervisorConfig::default())
+    }
+
+    /// Like [`Pool::new`], with explicit supervision knobs (respawn
+    /// backoff, quarantine threshold).
+    pub fn with_supervisor(
+        backend: SharedBackend,
+        cfg: PoolConfig,
+        sup: SupervisorConfig,
+    ) -> Pool {
+        Pool::build(backend, cfg, None, sup)
     }
 
     /// Like [`Pool::new`], with an ingress [`Admission`] gate:
@@ -166,13 +292,19 @@ impl Pool {
         cfg: PoolConfig,
         admission: Admission,
     ) -> Pool {
-        Pool::build(backend, cfg, Some(admission))
+        Pool::build(
+            backend,
+            cfg,
+            Some(admission),
+            SupervisorConfig::default(),
+        )
     }
 
     fn build(
         backend: SharedBackend,
         cfg: PoolConfig,
         admission: Option<Admission>,
+        sup_cfg: SupervisorConfig,
     ) -> Pool {
         let n_workers = cfg.workers.max(1);
         let max_batch = cfg.max_batch.max(1);
@@ -181,10 +313,12 @@ impl Pool {
         let worker_served: Arc<Vec<AtomicU64>> =
             Arc::new((0..n_workers).map(|_| AtomicU64::new(0)).collect());
         let live = Arc::new(AtomicUsize::new(n_workers));
+        let sup = Arc::new(Supervision::new(sup_cfg));
         let in_dim = backend.spec().in_dim;
-        let workers = (0..n_workers)
+        let (death_tx, death_rx) = channel::<usize>();
+        let handles: Vec<JoinHandle<()>> = (0..n_workers)
             .map(|w| {
-                let ctx = WorkerCtx {
+                spawn_worker(WorkerCtx {
                     w,
                     backend: Arc::clone(&backend),
                     queue: Arc::clone(&queue),
@@ -192,16 +326,39 @@ impl Pool {
                     counters: Arc::clone(&counters),
                     worker_served: Arc::clone(&worker_served),
                     live: Arc::clone(&live),
-                };
-                std::thread::spawn(move || worker_loop(ctx))
+                    sup: Arc::clone(&sup),
+                    death_tx: death_tx.clone(),
+                })
             })
             .collect();
+        let workers = Arc::new(Mutex::new(handles));
+        let supervisor = {
+            let sctx = SupCtx {
+                backend,
+                queue: Arc::clone(&queue),
+                max_batch,
+                counters: Arc::clone(&counters),
+                worker_served: Arc::clone(&worker_served),
+                live: Arc::clone(&live),
+                sup: Arc::clone(&sup),
+                workers: Arc::clone(&workers),
+                death_tx,
+                death_rx,
+            };
+            std::thread::Builder::new()
+                .name("pool-supervisor".into())
+                .spawn(move || supervisor_loop(sctx))
+                .expect("spawn pool supervisor")
+        };
         Pool {
             queue,
             workers,
+            supervisor: Some(supervisor),
             n_workers,
             counters,
             worker_served,
+            live,
+            sup,
             admission,
             in_dim,
         }
@@ -210,9 +367,9 @@ impl Pool {
     fn enqueue(&self, x: &[f32], opts: SubmitOptions) -> Ticket {
         let (resp, rx) = channel();
         let job = Job { x: x.to_vec(), resp };
-        // A failed push means the queue is closed (every worker gone);
-        // the dropped job closes the response channel and the ticket
-        // reports BackendUnavailable.
+        // A failed push means the queue is closed (shutdown, or
+        // quarantined with no survivors); the dropped job closes the
+        // response channel and the ticket reports BackendUnavailable.
         let _ = self.queue.push(opts.priority, opts.deadline, job);
         Ticket { rx }
     }
@@ -335,14 +492,39 @@ impl Pool {
     pub fn in_dim(&self) -> usize {
         self.in_dim
     }
+
+    /// Supervision snapshot: live worker count, contained panics,
+    /// respawns, quarantine. `workers_live` dips while a respawn
+    /// backoff is pending and recovers once the supervisor restaffs —
+    /// the chaos soak asserts exactly that.
+    pub fn health(&self) -> PoolHealth {
+        PoolHealth {
+            workers_configured: self.n_workers,
+            workers_live: self.live.load(Ordering::SeqCst),
+            panics_contained: self.sup.panics.load(Ordering::Relaxed),
+            respawns: self.sup.respawns.load(Ordering::Relaxed),
+            consecutive_faults: self
+                .sup
+                .consecutive
+                .load(Ordering::Relaxed),
+            quarantined: self.sup.quarantined.load(Ordering::SeqCst),
+        }
+    }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        // Closing the queue ends every worker's pop loop once the
-        // pending items are drained and served.
+        // Order matters: mark shutdown (so worker exits don't trigger
+        // respawns), close the queue (ends every worker's pop loop
+        // once pending items are drained and served), retire the
+        // supervisor (it exits when the last worker reports in), then
+        // join the workers.
+        self.sup.shutdown.store(true, Ordering::SeqCst);
         self.queue.close();
-        for h in self.workers.drain(..) {
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        for h in lock_recover(&self.workers).drain(..) {
             let _ = h.join();
         }
     }
@@ -355,8 +537,34 @@ fn unavailable(reason: &str) -> InferenceError {
     }
 }
 
+/// Human-readable image of a `catch_unwind` payload.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Mint a session without letting a panicking constructor take the
+/// worker down uncontained.
+fn mint_session(
+    backend: &SharedBackend,
+) -> Result<Box<dyn Session>, String> {
+    match catch_unwind(AssertUnwindSafe(|| backend.session())) {
+        Ok(Ok(s)) => Ok(s),
+        Ok(Err(e)) => Err(e.to_string()),
+        Err(p) => Err(format!(
+            "session constructor panicked: {}",
+            panic_message(p.as_ref())
+        )),
+    }
+}
+
 /// Everything one worker thread needs (bundled so the loop has a
-/// single argument).
+/// single argument; the supervisor rebuilds one per respawn).
 struct WorkerCtx {
     w: usize,
     backend: SharedBackend,
@@ -365,21 +573,37 @@ struct WorkerCtx {
     counters: Arc<Counters>,
     worker_served: Arc<Vec<AtomicU64>>,
     live: Arc<AtomicUsize>,
+    sup: Arc<Supervision>,
+    death_tx: Sender<usize>,
 }
 
-/// Runs on worker exit — including a panicking unwind. When the
-/// *last* worker goes, pending requests would otherwise wait forever
-/// on a queue nobody reads; close it and answer them with a typed
-/// error (the `Ticket::wait`-never-hangs guarantee).
+fn spawn_worker(ctx: WorkerCtx) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("pool-worker-{}", ctx.w))
+        .spawn(move || worker_loop(ctx))
+        .expect("spawn pool worker")
+}
+
+/// Runs on worker exit — graceful or poisoned. Decrements the live
+/// count, fails pending requests when no worker will ever return
+/// (shutdown or quarantine — the `Ticket::wait`-never-hangs
+/// guarantee), and reports the death to the supervisor, which decides
+/// whether to respawn.
 struct ExitGuard {
+    w: usize,
     queue: Arc<DeadlineQueue<Job>>,
     counters: Arc<Counters>,
     live: Arc<AtomicUsize>,
+    sup: Arc<Supervision>,
+    death_tx: Sender<usize>,
 }
 
 impl Drop for ExitGuard {
     fn drop(&mut self) {
-        if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let remaining = self.live.fetch_sub(1, Ordering::AcqRel) - 1;
+        let terminal = self.sup.shutdown.load(Ordering::SeqCst)
+            || self.sup.quarantined.load(Ordering::SeqCst);
+        if remaining == 0 && terminal {
             self.queue.close();
             for (_, job) in self.queue.drain() {
                 self.counters.errors.fetch_add(1, Ordering::Relaxed);
@@ -388,6 +612,100 @@ impl Drop for ExitGuard {
                     .send(Err(unavailable("all pool workers exited")));
             }
         }
+        // After the live count is settled, so the supervisor observes
+        // a consistent world when the note arrives.
+        let _ = self.death_tx.send(self.w);
+    }
+}
+
+/// Everything the supervisor thread needs to restaff workers.
+struct SupCtx {
+    backend: SharedBackend,
+    queue: Arc<DeadlineQueue<Job>>,
+    max_batch: usize,
+    counters: Arc<Counters>,
+    worker_served: Arc<Vec<AtomicU64>>,
+    live: Arc<AtomicUsize>,
+    sup: Arc<Supervision>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    death_tx: Sender<usize>,
+    death_rx: Receiver<usize>,
+}
+
+/// A quiet spell this long resets the respawn backoff to its floor —
+/// deaths separated by healthy stretches are independent incidents,
+/// not a crash loop.
+const BACKOFF_RESET: Duration = Duration::from_secs(2);
+
+/// The supervisor: receives one death note per exiting worker and
+/// respawns it under capped, jittered exponential backoff — unless the
+/// pool is shutting down (expected exits) or the backend is
+/// quarantined (respawning a worker onto a broken backend only burns
+/// CPU). Exits once no supervised worker remains.
+fn supervisor_loop(s: SupCtx) {
+    let mut backoff = s.sup.cfg.respawn_backoff;
+    let mut last_death: Option<Instant> = None;
+    // Jitter stream; seed is arbitrary but fixed so pool behavior is
+    // reproducible under test.
+    let mut rng = SplitMix64::new(0x5eed_0f_5afe7f);
+    while let Ok(w) = s.death_rx.recv() {
+        if s.sup.shutdown.load(Ordering::SeqCst) {
+            if s.live.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            continue;
+        }
+        if s.sup.quarantined.load(Ordering::SeqCst) {
+            if s.live.load(Ordering::SeqCst) == 0 {
+                // No survivors and no respawns coming: fail pending
+                // work now (the ExitGuard may have raced the
+                // quarantine flag; this backstop is idempotent).
+                s.queue.close();
+                for (_, job) in s.queue.drain() {
+                    s.counters.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.resp.send(Err(unavailable(
+                        "backend quarantined; all pool workers exited",
+                    )));
+                }
+                break;
+            }
+            continue;
+        }
+        if let Some(t) = last_death {
+            if t.elapsed() >= BACKOFF_RESET {
+                backoff = s.sup.cfg.respawn_backoff;
+            }
+        }
+        last_death = Some(Instant::now());
+        let jitter = Duration::from_secs_f64(
+            backoff.as_secs_f64() * 0.5 * rng.next_f64(),
+        );
+        std::thread::sleep(backoff + jitter);
+        backoff = (backoff * 2).min(s.sup.cfg.max_respawn_backoff);
+        // Re-check after sleeping: the pool may have started shutdown
+        // or quarantined while we backed off.
+        if s.sup.shutdown.load(Ordering::SeqCst)
+            || s.sup.quarantined.load(Ordering::SeqCst)
+        {
+            if s.live.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            continue;
+        }
+        s.live.fetch_add(1, Ordering::AcqRel);
+        s.sup.respawns.fetch_add(1, Ordering::Relaxed);
+        let handle = spawn_worker(WorkerCtx {
+            w,
+            backend: Arc::clone(&s.backend),
+            queue: Arc::clone(&s.queue),
+            max_batch: s.max_batch,
+            counters: Arc::clone(&s.counters),
+            worker_served: Arc::clone(&s.worker_served),
+            live: Arc::clone(&s.live),
+            sup: Arc::clone(&s.sup),
+            death_tx: s.death_tx.clone(),
+        });
+        lock_recover(&s.workers).push(handle);
     }
 }
 
@@ -403,18 +721,21 @@ fn fits(deadline: Option<Deadline>, now: Instant, us: f64) -> bool {
 
 fn worker_loop(ctx: WorkerCtx) {
     let _guard = ExitGuard {
+        w: ctx.w,
         queue: Arc::clone(&ctx.queue),
         counters: Arc::clone(&ctx.counters),
         live: Arc::clone(&ctx.live),
+        sup: Arc::clone(&ctx.sup),
+        death_tx: ctx.death_tx.clone(),
     };
     // Sessions are minted on the worker thread (they are not Send).
     // A backend that cannot create sessions still drains the queue,
     // answering every request with the typed reason.
     let mut session: Option<Box<dyn Session>> = None;
     let mut session_err = String::new();
-    match ctx.backend.session() {
+    match mint_session(&ctx.backend) {
         Ok(s) => session = Some(s),
-        Err(e) => session_err = e.to_string(),
+        Err(e) => session_err = e,
     }
     let (in_dim, out_dim, granularity) = match &session {
         Some(s) => {
@@ -423,6 +744,7 @@ fn worker_loop(ctx: WorkerCtx) {
         }
         None => (0, 0, 1),
     };
+    let backend_name = ctx.backend.name().to_string();
 
     // Per-worker moving average of measured per-request service time
     // (µs) — the batch-formation cost model. 0 until the first
@@ -469,7 +791,22 @@ fn worker_loop(ctx: WorkerCtx) {
             }
         }
 
-        let Some(session) = session.as_mut() else {
+        // A quarantined backend is never touched again: answer fast
+        // with the typed reason (surviving workers double as the
+        // fail-fast path, so callers never hang on a broken model).
+        if ctx.sup.quarantined.load(Ordering::SeqCst) {
+            for (_, j) in group.drain(..) {
+                ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = j.resp.send(Err(unavailable(
+                    "backend quarantined after repeated panics",
+                )));
+            }
+            continue;
+        }
+
+        // Take the session for this group; it is handed back at the
+        // end unless a contained panic left it suspect.
+        let Some(mut s) = session.take() else {
             for (_, j) in group.drain(..) {
                 ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = j.resp.send(Err(unavailable(&session_err)));
@@ -507,6 +844,7 @@ fn worker_loop(ctx: WorkerCtx) {
             }
         }
         if batch.is_empty() {
+            session = Some(s);
             continue;
         }
 
@@ -532,13 +870,18 @@ fn worker_loop(ctx: WorkerCtx) {
             batch.len()
         };
         if head == 0 {
+            session = Some(s);
             continue;
         }
 
         let n = batch.len();
         let t_serve = Instant::now();
         let mut group_served = 0u64;
-        let mut served_batched = false;
+        let mut group_done = false;
+        // A contained panic retires this worker after the group: the
+        // session (and any state the panic unwound through) is
+        // suspect, so the supervisor restaffs with a fresh one.
+        let mut panicked = false;
         if n > 1 || granularity > 1 {
             xs.clear();
             for j in &batch {
@@ -547,35 +890,101 @@ fn worker_loop(ctx: WorkerCtx) {
             out.clear();
             out.resize(n * out_dim, 0.0);
             // Batch path; equivalence with sequential infer_into is
-            // part of the Session contract. If a substrate still
-            // refuses the batch, fall through to the per-request path
-            // below.
-            if session.infer_batch(&xs, &mut out).is_ok() {
-                for (i, j) in batch.drain(..).enumerate() {
-                    group_served += 1;
-                    ctx.worker_served[ctx.w]
-                        .fetch_add(1, Ordering::Relaxed);
-                    let _ = j.resp.send(Ok(
-                        out[i * out_dim..(i + 1) * out_dim].to_vec()
-                    ));
+            // part of the Session contract. If a substrate refuses the
+            // batch with a typed error, fall through to the
+            // per-request path below. If it *panics*, the faulty
+            // request is unknown — re-mint a session and isolate it on
+            // the per-request path, so a panic never fails innocent
+            // batchmates.
+            match catch_unwind(AssertUnwindSafe(|| {
+                s.infer_batch(&xs, &mut out)
+            })) {
+                Ok(Ok(())) => {
+                    for (i, j) in batch.drain(..).enumerate() {
+                        group_served += 1;
+                        ctx.worker_served[ctx.w]
+                            .fetch_add(1, Ordering::Relaxed);
+                        let _ = j.resp.send(Ok(
+                            out[i * out_dim..(i + 1) * out_dim].to_vec()
+                        ));
+                    }
+                    group_done = true;
                 }
-                served_batched = true;
+                Ok(Err(_)) => {}
+                Err(p) => {
+                    panicked = true;
+                    ctx.sup.record_panic();
+                    let msg = panic_message(p.as_ref());
+                    match mint_session(&ctx.backend) {
+                        Ok(ns) => s = ns,
+                        Err(e) => {
+                            // Cannot isolate without a session: the
+                            // whole group reports the contained panic.
+                            for j in batch.drain(..) {
+                                ctx.counters
+                                    .errors
+                                    .fetch_add(1, Ordering::Relaxed);
+                                let _ = j.resp.send(Err(
+                                    InferenceError::BackendPanicked {
+                                        backend: backend_name.clone(),
+                                        message: msg.clone(),
+                                    },
+                                ));
+                            }
+                            session_err = e;
+                            group_done = true;
+                        }
+                    }
+                }
             }
         }
-        if !served_batched {
-            for j in batch.drain(..) {
+        if !group_done {
+            let mut it = batch.into_iter();
+            loop {
+                let Some(j) = it.next() else { break };
                 out.clear();
                 out.resize(out_dim, 0.0);
-                match session.infer_into(&j.x, &mut out) {
-                    Ok(()) => {
+                match catch_unwind(AssertUnwindSafe(|| {
+                    s.infer_into(&j.x, &mut out)
+                })) {
+                    Ok(Ok(())) => {
                         group_served += 1;
                         ctx.worker_served[ctx.w]
                             .fetch_add(1, Ordering::Relaxed);
                         let _ = j.resp.send(Ok(out.clone()));
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
                         let _ = j.resp.send(Err(e));
+                    }
+                    Err(p) => {
+                        // The panic fails exactly this ticket; the
+                        // rest of the group continues on a fresh
+                        // session.
+                        panicked = true;
+                        ctx.sup.record_panic();
+                        ctx.counters.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = j.resp.send(Err(
+                            InferenceError::BackendPanicked {
+                                backend: backend_name.clone(),
+                                message: panic_message(p.as_ref()),
+                            },
+                        ));
+                        match mint_session(&ctx.backend) {
+                            Ok(ns) => s = ns,
+                            Err(e) => {
+                                for rest in it {
+                                    ctx.counters
+                                        .errors
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    let _ = rest
+                                        .resp
+                                        .send(Err(unavailable(&e)));
+                                }
+                                session_err = e;
+                                break;
+                            }
+                        }
                     }
                 }
             }
@@ -598,13 +1007,24 @@ fn worker_loop(ctx: WorkerCtx) {
                 0.6 * est_us + 0.4 * per_req_us
             };
         }
+        if panicked {
+            // Retire: the ExitGuard reports the death and the
+            // supervisor restaffs with backoff. The quarantine streak
+            // survives in `Supervision`.
+            return;
+        }
+        if group_served > 0 {
+            // Any success breaks the consecutive-fault streak.
+            ctx.sup.consecutive.store(0, Ordering::Release);
+        }
+        session = Some(s);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::{Backend, EngineBackend};
+    use crate::api::{Backend, EngineBackend, ModelSpec};
     use crate::engine::{Act, Layer, Model};
     use crate::plc::HwProfile;
     use crate::serve::Priority;
@@ -653,6 +1073,10 @@ mod tests {
         assert!(pool.batches() <= 40, "batching must coalesce, not inflate");
         let per_worker = pool.worker_served();
         assert_eq!(per_worker.iter().sum::<u64>(), 40);
+        let h = pool.health();
+        assert!(h.is_healthy(), "healthy load leaves the pool healthy");
+        assert_eq!(h.panics_contained, 0);
+        assert_eq!(h.respawns, 0);
     }
 
     #[test]
@@ -754,5 +1178,217 @@ mod tests {
         }
         assert_eq!(pool.shed(), 0, "rejected at ingress, not queued");
         assert_eq!(pool.infer(&[0.1; 8]).unwrap().len(), 3);
+    }
+
+    // -----------------------------------------------------------------
+    // Supervision (contained panics, respawn, quarantine)
+    // -----------------------------------------------------------------
+
+    /// Panics on request tag `x[0] == 666`, serves everything else.
+    struct SelectivePanicBackend {
+        inner: EngineBackend,
+    }
+
+    impl SelectivePanicBackend {
+        fn shared() -> SharedBackend {
+            Arc::new(SelectivePanicBackend {
+                inner: EngineBackend::new(model()),
+            })
+        }
+    }
+
+    impl Backend for SelectivePanicBackend {
+        fn name(&self) -> &'static str {
+            "selective-panic"
+        }
+        fn spec(&self) -> ModelSpec {
+            self.inner.spec()
+        }
+        fn session(&self) -> Result<Box<dyn Session>, InferenceError> {
+            Ok(Box::new(SelectivePanicSession {
+                inner: self.inner.session()?,
+            }))
+        }
+    }
+
+    struct SelectivePanicSession {
+        inner: Box<dyn Session>,
+    }
+
+    impl Session for SelectivePanicSession {
+        fn name(&self) -> &'static str {
+            "selective-panic"
+        }
+        fn spec(&self) -> ModelSpec {
+            self.inner.spec()
+        }
+        fn infer_into(
+            &mut self,
+            x: &[f32],
+            out: &mut [f32],
+        ) -> Result<(), InferenceError> {
+            assert!(x[0] != 666.0, "synthetic poison request");
+            self.inner.infer_into(x, out)
+        }
+    }
+
+    fn tagged(tag: f32) -> Vec<f32> {
+        let mut v = vec![0.25f32; 8];
+        v[0] = tag;
+        v
+    }
+
+    fn wait_healthy(pool: &Pool) -> PoolHealth {
+        let t0 = Instant::now();
+        loop {
+            let h = pool.health();
+            if h.is_healthy() {
+                return h;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "pool never restaffed: {h:?}"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn a_panic_fails_only_its_own_ticket() {
+        let pool = Pool::new(
+            SelectivePanicBackend::shared(),
+            // max_batch 1: each request is its own group, so the
+            // panic's blast radius is exactly one ticket.
+            PoolConfig { workers: 2, max_batch: 1 },
+        );
+        let reference = pool.infer(&tagged(1.0)).unwrap();
+
+        let poison = pool.submit(&tagged(666.0));
+        let healthy: Vec<Ticket> =
+            (0..10).map(|_| pool.submit(&tagged(1.0))).collect();
+
+        match poison.wait() {
+            Err(InferenceError::BackendPanicked { backend, message }) => {
+                assert_eq!(backend, "selective-panic");
+                assert!(
+                    message.contains("synthetic poison"),
+                    "panic payload survives: {message}"
+                );
+            }
+            other => panic!("want BackendPanicked, got {other:?}"),
+        }
+        for t in healthy {
+            assert_eq!(
+                t.wait().unwrap(),
+                reference,
+                "innocent requests are served bit-identically"
+            );
+        }
+        let h = wait_healthy(&pool);
+        assert_eq!(h.panics_contained, 1);
+        assert!(h.respawns >= 1, "the dead worker was restaffed");
+        assert!(!h.quarantined);
+    }
+
+    #[test]
+    fn batch_path_panic_spares_innocent_batchmates() {
+        let pool = Pool::new(
+            SelectivePanicBackend::shared(),
+            // One worker and a roomy batch: the poison request shares
+            // a group with innocents.
+            PoolConfig { workers: 1, max_batch: 8 },
+        );
+        let reference = pool.infer(&tagged(1.0)).unwrap();
+
+        // Pipeline a mixed wave while the single worker is busy with
+        // the first entry, so the rest coalesce into one batch.
+        let mut tickets = Vec::new();
+        tickets.push(pool.submit(&tagged(1.0)));
+        tickets.push(pool.submit(&tagged(666.0)));
+        for _ in 0..5 {
+            tickets.push(pool.submit(&tagged(1.0)));
+        }
+        let mut panics = 0;
+        for t in tickets {
+            match t.wait() {
+                Ok(y) => assert_eq!(y, reference),
+                Err(InferenceError::BackendPanicked { .. }) => panics += 1,
+                Err(other) => panic!("unexpected error: {other}"),
+            }
+        }
+        assert_eq!(panics, 1, "exactly the poison ticket failed");
+        let h = wait_healthy(&pool);
+        assert!(h.panics_contained >= 1);
+    }
+
+    #[test]
+    fn repeated_panics_quarantine_the_backend() {
+        let pool = Pool::with_supervisor(
+            SelectivePanicBackend::shared(),
+            PoolConfig { workers: 1, max_batch: 1 },
+            SupervisorConfig {
+                quarantine_after: 3,
+                respawn_backoff: Duration::from_micros(200),
+                max_respawn_backoff: Duration::from_millis(5),
+            },
+        );
+        // Three straight poison requests trip the quarantine.
+        for _ in 0..3 {
+            assert!(pool.infer(&tagged(666.0)).is_err());
+        }
+        let t0 = Instant::now();
+        while !pool.health().quarantined {
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "quarantine never tripped: {:?}",
+                pool.health()
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Quarantined: even healthy-looking requests fail fast with a
+        // typed BackendUnavailable instead of touching the backend —
+        // and nothing hangs. (With a lone worker the pool may already
+        // have closed its queue, so any of the quarantine/exit/
+        // disconnect reasons is acceptable; all are fail-fast.)
+        match pool.infer(&tagged(1.0)) {
+            Err(InferenceError::BackendUnavailable { backend, .. }) => {
+                assert_eq!(backend, "pool");
+            }
+            other => panic!("want fail-fast unavailable, got {other:?}"),
+        }
+        let h = pool.health();
+        assert!(h.quarantined);
+        assert_eq!(h.panics_contained, 3);
+    }
+
+    #[test]
+    fn successes_reset_the_quarantine_streak() {
+        let pool = Pool::with_supervisor(
+            SelectivePanicBackend::shared(),
+            PoolConfig { workers: 1, max_batch: 1 },
+            SupervisorConfig {
+                quarantine_after: 3,
+                respawn_backoff: Duration::from_micros(200),
+                max_respawn_backoff: Duration::from_millis(5),
+            },
+        );
+        // Alternate panic / success well past the quarantine
+        // threshold: the streak keeps resetting, so the pool stays in
+        // service.
+        for round in 0..5 {
+            assert!(
+                pool.infer(&tagged(666.0)).is_err(),
+                "round {round}: poison fails"
+            );
+            assert_eq!(
+                pool.infer(&tagged(1.0)).unwrap().len(),
+                3,
+                "round {round}: healthy request served after respawn"
+            );
+        }
+        let h = wait_healthy(&pool);
+        assert!(!h.quarantined, "interleaved successes prevent quarantine");
+        assert_eq!(h.panics_contained, 5);
+        assert!(h.respawns >= 5);
     }
 }

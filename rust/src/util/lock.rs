@@ -1,0 +1,63 @@
+//! Poison-recovering `std::sync` lock helpers.
+//!
+//! A panicking lock holder poisons a `std` `Mutex`; every later
+//! `lock().unwrap()` then panics too, cascading one contained fault
+//! into unrelated requests. That is exactly the failure amplification
+//! this serving stack exists to avoid: all shared state guarded by
+//! these locks (registry slots, scheduler queues, worker bookkeeping)
+//! is kept consistent by construction — guards are held only across
+//! short, non-panicking critical sections — so recovering the guard
+//! is always sound here. These helpers make the recovery explicit and
+//! give the pattern one audited home instead of a scattering of
+//! `unwrap_or_else(PoisonError::into_inner)` calls.
+//!
+//! Used across `serve/` and `netserve/` (the supervised-pool layer
+//! deliberately contains backend panics with `catch_unwind`, which is
+//! when poisoned locks would otherwise start cascading).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// ```
+/// use std::sync::Mutex;
+/// use icsml::util::lock::lock_recover;
+///
+/// let m = Mutex::new(7);
+/// *lock_recover(&m) += 1;
+/// assert_eq!(*lock_recover(&m), 8);
+/// ```
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` with `guard`, recovering the reacquired guard if the
+/// mutex was poisoned while this thread slept.
+pub fn wait_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex by panicking while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex really is poisoned");
+        // The helper still hands out a usable guard.
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
+    }
+}

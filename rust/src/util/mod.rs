@@ -10,6 +10,7 @@
 //! | [`bench`] | criterion         | `cargo bench` harnesses             |
 //! | [`prop`]  | proptest          | property tests on invariants        |
 //! | [`binio`] | —                 | ICSML BINARR/ARRBIN binary files    |
+//! | [`lock`]  | —                 | poison-recovering Mutex/Condvar use |
 
 pub mod bench;
 pub mod benchkit;
@@ -18,5 +19,6 @@ pub mod cli;
 #[doc(hidden)]
 pub mod fixtures;
 pub mod json;
+pub mod lock;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,305 @@
+//! Chaos suite: the whole stack under injected faults.
+//!
+//! A seeded [`FaultPlan`] drives panics, typed errors, latency spikes
+//! and shape lies through registry-backed models behind a live
+//! network server, and the tests assert the robustness contract end
+//! to end: every request resolves (zero hangs), each fault's blast
+//! radius is exactly one ticket, non-faulted replies stay
+//! bit-identical to a clean in-process run, supervision restaffs the
+//! pools, overload is refused with a typed retry hint, and a mid-
+//! pipeline server death is survived by client failover with the
+//! unrecoverable ids reported as a typed `ConnectionLost`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use icsml::api::{
+    Backend, EngineBackend, InferenceError, Session as _, SharedBackend,
+};
+use icsml::netserve::{
+    Client, ModelRegistry, NetOptions, NetServer, RegistryConfig,
+    RetryPolicy, ServerConfig, StaticLoader,
+};
+use icsml::serve::{Fault, FaultBackend, FaultPlan, PoolConfig};
+use icsml::util::fixtures;
+
+/// Two fixture models behind fault wrappers — `alpha` misbehaves per
+/// `plan_a`, `beta` per `plan_b`. Pools run `max_batch: 1` so every
+/// fault index maps to exactly one request (the per-request worker
+/// path; batch-path containment has its own unit tests). The fault
+/// wrappers come back alongside the registry so tests can read their
+/// injection counters.
+fn chaos_registry(
+    workers: usize,
+    plan_a: FaultPlan,
+    plan_b: FaultPlan,
+) -> (Arc<ModelRegistry>, Arc<FaultBackend>, Arc<FaultBackend>) {
+    let inner_a: SharedBackend =
+        Arc::new(EngineBackend::new(fixtures::mlp_8_16_4(1)));
+    let inner_b: SharedBackend =
+        Arc::new(EngineBackend::new(fixtures::mlp_8_16_4(2)));
+    let fa = Arc::new(FaultBackend::new(inner_a, plan_a));
+    let fb = Arc::new(FaultBackend::new(inner_b, plan_b));
+    let shared_a: SharedBackend = Arc::clone(&fa);
+    let shared_b: SharedBackend = Arc::clone(&fb);
+    let mut loader = StaticLoader::new();
+    loader.insert("alpha", shared_a, 1);
+    loader.insert("beta", shared_b, 1);
+    let reg = Arc::new(ModelRegistry::new(
+        Box::new(loader),
+        RegistryConfig {
+            max_models: usize::MAX,
+            max_bytes: u64::MAX,
+            pool: PoolConfig { workers, max_batch: 1 },
+        },
+    ));
+    (reg, fa, fb)
+}
+
+/// What the clean engine says for `x` — the bar every non-faulted
+/// networked reply must match bit-for-bit.
+fn reference(seed: u64, x: &[f32]) -> Vec<f32> {
+    EngineBackend::new(fixtures::mlp_8_16_4(seed))
+        .session()
+        .unwrap()
+        .infer(x)
+        .unwrap()
+}
+
+/// Block (bounded) until `name`'s pool is fully restaffed and out of
+/// quarantine.
+fn wait_healthy(reg: &ModelRegistry, name: &str) {
+    let entry = reg.get_or_load(name).unwrap();
+    let t0 = Instant::now();
+    while !entry.pool().health().is_healthy() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "{name}: pool never restaffed: {:?}",
+            entry.pool().health()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// The headline soak: 4 clients pipeline 200 requests across two
+/// registry models while a fault plan fires panics, typed errors,
+/// latency spikes and shape lies into the pools. Every request must
+/// resolve with a reply (zero hangs, zero dropped tickets), each
+/// fault fails at most its own ticket with the right typed error,
+/// survivors are bit-identical to the clean engine, and supervision
+/// restaffs both pools to full strength afterwards.
+#[test]
+fn soak_with_injected_faults_resolves_every_request() {
+    // alpha: one of each fault kind at hand-picked indices (plus a
+    // second panic) — all inside its 100-request stream, so the
+    // expected injection counts are exact. beta: a seeded plan, the
+    // reproducible-randomness path.
+    let plan_a = FaultPlan::new()
+        .at(3, Fault::Panic)
+        .at(17, Fault::Error)
+        .at(29, Fault::Latency(Duration::from_millis(2)))
+        .at(41, Fault::WrongShape)
+        .at(77, Fault::Panic);
+    let plan_b = FaultPlan::seeded(0xc4a05, 400, 0.03);
+    let (reg, fa, fb) = chaos_registry(2, plan_a, plan_b);
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&reg),
+        ServerConfig::default(),
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr();
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 50;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.set_timeout(Some(Duration::from_secs(60))).unwrap();
+                let model = if t % 2 == 0 { "alpha" } else { "beta" };
+                let seed = if t % 2 == 0 { 1 } else { 2 };
+                let x: Vec<f32> =
+                    (0..8).map(|i| (t + i) as f32 * 0.125).collect();
+                let want = reference(seed, &x);
+                let opts = NetOptions::new();
+                for _ in 0..PER_CLIENT {
+                    c.submit(model, &x, &opts).unwrap();
+                }
+                let mut panicked = 0u64;
+                for _ in 0..PER_CLIENT {
+                    let reply = c.recv().unwrap();
+                    match reply.result {
+                        Ok(y) => assert_eq!(
+                            y, want,
+                            "non-faulted replies stay bit-identical"
+                        ),
+                        Err(e) => match e.to_error() {
+                            InferenceError::BackendPanicked { .. } => {
+                                panicked += 1;
+                            }
+                            InferenceError::ExecutionFailed { .. }
+                            | InferenceError::ShapeMismatch { .. } => {}
+                            other => {
+                                panic!("unplanned failure kind: {other}")
+                            }
+                        },
+                    }
+                }
+                assert!(
+                    c.pending_ids().is_empty(),
+                    "every pipelined id was answered"
+                );
+                if model == "alpha" {
+                    panicked
+                } else {
+                    0
+                }
+            })
+        })
+        .collect();
+    let alpha_panics: u64 =
+        handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+    // Zero hangs, zero drops: every parsed request produced exactly
+    // one reply frame (success or typed error).
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(server.stats().requests(), total);
+    assert_eq!(
+        server.stats().responses() + server.stats().error_frames(),
+        total,
+        "every request resolved with a frame"
+    );
+    // The faults really fired, and each failed exactly one ticket.
+    assert_eq!(fa.requests(), 100, "alpha served its whole stream");
+    assert_eq!(fa.injected(), 5, "all five planned faults fired");
+    assert_eq!(alpha_panics, 2, "each panic failed exactly one ticket");
+    assert_eq!(fb.requests(), 100, "beta served its whole stream");
+    // Supervision restaffed the pools behind the contained panics.
+    wait_healthy(&reg, "alpha");
+    wait_healthy(&reg, "beta");
+    let alpha = reg.get_or_load("alpha").unwrap();
+    let health = alpha.pool().health();
+    assert_eq!(health.panics_contained, 2);
+    assert!(health.respawns >= 2, "dead workers were replaced");
+    assert!(!health.quarantined, "isolated panics never quarantine");
+    server.shutdown();
+}
+
+/// A server that dies with a pipelined wave still in flight is
+/// survived: the client reconnects (failing over to the second
+/// address), reports exactly the lost wire ids as a typed
+/// [`InferenceError::ConnectionLost`], and subsequent one-shot
+/// traffic flows bit-identically through the survivor.
+#[test]
+fn connection_drop_mid_pipeline_fails_over_with_typed_losses() {
+    // Server A stalls every request it will ever see, so the wave's
+    // replies are guaranteed to still be in flight when A dies.
+    // Server B is fault-free.
+    let stall = FaultPlan::new()
+        .at(0, Fault::Latency(Duration::from_secs(1)))
+        .at(1, Fault::Latency(Duration::from_secs(1)))
+        .at(2, Fault::Latency(Duration::from_secs(1)))
+        .at(3, Fault::Latency(Duration::from_secs(1)));
+    let (reg_a, _, _) = chaos_registry(2, stall, FaultPlan::new());
+    let (reg_b, _, _) =
+        chaos_registry(2, FaultPlan::new(), FaultPlan::new());
+    let server_a =
+        NetServer::bind("127.0.0.1:0", reg_a, ServerConfig::default())
+            .expect("bind A");
+    let server_b =
+        NetServer::bind("127.0.0.1:0", reg_b, ServerConfig::default())
+            .expect("bind B");
+    let addrs = [server_a.local_addr(), server_b.local_addr()];
+
+    let mut c = Client::connect_with(&addrs[..], RetryPolicy::new())
+        .expect("connect via failover list");
+    c.set_timeout(Some(Duration::from_secs(60))).unwrap();
+    let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.125).collect();
+    let opts = NetOptions::new();
+    let mut sent = Vec::new();
+    for _ in 0..4 {
+        sent.push(c.submit("alpha", &x, &opts).unwrap());
+    }
+    assert_eq!(c.pending_ids(), &sent[..]);
+    // Let A accept the wave into its (stalled) pool, then kill it with
+    // every reply still pending.
+    std::thread::sleep(Duration::from_millis(50));
+    server_a.shutdown();
+
+    match c.recv_reconnecting() {
+        Err(InferenceError::ConnectionLost { lost_ids, reason }) => {
+            assert_eq!(
+                lost_ids, sent,
+                "exactly the in-flight ids are reported lost"
+            );
+            assert!(!reason.is_empty());
+        }
+        other => panic!("expected ConnectionLost, got {other:?}"),
+    }
+    assert!(c.pending_ids().is_empty(), "the loss report is complete");
+    // The client is already reconnected (to B): the idempotent
+    // one-shot succeeds, bit-identical to the clean engine.
+    let y = c.infer("alpha", &x, &opts).unwrap();
+    assert_eq!(y, reference(1, &x));
+    server_b.shutdown();
+}
+
+/// Requests beyond the per-connection in-flight cap are refused with
+/// a typed [`InferenceError::Overloaded`] frame carrying a retry
+/// hint — the connection survives and everything under the cap is
+/// served normally.
+#[test]
+fn overload_is_refused_with_a_typed_retry_hint() {
+    // One worker, stalled on its first request: the pipelined wave
+    // behind it piles up against a tiny in-flight cap.
+    let stall = FaultPlan::new()
+        .at(0, Fault::Latency(Duration::from_millis(300)));
+    let (reg, _, _) = chaos_registry(1, stall, FaultPlan::new());
+    let cfg = ServerConfig {
+        max_inflight_per_conn: 4,
+        ..ServerConfig::default()
+    };
+    let server =
+        NetServer::bind("127.0.0.1:0", reg, cfg).expect("bind loopback");
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.set_timeout(Some(Duration::from_secs(60))).unwrap();
+    let x = [0.25f32; 8];
+    let opts = NetOptions::new();
+    let want = reference(1, &x);
+    for _ in 0..8 {
+        c.submit("alpha", &x, &opts).unwrap();
+    }
+    let mut served = 0;
+    let mut refused = 0;
+    for _ in 0..8 {
+        let reply = c.recv().unwrap();
+        match reply.result {
+            Ok(y) => {
+                assert_eq!(y, want);
+                served += 1;
+            }
+            Err(e) => match e.to_error() {
+                InferenceError::Overloaded {
+                    scope,
+                    retry_after_us,
+                } => {
+                    assert_eq!(scope, "connection");
+                    assert!(retry_after_us > 0.0, "retry hint present");
+                    refused += 1;
+                }
+                other => panic!("expected Overloaded, got {other}"),
+            },
+        }
+    }
+    assert_eq!(
+        (served, refused),
+        (4, 4),
+        "everything under the cap served, everything over refused"
+    );
+    assert_eq!(server.stats().overloaded(), 4);
+    // The refusals did not cost the connection: it still serves.
+    let y = c.infer("alpha", &x, &opts).unwrap();
+    assert_eq!(y, want);
+    server.shutdown();
+}
