@@ -1,0 +1,179 @@
+//! Fleet-scale closed-loop bench: ≥ 200 independently seeded plants
+//! over a loopback `netserve` server, run twice to prove replay
+//! identity, plus a deadline-pressure run that exercises the shed
+//! path. Writes `BENCH_fleet.json` (per-class deadline hit rate and
+//! latency percentiles, shed rate, per-family recall/time-to-detect)
+//! with `--json`; `--smoke` runs the small CI gate only.
+//!
+//! Usage: `cargo bench --bench fleet -- [--smoke] [--json[=PATH]]`
+
+use std::sync::Arc;
+
+use icsml::api::{EngineBackend, SharedBackend};
+use icsml::fleet::{
+    detector_model, run_fleet, FleetConfig, FleetReport, FleetTarget,
+};
+use icsml::netserve::{
+    Client, ModelRegistry, NetServer, RegistryConfig, RetryPolicy,
+    ServerConfig, StaticLoader,
+};
+use icsml::serve::{PoolConfig, Priority};
+use icsml::util::benchkit::{
+    json_flag, smoke_flag, write_bench_json, BenchRecord,
+};
+use icsml::util::json::Json;
+
+/// MACs per detector inference (400×4 + 4×2 dense).
+const DETECTOR_OPS: u64 = 400 * 4 + 4 * 2;
+
+fn spawn_server(workers: usize) -> NetServer {
+    let mut loader = StaticLoader::new();
+    let backend: SharedBackend = Arc::new(EngineBackend::new(detector_model()));
+    loader.insert("detector", backend, 1);
+    let registry = Arc::new(ModelRegistry::new(
+        Box::new(loader),
+        RegistryConfig {
+            max_models: usize::MAX,
+            max_bytes: u64::MAX,
+            pool: PoolConfig {
+                workers,
+                max_batch: 16,
+            },
+        },
+    ));
+    // Lock-step pipelining keeps up to three step-batches in flight on
+    // one connection; at 200 plants with Defense-class double-checks
+    // that can brush the default 1024 per-connection cap, and a
+    // connection-overload refusal is timing-dependent — which would
+    // poison the replay-identity assertion. Raise the cap so the only
+    // sheds are the deterministic deadline ones.
+    let cfg = ServerConfig {
+        max_inflight_per_conn: 4096,
+        ..ServerConfig::default()
+    };
+    NetServer::bind("127.0.0.1:0", registry, cfg).expect("bind loopback")
+}
+
+fn net_target(server: &NetServer) -> FleetTarget {
+    let client = Client::connect_with(server.local_addr(), RetryPolicy::new())
+        .expect("loopback connect");
+    FleetTarget::Net {
+        client,
+        model: "detector".to_string(),
+    }
+}
+
+fn run_against(server: &NetServer, cfg: &FleetConfig) -> FleetReport {
+    let report = run_fleet(cfg, net_target(server));
+    assert_eq!(
+        report.outcome.unresolved(),
+        0,
+        "every request must resolve (logits or typed error)"
+    );
+    report
+}
+
+fn main() {
+    let smoke = smoke_flag();
+    let json_path = json_flag("fleet");
+
+    // ---------------- correctness gate (always) ----------------------
+    // Tiny fleet over the loopback server: zero unresolved requests,
+    // recall sanity on every attacked family, no false positives.
+    let server = spawn_server(4);
+    let gate_cfg = FleetConfig {
+        plants: 12,
+        steps: 1_400,
+        seed: 42,
+        ..FleetConfig::default()
+    };
+    let gate = run_against(&server, &gate_cfg);
+    let total = gate.outcome.total();
+    assert_eq!(total.served, total.submitted, "no-deadline run serves all");
+    assert!(!gate.outcome.families.is_empty(), "mix must assign attacks");
+    for fam in &gate.outcome.families {
+        assert!(
+            fam.recall() >= 0.5,
+            "family {} recall {:.2}",
+            fam.family.name(),
+            fam.recall()
+        );
+    }
+    assert_eq!(gate.outcome.false_positives, 0);
+    println!(
+        "gate: {} plants x {} steps, {} requests served, {} families detected, wall {:.2}s",
+        gate.outcome.plants,
+        gate.outcome.steps,
+        total.served,
+        gate.outcome.families.len(),
+        gate.timing.wall_secs
+    );
+    if smoke {
+        server.shutdown();
+        println!("smoke pass");
+        return;
+    }
+
+    // ---------------- replay-identity at scale ------------------------
+    // 200 plants through the netserve path, twice: the deterministic
+    // outcome half must be byte-for-byte identical.
+    let fleet_cfg = FleetConfig {
+        plants: 200,
+        steps: 1_500,
+        seed: 7,
+        ..FleetConfig::default()
+    };
+    let first = run_against(&server, &fleet_cfg);
+    let second = run_against(&server, &fleet_cfg);
+    assert_eq!(
+        first.outcome, second.outcome,
+        "fleet outcome must replay identically"
+    );
+    first.print_summary();
+
+    // ---------------- deadline-pressure run ---------------------------
+    // Same fleet under a 250 µs scan budget: the serving tier must
+    // shed typed (DeadlineExceeded / Overloaded), never hang.
+    let pressure_cfg = FleetConfig {
+        plants: 200,
+        steps: 600,
+        seed: 7,
+        deadline: true,
+        period_us: 250.0,
+        ..FleetConfig::default()
+    };
+    let pressure = run_against(&server, &pressure_cfg);
+    println!(
+        "pressure: shed_rate {:.4} (shed {} overloaded {} of {})",
+        pressure.outcome.shed_rate(),
+        pressure.outcome.total().shed,
+        pressure.outcome.total().overloaded,
+        pressure.outcome.total().submitted
+    );
+    server.shutdown();
+
+    // ---------------- JSON report -------------------------------------
+    if let Some(path) = json_path {
+        let mut records = Vec::new();
+        for p in Priority::ALL.iter() {
+            let l = &first.timing.latency[p.band()];
+            if l.is_empty() {
+                continue;
+            }
+            records.push(BenchRecord {
+                name: format!("fleet/{}_detection_latency", p.name()),
+                mean_ns: l.mean_us() * 1e3,
+                median_ns: l.percentile_us(50.0) * 1e3,
+                ops_per_inference: DETECTOR_OPS,
+            });
+        }
+        let extras = vec![
+            ("fleet", first.to_json()),
+            ("pressure", pressure.to_json()),
+            ("replay_identical", Json::Bool(true)),
+        ];
+        write_bench_json(&path, "fleet", &records, extras)
+            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        println!("wrote {}", path.display());
+    }
+}

@@ -1,0 +1,782 @@
+//! The fleet traffic generator: multiplexes hundreds-to-thousands of
+//! independently seeded plant sims over the serving tier — in-process
+//! [`serve::Pool`](crate::serve::Pool) shards or the
+//! [`netserve`](crate::netserve) client — open-loop on arrivals,
+//! closed-loop on feedback.
+//!
+//! Per scan step, every plant: (1) steps its physics and pushes the
+//! ADC readings into its sliding window; (2) once warm, submits a
+//! Control-class detection request under the scan-cycle deadline
+//! bridge (`Deadline::for_scan`); (3) if mid-debounce ("suspicious"),
+//! submits an extra Defense-class confirmation request — this is how
+//! attack waves turn into load spikes; (4) periodically, Batch-class
+//! retraining-style sweeps ride along with no deadline.
+//!
+//! **Determinism.** Verdicts are applied in lock-step: the batch
+//! submitted at step `t` is resolved (blocking) before the sims
+//! advance past step `t + feedback_delay`, so the step at which a
+//! defense response lands is a pure function of the logits, never of
+//! wall-clock scheduling. Logits are bit-identical across runs (f32 arithmetic,
+//! no fast-math), so the whole
+//! [`FleetOutcome`](super::slo::FleetOutcome) replays exactly — even
+//! across the pool and netserve transports.
+//!
+//! **Defense ladder.** Each debounced detection advances the plant
+//! one rung: 1 → setpoint clamp, 2 → actuator lockout, ≥
+//! `escalate_rung` → operator escalation through
+//! [`hitl::OperatorConsole`](crate::hitl::OperatorConsole), whose
+//! intervention ends the campaign after `operator_delay` steps.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::scenario::{plant_seed, AttackMix, Scenario, ScenarioFamily};
+use super::slo::{
+    ClassCounts, FamilyOutcome, FleetOutcome, FleetReport, FleetTiming,
+    LatencyStats,
+};
+use crate::api::{EngineBackend, InferenceError, SharedBackend};
+use crate::defense::{SlidingWindow, FEATURES, WINDOW};
+use crate::engine::{Act, Layer, Model};
+use crate::hitl::OperatorConsole;
+use crate::msf::{Simulator, TB0_NOM, WD_SET};
+use crate::netserve::Client;
+use crate::netserve::NetOptions;
+use crate::plc::{HwProfile, ScanCycle};
+use crate::serve::{Deadline, Pool, PoolConfig, Priority, SubmitOptions, Ticket};
+
+/// Wd-deviation band of the fleet detector (t/min beyond which the
+/// window mean fires the attack logit). ~100σ above benign ADC+noise
+/// jitter of the windowed mean, far below every scenario's effect.
+pub const DETECT_WD_BAND: f64 = 0.05;
+
+/// Tb0-deviation band of the fleet detector (°C).
+pub const DETECT_TB0_BAND: f64 = 0.35;
+
+/// Steps past a campaign's end during which a debounced firing still
+/// counts as a detection (recovery transients), not a false positive.
+pub const DETECT_SLACK: u64 = 400;
+
+/// The fleet's hand-built two-logit detector: 400 → 4 (ReLU) → 2.
+///
+/// Layer 1 computes the window-mean deviation of each channel beyond
+/// a band: `h0/h1` fire when mean(Wd) is above/below
+/// `WD_SET ± DETECT_WD_BAND`, `h2/h3` when mean(Tb0) is beyond
+/// `TB0_NOM ± DETECT_TB0_BAND`. Layer 2 sums the excesses with a
+/// large gain against a fixed margin on the normal logit, so
+/// `logits[1] > logits[0]` ⇔ some channel mean left its band by more
+/// than 1/400. Same feature layout as
+/// [`defense::SlidingWindow`](crate::defense::SlidingWindow)
+/// (`[tb0 window | wd window]`).
+pub fn detector_model() -> Model {
+    let inv = 1.0f32 / WINDOW as f32;
+    let mut w1 = vec![0.0f32; 4 * FEATURES];
+    for i in 0..WINDOW {
+        // Row layout is [neurons][inputs].
+        w1[WINDOW + i] = inv; // h0: mean(wd) high
+        w1[FEATURES + WINDOW + i] = -inv; // h1: mean(wd) low
+        w1[2 * FEATURES + i] = inv; // h2: mean(tb0) high
+        w1[3 * FEATURES + i] = -inv; // h3: mean(tb0) low
+    }
+    let b1 = vec![
+        -((WD_SET + DETECT_WD_BAND) as f32),
+        (WD_SET - DETECT_WD_BAND) as f32,
+        -((TB0_NOM + DETECT_TB0_BAND) as f32),
+        (TB0_NOM - DETECT_TB0_BAND) as f32,
+    ];
+    let gain = 400.0f32;
+    let w2 = vec![0.0, 0.0, 0.0, 0.0, gain, gain, gain, gain];
+    let b2 = vec![1.0f32, 0.0];
+    Model::new(vec![
+        Layer::dense(w1, b1, FEATURES, Act::Relu),
+        Layer::dense(w2, b2, 4, Act::None),
+    ])
+}
+
+/// Fleet run parameters. Every field is an input to the deterministic
+/// [`FleetOutcome`](super::slo::FleetOutcome).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of independently seeded plants.
+    pub plants: usize,
+    /// Scan steps to drive per plant (0.1 s each).
+    pub steps: u64,
+    /// Fleet seed; per-plant seeds derive via
+    /// [`plant_seed`](super::scenario::plant_seed).
+    pub seed: u64,
+    /// Scenario mix assigned across the fleet by proportional
+    /// striping.
+    pub mix: AttackMix,
+    /// Sensor noise on the sims.
+    pub noise: bool,
+    /// Feed detector verdicts back as defense responses.
+    pub feedback: bool,
+    /// Attach scan-cycle deadlines (`Deadline::for_scan`) to
+    /// Control/Defense requests. Off ⇒ nothing sheds, which keeps
+    /// served-counts deterministic; on ⇒ realistic shed behavior.
+    pub deadline: bool,
+    /// Scan period in µs used for the deadline bridge (the real scan
+    /// is 100 ms; tighten this to put the serving tier under deadline
+    /// pressure).
+    pub period_us: f64,
+    /// Control-task cost per scan in µs (the scan budget left for ML
+    /// is `period − control_us`).
+    pub control_us: f64,
+    /// Lock-step pipeline depth: the step-`t` batch resolves once
+    /// `feedback_delay` further step batches have been queued behind
+    /// it.
+    pub feedback_delay: u64,
+    /// Consecutive positive verdicts required per debounced
+    /// detection.
+    pub debounce: u32,
+    /// Defense rung at which the plant escalates to the operator.
+    pub escalate_rung: u32,
+    /// Operator response delay in steps (escalation → intervention).
+    pub operator_delay: u64,
+    /// Submit a Batch-class sweep burst every this many steps
+    /// (0 disables sweeps).
+    pub sweep_every: u64,
+    /// Plants sampled per sweep burst.
+    pub sweep_batch: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            plants: 16,
+            steps: 2_000,
+            seed: 1,
+            mix: AttackMix::uniform(),
+            noise: true,
+            feedback: true,
+            deadline: false,
+            period_us: 100_000.0,
+            control_us: 2.0,
+            feedback_delay: 2,
+            debounce: 5,
+            escalate_rung: 3,
+            operator_delay: 50,
+            sweep_every: 100,
+            sweep_batch: 4,
+        }
+    }
+}
+
+/// Where the fleet's inference traffic goes.
+pub enum FleetTarget {
+    /// In-process `serve::Pool` shards; plant `i` routes to shard
+    /// `i % shards`.
+    Pools(Vec<Pool>),
+    /// A connected `netserve` client driving one named registry
+    /// model over the pipelined wire protocol.
+    Net {
+        /// Connected client (use `Client::connect_with` + a
+        /// `RetryPolicy` to survive reconnects).
+        client: Client,
+        /// Registry model name to drive.
+        model: String,
+    },
+}
+
+impl FleetTarget {
+    /// Convenience in-process target: `shards` pools × `workers`
+    /// workers each, all over one shared fleet-detector backend.
+    pub fn pools(shards: usize, workers: usize, max_batch: usize) -> FleetTarget {
+        let backend: SharedBackend = Arc::new(EngineBackend::new(detector_model()));
+        let pools = (0..shards.max(1))
+            .map(|_| {
+                Pool::new(
+                    Arc::clone(&backend),
+                    PoolConfig { workers, max_batch },
+                )
+            })
+            .collect();
+        FleetTarget::Pools(pools)
+    }
+}
+
+/// Unified submit/resolve over the two transports, keyed by request
+/// id (pool path: a private counter over `Ticket`s; net path: the
+/// wire id).
+enum Lane {
+    Pools {
+        pools: Vec<Pool>,
+        tickets: HashMap<u64, Ticket>,
+        next_key: u64,
+    },
+    Net {
+        client: Client,
+        model: String,
+        /// Replies received while waiting for a different id.
+        done: HashMap<u64, Result<Vec<f32>, InferenceError>>,
+        /// Set when the transport failed terminally; all later
+        /// resolves short-circuit instead of re-timing-out.
+        dead: Option<String>,
+    },
+}
+
+impl Lane {
+    fn new(target: FleetTarget) -> Lane {
+        match target {
+            FleetTarget::Pools(pools) => Lane::Pools {
+                pools,
+                tickets: HashMap::new(),
+                next_key: 0,
+            },
+            FleetTarget::Net { mut client, model } => {
+                // A stuck server must surface as a typed error, not a
+                // hung fleet: bound every blocking recv.
+                let _ = client.set_timeout(Some(Duration::from_secs(60)));
+                Lane::Net {
+                    client,
+                    model,
+                    done: HashMap::new(),
+                    dead: None,
+                }
+            }
+        }
+    }
+
+    fn submit(
+        &mut self,
+        plant: usize,
+        x: &[f32],
+        priority: Priority,
+        budget: Option<(Deadline, f64)>,
+    ) -> Result<u64, InferenceError> {
+        match self {
+            Lane::Pools {
+                pools,
+                tickets,
+                next_key,
+            } => {
+                let pool = &pools[plant % pools.len()];
+                let mut opts = SubmitOptions::new().priority(priority);
+                if let Some((deadline, _)) = budget {
+                    opts = opts.deadline(deadline);
+                }
+                let ticket = pool.submit_with(x, opts)?;
+                let key = *next_key;
+                *next_key += 1;
+                tickets.insert(key, ticket);
+                Ok(key)
+            }
+            Lane::Net { client, model, .. } => {
+                let mut opts = NetOptions::new().priority(priority);
+                if let Some((_, us)) = budget {
+                    opts = opts.deadline_us(us);
+                }
+                client.submit(model, x, &opts).map_err(|e| {
+                    InferenceError::BackendUnavailable {
+                        backend: "netserve".to_string(),
+                        reason: format!("submit failed: {e}"),
+                    }
+                })
+            }
+        }
+    }
+
+    fn resolve(&mut self, key: u64) -> Result<Vec<f32>, InferenceError> {
+        match self {
+            Lane::Pools { tickets, .. } => match tickets.remove(&key) {
+                Some(t) => t.wait(),
+                None => Err(InferenceError::BackendUnavailable {
+                    backend: "fleet".to_string(),
+                    reason: format!("unknown ticket {key}"),
+                }),
+            },
+            Lane::Net {
+                client, done, dead, ..
+            } => {
+                if let Some(r) = done.remove(&key) {
+                    return r;
+                }
+                if let Some(reason) = dead {
+                    return Err(InferenceError::BackendUnavailable {
+                        backend: "netserve".to_string(),
+                        reason: reason.clone(),
+                    });
+                }
+                loop {
+                    match client.recv_reconnecting() {
+                        Ok(reply) => {
+                            let res =
+                                reply.result.map_err(|e| e.to_error());
+                            if reply.id == key {
+                                return res;
+                            }
+                            done.insert(reply.id, res);
+                        }
+                        Err(InferenceError::ConnectionLost {
+                            lost_ids,
+                            reason,
+                        }) => {
+                            // Distribute the loss over the individual
+                            // requests so each resolves typed.
+                            for id in &lost_ids {
+                                done.insert(
+                                    *id,
+                                    Err(InferenceError::ConnectionLost {
+                                        lost_ids: vec![*id],
+                                        reason: reason.clone(),
+                                    }),
+                                );
+                            }
+                            if let Some(r) = done.remove(&key) {
+                                return r;
+                            }
+                            return Err(InferenceError::ConnectionLost {
+                                lost_ids: vec![key],
+                                reason,
+                            });
+                        }
+                        Err(e) => {
+                            *dead = Some(e.to_string());
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `(served, shed, batches)` summed over in-process pools (zeros
+    /// on the net path — those counters live server-side).
+    fn pool_counters(&self) -> (u64, u64, u64) {
+        match self {
+            Lane::Pools { pools, .. } => pools.iter().fold(
+                (0, 0, 0),
+                |(s, sh, b), p| {
+                    (s + p.served(), sh + p.shed(), b + p.batches())
+                },
+            ),
+            Lane::Net { .. } => (0, 0, 0),
+        }
+    }
+}
+
+/// Classify a typed resolution error into the shed/overloaded/failed
+/// accounting buckets.
+fn account_error(c: &mut ClassCounts, e: &InferenceError) {
+    match e {
+        InferenceError::DeadlineExceeded { .. } => c.shed += 1,
+        InferenceError::Overloaded { .. } => c.overloaded += 1,
+        _ => c.failed += 1,
+    }
+}
+
+struct PlantRt {
+    sim: Simulator,
+    window: SlidingWindow,
+    scenario: Option<Scenario>,
+    consecutive: u32,
+    rung: u32,
+    escalated: bool,
+    first_detect: Option<u64>,
+    false_positives: u64,
+    intervene_at: Option<u64>,
+    dev_accum: f64,
+    dev_samples: u64,
+}
+
+struct PendingMeta {
+    plant: usize,
+    class: Priority,
+    detect: bool,
+    submitted: Instant,
+}
+
+struct FleetRun<'a> {
+    cfg: &'a FleetConfig,
+    lane: Lane,
+    cycle: ScanCycle,
+    plants: Vec<PlantRt>,
+    console: OperatorConsole,
+    counts: [ClassCounts; 3],
+    latency: [LatencyStats; 3],
+    pending: HashMap<u64, PendingMeta>,
+    ring: VecDeque<Vec<u64>>,
+    features: Vec<f32>,
+    clamps: u64,
+    lockouts: u64,
+}
+
+impl FleetRun<'_> {
+    fn submit_one(&mut self, plant: usize, class: Priority, detect: bool) {
+        let budget = if self.cfg.deadline && class != Priority::Batch {
+            Some((
+                Deadline::for_scan(&self.cycle, self.cfg.control_us),
+                self.cycle.ml_budget_us(self.cfg.control_us),
+            ))
+        } else {
+            None
+        };
+        self.counts[class.band()].submitted += 1;
+        match self.lane.submit(plant, &self.features, class, budget) {
+            Ok(key) => {
+                self.pending.insert(
+                    key,
+                    PendingMeta {
+                        plant,
+                        class,
+                        detect,
+                        submitted: Instant::now(),
+                    },
+                );
+                self.ring
+                    .back_mut()
+                    .expect("ring slot pushed per step")
+                    .push(key);
+            }
+            Err(e) => account_error(&mut self.counts[class.band()], &e),
+        }
+    }
+
+    fn resolve_batch(&mut self, keys: Vec<u64>, now_step: u64) {
+        for key in keys {
+            let meta = match self.pending.remove(&key) {
+                Some(m) => m,
+                None => continue,
+            };
+            let result = self.lane.resolve(key);
+            let band = meta.class.band();
+            match &result {
+                Ok(_) => {
+                    self.counts[band].served += 1;
+                    self.latency[band]
+                        .record(meta.submitted.elapsed().as_secs_f64() * 1e6);
+                }
+                Err(e) => account_error(&mut self.counts[band], e),
+            }
+            if meta.detect {
+                self.apply_verdict(meta.plant, &result, now_step);
+            }
+        }
+    }
+
+    fn apply_verdict(
+        &mut self,
+        idx: usize,
+        result: &Result<Vec<f32>, InferenceError>,
+        now_step: u64,
+    ) {
+        let positive = match result {
+            Ok(logits) => logits.len() >= 2 && logits[1] > logits[0],
+            // A shed/errored request is a missed observation, not a
+            // verdict: the debounce counter holds.
+            Err(_) => return,
+        };
+        let p = &mut self.plants[idx];
+        if !positive {
+            p.consecutive = 0;
+            return;
+        }
+        p.consecutive += 1;
+        if p.consecutive % self.cfg.debounce.max(1) != 0 {
+            return;
+        }
+        // A debounced detection event.
+        let (in_window, before_window) = match &p.scenario {
+            Some(s) => (
+                now_step >= s.start_step
+                    && now_step < s.end_step.saturating_add(DETECT_SLACK),
+                now_step < s.start_step,
+            ),
+            None => (false, true),
+        };
+        if in_window {
+            if p.first_detect.is_none() {
+                p.first_detect = Some(now_step);
+            }
+        } else if before_window {
+            p.false_positives += 1;
+        }
+        if !self.cfg.feedback {
+            return;
+        }
+        // Escalation ladder: every debounced event advances one rung.
+        p.rung += 1;
+        if p.rung == 1 {
+            p.sim.defense.clamp_setpoint = true;
+            self.clamps += 1;
+        } else if p.rung == 2 {
+            p.sim.defense.lockout_actuators = true;
+            self.lockouts += 1;
+        }
+        if p.rung >= self.cfg.escalate_rung && !p.escalated {
+            p.escalated = true;
+            p.intervene_at = Some(self.console.escalate(idx, now_step));
+        }
+    }
+
+    fn step(&mut self, t: u64) {
+        // Operator interventions due this step end the campaign: the
+        // operator takes the plant to manual and clears the intruder.
+        for p in self.plants.iter_mut() {
+            if p.intervene_at == Some(t) {
+                p.intervene_at = None;
+                for a in p.sim.attacks.iter_mut() {
+                    a.end_step = a.end_step.min(t);
+                }
+            }
+        }
+        self.ring.push_back(Vec::new());
+        for i in 0..self.plants.len() {
+            let r = self.plants[i].sim.step();
+            if t >= WINDOW as u64 {
+                let dev = (self.plants[i].sim.state.wd - WD_SET).abs();
+                self.plants[i].dev_accum += dev;
+                self.plants[i].dev_samples += 1;
+            }
+            let warm = self.plants[i].window.push(r.tb0_adc, r.wd_adc);
+            if !warm {
+                continue;
+            }
+            self.plants[i].window.fill_features(&mut self.features);
+            self.submit_one(i, Priority::Control, true);
+            if self.plants[i].consecutive > 0 {
+                // Suspicious plants double-check at Defense class —
+                // attack waves become load spikes.
+                self.submit_one(i, Priority::Defense, false);
+            }
+        }
+        // Batch-class retraining-style sweeps ride along periodically.
+        if self.cfg.sweep_every > 0
+            && t > 0
+            && t % self.cfg.sweep_every == 0
+            && !self.plants.is_empty()
+        {
+            for k in 0..self.cfg.sweep_batch {
+                let i = (t as usize + k) % self.plants.len();
+                if !self.plants[i].window.ready() {
+                    continue;
+                }
+                self.plants[i].window.fill_features(&mut self.features);
+                self.submit_one(i, Priority::Batch, false);
+            }
+        }
+    }
+}
+
+/// Drive a full fleet run against `target` and build the report.
+///
+/// Every submitted request is resolved — logits or typed error —
+/// before the report is built; nothing is left in flight. The
+/// returned [`FleetOutcome`](super::slo::FleetOutcome) is a pure
+/// function of `cfg` (see the module docs for the lock-step
+/// determinism argument).
+pub fn run_fleet(cfg: &FleetConfig, target: FleetTarget) -> FleetReport {
+    let t0 = Instant::now();
+    let mut run = FleetRun {
+        cfg,
+        lane: Lane::new(target),
+        cycle: ScanCycle::new(HwProfile::beaglebone(), cfg.period_us),
+        plants: (0..cfg.plants)
+            .map(|i| {
+                let seed = plant_seed(cfg.seed, i);
+                let scenario = cfg.mix.assign(i, cfg.plants).map(|fam| {
+                    Scenario::generate(fam, seed ^ 0x00a7_7ac4, cfg.steps)
+                });
+                let attacks = scenario
+                    .as_ref()
+                    .map(|s| s.attacks.clone())
+                    .unwrap_or_default();
+                PlantRt {
+                    sim: Simulator::new(seed, cfg.noise, attacks),
+                    window: SlidingWindow::new(),
+                    scenario,
+                    consecutive: 0,
+                    rung: 0,
+                    escalated: false,
+                    first_detect: None,
+                    false_positives: 0,
+                    intervene_at: None,
+                    dev_accum: 0.0,
+                    dev_samples: 0,
+                }
+            })
+            .collect(),
+        console: OperatorConsole::new(cfg.operator_delay),
+        counts: [ClassCounts::default(); 3],
+        latency: Default::default(),
+        pending: HashMap::new(),
+        ring: VecDeque::new(),
+        features: vec![0.0f32; FEATURES],
+        clamps: 0,
+        lockouts: 0,
+    };
+
+    for t in 0..cfg.steps {
+        // Lock-step feedback: resolve the batch from `feedback_delay`
+        // steps back before stepping the sims.
+        while run.ring.len() > cfg.feedback_delay as usize {
+            let batch = run.ring.pop_front().expect("ring non-empty");
+            run.resolve_batch(batch, t);
+        }
+        run.step(t);
+    }
+    // Drain everything still in flight.
+    while let Some(batch) = run.ring.pop_front() {
+        run.resolve_batch(batch, cfg.steps);
+    }
+
+    let mut families = Vec::new();
+    for fam in ScenarioFamily::ALL {
+        let mut fo = FamilyOutcome {
+            family: fam,
+            plants: 0,
+            detected: 0,
+            detect_steps: Vec::new(),
+        };
+        for p in &run.plants {
+            let s = match &p.scenario {
+                Some(s) if s.family == fam => s,
+                _ => continue,
+            };
+            fo.plants += 1;
+            if let Some(d) = p.first_detect {
+                fo.detected += 1;
+                fo.detect_steps.push(d.saturating_sub(s.start_step));
+            }
+        }
+        fo.detect_steps.sort_unstable();
+        if fo.plants > 0 {
+            families.push(fo);
+        }
+    }
+
+    let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut dev_sum = 0.0;
+    let mut dev_n: u64 = 0;
+    let mut false_positives: u64 = 0;
+    for p in &run.plants {
+        for bits in [
+            p.sim.state.tb0.to_bits(),
+            p.sim.state.tbot.to_bits(),
+            p.sim.state.wd.to_bits(),
+        ] {
+            for byte in bits.to_le_bytes() {
+                digest ^= byte as u64;
+                digest = digest.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        dev_sum += p.dev_accum;
+        dev_n += p.dev_samples;
+        false_positives += p.false_positives;
+    }
+
+    let (pool_served, pool_shed, pool_batches) = run.lane.pool_counters();
+    FleetReport {
+        outcome: FleetOutcome {
+            plants: cfg.plants as u64,
+            steps: cfg.steps,
+            seed: cfg.seed,
+            feedback: cfg.feedback,
+            per_class: run.counts,
+            families,
+            false_positives,
+            clamps: run.clamps,
+            lockouts: run.lockouts,
+            escalations: run.console.escalations.len() as u64,
+            mean_true_wd_dev: if dev_n == 0 {
+                0.0
+            } else {
+                dev_sum / dev_n as f64
+            },
+            trajectory_digest: digest,
+        },
+        timing: FleetTiming {
+            wall_secs: t0.elapsed().as_secs_f64(),
+            latency: run.latency,
+            pool_served,
+            pool_shed,
+            pool_batches,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Backend, Session as _};
+
+    fn infer(model: &Model, x: &[f32]) -> Vec<f32> {
+        let mut session = EngineBackend::new(model.clone()).session().unwrap();
+        session.infer(x).unwrap()
+    }
+
+    #[test]
+    fn detector_separates_nominal_from_deviated_windows() {
+        let model = detector_model();
+        let mut x = vec![0.0f32; FEATURES];
+        for i in 0..WINDOW {
+            x[i] = TB0_NOM as f32;
+            x[WINDOW + i] = WD_SET as f32;
+        }
+        let nominal = infer(&model, &x);
+        assert!(
+            nominal[0] > nominal[1],
+            "nominal window must read normal: {nominal:?}"
+        );
+        // Small jitter stays normal.
+        let mut jit = x.clone();
+        for (i, v) in jit.iter_mut().enumerate() {
+            *v += if i % 2 == 0 { 0.002 } else { -0.002 };
+        }
+        let jittered = infer(&model, &jit);
+        assert!(jittered[0] > jittered[1], "jitter fires: {jittered:?}");
+        // Wd mean shifted past the band fires.
+        let mut low = x.clone();
+        for v in low.iter_mut().skip(WINDOW) {
+            *v -= 0.1;
+        }
+        let fired = infer(&model, &low);
+        assert!(fired[1] > fired[0], "wd shift must fire: {fired:?}");
+        // Tb0 mean shifted past its band fires too.
+        let mut hot = x;
+        for v in hot.iter_mut().take(WINDOW) {
+            *v += 1.0;
+        }
+        let fired = infer(&model, &hot);
+        assert!(fired[1] > fired[0], "tb0 shift must fire: {fired:?}");
+    }
+
+    #[test]
+    fn pool_fleet_runs_and_replays() {
+        let cfg = FleetConfig {
+            plants: 6,
+            steps: 900,
+            seed: 11,
+            sweep_every: 50,
+            ..FleetConfig::default()
+        };
+        let a = run_fleet(&cfg, FleetTarget::pools(2, 2, 8));
+        let b = run_fleet(&cfg, FleetTarget::pools(1, 3, 4));
+        assert_eq!(a.outcome.unresolved(), 0);
+        assert_eq!(
+            a.outcome, b.outcome,
+            "outcome must not depend on pool topology"
+        );
+        assert!(a.outcome.class(Priority::Control).served > 0);
+        assert!(a.outcome.class(Priority::Batch).served > 0);
+        assert!(a.timing.pool_served > 0);
+    }
+
+    #[test]
+    fn benign_fleet_has_no_false_positives() {
+        let cfg = FleetConfig {
+            plants: 4,
+            steps: 800,
+            seed: 3,
+            mix: AttackMix::benign(),
+            ..FleetConfig::default()
+        };
+        let r = run_fleet(&cfg, FleetTarget::pools(1, 2, 8));
+        assert_eq!(r.outcome.false_positives, 0);
+        assert_eq!(r.outcome.clamps, 0);
+        assert_eq!(r.outcome.escalations, 0);
+        assert!(r.outcome.families.is_empty());
+        assert_eq!(r.outcome.unresolved(), 0);
+    }
+}

@@ -1,0 +1,41 @@
+//! Fleet-scale closed-loop simulation: hundreds-to-thousands of
+//! independently seeded `msf` plant twins driving the serving tier
+//! concurrently, with detector verdicts fed back into the sims as
+//! defense responses (ROADMAP item 4 — the end-to-end "heavy
+//! traffic, many scenarios" proof).
+//!
+//! Three parts:
+//!
+//! - [`scenario`] — the declarative attack corpus: PLC-taxonomy
+//!   families (sensor spoofing, actuator manipulation, stealthy
+//!   ramp, replay, multi-stage campaigns) compiled onto the seven
+//!   `msf::attacks` primitives with deterministic per-plant seeding.
+//! - [`driver`] — the traffic generator: every plant's scan readings
+//!   become Control-class detection requests under scan-cycle
+//!   deadlines (plus Defense-class confirmations from suspicious
+//!   plants and Batch-class sweeps), multiplexed over in-process
+//!   [`serve::Pool`](crate::serve::Pool)s or the
+//!   [`netserve`](crate::netserve) client; verdicts feed back as a
+//!   setpoint-clamp → actuator-lockout → operator-escalation ladder.
+//! - [`slo`] — fleet-level SLOs: per-class deadline hit rate and
+//!   latency percentiles, shed rate, per-family recall and
+//!   time-to-detect, split into a deterministic
+//!   [`FleetOutcome`](slo::FleetOutcome) (replay-comparable with
+//!   `==`) and wall-clock [`FleetTiming`](slo::FleetTiming).
+//!
+//! The determinism contract: a [`FleetOutcome`] is a pure function
+//! of the [`FleetConfig`] — identical seeds produce identical
+//! outcomes across runs, transports, and build modes. `tests/fleet.rs`
+//! and `benches/fleet.rs` pin this.
+#![deny(missing_docs)]
+
+pub mod driver;
+pub mod scenario;
+pub mod slo;
+
+pub use driver::{detector_model, run_fleet, FleetConfig, FleetTarget};
+pub use scenario::{plant_seed, AttackMix, Scenario, ScenarioFamily};
+pub use slo::{
+    ClassCounts, FamilyOutcome, FleetOutcome, FleetReport, FleetTiming,
+    LatencyStats,
+};

@@ -1,0 +1,426 @@
+//! Declarative attack-scenario corpus: the taxonomy families from the
+//! PLC-security literature (*SoK: Security of Programmable Logic
+//! Controllers*; the ICS cybersecurity surveys) compiled onto the
+//! seven `msf::attacks` primitives, with deterministic per-plant
+//! parameter draws so a fleet run replays exactly from its seed.
+//!
+//! A [`Scenario`] is a *campaign*: one or more timed [`Attack`]
+//! windows generated from a family template plus a seeded RNG. The
+//! same `(family, seed, horizon)` triple always generates the same
+//! scenario — determinism is the contract the replay-identity tests
+//! and the fleet bench rely on.
+
+use crate::msf::attacks::{Attack, AttackFamily};
+use crate::util::rng::SplitMix64;
+
+/// Earliest step any scenario may begin: the detector's sliding
+/// window (200 samples) plus settling margin, so every plant has a
+/// warm window before its campaign starts.
+pub const EARLIEST_ATTACK_STEP: u64 = crate::defense::WINDOW as u64 + 60;
+
+/// Minimum campaign duration in scan steps (40 s at the 10 Hz scan
+/// rate) — short enough to fit small test horizons, long enough for
+/// the windowed detector to react.
+pub const MIN_SCENARIO_STEPS: u64 = 400;
+
+/// Taxonomy family of one plant's campaign. Families are *shapes*;
+/// each compiles onto the low-level `msf::attacks` primitives with
+/// seeded magnitudes and phase layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScenarioFamily {
+    /// False data injection on a sensor channel (Tb0 bias or Wd
+    /// scaling): the controller is fed lies and drives the real
+    /// plant off its operating point.
+    SensorSpoof,
+    /// Direct actuator manipulation — steam-valve bias, recycle-flow
+    /// reduction, or a tampered production setpoint.
+    ActuatorManipulation,
+    /// Slowly escalating recycle-flow reduction in eight magnitude
+    /// stairs — each stair small, the sum large.
+    StealthyRamp,
+    /// Stale-operating-point replay: an actuator campaign masked by a
+    /// sensor splice that replays the benign Wd level. The splice
+    /// discontinuity (the lagged Wd sensor cannot be re-scaled
+    /// seamlessly) is the classic detection opportunity.
+    Replay,
+    /// Multi-stage campaign: sub-threshold sensor recon, then an
+    /// actuator foothold, then a combined strike.
+    MultiStage,
+}
+
+impl ScenarioFamily {
+    /// Every family, in a fixed order (report/striping order).
+    pub const ALL: [ScenarioFamily; 5] = [
+        ScenarioFamily::SensorSpoof,
+        ScenarioFamily::ActuatorManipulation,
+        ScenarioFamily::StealthyRamp,
+        ScenarioFamily::Replay,
+        ScenarioFamily::MultiStage,
+    ];
+
+    /// Canonical name (stable: used in reports, JSON, and CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioFamily::SensorSpoof => "sensor_spoof",
+            ScenarioFamily::ActuatorManipulation => "actuator_manipulation",
+            ScenarioFamily::StealthyRamp => "stealthy_ramp",
+            ScenarioFamily::Replay => "replay",
+            ScenarioFamily::MultiStage => "multi_stage",
+        }
+    }
+
+    /// Parse a canonical name or CLI alias (`spoof`, `actuator`,
+    /// `ramp`, `multistage`).
+    pub fn from_name(name: &str) -> Option<ScenarioFamily> {
+        match name {
+            "sensor_spoof" | "spoof" => Some(ScenarioFamily::SensorSpoof),
+            "actuator_manipulation" | "actuator" => {
+                Some(ScenarioFamily::ActuatorManipulation)
+            }
+            "stealthy_ramp" | "ramp" => Some(ScenarioFamily::StealthyRamp),
+            "replay" => Some(ScenarioFamily::Replay),
+            "multi_stage" | "multistage" => Some(ScenarioFamily::MultiStage),
+            _ => None,
+        }
+    }
+}
+
+/// One plant's campaign: the family it was generated from, the
+/// compiled attack windows, and the overall campaign window
+/// (`[start_step, end_step)`) used for recall/time-to-detect
+/// accounting. Multi-phase campaigns have gaps inside the window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Taxonomy family this campaign was generated from.
+    pub family: ScenarioFamily,
+    /// Compiled attack windows (what `msf::Simulator` executes).
+    pub attacks: Vec<Attack>,
+    /// First step of the campaign window.
+    pub start_step: u64,
+    /// One past the last step of the campaign window.
+    pub end_step: u64,
+}
+
+impl Scenario {
+    /// Generate the campaign for `family` over a run of `horizon`
+    /// steps. Deterministic in `(family, seed, horizon)`.
+    pub fn generate(family: ScenarioFamily, seed: u64, horizon: u64) -> Scenario {
+        let mut rng = SplitMix64::new(seed);
+        let h = horizon.max(EARLIEST_ATTACK_STEP + MIN_SCENARIO_STEPS + 200);
+        let start = EARLIEST_ATTACK_STEP + rng.below(h / 6 + 1);
+        let end = start + (h.saturating_sub(start) * 3 / 4).max(MIN_SCENARIO_STEPS);
+        let attacks = match family {
+            ScenarioFamily::SensorSpoof => {
+                if rng.below(2) == 0 {
+                    vec![Attack::new(
+                        AttackFamily::Tb0Fdi,
+                        rng.uniform(1.5, 3.5),
+                        start,
+                        end,
+                    )]
+                } else {
+                    vec![Attack::new(
+                        AttackFamily::WdFdi,
+                        rng.uniform(0.08, 0.2),
+                        start,
+                        end,
+                    )]
+                }
+            }
+            ScenarioFamily::ActuatorManipulation => {
+                let a = match rng.below(4) {
+                    0 => Attack::new(
+                        AttackFamily::SteamBias,
+                        rng.uniform(0.25, 0.45),
+                        start,
+                        end,
+                    ),
+                    1 => Attack::new(
+                        AttackFamily::RecycleReduction,
+                        rng.uniform(0.15, 0.3),
+                        start,
+                        end,
+                    ),
+                    2 => Attack::new(
+                        AttackFamily::SetpointTamper,
+                        rng.uniform(0.8, 1.6),
+                        start,
+                        end,
+                    ),
+                    _ => Attack::new(
+                        AttackFamily::Combined,
+                        rng.uniform(0.35, 0.55),
+                        start,
+                        end,
+                    ),
+                };
+                vec![a]
+            }
+            ScenarioFamily::StealthyRamp => {
+                let m_max = rng.uniform(0.2, 0.35);
+                let segments: u64 = 8;
+                let span = (end - start) / segments;
+                (0..segments)
+                    .map(|i| {
+                        let s0 = start + i * span;
+                        let s1 = if i == segments - 1 {
+                            end
+                        } else {
+                            start + (i + 1) * span
+                        };
+                        Attack::new(
+                            AttackFamily::RecycleReduction,
+                            m_max * (i + 1) as f64 / segments as f64,
+                            s0,
+                            s1,
+                        )
+                    })
+                    .collect()
+            }
+            ScenarioFamily::Replay => {
+                let cut = rng.uniform(0.2, 0.35);
+                // Sensor splice replaying the benign Wd level: scale
+                // the reading up so the steady-state spoofed value
+                // matches the pre-attack operating point. `quality`
+                // models how well the replayed segment is aligned.
+                let quality = rng.uniform(0.85, 1.0);
+                let wd_mask = 1.0 - quality / (1.0 - cut);
+                vec![
+                    Attack::new(AttackFamily::RecycleReduction, cut, start, end),
+                    Attack::new(AttackFamily::WdFdi, wd_mask, start, end),
+                ]
+            }
+            ScenarioFamily::MultiStage => {
+                let dur = end - start;
+                let p1_end = start + dur / 5;
+                let p2_start = p1_end + dur / 10;
+                let p2_end = p2_start + dur / 4;
+                let p3_start = p2_end + dur / 10;
+                vec![
+                    // Phase 1: sub-threshold Wd-sensor recon probe
+                    // (below the detector's deviation band).
+                    Attack::new(
+                        AttackFamily::WdFdi,
+                        rng.uniform(0.0008, 0.0018),
+                        start,
+                        p1_end,
+                    ),
+                    // Phase 2: actuator foothold.
+                    Attack::new(
+                        AttackFamily::SteamBias,
+                        rng.uniform(0.2, 0.35),
+                        p2_start,
+                        p2_end,
+                    ),
+                    // Phase 3: combined strike to the end.
+                    Attack::new(
+                        AttackFamily::Combined,
+                        rng.uniform(0.4, 0.6),
+                        p3_start,
+                        end,
+                    ),
+                ]
+            }
+        };
+        Scenario {
+            family,
+            attacks,
+            start_step: start,
+            end_step: end,
+        }
+    }
+
+    /// Whether any attack window covers `step` (multi-phase campaigns
+    /// have inactive gaps inside `[start_step, end_step)`).
+    pub fn active(&self, step: u64) -> bool {
+        self.attacks.iter().any(|a| a.active(step))
+    }
+}
+
+/// Weighted mix of scenario families across a fleet, plus a benign
+/// share. Plants are assigned families by deterministic proportional
+/// striping (no RNG), so the same mix over the same fleet size always
+/// yields the same per-plant assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttackMix {
+    entries: Vec<(ScenarioFamily, f64)>,
+    benign: f64,
+}
+
+impl AttackMix {
+    /// Every family weighted 1.0, plus one benign share.
+    pub fn uniform() -> AttackMix {
+        AttackMix {
+            entries: ScenarioFamily::ALL.iter().map(|f| (*f, 1.0)).collect(),
+            benign: 1.0,
+        }
+    }
+
+    /// All plants benign (control-run mix).
+    pub fn benign() -> AttackMix {
+        AttackMix {
+            entries: Vec::new(),
+            benign: 1.0,
+        }
+    }
+
+    /// Parse a mix spec: comma-separated `family[=weight]` terms plus
+    /// an optional `benign[=weight]` term; a bare name means weight
+    /// 1. `"uniform"` (or empty) is [`AttackMix::uniform`]. Example:
+    /// `"spoof=2,ramp,benign=1"`.
+    pub fn parse(spec: &str) -> Result<AttackMix, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "uniform" {
+            return Ok(AttackMix::uniform());
+        }
+        let mut entries = Vec::new();
+        let mut benign = 0.0;
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (name, w) = match part.split_once('=') {
+                Some((n, w)) => {
+                    let w: f64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad weight in {part:?}"))?;
+                    (n.trim(), w)
+                }
+                None => (part.trim(), 1.0),
+            };
+            if w < 0.0 || !w.is_finite() {
+                return Err(format!("weight for {name:?} must be finite and >= 0"));
+            }
+            if name.eq_ignore_ascii_case("benign") {
+                benign += w;
+                continue;
+            }
+            let f = ScenarioFamily::from_name(name)
+                .ok_or_else(|| format!("unknown scenario family {name:?}"))?;
+            entries.push((f, w));
+        }
+        if entries.iter().map(|(_, w)| *w).sum::<f64>() + benign <= 0.0 {
+            return Err("attack mix has zero total weight".to_string());
+        }
+        Ok(AttackMix { entries, benign })
+    }
+
+    /// Total weight (families + benign share).
+    pub fn total_weight(&self) -> f64 {
+        self.entries.iter().map(|(_, w)| *w).sum::<f64>() + self.benign
+    }
+
+    /// Deterministic proportional assignment: plant `i` of `total`
+    /// maps to the family whose cumulative-weight bucket contains the
+    /// stripe coordinate `(i + 0.5) / total`. Returns `None` for the
+    /// benign tail.
+    pub fn assign(&self, plant: usize, total: usize) -> Option<ScenarioFamily> {
+        let w_total = self.total_weight();
+        if w_total <= 0.0 || total == 0 {
+            return None;
+        }
+        let x = (plant as f64 + 0.5) / total as f64 * w_total;
+        let mut acc = 0.0;
+        for (f, w) in &self.entries {
+            acc += *w;
+            if x < acc {
+                return Some(*f);
+            }
+        }
+        None
+    }
+}
+
+/// Per-plant seed derivation: statistically independent streams for
+/// each plant of a fleet, deterministic in `(fleet_seed, plant)`.
+pub fn plant_seed(fleet_seed: u64, plant: usize) -> u64 {
+    let mixed =
+        fleet_seed ^ (plant as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    SplitMix64::new(mixed).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_names_round_trip_with_aliases() {
+        for f in ScenarioFamily::ALL {
+            assert_eq!(ScenarioFamily::from_name(f.name()), Some(f));
+        }
+        assert_eq!(
+            ScenarioFamily::from_name("spoof"),
+            Some(ScenarioFamily::SensorSpoof)
+        );
+        assert_eq!(
+            ScenarioFamily::from_name("multistage"),
+            Some(ScenarioFamily::MultiStage)
+        );
+        assert_eq!(ScenarioFamily::from_name("zeroday"), None);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_well_formed() {
+        for f in ScenarioFamily::ALL {
+            let a = Scenario::generate(f, 1234, 3000);
+            let b = Scenario::generate(f, 1234, 3000);
+            assert_eq!(a, b, "{f:?} must replay from its seed");
+            let c = Scenario::generate(f, 1235, 3000);
+            assert_ne!(a, c, "{f:?} should vary with the seed");
+            assert!(a.start_step >= EARLIEST_ATTACK_STEP);
+            assert!(a.end_step >= a.start_step + MIN_SCENARIO_STEPS);
+            assert!(!a.attacks.is_empty());
+            for atk in &a.attacks {
+                assert!(atk.start_step >= a.start_step);
+                assert!(atk.end_step <= a.end_step);
+                assert!(atk.magnitude.is_finite());
+            }
+            assert!(a.active(a.start_step), "{f:?} starts active");
+        }
+    }
+
+    #[test]
+    fn stealthy_ramp_magnitudes_ascend() {
+        let s = Scenario::generate(ScenarioFamily::StealthyRamp, 7, 4000);
+        assert_eq!(s.attacks.len(), 8);
+        for w in s.attacks.windows(2) {
+            assert!(w[1].magnitude > w[0].magnitude);
+            assert_eq!(w[0].end_step, w[1].start_step, "segments abut");
+        }
+        assert_eq!(s.attacks.last().unwrap().end_step, s.end_step);
+    }
+
+    #[test]
+    fn mix_parse_and_proportional_striping() {
+        let mix = AttackMix::parse("spoof=2,ramp=1,benign=1").unwrap();
+        let total = 400;
+        let mut spoof = 0;
+        let mut ramp = 0;
+        let mut benign = 0;
+        for i in 0..total {
+            match mix.assign(i, total) {
+                Some(ScenarioFamily::SensorSpoof) => spoof += 1,
+                Some(ScenarioFamily::StealthyRamp) => ramp += 1,
+                None => benign += 1,
+                other => panic!("unexpected assignment {other:?}"),
+            }
+        }
+        assert_eq!(spoof, 200);
+        assert_eq!(ramp, 100);
+        assert_eq!(benign, 100);
+        assert!(AttackMix::parse("nonsense=1").is_err());
+        assert!(AttackMix::parse("spoof=-1").is_err());
+        assert!(AttackMix::parse("benign=0").is_err());
+        assert_eq!(AttackMix::parse("uniform").unwrap(), AttackMix::uniform());
+        let all_benign = AttackMix::parse("benign=3").unwrap();
+        assert_eq!(all_benign.assign(0, 10), None);
+    }
+
+    #[test]
+    fn plant_seeds_are_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..1000 {
+            assert!(seen.insert(plant_seed(42, i)), "plant {i} seed collides");
+        }
+        assert_ne!(plant_seed(1, 0), plant_seed(2, 0));
+        assert_eq!(plant_seed(1, 5), plant_seed(1, 5));
+    }
+}

@@ -1,0 +1,419 @@
+//! Fleet-level SLO aggregation: per-class request accounting and
+//! deadline hit rates, per-family detection recall / time-to-detect,
+//! and wall-clock latency percentiles.
+//!
+//! The report is split along the determinism boundary:
+//! [`FleetOutcome`] holds everything that is a pure function of the
+//! fleet seed and configuration (counts, recall, time-to-detect in
+//! *steps*, the trajectory digest) and implements `PartialEq` so
+//! replay identity is one `assert_eq!`; [`FleetTiming`] holds the
+//! wall-clock half (latency percentiles, run duration, transport
+//! counters) which legitimately varies between runs and is excluded
+//! from equality.
+
+use super::scenario::ScenarioFamily;
+use crate::serve::Priority;
+use crate::util::json::Json;
+
+/// Seconds per scan step (the 10 Hz scan cycle) — converts
+/// time-to-detect from steps to seconds.
+pub const STEP_SECONDS: f64 = 0.1;
+
+/// Deterministic request accounting for one priority class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassCounts {
+    /// Requests handed to the transport (including ones refused at
+    /// submit time).
+    pub submitted: u64,
+    /// Served with logits.
+    pub served: u64,
+    /// Shed with a typed `DeadlineExceeded`.
+    pub shed: u64,
+    /// Refused with a typed `Overloaded`.
+    pub overloaded: u64,
+    /// Resolved with any other typed error.
+    pub failed: u64,
+}
+
+impl ClassCounts {
+    /// Requests that reached *some* resolution (logits or typed
+    /// error).
+    pub fn resolved(&self) -> u64 {
+        self.served + self.shed + self.overloaded + self.failed
+    }
+
+    /// Requests submitted but never resolved — zero in every healthy
+    /// run (the acceptance invariant).
+    pub fn unresolved(&self) -> u64 {
+        self.submitted.saturating_sub(self.resolved())
+    }
+
+    /// Deadline hit rate: served / submitted (1.0 for an idle class).
+    pub fn hit_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            1.0
+        } else {
+            self.served as f64 / self.submitted as f64
+        }
+    }
+
+    /// Element-wise sum (for whole-fleet totals).
+    pub fn merged(&self, other: &ClassCounts) -> ClassCounts {
+        ClassCounts {
+            submitted: self.submitted + other.submitted,
+            served: self.served + other.served,
+            shed: self.shed + other.shed,
+            overloaded: self.overloaded + other.overloaded,
+            failed: self.failed + other.failed,
+        }
+    }
+}
+
+/// Wall-clock latency samples for one class (timing half of the
+/// report; never part of replay equality).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    /// Record one request latency in microseconds.
+    pub fn record(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    /// Number of samples recorded.
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Whether no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Nearest-rank percentile in microseconds (0.0 with no samples).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples_us.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+        xs[rank.clamp(1, xs.len()) - 1]
+    }
+
+    /// Mean latency in microseconds (0.0 with no samples).
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+}
+
+/// Detection outcome for one scenario family across the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyOutcome {
+    /// The scenario family.
+    pub family: ScenarioFamily,
+    /// Plants assigned a campaign of this family.
+    pub plants: u64,
+    /// Plants whose campaign produced a debounced detection inside
+    /// its window (plus slack).
+    pub detected: u64,
+    /// Time-to-detect in scan steps (campaign start → debounced
+    /// detection), one entry per detected plant, ascending.
+    pub detect_steps: Vec<u64>,
+}
+
+impl FamilyOutcome {
+    /// Detection recall: detected / plants (1.0 for an empty family).
+    pub fn recall(&self) -> f64 {
+        if self.plants == 0 {
+            1.0
+        } else {
+            self.detected as f64 / self.plants as f64
+        }
+    }
+
+    /// Nearest-rank percentile of time-to-detect, in seconds (0.0
+    /// with no detections).
+    pub fn ttd_seconds(&self, p: f64) -> f64 {
+        if self.detect_steps.is_empty() {
+            return 0.0;
+        }
+        let n = self.detect_steps.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        self.detect_steps[rank.clamp(1, n) - 1] as f64 * STEP_SECONDS
+    }
+}
+
+/// The deterministic half of a fleet run: a pure function of
+/// `FleetConfig` (seed, mix, sizes, feedback flags). Two runs with
+/// identical configs — across processes, transports, or build modes —
+/// must compare equal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetOutcome {
+    /// Fleet size.
+    pub plants: u64,
+    /// Scan steps driven per plant.
+    pub steps: u64,
+    /// Fleet seed the run replays from.
+    pub seed: u64,
+    /// Whether detector verdicts fed back into the sims.
+    pub feedback: bool,
+    /// Per-class accounting, indexed by `Priority::band()`.
+    pub per_class: [ClassCounts; 3],
+    /// Per-family detection outcomes (families with ≥ 1 plant, in
+    /// `ScenarioFamily::ALL` order).
+    pub families: Vec<FamilyOutcome>,
+    /// Debounced detections outside any campaign window.
+    pub false_positives: u64,
+    /// Setpoint-clamp responses applied (defense rung 1).
+    pub clamps: u64,
+    /// Actuator-lockout responses applied (defense rung 2).
+    pub lockouts: u64,
+    /// Operator escalations raised through `hitl::OperatorConsole`.
+    pub escalations: u64,
+    /// Mean |true Wd − setpoint| across all plants and post-warmup
+    /// steps — the physical-damage metric feedback is supposed to
+    /// shrink.
+    pub mean_true_wd_dev: f64,
+    /// FNV-1a digest over the final `(tb0, tbot, wd)` bit patterns of
+    /// every plant — one u64 that pins every trajectory.
+    pub trajectory_digest: u64,
+}
+
+impl FleetOutcome {
+    /// Accounting for one priority class.
+    pub fn class(&self, p: Priority) -> &ClassCounts {
+        &self.per_class[p.band()]
+    }
+
+    /// Whole-fleet totals across classes.
+    pub fn total(&self) -> ClassCounts {
+        self.per_class
+            .iter()
+            .fold(ClassCounts::default(), |acc, c| acc.merged(c))
+    }
+
+    /// Submitted-but-never-resolved requests across all classes.
+    pub fn unresolved(&self) -> u64 {
+        self.per_class.iter().map(|c| c.unresolved()).sum()
+    }
+
+    /// Fraction of all requests shed or refused under load.
+    pub fn shed_rate(&self) -> f64 {
+        let t = self.total();
+        if t.submitted == 0 {
+            0.0
+        } else {
+            (t.shed + t.overloaded) as f64 / t.submitted as f64
+        }
+    }
+
+    /// Outcome for one family, if any plant ran it.
+    pub fn family(&self, f: ScenarioFamily) -> Option<&FamilyOutcome> {
+        self.families.iter().find(|o| o.family == f)
+    }
+}
+
+/// The wall-clock half of a fleet run: latency percentiles and
+/// transport counters. Varies run to run; excluded from replay
+/// equality.
+#[derive(Debug, Clone, Default)]
+pub struct FleetTiming {
+    /// Wall-clock duration of the whole run, seconds.
+    pub wall_secs: f64,
+    /// Per-class request latency, indexed by `Priority::band()`.
+    pub latency: [LatencyStats; 3],
+    /// `Pool::served()` summed over pools (0 on the netserve path —
+    /// the pools live in the server process).
+    pub pool_served: u64,
+    /// `Pool::shed()` summed over pools (0 on the netserve path).
+    pub pool_shed: u64,
+    /// `Pool::batches()` summed over pools (0 on the netserve path).
+    pub pool_batches: u64,
+}
+
+/// A complete fleet run report: deterministic [`FleetOutcome`] plus
+/// wall-clock [`FleetTiming`].
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// The replayable half (compare with `assert_eq!`).
+    pub outcome: FleetOutcome,
+    /// The wall-clock half.
+    pub timing: FleetTiming,
+}
+
+impl FleetReport {
+    /// Serialize the full report (both halves) as JSON — the
+    /// `BENCH_fleet.json` `fleet{...}` shape documented in `API.md`.
+    pub fn to_json(&self) -> Json {
+        let o = &self.outcome;
+        let classes = Priority::ALL
+            .iter()
+            .map(|p| {
+                let c = o.class(*p);
+                let l = &self.timing.latency[p.band()];
+                Json::obj(vec![
+                    ("class", Json::Str(p.name().to_string())),
+                    ("submitted", Json::Num(c.submitted as f64)),
+                    ("served", Json::Num(c.served as f64)),
+                    ("shed", Json::Num(c.shed as f64)),
+                    ("overloaded", Json::Num(c.overloaded as f64)),
+                    ("failed", Json::Num(c.failed as f64)),
+                    ("hit_rate", Json::Num(c.hit_rate())),
+                    ("p50_us", Json::Num(l.percentile_us(50.0))),
+                    ("p95_us", Json::Num(l.percentile_us(95.0))),
+                    ("p99_us", Json::Num(l.percentile_us(99.0))),
+                ])
+            })
+            .collect();
+        let families = o
+            .families
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("family", Json::Str(f.family.name().to_string())),
+                    ("plants", Json::Num(f.plants as f64)),
+                    ("detected", Json::Num(f.detected as f64)),
+                    ("recall", Json::Num(f.recall())),
+                    ("ttd_p50_s", Json::Num(f.ttd_seconds(50.0))),
+                    ("ttd_p95_s", Json::Num(f.ttd_seconds(95.0))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("plants", Json::Num(o.plants as f64)),
+            ("steps", Json::Num(o.steps as f64)),
+            ("seed", Json::Num(o.seed as f64)),
+            ("feedback", Json::Bool(o.feedback)),
+            ("classes", Json::Arr(classes)),
+            ("families", Json::Arr(families)),
+            ("shed_rate", Json::Num(o.shed_rate())),
+            ("unresolved", Json::Num(o.unresolved() as f64)),
+            ("false_positives", Json::Num(o.false_positives as f64)),
+            ("clamps", Json::Num(o.clamps as f64)),
+            ("lockouts", Json::Num(o.lockouts as f64)),
+            ("escalations", Json::Num(o.escalations as f64)),
+            ("mean_true_wd_dev", Json::Num(o.mean_true_wd_dev)),
+            (
+                "trajectory_digest",
+                Json::Str(format!("{:016x}", o.trajectory_digest)),
+            ),
+            ("wall_secs", Json::Num(self.timing.wall_secs)),
+        ])
+    }
+
+    /// Print the human-readable summary (`icsml fleet` output).
+    pub fn print_summary(&self) {
+        let o = &self.outcome;
+        println!(
+            "fleet: {} plants x {} steps (seed {}, feedback {})",
+            o.plants, o.steps, o.seed, o.feedback
+        );
+        println!(
+            "  {:<8} {:>9} {:>9} {:>6} {:>10} {:>6} {:>8} {:>9} {:>9}",
+            "class",
+            "submitted",
+            "served",
+            "shed",
+            "overloaded",
+            "failed",
+            "hit",
+            "p50_us",
+            "p99_us"
+        );
+        for p in Priority::ALL.iter() {
+            let c = o.class(*p);
+            let l = &self.timing.latency[p.band()];
+            println!(
+                "  {:<8} {:>9} {:>9} {:>6} {:>10} {:>6} {:>7.1}% {:>9.0} {:>9.0}",
+                p.name(),
+                c.submitted,
+                c.served,
+                c.shed,
+                c.overloaded,
+                c.failed,
+                c.hit_rate() * 100.0,
+                l.percentile_us(50.0),
+                l.percentile_us(99.0),
+            );
+        }
+        for f in &o.families {
+            println!(
+                "  {:<22} plants {:>4}  recall {:>5.1}%  ttd p50 {:>6.1}s p95 {:>6.1}s",
+                f.family.name(),
+                f.plants,
+                f.recall() * 100.0,
+                f.ttd_seconds(50.0),
+                f.ttd_seconds(95.0),
+            );
+        }
+        println!(
+            "  defense: clamps {} lockouts {} escalations {} false_positives {}",
+            o.clamps, o.lockouts, o.escalations, o.false_positives
+        );
+        println!(
+            "  shed_rate {:.4}  unresolved {}  mean|wd-set| {:.5}  digest {:016x}  wall {:.2}s",
+            o.shed_rate(),
+            o.unresolved(),
+            o.mean_true_wd_dev,
+            o.trajectory_digest,
+            self.timing.wall_secs
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_counts_invariants() {
+        let c = ClassCounts {
+            submitted: 10,
+            served: 6,
+            shed: 2,
+            overloaded: 1,
+            failed: 0,
+        };
+        assert_eq!(c.resolved(), 9);
+        assert_eq!(c.unresolved(), 1);
+        assert!((c.hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(ClassCounts::default().hit_rate(), 1.0);
+        let m = c.merged(&c);
+        assert_eq!(m.submitted, 20);
+        assert_eq!(m.served, 12);
+    }
+
+    #[test]
+    fn latency_percentiles_nearest_rank() {
+        let mut l = LatencyStats::default();
+        assert_eq!(l.percentile_us(50.0), 0.0);
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            l.record(v);
+        }
+        assert_eq!(l.len(), 5);
+        assert!(!l.is_empty());
+        assert_eq!(l.percentile_us(50.0), 3.0);
+        assert_eq!(l.percentile_us(100.0), 5.0);
+        assert_eq!(l.percentile_us(0.0), 1.0);
+        assert!((l.mean_us() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn family_outcome_recall_and_ttd() {
+        let f = FamilyOutcome {
+            family: ScenarioFamily::Replay,
+            plants: 4,
+            detected: 3,
+            detect_steps: vec![10, 20, 100],
+        };
+        assert!((f.recall() - 0.75).abs() < 1e-12);
+        assert!((f.ttd_seconds(50.0) - 2.0).abs() < 1e-12);
+        assert!((f.ttd_seconds(100.0) - 10.0).abs() < 1e-12);
+    }
+}

@@ -136,6 +136,56 @@ impl HitlRunner {
     }
 }
 
+/// One escalation raised to the (simulated) plant operator by the
+/// closed-loop defense ladder: which plant, when it fired, and when
+/// the operator's manual intervention lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Escalation {
+    /// Fleet index of the escalating plant.
+    pub plant: usize,
+    /// Scan step the defense escalated at.
+    pub step: u64,
+    /// Scan step the operator's intervention takes effect
+    /// (`step + response_delay`).
+    pub intervene_step: u64,
+}
+
+/// Deterministic stand-in for the human operator in the paper's §7
+/// loop at fleet scale: escalations are acknowledged after a fixed
+/// response delay (no wall clock involved, so fleet runs replay
+/// exactly), and every escalation is kept for the run report.
+#[derive(Debug, Clone, Default)]
+pub struct OperatorConsole {
+    /// Scan steps between an escalation and the operator's
+    /// intervention (human reaction time; 50 steps ≈ 5 s at the
+    /// 10 Hz scan rate).
+    pub response_delay: u64,
+    /// Every escalation raised, in arrival order.
+    pub escalations: Vec<Escalation>,
+}
+
+impl OperatorConsole {
+    /// Console with the given response delay (in scan steps).
+    pub fn new(response_delay: u64) -> OperatorConsole {
+        OperatorConsole {
+            response_delay,
+            escalations: Vec::new(),
+        }
+    }
+
+    /// Record an escalation; returns the step at which the operator's
+    /// intervention lands (the caller applies it to the sim then).
+    pub fn escalate(&mut self, plant: usize, step: u64) -> u64 {
+        let intervene_step = step + self.response_delay;
+        self.escalations.push(Escalation {
+            plant,
+            step,
+            intervene_step,
+        });
+        intervene_step
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +193,22 @@ mod tests {
     use crate::defense::{Detector, FEATURES, WINDOW};
     use crate::engine::{Act, Layer, Model};
     use crate::msf::AttackFamily;
+
+    #[test]
+    fn operator_console_records_and_schedules() {
+        let mut console = OperatorConsole::new(50);
+        assert_eq!(console.escalate(3, 100), 150);
+        assert_eq!(console.escalate(7, 200), 250);
+        assert_eq!(console.escalations.len(), 2);
+        assert_eq!(
+            console.escalations[0],
+            Escalation {
+                plant: 3,
+                step: 100,
+                intervene_step: 150
+            }
+        );
+    }
 
     /// Hand-built mean-threshold detector (fires when mean Wd over the
     /// window drops below 17).

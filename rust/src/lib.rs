@@ -51,11 +51,20 @@
 //!   per in-flight request), a lazily-loading LRU
 //!   [`netserve::ModelRegistry`] routing named models to per-model
 //!   pools, and a blocking [`netserve::Client`].
+//! * [`fleet`] — fleet-scale closed-loop simulation over the serving
+//!   tier: a declarative attack-scenario corpus
+//!   ([`fleet::ScenarioFamily`] taxonomy compiled onto
+//!   [`msf::Attack`] primitives), a deterministic lock-step traffic
+//!   generator multiplexing every plant's Control/Defense/Batch
+//!   requests over pools or the network client with verdicts fed
+//!   back as defense responses, and fleet SLO reports
+//!   ([`fleet::FleetReport`]).
 
 pub mod api;
 pub mod coordinator;
 pub mod defense;
 pub mod engine;
+pub mod fleet;
 pub mod hitl;
 pub mod icsml_st;
 pub mod msf;

@@ -20,6 +20,13 @@
 //! * `client`  — drive a running `listen` server over TCP:
 //!               `--addr A --model NAME --requests N [--class C]
 //!               [--deadline-us D] [--dim K]`.
+//! * `fleet`   — closed-loop fleet simulation: N independently seeded
+//!               plants drive the hand-built deviation detector
+//!               through a netserve front door, with detector
+//!               verdicts fed back as defense responses:
+//!               `--plants N --duration SECS --attack-mix MIX
+//!               [--seed X] [--workers W] [--batch B] [--addr A]
+//!               [--deadline] [--no-feedback]`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -29,11 +36,14 @@ use anyhow::Result;
 use icsml::api::{Backend, EngineBackend, Session as _, SharedBackend,
                  StBackend};
 use icsml::defense::Detector;
+use icsml::fleet::{
+    detector_model, run_fleet, AttackMix, FleetConfig, FleetTarget,
+};
 use icsml::hitl::HitlRunner;
 use icsml::msf::{Attack, AttackFamily};
 use icsml::netserve::{
     proto::ErrorCode, Client, ManifestLoader, ModelRegistry, NetOptions,
-    NetServer, RegistryConfig, ServerConfig,
+    NetServer, RegistryConfig, RetryPolicy, ServerConfig, StaticLoader,
 };
 use icsml::plc::{profiles::KERAS_MODEL_SIZES, HwProfile, PLC_SPECS};
 use icsml::porting::manifest::ManifestSet;
@@ -48,7 +58,9 @@ use icsml::util::binio;
 use icsml::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["no-fused", "st", "engine", "xla"]);
+    let args = Args::parse(&[
+        "no-fused", "st", "engine", "xla", "deadline", "no-feedback",
+    ]);
     match args.subcommand.as_deref() {
         Some("table1") => table1(),
         Some("fig3") => fig3(),
@@ -59,13 +71,14 @@ fn main() -> Result<()> {
         Some("serve") => serve(&args),
         Some("listen") => listen(&args),
         Some("client") => client(&args),
+        Some("fleet") => fleet(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: icsml \
-                 <table1|fig3|table2|port|infer|hitl|serve|listen|client> \
+                "usage: icsml <table1|fig3|table2|port|infer|hitl|serve|\
+                 listen|client|fleet> \
                  [options]\n  port  --model classifier [--out FILE] \
                  [--no-fused]\n  infer --index N [--st|--engine|--xla]\n  \
                  hitl  --steps N --attack combined --magnitude 0.5\n  \
@@ -76,7 +89,11 @@ fn main() -> Result<()> {
                  [--workers W] [--batch B] [--max-models N] [--max-mb MB] \
                  [--for-secs S]\n  \
                  client --addr 127.0.0.1:9470 --model classifier \
-                 --requests N [--class C] [--deadline-us D] [--dim K]"
+                 --requests N [--class C] [--deadline-us D] [--dim K]\n  \
+                 fleet --plants N --duration SECS \
+                 [--attack-mix uniform|benign|fam=w,...] [--seed X] \
+                 [--workers W] [--batch B] [--addr A] [--deadline] \
+                 [--no-feedback]"
             );
             Ok(())
         }
@@ -569,12 +586,17 @@ fn client(args: &Args) -> Result<()> {
         let w = i % total;
         c.submit(&model, &x[w * in_dim..(w + 1) * in_dim], &opts)?;
     }
-    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    // Typed outcome accounting for the driven class: deadline sheds
+    // and server-overload refusals are expected operating modes, not
+    // failures, and are reported per class alongside served counts.
+    let (mut ok, mut shed, mut overloaded, mut failed) =
+        (0u64, 0u64, 0u64, 0u64);
     for _ in 0..n {
         let reply = c.recv()?;
         match reply.result {
             Ok(_) => ok += 1,
             Err(e) if e.code == ErrorCode::DeadlineExceeded => shed += 1,
+            Err(e) if e.code == ErrorCode::Overloaded => overloaded += 1,
             Err(e) => {
                 failed += 1;
                 eprintln!("request {}: {}", reply.id, e.msg);
@@ -583,9 +605,117 @@ fn client(args: &Args) -> Result<()> {
     }
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "{ok}/{n} answered in {secs:.3} s ({:.0} req/s); {shed} shed, \
-         {failed} failed",
+        "{ok}/{n} answered in {secs:.3} s ({:.0} req/s)",
         ok as f64 / secs.max(1e-9)
     );
+    println!(
+        "  class {:<8} served {ok:>6}  shed {shed:>6}  overloaded \
+         {overloaded:>6}  failed {failed:>6}",
+        priority.name()
+    );
+    Ok(())
+}
+
+fn fleet(args: &Args) -> Result<()> {
+    let plants = args.opt_usize("plants", 64);
+    let duration = args.opt_f64("duration", 120.0);
+    anyhow::ensure!(plants > 0, "--plants must be positive");
+    anyhow::ensure!(duration > 0.0, "--duration must be positive");
+    // The plant scan period is 100 ms: one second of plant time is
+    // ten simulator steps.
+    let steps = (duration * 10.0).round() as u64;
+    let mix = AttackMix::parse(&args.opt_or("attack-mix", "uniform"))
+        .map_err(|e| anyhow::anyhow!("--attack-mix: {e}"))?;
+    let workers = args.opt_usize("workers", 4);
+    let batch = args.opt_usize("batch", 8);
+    let cfg = FleetConfig {
+        plants,
+        steps,
+        seed: args.opt_usize("seed", 1) as u64,
+        mix,
+        deadline: args.has("deadline"),
+        feedback: !args.has("no-feedback"),
+        ..FleetConfig::default()
+    };
+    println!(
+        "fleet: {plants} plants x {steps} steps ({duration} s of plant \
+         time), seed {}, feedback {}, deadlines {}",
+        cfg.seed,
+        if cfg.feedback { "on" } else { "off" },
+        if cfg.deadline { "on" } else { "off" },
+    );
+
+    // With --addr the fleet drives an external `listen` server (which
+    // must expose a model named --model with the detector's 400->2
+    // shape). Otherwise spawn a loopback front door over the
+    // hand-built deviation detector so the command is self-contained
+    // while still exercising the full network path.
+    let (report, local) = match args.opt("addr") {
+        Some(addr) => {
+            println!("  driving external server at {addr}");
+            let client = Client::connect_with(addr, RetryPolicy::new())?;
+            let target = FleetTarget::Net {
+                client,
+                model: args.opt_or("model", "detector"),
+            };
+            (run_fleet(&cfg, target), None)
+        }
+        None => {
+            let mut loader = StaticLoader::new();
+            let backend: SharedBackend =
+                Arc::new(EngineBackend::new(detector_model()));
+            loader.insert("detector", backend, 1);
+            let registry = Arc::new(ModelRegistry::new(
+                Box::new(loader),
+                RegistryConfig {
+                    max_models: usize::MAX,
+                    max_bytes: u64::MAX,
+                    pool: PoolConfig { workers, max_batch: batch },
+                },
+            ));
+            // Large fleets keep up to three lock-step batches in
+            // flight on the single client connection; lift the
+            // per-connection cap so connection-overload refusals
+            // (timing-dependent) can't creep into the outcome.
+            let server = NetServer::bind(
+                "127.0.0.1:0",
+                registry,
+                ServerConfig {
+                    max_inflight_per_conn: 4096,
+                    ..ServerConfig::default()
+                },
+            )?;
+            println!(
+                "  loopback server at {} — {workers} workers x \
+                 micro-batch {batch}",
+                server.local_addr()
+            );
+            let client = Client::connect_with(
+                server.local_addr(),
+                RetryPolicy::new(),
+            )?;
+            let target = FleetTarget::Net {
+                client,
+                model: "detector".to_string(),
+            };
+            (run_fleet(&cfg, target), Some(server))
+        }
+    };
+
+    report.print_summary();
+    if let Some(server) = local {
+        let stats = server.stats_handle();
+        server.shutdown();
+        println!(
+            "server: conns {} requests {} ok {} errors {} overloaded {} \
+             protocol-errors {}",
+            stats.accepted(),
+            stats.requests(),
+            stats.responses(),
+            stats.error_frames(),
+            stats.overloaded(),
+            stats.protocol_errors(),
+        );
+    }
     Ok(())
 }

@@ -173,4 +173,56 @@ mod tests {
             assert_eq!(AttackFamily::from_name(f.name()), Some(f));
         }
     }
+
+    #[test]
+    fn zero_length_and_extreme_windows_never_activate_wrongly() {
+        // `[start, end)` with start == end is empty: never active.
+        let z = Attack::new(AttackFamily::SteamBias, 0.1, 5, 5);
+        assert!(!z.active(4));
+        assert!(!z.active(5));
+        assert!(!z.active(6));
+        // Inverted window (end < start) is also empty.
+        let inv = Attack::new(AttackFamily::SteamBias, 0.1, 10, 3);
+        assert!(!inv.active(5));
+        // An effectively-unbounded window covers everything below
+        // u64::MAX (the exclusive end itself is outside).
+        let open = Attack::new(AttackFamily::SteamBias, 0.1, 0, u64::MAX);
+        assert!(open.active(0));
+        assert!(open.active(u64::MAX - 1));
+        assert!(!open.active(u64::MAX));
+        // Unknown names don't parse.
+        assert_eq!(AttackFamily::from_name("not_a_family"), None);
+    }
+
+    #[test]
+    fn fold_applies_in_list_order_setpoint_last_wins() {
+        // SetpointTamper *overwrites* wd_set, so when two tampers
+        // overlap the same step the last one in declaration order
+        // wins. This pins fold order = list order.
+        let a = Attack::new(AttackFamily::SetpointTamper, 1.0, 0, 10);
+        let b = Attack::new(AttackFamily::SetpointTamper, 2.0, 0, 10);
+        let e_ab = AttackEffects::fold(&[a, b], 5);
+        let e_ba = AttackEffects::fold(&[b, a], 5);
+        assert_eq!(e_ab.wd_set, super::super::WD_SET + 2.0);
+        assert_eq!(e_ba.wd_set, super::super::WD_SET + 1.0);
+    }
+
+    #[test]
+    fn fold_scaling_effects_commute_on_shared_signals() {
+        // Multiplicative effects (ws_scale/wr/wrej/wd_scale) compose
+        // order-independently even when two families touch the same
+        // signal — only overwriting effects are order-sensitive.
+        let a = Attack::new(AttackFamily::RecycleReduction, 0.2, 0, 10);
+        let b = Attack::new(AttackFamily::Combined, 0.5, 0, 10);
+        let ab = AttackEffects::fold(&[a, b], 0);
+        let ba = AttackEffects::fold(&[b, a], 0);
+        assert!((ab.wr - super::super::WR_NOM * 0.8 * 0.7).abs() < 1e-9);
+        assert!((ab.wr - ba.wr).abs() < 1e-9);
+        assert!((ab.ws_scale - ba.ws_scale).abs() < 1e-9);
+        assert!((ab.wrej - ba.wrej).abs() < 1e-9);
+        // Only windows covering the step participate in the fold.
+        let late = Attack::new(AttackFamily::RecycleReduction, 0.2, 5, 10);
+        let e = AttackEffects::fold(&[late, b], 0);
+        assert!((e.wr - super::super::WR_NOM * 0.7).abs() < 1e-9);
+    }
 }

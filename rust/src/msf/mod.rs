@@ -15,7 +15,7 @@ pub mod sim;
 pub use attacks::{Attack, AttackFamily};
 pub use pid::PidState;
 pub use plant::{adc, plant_step, PlantState};
-pub use sim::Simulator;
+pub use sim::{DefensePosture, ScanReading, Simulator, SETPOINT_CLAMP_BAND};
 
 // ------------------------------------------------------------ constants
 // (mirrors python/compile/plant.py — keep both in sync)

@@ -17,12 +17,35 @@ pub struct ScanReading {
     pub attack_active: bool,
 }
 
+/// Closed-loop defense actuation applied between the attack fold and
+/// the controller (set by the fleet driver when the detector fires;
+/// see `fleet::driver`). The default posture is fully inactive and
+/// leaves `step()` arithmetic bit-identical to the golden trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DefensePosture {
+    /// Clamp the effective Wd setpoint to
+    /// `WD_SET ± SETPOINT_CLAMP_BAND` (neutralizes setpoint tampering
+    /// and bounds FDI-driven setpoint drift).
+    pub clamp_setpoint: bool,
+    /// Manual-fallback mode: actuators are driven at nominal flows,
+    /// bypassing attack scaling on Ws/Wr/Wrej. Sensors may still be
+    /// spoofed — lockout contains actuator damage, not FDI.
+    pub lockout_actuators: bool,
+}
+
+/// Width of the setpoint clamp band (t/min) applied under
+/// [`DefensePosture::clamp_setpoint`].
+pub const SETPOINT_CLAMP_BAND: f64 = 0.25;
+
 /// The closed-loop simulator.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     pub state: PlantState,
     pub pid: PidState,
     pub attacks: Vec<Attack>,
+    /// Active defense posture (all-off by default; when off, `step()`
+    /// is bit-identical to the pre-defense simulator).
+    pub defense: DefensePosture,
     pub step_idx: u64,
     pub noise: bool,
     rng: SplitMix64,
@@ -34,6 +57,7 @@ impl Simulator {
             state: PlantState::default(),
             pid: PidState::default(),
             attacks,
+            defense: DefensePosture::default(),
             step_idx: 0,
             noise,
             rng: SplitMix64::new(seed),
@@ -41,9 +65,21 @@ impl Simulator {
     }
 
     /// One 100 ms scan cycle: sensors (FDI → noise → ADC) → PID →
-    /// actuators (attack scaling) → plant integration.
+    /// actuators (attack scaling) → plant integration. Defense
+    /// postures intercept the folded attack effects before they reach
+    /// the controller/actuators.
     pub fn step(&mut self) -> ScanReading {
-        let e = AttackEffects::fold(&self.attacks, self.step_idx);
+        let mut e = AttackEffects::fold(&self.attacks, self.step_idx);
+        if self.defense.clamp_setpoint {
+            e.wd_set = e
+                .wd_set
+                .clamp(WD_SET - SETPOINT_CLAMP_BAND, WD_SET + SETPOINT_CLAMP_BAND);
+        }
+        if self.defense.lockout_actuators {
+            e.ws_scale = 1.0;
+            e.wr = WR_NOM;
+            e.wrej = WREJ_NOM;
+        }
 
         let mut tb0_s = self.state.tb0 + e.tb0_bias;
         let mut wd_s = self.state.wd * e.wd_scale;
@@ -74,6 +110,18 @@ impl Simulator {
             last = self.step();
         }
         last
+    }
+
+    /// Run `n` steps collecting every intermediate reading (the fleet
+    /// driver's feed). Executes the identical `step()` sequence as
+    /// `run(n)` — the collected trace is bit-for-bit the step-by-step
+    /// trace (pinned by `tests/plant_golden.rs`).
+    pub fn run_collect(&mut self, n: u64) -> Vec<ScanReading> {
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            out.push(self.step());
+        }
+        out
     }
 }
 
@@ -143,6 +191,87 @@ mod tests {
         let mut b = Simulator::new(9, true, vec![]);
         for _ in 0..500 {
             assert_eq!(a.step(), b.step());
+        }
+    }
+
+    #[test]
+    fn run_collect_matches_step_by_step_bit_for_bit() {
+        let attacks = vec![Attack::new(
+            crate::msf::attacks::AttackFamily::Combined,
+            0.5,
+            100,
+            400,
+        )];
+        let mut collected = Simulator::new(5, true, attacks.clone());
+        let mut stepped = Simulator::new(5, true, attacks);
+        let trace = collected.run_collect(600);
+        assert_eq!(trace.len(), 600);
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(*r, stepped.step(), "step {i}");
+        }
+        assert_eq!(collected.step_idx, stepped.step_idx);
+        assert_eq!(collected.state.tb0.to_bits(), stepped.state.tb0.to_bits());
+        assert_eq!(collected.state.tbot.to_bits(), stepped.state.tbot.to_bits());
+        assert_eq!(collected.state.wd.to_bits(), stepped.state.wd.to_bits());
+    }
+
+    #[test]
+    fn lockout_neutralizes_actuator_attack_bit_for_bit() {
+        // With actuators locked to nominal flows, an actuator-side
+        // campaign has zero effect on the physics or the (unspoofed)
+        // sensors — the attacked run matches the benign run exactly.
+        let mut benign = Simulator::new(4, true, vec![]);
+        let mut attacked = Simulator::new(
+            4,
+            true,
+            vec![Attack::new(
+                crate::msf::attacks::AttackFamily::SteamBias,
+                0.4,
+                0,
+                10_000,
+            )],
+        );
+        attacked.defense.lockout_actuators = true;
+        for i in 0..3_000 {
+            let b = benign.step();
+            let a = attacked.step();
+            assert_eq!(a.tb0_adc.to_bits(), b.tb0_adc.to_bits(), "step {i}");
+            assert_eq!(a.wd_adc.to_bits(), b.wd_adc.to_bits(), "step {i}");
+            assert_eq!(a.ws_cmd.to_bits(), b.ws_cmd.to_bits(), "step {i}");
+            assert!(a.attack_active);
+        }
+        assert_eq!(attacked.state.wd.to_bits(), benign.state.wd.to_bits());
+    }
+
+    #[test]
+    fn setpoint_clamp_bounds_tampering() {
+        let tamper = vec![Attack::new(
+            crate::msf::attacks::AttackFamily::SetpointTamper,
+            2.0,
+            0,
+            30_000,
+        )];
+        let mut undefended = Simulator::new(6, false, tamper.clone());
+        undefended.run(30_000);
+        let mut clamped = Simulator::new(6, false, tamper);
+        clamped.defense.clamp_setpoint = true;
+        clamped.run(30_000);
+        let dev_undef = (undefended.state.wd - WD_SET).abs();
+        let dev_clamp = (clamped.state.wd - WD_SET).abs();
+        assert!(dev_undef > 1.5, "tamper should move wd: {dev_undef}");
+        assert!(
+            dev_clamp < SETPOINT_CLAMP_BAND + 0.05,
+            "clamp should bound wd drift: {dev_clamp}"
+        );
+    }
+
+    #[test]
+    fn default_posture_is_inactive() {
+        let mut plain = Simulator::new(7, true, vec![]);
+        let mut defended = Simulator::new(7, true, vec![]);
+        defended.defense = DefensePosture::default();
+        for _ in 0..200 {
+            assert_eq!(plain.step(), defended.step());
         }
     }
 

@@ -1,0 +1,184 @@
+//! Closed-loop fleet tests: a small deterministic fleet of mixed
+//! scenarios over a loopback `netserve` server. Pins the ISSUE-8
+//! acceptance properties at test scale: every request resolves,
+//! per-family detection recall clears its floor, defense feedback
+//! measurably alters attacked-plant trajectories vs a
+//! feedback-disabled control run, and identical seeds (and even
+//! transports) produce identical `FleetOutcome`s.
+
+use std::sync::Arc;
+
+use icsml::api::{EngineBackend, SharedBackend};
+use icsml::fleet::{
+    detector_model, run_fleet, AttackMix, FleetConfig, FleetTarget,
+};
+use icsml::netserve::{
+    Client, ModelRegistry, NetServer, RegistryConfig, RetryPolicy,
+    ServerConfig, StaticLoader,
+};
+use icsml::serve::{PoolConfig, Priority};
+
+fn detector_registry(workers: usize) -> Arc<ModelRegistry> {
+    let mut loader = StaticLoader::new();
+    let backend: SharedBackend = Arc::new(EngineBackend::new(detector_model()));
+    loader.insert("detector", backend, 1);
+    Arc::new(ModelRegistry::new(
+        Box::new(loader),
+        RegistryConfig {
+            max_models: usize::MAX,
+            max_bytes: u64::MAX,
+            pool: PoolConfig {
+                workers,
+                max_batch: 8,
+            },
+        },
+    ))
+}
+
+fn net_target(server: &NetServer) -> FleetTarget {
+    let client = Client::connect_with(server.local_addr(), RetryPolicy::new())
+        .expect("loopback connect");
+    FleetTarget::Net {
+        client,
+        model: "detector".to_string(),
+    }
+}
+
+fn small_cfg() -> FleetConfig {
+    FleetConfig {
+        plants: 16,
+        steps: 2_000,
+        seed: 42,
+        mix: AttackMix::uniform(),
+        ..FleetConfig::default()
+    }
+}
+
+#[test]
+fn fleet_over_loopback_netserve_resolves_and_detects() {
+    let server =
+        NetServer::bind("127.0.0.1:0", detector_registry(4), ServerConfig::default())
+            .expect("bind loopback");
+    let cfg = small_cfg();
+    let report = run_fleet(&cfg, net_target(&server));
+
+    // Every request resolved: logits or typed error — and with no
+    // deadlines attached, a healthy loopback serves everything.
+    assert_eq!(report.outcome.unresolved(), 0);
+    let total = report.outcome.total();
+    assert!(total.submitted > 0);
+    assert_eq!(
+        total.served, total.submitted,
+        "healthy loopback must serve everything: {total:?}"
+    );
+    assert!(report.outcome.class(Priority::Control).served > 0);
+    assert!(
+        report.outcome.class(Priority::Batch).served > 0,
+        "sweeps must ride along"
+    );
+    // Attack waves produce Defense-class confirmation traffic.
+    assert!(report.outcome.class(Priority::Defense).submitted > 0);
+
+    // Recall floor per attacked family (uniform mix over 16 plants
+    // gives each family 2-3 plants).
+    assert!(!report.outcome.families.is_empty());
+    for fam in &report.outcome.families {
+        assert!(fam.plants > 0);
+        assert!(
+            fam.recall() >= 0.5,
+            "family {} recall {:.2} ({} of {} plants)",
+            fam.family.name(),
+            fam.recall(),
+            fam.detected,
+            fam.plants
+        );
+    }
+    // The detector bands sit ~100σ above benign noise.
+    assert_eq!(report.outcome.false_positives, 0);
+    // Feedback actually engaged somewhere.
+    assert!(report.outcome.clamps > 0);
+
+    server.shutdown();
+}
+
+#[test]
+fn identical_seeds_give_identical_outcomes_across_transports() {
+    let server =
+        NetServer::bind("127.0.0.1:0", detector_registry(3), ServerConfig::default())
+            .expect("bind loopback");
+    let cfg = FleetConfig {
+        plants: 12,
+        steps: 1_500,
+        seed: 7,
+        ..FleetConfig::default()
+    };
+
+    let net_a = run_fleet(&cfg, net_target(&server));
+    let net_b = run_fleet(&cfg, net_target(&server));
+    assert_eq!(
+        net_a.outcome, net_b.outcome,
+        "identical seeds must replay identically over the network"
+    );
+
+    // The deterministic half is transport-independent too: the same
+    // config through in-process pools gives the same outcome.
+    let pooled = run_fleet(&cfg, FleetTarget::pools(2, 2, 8));
+    assert_eq!(
+        net_a.outcome, pooled.outcome,
+        "outcome must not depend on the transport"
+    );
+
+    // A different seed must not collide.
+    let other = run_fleet(
+        &FleetConfig {
+            seed: 8,
+            ..cfg.clone()
+        },
+        FleetTarget::pools(2, 2, 8),
+    );
+    assert_ne!(net_a.outcome.trajectory_digest, other.outcome.trajectory_digest);
+
+    server.shutdown();
+}
+
+#[test]
+fn feedback_alters_attacked_plant_trajectories() {
+    // Actuator-heavy mix so the defense ladder (clamp → lockout) has
+    // physical effect; identical seeds with feedback on vs off.
+    let mix = AttackMix::parse("actuator=3,ramp=1").expect("mix");
+    let base = FleetConfig {
+        plants: 8,
+        steps: 2_500,
+        seed: 21,
+        mix,
+        ..FleetConfig::default()
+    };
+    let with_feedback = run_fleet(&base, FleetTarget::pools(2, 2, 8));
+    let control = run_fleet(
+        &FleetConfig {
+            feedback: false,
+            ..base.clone()
+        },
+        FleetTarget::pools(2, 2, 8),
+    );
+
+    // Same seeds, same scenarios — the only difference is the defense
+    // responses, and they must show up in the physics.
+    assert!(with_feedback.outcome.clamps > 0, "ladder must engage");
+    assert!(with_feedback.outcome.lockouts > 0, "ladder must reach rung 2");
+    assert_eq!(control.outcome.clamps, 0);
+    assert_eq!(control.outcome.lockouts, 0);
+    assert_ne!(
+        with_feedback.outcome.trajectory_digest, control.outcome.trajectory_digest,
+        "feedback must change plant trajectories"
+    );
+    assert!(
+        with_feedback.outcome.mean_true_wd_dev
+            < control.outcome.mean_true_wd_dev,
+        "defense must reduce physical damage: {} (feedback) vs {} (control)",
+        with_feedback.outcome.mean_true_wd_dev,
+        control.outcome.mean_true_wd_dev
+    );
+    assert_eq!(with_feedback.outcome.unresolved(), 0);
+    assert_eq!(control.outcome.unresolved(), 0);
+}

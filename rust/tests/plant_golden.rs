@@ -2,10 +2,51 @@
 //! reproduce the Python plant's trajectory (emitted by `make
 //! artifacts` into `artifacts/golden/msf_trace.json`) to float
 //! tolerance — both twins integrate the identical discrete dynamics in
-//! the identical evaluation order.
+//! the identical evaluation order. The comparison is driven through
+//! `Simulator::run_collect`, with a step-by-step mirror sim asserting
+//! the collected trace is bit-for-bit the stepped trace.
 
-use icsml::msf::{Attack, AttackFamily, Simulator};
+use icsml::msf::{Attack, AttackFamily, ScanReading, Simulator};
 use icsml::util::json::Json;
+
+/// The golden scenario: seed=1, no noise, combined 0.5 attack on
+/// steps [600, 1200) — same as python `plant.golden_trace()`.
+fn golden_sim() -> Simulator {
+    Simulator::new(
+        1,
+        false,
+        vec![Attack::new(AttackFamily::Combined, 0.5, 600, 1200)],
+    )
+}
+
+fn assert_bit_identical(i: usize, a: &ScanReading, b: &ScanReading) {
+    assert_eq!(
+        a.tb0_adc.to_bits(),
+        b.tb0_adc.to_bits(),
+        "step {i} tb0_adc: collected {} vs stepped {}",
+        a.tb0_adc,
+        b.tb0_adc
+    );
+    assert_eq!(a.wd_adc.to_bits(), b.wd_adc.to_bits(), "step {i} wd_adc");
+    assert_eq!(a.ws_cmd.to_bits(), b.ws_cmd.to_bits(), "step {i} ws_cmd");
+    assert_eq!(a.attack_active, b.attack_active, "step {i} attack flag");
+}
+
+#[test]
+fn run_collect_is_bit_identical_to_step_loop() {
+    let mut collected = golden_sim();
+    let mut stepped = golden_sim();
+    let trace = collected.run_collect(2_000);
+    assert_eq!(trace.len(), 2_000);
+    for (i, r) in trace.iter().enumerate() {
+        let s = stepped.step();
+        assert_bit_identical(i, r, &s);
+    }
+    assert_eq!(collected.step_idx, stepped.step_idx);
+    assert_eq!(collected.state.tb0.to_bits(), stepped.state.tb0.to_bits());
+    assert_eq!(collected.state.tbot.to_bits(), stepped.state.tbot.to_bits());
+    assert_eq!(collected.state.wd.to_bits(), stepped.state.wd.to_bits());
+}
 
 #[test]
 fn rust_plant_matches_python_golden_trace() {
@@ -19,23 +60,23 @@ fn rust_plant_matches_python_golden_trace() {
     let rows = j.expect("rows").as_arr().unwrap();
     assert!(rows.len() >= 1000, "trace too short");
 
-    // Same scenario as python plant.golden_trace(): seed=1, no noise,
-    // combined 0.5 attack on steps [600, 1200).
-    let mut sim = Simulator::new(
-        1,
-        false,
-        vec![Attack::new(AttackFamily::Combined, 0.5, 600, 1200)],
-    );
+    // The collected trace carries the per-step readings; the mirror
+    // sim replays step-by-step so the per-step *state* columns are
+    // comparable too — and pins collected == stepped bit-for-bit
+    // along the way.
+    let trace = golden_sim().run_collect(rows.len() as u64);
+    let mut mirror = golden_sim();
     for (i, row) in rows.iter().enumerate() {
         let r = row.as_arr().unwrap();
-        let got = sim.step();
+        let got = mirror.step();
+        assert_bit_identical(i, &trace[i], &got);
         let cols = [
             ("tb0_adc", got.tb0_adc, r[0].as_f64().unwrap()),
             ("wd_adc", got.wd_adc, r[1].as_f64().unwrap()),
             ("ws_cmd", got.ws_cmd, r[2].as_f64().unwrap()),
-            ("tb0", sim.state.tb0, r[3].as_f64().unwrap()),
-            ("tbot", sim.state.tbot, r[4].as_f64().unwrap()),
-            ("wd", sim.state.wd, r[5].as_f64().unwrap()),
+            ("tb0", mirror.state.tb0, r[3].as_f64().unwrap()),
+            ("tbot", mirror.state.tbot, r[4].as_f64().unwrap()),
+            ("wd", mirror.state.wd, r[5].as_f64().unwrap()),
         ];
         for (name, rust_v, py_v) in cols {
             let tol = 1e-9 * py_v.abs().max(1.0);
