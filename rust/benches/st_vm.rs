@@ -1,19 +1,23 @@
 //! Interp-vs-VM wall clock on dense-MLP forward passes — the ISSUE 2
-//! acceptance benchmark for the bytecode tier.
+//! acceptance benchmark for the bytecode tier, extended (ISSUE 9) with
+//! the superinstruction tier: every configuration now runs **three**
+//! executions — tree-walking interpreter (oracle), plain VM (fusion
+//! off), and fused VM (the default) — from identical weights and
+//! inputs.
 //!
-//! Every configuration runs the same generated ICSML ST program on both
-//! tiers with identical weights and inputs; before timing, outputs are
-//! checked bit-identical and `Meter` deltas exactly equal (a slow
+//! Before timing, the differential gate checks all three produce
+//! bit-identical outputs and exactly equal `Meter` deltas (a slow
 //! differential harness is a useless one if the fast tier cheats).
 //!
 //! Modes:
 //!   (default)        timing table on stdout
 //!   --json[=PATH]    also write BENCH_st_vm.json (ns/inference,
-//!                    ops per abstract-op figures, speedups)
-//!   --smoke          one differential iteration per config, no timing
-//!                    (CI's fast bytecode-regression gate)
+//!                    ops per abstract-op figures, speedups, and the
+//!                    fusion{...} plain-vs-fused section)
+//!   --smoke          one differential iteration per config across all
+//!                    three tiers, no timing (CI's fast gate)
 
-use icsml::st::Meter;
+use icsml::st::{FusionConfig, Meter};
 use icsml::util::bench::Bench;
 use icsml::util::benchkit::{
     self, json_flag, smoke_flag, write_bench_json, BenchRecord,
@@ -32,21 +36,44 @@ const CONFIGS: &[Config] = &[
     Config { label: "dense_128x128", sizes: &[128, 128, 128] },
 ];
 
+fn outputs_of(it: &mut icsml::st::Interp) -> Vec<f32> {
+    let inst = it.program_instance("MAIN").unwrap();
+    match it.instance_field(inst, "outputs").unwrap() {
+        icsml::st::Value::ArrF32(a) => a.borrow().clone(),
+        other => panic!("outputs: {other:?}"),
+    }
+}
+
+fn assert_bits_eq(label: &str, tier: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{label}: {tier} output dims");
+    for (i, (x0, x1)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x0.to_bits(),
+            x1.to_bits(),
+            "{label}: {tier} output[{i}] diverged ({x0} vs {x1})"
+        );
+    }
+}
+
 fn main() {
     let smoke = smoke_flag();
     let json_path = json_flag("st_vm");
     let bench = Bench::from_env();
     let mut records: Vec<BenchRecord> = Vec::new();
     let mut speedups: Vec<(&str, f64)> = Vec::new();
+    let mut fusion: Vec<(&str, Json)> = Vec::new();
 
-    println!("\nST execution tiers — tree-walker (oracle) vs register-bytecode VM");
+    println!(
+        "\nST execution tiers — tree-walker (oracle) vs plain VM vs fused VM"
+    );
     let mut t = icsml::util::bench::Table::new(&[
         "model",
         "interp ns/inf",
-        "vm ns/inf",
-        "speedup",
+        "plain ns/inf",
+        "fused ns/inf",
+        "fused/plain",
+        "fused/interp",
         "ops/inf",
-        "vm ops/us",
     ]);
 
     for cfg in CONFIGS {
@@ -57,56 +84,89 @@ fn main() {
         let (spec, dir) =
             benchkit::random_spec(cfg.label, cfg.sizes, &acts, 0xC0FFEE);
         let mut it = benchkit::st_model(&spec, &dir, true);
-        let mut vm = benchkit::st_model_vm(&spec, &dir, true);
+        let mut fused = benchkit::st_model_vm_with(
+            &spec,
+            &dir,
+            true,
+            &FusionConfig { enabled: true },
+        );
+        let mut plain = benchkit::st_model_vm_with(
+            &spec,
+            &dir,
+            true,
+            &FusionConfig { enabled: false },
+        );
+        let n_fused = fused.code().fused_ops();
+        assert!(
+            n_fused > 0,
+            "{}: fusion produced no superinstructions",
+            cfg.label
+        );
+        assert_eq!(
+            plain.code().fused_ops(),
+            0,
+            "{}: fusion-off stream contains fused ops",
+            cfg.label
+        );
 
         let mut rng = SplitMix64::new(17);
         let x: Vec<f32> = (0..cfg.sizes[0])
             .map(|_| rng.uniform(-1.0, 1.0) as f32)
             .collect();
         benchkit::st_set_inputs(&mut it, &x);
-        benchkit::vm_set_inputs(&mut vm, &x);
+        benchkit::vm_set_inputs(&mut fused, &x);
+        benchkit::vm_set_inputs(&mut plain, &x);
 
         // Differential gate before any timing: bit-identical outputs,
-        // exactly equal meter deltas.
+        // exactly equal meter deltas, fusion on AND off.
         let im: Meter = benchkit::st_infer_meter(&mut it);
-        let vmm: Meter = benchkit::vm_infer_meter(&mut vm);
-        assert_eq!(im, vmm, "{}: meter divergence between tiers", cfg.label);
-        let inst = it.program_instance("MAIN").unwrap();
-        let a = match it.instance_field(inst, "outputs").unwrap() {
-            icsml::st::Value::ArrF32(a) => a.borrow().clone(),
-            other => panic!("outputs: {other:?}"),
-        };
-        let b = benchkit::vm_outputs(&vm);
-        assert_eq!(a.len(), b.len(), "{}: output dims", cfg.label);
-        for (i, (x0, x1)) in a.iter().zip(&b).enumerate() {
-            assert_eq!(
-                x0.to_bits(),
-                x1.to_bits(),
-                "{}: output[{i}] diverged ({x0} vs {x1})",
+        let fm: Meter = benchkit::vm_infer_meter(&mut fused);
+        let pm: Meter = benchkit::vm_infer_meter(&mut plain);
+        if let Some((name, a, b)) = im.first_divergence(&fm) {
+            panic!(
+                "{}: fused-VM meter `{name}` diverged (interp {a}, vm {b})",
                 cfg.label
             );
         }
+        if let Some((name, a, b)) = im.first_divergence(&pm) {
+            panic!(
+                "{}: plain-VM meter `{name}` diverged (interp {a}, vm {b})",
+                cfg.label
+            );
+        }
+        let oracle = outputs_of(&mut it);
+        assert_bits_eq(cfg.label, "fused", &oracle, &benchkit::vm_outputs(&fused));
+        assert_bits_eq(cfg.label, "plain", &oracle, &benchkit::vm_outputs(&plain));
         let ops = im.total_ops();
         if smoke {
-            println!("smoke OK: {} ({} abstract ops, meters equal)", cfg.label, ops);
+            println!(
+                "smoke OK: {} ({} abstract ops, {} fused ops, \
+                 meters equal on all tiers)",
+                cfg.label, ops, n_fused
+            );
             continue;
         }
 
         let si = bench.run(&format!("interp/{}", cfg.label), || {
             std::hint::black_box(benchkit::st_infer_meter(&mut it));
         });
-        let sv = bench.run(&format!("vm/{}", cfg.label), || {
-            std::hint::black_box(benchkit::vm_infer_meter(&mut vm));
+        let sp = bench.run(&format!("vm_plain/{}", cfg.label), || {
+            std::hint::black_box(benchkit::vm_infer_meter(&mut plain));
+        });
+        let sf = bench.run(&format!("vm/{}", cfg.label), || {
+            std::hint::black_box(benchkit::vm_infer_meter(&mut fused));
         });
 
-        let speedup = si.mean_ns / sv.mean_ns.max(1.0);
+        let fused_over_plain = sp.mean_ns / sf.mean_ns.max(1.0);
+        let fused_over_interp = si.mean_ns / sf.mean_ns.max(1.0);
         t.row(&[
             cfg.label.to_string(),
             format!("{:.0}", si.mean_ns),
-            format!("{:.0}", sv.mean_ns),
-            format!("{speedup:.2}x"),
+            format!("{:.0}", sp.mean_ns),
+            format!("{:.0}", sf.mean_ns),
+            format!("{fused_over_plain:.2}x"),
+            format!("{fused_over_interp:.2}x"),
             ops.to_string(),
-            format!("{:.1}", ops as f64 / (sv.mean_ns / 1e3)),
         ]);
         records.push(BenchRecord {
             name: format!("interp/{}", cfg.label),
@@ -115,33 +175,57 @@ fn main() {
             ops_per_inference: ops,
         });
         records.push(BenchRecord {
-            name: format!("vm/{}", cfg.label),
-            mean_ns: sv.mean_ns,
-            median_ns: sv.median_ns,
+            name: format!("vm_plain/{}", cfg.label),
+            mean_ns: sp.mean_ns,
+            median_ns: sp.median_ns,
             ops_per_inference: ops,
         });
-        speedups.push((cfg.label, speedup));
+        records.push(BenchRecord {
+            name: format!("vm/{}", cfg.label),
+            mean_ns: sf.mean_ns,
+            median_ns: sf.median_ns,
+            ops_per_inference: ops,
+        });
+        speedups.push((cfg.label, fused_over_interp));
+        fusion.push((
+            cfg.label,
+            Json::obj(vec![
+                ("interp_ns", Json::Num(si.mean_ns)),
+                ("plain_ns", Json::Num(sp.mean_ns)),
+                ("fused_ns", Json::Num(sf.mean_ns)),
+                ("fused_over_plain", Json::Num(fused_over_plain)),
+                ("fused_over_interp", Json::Num(fused_over_interp)),
+                ("fused_op_count", Json::Num(n_fused as f64)),
+            ]),
+        ));
     }
 
     if smoke {
-        println!("bytecode smoke: all configs bit-identical across tiers");
+        println!(
+            "bytecode smoke: all configs bit-identical across all \
+             three tiers (fusion on and off)"
+        );
         return;
     }
     t.print();
     println!(
-        "acceptance target: >= 3x VM speedup on dense-MLP forward passes."
+        "acceptance targets: >= 3x fused-VM speedup over the interpreter \
+         and >= 1.5x over the plain VM on dense-MLP forward passes."
     );
 
     if let Some(path) = json_path {
-        let extras = vec![(
-            "speedup",
-            Json::obj(
-                speedups
-                    .iter()
-                    .map(|(k, v)| (*k, Json::Num(*v)))
-                    .collect(),
+        let extras = vec![
+            (
+                "speedup",
+                Json::obj(
+                    speedups
+                        .iter()
+                        .map(|(k, v)| (*k, Json::Num(*v)))
+                        .collect(),
+                ),
             ),
-        )];
+            ("fusion", Json::obj(fusion)),
+        ];
         write_bench_json(&path, "st_vm", &records, extras)
             .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
         println!("wrote {}", path.display());

@@ -24,10 +24,26 @@
 //! pre-bumps some counters before evaluating operands; the VM has
 //! already evaluated operands when the op runs). Error programs
 //! must still fail on both tiers.
+//!
+//! Superinstruction tier: when [`FusionConfig`] enables it (the
+//! default), [`compile_unit_with`] runs a peephole pass over each
+//! compiled body that rewrites the DOT_PRODUCT / FB_Dense hot-loop
+//! shapes — load-mul-add accumulate chains, row-major indexed pointer
+//! walks, loop head/increment sequences, compare-and-branch guards —
+//! into single fused [`Op`] variants, then deduplicates literal
+//! constants into a per-body [`Konst`] pool and coalesces away the
+//! temp registers the fused windows left dead. Every fused handler in
+//! [`super::vm::Vm`] applies exactly the meter increments of its
+//! unfused expansion (same counters, same bump-vs-read order), so
+//! fusion is invisible to the differential gate; with fusion disabled
+//! the emitted stream is byte-identical to the unfused compiler
+//! output and the constant pool stays empty.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::ir::*;
+use super::value::Value;
 
 /// Sentinel register meaning "no operand" (e.g. `p^` with no offset).
 pub const NO_REG: u16 = u16::MAX;
@@ -167,6 +183,85 @@ pub enum Op {
     /// Errors with "FOR step of 0" like the interp's pre-loop check.
     ForStepCheck { step: u16 },
     Ret,
+
+    // ----------------- fused superinstructions (FusionConfig-gated)
+    // Each variant replaces the exact unfused window documented on its
+    // matcher in `try_fuse_at`; its VM handler applies the same meter
+    // bumps, in the same bump-vs-read order, as the window it stands
+    // for. The peephole pass emits these; `compile_fn` never does.
+    /// [`Op::ForCheck`] + loop-variable materialization (`Mov` +
+    /// `StoreLocal`): exit unmetered, else branches +1 and stores +1.
+    FusedForHead { i: u16, to: u16, step: u16, var: u16, exit: u32 },
+    /// [`Op::ForIncr`] + back-edge [`Op::Jump`]: int_ops +1.
+    FusedForIncrJump { i: u16, step: u16, t: u32 },
+    /// `s := s + pw[i] * px[i]` over two `POINTER TO REAL` walks — the
+    /// DOT_PRODUCT kernel body. loads +7, fp_mul +1, fp_add +1,
+    /// stores +1.
+    FusedDotStep { s: u16, pw: u16, px: u16, i: u16, l1: u32, l2: u32 },
+    /// `s := s + a * p[i]` (scalar multiplier, one pointer walk — the
+    /// pruned FB_Dense accumulate). loads +5, fp_mul +1, fp_add +1,
+    /// stores +1.
+    FusedMacStep { s: u16, a: u16, p: u16, i: u16, line: u32 },
+    /// `dst := p[a * b + c]` (row-major weight fetch; `b` names a
+    /// local slot, or a self field when `b_self`). loads +5,
+    /// int_ops +2, stores +1.
+    FusedMacLoad {
+        dst: u16,
+        p: u16,
+        a: u16,
+        b: u16,
+        b_self: bool,
+        c: u16,
+        line: u32,
+    },
+    /// `IF local <op> k THEN` guard: branches +1, loads +1, fp_cmp +1;
+    /// falls through on true, jumps to `t` on false.
+    FusedIfCmpF32Br { slot: u16, k: f32, op: CmpOp, t: u32 },
+    /// Load constant-pool entry `idx` — unmetered, like the `Const*`
+    /// ops it replaces after deduplication.
+    ConstPool { dst: u16, idx: u32 },
+}
+
+impl Op {
+    /// True for the superinstruction variants only the fusion pass
+    /// emits (constant-pool loads included).
+    pub fn is_fused(&self) -> bool {
+        matches!(
+            self,
+            Op::FusedForHead { .. }
+                | Op::FusedForIncrJump { .. }
+                | Op::FusedDotStep { .. }
+                | Op::FusedMacStep { .. }
+                | Op::FusedMacLoad { .. }
+                | Op::FusedIfCmpF32Br { .. }
+                | Op::ConstPool { .. }
+        )
+    }
+}
+
+/// A deduplicated literal in a [`Code`] body's constant pool.
+#[derive(Debug, Clone)]
+pub enum Konst {
+    /// Any integer literal (all IEC integer types share `i64` repr).
+    Int(i64),
+    /// REAL literal.
+    F32(f32),
+    /// LREAL literal.
+    F64(f64),
+    /// STRING literal.
+    Str(Arc<str>),
+}
+
+impl Konst {
+    /// Materialize the pooled literal as a runtime value.
+    pub fn to_value(&self) -> Value {
+        match self {
+            Konst::Int(v) => Value::Int(*v),
+            Konst::F32(v) => Value::Real(*v),
+            Konst::F64(v) => Value::LReal(*v),
+            Konst::Str(s) => Value::Str(s.clone()),
+        }
+    }
 }
 
 /// A compiled POU body.
@@ -176,6 +271,9 @@ pub struct Code {
     /// Frame width: IR slots first, expression temps above.
     pub n_regs: u16,
     pub ops: Vec<Op>,
+    /// Deduplicated literal pool ([`Op::ConstPool`] operands). Empty
+    /// unless the fusion pipeline ran over this body.
+    pub pool: Vec<Konst>,
 }
 
 /// Compiled bytecode for a whole [`Unit`], indexed in parallel with
@@ -189,21 +287,72 @@ pub struct CodeUnit {
     pub programs: Vec<Code>,
 }
 
-/// Compile every POU body in the unit.
+impl CodeUnit {
+    /// Every compiled body in the unit (functions, methods, FB bodies,
+    /// programs) — the corpus the invariant tests sweep.
+    pub fn all_codes(&self) -> impl Iterator<Item = &Code> {
+        self.funcs
+            .iter()
+            .chain(self.fb_methods.iter().flatten())
+            .chain(self.fb_bodies.iter().flatten())
+            .chain(self.programs.iter())
+    }
+
+    /// Count of fused superinstructions across the unit — zero when
+    /// compiled with fusion disabled.
+    pub fn fused_ops(&self) -> usize {
+        self.all_codes()
+            .map(|c| c.ops.iter().filter(|o| o.is_fused()).count())
+            .sum()
+    }
+}
+
+/// Toggle for the superinstruction pipeline (peephole fusion +
+/// constant-pool dedup + register coalescing). On by default; with
+/// `enabled: false` the compiled stream is byte-identical to the
+/// plain `compile_fn` output, which keeps every stage differentiable
+/// against the previous tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionConfig {
+    /// Run the fusion pipeline after the mechanical lowering.
+    pub enabled: bool,
+}
+
+impl Default for FusionConfig {
+    fn default() -> Self {
+        FusionConfig { enabled: true }
+    }
+}
+
+/// Compile every POU body in the unit with the default (fused)
+/// configuration.
 pub fn compile_unit(unit: &Unit) -> CodeUnit {
+    compile_unit_with(unit, &FusionConfig::default())
+}
+
+/// Compile every POU body in the unit, then (when enabled) run the
+/// fusion pipeline over each body.
+pub fn compile_unit_with(unit: &Unit, cfg: &FusionConfig) -> CodeUnit {
+    let compile = |fd: &FuncDef| {
+        let mut code = compile_fn(fd);
+        if cfg.enabled {
+            fuse(&mut code, fd.slots.len() as u16);
+        }
+        code
+    };
     CodeUnit {
-        funcs: unit.funcs.iter().map(compile_fn).collect(),
+        funcs: unit.funcs.iter().map(compile).collect(),
         fb_methods: unit
             .fbs
             .iter()
-            .map(|fb| fb.methods.iter().map(compile_fn).collect())
+            .map(|fb| fb.methods.iter().map(compile).collect())
             .collect(),
         fb_bodies: unit
             .fbs
             .iter()
-            .map(|fb| fb.body.as_ref().map(compile_fn))
+            .map(|fb| fb.body.as_ref().map(compile))
             .collect(),
-        programs: unit.programs.iter().map(|p| compile_fn(&p.body)).collect(),
+        programs: unit.programs.iter().map(|p| compile(&p.body)).collect(),
     }
 }
 
@@ -224,7 +373,543 @@ fn compile_fn(fd: &FuncDef) -> Code {
     };
     fc.block(&fd.body);
     fc.ops.push(Op::Ret);
-    Code { name: fd.name.clone(), n_regs: fc.max, ops: fc.ops }
+    Code { name: fd.name.clone(), n_regs: fc.max, ops: fc.ops, pool: Vec::new() }
+}
+
+// ===================================================== fusion pipeline
+//
+// Three passes, in order, all per-body and all purely peephole-local:
+//
+//  1. `fuse` — longest-match-first window rewriting. A window is only
+//     fused when no interior pc is a jump target (the window *start*
+//     may be one), and every consumed pc is remapped to the fused op's
+//     new index so control flow stays exact.
+//  2. `pool_constants` — `Const{Int,F32,F64,Str}` ops become
+//     [`Op::ConstPool`] loads from a deduplicated per-body pool
+//     (floats keyed by bit pattern, so `0.0` and `-0.0` stay
+//     distinct).
+//  3. `coalesce` — temp registers are renumbered densely in first-use
+//     order (slots keep their identity), shrinking `n_regs` by the
+//     temps the fused windows no longer touch; smaller frames mean
+//     fewer `Null` pushes per call.
+
+/// Run the whole fusion pipeline over one compiled body.
+fn fuse(code: &mut Code, n_slots: u16) {
+    // Jump-target bitmap over the unfused stream.
+    let mut targets = vec![false; code.ops.len() + 1];
+    for op in &code.ops {
+        match op {
+            Op::Jump { t }
+            | Op::JumpIfFalse { t, .. }
+            | Op::CaseJump { t, .. }
+            | Op::ForCheck { exit: t, .. } => targets[*t as usize] = true,
+            _ => {}
+        }
+    }
+
+    // Rebuild left-to-right, recording old-pc -> new-pc for every
+    // consumed position (plus the one-past-the-end pc, a valid jump
+    // target for exits).
+    let old = std::mem::take(&mut code.ops);
+    let mut new_ops: Vec<Op> = Vec::with_capacity(old.len());
+    let mut map = vec![0u32; old.len() + 1];
+    let mut p = 0usize;
+    while p < old.len() {
+        if let Some((fused, width)) = try_fuse_at(&old, p, n_slots, &targets)
+        {
+            for q in p..p + width {
+                map[q] = new_ops.len() as u32;
+            }
+            new_ops.push(fused);
+            p += width;
+        } else {
+            map[p] = new_ops.len() as u32;
+            new_ops.push(old[p].clone());
+            p += 1;
+        }
+    }
+    map[old.len()] = new_ops.len() as u32;
+
+    // Remap every jump field into the rebuilt stream.
+    for op in &mut new_ops {
+        match op {
+            Op::Jump { t }
+            | Op::JumpIfFalse { t, .. }
+            | Op::CaseJump { t, .. }
+            | Op::ForCheck { exit: t, .. }
+            | Op::FusedForHead { exit: t, .. }
+            | Op::FusedForIncrJump { t, .. }
+            | Op::FusedIfCmpF32Br { t, .. } => *t = map[*t as usize],
+            _ => {}
+        }
+    }
+    code.ops = new_ops;
+
+    pool_constants(code);
+    coalesce(code, n_slots);
+}
+
+/// `b as u32 == a as u32 + 1` without u16 overflow.
+fn succ(a: u16, b: u16) -> bool {
+    b as u32 == a as u32 + 1
+}
+
+/// Try every matcher at `p`, longest window first. Returns the fused
+/// op and the window width it consumes.
+fn try_fuse_at(
+    ops: &[Op],
+    p: usize,
+    n_slots: u16,
+    targets: &[bool],
+) -> Option<(Op, usize)> {
+    let clear = |k: usize| (p + 1..p + k).all(|q| !targets[q]);
+    if let Some(w) = ops.get(p..p + 10) {
+        if clear(10) {
+            if let Some(op) = match_dot_step(w, n_slots) {
+                return Some((op, 10));
+            }
+        }
+    }
+    if let Some(w) = ops.get(p..p + 8) {
+        if clear(8) {
+            if let Some(op) = match_mac_step(w, n_slots) {
+                return Some((op, 8));
+            }
+            if let Some(op) = match_mac_load(w, n_slots) {
+                return Some((op, 8));
+            }
+        }
+    }
+    if let Some(w) = ops.get(p..p + 5) {
+        if clear(5) {
+            if let Some(op) = match_if_cmp(w, n_slots) {
+                return Some((op, 5));
+            }
+        }
+    }
+    if let Some(w) = ops.get(p..p + 3) {
+        if clear(3) {
+            if let Some(op) = match_for_head(w, n_slots) {
+                return Some((op, 3));
+            }
+        }
+    }
+    if let Some(w) = ops.get(p..p + 2) {
+        if clear(2) {
+            if let Some(op) = match_incr_jump(w) {
+                return Some((op, 2));
+            }
+        }
+    }
+    None
+}
+
+/// `s := s + pw[i] * px[i]` — the DOT_PRODUCT kernel body, exactly as
+/// `compile_fn` lowers it (all four names are local slots, both
+/// pointers F32, temps consecutive from the statement watermark).
+fn match_dot_step(w: &[Op], n_slots: u16) -> Option<Op> {
+    if let [Op::LoadLocal { dst: r0, slot: s }, Op::LoadLocal { dst: r1, slot: pw }, Op::LoadLocal { dst: r2, slot: i }, Op::LoadPtr { dst: d1, p: p1, off: o1, kind: PtrKind::F32, line: l1 }, Op::LoadLocal { dst: r2b, slot: px }, Op::LoadLocal { dst: r3, slot: i2 }, Op::LoadPtr { dst: d2, p: p2, off: o2, kind: PtrKind::F32, line: l2 }, Op::ArithF32 { op: ArithOp::Mul, dst: md, a: ma, b: mb, .. }, Op::ArithF32 { op: ArithOp::Add, dst: ad, a: aa, b: ab, .. }, Op::StoreLocal { src: st, slot: s2, copy: CopyMode::Move }] =
+        w
+    {
+        let shape = *r0 >= n_slots
+            && succ(*r0, *r1)
+            && succ(*r1, *r2)
+            && succ(*r2, *r3)
+            && d1 == r1
+            && p1 == r1
+            && o1 == r2
+            && r2b == r2
+            && i2 == i
+            && d2 == r2
+            && p2 == r2
+            && o2 == r3
+            && md == r1
+            && ma == r1
+            && mb == r2
+            && ad == r0
+            && aa == r0
+            && ab == r1
+            && st == r0
+            && s2 == s;
+        if shape {
+            return Some(Op::FusedDotStep {
+                s: *s,
+                pw: *pw,
+                px: *px,
+                i: *i,
+                l1: *l1,
+                l2: *l2,
+            });
+        }
+    }
+    None
+}
+
+/// `s := s + a * p[i]` — the pruned FB_Dense accumulate (`s := s +
+/// wv * px[i]` with `wv` already loaded).
+fn match_mac_step(w: &[Op], n_slots: u16) -> Option<Op> {
+    if let [Op::LoadLocal { dst: r0, slot: s }, Op::LoadLocal { dst: r1, slot: a }, Op::LoadLocal { dst: r2, slot: p }, Op::LoadLocal { dst: r3, slot: i }, Op::LoadPtr { dst: d1, p: p1, off: o1, kind: PtrKind::F32, line }, Op::ArithF32 { op: ArithOp::Mul, dst: md, a: ma, b: mb, .. }, Op::ArithF32 { op: ArithOp::Add, dst: ad, a: aa, b: ab, .. }, Op::StoreLocal { src: st, slot: s2, copy: CopyMode::Move }] =
+        w
+    {
+        let shape = *r0 >= n_slots
+            && succ(*r0, *r1)
+            && succ(*r1, *r2)
+            && succ(*r2, *r3)
+            && d1 == r2
+            && p1 == r2
+            && o1 == r3
+            && md == r1
+            && ma == r1
+            && mb == r2
+            && ad == r0
+            && aa == r0
+            && ab == r1
+            && st == r0
+            && s2 == s;
+        if shape {
+            return Some(Op::FusedMacStep {
+                s: *s,
+                a: *a,
+                p: *p,
+                i: *i,
+                line: *line,
+            });
+        }
+    }
+    None
+}
+
+/// `dst := p[a * b + c]` — the row-major weight fetch
+/// (`wv := pw[j * inputs + i]`; `inputs` is a self field inside FB
+/// methods, a local in functions).
+fn match_mac_load(w: &[Op], n_slots: u16) -> Option<Op> {
+    if let [Op::LoadLocal { dst: r0, slot: pp }, Op::LoadLocal { dst: r1, slot: a }, op_b, Op::ArithInt { op: ArithOp::Mul, dst: m1, a: ma, b: mb, .. }, Op::LoadLocal { dst: r2b, slot: c }, Op::ArithInt { op: ArithOp::Add, dst: a1, a: aa, b: ab, .. }, Op::LoadPtr { dst: d, p: p1, off: o1, kind: PtrKind::F32, line }, Op::StoreLocal { src: st, slot: dst_slot, copy: CopyMode::Move }] =
+        w
+    {
+        let (b, b_self, r2) = match op_b {
+            Op::LoadLocal { dst, slot } => (*slot, false, *dst),
+            Op::LoadSelf { dst, f } => (*f, true, *dst),
+            _ => return None,
+        };
+        let shape = *r0 >= n_slots
+            && succ(*r0, *r1)
+            && succ(*r1, r2)
+            && m1 == r1
+            && ma == r1
+            && *mb == r2
+            && *r2b == r2
+            && a1 == r1
+            && aa == r1
+            && *ab == r2
+            && d == r0
+            && p1 == r0
+            && o1 == r1
+            && st == r0;
+        if shape {
+            return Some(Op::FusedMacLoad {
+                dst: *dst_slot,
+                p: *pp,
+                a: *a,
+                b,
+                b_self,
+                c: *c,
+                line: *line,
+            });
+        }
+    }
+    None
+}
+
+/// `IF local <op> k THEN` over REAL — activation-function guards
+/// (`IF x > 0.0 THEN`, `IF wv <> 0.0 THEN`). Only the first IF arm
+/// carries the `BumpBranch`, so only that arm fuses.
+fn match_if_cmp(w: &[Op], n_slots: u16) -> Option<Op> {
+    if let [Op::BumpBranch, Op::LoadLocal { dst: r0, slot }, Op::ConstF32 { dst: r1, v }, Op::CmpF32 { op, dst: cd, a: ca, b: cb }, Op::JumpIfFalse { c, t }] =
+        w
+    {
+        let shape = *r0 >= n_slots
+            && succ(*r0, *r1)
+            && cd == r0
+            && ca == r0
+            && cb == r1
+            && c == r0;
+        if shape {
+            return Some(Op::FusedIfCmpF32Br {
+                slot: *slot,
+                k: *v,
+                op: *op,
+                t: *t,
+            });
+        }
+    }
+    None
+}
+
+/// FOR head: check + materialize the loop variable into its local
+/// slot. Programs store their loop variable through `StoreSelf`, so
+/// only function/method loops (the hot ones) fuse.
+fn match_for_head(w: &[Op], n_slots: u16) -> Option<Op> {
+    if let [Op::ForCheck { i, to, step, exit }, Op::Mov { dst: rt, src }, Op::StoreLocal { src: st, slot: var, copy: CopyMode::Move }] =
+        w
+    {
+        let shape = *i >= n_slots
+            && *to >= n_slots
+            && *step >= n_slots
+            && *rt >= n_slots
+            && src == i
+            && st == rt;
+        if shape {
+            return Some(Op::FusedForHead {
+                i: *i,
+                to: *to,
+                step: *step,
+                var: *var,
+                exit: *exit,
+            });
+        }
+    }
+    None
+}
+
+/// FOR tail: increment + back-edge jump. The registers are loop-frame
+/// temps, disjoint from anything the jump target reads first.
+fn match_incr_jump(w: &[Op]) -> Option<Op> {
+    if let [Op::ForIncr { i, step }, Op::Jump { t }] = w {
+        return Some(Op::FusedForIncrJump { i: *i, step: *step, t: *t });
+    }
+    None
+}
+
+/// Replace `Const*` literal ops with loads from a deduplicated
+/// per-body pool. Floats are keyed by bit pattern so distinct NaNs
+/// and signed zeros survive; BOOL/NULL literals stay immediate.
+fn pool_constants(code: &mut Code) {
+    #[derive(PartialEq, Eq, Hash)]
+    enum Key {
+        Int(i64),
+        F32(u32),
+        F64(u64),
+        Str(Arc<str>),
+    }
+    let mut index: HashMap<Key, u32> = HashMap::new();
+    let mut pool: Vec<Konst> = Vec::new();
+    for op in &mut code.ops {
+        let (dst, key, konst) = match op {
+            Op::ConstInt { dst, v } => (*dst, Key::Int(*v), Konst::Int(*v)),
+            Op::ConstF32 { dst, v } => {
+                (*dst, Key::F32(v.to_bits()), Konst::F32(*v))
+            }
+            Op::ConstF64 { dst, v } => {
+                (*dst, Key::F64(v.to_bits()), Konst::F64(*v))
+            }
+            Op::ConstStr { dst, v } => {
+                (*dst, Key::Str(v.clone()), Konst::Str(v.clone()))
+            }
+            _ => continue,
+        };
+        let idx = *index.entry(key).or_insert_with(|| {
+            pool.push(konst);
+            (pool.len() - 1) as u32
+        });
+        *op = Op::ConstPool { dst, idx };
+    }
+    code.pool = pool;
+}
+
+/// Renumber temp registers densely in first-use order. Slots
+/// (`0..n_slots`) keep their identity — they *are* the frame layout —
+/// and `n_regs` shrinks by however many temps fusion obsoleted.
+fn coalesce(code: &mut Code, n_slots: u16) {
+    let mut map = vec![NO_REG; code.n_regs as usize];
+    for (s, m) in map.iter_mut().enumerate().take(n_slots as usize) {
+        *m = s as u16;
+    }
+    let mut next = n_slots;
+    for op in &mut code.ops {
+        for_each_reg(op, &mut |r| {
+            if *r != NO_REG && map[*r as usize] == NO_REG {
+                map[*r as usize] = next;
+                next += 1;
+            }
+        });
+    }
+    for op in &mut code.ops {
+        for_each_reg(op, &mut |r| {
+            if *r != NO_REG {
+                *r = map[*r as usize];
+            }
+        });
+    }
+    code.n_regs = next;
+}
+
+/// Visit every register-typed field of an op (`NO_REG` sentinels
+/// included — callers guard). Indices into unit tables (globals,
+/// fields, functions, FBs, pool) are *not* registers and are skipped.
+fn for_each_reg(op: &mut Op, f: &mut dyn FnMut(&mut u16)) {
+    match op {
+        Op::ConstBool { dst, .. }
+        | Op::ConstInt { dst, .. }
+        | Op::ConstF32 { dst, .. }
+        | Op::ConstF64 { dst, .. }
+        | Op::ConstStr { dst, .. }
+        | Op::ConstNull { dst }
+        | Op::ConstPool { dst, .. }
+        | Op::LoadGlobal { dst, .. }
+        | Op::LoadSelf { dst, .. }
+        | Op::AdrGlobal { dst, .. }
+        | Op::AdrSelf { dst, .. }
+        | Op::StructNew { dst, .. } => f(dst),
+        Op::Mov { dst, src }
+        | Op::NegF32 { dst, src }
+        | Op::NegF64 { dst, src }
+        | Op::NegInt { dst, src }
+        | Op::NotBool { dst, src }
+        | Op::IntToF32 { dst, src }
+        | Op::IntToF64 { dst, src }
+        | Op::F32ToF64 { dst, src }
+        | Op::F64ToF32 { dst, src }
+        | Op::F32ToInt { dst, src, .. }
+        | Op::F64ToInt { dst, src, .. }
+        | Op::IntNarrow { dst, src, .. }
+        | Op::BoolToInt { dst, src } => {
+            f(dst);
+            f(src);
+        }
+        Op::LoadLocal { dst, slot } | Op::AdrLocal { dst, slot, .. } => {
+            f(dst);
+            f(slot);
+        }
+        Op::LoadField { dst, base, .. }
+        | Op::LoadFbField { dst, base, .. }
+        | Op::AdrField { dst, base, .. }
+        | Op::AdrFbField { dst, base, .. } => {
+            f(dst);
+            f(base);
+        }
+        Op::LoadIdx { dst, base, idx, .. }
+        | Op::AdrIdx { dst, base, idx, .. } => {
+            f(dst);
+            f(base);
+            f(idx);
+        }
+        Op::LoadPtr { dst, p, off, .. } | Op::AdrPtr { dst, p, off, .. } => {
+            f(dst);
+            f(p);
+            f(off);
+        }
+        Op::ArithF32 { dst, a, b, .. }
+        | Op::ArithF64 { dst, a, b, .. }
+        | Op::ArithInt { dst, a, b, .. }
+        | Op::CmpF32 { dst, a, b, .. }
+        | Op::CmpF64 { dst, a, b, .. }
+        | Op::CmpInt { dst, a, b, .. }
+        | Op::CmpBool { dst, a, b, .. }
+        | Op::BoolB { dst, a, b, .. }
+        | Op::IntB { dst, a, b, .. } => {
+            f(dst);
+            f(a);
+            f(b);
+        }
+        Op::CallFn { dst, args, .. } => {
+            f(dst);
+            for r in args.iter_mut() {
+                f(r);
+            }
+        }
+        Op::CallMethod { dst, self_r, args, .. }
+        | Op::CallIface { dst, self_r, args, .. } => {
+            f(dst);
+            f(self_r);
+            for r in args.iter_mut() {
+                f(r);
+            }
+        }
+        Op::CheckFb { r, .. } => f(r),
+        Op::InvokeFbBody { fb_r, .. } => f(fb_r),
+        Op::StoreFbInput { fb_r, src, .. } => {
+            f(fb_r);
+            f(src);
+        }
+        Op::LoadFbOutput { dst, fb_r, .. } => {
+            f(dst);
+            f(fb_r);
+        }
+        Op::StructSet { s, src, .. } => {
+            f(s);
+            f(src);
+        }
+        Op::Intrinsic { dst, args, .. } | Op::FileIo { dst, args, .. } => {
+            f(dst);
+            for r in args.iter_mut() {
+                f(r);
+            }
+        }
+        Op::StoreLocal { src, slot, .. } => {
+            f(src);
+            f(slot);
+        }
+        Op::StoreGlobal { src, .. } | Op::StoreSelf { src, .. } => f(src),
+        Op::StoreField { src, base, .. } | Op::StoreFbField { src, base, .. } => {
+            f(src);
+            f(base);
+        }
+        Op::StoreIdx { src, base, idx, .. } => {
+            f(src);
+            f(base);
+            f(idx);
+        }
+        Op::StorePtr { src, p, off, .. } => {
+            f(src);
+            f(p);
+            f(off);
+        }
+        Op::JumpIfFalse { c, .. } => f(c),
+        Op::CaseJump { src, .. } => f(src),
+        Op::ForCheck { i, to, step, .. } => {
+            f(i);
+            f(to);
+            f(step);
+        }
+        Op::ForIncr { i, step } => {
+            f(i);
+            f(step);
+        }
+        Op::ForStepCheck { step } => f(step),
+        Op::FusedForHead { i, to, step, var, .. } => {
+            f(i);
+            f(to);
+            f(step);
+            f(var);
+        }
+        Op::FusedForIncrJump { i, step, .. } => {
+            f(i);
+            f(step);
+        }
+        Op::FusedDotStep { s, pw, px, i, .. } => {
+            f(s);
+            f(pw);
+            f(px);
+            f(i);
+        }
+        Op::FusedMacStep { s, a, p, i, .. } => {
+            f(s);
+            f(a);
+            f(p);
+            f(i);
+        }
+        Op::FusedMacLoad { dst, p, a, b, b_self, c, .. } => {
+            f(dst);
+            f(p);
+            f(a);
+            if !*b_self {
+                f(b);
+            }
+            f(c);
+        }
+        Op::FusedIfCmpF32Br { slot, .. } => f(slot),
+        Op::Jump { .. } | Op::BumpBranch | Op::Ret => {}
+    }
 }
 
 #[derive(Default)]
@@ -911,7 +1596,10 @@ mod tests {
                 Op::Jump { t }
                 | Op::JumpIfFalse { t, .. }
                 | Op::CaseJump { t, .. }
-                | Op::ForCheck { exit: t, .. } => {
+                | Op::ForCheck { exit: t, .. }
+                | Op::FusedForHead { exit: t, .. }
+                | Op::FusedForIncrJump { t, .. }
+                | Op::FusedIfCmpF32Br { t, .. } => {
                     // Every patched target lands strictly inside the
                     // stream (the trailing Ret follows all patch
                     // points); the PENDING placeholder (u32::MAX)
@@ -921,8 +1609,12 @@ mod tests {
                 _ => {}
             }
         }
+        // Program loop variables live in self fields, so the FOR head
+        // stays unfused; the increment + back-edge pair fuses.
         assert!(ops.iter().any(|o| matches!(o, Op::ForCheck { .. })));
-        assert!(ops.iter().any(|o| matches!(o, Op::ForIncr { .. })));
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, Op::FusedForIncrJump { .. })));
     }
 
     #[test]
@@ -955,5 +1647,155 @@ mod tests {
         assert_eq!(cases.len(), 2);
         assert_eq!(*cases[0], vec![(0, 4)]);
         assert_eq!(*cases[1], vec![(7, 7)]);
+    }
+
+    /// The dense-kernel shapes the fusion pass exists for: a
+    /// DOT_PRODUCT-shaped function and a pruned-row MAC walk.
+    const DENSE_SRC: &str = "FUNCTION DOT : REAL\n\
+         VAR_INPUT pa : POINTER TO REAL; pb : POINTER TO REAL; n : DINT; END_VAR\n\
+         VAR s : REAL; i : DINT; END_VAR\n\
+         FOR i := 0 TO n - 1 DO\n\
+           s := s + pa[i] * pb[i];\n\
+         END_FOR\n\
+         DOT := s;\n\
+         END_FUNCTION\n\
+         FUNCTION ROWMAC : REAL\n\
+         VAR_INPUT pw : POINTER TO REAL; px : POINTER TO REAL; ncols : DINT; row : DINT; END_VAR\n\
+         VAR s, wv : REAL; i : DINT; END_VAR\n\
+         FOR i := 0 TO ncols - 1 DO\n\
+           wv := pw[row * ncols + i];\n\
+           IF wv <> 0.0 THEN\n\
+             s := s + wv * px[i];\n\
+           END_IF\n\
+         END_FOR\n\
+         ROWMAC := s;\n\
+         END_FUNCTION\n\
+         PROGRAM p\n\
+         VAR a, b : ARRAY[0..7] OF REAL; r1, r2 : REAL; i : DINT; END_VAR\n\
+         FOR i := 0 TO 7 DO\n\
+           a[i] := DINT_TO_REAL(i) * 0.25;\n\
+           b[i] := 2.0 - DINT_TO_REAL(i) * 0.25;\n\
+         END_FOR\n\
+         r1 := DOT(ADR(a), ADR(b), 8);\n\
+         r2 := ROWMAC(ADR(a), ADR(b), 4, 1);\n\
+         END_PROGRAM";
+
+    #[test]
+    fn fusion_off_is_byte_identical_to_compile_fn() {
+        let unit = crate::st::compile(DENSE_SRC).expect("compile");
+        let off =
+            compile_unit_with(&unit, &FusionConfig { enabled: false });
+        let manual = CodeUnit {
+            funcs: unit.funcs.iter().map(compile_fn).collect(),
+            fb_methods: unit
+                .fbs
+                .iter()
+                .map(|fb| fb.methods.iter().map(compile_fn).collect())
+                .collect(),
+            fb_bodies: unit
+                .fbs
+                .iter()
+                .map(|fb| fb.body.as_ref().map(compile_fn))
+                .collect(),
+            programs: unit
+                .programs
+                .iter()
+                .map(|p| compile_fn(&p.body))
+                .collect(),
+        };
+        assert_eq!(format!("{manual:?}"), format!("{off:?}"));
+        assert_eq!(off.fused_ops(), 0);
+        assert!(off.all_codes().all(|c| c.pool.is_empty()));
+    }
+
+    #[test]
+    fn dense_kernel_shapes_fuse() {
+        let (_, cu) = compile_src(DENSE_SRC);
+        let has = |pred: &dyn Fn(&Op) -> bool| {
+            cu.all_codes().any(|c| c.ops.iter().any(pred))
+        };
+        assert!(has(&|o| matches!(o, Op::FusedDotStep { .. })));
+        assert!(has(&|o| matches!(o, Op::FusedForHead { .. })));
+        assert!(has(&|o| matches!(o, Op::FusedForIncrJump { .. })));
+        assert!(has(&|o| matches!(o, Op::FusedMacStep { .. })));
+        assert!(
+            has(&|o| matches!(o, Op::FusedMacLoad { b_self: false, .. }))
+        );
+        assert!(has(&|o| matches!(o, Op::FusedIfCmpF32Br { .. })));
+    }
+
+    #[test]
+    fn constant_pool_is_deduplicated() {
+        let (_, cu) = compile_src(
+            "PROGRAM p VAR x, y : REAL; i : DINT; END_VAR\n\
+             x := 1.5; y := 1.5 + 1.5; i := 3 + 3 + 3;\n\
+             END_PROGRAM",
+        );
+        let code = &cu.programs[0];
+        assert!(!code.pool.is_empty());
+        let mut seen = std::collections::HashSet::new();
+        for k in &code.pool {
+            let key = match k {
+                Konst::Int(v) => format!("i{v}"),
+                Konst::F32(v) => format!("f{:08x}", v.to_bits()),
+                Konst::F64(v) => format!("d{:016x}", v.to_bits()),
+                Konst::Str(s) => format!("s{s}"),
+            };
+            assert!(seen.insert(key), "duplicate pool entry {k:?}");
+        }
+        let n_pool = code.pool.len() as u32;
+        for op in &code.ops {
+            if let Op::ConstPool { idx, .. } = op {
+                assert!(*idx < n_pool);
+            }
+            assert!(!matches!(
+                op,
+                Op::ConstInt { .. }
+                    | Op::ConstF32 { .. }
+                    | Op::ConstF64 { .. }
+                    | Op::ConstStr { .. }
+            ));
+        }
+    }
+
+    #[test]
+    fn coalescing_shrinks_fused_frames() {
+        let unit = crate::st::compile(DENSE_SRC).expect("compile");
+        let fused = compile_unit_with(&unit, &FusionConfig::default());
+        let plain =
+            compile_unit_with(&unit, &FusionConfig { enabled: false });
+        let dot_fused = &fused.funcs[0];
+        let dot_plain = &plain.funcs[0];
+        assert!(
+            dot_fused.n_regs < dot_plain.n_regs,
+            "fusion should free dot-step temps ({} vs {})",
+            dot_fused.n_regs,
+            dot_plain.n_regs
+        );
+    }
+
+    #[test]
+    fn registers_stay_in_bounds_fused_and_plain() {
+        let unit = crate::st::compile(DENSE_SRC).expect("compile");
+        for cfg in [
+            FusionConfig { enabled: true },
+            FusionConfig { enabled: false },
+        ] {
+            let cu = compile_unit_with(&unit, &cfg);
+            for code in cu.all_codes() {
+                let name = code.name.clone();
+                let n = code.n_regs;
+                let mut c = code.clone();
+                for op in &mut c.ops {
+                    for_each_reg(op, &mut |r| {
+                        assert!(
+                            *r == NO_REG || *r < n,
+                            "register {} out of bounds in {name}",
+                            *r
+                        );
+                    });
+                }
+            }
+        }
     }
 }

@@ -63,6 +63,34 @@ impl Meter {
             + self.converts
     }
 
+    /// Name the first counter differing from `other`, with both values
+    /// (`None` when equal). The differential harnesses use this to
+    /// report *which* op class a tier drifted on instead of dumping
+    /// two 15-field structs.
+    pub fn first_divergence(
+        &self,
+        other: &Meter,
+    ) -> Option<(&'static str, u64, u64)> {
+        let pairs = [
+            ("loads", self.loads, other.loads),
+            ("stores", self.stores, other.stores),
+            ("fp_add", self.fp_add, other.fp_add),
+            ("fp_mul", self.fp_mul, other.fp_mul),
+            ("fp_div", self.fp_div, other.fp_div),
+            ("fp_trans", self.fp_trans, other.fp_trans),
+            ("int_ops", self.int_ops, other.int_ops),
+            ("cmp", self.cmp, other.cmp),
+            ("fp_cmp", self.fp_cmp, other.fp_cmp),
+            ("branches", self.branches, other.branches),
+            ("calls", self.calls, other.calls),
+            ("copy_bytes", self.copy_bytes, other.copy_bytes),
+            ("converts", self.converts, other.converts),
+            ("io_calls", self.io_calls, other.io_calls),
+            ("io_bytes", self.io_bytes, other.io_bytes),
+        ];
+        pairs.iter().find(|(_, a, b)| a != b).copied()
+    }
+
     /// Counter delta `self - earlier` (panics if counters went backwards).
     pub fn since(&self, earlier: &Meter) -> Meter {
         Meter {
@@ -184,6 +212,18 @@ mod tests {
         assert_eq!((d.copy_bytes, d.io_calls, d.io_bytes), (88, 87, 86));
         // since(self) is the zero delta; zero delta has no ops.
         assert_eq!(b.since(&b).total_ops(), 0);
+    }
+
+    #[test]
+    fn first_divergence_names_the_counter() {
+        let a = Meter { loads: 3, fp_mul: 2, ..Meter::default() };
+        assert_eq!(a.first_divergence(&a), None);
+        let mut b = a.clone();
+        b.fp_mul = 5;
+        assert_eq!(a.first_divergence(&b), Some(("fp_mul", 2, 5)));
+        // Field order is the struct's: the first drifting counter wins.
+        b.loads = 0;
+        assert_eq!(a.first_divergence(&b), Some(("loads", 3, 0)));
     }
 
     #[test]

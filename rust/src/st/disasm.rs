@@ -1,0 +1,501 @@
+//! Bytecode disassembler with a parseable, round-trippable listing
+//! format.
+//!
+//! Every [`Op`] renders as one line — `Mnemonic key=value ...` — and
+//! [`parse_line`] recovers the same [`GenericOp`] from that text, so
+//! the property tests can assert `parse(render(op)) == generic(op)`
+//! over the whole compiled corpus (fused and plain). Exactness rules:
+//! floats print as their IEEE bit patterns (`0x3f800000`), strings are
+//! single-quoted with `\\`/`\'`/`\n` escapes, and list-valued fields
+//! (call args, CASE ranges) use `,`/`|` separators so no value ever
+//! contains a bare space.
+
+use std::fmt::Write as _;
+
+use super::bytecode::{Code, Konst, Op};
+
+/// An op reduced to its mnemonic and stringly-typed fields — the
+/// common form both the renderer and the parser speak.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenericOp {
+    /// Variant name, e.g. `LoadPtr`.
+    pub name: String,
+    /// `(key, raw value)` pairs in declaration order. Values are
+    /// unescaped; quoting happens at render time.
+    pub fields: Vec<(String, String)>,
+}
+
+fn f32_bits(v: f32) -> String {
+    format!("0x{:08x}", v.to_bits())
+}
+
+fn f64_bits(v: f64) -> String {
+    format!("0x{:016x}", v.to_bits())
+}
+
+fn dbg(x: impl std::fmt::Debug) -> String {
+    format!("{x:?}")
+}
+
+fn reg_list(rs: &[u16]) -> String {
+    let items: Vec<String> = rs.iter().map(|r| r.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn range_list(rs: &[(i64, i64)]) -> String {
+    let items: Vec<String> =
+        rs.iter().map(|(lo, hi)| format!("{lo}..{hi}")).collect();
+    items.join("|")
+}
+
+/// Reduce an op to its generic (mnemonic + fields) form.
+pub fn op_to_generic(op: &Op) -> GenericOp {
+    macro_rules! g {
+        ($name:expr $(, $k:expr => $v:expr)* $(,)?) => {
+            GenericOp {
+                name: ($name).to_string(),
+                fields: vec![$((($k).to_string(), $v)),*],
+            }
+        };
+    }
+    match op {
+        Op::ConstBool { dst, v } => {
+            g!("ConstBool", "dst" => dst.to_string(), "v" => dbg(v))
+        }
+        Op::ConstInt { dst, v } => {
+            g!("ConstInt", "dst" => dst.to_string(), "v" => v.to_string())
+        }
+        Op::ConstF32 { dst, v } => {
+            g!("ConstF32", "dst" => dst.to_string(), "v" => f32_bits(*v))
+        }
+        Op::ConstF64 { dst, v } => {
+            g!("ConstF64", "dst" => dst.to_string(), "v" => f64_bits(*v))
+        }
+        Op::ConstStr { dst, v } => {
+            g!("ConstStr", "dst" => dst.to_string(), "v" => v.to_string())
+        }
+        Op::ConstNull { dst } => g!("ConstNull", "dst" => dst.to_string()),
+        Op::Mov { dst, src } => {
+            g!("Mov", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::LoadLocal { dst, slot } => {
+            g!("LoadLocal", "dst" => dst.to_string(), "slot" => slot.to_string())
+        }
+        Op::LoadGlobal { dst, g } => {
+            g!("LoadGlobal", "dst" => dst.to_string(), "g" => g.to_string())
+        }
+        Op::LoadSelf { dst, f } => {
+            g!("LoadSelf", "dst" => dst.to_string(), "f" => f.to_string())
+        }
+        Op::LoadField { dst, base, f } => g!("LoadField",
+            "dst" => dst.to_string(), "base" => base.to_string(),
+            "f" => f.to_string()),
+        Op::LoadFbField { dst, base, f } => g!("LoadFbField",
+            "dst" => dst.to_string(), "base" => base.to_string(),
+            "f" => f.to_string()),
+        Op::LoadIdx { dst, base, idx, len, kind, line } => g!("LoadIdx",
+            "dst" => dst.to_string(), "base" => base.to_string(),
+            "idx" => idx.to_string(), "len" => len.to_string(),
+            "kind" => dbg(kind), "line" => line.to_string()),
+        Op::LoadPtr { dst, p, off, kind, line } => g!("LoadPtr",
+            "dst" => dst.to_string(), "p" => p.to_string(),
+            "off" => off.to_string(), "kind" => dbg(kind),
+            "line" => line.to_string()),
+        Op::AdrLocal { dst, slot, kind } => g!("AdrLocal",
+            "dst" => dst.to_string(), "slot" => slot.to_string(),
+            "kind" => dbg(kind)),
+        Op::AdrGlobal { dst, g, kind } => g!("AdrGlobal",
+            "dst" => dst.to_string(), "g" => g.to_string(),
+            "kind" => dbg(kind)),
+        Op::AdrSelf { dst, f, kind } => g!("AdrSelf",
+            "dst" => dst.to_string(), "f" => f.to_string(),
+            "kind" => dbg(kind)),
+        Op::AdrField { dst, base, f, kind } => g!("AdrField",
+            "dst" => dst.to_string(), "base" => base.to_string(),
+            "f" => f.to_string(), "kind" => dbg(kind)),
+        Op::AdrFbField { dst, base, f, kind } => g!("AdrFbField",
+            "dst" => dst.to_string(), "base" => base.to_string(),
+            "f" => f.to_string(), "kind" => dbg(kind)),
+        Op::AdrIdx { dst, base, idx, len, kind, line } => g!("AdrIdx",
+            "dst" => dst.to_string(), "base" => base.to_string(),
+            "idx" => idx.to_string(), "len" => len.to_string(),
+            "kind" => dbg(kind), "line" => line.to_string()),
+        Op::AdrPtr { dst, p, off, kind, line } => g!("AdrPtr",
+            "dst" => dst.to_string(), "p" => p.to_string(),
+            "off" => off.to_string(), "kind" => dbg(kind),
+            "line" => line.to_string()),
+        Op::NegF32 { dst, src } => {
+            g!("NegF32", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::NegF64 { dst, src } => {
+            g!("NegF64", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::NegInt { dst, src } => {
+            g!("NegInt", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::NotBool { dst, src } => {
+            g!("NotBool", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::ArithF32 { op, dst, a, b, line } => g!("ArithF32",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string(),
+            "line" => line.to_string()),
+        Op::ArithF64 { op, dst, a, b, line } => g!("ArithF64",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string(),
+            "line" => line.to_string()),
+        Op::ArithInt { op, dst, a, b, line } => g!("ArithInt",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string(),
+            "line" => line.to_string()),
+        Op::CmpF32 { op, dst, a, b } => g!("CmpF32",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string()),
+        Op::CmpF64 { op, dst, a, b } => g!("CmpF64",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string()),
+        Op::CmpInt { op, dst, a, b } => g!("CmpInt",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string()),
+        Op::CmpBool { op, dst, a, b } => g!("CmpBool",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string()),
+        Op::BoolB { op, dst, a, b } => g!("BoolB",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string()),
+        Op::IntB { op, dst, a, b } => g!("IntB",
+            "op" => dbg(op), "dst" => dst.to_string(),
+            "a" => a.to_string(), "b" => b.to_string()),
+        Op::IntToF32 { dst, src } => {
+            g!("IntToF32", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::IntToF64 { dst, src } => {
+            g!("IntToF64", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::F32ToF64 { dst, src } => {
+            g!("F32ToF64", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::F64ToF32 { dst, src } => {
+            g!("F64ToF32", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::F32ToInt { dst, src, ty } => g!("F32ToInt",
+            "dst" => dst.to_string(), "src" => src.to_string(),
+            "ty" => dbg(ty)),
+        Op::F64ToInt { dst, src, ty } => g!("F64ToInt",
+            "dst" => dst.to_string(), "src" => src.to_string(),
+            "ty" => dbg(ty)),
+        Op::IntNarrow { dst, src, ty } => g!("IntNarrow",
+            "dst" => dst.to_string(), "src" => src.to_string(),
+            "ty" => dbg(ty)),
+        Op::BoolToInt { dst, src } => {
+            g!("BoolToInt", "dst" => dst.to_string(), "src" => src.to_string())
+        }
+        Op::CallFn { dst, fid, args } => g!("CallFn",
+            "dst" => dst.to_string(), "fid" => fid.to_string(),
+            "args" => reg_list(args)),
+        Op::CallMethod { dst, fb, midx, self_r, args } => g!("CallMethod",
+            "dst" => dst.to_string(), "fb" => fb.to_string(),
+            "midx" => midx.to_string(), "self_r" => self_r.to_string(),
+            "args" => reg_list(args)),
+        Op::CallIface { dst, iface, mid, self_r, args, line } => {
+            g!("CallIface",
+                "dst" => dst.to_string(), "iface" => iface.to_string(),
+                "mid" => mid.to_string(), "self_r" => self_r.to_string(),
+                "args" => reg_list(args), "line" => line.to_string())
+        }
+        Op::CheckFb { r, line } => g!("CheckFb",
+            "r" => r.to_string(), "line" => line.to_string()),
+        Op::InvokeFbBody { fb_r, fb_id, line } => g!("InvokeFbBody",
+            "fb_r" => fb_r.to_string(), "fb_id" => fb_id.to_string(),
+            "line" => line.to_string()),
+        Op::StoreFbInput { fb_r, fidx, src, copy } => g!("StoreFbInput",
+            "fb_r" => fb_r.to_string(), "fidx" => fidx.to_string(),
+            "src" => src.to_string(), "copy" => dbg(copy)),
+        Op::LoadFbOutput { dst, fb_r, fidx } => g!("LoadFbOutput",
+            "dst" => dst.to_string(), "fb_r" => fb_r.to_string(),
+            "fidx" => fidx.to_string()),
+        Op::StructNew { dst, sid } => g!("StructNew",
+            "dst" => dst.to_string(), "sid" => sid.to_string()),
+        Op::StructSet { s, fidx, src } => g!("StructSet",
+            "s" => s.to_string(), "fidx" => fidx.to_string(),
+            "src" => src.to_string()),
+        Op::Intrinsic { dst, b, kind, args } => g!("Intrinsic",
+            "dst" => dst.to_string(), "b" => dbg(b),
+            "kind" => dbg(kind), "args" => reg_list(args)),
+        Op::FileIo { dst, b, args, line } => g!("FileIo",
+            "dst" => dst.to_string(), "b" => dbg(b),
+            "args" => reg_list(args), "line" => line.to_string()),
+        Op::StoreLocal { src, slot, copy } => g!("StoreLocal",
+            "src" => src.to_string(), "slot" => slot.to_string(),
+            "copy" => dbg(copy)),
+        Op::StoreGlobal { src, g, copy } => g!("StoreGlobal",
+            "src" => src.to_string(), "g" => g.to_string(),
+            "copy" => dbg(copy)),
+        Op::StoreSelf { src, f, copy } => g!("StoreSelf",
+            "src" => src.to_string(), "f" => f.to_string(),
+            "copy" => dbg(copy)),
+        Op::StoreField { src, base, f, copy } => g!("StoreField",
+            "src" => src.to_string(), "base" => base.to_string(),
+            "f" => f.to_string(), "copy" => dbg(copy)),
+        Op::StoreFbField { src, base, f, copy } => g!("StoreFbField",
+            "src" => src.to_string(), "base" => base.to_string(),
+            "f" => f.to_string(), "copy" => dbg(copy)),
+        Op::StoreIdx { src, base, idx, len, kind, line } => g!("StoreIdx",
+            "src" => src.to_string(), "base" => base.to_string(),
+            "idx" => idx.to_string(), "len" => len.to_string(),
+            "kind" => dbg(kind), "line" => line.to_string()),
+        Op::StorePtr { src, p, off, kind, line } => g!("StorePtr",
+            "src" => src.to_string(), "p" => p.to_string(),
+            "off" => off.to_string(), "kind" => dbg(kind),
+            "line" => line.to_string()),
+        Op::Jump { t } => g!("Jump", "t" => t.to_string()),
+        Op::JumpIfFalse { c, t } => g!("JumpIfFalse",
+            "c" => c.to_string(), "t" => t.to_string()),
+        Op::BumpBranch => g!("BumpBranch"),
+        Op::CaseJump { src, ranges, t } => g!("CaseJump",
+            "src" => src.to_string(), "ranges" => range_list(ranges),
+            "t" => t.to_string()),
+        Op::ForCheck { i, to, step, exit } => g!("ForCheck",
+            "i" => i.to_string(), "to" => to.to_string(),
+            "step" => step.to_string(), "exit" => exit.to_string()),
+        Op::ForIncr { i, step } => g!("ForIncr",
+            "i" => i.to_string(), "step" => step.to_string()),
+        Op::ForStepCheck { step } => {
+            g!("ForStepCheck", "step" => step.to_string())
+        }
+        Op::Ret => g!("Ret"),
+        Op::FusedForHead { i, to, step, var, exit } => g!("FusedForHead",
+            "i" => i.to_string(), "to" => to.to_string(),
+            "step" => step.to_string(), "var" => var.to_string(),
+            "exit" => exit.to_string()),
+        Op::FusedForIncrJump { i, step, t } => g!("FusedForIncrJump",
+            "i" => i.to_string(), "step" => step.to_string(),
+            "t" => t.to_string()),
+        Op::FusedDotStep { s, pw, px, i, l1, l2 } => g!("FusedDotStep",
+            "s" => s.to_string(), "pw" => pw.to_string(),
+            "px" => px.to_string(), "i" => i.to_string(),
+            "l1" => l1.to_string(), "l2" => l2.to_string()),
+        Op::FusedMacStep { s, a, p, i, line } => g!("FusedMacStep",
+            "s" => s.to_string(), "a" => a.to_string(),
+            "p" => p.to_string(), "i" => i.to_string(),
+            "line" => line.to_string()),
+        Op::FusedMacLoad { dst, p, a, b, b_self, c, line } => {
+            g!("FusedMacLoad",
+                "dst" => dst.to_string(), "p" => p.to_string(),
+                "a" => a.to_string(), "b" => b.to_string(),
+                "b_self" => b_self.to_string(), "c" => c.to_string(),
+                "line" => line.to_string())
+        }
+        Op::FusedIfCmpF32Br { slot, k, op, t } => g!("FusedIfCmpF32Br",
+            "slot" => slot.to_string(), "k" => f32_bits(*k),
+            "op" => dbg(op), "t" => t.to_string()),
+        Op::ConstPool { dst, idx } => g!("ConstPool",
+            "dst" => dst.to_string(), "idx" => idx.to_string()),
+    }
+}
+
+fn needs_quoting(v: &str) -> bool {
+    v.is_empty()
+        || v.chars()
+            .any(|c| c.is_whitespace() || c == '\'' || c == '\\')
+}
+
+fn quote(v: &str) -> String {
+    let mut q = String::from("'");
+    for c in v.chars() {
+        match c {
+            '\\' => q.push_str("\\\\"),
+            '\'' => q.push_str("\\'"),
+            '\n' => q.push_str("\\n"),
+            c => q.push(c),
+        }
+    }
+    q.push('\'');
+    q
+}
+
+/// Render a generic op as one listing line.
+pub fn render(op: &GenericOp) -> String {
+    let mut out = op.name.clone();
+    for (k, v) in &op.fields {
+        out.push(' ');
+        out.push_str(k);
+        out.push('=');
+        if needs_quoting(v) {
+            out.push_str(&quote(v));
+        } else {
+            out.push_str(v);
+        }
+    }
+    out
+}
+
+/// Parse one listing line back into its generic form — the exact
+/// inverse of [`render`].
+pub fn parse_line(line: &str) -> Result<GenericOp, String> {
+    let mut chars = line.trim().chars().peekable();
+    let mut name = String::new();
+    while let Some(&c) = chars.peek() {
+        if c.is_whitespace() {
+            break;
+        }
+        name.push(c);
+        chars.next();
+    }
+    if name.is_empty() {
+        return Err("empty line".into());
+    }
+    let mut fields = Vec::new();
+    loop {
+        while matches!(chars.peek(), Some(c) if c.is_whitespace()) {
+            chars.next();
+        }
+        if chars.peek().is_none() {
+            break;
+        }
+        let mut key = String::new();
+        while let Some(&c) = chars.peek() {
+            if c == '=' {
+                break;
+            }
+            if c.is_whitespace() {
+                return Err(format!("key `{key}` without value"));
+            }
+            key.push(c);
+            chars.next();
+        }
+        if chars.next() != Some('=') {
+            return Err(format!("key `{key}` without `=`"));
+        }
+        let mut val = String::new();
+        if chars.peek() == Some(&'\'') {
+            chars.next();
+            loop {
+                match chars.next() {
+                    Some('\\') => match chars.next() {
+                        Some('\\') => val.push('\\'),
+                        Some('\'') => val.push('\''),
+                        Some('n') => val.push('\n'),
+                        other => return Err(format!("bad escape {other:?}")),
+                    },
+                    Some('\'') => break,
+                    Some(c) => val.push(c),
+                    None => return Err("unterminated string".into()),
+                }
+            }
+        } else {
+            while let Some(&c) = chars.peek() {
+                if c.is_whitespace() {
+                    break;
+                }
+                val.push(c);
+                chars.next();
+            }
+        }
+        fields.push((key, val));
+    }
+    Ok(GenericOp { name, fields })
+}
+
+fn render_konst(k: &Konst) -> String {
+    match k {
+        Konst::Int(v) => format!("int {v}"),
+        Konst::F32(v) => format!("f32 {}", f32_bits(*v)),
+        Konst::F64(v) => format!("f64 {}", f64_bits(*v)),
+        Konst::Str(s) => format!("str {}", quote(s)),
+    }
+}
+
+/// Disassemble one compiled body: a `; code` header, the constant
+/// pool, then one line per op.
+pub fn disasm_code(code: &Code) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "; code {} regs={} ops={}",
+        code.name,
+        code.n_regs,
+        code.ops.len()
+    );
+    for (i, k) in code.pool.iter().enumerate() {
+        let _ = writeln!(out, "k{i}: {}", render_konst(k));
+    }
+    for (pc, op) in code.ops.iter().enumerate() {
+        let _ = writeln!(out, "{pc}: {}", render(&op_to_generic(op)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::st::bytecode::{compile_unit, CopyMode};
+    use std::sync::Arc;
+
+    #[test]
+    fn ops_round_trip_over_a_compiled_program() {
+        let unit = crate::st::compile(
+            "FUNCTION DOT : REAL\n\
+             VAR_INPUT pa : POINTER TO REAL; pb : POINTER TO REAL; n : DINT; END_VAR\n\
+             VAR s : REAL; i : DINT; END_VAR\n\
+             FOR i := 0 TO n - 1 DO s := s + pa[i] * pb[i]; END_FOR\n\
+             DOT := s;\n\
+             END_FUNCTION\n\
+             PROGRAM p VAR a, b : ARRAY[0..7] OF REAL; r : REAL; x : DINT; END_VAR\n\
+             CASE x OF 0..4: r := 1.0; 7: r := 2.0; ELSE r := 0.5; END_CASE\n\
+             r := r + DOT(ADR(a), ADR(b), 8);\n\
+             END_PROGRAM",
+        )
+        .expect("compile");
+        let cu = compile_unit(&unit);
+        let mut seen = 0;
+        for code in cu.all_codes() {
+            for op in &code.ops {
+                let g = op_to_generic(op);
+                let line = render(&g);
+                let back = parse_line(&line)
+                    .unwrap_or_else(|e| panic!("parse `{line}`: {e}"));
+                assert_eq!(back, g, "round-trip failed for `{line}`");
+                seen += 1;
+            }
+        }
+        assert!(seen > 30, "corpus too small ({seen} ops)");
+    }
+
+    #[test]
+    fn hostile_string_constants_round_trip() {
+        let op = Op::ConstStr {
+            dst: 3,
+            v: Arc::from("a b\\c'd\ne"),
+        };
+        let g = op_to_generic(&op);
+        let line = render(&g);
+        assert_eq!(parse_line(&line).unwrap(), g);
+        // Store-mode enums and empty arg lists render unambiguously.
+        let g2 = op_to_generic(&Op::StoreLocal {
+            src: 1,
+            slot: 0,
+            copy: CopyMode::Auto,
+        });
+        assert_eq!(parse_line(&render(&g2)).unwrap(), g2);
+    }
+
+    #[test]
+    fn disasm_code_lists_header_pool_and_every_op() {
+        let unit = crate::st::compile(
+            "PROGRAM p VAR x : REAL; END_VAR x := 1.5 + 1.5; END_PROGRAM",
+        )
+        .expect("compile");
+        let cu = compile_unit(&unit);
+        let code = &cu.programs[0];
+        let text = disasm_code(code);
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("; code p "));
+        assert_eq!(lines.len(), 1 + code.pool.len() + code.ops.len());
+        // Every op line parses back.
+        for line in &lines[1 + code.pool.len()..] {
+            let body = line.split_once(": ").unwrap().1;
+            parse_line(body).unwrap();
+        }
+    }
+}

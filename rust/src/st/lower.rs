@@ -5,6 +5,19 @@
 //! array bounds), interface vtable construction, and enforcement of the
 //! standard's restrictions (no recursion, no FB-in-FB fields, no scalar
 //! VAR_IN_OUT, ADR only on statically allocated arrays).
+//!
+//! Slot discipline downstream passes rely on: POU locals (including
+//! VAR_INPUT/VAR_IN_OUT and the implicit return slot 0) become
+//! `Lv::Local` frame slots, while PROGRAM variables and FB
+//! fields become `SelfField` instance accesses. The bytecode stage
+//! maps slots 1:1 onto registers and allocates expression temporaries
+//! with a per-statement watermark, so a statement's operand temps are
+//! always consecutive and dead at the next statement — exactly the
+//! shape `st::bytecode`'s superinstruction matchers pattern-match.
+//! Changing how this module orders operand evaluation or assigns
+//! slots silently de-fuses the hot kernels (the differential gate
+//! stays correct either way; only the fused speedup disappears), and
+//! the op mix is calibration-load-bearing (`tests/timing_calibration.rs`).
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -27,6 +27,7 @@ pub mod ast;
 pub mod builtins;
 pub mod bytecode;
 pub mod cost;
+pub mod disasm;
 pub mod host;
 pub mod interp;
 pub mod ir;
@@ -37,6 +38,7 @@ pub mod sema;
 pub mod value;
 pub mod vm;
 
+pub use bytecode::FusionConfig;
 pub use cost::Meter;
 pub use host::{FbInstance, Host, HostImage};
 pub use interp::{Interp, RuntimeError};

@@ -22,7 +22,9 @@ use std::rc::Rc;
 use std::sync::Arc;
 
 use super::builtins;
-use super::bytecode::{self, Code, CodeUnit, CopyMode, Op, NO_REG};
+use super::bytecode::{
+    self, Code, CodeUnit, CopyMode, FusionConfig, Op, NO_REG,
+};
 use super::host::Host;
 use super::interp::{cmp_ord, copy_into, rerr, Interp, RuntimeError};
 use super::ir::*;
@@ -59,9 +61,17 @@ impl DerefMut for Vm {
 impl Vm {
     /// Compile and instantiate a unit (globals, program instances, FB
     /// arena — laid out exactly as [`Interp::new`] lays them out, so
-    /// `FbRef` handles are identical across tiers).
+    /// `FbRef` handles are identical across tiers). Uses the default
+    /// [`FusionConfig`] (superinstructions on).
     pub fn new(unit: Unit) -> Vm {
         Vm::from_interp(Interp::new(unit))
+    }
+
+    /// Like [`Vm::new`] with an explicit [`FusionConfig`] — the plain
+    /// (fusion-off) tier exists so every fused run stays differentiable
+    /// against the unfused bytecode as well as the interpreter.
+    pub fn new_with(unit: Unit, cfg: &FusionConfig) -> Vm {
+        Vm::from_interp_with(Interp::new(unit), cfg)
     }
 
     /// Adopt an interpreter's load-time state wholesale and compile its
@@ -69,8 +79,13 @@ impl Vm {
     /// interpreter (globals, instance fields, `io_dir`, meter) carries
     /// over bit-for-bit.
     pub fn from_interp(interp: Interp) -> Vm {
+        Vm::from_interp_with(interp, &FusionConfig::default())
+    }
+
+    /// [`Vm::from_interp`] with an explicit [`FusionConfig`].
+    pub fn from_interp_with(interp: Interp, cfg: &FusionConfig) -> Vm {
         let host = interp.into_host();
-        let code = Arc::new(bytecode::compile_unit(&host.unit));
+        let code = Arc::new(bytecode::compile_unit_with(&host.unit, cfg));
         Vm { host, code, regs: Vec::new() }
     }
 
@@ -1112,6 +1127,92 @@ impl Vm {
                         return Err(rerr(0, "FOR step of 0"));
                     }
                 }
+
+                // ------------------------- fused superinstructions
+                // Meter transparency: each handler replays the exact
+                // bumps of its unfused window, in the same
+                // bump-vs-read order, so success paths *and* error
+                // paths meter identically to the plain stream.
+                Op::FusedForHead { i, to, step, var, exit } => {
+                    let iv = reg!(*i).int();
+                    let tv = reg!(*to).int();
+                    let sv = reg!(*step).int();
+                    if (sv > 0 && iv > tv) || (sv < 0 && iv < tv) {
+                        pc = *exit as usize;
+                        continue;
+                    }
+                    self.meter.branches += 1;
+                    self.meter.stores += 1;
+                    reg!(*var) = Value::Int(iv);
+                }
+                Op::FusedForIncrJump { i, step, t } => {
+                    self.meter.int_ops += 1;
+                    let v = reg!(*i).int().wrapping_add(reg!(*step).int());
+                    reg!(*i) = Value::Int(v);
+                    pc = *t as usize;
+                    continue;
+                }
+                Op::FusedDotStep { s, pw, px, i, l1, l2 } => {
+                    self.meter.loads += 3;
+                    let iv = reg!(*i).int();
+                    self.meter.loads += 1;
+                    let wv = ptr_read_f32(&reg!(*pw), iv, *l1)?;
+                    self.meter.loads += 2;
+                    let iv2 = reg!(*i).int();
+                    self.meter.loads += 1;
+                    let xv = ptr_read_f32(&reg!(*px), iv2, *l2)?;
+                    self.meter.fp_mul += 1;
+                    let prod = wv * xv;
+                    let sum = reg!(*s).real() + prod;
+                    self.meter.fp_add += 1;
+                    self.meter.stores += 1;
+                    reg!(*s) = Value::Real(sum);
+                }
+                Op::FusedMacStep { s, a, p, i, line } => {
+                    self.meter.loads += 4;
+                    let iv = reg!(*i).int();
+                    self.meter.loads += 1;
+                    let xv = ptr_read_f32(&reg!(*p), iv, *line)?;
+                    self.meter.fp_mul += 1;
+                    let prod = reg!(*a).real() * xv;
+                    let sum = reg!(*s).real() + prod;
+                    self.meter.fp_add += 1;
+                    self.meter.stores += 1;
+                    reg!(*s) = Value::Real(sum);
+                }
+                Op::FusedMacLoad { dst, p, a, b, b_self, c, line } => {
+                    self.meter.loads += 3;
+                    let bv = if *b_self {
+                        let inst = self_idx.ok_or_else(|| {
+                            rerr(0, "no self in this context")
+                        })?;
+                        self.instances[inst].fields[*b as usize].int()
+                    } else {
+                        reg!(*b).int()
+                    };
+                    self.meter.int_ops += 1;
+                    let idx = reg!(*a).int().wrapping_mul(bv);
+                    self.meter.loads += 1;
+                    self.meter.int_ops += 1;
+                    let idx = idx.wrapping_add(reg!(*c).int());
+                    self.meter.loads += 1;
+                    let wv = ptr_read_f32(&reg!(*p), idx, *line)?;
+                    self.meter.stores += 1;
+                    reg!(*dst) = Value::Real(wv);
+                }
+                Op::FusedIfCmpF32Br { slot, k, op, t } => {
+                    self.meter.branches += 1;
+                    self.meter.loads += 1;
+                    self.meter.fp_cmp += 1;
+                    let r = cmp_ord(*op, reg!(*slot).real().partial_cmp(k));
+                    if !r {
+                        pc = *t as usize;
+                        continue;
+                    }
+                }
+                Op::ConstPool { dst, idx } => {
+                    reg!(*dst) = code.pool[*idx as usize].to_value();
+                }
                 Op::Ret => return Ok(()),
             }
             pc += 1;
@@ -1125,6 +1226,29 @@ fn should_copy(mode: CopyMode, v: &Value) -> bool {
         CopyMode::Copy => true,
         CopyMode::Move => false,
         CopyMode::Auto => v.is_aggregate(),
+    }
+}
+
+/// One F32 read through a pointer value — the `PtrKind::F32` arm of
+/// [`Op::LoadPtr`], shared by the fused handlers. The caller bumps
+/// `loads` *before* calling, exactly like the unfused op bumps before
+/// its own offset/kind checks.
+#[inline]
+fn ptr_read_f32(v: &Value, extra: i64, line: u32) -> Result<f32, RuntimeError> {
+    if extra < 0 {
+        return Err(rerr(line, "negative pointer offset"));
+    }
+    match v {
+        Value::PtrF32(a, base_off) => {
+            let arr = a.borrow();
+            let i = base_off + extra as usize;
+            if i >= arr.len() {
+                return Err(rerr(line, "pointer read out of bounds"));
+            }
+            Ok(arr[i])
+        }
+        Value::Null => Err(rerr(line, "null pointer read")),
+        _ => Err(rerr(line, "pointer read type mismatch")),
     }
 }
 
@@ -1187,6 +1311,42 @@ mod tests {
             2,
         );
         assert_state_eq(&it, &vm, "p");
+    }
+
+    #[test]
+    fn fused_dot_kernel_matches_interp_and_plain() {
+        let src = "FUNCTION DOT : REAL\n\
+             VAR_INPUT pa : POINTER TO REAL; pb : POINTER TO REAL; n : DINT; END_VAR\n\
+             VAR s : REAL; i : DINT; END_VAR\n\
+             FOR i := 0 TO n - 1 DO\n\
+               s := s + pa[i] * pb[i];\n\
+             END_FOR\n\
+             DOT := s;\n\
+             END_FUNCTION\n\
+             PROGRAM p VAR a, b : ARRAY[0..7] OF REAL; r : REAL; i : DINT; END_VAR\n\
+             FOR i := 0 TO 7 DO\n\
+               a[i] := DINT_TO_REAL(i) * 0.5;\n\
+               b[i] := DINT_TO_REAL(7 - i);\n\
+             END_FOR\n\
+             r := DOT(ADR(a), ADR(b), 8);\n\
+             END_PROGRAM";
+        let unit = st::compile(src).expect("compile");
+        let mut it = Interp::new(unit.clone());
+        let mut fused =
+            Vm::new_with(unit.clone(), &FusionConfig { enabled: true });
+        let mut plain = Vm::new_with(unit, &FusionConfig { enabled: false });
+        assert!(
+            fused.code().fused_ops() > 0,
+            "dot kernel should trigger the fusion pass"
+        );
+        assert_eq!(plain.code().fused_ops(), 0);
+        for _ in 0..2 {
+            it.run_program("p").expect("interp run");
+            fused.run_program("p").expect("fused vm run");
+            plain.run_program("p").expect("plain vm run");
+        }
+        assert_state_eq(&it, &fused, "p");
+        assert_state_eq(&it, &plain, "p");
     }
 
     #[test]

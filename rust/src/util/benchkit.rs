@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 use crate::icsml_st;
 use crate::porting::{codegen::CodegenOptions, generate_st_program, LayerSpec,
                      ModelSpec};
-use crate::st::{Interp, Meter, Value, Vm};
+use crate::st::{FusionConfig, Interp, Meter, Value, Vm};
 use crate::util::{binio, json::Json, rng::SplitMix64};
 
 /// Build a ModelSpec with random weights written to a temp dir.
@@ -70,6 +70,18 @@ pub fn st_model(spec: &ModelSpec, dir: &PathBuf, fused: bool) -> Interp {
 /// one loader path, two tiers.
 pub fn st_model_vm(spec: &ModelSpec, dir: &PathBuf, fused: bool) -> Vm {
     Vm::from_interp(st_model(spec, dir, fused))
+}
+
+/// [`st_model_vm`] with an explicit fusion configuration — lets the
+/// benches time the plain (fusion-off) VM tier against the fused one
+/// from the same prepared oracle state.
+pub fn st_model_vm_with(
+    spec: &ModelSpec,
+    dir: &PathBuf,
+    fused: bool,
+    cfg: &FusionConfig,
+) -> Vm {
+    Vm::from_interp_with(st_model(spec, dir, fused), cfg)
 }
 
 /// Run one inference scan and return the metered delta.

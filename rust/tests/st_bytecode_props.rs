@@ -1,0 +1,226 @@
+//! Bytecode invariant property tests over the compiled corpus
+//! (framework.st, a generated ICSML MLP, and inline programs), with
+//! fusion on and off:
+//!
+//! * every jump target lands on an instruction boundary of the final
+//!   (post-fusion, post-remap) stream;
+//! * the constant pool is duplicate-free after dedup, every
+//!   `ConstPool` index is in bounds, and no immediate `Const*` op
+//!   survives pooling — while fusion-off leaves pools empty;
+//! * the disassembly round-trips (`parse(render(op))` recovers the
+//!   generic form of every op).
+
+use std::collections::HashSet;
+
+use icsml::icsml_st;
+use icsml::porting::{codegen::CodegenOptions, generate_st_program};
+use icsml::st::bytecode::{compile_unit_with, Code, Konst, Op};
+use icsml::st::disasm::{disasm_code, op_to_generic, parse_line, render};
+use icsml::st::{self, FusionConfig};
+use icsml::util::benchkit;
+
+const ON: FusionConfig = FusionConfig { enabled: true };
+const OFF: FusionConfig = FusionConfig { enabled: false };
+
+/// The compiled corpus the properties sweep: the whole ICSML framework
+/// with a trivial app, a generated dense-MLP port, and an inline
+/// control-flow zoo.
+fn corpus() -> Vec<(String, st::ir::Unit)> {
+    let mut units = Vec::new();
+    units.push((
+        "framework_trivial".to_string(),
+        icsml_st::compile_with_framework(
+            "PROGRAM p VAR x : REAL; END_VAR x := 1.0; END_PROGRAM",
+        )
+        .expect("framework compiles"),
+    ));
+    let (spec, _dir) = benchkit::random_spec(
+        "bytecode_props_mlp",
+        &[4, 6, 2],
+        &["relu", "linear"],
+        99,
+    );
+    let src = generate_st_program(
+        &spec,
+        &CodegenOptions { program: "MAIN".into(), fused_activations: true },
+    );
+    units.push((
+        "generated_mlp".to_string(),
+        icsml_st::compile_with_framework(&src).expect("MLP compiles"),
+    ));
+    units.push((
+        "control_flow_zoo".to_string(),
+        st::compile(
+            "FUNCTION SUMSQ : REAL\n\
+             VAR_INPUT pa : POINTER TO REAL; n : DINT; END_VAR\n\
+             VAR s : REAL; i : DINT; END_VAR\n\
+             FOR i := 0 TO n - 1 DO s := s + pa[i] * pa[i]; END_FOR\n\
+             SUMSQ := s;\n\
+             END_FUNCTION\n\
+             PROGRAM p VAR\n\
+               a : ARRAY[0..7] OF REAL; r : REAL; i, c, n : DINT;\n\
+             END_VAR\n\
+             FOR i := 0 TO 7 DO a[i] := DINT_TO_REAL(i) * 0.5; END_FOR\n\
+             r := SUMSQ(ADR(a), 8) + SUMSQ(ADR(a), 8);\n\
+             n := 5;\n\
+             WHILE n > 0 DO c := c + n; n := n - 1; END_WHILE\n\
+             REPEAT c := c + 1; UNTIL c >= 20 END_REPEAT\n\
+             CASE c OF 0..9: r := 1.0; 20: r := 2.0; ELSE r := 0.0;\n\
+             END_CASE\n\
+             END_PROGRAM",
+        )
+        .expect("zoo compiles"),
+    ));
+    units
+}
+
+/// All pc operands an op can transfer control to.
+fn jump_targets(op: &Op) -> Vec<u32> {
+    match op {
+        Op::Jump { t }
+        | Op::JumpIfFalse { t, .. }
+        | Op::CaseJump { t, .. }
+        | Op::FusedForIncrJump { t, .. }
+        | Op::FusedIfCmpF32Br { t, .. } => vec![*t],
+        Op::ForCheck { exit, .. } | Op::FusedForHead { exit, .. } => {
+            vec![*exit]
+        }
+        _ => Vec::new(),
+    }
+}
+
+fn konst_key(k: &Konst) -> (u8, u64, String) {
+    match k {
+        Konst::Int(v) => (0, *v as u64, String::new()),
+        Konst::F32(v) => (1, v.to_bits() as u64, String::new()),
+        Konst::F64(v) => (2, v.to_bits(), String::new()),
+        Konst::Str(s) => (3, 0, s.to_string()),
+    }
+}
+
+fn for_each_code(f: &mut dyn FnMut(&str, bool, &Code)) {
+    for (name, unit) in corpus() {
+        for (cfg, fused) in [(ON, true), (OFF, false)] {
+            let cu = compile_unit_with(&unit, &cfg);
+            for code in cu.all_codes() {
+                f(&name, fused, code);
+            }
+        }
+    }
+}
+
+#[test]
+fn jump_targets_land_on_instruction_boundaries() {
+    for_each_code(&mut |unit, fused, code| {
+        let len = code.ops.len() as u32;
+        for (pc, op) in code.ops.iter().enumerate() {
+            for t in jump_targets(op) {
+                assert!(
+                    t < len,
+                    "{unit} fused={fused} {}: pc {pc} jumps to {t} \
+                     outside [0, {len})",
+                    code.name
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn constant_pool_is_deduplicated_and_in_bounds() {
+    for_each_code(&mut |unit, fused, code| {
+        let mut seen = HashSet::new();
+        for k in &code.pool {
+            assert!(
+                seen.insert(konst_key(k)),
+                "{unit} fused={fused} {}: duplicate pool entry {k:?}",
+                code.name
+            );
+        }
+        for (pc, op) in code.ops.iter().enumerate() {
+            match op {
+                Op::ConstPool { idx, .. } => {
+                    assert!(
+                        (*idx as usize) < code.pool.len(),
+                        "{unit} {}: pc {pc} pool index {idx} out of \
+                         bounds ({})",
+                        code.name,
+                        code.pool.len()
+                    );
+                    assert!(fused, "{unit} {}: ConstPool with fusion off",
+                        code.name);
+                }
+                // Pooling replaces every immediate literal load.
+                Op::ConstInt { .. }
+                | Op::ConstF32 { .. }
+                | Op::ConstF64 { .. }
+                | Op::ConstStr { .. } => assert!(
+                    !fused,
+                    "{unit} {}: pc {pc} immediate {op:?} survived pooling",
+                    code.name
+                ),
+                _ => {}
+            }
+        }
+        if !fused {
+            assert!(
+                code.pool.is_empty(),
+                "{unit} {}: fusion off but pool populated",
+                code.name
+            );
+            assert_eq!(
+                code.ops.iter().filter(|o| o.is_fused()).count(),
+                0,
+                "{unit} {}: fusion off but fused ops present",
+                code.name
+            );
+        }
+    });
+}
+
+#[test]
+fn disassembly_round_trips_over_the_corpus() {
+    let mut seen = 0usize;
+    for_each_code(&mut |unit, fused, code| {
+        for op in &code.ops {
+            let g = op_to_generic(op);
+            let line = render(&g);
+            let back = parse_line(&line).unwrap_or_else(|e| {
+                panic!("{unit} fused={fused} {}: parse `{line}`: {e}",
+                    code.name)
+            });
+            assert_eq!(
+                back, g,
+                "{unit} fused={fused} {}: `{line}` did not round-trip",
+                code.name
+            );
+            seen += 1;
+        }
+        // The full listing stays line-per-entry: header + pool + ops.
+        let listing = disasm_code(code);
+        assert_eq!(
+            listing.lines().count(),
+            1 + code.pool.len() + code.ops.len(),
+            "{unit} {}: listing shape",
+            code.name
+        );
+    });
+    assert!(seen > 1000, "corpus unexpectedly small: {seen} ops");
+}
+
+/// The corpus genuinely exercises the fused tier: the framework's
+/// DOT_PRODUCT / FB_Dense kernels must fuse, and coalescing must not
+/// leave any frame narrower than its IR slots.
+#[test]
+fn corpus_contains_fused_kernels() {
+    let mut fused_total = 0usize;
+    for (name, unit) in corpus() {
+        let cu = compile_unit_with(&unit, &ON);
+        fused_total += cu.fused_ops();
+        assert!(
+            cu.fused_ops() > 0,
+            "{name}: no superinstructions emitted"
+        );
+    }
+    assert!(fused_total > 10, "only {fused_total} fused ops in corpus");
+}

@@ -1,0 +1,258 @@
+//! Meter/semantics edge coverage for the superinstruction tier, plus
+//! the snapshot-restore regression: every program runs on **three**
+//! configurations — interpreter (oracle), fused VM, plain (fusion-off)
+//! VM — and must produce bit-identical state, exactly equal meters,
+//! and identical runtime errors on all of them.
+
+use std::sync::Arc;
+
+use icsml::icsml_st;
+use icsml::st::{
+    self, bytecode, FusionConfig, Host, Interp, RuntimeError, Vm,
+};
+
+const ON: FusionConfig = FusionConfig { enabled: true };
+const OFF: FusionConfig = FusionConfig { enabled: false };
+
+fn assert_state_eq(it: &Interp, vm: &Vm, prog: &str, ctx: &str) {
+    let pid = it.unit.find_program(prog).expect("program exists");
+    let inst = it.program_instances[pid];
+    assert_eq!(inst, vm.program_instances[pid], "{ctx}: layout diverged");
+    for f in &it.unit.programs[pid].fields {
+        let a = it.instance_field(inst, &f.name).unwrap();
+        let b = vm.instance_field(inst, &f.name).unwrap();
+        assert!(
+            a.bits_eq(&b),
+            "{ctx}: field {}: interp {a:?} vs vm {b:?}",
+            f.name
+        );
+    }
+}
+
+fn assert_meters_eq(it: &Interp, vm: &Vm, ctx: &str) {
+    if let Some((name, a, b)) = it.meter.first_divergence(&vm.meter) {
+        panic!("{ctx}: meter `{name}` diverged: interp {a} vm {b}");
+    }
+}
+
+/// Run `prog` on all three tiers for `scans` scans. On success every
+/// scan is cross-checked; on a runtime error, all three must fail with
+/// the same message and line, and the error is returned.
+fn run_three(
+    unit: &st::ir::Unit,
+    prog: &str,
+    scans: usize,
+) -> Option<RuntimeError> {
+    let mut it = Interp::new(unit.clone());
+    let mut fused = Vm::new_with(unit.clone(), &ON);
+    let mut plain = Vm::new_with(unit.clone(), &OFF);
+    assert!(fused.code().fused_ops() >= plain.code().fused_ops());
+    assert_eq!(plain.code().fused_ops(), 0, "fusion-off emitted fused ops");
+    for scan in 0..scans {
+        let a = it.run_program(prog);
+        let b = fused.run_program(prog);
+        let c = plain.run_program(prog);
+        match (a, b, c) {
+            (Ok(()), Ok(()), Ok(())) => {
+                assert_meters_eq(&it, &fused, &format!("scan {scan} fused"));
+                assert_meters_eq(&it, &plain, &format!("scan {scan} plain"));
+                assert_state_eq(&it, &fused, prog, &format!("scan {scan} fused"));
+                assert_state_eq(&it, &plain, prog, &format!("scan {scan} plain"));
+            }
+            (Err(e1), Err(e2), Err(e3)) => {
+                assert_eq!(e1.message, e2.message, "fused error message");
+                assert_eq!(e1.line, e2.line, "fused error line");
+                assert_eq!(e1.message, e3.message, "plain error message");
+                assert_eq!(e1.line, e3.line, "plain error line");
+                return Some(e1);
+            }
+            (a, b, c) => panic!(
+                "scan {scan}: tier disagreement:\n interp {a:?}\n \
+                 fused {b:?}\n plain {c:?}"
+            ),
+        }
+    }
+    None
+}
+
+fn run_three_src(src: &str, prog: &str, scans: usize) -> Option<RuntimeError> {
+    run_three(&st::compile(src).expect("compile"), prog, scans)
+}
+
+fn run_three_framework(
+    app: &str,
+    prog: &str,
+    scans: usize,
+) -> Option<RuntimeError> {
+    run_three(
+        &icsml_st::compile_with_framework(app).expect("compile"),
+        prog,
+        scans,
+    )
+}
+
+// ------------------------------------------------- IntTy wrap boundaries
+
+/// Narrowing conversions at the exact wrap boundaries, inside loops so
+/// the values flow through fused FOR machinery where eligible.
+#[test]
+fn int_wrap_boundaries_fused_vs_unfused() {
+    let err = run_three_src(
+        "PROGRAM p VAR\n\
+           s8 : SINT; u8 : USINT; i16 : INT;\n\
+           i, big : DINT;\n\
+         END_VAR\n\
+         FOR i := 0 TO 6 DO\n\
+           big := 125 + i;\n\
+           s8 := DINT_TO_SINT(big);\n\
+           u8 := DINT_TO_USINT(253 + i);\n\
+           i16 := DINT_TO_INT(32765 + i);\n\
+         END_FOR\n\
+         FOR i := 0 TO 6 DO\n\
+           s8 := DINT_TO_SINT(-125 - i);\n\
+           u8 := DINT_TO_USINT(3 - i);\n\
+           i16 := DINT_TO_INT(-32765 - i);\n\
+         END_FOR\n\
+         END_PROGRAM",
+        "p",
+        3,
+    );
+    assert!(err.is_none(), "wrap program errored: {err:?}");
+}
+
+// ------------------------------------------ loop-trip-count edge cases
+
+/// Zero-, single- and negative-step iteration through the *fused* FOR
+/// head (DOT_PRODUCT's loop fuses; n controls the trip count).
+#[test]
+fn zero_single_and_negative_iteration_loops() {
+    let err = run_three_framework(
+        "PROGRAM p VAR\n\
+           a : ARRAY[0..7] OF REAL;\n\
+           r0, r1, r2 : REAL; i, j : DINT;\n\
+         END_VAR\n\
+         FOR i := 0 TO 7 DO a[i] := DINT_TO_REAL(i) * 0.5; END_FOR\n\
+         r0 := DOT_PRODUCT(ADR(a), ADR(a), 0);\n\
+         r1 := DOT_PRODUCT(ADR(a), ADR(a), 1);\n\
+         r2 := DOT_PRODUCT(ADR(a), ADR(a), 8);\n\
+         FOR i := 5 TO 0 BY -2 DO j := j + 1; END_FOR\n\
+         FOR i := 3 TO 0 DO j := j + 100; END_FOR\n\
+         END_PROGRAM",
+        "p",
+        2,
+    );
+    assert!(err.is_none(), "loop program errored: {err:?}");
+}
+
+/// Out-of-bounds pointer walk through the fused DOT kernel: all three
+/// tiers must raise the identical error at the identical line.
+#[test]
+fn fused_pointer_error_parity() {
+    let err = run_three_framework(
+        "PROGRAM p VAR\n\
+           a : ARRAY[0..7] OF REAL; r : REAL;\n\
+         END_VAR\n\
+         r := DOT_PRODUCT(ADR(a), ADR(a), 16);\n\
+         END_PROGRAM",
+        "p",
+        1,
+    )
+    .expect("program must fail");
+    assert!(
+        err.message.contains("out of bounds"),
+        "unexpected error: {}",
+        err.message
+    );
+}
+
+// ------------------------------------------------- pruned FB_Dense path
+
+/// The §6.2 pruned row walk (`IF wv <> 0.0 THEN` skip) with zero-mixed
+/// weights — exercises FusedMacLoad (self-field `inputs` operand),
+/// FusedIfCmpF32Br and FusedMacStep against both unfused tiers.
+#[test]
+fn pruned_fb_dense_rows_fused_parity() {
+    let err = run_three_framework(
+        "PROGRAM p\n\
+         VAR\n\
+             x : ARRAY[0..3] OF REAL := [0.5, -0.25, 1.0, 2.0];\n\
+             w : ARRAY[0..7] OF REAL :=\n\
+                 [0.1, 0.0, -0.3, 0.0, 0.0, 0.7, 0.2, 0.0];\n\
+             b : ARRAY[0..1] OF REAL := [0.05, -0.1];\n\
+             y : ARRAY[0..1] OF REAL;\n\
+             dims : ARRAY[0..0] OF UDINT := [4];\n\
+             d : FB_Dense;\n\
+             ok : BOOL;\n\
+         END_VAR\n\
+             d.weights := (address := ADR(w), length := 8,\n\
+                           dimensions := ADR(dims), dimensions_num := 1);\n\
+             d.biases := (address := ADR(b), length := 2,\n\
+                          dimensions := ADR(dims), dimensions_num := 1);\n\
+             d.inMem := (address := ADR(x), length := 4,\n\
+                         dimensions := ADR(dims), dimensions_num := 1);\n\
+             d.outMem := (address := ADR(y), length := 2,\n\
+                          dimensions := ADR(dims), dimensions_num := 1);\n\
+             d.neurons := 2; d.inputs := 4;\n\
+             d.act := ACT_NONE;\n\
+             d.pruned := TRUE;\n\
+             ok := d.eval();\n\
+         END_PROGRAM",
+        "p",
+        2,
+    );
+    assert!(err.is_none(), "pruned dense errored: {err:?}");
+}
+
+// --------------------------------------------- snapshot-restore parity
+
+/// `HostImage` snapshot of a fused VM restored into units compiled
+/// with AND without fusion: state adoption must be fusion-invariant —
+/// both restored VMs continue in lockstep with the oracle.
+#[test]
+fn host_image_restore_is_fusion_invariant() {
+    let app = "PROGRAM p VAR\n\
+           t : DINT; r : REAL;\n\
+           a : ARRAY[0..7] OF REAL; i : DINT;\n\
+         END_VAR\n\
+         t := t + 1;\n\
+         FOR i := 0 TO 7 DO\n\
+           a[i] := a[i] + DINT_TO_REAL(t) * 0.25;\n\
+         END_FOR\n\
+         r := r + DOT_PRODUCT(ADR(a), ADR(a), 8);\n\
+         END_PROGRAM";
+    let unit = icsml_st::compile_with_framework(app).expect("compile");
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new_with(unit.clone(), &ON);
+    for scan in 0..2 {
+        it.run_program("p").unwrap();
+        vm.run_program("p").unwrap();
+        assert_meters_eq(&it, &vm, &format!("pre-snapshot scan {scan}"));
+        assert_state_eq(&it, &vm, "p", &format!("pre-snapshot scan {scan}"));
+    }
+
+    // Snapshot the fused VM mid-run; adopt the image under both
+    // compilation configs.
+    let img = vm.image();
+    let fused_code = Arc::new(bytecode::compile_unit_with(&unit, &ON));
+    let plain_code = Arc::new(bytecode::compile_unit_with(&unit, &OFF));
+    let mut r_fused = Vm::with_host(Host::from_image(&img), fused_code);
+    let mut r_plain = Vm::with_host(Host::from_image(&img), plain_code);
+
+    for scan in 0..3 {
+        it.run_program("p").unwrap();
+        r_fused.run_program("p").unwrap();
+        r_plain.run_program("p").unwrap();
+        let ctx = format!("post-restore scan {scan}");
+        // The two restored tiers stay in exact lockstep with each
+        // other (meters included — restore is fusion-invariant)...
+        if let Some((name, a, b)) =
+            r_fused.meter.first_divergence(&r_plain.meter)
+        {
+            panic!("{ctx}: restored meter `{name}`: fused {a} plain {b}");
+        }
+        // ...and bit-identical in state to the oracle that never
+        // stopped running.
+        assert_state_eq(&it, &r_fused, "p", &format!("{ctx} fused"));
+        assert_state_eq(&it, &r_plain, "p", &format!("{ctx} plain"));
+    }
+}

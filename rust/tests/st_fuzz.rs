@@ -1,0 +1,505 @@
+//! Generative differential fuzzer: seeded random well-typed ST
+//! programs through all three execution configurations — tree-walking
+//! interpreter (oracle), fused VM, and fusion-off VM.
+//!
+//! This is the gate on the superinstruction tier (ISSUE 9): for every
+//! seed, every scan, the tiers must produce bit-identical program
+//! state and **exactly equal** `Meter` counters, and any runtime error
+//! must carry the same message and line on all tiers. The generator is
+//! a closed grammar over the fixed variable environment below —
+//! arithmetic (int/real/bool), FOR/WHILE/REPEAT/CASE/IF control flow,
+//! array and pointer access, function and FB-method calls — driven
+//! only by `SplitMix64`, so every failure reproduces from its seed
+//! (the failing program text is printed in the panic).
+
+use icsml::st::{self, bytecode, FusionConfig, Interp, Vm};
+use icsml::util::rng::SplitMix64;
+
+const INT_VARS: [&str; 4] = ["i0", "i1", "i2", "w0"];
+const REAL_VARS: [&str; 3] = ["r0", "r1", "r2"];
+const BOOL_VARS: [&str; 2] = ["b0", "b1"];
+const CMP_OPS: [&str; 6] = ["=", "<>", "<", "<=", ">", ">="];
+
+/// Fixed POU preamble every generated program links against: a
+/// DOT_PRODUCT-shaped pointer-walk function (always fuses), a scalar
+/// helper, and an FB with state, an output, and a method.
+const PREAMBLE: &str = "FUNCTION FDOT : REAL\n\
+VAR_INPUT pa : POINTER TO REAL; pb : POINTER TO REAL; n : DINT; END_VAR\n\
+VAR s : REAL; i : DINT; END_VAR\n\
+FOR i := 0 TO n - 1 DO\n\
+  s := s + pa[i] * pb[i];\n\
+END_FOR\n\
+FDOT := s;\n\
+END_FUNCTION\n\
+FUNCTION FMIX : REAL\n\
+VAR_INPUT a : REAL; b : REAL; END_VAR\n\
+FMIX := a * 0.5 + b;\n\
+END_FUNCTION\n\
+FUNCTION_BLOCK FB_ACC\n\
+VAR_INPUT inc : DINT; END_VAR\n\
+VAR_OUTPUT out : DINT; END_VAR\n\
+VAR total : DINT; END_VAR\n\
+METHOD scaled : REAL VAR_INPUT k : REAL; END_VAR\n\
+  scaled := DINT_TO_REAL(total) * k;\n\
+END_METHOD\n\
+total := total + inc;\n\
+out := total;\n\
+END_FUNCTION_BLOCK\n";
+
+struct Gen {
+    rng: SplitMix64,
+    /// Loop counters the enclosing statement owns — never assigned
+    /// (or reused as counters) while locked.
+    locked: Vec<&'static str>,
+}
+
+impl Gen {
+    fn pick<'a>(&mut self, xs: &[&'a str]) -> &'a str {
+        xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    fn unlocked(&mut self, pool: &[&'static str]) -> Option<&'static str> {
+        let free: Vec<&'static str> = pool
+            .iter()
+            .copied()
+            .filter(|v| !self.locked.contains(v))
+            .collect();
+        if free.is_empty() {
+            None
+        } else {
+            Some(free[self.rng.below(free.len() as u64) as usize])
+        }
+    }
+
+    fn int_lit(&mut self) -> String {
+        self.rng.below(20).to_string()
+    }
+
+    fn real_lit(&mut self) -> String {
+        format!("{:.2}", self.rng.below(32) as f64 * 0.25)
+    }
+
+    fn real_lit_nonzero(&mut self) -> String {
+        format!("{:.2}", (1 + self.rng.below(31)) as f64 * 0.25)
+    }
+
+    fn int_expr(&mut self, d: u32) -> String {
+        if d == 0 {
+            return match self.rng.below(3) {
+                0 => self.int_lit(),
+                1 => self.pick(&INT_VARS).to_string(),
+                _ => format!("ai[{}]", self.rng.below(8)),
+            };
+        }
+        match self.rng.below(9) {
+            0 => self.int_lit(),
+            1 => self.pick(&INT_VARS).to_string(),
+            2 => format!("ai[{}]", self.rng.below(8)),
+            3 => format!(
+                "({} + {})",
+                self.int_expr(d - 1),
+                self.int_expr(d - 1)
+            ),
+            4 => format!(
+                "({} - {})",
+                self.int_expr(d - 1),
+                self.int_expr(d - 1)
+            ),
+            5 => format!(
+                "({} * {})",
+                self.int_expr(d - 1),
+                self.int_expr(d - 1)
+            ),
+            // Division and MOD only by nonzero literals: div-by-zero
+            // parity is pinned separately, not left to seed luck.
+            6 => format!(
+                "({} MOD {})",
+                self.int_expr(d - 1),
+                1 + self.rng.below(9)
+            ),
+            7 => format!(
+                "({} / {})",
+                self.int_expr(d - 1),
+                1 + self.rng.below(9)
+            ),
+            _ => format!("-({})", self.int_expr(d - 1)),
+        }
+    }
+
+    fn real_expr(&mut self, d: u32) -> String {
+        if d == 0 {
+            return match self.rng.below(3) {
+                0 => self.real_lit(),
+                1 => self.pick(&REAL_VARS).to_string(),
+                _ => format!("ar[{}]", self.rng.below(8)),
+            };
+        }
+        match self.rng.below(10) {
+            0 => self.real_lit(),
+            1 => self.pick(&REAL_VARS).to_string(),
+            2 => format!("ar[{}]", self.rng.below(8)),
+            3 => format!("DINT_TO_REAL({})", self.int_expr(d - 1)),
+            4 => format!(
+                "({} + {})",
+                self.real_expr(d - 1),
+                self.real_expr(d - 1)
+            ),
+            5 => format!(
+                "({} - {})",
+                self.real_expr(d - 1),
+                self.real_expr(d - 1)
+            ),
+            6 => format!(
+                "({} * {})",
+                self.real_expr(d - 1),
+                self.real_expr(d - 1)
+            ),
+            7 => format!(
+                "({} / {})",
+                self.real_expr(d - 1),
+                self.real_lit_nonzero()
+            ),
+            8 => format!("SQRT(ABS({}))", self.real_expr(d - 1)),
+            _ => format!(
+                "FMIX({}, {})",
+                self.real_expr(d - 1),
+                self.real_lit()
+            ),
+        }
+    }
+
+    fn bool_expr(&mut self, d: u32) -> String {
+        if d == 0 {
+            return match self.rng.below(4) {
+                0 => "TRUE".into(),
+                1 => "FALSE".into(),
+                _ => self.pick(&BOOL_VARS).to_string(),
+            };
+        }
+        match self.rng.below(7) {
+            0 => self.pick(&BOOL_VARS).to_string(),
+            1 | 2 => {
+                let op = self.pick(&CMP_OPS);
+                format!(
+                    "({} {op} {})",
+                    self.int_expr(d - 1),
+                    self.int_expr(d - 1)
+                )
+            }
+            3 => {
+                let op = self.pick(&CMP_OPS);
+                format!(
+                    "({} {op} {})",
+                    self.real_expr(d - 1),
+                    self.real_expr(d - 1)
+                )
+            }
+            4 => format!(
+                "({} AND {})",
+                self.bool_expr(d - 1),
+                self.bool_expr(d - 1)
+            ),
+            5 => format!(
+                "({} OR {})",
+                self.bool_expr(d - 1),
+                self.bool_expr(d - 1)
+            ),
+            _ => format!("NOT ({})", self.bool_expr(d - 1)),
+        }
+    }
+
+    fn assign(&mut self, out: &mut String, pad: &str) {
+        match self.rng.below(4) {
+            0 => {
+                if let Some(v) = self.unlocked(&INT_VARS) {
+                    out.push_str(&format!(
+                        "{pad}{v} := {};\n",
+                        self.int_expr(2)
+                    ));
+                    return;
+                }
+                let v = self.pick(&REAL_VARS);
+                out.push_str(&format!("{pad}{v} := {};\n", self.real_expr(2)));
+            }
+            1 => {
+                let v = self.pick(&REAL_VARS);
+                out.push_str(&format!("{pad}{v} := {};\n", self.real_expr(2)));
+            }
+            2 => {
+                let v = self.pick(&BOOL_VARS);
+                out.push_str(&format!("{pad}{v} := {};\n", self.bool_expr(2)));
+            }
+            _ => {
+                let k = self.rng.below(8);
+                if self.rng.below(2) == 0 {
+                    out.push_str(&format!(
+                        "{pad}ar[{k}] := {};\n",
+                        self.real_expr(2)
+                    ));
+                } else {
+                    out.push_str(&format!(
+                        "{pad}ai[{k}] := {};\n",
+                        self.int_expr(2)
+                    ));
+                }
+            }
+        }
+    }
+
+    fn stmt(&mut self, out: &mut String, ind: usize, d: u32) {
+        let pad = "  ".repeat(ind);
+        match self.rng.below(12) {
+            0..=4 => self.assign(out, &pad),
+            5 => {
+                out.push_str(&format!(
+                    "{pad}IF {} THEN\n",
+                    self.bool_expr(2)
+                ));
+                self.stmt(out, ind + 1, d.saturating_sub(1));
+                if self.rng.below(2) == 0 {
+                    out.push_str(&format!("{pad}ELSE\n"));
+                    self.stmt(out, ind + 1, d.saturating_sub(1));
+                }
+                out.push_str(&format!("{pad}END_IF\n"));
+            }
+            6 if d > 0 => {
+                let counter =
+                    match self.unlocked(&["i0", "i1", "i2"]) {
+                        Some(c) => c,
+                        None => return self.assign(out, &pad),
+                    };
+                let lo = self.rng.below(5);
+                let span = self.rng.below(6);
+                match self.rng.below(4) {
+                    0 => out.push_str(&format!(
+                        "{pad}FOR {counter} := {} TO {lo} BY -{} DO\n",
+                        lo + span,
+                        1 + self.rng.below(2)
+                    )),
+                    // Zero-iteration when span > 0: hi-to-lo, step +1.
+                    1 => out.push_str(&format!(
+                        "{pad}FOR {counter} := {} TO {lo} DO\n",
+                        lo + span
+                    )),
+                    _ => out.push_str(&format!(
+                        "{pad}FOR {counter} := {lo} TO {} BY {} DO\n",
+                        lo + span,
+                        1 + self.rng.below(2)
+                    )),
+                }
+                self.locked.push(counter);
+                for _ in 0..1 + self.rng.below(2) {
+                    self.stmt(out, ind + 1, d - 1);
+                }
+                if self.rng.below(4) == 0 {
+                    let kw = if self.rng.below(2) == 0 {
+                        "EXIT"
+                    } else {
+                        "CONTINUE"
+                    };
+                    out.push_str(&format!(
+                        "{pad}  IF ({counter} = {}) THEN {kw}; END_IF\n",
+                        lo + self.rng.below(span + 1)
+                    ));
+                }
+                self.locked.pop();
+                out.push_str(&format!("{pad}END_FOR\n"));
+            }
+            7 if d > 0 && !self.locked.contains(&"w0") => {
+                let n = 1 + self.rng.below(5);
+                out.push_str(&format!("{pad}w0 := 0;\n"));
+                let repeat = self.rng.below(2) == 0;
+                if repeat {
+                    out.push_str(&format!("{pad}REPEAT\n"));
+                } else {
+                    out.push_str(&format!("{pad}WHILE (w0 < {n}) DO\n"));
+                }
+                self.locked.push("w0");
+                self.stmt(out, ind + 1, d - 1);
+                self.locked.pop();
+                out.push_str(&format!("{pad}  w0 := (w0 + 1);\n"));
+                if repeat {
+                    out.push_str(&format!(
+                        "{pad}UNTIL (w0 >= {n}) END_REPEAT\n"
+                    ));
+                } else {
+                    out.push_str(&format!("{pad}END_WHILE\n"));
+                }
+            }
+            8 if d > 0 => {
+                let sv = self.pick(&INT_VARS);
+                let a = self.rng.below(4);
+                let single = a + 1 + self.rng.below(3);
+                out.push_str(&format!("{pad}CASE {sv} OF\n"));
+                out.push_str(&format!(
+                    "{pad}  0..{a}: r0 := {};\n",
+                    self.real_expr(1)
+                ));
+                // Never assign to a locked loop counter from inside a
+                // CASE arm — resetting the counter mid-loop can spin
+                // a FOR forever.
+                match self.unlocked(&INT_VARS) {
+                    Some(v) => out.push_str(&format!(
+                        "{pad}  {single}: {v} := {};\n",
+                        self.int_expr(1)
+                    )),
+                    None => out.push_str(&format!(
+                        "{pad}  {single}: r2 := {};\n",
+                        self.real_expr(1)
+                    )),
+                }
+                out.push_str(&format!(
+                    "{pad}  ELSE b1 := {};\n",
+                    self.bool_expr(1)
+                ));
+                out.push_str(&format!("{pad}END_CASE\n"));
+            }
+            9 => {
+                let inc = self.rng.below(9);
+                match self.unlocked(&INT_VARS) {
+                    Some(v) if self.rng.below(2) == 0 => out.push_str(
+                        &format!("{pad}acc(inc := {inc}, out => {v});\n"),
+                    ),
+                    _ => out.push_str(&format!("{pad}acc(inc := {inc});\n")),
+                }
+            }
+            10 => {
+                let v = self.pick(&REAL_VARS);
+                out.push_str(&format!(
+                    "{pad}{v} := acc.scaled({});\n",
+                    self.real_lit()
+                ));
+            }
+            11 => {
+                let v = self.pick(&REAL_VARS);
+                out.push_str(&format!(
+                    "{pad}{v} := FDOT(ADR(ar), ADR(ar), 8);\n"
+                ));
+            }
+            _ => self.assign(out, &pad),
+        }
+    }
+}
+
+/// Generate one complete, compilable program from a seed.
+fn gen_program(seed: u64) -> String {
+    let mut g = Gen { rng: SplitMix64::new(seed), locked: Vec::new() };
+    let mut src = String::from(PREAMBLE);
+    src.push_str(
+        "PROGRAM fz\n\
+         VAR\n  \
+           i0, i1, i2, w0 : DINT;\n  \
+           r0, r1, r2 : REAL;\n  \
+           b0, b1 : BOOL;\n  \
+           ar : ARRAY[0..7] OF REAL;\n  \
+           ai : ARRAY[0..7] OF DINT;\n  \
+           acc : FB_ACC;\n\
+         END_VAR\n",
+    );
+    for _ in 0..4 + g.rng.below(6) {
+        g.stmt(&mut src, 1, 2);
+    }
+    src.push_str("END_PROGRAM\n");
+    src
+}
+
+fn assert_state_eq(it: &Interp, vm: &Vm, ctx: &str, src: &str) {
+    let pid = it.unit.find_program("fz").expect("program exists");
+    let inst = it.program_instances[pid];
+    assert_eq!(
+        inst, vm.program_instances[pid],
+        "{ctx}: instance layout diverged\n{src}"
+    );
+    for f in &it.unit.programs[pid].fields {
+        let a = it.instance_field(inst, &f.name).unwrap();
+        let b = vm.instance_field(inst, &f.name).unwrap();
+        assert!(
+            a.bits_eq(&b),
+            "{ctx}: field {}: interp {a:?} vs vm {b:?}\n{src}",
+            f.name
+        );
+    }
+}
+
+/// Run one seed through interp vs VM under `cfg` for up to 3 scans.
+fn run_seed_with(seed: u64, src: &str, unit: &st::ir::Unit, fused: bool) {
+    let cfg = FusionConfig { enabled: fused };
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new_with(unit.clone(), &cfg);
+    for scan in 0..3 {
+        let ctx = format!("seed {seed} scan {scan} fused={fused}");
+        match (it.run_program("fz"), vm.run_program("fz")) {
+            (Ok(()), Ok(())) => {
+                if let Some((name, a, b)) =
+                    it.meter.first_divergence(&vm.meter)
+                {
+                    panic!(
+                        "{ctx}: meter `{name}` diverged: \
+                         interp {a} vm {b}\n{src}"
+                    );
+                }
+                assert_state_eq(&it, &vm, &ctx, src);
+            }
+            (Err(a), Err(b)) => {
+                assert_eq!(a.message, b.message, "{ctx}: error msg\n{src}");
+                assert_eq!(a.line, b.line, "{ctx}: error line\n{src}");
+                // Deterministic error: later scans add nothing.
+                return;
+            }
+            (a, b) => panic!(
+                "{ctx}: tier disagreement: interp {a:?} vm {b:?}\n{src}"
+            ),
+        }
+    }
+}
+
+fn run_seeds(range: std::ops::Range<u64>) {
+    for seed in range {
+        let src = gen_program(seed);
+        let unit = st::compile(&src)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{src}"));
+        run_seed_with(seed, &src, &unit, true);
+        run_seed_with(seed, &src, &unit, false);
+    }
+}
+
+// Four shards so `cargo test` runs the 64-seed corpus in parallel.
+
+#[test]
+fn fuzz_seeds_00_15() {
+    run_seeds(0..16);
+}
+
+#[test]
+fn fuzz_seeds_16_31() {
+    run_seeds(16..32);
+}
+
+#[test]
+fn fuzz_seeds_32_47() {
+    run_seeds(32..48);
+}
+
+#[test]
+fn fuzz_seeds_48_63() {
+    run_seeds(48..64);
+}
+
+/// The corpus is not vacuous: every seed links FDOT, so every unit
+/// must contain fused superinstructions when fusion is on — and none
+/// when it is off.
+#[test]
+fn every_seed_exercises_the_fused_tier() {
+    for seed in 0..64 {
+        let src = gen_program(seed);
+        let unit = st::compile(&src)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{src}"));
+        let fused = bytecode::compile_unit(&unit);
+        assert!(fused.fused_ops() > 0, "seed {seed}: nothing fused\n{src}");
+        let plain = bytecode::compile_unit_with(
+            &unit,
+            &FusionConfig { enabled: false },
+        );
+        assert_eq!(plain.fused_ops(), 0, "seed {seed}: fusion leaked");
+    }
+}
