@@ -307,6 +307,42 @@ impl StBackend {
         self.plan = plan;
         self
     }
+
+    /// Build a backend over the program a §2.7 TASK runs: the unit
+    /// must carry a CONFIGURATION block whose named task binds exactly
+    /// one program instance (the ML task of a multi-task controller).
+    /// The resulting sessions serve that program — partial (§6.3)
+    /// stepping included — while the rest of the configuration keeps
+    /// running under its own `TaskScheduler`.
+    pub fn for_task(
+        interp: Interp,
+        task: &str,
+    ) -> Result<StBackend, InferenceError> {
+        let unavailable = |reason: String| InferenceError::BackendUnavailable {
+            backend: "st".into(),
+            reason,
+        };
+        let model = interp
+            .task_model()
+            .cloned()
+            .ok_or_else(|| {
+                unavailable("unit has no CONFIGURATION block".into())
+            })?;
+        let ti = model.find_task(task).ok_or_else(|| {
+            unavailable(format!("no TASK {task} in the configuration"))
+        })?;
+        let program = match model.tasks[ti].programs.as_slice() {
+            [one] => interp.unit.programs[one.program].name.clone(),
+            other => {
+                return Err(unavailable(format!(
+                    "TASK {task} binds {} program instances (need \
+                     exactly one)",
+                    other.len()
+                )))
+            }
+        };
+        StBackend::new(interp, program)
+    }
 }
 
 fn probe_dims(vm: &Vm, program: &str) -> Option<(usize, usize)> {

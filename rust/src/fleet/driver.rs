@@ -45,6 +45,8 @@ use crate::netserve::Client;
 use crate::netserve::NetOptions;
 use crate::plc::{HwProfile, ScanCycle};
 use crate::serve::{Deadline, Pool, PoolConfig, Priority, SubmitOptions, Ticket};
+use crate::st::tasks::serve_priority;
+use crate::st::{TaskScheduler, Value, Vm};
 
 /// Wd-deviation band of the fleet detector (t/min beyond which the
 /// window mean fires the attack logit). ~100σ above benign ADC+noise
@@ -94,6 +96,45 @@ pub fn detector_model() -> Model {
     ])
 }
 
+/// The per-plant two-task IEC 61131-3 controller used when
+/// [`FleetConfig::st_tasks`] is on: a priority-0 control task every
+/// scan (100 ms, integrating a PI-style correction from the ADC
+/// image) and a priority-1 detection task every third scan. The
+/// driver feeds each plant's ADC readings into the globals, ticks the
+/// plant's [`TaskScheduler`] once per simulator step, and only
+/// submits a detection request on ticks where `t_detect` actually ran
+/// — with the request class bridged from the task's IEC priority via
+/// [`serve_priority`] (1 → `Defense`) and the deadline from
+/// `Deadline::for_scan` as usual.
+const ST_TASKS_SRC: &str = "\
+VAR_GLOBAL
+    g_tb0 : REAL;
+    g_wd : REAL;
+    g_mv : REAL;
+    g_scans : DINT;
+    g_det_runs : DINT;
+    g_det_acc : REAL;
+END_VAR
+PROGRAM CtrlScan
+VAR err : REAL; END_VAR
+    err := 0.66 - g_wd;
+    g_mv := g_mv + 0.4 * err;
+    g_scans := g_scans + 1;
+END_PROGRAM
+PROGRAM DetectScan
+    g_det_acc := g_det_acc + g_wd + g_tb0;
+    g_det_runs := g_det_runs + 1;
+END_PROGRAM
+CONFIGURATION FleetPlant
+    RESOURCE cpu ON plc
+        TASK t_ctrl(INTERVAL := T#100ms, PRIORITY := 0);
+        TASK t_detect(INTERVAL := T#300ms, PRIORITY := 1);
+        PROGRAM pCtrl WITH t_ctrl : CtrlScan;
+        PROGRAM pDet WITH t_detect : DetectScan;
+    END_RESOURCE
+END_CONFIGURATION
+";
+
 /// Fleet run parameters. Every field is an input to the deterministic
 /// [`FleetOutcome`](super::slo::FleetOutcome).
 #[derive(Debug, Clone)]
@@ -139,6 +180,13 @@ pub struct FleetConfig {
     pub sweep_every: u64,
     /// Plants sampled per sweep burst.
     pub sweep_batch: usize,
+    /// Run each plant's controller as a real two-task IEC 61131-3
+    /// CONFIGURATION (`ST_TASKS_SRC` on the bytecode [`Vm`]):
+    /// detection requests are then paced by the priority-1 `t_detect`
+    /// task (every third scan) and submitted at the serve class its
+    /// IEC priority bridges to (`Defense`), instead of every-scan
+    /// `Control`-class submission.
+    pub st_tasks: bool,
 }
 
 impl Default for FleetConfig {
@@ -159,6 +207,7 @@ impl Default for FleetConfig {
             operator_delay: 50,
             sweep_every: 100,
             sweep_batch: 4,
+            st_tasks: false,
         }
     }
 }
@@ -366,9 +415,49 @@ fn account_error(c: &mut ClassCounts, e: &InferenceError) {
     }
 }
 
+/// One plant's on-PLC task set: the compiled two-task configuration
+/// running on the bytecode tier plus its cyclic executive, and the
+/// resolved global slots / task index the driver pokes each step.
+struct StTasks {
+    vm: Vm,
+    sched: TaskScheduler,
+    g_tb0: usize,
+    g_wd: usize,
+    detect_task: usize,
+    detect_class: Priority,
+}
+
+impl StTasks {
+    fn new(unit: &crate::st::ir::Unit) -> StTasks {
+        let g_tb0 = unit.find_global("g_tb0").expect("g_tb0 global");
+        let g_wd = unit.find_global("g_wd").expect("g_wd global");
+        let vm = Vm::new(unit.clone());
+        let sched = TaskScheduler::for_runtime(&vm, HwProfile::beaglebone())
+            .expect("fleet controller declares a CONFIGURATION");
+        let detect_task =
+            sched.model().find_task("t_detect").expect("t_detect task");
+        let detect_class =
+            serve_priority(sched.model().tasks[detect_task].priority);
+        StTasks { vm, sched, g_tb0, g_wd, detect_task, detect_class }
+    }
+
+    /// Feed the scan's ADC image and run one scheduler tick; returns
+    /// whether the detection task ran this scan.
+    fn scan(&mut self, tb0_adc: f64, wd_adc: f64) -> bool {
+        self.vm.globals[self.g_tb0] = Value::Real(tb0_adc as f32);
+        self.vm.globals[self.g_wd] = Value::Real(wd_adc as f32);
+        let report = self
+            .sched
+            .tick(&mut self.vm)
+            .expect("fleet ST controller faulted");
+        report.ran.contains(&self.detect_task)
+    }
+}
+
 struct PlantRt {
     sim: Simulator,
     window: SlidingWindow,
+    st: Option<StTasks>,
     scenario: Option<Scenario>,
     consecutive: u32,
     rung: u32,
@@ -530,11 +619,28 @@ impl FleetRun<'_> {
                 self.plants[i].dev_samples += 1;
             }
             let warm = self.plants[i].window.push(r.tb0_adc, r.wd_adc);
+            // In st_tasks mode the plant's own task scheduler paces
+            // detection: tick it every scan (whether or not the window
+            // is warm — the schedule must stay aligned with plant
+            // time) and only submit when `t_detect` ran, at the serve
+            // class its IEC priority bridges to.
+            let (detect_now, detect_class) =
+                match self.plants[i].st.as_mut() {
+                    Some(st) => {
+                        let ran = st.scan(r.tb0_adc, r.wd_adc);
+                        (ran, st.detect_class)
+                    }
+                    None => (true, Priority::Control),
+                };
             if !warm {
                 continue;
             }
-            self.plants[i].window.fill_features(&mut self.features);
-            self.submit_one(i, Priority::Control, true);
+            if detect_now || self.plants[i].consecutive > 0 {
+                self.plants[i].window.fill_features(&mut self.features);
+            }
+            if detect_now {
+                self.submit_one(i, detect_class, true);
+            }
             if self.plants[i].consecutive > 0 {
                 // Suspicious plants double-check at Defense class —
                 // attack waves become load spikes.
@@ -568,6 +674,17 @@ impl FleetRun<'_> {
 /// determinism argument).
 pub fn run_fleet(cfg: &FleetConfig, target: FleetTarget) -> FleetReport {
     let t0 = Instant::now();
+    // One compile of the two-task controller, cloned per plant (each
+    // plant owns its globals/meter; the source is fixed so the unit
+    // is too).
+    let st_unit = if cfg.st_tasks {
+        Some(
+            crate::st::compile(ST_TASKS_SRC)
+                .expect("fleet two-task controller compiles"),
+        )
+    } else {
+        None
+    };
     let mut run = FleetRun {
         cfg,
         lane: Lane::new(target),
@@ -585,6 +702,7 @@ pub fn run_fleet(cfg: &FleetConfig, target: FleetTarget) -> FleetReport {
                 PlantRt {
                     sim: Simulator::new(seed, cfg.noise, attacks),
                     window: SlidingWindow::new(),
+                    st: st_unit.as_ref().map(StTasks::new),
                     scenario,
                     consecutive: 0,
                     rung: 0,
@@ -761,6 +879,47 @@ mod tests {
         assert!(a.outcome.class(Priority::Control).served > 0);
         assert!(a.outcome.class(Priority::Batch).served > 0);
         assert!(a.timing.pool_served > 0);
+    }
+
+    /// The two-task controller mode: detection is paced by the ST
+    /// task scheduler (every third scan), submitted at the Defense
+    /// class its IEC priority 1 bridges to, and the whole run still
+    /// replays bit-identically across pool topologies.
+    #[test]
+    fn st_task_fleet_paces_detection_and_replays() {
+        let cfg = FleetConfig {
+            plants: 4,
+            steps: 900,
+            seed: 11,
+            st_tasks: true,
+            sweep_every: 0,
+            ..FleetConfig::default()
+        };
+        let a = run_fleet(&cfg, FleetTarget::pools(2, 2, 8));
+        let b = run_fleet(&cfg, FleetTarget::pools(1, 3, 4));
+        assert_eq!(a.outcome.unresolved(), 0);
+        assert_eq!(
+            a.outcome, b.outcome,
+            "task-paced outcome must not depend on pool topology"
+        );
+        // Detection requests ride the Defense band now; nothing is
+        // submitted at Control class (no sweeps, no per-scan checks).
+        let defense = a.outcome.class(Priority::Defense);
+        assert!(defense.submitted > 0, "detect submits: {defense:?}");
+        assert_eq!(a.outcome.class(Priority::Control).submitted, 0);
+        // t_detect runs every third 100 ms scan, so per-plant detect
+        // submissions are bounded by ~steps/3 (suspicion re-checks are
+        // Defense-class too, hence <=, plus the warmup window).
+        assert!(
+            defense.submitted <= cfg.plants as u64 * (cfg.steps / 3 + 1) * 2,
+            "detection must be task-paced: {defense:?}"
+        );
+        // The slower detection cadence still catches the campaigns.
+        assert!(
+            a.outcome.families.iter().any(|f| f.detected > 0),
+            "attacks must still be detected: {:?}",
+            a.outcome.families
+        );
     }
 
     #[test]

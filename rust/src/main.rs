@@ -60,6 +60,7 @@ use icsml::util::cli::Args;
 fn main() -> Result<()> {
     let args = Args::parse(&[
         "no-fused", "st", "engine", "xla", "deadline", "no-feedback",
+        "st-tasks",
     ]);
     match args.subcommand.as_deref() {
         Some("table1") => table1(),
@@ -72,32 +73,120 @@ fn main() -> Result<()> {
         Some("listen") => listen(&args),
         Some("client") => client(&args),
         Some("fleet") => fleet(&args),
+        Some("tasks") => tasks(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
+            } else {
+                eprintln!("missing subcommand\n");
             }
-            eprintln!(
-                "usage: icsml <table1|fig3|table2|port|infer|hitl|serve|\
-                 listen|client|fleet> \
-                 [options]\n  port  --model classifier [--out FILE] \
-                 [--no-fused]\n  infer --index N [--st|--engine|--xla]\n  \
-                 hitl  --steps N --attack combined --magnitude 0.5\n  \
-                 serve --requests N --workers W --batch B [--xla] \
-                 [--deadline-us D] [--class control|defense|batch] \
-                 [--admit bbb|wago]\n  \
-                 listen --addr 127.0.0.1:9470 [--roots DIR,DIR] \
-                 [--workers W] [--batch B] [--max-models N] [--max-mb MB] \
-                 [--for-secs S]\n  \
-                 client --addr 127.0.0.1:9470 --model classifier \
-                 --requests N [--class C] [--deadline-us D] [--dim K]\n  \
-                 fleet --plants N --duration SECS \
-                 [--attack-mix uniform|benign|fam=w,...] [--seed X] \
-                 [--workers W] [--batch B] [--addr A] [--deadline] \
-                 [--no-feedback]"
-            );
-            Ok(())
+            usage();
+            // An unrecognized invocation must fail the process (exit
+            // code 1), not report success to the calling shell.
+            std::process::exit(1);
         }
     }
+}
+
+/// The complete operator surface: every subcommand with its options.
+fn usage() {
+    eprintln!(
+        "usage: icsml <subcommand> [options]\n\
+         \n\
+         subcommands:\n  \
+         table1  print the paper's Table 1 (PLC hardware specs)\n  \
+         fig3    PLC memory vs Keras model sizes (Fig. 3 data)\n  \
+         table2  quantization memory requirements (Table 2)\n  \
+         port    --model classifier [--program MAIN] [--out FILE] \
+         [--no-fused]\n  \
+         infer   --index N [--st|--engine|--xla]\n  \
+         hitl    --steps N --attack combined --magnitude 0.5 \
+         [--start N]\n  \
+         serve   --requests N --workers W --batch B [--xla] \
+         [--deadline-us D] [--class control|defense|batch] \
+         [--admit bbb|wago]\n  \
+         listen  --addr 127.0.0.1:9470 [--roots DIR,DIR] [--workers W] \
+         [--batch B] [--max-models N] [--max-mb MB] [--for-secs S]\n  \
+         client  --addr 127.0.0.1:9470 --model classifier --requests N \
+         [--class C] [--deadline-us D] [--dim K]\n  \
+         fleet   --plants N --duration SECS \
+         [--attack-mix uniform|benign|fam=w,...] [--seed X] \
+         [--workers W] [--batch B] [--addr A] [--deadline] \
+         [--no-feedback] [--st-tasks]\n  \
+         tasks   --file PROGRAM.st  (dump the parsed §2.7 TaskModel \
+         as a table)"
+    );
+}
+
+/// `icsml tasks --file prog.st` — compile an ST source and print its
+/// CONFIGURATION → RESOURCE → TASK model.
+fn tasks(args: &Args) -> Result<()> {
+    let path = args
+        .opt("file")
+        .ok_or_else(|| anyhow::anyhow!("tasks needs --file PROGRAM.st"))?;
+    let src = std::fs::read_to_string(path)?;
+    let unit =
+        icsml::st::compile(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model = match &unit.tasks {
+        Some(m) => m,
+        None => {
+            println!(
+                "{path}: no CONFIGURATION block ({} program(s) would \
+                 freewheel on the implicit scan cycle)",
+                unit.programs.len()
+            );
+            return Ok(());
+        }
+    };
+    println!(
+        "CONFIGURATION {} / RESOURCE {} ON {}",
+        model.config_name, model.resource_name, model.processor
+    );
+    let mut t = Table::new(&[
+        "Task",
+        "Trigger",
+        "Priority",
+        "Serve band",
+        "Programs",
+    ]);
+    for task in &model.tasks {
+        let trigger = match task.trigger {
+            icsml::st::Trigger::Cyclic { interval_us } => {
+                format!("cyclic every {interval_us} us")
+            }
+            icsml::st::Trigger::Single { global } => {
+                format!("single on {}", unit.globals[global].name)
+            }
+            icsml::st::Trigger::Freewheeling => "freewheeling".to_string(),
+        };
+        let programs = task
+            .programs
+            .iter()
+            .map(|b| {
+                format!(
+                    "{} : {}",
+                    b.instance, unit.programs[b.program].name
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        let priority = if task.priority == u32::MAX {
+            "lowest".to_string()
+        } else {
+            task.priority.to_string()
+        };
+        t.row(&[
+            task.name.clone(),
+            trigger,
+            priority,
+            icsml::st::tasks::serve_priority(task.priority)
+                .name()
+                .to_string(),
+            programs,
+        ]);
+    }
+    t.print();
+    Ok(())
 }
 
 fn table1() -> Result<()> {
@@ -635,14 +724,20 @@ fn fleet(args: &Args) -> Result<()> {
         mix,
         deadline: args.has("deadline"),
         feedback: !args.has("no-feedback"),
+        st_tasks: args.has("st-tasks"),
         ..FleetConfig::default()
     };
     println!(
         "fleet: {plants} plants x {steps} steps ({duration} s of plant \
-         time), seed {}, feedback {}, deadlines {}",
+         time), seed {}, feedback {}, deadlines {}, controller {}",
         cfg.seed,
         if cfg.feedback { "on" } else { "off" },
         if cfg.deadline { "on" } else { "off" },
+        if cfg.st_tasks {
+            "two-task ST configuration"
+        } else {
+            "native detector loop"
+        },
     );
 
     // With --addr the fleet drives an external `listen` server (which

@@ -10,6 +10,56 @@ pub struct File {
     pub function_blocks: Vec<FbDecl>,
     pub programs: Vec<PouDecl>,
     pub globals: Vec<VarBlock>,
+    pub configurations: Vec<ConfigDecl>,
+}
+
+/// `CONFIGURATION name ... END_CONFIGURATION` — the IEC 61131-3 §2.7
+/// deployment unit: resources, their tasks, and program-instance
+/// bindings.
+#[derive(Debug, Clone)]
+pub struct ConfigDecl {
+    pub name: String,
+    pub resources: Vec<ResourceDecl>,
+    pub line: u32,
+}
+
+/// `RESOURCE name ON processor ... END_RESOURCE` — one processing
+/// unit holding TASK declarations and program instances.
+#[derive(Debug, Clone)]
+pub struct ResourceDecl {
+    pub name: String,
+    /// Processor/target identifier after `ON` (uninterpreted).
+    pub on: String,
+    pub tasks: Vec<TaskDecl>,
+    pub programs: Vec<ProgBind>,
+    pub line: u32,
+}
+
+/// `TASK name (INTERVAL := T#10ms, PRIORITY := 1);` or
+/// `TASK name (SINGLE := trigger, PRIORITY := 1);`
+#[derive(Debug, Clone)]
+pub struct TaskDecl {
+    pub name: String,
+    /// Cyclic interval literal text (from `T#...`/`TIME#...`), if any.
+    pub interval: Option<String>,
+    /// `SINGLE := <global BOOL>` trigger variable name, if any.
+    pub single: Option<String>,
+    /// `PRIORITY := n` (constant expression; 0 = most urgent).
+    pub priority: Option<Expr>,
+    pub line: u32,
+}
+
+/// `PROGRAM inst WITH task : Type;` (WITH is optional: an unbound
+/// instance freewheels at lowest priority).
+#[derive(Debug, Clone)]
+pub struct ProgBind {
+    /// Program-instance name.
+    pub name: String,
+    /// Task the instance is bound to, if any.
+    pub task: Option<String>,
+    /// PROGRAM type the instance is of.
+    pub program_type: String,
+    pub line: u32,
 }
 
 /// `TYPE name : STRUCT ... END_STRUCT END_TYPE`

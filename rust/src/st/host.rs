@@ -107,6 +107,12 @@ impl Host {
         Some(self.program_instances[pid])
     }
 
+    /// The unit's compiled §2.7 task model, when it declares a
+    /// CONFIGURATION block.
+    pub fn task_model(&self) -> Option<&super::tasks::TaskModel> {
+        self.unit.tasks.as_ref()
+    }
+
     /// Read a field of an arena instance by name (program VARs included).
     pub fn instance_field(&self, inst: usize, field: &str) -> Option<Value> {
         let fi = self.field_index(inst, field)?;

@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use super::tasks::TaskModel;
 use super::value::Init;
 
 /// IEC integer widths (share `i64` runtime storage).
@@ -365,6 +366,9 @@ pub struct Unit {
     pub funcs: Vec<FuncDef>,
     pub programs: Vec<ProgramDef>,
     pub globals: Vec<VarDef>,
+    /// §2.7 task model, when the unit declares a CONFIGURATION block
+    /// (executed by [`super::tasks::TaskScheduler`]).
+    pub tasks: Option<TaskModel>,
 }
 
 impl Unit {

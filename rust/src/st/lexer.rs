@@ -54,6 +54,9 @@ pub const KEYWORDS: &[&str] = &[
     "TRUE", "FALSE", "NULL",
     "BOOL", "SINT", "INT", "DINT", "LINT", "USINT", "UINT", "UDINT",
     "ULINT", "BYTE", "WORD", "DWORD", "LWORD", "REAL", "LREAL", "TIME",
+    // §2.7 task model (CONFIGURATION / RESOURCE / TASK declarations).
+    "CONFIGURATION", "END_CONFIGURATION", "RESOURCE", "END_RESOURCE",
+    "TASK", "ON", "WITH",
 ];
 
 /// Lex failure with position.

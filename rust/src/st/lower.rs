@@ -40,6 +40,7 @@ pub fn lower(file: &ast::File) -> Result<Unit, SemaError> {
     lw.lower_function_bodies()?;
     lw.lower_fb_methods()?;
     lw.lower_programs()?;
+    lw.lower_configurations()?;
     lw.check_recursion()?;
     Ok(lw.unit)
 }
@@ -950,6 +951,227 @@ impl<'a> Lowerer<'a> {
                 St::Expr(ex)
             }
         }))
+    }
+
+    // -------------------------------------------- §2.7 configurations
+    /// Lower `CONFIGURATION` blocks to the unit's [`TaskModel`]
+    /// (`super::tasks`). Programs must already be lowered: bindings
+    /// resolve to program-definition indices, and `SINGLE` triggers to
+    /// global slots.
+    fn lower_configurations(&mut self) -> Result<(), SemaError> {
+        use super::tasks::{
+            parse_duration_us, ProgramBinding, TaskDef, TaskModel, Trigger,
+        };
+        let cfg = match self.ast.configurations.as_slice() {
+            [] => return Ok(()),
+            [one] => one,
+            [_, second, ..] => {
+                return Err(err(
+                    second.line,
+                    "multiple CONFIGURATION blocks are not supported",
+                ))
+            }
+        };
+        let res = match cfg.resources.as_slice() {
+            [one] => one,
+            [] => {
+                return Err(err(
+                    cfg.line,
+                    format!(
+                        "CONFIGURATION {} declares no RESOURCE",
+                        cfg.name
+                    ),
+                ))
+            }
+            [_, second, ..] => {
+                return Err(err(
+                    second.line,
+                    "multiple RESOURCE blocks are not supported",
+                ))
+            }
+        };
+
+        let consts = HashMap::new();
+        let mut tasks: Vec<TaskDef> = Vec::new();
+        for t in &res.tasks {
+            if tasks.iter().any(|d| d.name.eq_ignore_ascii_case(&t.name)) {
+                return Err(err(
+                    t.line,
+                    format!("duplicate TASK {}", t.name),
+                ));
+            }
+            let priority = match &t.priority {
+                Some(e) => {
+                    let p = self.const_int(e, &consts, t.line)?;
+                    if !(0..=u32::MAX as i64).contains(&p) {
+                        return Err(err(
+                            t.line,
+                            format!(
+                                "TASK {}: PRIORITY must be non-negative, \
+                                 got {p}",
+                                t.name
+                            ),
+                        ));
+                    }
+                    p as u32
+                }
+                None => 0,
+            };
+            let trigger = match (&t.interval, &t.single) {
+                (Some(_), Some(_)) => {
+                    return Err(err(
+                        t.line,
+                        format!(
+                            "TASK {}: INTERVAL and SINGLE are mutually \
+                             exclusive",
+                            t.name
+                        ),
+                    ))
+                }
+                (None, None) => {
+                    return Err(err(
+                        t.line,
+                        format!(
+                            "TASK {} needs an INTERVAL or SINGLE trigger",
+                            t.name
+                        ),
+                    ))
+                }
+                (Some(lit), None) => {
+                    let us =
+                        parse_duration_us(lit).ok_or_else(|| {
+                            err(
+                                t.line,
+                                format!(
+                                    "TASK {}: bad INTERVAL duration \
+                                     T#{lit}",
+                                    t.name
+                                ),
+                            )
+                        })?;
+                    if us <= 0 {
+                        return Err(err(
+                            t.line,
+                            format!(
+                                "TASK {}: INTERVAL must be positive, \
+                                 got T#{lit}",
+                                t.name
+                            ),
+                        ));
+                    }
+                    Trigger::Cyclic { interval_us: us as u64 }
+                }
+                (None, Some(g)) => {
+                    let gid =
+                        self.unit.find_global(g).ok_or_else(|| {
+                            err(
+                                t.line,
+                                format!(
+                                    "TASK {}: SINGLE trigger {g} is not \
+                                     a global variable",
+                                    t.name
+                                ),
+                            )
+                        })?;
+                    if self.unit.globals[gid].ty != Ty::Bool {
+                        return Err(err(
+                            t.line,
+                            format!(
+                                "TASK {}: SINGLE trigger {g} must be a \
+                                 global BOOL",
+                                t.name
+                            ),
+                        ));
+                    }
+                    Trigger::Single { global: gid }
+                }
+            };
+            tasks.push(TaskDef {
+                name: t.name.clone(),
+                trigger,
+                priority,
+                programs: Vec::new(),
+            });
+        }
+
+        // Program-instance bindings; unbound instances freewheel at
+        // the lowest priority (IEC default), each as its own synthetic
+        // task so the scheduler accounts them separately.
+        let mut seen_inst: Vec<String> = Vec::new();
+        let mut bound_types: Vec<usize> = Vec::new();
+        let mut free: Vec<TaskDef> = Vec::new();
+        for b in &res.programs {
+            if seen_inst.iter().any(|n| n.eq_ignore_ascii_case(&b.name)) {
+                return Err(err(
+                    b.line,
+                    format!("duplicate program instance {}", b.name),
+                ));
+            }
+            seen_inst.push(b.name.clone());
+            let pid = self
+                .unit
+                .find_program(&b.program_type)
+                .ok_or_else(|| {
+                    err(
+                        b.line,
+                        format!(
+                            "program instance {} has unknown PROGRAM \
+                             type {}",
+                            b.name, b.program_type
+                        ),
+                    )
+                })?;
+            // The host allocates exactly one instance per PROGRAM
+            // definition; two bindings of one type would alias state.
+            if bound_types.contains(&pid) {
+                return Err(err(
+                    b.line,
+                    format!(
+                        "PROGRAM type {} is bound more than once (one \
+                         instance per PROGRAM definition)",
+                        b.program_type
+                    ),
+                ));
+            }
+            bound_types.push(pid);
+            let binding = ProgramBinding {
+                instance: b.name.clone(),
+                program: pid,
+            };
+            match &b.task {
+                Some(tname) => {
+                    let ti = tasks
+                        .iter()
+                        .position(|d| d.name.eq_ignore_ascii_case(tname))
+                        .ok_or_else(|| {
+                            err(
+                                b.line,
+                                format!(
+                                    "program instance {} bound to \
+                                     undeclared TASK {tname}",
+                                    b.name
+                                ),
+                            )
+                        })?;
+                    tasks[ti].programs.push(binding);
+                }
+                None => free.push(TaskDef {
+                    name: format!("__free_{}", b.name),
+                    trigger: Trigger::Freewheeling,
+                    priority: u32::MAX,
+                    programs: vec![binding],
+                }),
+            }
+        }
+        tasks.extend(free);
+
+        self.unit.tasks = Some(TaskModel {
+            config_name: cfg.name.clone(),
+            resource_name: res.name.clone(),
+            processor: res.on.clone(),
+            tasks,
+        });
+        Ok(())
     }
 
     fn const_int_in_cx(

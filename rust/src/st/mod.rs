@@ -35,6 +35,7 @@ pub mod lexer;
 pub mod lower;
 pub mod parser;
 pub mod sema;
+pub mod tasks;
 pub mod value;
 pub mod vm;
 
@@ -45,6 +46,9 @@ pub use interp::{Interp, RuntimeError};
 pub use lexer::{lex, LexError, Token, TokenKind};
 pub use parser::{parse, ParseError};
 pub use sema::SemaError;
+pub use tasks::{
+    TaskDef, TaskModel, TaskRuntime, TaskScheduler, TickReport, Trigger,
+};
 pub use value::Value;
 pub use vm::Vm;
 

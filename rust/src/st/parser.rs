@@ -37,6 +37,9 @@ pub fn parse(tokens: &[Token]) -> Result<File, ParseError> {
             Some("FUNCTION") => file.functions.push(p.pou_decl("FUNCTION")?),
             Some("PROGRAM") => file.programs.push(p.pou_decl("PROGRAM")?),
             Some("VAR_GLOBAL") => file.globals.push(p.var_block()?),
+            Some("CONFIGURATION") => {
+                file.configurations.push(p.config_decl()?)
+            }
             _ => {
                 let t = p.cur();
                 return Err(p.err_at(
@@ -160,6 +163,108 @@ impl<'a> Parser<'a> {
             out.push(TypeDecl { name, fields, line });
         }
         Ok(out)
+    }
+
+    /// `CONFIGURATION name { RESOURCE ... } END_CONFIGURATION` (§2.7).
+    fn config_decl(&mut self) -> Result<ConfigDecl, ParseError> {
+        self.expect_kw("CONFIGURATION")?;
+        let (name, line) = self.ident()?;
+        let mut resources = Vec::new();
+        while !self.eat_kw("END_CONFIGURATION") {
+            if self.at_end() {
+                return Err(self.err("unterminated CONFIGURATION"));
+            }
+            resources.push(self.resource_decl()?);
+        }
+        self.eat(&K::Semi);
+        Ok(ConfigDecl { name, resources, line })
+    }
+
+    /// `RESOURCE name ON proc { TASK ... | PROGRAM ... } END_RESOURCE`
+    fn resource_decl(&mut self) -> Result<ResourceDecl, ParseError> {
+        self.expect_kw("RESOURCE")?;
+        let (name, line) = self.ident()?;
+        self.expect_kw("ON")?;
+        let (on, _) = self.ident()?;
+        let mut tasks = Vec::new();
+        let mut programs = Vec::new();
+        while !self.eat_kw("END_RESOURCE") {
+            match self.peek_kw() {
+                Some("TASK") => tasks.push(self.task_decl()?),
+                Some("PROGRAM") => programs.push(self.prog_bind()?),
+                _ => {
+                    return Err(self.err(format!(
+                        "expected TASK, PROGRAM or END_RESOURCE, got {:?}",
+                        self.cur().kind
+                    )))
+                }
+            }
+        }
+        self.eat(&K::Semi);
+        Ok(ResourceDecl { name, on, tasks, programs, line })
+    }
+
+    /// `TASK name (INTERVAL := T#10ms, PRIORITY := 1);` /
+    /// `TASK name (SINGLE := trigger, PRIORITY := 1);`
+    fn task_decl(&mut self) -> Result<TaskDecl, ParseError> {
+        self.expect_kw("TASK")?;
+        let (name, line) = self.ident()?;
+        self.expect(K::LParen)?;
+        let mut interval = None;
+        let mut single = None;
+        let mut priority = None;
+        loop {
+            let (param, _) = self.ident()?;
+            self.expect(K::Assign)?;
+            if param.eq_ignore_ascii_case("INTERVAL") {
+                // Duration literal: `T#100ms` lexes as Typed("T", ..).
+                match &self.cur().kind {
+                    K::Typed(ty, lit)
+                        if ty.eq_ignore_ascii_case("T")
+                            || ty.eq_ignore_ascii_case("TIME") =>
+                    {
+                        interval = Some(lit.clone());
+                        self.i += 1;
+                    }
+                    other => {
+                        return Err(self.err(format!(
+                            "INTERVAL expects a T#/TIME# duration literal, \
+                             got {other:?}"
+                        )))
+                    }
+                }
+            } else if param.eq_ignore_ascii_case("SINGLE") {
+                single = Some(self.ident()?.0);
+            } else if param.eq_ignore_ascii_case("PRIORITY") {
+                priority = Some(self.expr()?);
+            } else {
+                return Err(self.err(format!(
+                    "unknown TASK parameter {param:?} \
+                     (expected INTERVAL, SINGLE or PRIORITY)"
+                )));
+            }
+            if !self.eat(&K::Comma) {
+                break;
+            }
+        }
+        self.expect(K::RParen)?;
+        self.expect(K::Semi)?;
+        Ok(TaskDecl { name, interval, single, priority, line })
+    }
+
+    /// `PROGRAM inst WITH task : Type;` (`WITH task` optional).
+    fn prog_bind(&mut self) -> Result<ProgBind, ParseError> {
+        self.expect_kw("PROGRAM")?;
+        let (name, line) = self.ident()?;
+        let task = if self.eat_kw("WITH") {
+            Some(self.ident()?.0)
+        } else {
+            None
+        };
+        self.expect(K::Colon)?;
+        let (program_type, _) = self.ident()?;
+        self.expect(K::Semi)?;
+        Ok(ProgBind { name, task, program_type, line })
     }
 
     fn interface_decl(&mut self) -> Result<InterfaceDecl, ParseError> {

@@ -1,0 +1,518 @@
+//! IEC 61131-3 §2.7 task model: CONFIGURATION → RESOURCE → TASK.
+//!
+//! [`super::lower`] compiles a source `CONFIGURATION` block into a
+//! [`TaskModel`] carried on the [`Unit`](super::ir::Unit); this module
+//! executes it. [`TaskScheduler`] is a priority-driven cyclic
+//! executive over *simulated* time: cyclic tasks release on their
+//! `INTERVAL`, `SINGLE` tasks on a rising edge of a global BOOL, and
+//! programs not bound to any task freewheel at the lowest priority.
+//! Time is modeled, never wall clock — each activation's cost is the
+//! task's [`Meter`] delta priced through a [`HwProfile`], so a
+//! schedule replays bit-identically on the [`Interp`] oracle and the
+//! bytecode [`Vm`] (the differential invariant extends per task:
+//! `tests/st_tasks.rs`).
+//!
+//! Budget accounting reuses [`plc::ScanCycle`](crate::plc::ScanCycle):
+//! every cyclic task owns one cycle ledger (period = its interval), so
+//! overruns and accumulated time use the same arithmetic the serving
+//! deadlines ([`Deadline::for_scan`](crate::serve::Deadline::for_scan))
+//! are derived from. A due task is *skipped* — deterministically, with
+//! a counter — when higher-priority work in the same release instant
+//! has already consumed its whole interval; the highest-priority task
+//! therefore can never skip.
+
+#![deny(missing_docs)]
+
+use crate::plc::{HwProfile, ScanCycle};
+
+use super::cost::Meter;
+use super::host::Host;
+use super::interp::{Interp, RuntimeError};
+use super::value::Value;
+use super::vm::Vm;
+
+// ---------------------------------------------------------------- model
+
+/// The compiled §2.7 deployment model: one CONFIGURATION / RESOURCE
+/// worth of tasks with their program-instance bindings, produced by
+/// [`super::lower`] and carried on [`Unit::tasks`](super::ir::Unit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskModel {
+    /// CONFIGURATION name (case-preserved).
+    pub config_name: String,
+    /// RESOURCE name.
+    pub resource_name: String,
+    /// Processor identifier after `ON` (uninterpreted).
+    pub processor: String,
+    /// Tasks in declaration order (synthetic freewheeling tasks for
+    /// unbound program instances come last).
+    pub tasks: Vec<TaskDef>,
+}
+
+impl TaskModel {
+    /// Find a task by (case-insensitive) name.
+    pub fn find_task(&self, name: &str) -> Option<usize> {
+        self.tasks
+            .iter()
+            .position(|t| t.name.eq_ignore_ascii_case(name))
+    }
+}
+
+/// One task: trigger, priority, and the program instances it runs (in
+/// binding order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDef {
+    /// Task name.
+    pub name: String,
+    /// What releases the task.
+    pub trigger: Trigger,
+    /// IEC priority: 0 is the most urgent. Synthetic freewheeling
+    /// tasks use `u32::MAX`.
+    pub priority: u32,
+    /// Bound program instances, in declaration order.
+    pub programs: Vec<ProgramBinding>,
+}
+
+/// Task release trigger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// `INTERVAL := T#..` — released every `interval_us` of simulated
+    /// time (first release at t = 0).
+    Cyclic {
+        /// Release period in simulated microseconds (> 0).
+        interval_us: u64,
+    },
+    /// `SINGLE := g` — released on a rising edge of global BOOL `g`
+    /// (index into [`Unit::globals`](super::ir::Unit)).
+    Single {
+        /// Global slot of the trigger variable.
+        global: usize,
+    },
+    /// No task association: runs every scheduler tick at the lowest
+    /// priority (IEC's default for unbound program instances).
+    Freewheeling,
+}
+
+/// A `PROGRAM inst WITH task : Type` binding, resolved to a program
+/// definition index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramBinding {
+    /// Instance name from the RESOURCE block.
+    pub instance: String,
+    /// Index into [`Unit::programs`](super::ir::Unit).
+    pub program: usize,
+}
+
+// ------------------------------------------------------------ durations
+
+/// Parse an IEC duration literal body (the text after `T#`/`TIME#`)
+/// into microseconds. Accepts multi-component forms (`1s500ms`),
+/// decimal components (`1.5s`), units `d`/`h`/`m`/`s`/`ms`/`us`, an
+/// optional leading sign, and `_` digit separators. Returns `None` on
+/// malformed input.
+pub fn parse_duration_us(lit: &str) -> Option<i64> {
+    let lit = lit.trim();
+    let (neg, mut rest) = match lit.as_bytes().first()? {
+        b'-' => (true, &lit[1..]),
+        b'+' => (false, &lit[1..]),
+        _ => (false, lit),
+    };
+    if rest.is_empty() {
+        return None;
+    }
+    let mut total = 0.0f64;
+    while !rest.is_empty() {
+        let num_len = rest
+            .bytes()
+            .take_while(|c| c.is_ascii_digit() || *c == b'.' || *c == b'_')
+            .count();
+        if num_len == 0 {
+            return None;
+        }
+        let num: f64 = rest[..num_len].replace('_', "").parse().ok()?;
+        rest = &rest[num_len..];
+        let unit_len = rest
+            .bytes()
+            .take_while(|c| c.is_ascii_alphabetic())
+            .count();
+        let unit_us = match rest[..unit_len].to_ascii_lowercase().as_str() {
+            "d" => 86_400_000_000.0,
+            "h" => 3_600_000_000.0,
+            "m" => 60_000_000.0,
+            "s" => 1_000_000.0,
+            "ms" => 1_000.0,
+            "us" => 1.0,
+            _ => return None,
+        };
+        rest = &rest[unit_len..];
+        total += num * unit_us;
+    }
+    let us = total.round();
+    if !us.is_finite() || us.abs() > i64::MAX as f64 {
+        return None;
+    }
+    Some(if neg { -(us as i64) } else { us as i64 })
+}
+
+// ------------------------------------------------------ execution tiers
+
+/// The tier abstraction the scheduler drives: both the tree-walking
+/// [`Interp`] oracle and the bytecode [`Vm`] expose their shared
+/// [`Host`] plus a run-one-program entry point, so one scheduler
+/// implementation serves both sides of the differential harness.
+pub trait TaskRuntime {
+    /// The tier's load-time state (globals, instances, meter).
+    fn host(&self) -> &Host;
+    /// Mutable host access (the scheduler reads `SINGLE` trigger
+    /// globals and snapshots the meter around each activation).
+    fn host_mut(&mut self) -> &mut Host;
+    /// Run one scan of program definition `pid`.
+    fn run_program_id(&mut self, pid: usize) -> Result<(), RuntimeError>;
+}
+
+impl TaskRuntime for Interp {
+    fn host(&self) -> &Host {
+        self
+    }
+
+    fn host_mut(&mut self) -> &mut Host {
+        self
+    }
+
+    fn run_program_id(&mut self, pid: usize) -> Result<(), RuntimeError> {
+        let name = self.unit.programs[pid].name.clone();
+        self.run_program(&name)
+    }
+}
+
+impl TaskRuntime for Vm {
+    fn host(&self) -> &Host {
+        self
+    }
+
+    fn host_mut(&mut self) -> &mut Host {
+        self
+    }
+
+    fn run_program_id(&mut self, pid: usize) -> Result<(), RuntimeError> {
+        let name = self.unit.programs[pid].name.clone();
+        self.run_program(&name)
+    }
+}
+
+// ------------------------------------------------------------ scheduler
+
+/// Per-task runtime accounting.
+#[derive(Debug, Clone)]
+pub struct TaskState {
+    /// Next simulated release instant (cyclic tasks).
+    pub next_release_us: u64,
+    /// Accumulated per-task meter across all activations.
+    pub meter: Meter,
+    /// Completed activations.
+    pub activations: u64,
+    /// Due releases skipped because higher-priority work had already
+    /// consumed the task's whole interval at the release instant.
+    pub skipped: u64,
+    /// Budget ledger for cyclic tasks (period = the task interval);
+    /// `stats.overruns` counts activations whose own execution time
+    /// exceeded the interval.
+    pub cycle: Option<ScanCycle>,
+    /// Last observed value of the `SINGLE` trigger (edge detection).
+    last_single: bool,
+}
+
+impl TaskState {
+    /// Activations whose execution exceeded the task interval.
+    pub fn overruns(&self) -> u64 {
+        self.cycle.as_ref().map_or(0, |c| c.stats.overruns)
+    }
+}
+
+/// What one [`TaskScheduler::tick`] did.
+#[derive(Debug, Clone, Default)]
+pub struct TickReport {
+    /// Simulated time of this tick (µs).
+    pub now_us: u64,
+    /// Task indices that ran, in execution (priority) order.
+    pub ran: Vec<usize>,
+    /// Task indices that were due but skipped.
+    pub skipped: Vec<usize>,
+    /// Modeled CPU time consumed by this tick's activations (µs).
+    pub busy_us: f64,
+}
+
+/// Priority-driven cyclic executive over simulated time.
+///
+/// Each [`tick`](TaskScheduler::tick) advances the clock to the next
+/// cyclic release instant, collects every due task (cyclic releases,
+/// `SINGLE` rising edges, freewheeling programs), and runs them
+/// highest-priority-first (declaration order breaks ties). Execution
+/// cost is the activation's [`Meter`] delta priced through the
+/// scheduler's [`HwProfile`]; a due task whose whole interval is
+/// already consumed by higher-priority work in the same instant is
+/// skipped and counted, so starvation is deterministic and visible.
+pub struct TaskScheduler {
+    model: TaskModel,
+    profile: HwProfile,
+    now_us: u64,
+    states: Vec<TaskState>,
+}
+
+impl TaskScheduler {
+    /// Build a scheduler for a compiled task model.
+    pub fn new(model: TaskModel, profile: HwProfile) -> TaskScheduler {
+        let states = model
+            .tasks
+            .iter()
+            .map(|t| TaskState {
+                next_release_us: 0,
+                meter: Meter::new(),
+                activations: 0,
+                skipped: 0,
+                cycle: match t.trigger {
+                    Trigger::Cyclic { interval_us } => Some(ScanCycle::new(
+                        profile.clone(),
+                        interval_us as f64,
+                    )),
+                    _ => None,
+                },
+                last_single: false,
+            })
+            .collect();
+        TaskScheduler { model, profile, now_us: 0, states }
+    }
+
+    /// Build a scheduler from a tier's compiled unit; `None` when the
+    /// unit has no CONFIGURATION block.
+    pub fn for_runtime(
+        rt: &dyn TaskRuntime,
+        profile: HwProfile,
+    ) -> Option<TaskScheduler> {
+        let model = rt.host().task_model()?.clone();
+        Some(TaskScheduler::new(model, profile))
+    }
+
+    /// The compiled task model this scheduler executes.
+    pub fn model(&self) -> &TaskModel {
+        &self.model
+    }
+
+    /// Current simulated time (µs).
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Per-task accounting, indexed like [`TaskModel::tasks`].
+    pub fn states(&self) -> &[TaskState] {
+        &self.states
+    }
+
+    /// The accumulated meter of one task.
+    pub fn task_meter(&self, task: usize) -> &Meter {
+        &self.states[task].meter
+    }
+
+    /// Remaining modeled budget (µs) a cyclic task's interval leaves
+    /// after `spent_us` of work — the §6.3 slack a yielding ML task
+    /// has in one activation. Zero for non-cyclic tasks.
+    pub fn interval_budget_us(&self, task: usize, spent_us: f64) -> f64 {
+        match self.model.tasks[task].trigger {
+            Trigger::Cyclic { interval_us } => {
+                (interval_us as f64 - spent_us).max(0.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Advance simulated time to the next release instant and run
+    /// every due task highest-priority-first on `rt`. Returns what ran
+    /// and what was skipped; errors abort the tick at the failing
+    /// program (a real PLC halts the resource on an unhandled fault).
+    pub fn tick(
+        &mut self,
+        rt: &mut dyn TaskRuntime,
+    ) -> Result<TickReport, RuntimeError> {
+        // Next event: the earliest cyclic release not yet reached. A
+        // model with no cyclic tasks stays at the current instant
+        // (SINGLE edges and freewheeling programs still run).
+        let next = self
+            .model
+            .tasks
+            .iter()
+            .zip(&self.states)
+            .filter(|(t, _)| matches!(t.trigger, Trigger::Cyclic { .. }))
+            .map(|(_, s)| s.next_release_us)
+            .min();
+        if let Some(t) = next {
+            self.now_us = self.now_us.max(t);
+        }
+
+        // Collect due tasks; SINGLE edge state updates every tick so a
+        // held-high trigger fires exactly once.
+        let mut due: Vec<usize> = Vec::new();
+        for (i, task) in self.model.tasks.iter().enumerate() {
+            match task.trigger {
+                Trigger::Cyclic { .. } => {
+                    if self.states[i].next_release_us <= self.now_us {
+                        due.push(i);
+                    }
+                }
+                Trigger::Single { global } => {
+                    let cur = matches!(
+                        rt.host().globals.get(global),
+                        Some(Value::Bool(true))
+                    );
+                    if cur && !self.states[i].last_single {
+                        due.push(i);
+                    }
+                    self.states[i].last_single = cur;
+                }
+                Trigger::Freewheeling => due.push(i),
+            }
+        }
+        // Highest priority (lowest number) first; declaration order
+        // breaks ties (stable sort).
+        due.sort_by_key(|&i| self.model.tasks[i].priority);
+
+        let mut report = TickReport { now_us: self.now_us, ..TickReport::default() };
+        for &i in &due {
+            let interval = match self.model.tasks[i].trigger {
+                Trigger::Cyclic { interval_us } => {
+                    // Catch the release schedule up past `now` whether
+                    // the task runs or is skipped — releases are never
+                    // replayed.
+                    let s = &mut self.states[i];
+                    while s.next_release_us <= self.now_us {
+                        s.next_release_us += interval_us;
+                    }
+                    Some(interval_us as f64)
+                }
+                _ => None,
+            };
+            // Deterministic starvation: a due cyclic task whose whole
+            // interval is already gone to higher-priority work cannot
+            // complete before its next release — skip it, visibly.
+            if let Some(iv) = interval {
+                if report.busy_us >= iv {
+                    self.states[i].skipped += 1;
+                    report.skipped.push(i);
+                    continue;
+                }
+            }
+            let before = rt.host().meter.clone();
+            for b in &self.model.tasks[i].programs {
+                rt.run_program_id(b.program)?;
+            }
+            let delta = rt.host().meter.since(&before);
+            let exec_us = self.profile.time_us(&delta);
+            let s = &mut self.states[i];
+            meter_add(&mut s.meter, &delta);
+            s.activations += 1;
+            if let Some(c) = s.cycle.as_mut() {
+                c.record(&delta, &Meter::new());
+            }
+            report.busy_us += exec_us;
+            report.ran.push(i);
+        }
+        Ok(report)
+    }
+
+    /// Run `n` ticks, returning the last report.
+    pub fn run_ticks(
+        &mut self,
+        rt: &mut dyn TaskRuntime,
+        n: usize,
+    ) -> Result<TickReport, RuntimeError> {
+        let mut last = TickReport::default();
+        for _ in 0..n {
+            last = self.tick(rt)?;
+        }
+        Ok(last)
+    }
+}
+
+/// Map an IEC task priority onto the serving tier's bands: 0 (the
+/// most urgent control task) → `Control`, 1–3 (detection/monitoring)
+/// → `Defense`, everything lower (including freewheeling) → `Batch`.
+pub fn serve_priority(priority: u32) -> crate::serve::Priority {
+    match priority {
+        0 => crate::serve::Priority::Control,
+        1..=3 => crate::serve::Priority::Defense,
+        _ => crate::serve::Priority::Batch,
+    }
+}
+
+/// Field-wise meter accumulation (Meter deliberately has no `Add` —
+/// the differential harness compares exact deltas, not sums).
+fn meter_add(into: &mut Meter, d: &Meter) {
+    into.loads += d.loads;
+    into.stores += d.stores;
+    into.fp_add += d.fp_add;
+    into.fp_mul += d.fp_mul;
+    into.fp_div += d.fp_div;
+    into.fp_trans += d.fp_trans;
+    into.int_ops += d.int_ops;
+    into.cmp += d.cmp;
+    into.fp_cmp += d.fp_cmp;
+    into.branches += d.branches;
+    into.calls += d.calls;
+    into.copy_bytes += d.copy_bytes;
+    into.converts += d.converts;
+    into.io_calls += d.io_calls;
+    into.io_bytes += d.io_bytes;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_literal_forms() {
+        assert_eq!(parse_duration_us("100ms"), Some(100_000));
+        assert_eq!(parse_duration_us("10MS"), Some(10_000));
+        assert_eq!(parse_duration_us("1s500ms"), Some(1_500_000));
+        assert_eq!(parse_duration_us("1.5s"), Some(1_500_000));
+        assert_eq!(parse_duration_us("2m"), Some(120_000_000));
+        assert_eq!(parse_duration_us("1h"), Some(3_600_000_000));
+        assert_eq!(parse_duration_us("1d"), Some(86_400_000_000));
+        assert_eq!(parse_duration_us("250us"), Some(250));
+        assert_eq!(parse_duration_us("1_000ms"), Some(1_000_000));
+        assert_eq!(parse_duration_us("-5ms"), Some(-5_000));
+        assert_eq!(parse_duration_us("0s"), Some(0));
+    }
+
+    #[test]
+    fn duration_rejects_malformed() {
+        assert_eq!(parse_duration_us(""), None);
+        assert_eq!(parse_duration_us("ms"), None);
+        assert_eq!(parse_duration_us("10"), None);
+        assert_eq!(parse_duration_us("10x"), None);
+        assert_eq!(parse_duration_us("10ms5"), None);
+        assert_eq!(parse_duration_us("--5ms"), None);
+    }
+
+    #[test]
+    fn priority_bridge_bands() {
+        use crate::serve::Priority;
+        assert_eq!(serve_priority(0), Priority::Control);
+        assert_eq!(serve_priority(1), Priority::Defense);
+        assert_eq!(serve_priority(3), Priority::Defense);
+        assert_eq!(serve_priority(4), Priority::Batch);
+        assert_eq!(serve_priority(u32::MAX), Priority::Batch);
+    }
+
+    #[test]
+    fn meter_add_accumulates_every_field() {
+        let mut acc = Meter::new();
+        let mut d = Meter::new();
+        d.loads = 1;
+        d.io_bytes = 7;
+        d.fp_trans = 3;
+        meter_add(&mut acc, &d);
+        meter_add(&mut acc, &d);
+        assert_eq!(acc.loads, 2);
+        assert_eq!(acc.io_bytes, 14);
+        assert_eq!(acc.fp_trans, 6);
+    }
+}

@@ -485,6 +485,138 @@ fn fuzz_seeds_48_63() {
     run_seeds(48..64);
 }
 
+// ------------------------------------------------- multi-task wrapper
+
+/// Wrap two independently generated program bodies in a §2.7
+/// CONFIGURATION — a 10 ms priority-0 task and a 30 ms priority-1
+/// task — with a shared global both programs mutate, so the
+/// differential invariant is exercised *through the task scheduler*:
+/// per-task meters, interleaved global traffic, and the schedule
+/// itself must match across tiers.
+fn gen_two_task(seed: u64) -> String {
+    fn inject_before_end(src: String, stmt: &str) -> String {
+        let at = src.rfind("END_PROGRAM").expect("generated program end");
+        let mut s = src;
+        s.insert_str(at, stmt);
+        s
+    }
+    let a = inject_before_end(
+        gen_program(seed),
+        "  g_link := (g_link + i0);\n",
+    );
+    let b = gen_program(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let b_prog = inject_before_end(
+        b.strip_prefix(PREAMBLE)
+            .expect("generated source starts with the preamble")
+            .replacen("PROGRAM fz\n", "PROGRAM fz2\n", 1),
+        "  g_link := (g_link * 2);\n",
+    );
+    format!(
+        "VAR_GLOBAL g_link : DINT; END_VAR\n{a}{b_prog}\
+         CONFIGURATION FuzzPlant\n\
+           RESOURCE main ON plc\n\
+             TASK fast(INTERVAL := T#10ms, PRIORITY := 0);\n\
+             TASK slow(INTERVAL := T#30ms, PRIORITY := 1);\n\
+             PROGRAM pa WITH fast : fz;\n\
+             PROGRAM pb WITH slow : fz2;\n\
+           END_RESOURCE\n\
+         END_CONFIGURATION\n"
+    )
+}
+
+/// Bit-equality of everything observable across two tiers of a
+/// multi-task unit: the shared global plus both programs' fields.
+fn assert_task_state_eq(it: &Interp, vm: &Vm, ctx: &str, src: &str) {
+    for (g, (a, b)) in it
+        .unit
+        .globals
+        .iter()
+        .zip(it.globals.iter().zip(&vm.globals))
+    {
+        assert!(
+            a.bits_eq(b),
+            "{ctx}: global {}: interp {a:?} vs vm {b:?}\n{src}",
+            g.name
+        );
+    }
+    for (pid, p) in it.unit.programs.iter().enumerate() {
+        let inst = it.program_instances[pid];
+        for f in &p.fields {
+            let a = it.instance_field(inst, &f.name).unwrap();
+            let b = vm
+                .instance_field(vm.program_instances[pid], &f.name)
+                .unwrap();
+            assert!(
+                a.bits_eq(&b),
+                "{ctx}: {}.{}: interp {a:?} vs vm {b:?}\n{src}",
+                p.name,
+                f.name
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_task_fuzz_stays_exact_per_task() {
+    use icsml::plc::HwProfile;
+    use icsml::st::TaskScheduler;
+    for seed in 0..8u64 {
+        let src = gen_two_task(seed);
+        let unit = st::compile(&src)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{src}"));
+        for fused in [true, false] {
+            let mut it = Interp::new(unit.clone());
+            let mut vm =
+                Vm::new_with(unit.clone(), &FusionConfig { enabled: fused });
+            let mut sa =
+                TaskScheduler::for_runtime(&it, HwProfile::beaglebone())
+                    .expect("task model");
+            let mut sb =
+                TaskScheduler::for_runtime(&vm, HwProfile::beaglebone())
+                    .expect("task model");
+            for tick in 0..6 {
+                let ctx = format!("seed {seed} tick {tick} fused={fused}");
+                match (sa.tick(&mut it), sb.tick(&mut vm)) {
+                    (Ok(ra), Ok(rb)) => {
+                        assert_eq!(ra.ran, rb.ran, "{ctx}: schedule\n{src}");
+                        assert_eq!(
+                            ra.skipped, rb.skipped,
+                            "{ctx}: skips\n{src}"
+                        );
+                        for task in 0..sa.model().tasks.len() {
+                            if let Some((name, a, b)) = sa
+                                .task_meter(task)
+                                .first_divergence(sb.task_meter(task))
+                            {
+                                panic!(
+                                    "{ctx}: task {task} meter `{name}` \
+                                     diverged: interp {a} vm {b}\n{src}"
+                                );
+                            }
+                        }
+                        assert_task_state_eq(&it, &vm, &ctx, &src);
+                    }
+                    (Err(a), Err(b)) => {
+                        assert_eq!(
+                            a.message, b.message,
+                            "{ctx}: error msg\n{src}"
+                        );
+                        assert_eq!(
+                            a.line, b.line,
+                            "{ctx}: error line\n{src}"
+                        );
+                        break;
+                    }
+                    (a, b) => panic!(
+                        "{ctx}: tier disagreement: interp {a:?} vm \
+                         {b:?}\n{src}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
 /// The corpus is not vacuous: every seed links FDOT, so every unit
 /// must contain fused superinstructions when fusion is on — and none
 /// when it is off.

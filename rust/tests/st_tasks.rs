@@ -1,0 +1,557 @@
+//! Integration tests of the IEC 61131-3 §2.7 task model: the
+//! CONFIGURATION → RESOURCE → TASK front end, the sema error surface,
+//! and the [`TaskScheduler`] cyclic executive — including the PR's
+//! load-bearing invariant, that a multi-task configuration runs
+//! **bit-identically and meter-exactly per task** on the tree-walking
+//! interpreter oracle and on both bytecode tiers (fused and plain),
+//! and that priority starvation is deterministic: the budget-starved
+//! low-priority task skips cycles visibly while the control task
+//! never does.
+
+use icsml::plc::HwProfile;
+use icsml::st::{
+    self, FusionConfig, Interp, TaskScheduler, Trigger, Value, Vm,
+};
+
+// ------------------------------------------------------- error surface
+
+fn compile_err(src: &str) -> String {
+    match st::compile(src) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected a compile error for:\n{src}"),
+    }
+}
+
+/// Every rejected configuration shape, with the diagnostic substring
+/// sema must produce (one table so a regressed message names its
+/// source immediately).
+#[test]
+fn configuration_error_table() {
+    let cases: &[(&str, &str)] = &[
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#10ms, PRIORITY := 0);
+               TASK t(INTERVAL := T#20ms, PRIORITY := 1);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "duplicate TASK t",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               PROGRAM i WITH nosuch : p;
+             END_RESOURCE END_CONFIGURATION",
+            "bound to undeclared TASK nosuch",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#0ms, PRIORITY := 0);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "INTERVAL must be positive",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#10, PRIORITY := 0);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "bad INTERVAL duration T#10",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(PRIORITY := 0);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "needs an INTERVAL or SINGLE trigger",
+        ),
+        (
+            "VAR_GLOBAL go : BOOL; END_VAR
+             PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#10ms, SINGLE := go);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "INTERVAL and SINGLE are mutually exclusive",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(SINGLE := nosuch);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "SINGLE trigger nosuch is not a global variable",
+        ),
+        (
+            "VAR_GLOBAL go : REAL; END_VAR
+             PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(SINGLE := go);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "SINGLE trigger go must be a global BOOL",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#10ms, PRIORITY := -1);
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "PRIORITY must be non-negative",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#10ms);
+               PROGRAM i WITH t : p;
+               PROGRAM i WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "duplicate program instance i",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#10ms);
+               PROGRAM i WITH t : NoSuchProg;
+             END_RESOURCE END_CONFIGURATION",
+            "unknown PROGRAM type NoSuchProg",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c RESOURCE r ON cpu
+               TASK t(INTERVAL := T#10ms);
+               PROGRAM a WITH t : p;
+               PROGRAM b WITH t : p;
+             END_RESOURCE END_CONFIGURATION",
+            "bound more than once",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c END_CONFIGURATION",
+            "declares no RESOURCE",
+        ),
+        (
+            "PROGRAM p END_PROGRAM
+             CONFIGURATION c1 RESOURCE r ON cpu
+               PROGRAM i : p;
+             END_RESOURCE END_CONFIGURATION
+             CONFIGURATION c2 RESOURCE r ON cpu
+               PROGRAM j : p;
+             END_RESOURCE END_CONFIGURATION",
+            "multiple CONFIGURATION blocks",
+        ),
+    ];
+    for (src, want) in cases {
+        let msg = compile_err(src);
+        assert!(
+            msg.contains(want),
+            "error {msg:?} must contain {want:?} for source:\n{src}"
+        );
+    }
+}
+
+// -------------------------------------------------------- model shape
+
+/// The two-task ICSML deployment used throughout: a priority-0 PID
+/// control task every 100 ms and a priority-1 MLP-flavoured detection
+/// task every 300 ms, sharing a sensor image through globals, plus
+/// one unbound (freewheeling) logger instance.
+const TWO_TASK_SRC: &str = "
+VAR_GLOBAL
+    g_pv : REAL;
+    g_mv : REAL;
+    g_alarm : REAL;
+    g_log : DINT;
+END_VAR
+PROGRAM PidCtrl
+VAR
+    integ : REAL;
+    err : REAL;
+END_VAR
+    err := 0.66 - g_pv;
+    integ := integ + err * 0.1;
+    g_mv := 2.5 * err + 0.8 * integ;
+    g_pv := g_pv + g_mv * 0.01 + 0.003;
+END_PROGRAM
+PROGRAM MlpDetect
+VAR
+    x : ARRAY[0..7] OF REAL;
+    w : ARRAY[0..7] OF REAL;
+    h : REAL;
+    i : DINT;
+    scans : DINT;
+END_VAR
+    FOR i := 0 TO 7 DO
+        x[i] := g_pv * DINT_TO_REAL(i + 1) * 0.125;
+        w[i] := 0.25 - DINT_TO_REAL(i) * 0.03;
+    END_FOR
+    h := 0.0;
+    FOR i := 0 TO 7 DO
+        h := h + w[i] * x[i];
+    END_FOR
+    IF h > 0.5 THEN
+        g_alarm := g_alarm + 1.0;
+    END_IF
+    scans := scans + 1;
+END_PROGRAM
+PROGRAM Logger
+    g_log := g_log + 1;
+END_PROGRAM
+CONFIGURATION IcsmlPlant
+    RESOURCE main ON plc
+        TASK t_ctrl(INTERVAL := T#100ms, PRIORITY := 0);
+        TASK t_detect(INTERVAL := T#300ms, PRIORITY := 1);
+        PROGRAM pCtrl WITH t_ctrl : PidCtrl;
+        PROGRAM pDet WITH t_detect : MlpDetect;
+        PROGRAM pLog : Logger;
+    END_RESOURCE
+END_CONFIGURATION
+";
+
+#[test]
+fn two_task_model_compiles_to_the_expected_shape() {
+    let unit = st::compile(TWO_TASK_SRC).expect("compiles");
+    let model = unit.tasks.as_ref().expect("has a task model");
+    assert_eq!(model.config_name, "IcsmlPlant");
+    assert_eq!(model.resource_name, "main");
+    assert_eq!(model.processor, "plc");
+    // Two declared tasks plus one synthetic freewheeling task for the
+    // unbound Logger instance, in that order.
+    assert_eq!(model.tasks.len(), 3);
+    let ctrl = &model.tasks[model.find_task("T_CTRL").expect("ctrl")];
+    assert_eq!(ctrl.priority, 0);
+    assert_eq!(ctrl.trigger, Trigger::Cyclic { interval_us: 100_000 });
+    assert_eq!(ctrl.programs.len(), 1);
+    assert_eq!(ctrl.programs[0].instance, "pCtrl");
+    let det = &model.tasks[model.find_task("t_detect").expect("det")];
+    assert_eq!(det.priority, 1);
+    assert_eq!(det.trigger, Trigger::Cyclic { interval_us: 300_000 });
+    let free = &model.tasks[2];
+    assert_eq!(free.name, "__free_pLog");
+    assert_eq!(free.trigger, Trigger::Freewheeling);
+    assert_eq!(free.priority, u32::MAX);
+}
+
+// --------------------------------------------- differential invariant
+
+/// Assert bit-identical observable state between two tiers: every
+/// global and every field of every program instance.
+fn assert_state_eq(a: &st::Host, b: &st::Host, label: &str) {
+    for (g, (va, vb)) in
+        a.unit.globals.iter().zip(a.globals.iter().zip(&b.globals))
+    {
+        assert!(
+            va.bits_eq(vb),
+            "{label}: global {} diverged: {va:?} vs {vb:?}",
+            g.name
+        );
+    }
+    for (pid, p) in a.unit.programs.iter().enumerate() {
+        let (ia, ib) = (a.program_instances[pid], b.program_instances[pid]);
+        for f in &p.fields {
+            let va = a.instance_field(ia, &f.name).expect("field");
+            let vb = b.instance_field(ib, &f.name).expect("field");
+            assert!(
+                va.bits_eq(&vb),
+                "{label}: {}.{} diverged: {va:?} vs {vb:?}",
+                p.name,
+                f.name
+            );
+        }
+    }
+}
+
+/// The tentpole acceptance criterion: a two-task CONFIGURATION driven
+/// by the scheduler produces bit-identical state and *exactly* equal
+/// per-task meters on the interpreter oracle and on both bytecode
+/// tiers, tick for tick.
+#[test]
+fn two_task_configuration_is_meter_exact_across_tiers() {
+    let unit = st::compile(TWO_TASK_SRC).expect("compiles");
+    let profile = HwProfile::beaglebone();
+
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new_with(unit.clone(), &FusionConfig::default());
+    let mut vm_plain =
+        Vm::new_with(unit, &FusionConfig { enabled: false });
+    let mut sc_it =
+        TaskScheduler::for_runtime(&it, profile.clone()).expect("model");
+    let mut sc_vm =
+        TaskScheduler::for_runtime(&vm, profile.clone()).expect("model");
+    let mut sc_plain =
+        TaskScheduler::for_runtime(&vm_plain, profile).expect("model");
+
+    for tick in 0..12 {
+        let ra = sc_it.tick(&mut it).expect("interp tick");
+        let rb = sc_vm.tick(&mut vm).expect("vm tick");
+        let rc = sc_plain.tick(&mut vm_plain).expect("plain vm tick");
+        assert_eq!(ra.now_us, rb.now_us, "tick {tick}: clock drift");
+        assert_eq!(ra.ran, rb.ran, "tick {tick}: schedule drift");
+        assert_eq!(ra.ran, rc.ran, "tick {tick}: plain schedule drift");
+        assert_eq!(ra.skipped, rb.skipped, "tick {tick}: skip drift");
+        for task in 0..sc_it.model().tasks.len() {
+            let name = &sc_it.model().tasks[task].name;
+            if let Some((field, iv, vv)) = sc_it
+                .task_meter(task)
+                .first_divergence(sc_vm.task_meter(task))
+            {
+                panic!(
+                    "tick {tick}, task {name}: fused vm meter diverged \
+                     on {field}: interp {iv} vs vm {vv}"
+                );
+            }
+            if let Some((field, iv, vv)) = sc_it
+                .task_meter(task)
+                .first_divergence(sc_plain.task_meter(task))
+            {
+                panic!(
+                    "tick {tick}, task {name}: plain vm meter diverged \
+                     on {field}: interp {iv} vs vm {vv}"
+                );
+            }
+        }
+        assert_state_eq(&it, &vm, &format!("tick {tick} (fused)"));
+        assert_state_eq(&it, &vm_plain, &format!("tick {tick} (plain)"));
+    }
+
+    // Schedule arithmetic: the control task ran every 100 ms tick, the
+    // detection task every third one, the logger freewheels each tick
+    // — and nothing was ever skipped or overran at these budgets.
+    let ctrl = sc_it.model().find_task("t_ctrl").unwrap();
+    let det = sc_it.model().find_task("t_detect").unwrap();
+    let states = sc_it.states();
+    assert_eq!(states[ctrl].activations, 12);
+    assert_eq!(states[det].activations, 4);
+    assert_eq!(states[2].activations, 12, "freewheeling logger");
+    for s in states {
+        assert_eq!(s.skipped, 0);
+        assert_eq!(s.overruns(), 0);
+    }
+    assert_eq!(sc_it.now_us(), 1_100_000, "11 releases past t=0");
+    match it.global("g_log") {
+        Some(Value::Int(n)) => assert_eq!(n, 12),
+        other => panic!("g_log: {other:?}"),
+    }
+}
+
+// ------------------------------------------------------- starvation
+
+/// Build a source where a heavy control task and a detection task
+/// share one interval sized *below* the control task's own modeled
+/// cost, so every coincident release leaves the low-priority task
+/// with zero remaining budget.
+fn starved_src() -> String {
+    let heavy = "
+PROGRAM Heavy
+VAR
+    acc : REAL;
+    i : DINT;
+END_VAR
+    FOR i := 0 TO 499 DO
+        acc := acc + DINT_TO_REAL(i) * 0.001;
+    END_FOR
+END_PROGRAM
+PROGRAM Light
+VAR n : DINT; END_VAR
+    n := n + 1;
+END_PROGRAM
+";
+    // Price one Heavy scan on the scheduler's profile, then pick an
+    // interval no larger than that cost: at every release instant the
+    // priority-0 task alone exhausts the whole interval.
+    let probe = st::compile(heavy).expect("probe compiles");
+    let mut it = Interp::new(probe);
+    it.run_program("Heavy").expect("probe scan");
+    let cost_us = HwProfile::beaglebone().time_us(&it.meter);
+    let n = (cost_us.floor() as u64).max(1);
+    format!(
+        "{heavy}
+CONFIGURATION Starved
+    RESOURCE main ON plc
+        TASK fast(INTERVAL := T#{n}us, PRIORITY := 0);
+        TASK slow(INTERVAL := T#{n}us, PRIORITY := 1);
+        PROGRAM pFast WITH fast : Heavy;
+        PROGRAM pSlow WITH slow : Light;
+    END_RESOURCE
+END_CONFIGURATION"
+    )
+}
+
+/// Deterministic starvation: with the shared interval consumed
+/// entirely by the priority-0 task, the low-priority task skips every
+/// cycle — visibly, with a counter — while the control task never
+/// skips. Identically on both tiers.
+#[test]
+fn starved_low_priority_task_skips_deterministically() {
+    let src = starved_src();
+    let unit = st::compile(&src).expect("compiles");
+    let profile = HwProfile::beaglebone();
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new(unit);
+    let mut sc_it =
+        TaskScheduler::for_runtime(&it, profile.clone()).expect("model");
+    let mut sc_vm =
+        TaskScheduler::for_runtime(&vm, profile).expect("model");
+
+    let fast = sc_it.model().find_task("fast").unwrap();
+    let slow = sc_it.model().find_task("slow").unwrap();
+    const TICKS: u64 = 10;
+    for _ in 0..TICKS {
+        let ra = sc_it.tick(&mut it).expect("interp tick");
+        let rb = sc_vm.tick(&mut vm).expect("vm tick");
+        assert_eq!(ra.ran, rb.ran);
+        assert_eq!(ra.skipped, rb.skipped);
+        assert_eq!(ra.ran, vec![fast], "only the control task runs");
+        assert_eq!(ra.skipped, vec![slow], "the ML task skips, visibly");
+    }
+    for sc in [&sc_it, &sc_vm] {
+        let states = sc.states();
+        assert_eq!(states[fast].activations, TICKS);
+        assert_eq!(states[fast].skipped, 0, "priority 0 can never skip");
+        assert_eq!(states[slow].activations, 0);
+        assert_eq!(states[slow].skipped, TICKS);
+    }
+    // The starved program never ran: its counter is untouched.
+    let inst = it.program_instance("Light").unwrap();
+    match it.instance_field(inst, "n") {
+        Some(Value::Int(0)) => {}
+        other => panic!("Light.n must be 0, got {other:?}"),
+    }
+}
+
+// ------------------------------------------------- §6.3 yield pattern
+
+/// A long ML inference expressed the §6.3 way: the detection program
+/// processes a bounded chunk of rows per activation through a
+/// persistent cursor, so each activation fits its interval and the
+/// control task keeps every deadline while inference completes across
+/// scans.
+#[test]
+fn ml_task_yields_across_activations_without_starving_control() {
+    let src = "
+VAR_GLOBAL
+    g_done : BOOL;
+    g_sum : REAL;
+END_VAR
+PROGRAM Ctrl
+VAR ticks : DINT; END_VAR
+    ticks := ticks + 1;
+END_PROGRAM
+PROGRAM MlChunk
+VAR
+    row : DINT;
+    i : DINT;
+END_VAR
+    IF NOT g_done THEN
+        FOR i := 0 TO 15 DO
+            g_sum := g_sum + DINT_TO_REAL(row * 16 + i) * 0.5;
+        END_FOR
+        row := row + 1;
+        IF row >= 8 THEN
+            g_done := TRUE;
+        END_IF
+    END_IF
+END_PROGRAM
+CONFIGURATION Yielding
+    RESOURCE main ON plc
+        TASK t_ctrl(INTERVAL := T#100ms, PRIORITY := 0);
+        TASK t_ml(INTERVAL := T#100ms, PRIORITY := 2);
+        PROGRAM pCtrl WITH t_ctrl : Ctrl;
+        PROGRAM pMl WITH t_ml : MlChunk;
+    END_RESOURCE
+END_CONFIGURATION";
+    let unit = st::compile(src).expect("compiles");
+    let profile = HwProfile::beaglebone();
+    let mut it = Interp::new(unit.clone());
+    let mut vm = Vm::new(unit);
+    let mut sc_it =
+        TaskScheduler::for_runtime(&it, profile.clone()).expect("model");
+    let mut sc_vm =
+        TaskScheduler::for_runtime(&vm, profile).expect("model");
+
+    let ctrl = sc_it.model().find_task("t_ctrl").unwrap();
+    let ml = sc_it.model().find_task("t_ml").unwrap();
+    let mut ticks = 0u64;
+    while !matches!(it.global("g_done"), Some(Value::Bool(true))) {
+        sc_it.tick(&mut it).expect("interp tick");
+        sc_vm.tick(&mut vm).expect("vm tick");
+        ticks += 1;
+        assert!(ticks <= 64, "inference never completed");
+    }
+    // 8 rows at one row per activation: the full job took 8 scans.
+    assert_eq!(ticks, 8);
+    assert_eq!(sc_it.states()[ml].activations, 8);
+    // The control task held every one of those deadlines.
+    assert_eq!(sc_it.states()[ctrl].activations, 8);
+    assert_eq!(sc_it.states()[ctrl].skipped, 0);
+    assert_eq!(sc_it.states()[ctrl].overruns(), 0);
+    // And the tiers agree on the final state and per-task meters.
+    assert_state_eq(&it, &vm, "after yield-completion");
+    for task in [ctrl, ml] {
+        assert_eq!(
+            sc_it.task_meter(task).first_divergence(sc_vm.task_meter(task)),
+            None,
+            "task {task} meter drift"
+        );
+    }
+    // Interval slack is what the §6.3 session planner consumes: at
+    // these budgets each activation leaves nearly the whole interval.
+    assert!(sc_it.interval_budget_us(ml, 10.0) > 99_000.0);
+}
+
+// ----------------------------------------------------- SINGLE trigger
+
+/// `SINGLE := flag` tasks release exactly once per rising edge of the
+/// trigger global — a held-high flag does not re-fire.
+#[test]
+fn single_task_fires_on_rising_edges_only() {
+    let src = "
+VAR_GLOBAL go : BOOL; END_VAR
+PROGRAM Tick
+VAR n : DINT; END_VAR
+    n := n + 1;
+END_PROGRAM
+PROGRAM Shot
+VAR n : DINT; END_VAR
+    n := n + 1;
+END_PROGRAM
+CONFIGURATION OneShot
+    RESOURCE main ON plc
+        TASK t_cyc(INTERVAL := T#10ms, PRIORITY := 0);
+        TASK t_edge(SINGLE := go, PRIORITY := 1);
+        PROGRAM pTick WITH t_cyc : Tick;
+        PROGRAM pShot WITH t_edge : Shot;
+    END_RESOURCE
+END_CONFIGURATION";
+    let unit = st::compile(src).expect("compiles");
+    let mut it = Interp::new(unit);
+    let mut sc = TaskScheduler::for_runtime(&it, HwProfile::beaglebone())
+        .expect("model");
+    let edge = sc.model().find_task("t_edge").unwrap();
+
+    let shot_count = |it: &Interp| -> i64 {
+        let inst = it.program_instance("Shot").unwrap();
+        match it.instance_field(inst, "n") {
+            Some(Value::Int(n)) => n,
+            other => panic!("Shot.n: {other:?}"),
+        }
+    };
+
+    sc.tick(&mut it).expect("tick");
+    assert_eq!(shot_count(&it), 0, "no edge yet");
+    it.set_global("go", Value::Bool(true));
+    sc.tick(&mut it).expect("tick");
+    assert_eq!(shot_count(&it), 1, "rising edge fires once");
+    sc.tick(&mut it).expect("tick");
+    sc.tick(&mut it).expect("tick");
+    assert_eq!(shot_count(&it), 1, "held-high trigger must not re-fire");
+    it.set_global("go", Value::Bool(false));
+    sc.tick(&mut it).expect("tick");
+    it.set_global("go", Value::Bool(true));
+    sc.tick(&mut it).expect("tick");
+    assert_eq!(shot_count(&it), 2, "second rising edge fires again");
+    assert_eq!(sc.states()[edge].activations, 2);
+}
